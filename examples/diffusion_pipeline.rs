@@ -1,0 +1,51 @@
+//! Stable Diffusion 1.4 pipeline across the paper's devices (§4.1):
+//! per-component latency, end-to-end generation time, and memory plans.
+//!
+//! ```sh
+//! cargo run --release --example diffusion_pipeline
+//! ```
+
+use mldrift::bench::Table;
+use mldrift::device::registry::{all_devices, device};
+use mldrift::diffusion::SdPipeline;
+use mldrift::engine::compile::CompileOptions;
+use mldrift::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let opts = CompileOptions::default();
+
+    // Per-component latency on one device (the Fig. 5 view).
+    let dev = device("adreno_740").unwrap();
+    let p = SdPipeline::compile(&dev, &opts)?;
+    let r = p.run(20);
+    println!("SD 1.4 on {} (20 iterations):", dev.marketing_name);
+    println!("  text encoder  {:.1} ms", r.text_encoder_s * 1e3);
+    println!("  UNet step     {:.1} ms ×{}", r.unet_step_s * 1e3, r.iterations);
+    println!("  VAE decoder   {:.1} ms", r.vae_decoder_s * 1e3);
+    println!("  end-to-end    {:.2} s (paper: 10.96 s)", r.end_to_end_s);
+
+    for (name, naive, opt) in p.memory_summary() {
+        println!(
+            "  memory[{name}]: naive {} -> planned {}",
+            human_bytes(naive as u64),
+            human_bytes(opt as u64)
+        );
+    }
+
+    // End-to-end across every registered device.
+    let mut t = Table::new(
+        "SD 1.4 512×512, 20 iterations — all devices",
+        &["device", "API", "e2e (s)", "UNet step (ms)"],
+    );
+    for dev in all_devices() {
+        let r = SdPipeline::compile(&dev, &opts)?.run(20);
+        t.row(&[
+            dev.marketing_name.to_string(),
+            dev.api.name().to_string(),
+            format!("{:.2}", r.end_to_end_s),
+            format!("{:.0}", r.unet_step_s * 1e3),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

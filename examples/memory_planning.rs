@@ -1,0 +1,39 @@
+//! Memory-planner walkthrough (§3.5 / Fig. 3): strategies compared on the
+//! Stable Diffusion component graphs.
+//!
+//! ```sh
+//! cargo run --release --example memory_planning
+//! ```
+
+use mldrift::bench::Table;
+use mldrift::memory::{lifetimes, liveness_lower_bound, naive_bytes, plan, validate_plan, Strategy};
+use mldrift::models::sd::{sd_text_encoder, sd_unet, sd_vae_decoder};
+use mldrift::tensor::DType;
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Intermediate-tensor memory by strategy (MB, fp16)",
+        &["component", "naive", "greedy-by-size", "greedy-by-breadth", "lower bound"],
+    );
+    for g in [sd_text_encoder()?, sd_unet()?, sd_vae_decoder()?] {
+        let usages = lifetimes(&g, DType::F16);
+        let naive = naive_bytes(&usages);
+        let mut cells = vec![g.name.clone(), format!("{:.0}", naive as f64 / 1e6)];
+        for strat in [Strategy::GreedyBySize, Strategy::GreedyByBreadth] {
+            let p = plan(&usages, strat);
+            validate_plan(&usages, &p)?;
+            cells.push(format!(
+                "{:.0} ({:.0}%)",
+                p.total_bytes as f64 / 1e6,
+                p.savings_vs(naive) * 100.0
+            ));
+        }
+        cells.push(format!("{:.0}", liveness_lower_bound(&usages) as f64 / 1e6));
+        t.row(&cells);
+    }
+    t.print();
+    println!(
+        "\npaper Fig. 3 (GREEDY BY SIZE): text 62→2 MB, UNet 2075→65 MB, VAE 2274→320 MB (93 % total)"
+    );
+    Ok(())
+}

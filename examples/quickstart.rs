@@ -1,0 +1,67 @@
+//! Quickstart: compile a model with the full ML Drift pipeline and
+//! inspect what every stage produced.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mldrift::codegen::select::Stage;
+use mldrift::device::registry::device;
+use mldrift::engine::compile::{compile_graph, CompileOptions};
+use mldrift::models::llm::{build_llm_graph, LlmStageGraph};
+use mldrift::models::llm_config;
+use mldrift::quant::QuantScheme;
+use mldrift::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a model and a device from the registry.
+    let cfg = llm_config("gemma2_2b").expect("model registered");
+    let dev = device("adreno_750").expect("device registered");
+    println!("model: {} ({:.2} B params)", cfg.name, cfg.params() as f64 / 1e9);
+    println!("device: {}", dev.marketing_name);
+
+    // 2. Build the prefill graph at the paper's context (1024 tokens)
+    //    with the 8/4/4 mixed quantization scheme.
+    let graph = build_llm_graph(&cfg, 1, LlmStageGraph::Prefill { seq: 1024 }, QuantScheme::Mixed844)?;
+    println!("\nunfused graph: {} nodes", graph.nodes.len());
+
+    // 3. Run the compile pipeline: fusion → specialization → memory
+    //    planning → roofline simulation (+ shader emission).
+    let opts = CompileOptions {
+        attn_fusion: Some((cfg.heads_q, cfg.heads_kv, cfg.head_dim)),
+        emit_shaders: true,
+        ..Default::default()
+    };
+    let compiled = compile_graph(graph, &dev, Stage::Prefill, &opts)?;
+
+    println!("fusion: {:?}", compiled.fusion);
+    println!(
+        "memory: naive {} -> planned {} ({:.0} % saved)",
+        human_bytes(compiled.naive_memory_bytes as u64),
+        human_bytes(compiled.memory.total_bytes as u64),
+        compiled.memory.savings_vs(compiled.naive_memory_bytes) * 100.0
+    );
+    println!(
+        "plan: {} kernels, weights {}",
+        compiled.plan.kernels.len(),
+        human_bytes(compiled.plan.weight_bytes as u64)
+    );
+    println!(
+        "simulated prefill: {:.1} ms -> {:.0} tokens/s (compute-bound fraction {:.0} %)",
+        compiled.report.total_s * 1e3,
+        1024.0 / compiled.report.total_s,
+        compiled.report.compute_bound_frac * 100.0
+    );
+
+    // 4. Look at one generated OpenCL kernel.
+    if let Some((name, src)) = compiled
+        .shaders
+        .iter()
+        .find(|(n, _)| n.contains("ffn_gate"))
+        .or_else(|| compiled.shaders.first())
+    {
+        let head: String = src.lines().take(18).collect::<Vec<_>>().join("\n");
+        println!("\ngenerated kernel `{name}` (first lines):\n{head}\n...");
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! **End-to-end validation driver** (DESIGN.md experiment E2E): load the
+//! real AOT-compiled TinyLM, serve a batched Poisson request workload
+//! through the continuous-batching engine, and report latency/throughput.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_llm
+//! ```
+//!
+//! The numbers printed here are recorded in EXPERIMENTS.md §E2E.
+
+use std::time::Instant;
+
+use mldrift::serving::{InferenceRequest, SchedulerConfig, ServingEngine};
+use mldrift::util::rng::Pcg32;
+use mldrift::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("MLDRIFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&artifacts).join("manifest.json").exists() {
+        anyhow::bail!("no artifacts at {artifacts}/ — run `make artifacts` first");
+    }
+
+    println!("starting engine (PJRT CPU, artifacts at {artifacts}/) ...");
+    let engine = ServingEngine::start(
+        &artifacts,
+        SchedulerConfig { max_active: 4, max_prefills_per_round: 1 },
+    )?;
+
+    // Workload: 24 requests, 16-token prompts (the small prefill bucket),
+    // 16 generated tokens each, arrivals drawn from a Poisson process.
+    let n_requests = 24;
+    let gen_tokens = 16;
+    let mut rng = Pcg32::seeded(7);
+    let t0 = Instant::now();
+    let mut receivers = Vec::new();
+    for i in 0..n_requests {
+        let prompt: Vec<i32> = (0..16).map(|_| rng.gen_range(2000) as i32).collect();
+        receivers.push(engine.submit(InferenceRequest::new(i, prompt, gen_tokens))?);
+        // ~20 requests/s Poisson arrivals.
+        let gap = rng.gen_exp(20.0);
+        std::thread::sleep(std::time::Duration::from_secs_f64(gap.min(0.2)));
+    }
+
+    let mut ttfts = Vec::new();
+    let mut e2es = Vec::new();
+    let mut decode_tput = Vec::new();
+    let mut total_tokens = 0usize;
+    for rx in receivers {
+        let resp = rx.recv()?;
+        total_tokens += resp.tokens.len();
+        ttfts.push(resp.ttft_s);
+        e2es.push(resp.total_s);
+        decode_tput.push(resp.decode_tokens_per_s());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== end-to-end serving results (TinyLM on PJRT-CPU) ==");
+    println!("requests: {n_requests}, generated tokens: {total_tokens}, wall: {wall:.2} s");
+    println!("aggregate throughput: {:.1} generated tokens/s", total_tokens as f64 / wall);
+    println!("TTFT      {}", Summary::from_samples(ttfts).report("s"));
+    println!("E2E       {}", Summary::from_samples(e2es).report("s"));
+    println!("decode/s  {}", Summary::from_samples(decode_tput).report("tok/s"));
+    println!("\nengine metrics:\n{}", engine.stats().report);
+    Ok(())
+}

@@ -1,0 +1,150 @@
+"""AOT lowering: TinyLM → HLO *text* artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (``make artifacts`` → ``artifacts/``):
+
+* ``tinylm_prefill_s{S}.hlo.txt`` — fn(tokens (1,S) i32) →
+  (logits (S,V), k_cache (L,hkv,C,dh), v_cache (L,hkv,dh,C))
+* ``tinylm_decode.hlo.txt`` — fn(token (1,) i32, pos (1,) i32, k, v) →
+  (logits (V,), k', v')
+* ``manifest.json`` — model dims + artifact index for the Rust side.
+
+Weights are baked into the HLO as constants (seed 42), so the Rust
+binary is fully self-contained after ``make artifacts``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+PREFILL_LENS = (16, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``constant({...})``, which the text parser
+    reads back as *zeros* — i.e. the model would silently lose its baked
+    weights on the Rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_prefill(wq, cfg, seq_len):
+    def fn(tokens):
+        logits, k, v = M.prefill(tokens[0], cfg, wq)
+        return (logits, k, v)
+
+    spec = jax.ShapeDtypeStruct((1, seq_len), jnp.int32)
+    return jax.jit(fn).lower(spec)
+
+
+def build_decode(wq, cfg):
+    # Delta form (§Perf): returns (logits, k_new (L,hkv,dh), v_new) instead
+    # of the full caches — the Rust side keeps host-resident caches in the
+    # §3.8 layouts and scatters the rows at `pos`.
+    def fn(token, pos, k_cache, v_cache):
+        logits, k_new, v_new = M.decode_step_delta(token[0], pos[0], k_cache, v_cache, cfg, wq)
+        return (logits, k_new, v_new)
+
+    tok = jax.ShapeDtypeStruct((1,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((1,), jnp.int32)
+    k = jax.ShapeDtypeStruct(
+        (cfg.layers, cfg.heads_kv, cfg.cache_capacity, cfg.head_dim), jnp.float32
+    )
+    v = jax.ShapeDtypeStruct(
+        (cfg.layers, cfg.heads_kv, cfg.head_dim, cfg.cache_capacity), jnp.float32
+    )
+    return jax.jit(fn).lower(tok, pos, k, v)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--out", default=None, help="compat: single-artifact output path; writes all next to it"
+    )
+    args = parser.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = M.CFG
+    wq = M.quantize_weights(M.init_weights(cfg))
+
+    # Reference generation vector: the Rust runtime must reproduce these
+    # tokens exactly (same artifacts, same greedy argmax).
+    test_prompt = list(range(1, 17))  # 16 tokens = smallest prefill bucket
+    test_steps = 8
+    import jax.numpy as jnp
+
+    logits, k, v = M.prefill(jnp.asarray(test_prompt, jnp.int32), cfg, wq)
+    expected = []
+    next_tok = int(jnp.argmax(logits[-1]))
+    pos = len(test_prompt)
+    for _ in range(test_steps):
+        expected.append(next_tok)
+        lg, k, v = M.decode_step(
+            jnp.asarray(next_tok, jnp.int32), jnp.asarray(pos, jnp.int32), k, v, cfg, wq
+        )
+        next_tok = int(jnp.argmax(lg))
+        pos += 1
+
+    manifest = {
+        "model": "tinylm",
+        "test_vector": {
+            "prompt": test_prompt,
+            "steps": test_steps,
+            "expected_tokens": expected,
+        },
+        "layers": cfg.layers,
+        "d_model": cfg.d_model,
+        "heads_q": cfg.heads_q,
+        "heads_kv": cfg.heads_kv,
+        "head_dim": cfg.head_dim,
+        "ffn_hidden": cfg.ffn_hidden,
+        "vocab": cfg.vocab,
+        "cache_capacity": cfg.cache_capacity,
+        "seed": cfg.seed,
+        "prefill": {},
+        "decode": "tinylm_decode.hlo.txt",
+        # Decode artifact returns (logits, k_new, v_new) row deltas.
+        "decode_delta": True,
+    }
+
+    for s in PREFILL_LENS:
+        text = to_hlo_text(build_prefill(wq, cfg, s))
+        name = f"tinylm_prefill_s{s}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["prefill"][str(s)] = name
+        print(f"wrote {path} ({len(text) / 1e6:.1f} MB)")
+
+    text = to_hlo_text(build_decode(wq, cfg))
+    path = os.path.join(out_dir, "tinylm_decode.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text) / 1e6:.1f} MB)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: decode attention over the §3.8 KV-cache layouts.
+
+The cache layouts are the paper's:
+
+* K cache ``(h_kv, C, d_h)`` — each row is a position's key, i.e. Kᵀ as
+  OHWI (O = cache position, I = d_h), so the score matmul needs no
+  transpose.
+* V cache ``(h_kv, d_h, C)`` — reversed OHWI (O = d_h, I = cache
+  position), so the context matmul directly emits the
+  ``(B·h_kv, S·h_q/h_kv, d_h)`` attention-output layout (§3.6).
+
+Grid over KV heads: each program computes all G = h_q/h_kv query heads
+belonging to its KV head — the GQA head-folding of §3.6.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, out_ref):
+    q = q_ref[0]                  # (G, d_h)
+    k = k_ref[0]                  # (C, d_h)
+    v = v_ref[0]                  # (d_h, C)
+    length = len_ref[0]
+    d_h = q.shape[-1]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(d_h))                      # (G, C)
+    c = k.shape[0]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (1, c), 1) < length
+    scores = jnp.where(mask, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    # V is (d_h, C): contraction over C yields (G, d_h) directly.
+    out_ref[0] = jax.lax.dot_general(
+        p, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """q: (h_kv, G, d_h); k_cache: (h_kv, C, d_h); v_cache: (h_kv, d_h, C);
+    length: () i32 — valid cache prefix. Returns (h_kv, G, d_h)."""
+    h_kv, g, d_h = q.shape
+    c = k_cache.shape[1]
+    length_arr = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+    grid = (h_kv,)
+    return pl.pallas_call(
+        _decode_attn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d_h), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, c, d_h), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, d_h, c), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d_h), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_kv, g, d_h), jnp.float32),
+        interpret=INTERPRET,
+    )(q, k_cache, v_cache, length_arr)

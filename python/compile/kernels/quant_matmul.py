@@ -1,0 +1,212 @@
+"""L1 Pallas kernels: quantized matmul family (§3.7).
+
+Two stage-aware paths, exactly as the paper describes:
+
+* **Prefill** (compute-bound): a dedicated activation-quantization kernel
+  converts fp activations to int8 with per-row scales, then the GEMM
+  kernel multiplies int8×int8 into int32 accumulators and dequantizes on
+  store — the fast-int8-instruction path.
+* **Decode** (memory-bound): one mat-vec kernel that dequantizes weights
+  in-register; activation quantization is folded in (no extra kernel, no
+  extra memory traffic).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the vec4-slice tiling of
+the OpenCL kernels becomes 128-wide N-blocks sized for the MXU; BlockSpec
+index maps play the role of the slice/texture indexing. ``interpret=True``
+everywhere — the CPU PJRT plugin cannot execute Mosaic custom-calls; on a
+real TPU the same kernels lower through Mosaic unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+# --------------------------------------------------------------------------
+# activation quantization (prefill kernel 1)
+# --------------------------------------------------------------------------
+def _quantize_rows_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q_ref[...] = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    scale_ref[...] = scale.astype(jnp.float32)
+
+
+def quantize_rows(x, *, block_m: int = 128):
+    """Per-row int8 quantization as a Pallas kernel.
+
+    x: (M, K) f32 -> (q (M, K) int8, scales (M,) f32). Grid over M blocks;
+    each block holds its full K extent in VMEM (K ≤ a few thousand —
+    fine for VMEM at fp32).
+    """
+    m, k = x.shape
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        _quantize_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x)
+
+
+# --------------------------------------------------------------------------
+# int8 GEMM (prefill kernel 2)
+# --------------------------------------------------------------------------
+def _int8_gemm_kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref):
+    xq = xq_ref[...].astype(jnp.int32)          # (bm, K)
+    wq = wq_ref[...].astype(jnp.int32)          # (bn, K)
+    acc = jax.lax.dot_general(
+        xq,
+        wq,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                            # (bm, bn) int32
+    out_ref[...] = (
+        acc.astype(jnp.float32) * xs_ref[...][:, None] * ws_ref[...][None, :]
+    )
+
+
+def int8_gemm(x_q, x_scale, w_q, w_scale, *, block_m: int = 128, block_n: int = 128):
+    """int8 × int8 GEMM with int32 accumulation and dequantizing epilogue.
+
+    x_q: (M, K) int8, x_scale: (M,), w_q: (N, K) int8, w_scale: (N,)
+    -> (M, N) f32. Grid (M-blocks × N-blocks); K held fully in VMEM per
+    block (int8 rows are 4× smaller than fp32, so K up to ~16k fits).
+    """
+    m, k = x_q.shape
+    n, k2 = w_q.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    bm, bn = min(block_m, m), min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _int8_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x_q, x_scale, w_q, w_scale)
+
+
+def quant_matmul(x, w_q, w_scale, **block_kw):
+    """Prefill path: dedicated activation-quant kernel + int8 GEMM (§3.7)."""
+    x_q, x_scale = quantize_rows(x)
+    return int8_gemm(x_q, x_scale, w_q, w_scale, **block_kw)
+
+
+# --------------------------------------------------------------------------
+# decode mat-vec with in-kernel dequantization
+# --------------------------------------------------------------------------
+def _matvec_dequant_kernel(x_ref, wq_ref, ws_ref, out_ref):
+    x = x_ref[...]                               # (M, K) f32, M tiny
+    w = wq_ref[...].astype(jnp.float32) * ws_ref[...][:, None]  # (bn, K)
+    out_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def quant_matvec(x, w_q, w_scale, *, block_n: int = 128):
+    """Decode path: weights dequantized inside the kernel (§3.7).
+
+    x: (M, K) f32 with small M (token batch); w_q: (N, K) int8.
+    Memory traffic = int8 weight bytes only — the memory-bound decode
+    optimisation the paper's 1.9× quant speedup rests on.
+    """
+    m, k = x.shape
+    n, _ = w_q.shape
+    bn = min(block_n, n)
+    grid = (pl.cdiv(n, bn),)
+    return pl.pallas_call(
+        _matvec_dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((bn, k), lambda j: (j, 0)),
+            pl.BlockSpec((bn,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w_q, w_scale)
+
+
+# --------------------------------------------------------------------------
+# int4 decode mat-vec (8/4/4's feed-forward path)
+# --------------------------------------------------------------------------
+def pack_i4(w_q):
+    """Pack int4 values (stored in an int8 array, range [-7, 7]) into
+    bytes: even column in the low nibble. w_q: (N, K) with K even ->
+    (N, K//2) uint8."""
+    lo = (w_q[:, 0::2] & 0x0F).astype(jnp.uint8)
+    hi = (w_q[:, 1::2] & 0x0F).astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def _unpack_nibble(packed, which):
+    nib = jnp.where(which == 0, packed & 0x0F, packed >> 4).astype(jnp.int8)
+    # sign-extend 4-bit two's complement
+    return jnp.where(nib >= 8, nib.astype(jnp.int32) - 16, nib.astype(jnp.int32))
+
+
+def _matvec_i4_kernel(x_ref, wp_ref, ws_ref, out_ref):
+    x = x_ref[...]                               # (M, K)
+    packed = wp_ref[...]                         # (bn, K//2) uint8
+    lo = _unpack_nibble(packed, 0).astype(jnp.float32)
+    hi = _unpack_nibble(packed, 1).astype(jnp.float32)
+    bn, khalf = packed.shape
+    w = jnp.stack([lo, hi], axis=-1).reshape(bn, khalf * 2)
+    w = w * ws_ref[...][:, None]
+    out_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def quant_matvec_i4(x, w_packed, w_scale, *, block_n: int = 128):
+    """Decode mat-vec over packed int4 weights: half the memory traffic of
+    q8 — the 8/4/4 feed-forward path.
+
+    x: (M, K) f32; w_packed: (N, K//2) uint8; w_scale: (N,).
+    """
+    m, k2 = x.shape[0], w_packed.shape[1]
+    n = w_packed.shape[0]
+    bn = min(block_n, n)
+    grid = (pl.cdiv(n, bn),)
+    return pl.pallas_call(
+        _matvec_i4_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda j: (0, 0)),
+            pl.BlockSpec((bn, k2), lambda j: (j, 0)),
+            pl.BlockSpec((bn,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w_packed, w_scale)
+
+
+def quantize_weights_i4(w):
+    """Per-row int4 quantization: returns (packed (N, K//2) uint8, scales)."""
+    absmax = jnp.max(jnp.abs(w), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 7.0, 1.0)
+    q = jnp.clip(jnp.round(w / scale[:, None]), -7, 7).astype(jnp.int8)
+    return pack_i4(q), scale.astype(jnp.float32)

@@ -1,0 +1,115 @@
+"""Pure-jnp reference oracle for every Pallas kernel.
+
+These are the ground-truth semantics the L1 kernels are validated against
+(pytest + hypothesis in ``python/tests``). They mirror the paper's
+quantization and attention-layout design:
+
+* per-row symmetric int8 weights/activations (§3.7 prefill path),
+* in-kernel weight dequantization for the decode mat-vec (§3.7),
+* fused residual + RMSNorm (§3.6, Fig. 4 right),
+* decode attention against the §3.8 cache layouts
+  (K: ``(C, d_h)`` = Kᵀ rows, V reversed: ``(d_h, C)``).
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_rows_ref(x):
+    """Per-row symmetric int8 quantization: returns (q, scales).
+
+    x: (M, K) f32 -> q (M, K) int8, scales (M,) f32 with
+    scale = absmax/127 and q = round(x/scale).
+    """
+    absmax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_weights_ref(w):
+    """Per-output-channel (row of (N, K)) int8 quantization."""
+    return quantize_rows_ref(w)
+
+
+def quant_matmul_ref(x, w_q, w_scale):
+    """Prefill-path int8 GEMM reference.
+
+    x: (M, K) f32; w_q: (N, K) int8; w_scale: (N,) f32.
+    Activations are dynamically quantized per row, the product runs in
+    int32, and the output is dequantized: the §3.7 prefill semantics.
+    """
+    x_q, x_scale = quantize_rows_ref(x)
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32).T, preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]
+
+
+def quant_matvec_ref(x, w_q, w_scale):
+    """Decode-path mat-vec reference: weights dequantized in fp32, no
+    activation quantization (§3.7 decode semantics).
+
+    x: (M, K) f32 (M is tiny); w_q: (N, K) int8; w_scale: (N,).
+    """
+    w = w_q.astype(jnp.float32) * w_scale[:, None]
+    return jnp.matmul(x, w.T)
+
+
+def fused_add_rmsnorm_ref(residual, x, gamma, eps=1e-6):
+    """Fused residual-add + RMSNorm reference (Fig. 4 right).
+
+    Returns (normed, sum) — the kernel's primary and secondary outputs.
+    """
+    s = residual + x
+    ms = jnp.mean(jnp.square(s), axis=-1, keepdims=True)
+    normed = s * (1.0 / jnp.sqrt(ms + eps)) * gamma
+    return normed, s
+
+
+def rope_ref(x, positions, theta=10000.0):
+    """Rotary embedding over the last axis (pairs = (even, odd) halves).
+
+    x: (..., S, D) with even D; positions: (S,) i32.
+    """
+    d_half = x.shape[-1] // 2
+    freqs = 1.0 / (theta ** (jnp.arange(d_half, dtype=jnp.float32) / d_half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :d_half], x[..., d_half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """Decode attention against the §3.8 cache layouts.
+
+    q:       (h_kv, G, d_h)  — G = h_q / h_kv query heads per KV head
+    k_cache: (h_kv, C, d_h)  — rows are Kᵀ (O=cache, I=d_h)
+    v_cache: (h_kv, d_h, C)  — reversed OHWI (O=d_h, I=cache)
+    length:  valid cache positions (≤ C)
+    returns: (h_kv, G, d_h)
+    """
+    d_h = q.shape[-1]
+    scores = jnp.einsum("hgd,hcd->hgc", q, k_cache) / jnp.sqrt(
+        jnp.float32(d_h)
+    )
+    c = k_cache.shape[1]
+    mask = jnp.arange(c)[None, None, :] < length
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hgc,hdc->hgd", probs, v_cache)
+
+
+def causal_attention_ref(q, k, v):
+    """Prefill causal attention (heads folded into the leading axis).
+
+    q, k, v: (H, S, d_h) -> (H, S, d_h).
+    """
+    d_h = q.shape[-1]
+    s = q.shape[1]
+    scores = jnp.einsum("hsd,htd->hst", q, k) / jnp.sqrt(jnp.float32(d_h))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("hst,htd->hsd", probs, v)

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: fused residual-add + RMSNorm (§3.6, Fig. 4 right).
+
+One kernel computes ``sum = residual + x`` and the RMS-normalized output,
+writing *both* (the sum feeds the next residual connection) — saving a
+full read+write of the activation versus the unfused add→norm pair.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+EPS = 1e-6
+
+
+def _fused_add_rmsnorm_kernel(res_ref, x_ref, gamma_ref, out_ref, sum_ref):
+    s = res_ref[...] + x_ref[...]
+    sum_ref[...] = s
+    ms = jnp.mean(jnp.square(s), axis=-1, keepdims=True)
+    out_ref[...] = s * jax.lax.rsqrt(ms + EPS) * gamma_ref[...][None, :]
+
+
+def fused_add_rmsnorm(residual, x, gamma, *, block_m: int = 128):
+    """residual, x: (M, D) f32; gamma: (D,) -> (normed (M, D), sum (M, D)).
+
+    Grid over M blocks; each block holds full D in VMEM (reductions over
+    the feature axis stay on-chip).
+    """
+    m, d = x.shape
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+    spec = pl.BlockSpec((bm, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        _fused_add_rmsnorm_kernel,
+        grid=grid,
+        in_specs=[spec, spec, pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(residual, x, gamma)
+
+
+def _rmsnorm_kernel(x_ref, gamma_ref, out_ref):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out_ref[...] = x * jax.lax.rsqrt(ms + EPS) * gamma_ref[...][None, :]
+
+
+def rmsnorm(x, gamma, *, block_m: int = 128):
+    """Plain RMSNorm kernel (graph entry points with no residual)."""
+    m, d = x.shape
+    bm = min(block_m, m)
+    grid = (pl.cdiv(m, bm),)
+    spec = pl.BlockSpec((bm, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        _rmsnorm_kernel,
+        grid=grid,
+        in_specs=[spec, pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=INTERPRET,
+    )(x, gamma)

@@ -1,0 +1,263 @@
+"""L2: TinyLM — the JAX transformer served end-to-end by the Rust engine.
+
+A small (≈1.8 M parameter) decoder-only transformer with the paper's
+architecture features exercised for real:
+
+* GQA attention (4 query heads over 2 KV heads),
+* rotary position embeddings,
+* SiLU-gated feed-forward,
+* q8 per-channel weights with the §3.7 stage-aware kernel split:
+  prefill uses the activation-quant + int8-GEMM Pallas kernels,
+  decode uses the dequant-in-kernel mat-vec,
+* fused residual+RMSNorm Pallas kernel (§3.6),
+* KV cache in the §3.8 layouts: K ``(L, h_kv, C, d_h)``,
+  V **reversed** ``(L, h_kv, d_h, C)``.
+
+Weights are generated from a fixed seed at AOT time and baked into the
+HLO as constants — the Rust binary needs only the HLO text artifacts.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn_k
+from compile.kernels import quant_matmul as qm
+from compile.kernels import ref
+from compile.kernels import rmsnorm as rn
+
+
+@dataclass(frozen=True)
+class TinyLMConfig:
+    layers: int = 4
+    d_model: int = 256
+    heads_q: int = 4
+    heads_kv: int = 2
+    head_dim: int = 64
+    ffn_hidden: int = 1024
+    vocab: int = 2048
+    cache_capacity: int = 320  # 64 prefill + 256 generate
+    seed: int = 42
+
+    @property
+    def group(self) -> int:
+        return self.heads_q // self.heads_kv
+
+
+CFG = TinyLMConfig()
+
+
+def init_weights(cfg: TinyLMConfig = CFG):
+    """Deterministic float weights (seeded normal, 0.02 std; embedding
+    rows L2-normalized-ish for stable logits)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = iter(jax.random.split(key, 6 * cfg.layers + 4))
+    std = 0.02
+    w = {"embed": jax.random.normal(next(keys), (cfg.vocab, cfg.d_model)) * std}
+    for l in range(cfg.layers):
+        d, h = cfg.d_model, cfg.head_dim
+        w[f"l{l}.wq"] = jax.random.normal(next(keys), (cfg.heads_q * h, d)) * std
+        w[f"l{l}.wk"] = jax.random.normal(next(keys), (cfg.heads_kv * h, d)) * std
+        w[f"l{l}.wv"] = jax.random.normal(next(keys), (cfg.heads_kv * h, d)) * std
+        w[f"l{l}.wo"] = jax.random.normal(next(keys), (d, cfg.heads_q * h)) * std
+        w[f"l{l}.ffn_gate"] = jax.random.normal(next(keys), (cfg.ffn_hidden, d)) * std
+        w[f"l{l}.ffn_up"] = jax.random.normal(jax.random.fold_in(key, 1000 + l), (cfg.ffn_hidden, d)) * std
+        w[f"l{l}.ffn_down"] = jax.random.normal(jax.random.fold_in(key, 2000 + l), (d, cfg.ffn_hidden)) * std
+        w[f"l{l}.attn_gamma"] = jnp.ones((d,))
+        w[f"l{l}.ffn_gamma"] = jnp.ones((d,))
+    w["final_gamma"] = jnp.ones((cfg.d_model,))
+    return w
+
+
+def quantize_weights(w):
+    """Per-channel q8 for every projection matrix; embeddings stay fp32
+    (they are gathers, not matmuls, on the embed side; the tied LM head
+    uses the quantized copy)."""
+    wq = {"embed": w["embed"]}
+    for name, mat in w.items():
+        if name == "embed" or name.endswith("gamma"):
+            wq[name] = mat
+            continue
+        q, s = ref.quantize_weights_ref(mat)
+        wq[name] = (q, s)
+    q, s = ref.quantize_weights_ref(w["embed"])
+    wq["lm_head"] = (q, s)  # tied embeddings, quantized for the matmul
+    return wq
+
+
+def _proj(x, wq, *, stage):
+    """Stage-aware projection: prefill → act-quant + int8 GEMM kernels;
+    decode → dequant-in-kernel mat-vec (§3.7)."""
+    q, s = wq
+    if stage == "prefill":
+        return qm.quant_matmul(x, q, s)
+    return qm.quant_matvec(x, q, s)
+
+
+def _rope(x, positions):
+    return ref.rope_ref(x, positions)
+
+
+def _layer_prefill(cfg, wq, l, x, positions):
+    """One transformer layer over (S, d). Returns (x', k_rows, v_rows)
+    with k_rows (h_kv, S, d_h) and v_rows (h_kv, d_h, S) — already in the
+    §3.8 cache layouts."""
+    s_len = x.shape[0]
+    normed = rn.rmsnorm(x, wq[f"l{l}.attn_gamma"])
+    q = _proj(normed, wq[f"l{l}.wq"], stage="prefill")      # (S, hq·dh)
+    k = _proj(normed, wq[f"l{l}.wk"], stage="prefill")      # (S, hkv·dh)
+    v = _proj(normed, wq[f"l{l}.wv"], stage="prefill")
+    q = q.reshape(s_len, cfg.heads_q, cfg.head_dim)
+    k = k.reshape(s_len, cfg.heads_kv, cfg.head_dim)
+    v = v.reshape(s_len, cfg.heads_kv, cfg.head_dim)
+    q = _rope(q.transpose(1, 0, 2), positions).reshape(
+        cfg.heads_kv, cfg.group, s_len, cfg.head_dim
+    )
+    k = _rope(k.transpose(1, 0, 2), positions)              # (hkv, S, dh)
+    v = v.transpose(1, 0, 2)                                # (hkv, S, dh)
+    # Causal attention with GQA: fold (hkv, group) into heads.
+    qh = q.reshape(cfg.heads_q, s_len, cfg.head_dim)
+    kh = jnp.repeat(k, cfg.group, axis=0)
+    vh = jnp.repeat(v, cfg.group, axis=0)
+    ctx = ref.causal_attention_ref(qh, kh, vh)              # (hq, S, dh)
+    ctx = ctx.transpose(1, 0, 2).reshape(s_len, cfg.heads_q * cfg.head_dim)
+    attn_out = _proj(ctx, wq[f"l{l}.wo"], stage="prefill")
+    # Fused residual+RMSNorm into the FFN (§3.6 Fig. 4 right).
+    ffn_in, x_sum = rn.fused_add_rmsnorm(x, attn_out, wq[f"l{l}.ffn_gamma"])
+    gate = jax.nn.silu(_proj(ffn_in, wq[f"l{l}.ffn_gate"], stage="prefill"))
+    up = _proj(ffn_in, wq[f"l{l}.ffn_up"], stage="prefill")
+    ffn_out = _proj(gate * up, wq[f"l{l}.ffn_down"], stage="prefill")
+    x_out = x_sum + ffn_out
+    return x_out, k, v.transpose(0, 2, 1)                   # v → (hkv, dh, S)
+
+
+def prefill(tokens, cfg: TinyLMConfig = CFG, wq=None):
+    """Process a prompt. tokens: (S,) i32.
+
+    Returns (logits (S, vocab), k_cache (L, h_kv, C, d_h),
+    v_cache (L, h_kv, d_h, C)) with the first S positions filled.
+    """
+    if wq is None:
+        wq = quantize_weights(init_weights(cfg))
+    s_len = tokens.shape[0]
+    positions = jnp.arange(s_len, dtype=jnp.int32)
+    x = wq["embed"][tokens]                                  # (S, d)
+    k_cache = jnp.zeros(
+        (cfg.layers, cfg.heads_kv, cfg.cache_capacity, cfg.head_dim), jnp.float32
+    )
+    v_cache = jnp.zeros(
+        (cfg.layers, cfg.heads_kv, cfg.head_dim, cfg.cache_capacity), jnp.float32
+    )
+    for l in range(cfg.layers):
+        x, k_rows, v_rows = _layer_prefill(cfg, wq, l, x, positions)
+        k_cache = k_cache.at[l, :, :s_len, :].set(k_rows)
+        v_cache = v_cache.at[l, :, :, :s_len].set(v_rows)
+    x = rn.rmsnorm(x, wq["final_gamma"])
+    logits = _proj(x, wq["lm_head"], stage="prefill")        # (S, vocab)
+    return logits, k_cache, v_cache
+
+
+def decode_step(token, pos, k_cache, v_cache, cfg: TinyLMConfig = CFG, wq=None):
+    """One generation step. token: () i32, pos: () i32 (index of this
+    token). Returns (logits (vocab,), k_cache', v_cache')."""
+    if wq is None:
+        wq = quantize_weights(init_weights(cfg))
+    x = wq["embed"][token][None, :]                          # (1, d)
+    positions = pos[None].astype(jnp.int32)
+    for l in range(cfg.layers):
+        normed = rn.rmsnorm(x, wq[f"l{l}.attn_gamma"])
+        q = _proj(normed, wq[f"l{l}.wq"], stage="decode")
+        k = _proj(normed, wq[f"l{l}.wk"], stage="decode")
+        v = _proj(normed, wq[f"l{l}.wv"], stage="decode")
+        q = q.reshape(cfg.heads_q, 1, cfg.head_dim)
+        k = k.reshape(cfg.heads_kv, 1, cfg.head_dim)
+        v = v.reshape(cfg.heads_kv, 1, cfg.head_dim)
+        q = _rope(q, positions)
+        k = _rope(k, positions)
+        # In-place cache update at pos (the fused QKV kernel's cache write).
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.transpose(0, 1, 2)[None].reshape(1, cfg.heads_kv, 1, cfg.head_dim),
+            (l, 0, pos, 0),
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.transpose(0, 2, 1)[None].reshape(1, cfg.heads_kv, cfg.head_dim, 1),
+            (l, 0, 0, pos),
+        )
+        qg = q.reshape(cfg.heads_kv, cfg.group, cfg.head_dim)
+        ctx = attn_k.decode_attention(qg, k_cache[l], v_cache[l], pos + 1)
+        ctx = ctx.reshape(1, cfg.heads_q * cfg.head_dim)
+        attn_out = _proj(ctx, wq[f"l{l}.wo"], stage="decode")
+        ffn_in, x_sum = rn.fused_add_rmsnorm(x, attn_out, wq[f"l{l}.ffn_gamma"])
+        gate = jax.nn.silu(_proj(ffn_in, wq[f"l{l}.ffn_gate"], stage="decode"))
+        up = _proj(ffn_in, wq[f"l{l}.ffn_up"], stage="decode")
+        ffn_out = _proj(gate * up, wq[f"l{l}.ffn_down"], stage="decode")
+        x = x_sum + ffn_out
+    x = rn.rmsnorm(x, wq["final_gamma"])
+    logits = _proj(x, wq["lm_head"], stage="decode")
+    return logits[0], k_cache, v_cache
+
+
+def decode_step_delta(token, pos, k_cache, v_cache, cfg: TinyLMConfig = CFG, wq=None):
+    """Decode step returning only the **updated cache rows** instead of the
+    full caches (EXPERIMENTS.md §Perf: shrinks the per-step device→host
+    transfer from 2×L·h_kv·C·d_h floats to 2×L·h_kv·d_h — the Rust side
+    scatters the rows into its host-resident §3.8-layout caches).
+
+    Returns (logits (vocab,), k_new (L, h_kv, d_h), v_new (L, h_kv, d_h)).
+    """
+    if wq is None:
+        wq = quantize_weights(init_weights(cfg))
+    x = wq["embed"][token][None, :]
+    positions = pos[None].astype(jnp.int32)
+    k_rows, v_rows = [], []
+    for l in range(cfg.layers):
+        normed = rn.rmsnorm(x, wq[f"l{l}.attn_gamma"])
+        q = _proj(normed, wq[f"l{l}.wq"], stage="decode")
+        k = _proj(normed, wq[f"l{l}.wk"], stage="decode")
+        v = _proj(normed, wq[f"l{l}.wv"], stage="decode")
+        q = _rope(q.reshape(cfg.heads_q, 1, cfg.head_dim), positions)
+        k = _rope(k.reshape(cfg.heads_kv, 1, cfg.head_dim), positions)
+        v = v.reshape(cfg.heads_kv, 1, cfg.head_dim)
+        k_rows.append(k[:, 0, :])
+        v_rows.append(v[:, 0, :])
+        # In-trace cache update for this step's attention (the caller's
+        # host copy is updated from the returned rows).
+        k_upd = jax.lax.dynamic_update_slice(
+            k_cache[l], k.reshape(cfg.heads_kv, 1, cfg.head_dim), (0, pos, 0)
+        )
+        v_upd = jax.lax.dynamic_update_slice(
+            v_cache[l], v.transpose(0, 2, 1), (0, 0, pos)
+        )
+        qg = q.reshape(cfg.heads_kv, cfg.group, cfg.head_dim)
+        ctx = attn_k.decode_attention(qg, k_upd, v_upd, pos + 1)
+        ctx = ctx.reshape(1, cfg.heads_q * cfg.head_dim)
+        attn_out = _proj(ctx, wq[f"l{l}.wo"], stage="decode")
+        ffn_in, x_sum = rn.fused_add_rmsnorm(x, attn_out, wq[f"l{l}.ffn_gamma"])
+        gate = jax.nn.silu(_proj(ffn_in, wq[f"l{l}.ffn_gate"], stage="decode"))
+        up = _proj(ffn_in, wq[f"l{l}.ffn_up"], stage="decode")
+        ffn_out = _proj(gate * up, wq[f"l{l}.ffn_down"], stage="decode")
+        x = x_sum + ffn_out
+    x = rn.rmsnorm(x, wq["final_gamma"])
+    logits = _proj(x, wq["lm_head"], stage="decode")
+    return logits[0], jnp.stack(k_rows), jnp.stack(v_rows)
+
+
+def reference_generate(prompt_tokens, steps, cfg: TinyLMConfig = CFG):
+    """Greedy generation loop in Python (the oracle for the Rust runtime's
+    token stream)."""
+    wq = quantize_weights(init_weights(cfg))
+    tokens = jnp.asarray(prompt_tokens, jnp.int32)
+    logits, k_cache, v_cache = prefill(tokens, cfg, wq)
+    out = []
+    next_tok = jnp.argmax(logits[-1]).astype(jnp.int32)
+    pos = tokens.shape[0]
+    for _ in range(steps):
+        out.append(int(next_tok))
+        logits, k_cache, v_cache = decode_step(
+            next_tok, jnp.asarray(pos, jnp.int32), k_cache, v_cache, cfg, wq
+        )
+        next_tok = jnp.argmax(logits).astype(jnp.int32)
+        pos += 1
+    return out

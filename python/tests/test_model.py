@@ -1,0 +1,103 @@
+"""L2 model correctness: TinyLM prefill/decode consistency and the
+properties the Rust runtime depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def wq():
+    return M.quantize_weights(M.init_weights(M.CFG))
+
+
+class TestPrefill:
+    def test_shapes(self, wq):
+        toks = jnp.arange(8, dtype=jnp.int32)
+        logits, k, v = M.prefill(toks, M.CFG, wq)
+        cfg = M.CFG
+        assert logits.shape == (8, cfg.vocab)
+        assert k.shape == (cfg.layers, cfg.heads_kv, cfg.cache_capacity, cfg.head_dim)
+        assert v.shape == (cfg.layers, cfg.heads_kv, cfg.head_dim, cfg.cache_capacity)
+
+    def test_cache_beyond_prompt_is_zero(self, wq):
+        toks = jnp.arange(5, dtype=jnp.int32)
+        _, k, v = M.prefill(toks, M.CFG, wq)
+        assert float(jnp.abs(k[:, :, 5:, :]).max()) == 0.0
+        assert float(jnp.abs(v[:, :, :, 5:]).max()) == 0.0
+
+    def test_deterministic(self, wq):
+        toks = jnp.array([3, 1, 4, 1, 5], jnp.int32)
+        a, _, _ = M.prefill(toks, M.CFG, wq)
+        b, _, _ = M.prefill(toks, M.CFG, wq)
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+    def test_causality(self, wq):
+        # Changing a later token must not change earlier logits.
+        t1 = jnp.array([1, 2, 3, 4, 5, 6], jnp.int32)
+        t2 = jnp.array([1, 2, 3, 4, 5, 999], jnp.int32)
+        l1, _, _ = M.prefill(t1, M.CFG, wq)
+        l2, _, _ = M.prefill(t2, M.CFG, wq)
+        np.testing.assert_allclose(np.array(l1[:5]), np.array(l2[:5]), rtol=1e-5, atol=1e-5)
+        assert float(jnp.abs(l1[5] - l2[5]).max()) > 1e-4
+
+
+class TestDecode:
+    def test_prefill_decode_consistency(self, wq):
+        """decode(token at position p) ≈ prefill up to p (within the
+        §3.7 cross-stage activation-quant noise) and agrees on argmax."""
+        toks = jnp.array([1, 2, 3, 4, 5, 6, 7, 8], jnp.int32)
+        full, _, _ = M.prefill(toks, M.CFG, wq)
+        part, k, v = M.prefill(toks[:7], M.CFG, wq)
+        lg, _, _ = M.decode_step(toks[7], jnp.asarray(7, jnp.int32), k, v, M.CFG, wq)
+        assert float(jnp.abs(lg - full[-1]).max()) < 0.05
+        assert int(jnp.argmax(lg)) == int(jnp.argmax(full[-1]))
+
+    def test_cache_update_in_place(self, wq):
+        toks = jnp.array([1, 2, 3], jnp.int32)
+        _, k, v = M.prefill(toks, M.CFG, wq)
+        _, k2, v2 = M.decode_step(
+            jnp.asarray(9, jnp.int32), jnp.asarray(3, jnp.int32), k, v, M.CFG, wq
+        )
+        # Existing entries untouched; position 3 written.
+        np.testing.assert_array_equal(np.array(k[:, :, :3]), np.array(k2[:, :, :3]))
+        assert float(jnp.abs(k2[:, :, 3]).max()) > 0.0
+        np.testing.assert_array_equal(np.array(v[:, :, :, :3]), np.array(v2[:, :, :, :3]))
+        assert float(jnp.abs(v2[:, :, :, 3]).max()) > 0.0
+
+    def test_greedy_generation_deterministic(self):
+        g1 = M.reference_generate([1, 2, 3, 4], 4)
+        g2 = M.reference_generate([1, 2, 3, 4], 4)
+        assert g1 == g2
+        assert all(0 <= t < M.CFG.vocab for t in g1)
+
+    def test_delta_decode_matches_full_decode(self, wq):
+        """The AOT decode artifact uses `decode_step_delta` (§Perf): same
+        logits as the full-cache variant, and the returned rows equal the
+        rows the full variant writes at `pos`."""
+        toks = jnp.array([5, 6, 7], jnp.int32)
+        _, k, v = M.prefill(toks, M.CFG, wq)
+        pos = jnp.asarray(3, jnp.int32)
+        tok = jnp.asarray(11, jnp.int32)
+        full_logits, k2, v2 = M.decode_step(tok, pos, k, v, M.CFG, wq)
+        d_logits, k_new, v_new = M.decode_step_delta(tok, pos, k, v, M.CFG, wq)
+        np.testing.assert_allclose(np.array(d_logits), np.array(full_logits), rtol=1e-5, atol=1e-5)
+        # Rows match what the full variant wrote at pos.
+        np.testing.assert_allclose(np.array(k_new), np.array(k2[:, :, 3, :]), rtol=1e-6)
+        np.testing.assert_allclose(np.array(v_new), np.array(v2[:, :, :, 3]), rtol=1e-6)
+
+
+class TestWeights:
+    def test_quantized_weights_structure(self, wq):
+        q, s = wq["l0.wq"]
+        assert q.dtype == jnp.int8
+        assert q.shape == (M.CFG.heads_q * M.CFG.head_dim, M.CFG.d_model)
+        assert s.shape == (M.CFG.heads_q * M.CFG.head_dim,)
+
+    def test_seeded_reproducibility(self):
+        w1 = M.init_weights(M.CFG)
+        w2 = M.init_weights(M.CFG)
+        np.testing.assert_array_equal(np.array(w1["embed"]), np.array(w2["embed"]))

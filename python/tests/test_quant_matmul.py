@@ -1,0 +1,152 @@
+"""L1 kernel correctness: quantized matmul family vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant_matmul as qm
+from compile.kernels import ref
+
+
+def _rand(key, shape, scale=2.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+class TestQuantizeRows:
+    def test_matches_ref(self):
+        x = _rand(0, (32, 128))
+        q, s = qm.quantize_rows(x)
+        q_ref, s_ref = ref.quantize_rows_ref(x)
+        np.testing.assert_array_equal(np.array(q), np.array(q_ref))
+        np.testing.assert_allclose(np.array(s), np.array(s_ref), rtol=1e-6)
+
+    def test_zero_rows_do_not_nan(self):
+        x = jnp.zeros((4, 64))
+        q, s = qm.quantize_rows(x)
+        assert not np.isnan(np.array(s)).any()
+        np.testing.assert_array_equal(np.array(q), 0)
+
+    def test_values_in_int8_range(self):
+        x = _rand(1, (16, 96), scale=100.0)
+        q, _ = qm.quantize_rows(x)
+        assert np.abs(np.array(q)).max() <= 127
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("m,k,n", [(1, 64, 128), (16, 256, 384), (64, 128, 256), (7, 96, 130)])
+    def test_matches_ref(self, m, k, n):
+        x = _rand(m * 1000 + n, (m, k))
+        w = _rand(m * 1000 + n + 1, (n, k))
+        wq, ws = ref.quantize_weights_ref(w)
+        got = qm.quant_matmul(x, wq, ws)
+        want = ref.quant_matmul_ref(x, wq, ws)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-4)
+
+    def test_close_to_float_matmul(self):
+        x = _rand(2, (8, 256), scale=0.5)
+        w = _rand(3, (64, 256), scale=0.02)
+        wq, ws = ref.quantize_weights_ref(w)
+        got = np.array(qm.quant_matmul(x, wq, ws))
+        want = np.array(x @ w.T)
+        # int8 weights + int8 activations: ~1 % relative error at this scale.
+        err = np.abs(got - want).max() / max(np.abs(want).max(), 1e-6)
+        assert err < 0.03, err
+
+    def test_block_boundaries(self):
+        # N not divisible by block; M smaller than block.
+        x = _rand(4, (3, 64))
+        w = _rand(5, (200, 64))
+        wq, ws = ref.quantize_weights_ref(w)
+        got = qm.quant_matmul(x, wq, ws, block_n=128)
+        want = ref.quant_matmul_ref(x, wq, ws)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-4)
+
+
+class TestQuantMatvec:
+    @pytest.mark.parametrize("m,k,n", [(1, 128, 256), (2, 64, 130), (1, 256, 2048)])
+    def test_matches_ref(self, m, k, n):
+        x = _rand(m + k, (m, k))
+        w = _rand(m + k + 1, (n, k))
+        wq, ws = ref.quantize_weights_ref(w)
+        got = qm.quant_matvec(x, wq, ws)
+        want = ref.quant_matvec_ref(x, wq, ws)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-3)
+
+    def test_prefill_and_decode_paths_agree(self):
+        # §3.7: the two stage paths compute the same function up to
+        # activation-quantization noise.
+        x = _rand(10, (4, 128), scale=0.5)
+        w = _rand(11, (96, 128), scale=0.05)
+        wq, ws = ref.quantize_weights_ref(w)
+        prefill = np.array(qm.quant_matmul(x, wq, ws))
+        decode = np.array(qm.quant_matvec(x, wq, ws))
+        scale = np.abs(decode).max()
+        assert np.abs(prefill - decode).max() < 0.02 * max(scale, 1.0)
+
+
+class TestInt4:
+    def test_pack_unpack_roundtrip(self):
+        w = _rand(20, (8, 32), scale=1.0)
+        packed, scales = qm.quantize_weights_i4(w)
+        assert packed.shape == (8, 16)
+        assert packed.dtype == jnp.uint8
+
+    @pytest.mark.parametrize("m,k,n", [(1, 64, 128), (2, 128, 200)])
+    def test_matvec_i4_matches_dequant(self, m, k, n):
+        x = _rand(30 + n, (m, k))
+        w = _rand(31 + n, (n, k))
+        packed, scales = qm.quantize_weights_i4(w)
+        got = np.array(qm.quant_matvec_i4(x, packed, scales))
+        # Reference: explicit unpack + float matmul.
+        p = np.array(packed)
+        sx = lambda v: np.where(v >= 8, v.astype(np.int32) - 16, v)
+        wdq = np.stack([sx(p & 0x0F), sx(p >> 4)], axis=-1).reshape(n, k)
+        wdq = wdq * np.array(scales)[:, None]
+        want = np.array(x) @ wdq.T
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+    def test_i4_error_larger_than_i8_but_bounded(self):
+        x = _rand(40, (4, 256), scale=0.5)
+        w = _rand(41, (64, 256), scale=0.02)
+        want = np.array(x @ w.T)
+        wq8, ws8 = ref.quantize_weights_ref(w)
+        got8 = np.array(qm.quant_matvec(x, wq8, ws8))
+        p4, s4 = qm.quantize_weights_i4(w)
+        got4 = np.array(qm.quant_matvec_i4(x, p4, s4))
+        e8 = np.abs(got8 - want).max()
+        e4 = np.abs(got4 - want).max()
+        assert e8 < e4 < 20 * e8 + 1e-3, (e8, e4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.sampled_from([32, 64, 96, 128]),
+    n=st.sampled_from([16, 64, 130, 256]),
+    scale=st.sampled_from([0.02, 0.5, 3.0]),
+)
+def test_hypothesis_quant_matmul_sweep(m, k, n, scale):
+    """Hypothesis sweep over shapes and data scales for the prefill GEMM."""
+    x = _rand(m * 7 + k, (m, k), scale=scale)
+    w = _rand(n * 13 + k, (n, k), scale=scale)
+    wq, ws = ref.quantize_weights_ref(w)
+    got = qm.quant_matmul(x, wq, ws)
+    want = ref.quant_matmul_ref(x, wq, ws)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.sampled_from([32, 64, 128]),
+    n=st.sampled_from([16, 100, 256]),
+)
+def test_hypothesis_matvec_sweep(k, n):
+    """Hypothesis sweep for the decode mat-vec (M=1)."""
+    x = _rand(k + n, (1, k))
+    w = _rand(k + n + 1, (n, k))
+    wq, ws = ref.quantize_weights_ref(w)
+    got = qm.quant_matvec(x, wq, ws)
+    want = ref.quant_matvec_ref(x, wq, ws)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-3)

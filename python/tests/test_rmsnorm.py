@@ -1,0 +1,65 @@
+"""L1 kernel correctness: fused residual+RMSNorm vs the jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import rmsnorm as rn
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+class TestFusedAddRmsNorm:
+    @pytest.mark.parametrize("m,d", [(1, 64), (16, 256), (64, 128), (7, 96)])
+    def test_matches_ref(self, m, d):
+        r = _rand(m, (m, d))
+        x = _rand(m + 1, (m, d))
+        g = _rand(m + 2, (d,)) + 1.0
+        got_n, got_s = rn.fused_add_rmsnorm(r, x, g)
+        want_n, want_s = ref.fused_add_rmsnorm_ref(r, x, g)
+        np.testing.assert_allclose(np.array(got_n), np.array(want_n), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.array(got_s), np.array(want_s), rtol=1e-6, atol=1e-6)
+
+    def test_secondary_output_is_exact_sum(self):
+        r = _rand(3, (8, 32))
+        x = _rand(4, (8, 32))
+        _, s = rn.fused_add_rmsnorm(r, x, jnp.ones((32,)))
+        np.testing.assert_array_equal(np.array(s), np.array(r + x))
+
+    def test_unit_rms_property(self):
+        # With gamma = 1, each output row has RMS ≈ 1.
+        r = _rand(5, (16, 128), scale=3.0)
+        x = _rand(6, (16, 128), scale=3.0)
+        n, _ = rn.fused_add_rmsnorm(r, x, jnp.ones((128,)))
+        rms = np.sqrt(np.mean(np.square(np.array(n)), axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+class TestRmsNorm:
+    def test_matches_formula(self):
+        x = _rand(7, (4, 64))
+        g = _rand(8, (64,)) + 1.0
+        got = rn.rmsnorm(x, g)
+        want, _ = ref.fused_add_rmsnorm_ref(jnp.zeros_like(x), x, g)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    d=st.sampled_from([32, 64, 128, 256]),
+    scale=st.sampled_from([0.01, 1.0, 50.0]),
+)
+def test_hypothesis_fused_norm_sweep(m, d, scale):
+    r = _rand(m * 3 + d, (m, d), scale=scale)
+    x = _rand(m * 3 + d + 1, (m, d), scale=scale)
+    g = jnp.ones((d,))
+    got_n, got_s = rn.fused_add_rmsnorm(r, x, g)
+    want_n, want_s = ref.fused_add_rmsnorm_ref(r, x, g)
+    np.testing.assert_allclose(np.array(got_n), np.array(want_n), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(got_s), np.array(want_s), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,97 @@
+//! Ablation study (the paper's §5 future-work item, implemented):
+//! quantify the contribution of each ML Drift optimization by disabling
+//! them one at a time — fusion (§3.6), stage-aware kernels (§3.7),
+//! memory planning (§3.5) — plus the q8 vs 8/4/4 quant sweep (§4.2's
+//! "decode up to 1.9×" claim) and the weight-layout effect (§3.1's
+//! "up to 20 % matmul speedup").
+
+use mldrift::bench::Table;
+use mldrift::device::registry::device;
+use mldrift::engine::compile::CompileOptions;
+use mldrift::engine::llm::simulate_llm;
+use mldrift::memory::Strategy;
+use mldrift::models::llm_config;
+use mldrift::quant::QuantScheme;
+
+fn main() {
+    let cfg = llm_config("gemma2_2b").unwrap();
+    let dev = device("adreno_750").unwrap();
+    let base = CompileOptions::default();
+
+    let variants: Vec<(&str, CompileOptions)> = vec![
+        ("full (all optimizations)", base),
+        ("no fusion", CompileOptions { fuse: false, ..base }),
+        ("no stage-aware kernels", CompileOptions { stage_aware: false, ..base }),
+        ("naive memory", CompileOptions { memory_strategy: Strategy::Naive, ..base }),
+    ];
+
+    let mut t = Table::new(
+        "Ablation — Gemma2 2B 8/4/4 on Adreno 750 (1024 prefill + 256 decode)",
+        &["variant", "prefill tok/s", "decode tok/s", "arena MB", "kernels/step"],
+    );
+    for (name, opts) in &variants {
+        match simulate_llm(&cfg, &dev, QuantScheme::Mixed844, 1024, 256, opts) {
+            Ok(p) => {
+                t.row(&[
+                    name.to_string(),
+                    format!("{:.0}", p.prefill_tokens_per_s),
+                    format!("{:.1}", p.decode_tokens_per_s),
+                    format!("{:.0}", p.decode.memory.total_bytes as f64 / 1e6),
+                    format!("{}", p.decode.plan.kernels.len()),
+                ]);
+            }
+            Err(e) => {
+                t.row(&[name.to_string(), format!("{e}"), "—".into(), "—".into(), "—".into()]);
+            }
+        }
+    }
+    t.print();
+
+    // Quantization sweep: decode gain q8 → 8/4/4 (§4.2: up to 1.9×).
+    let mut t = Table::new(
+        "Quantization sweep — Gemma2 2B on Adreno 750",
+        &["scheme", "weights GB", "prefill tok/s", "decode tok/s"],
+    );
+    let mut decode_q8 = 0.0;
+    for scheme in [QuantScheme::F16, QuantScheme::Q8, QuantScheme::GgufQ4_0, QuantScheme::Mixed844]
+    {
+        match simulate_llm(&cfg, &dev, scheme, 1024, 256, &base) {
+            Ok(p) => {
+                if scheme == QuantScheme::Q8 {
+                    decode_q8 = p.decode_tokens_per_s;
+                }
+                t.row(&[
+                    scheme.name().to_string(),
+                    format!("{:.2}", p.weight_bytes as f64 / 1e9),
+                    format!("{:.0}", p.prefill_tokens_per_s),
+                    format!("{:.1}", p.decode_tokens_per_s),
+                ]);
+            }
+            Err(e) => {
+                t.row(&[scheme.name().to_string(), format!("{e}"), "—".into(), "—".into()]);
+            }
+        }
+    }
+    t.print();
+    let m844 = simulate_llm(&cfg, &dev, QuantScheme::Mixed844, 1024, 256, &base).unwrap();
+    println!(
+        "decode gain 8/4/4 vs q8: {:.2}× (paper: up to 1.9×); prefill ~unchanged (compute-bound)",
+        m844.decode_tokens_per_s / decode_q8
+    );
+
+    // Weight-layout effect (§3.1): optimal vs naive layout ≈ up-to-20 %
+    // matmul speedup, modeled as the texture-cache boost the tuned layout
+    // unlocks on Adreno.
+    let tuned = dev.clone();
+    let mut naive_layout = dev.clone();
+    naive_layout.texture_cache_boost = 1.0;
+    naive_layout.eff_compute *= 0.85;
+    let a = simulate_llm(&cfg, &tuned, QuantScheme::Mixed844, 1024, 64, &base).unwrap();
+    let b = simulate_llm(&cfg, &naive_layout, QuantScheme::Mixed844, 1024, 64, &base).unwrap();
+    println!(
+        "weight-layout effect: prefill {:.0} vs naive-layout {:.0} tok/s = {:.0}% (paper: up to 20%)",
+        a.prefill_tokens_per_s,
+        b.prefill_tokens_per_s,
+        (a.prefill_tokens_per_s / b.prefill_tokens_per_s - 1.0) * 100.0
+    );
+}

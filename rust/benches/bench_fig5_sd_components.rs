@@ -1,0 +1,48 @@
+//! Figure 5: single-step SD 1.4 latency by component (text encoder, VAE
+//! decoder, UNet) across the Qualcomm and Arm mobile GPUs, plus the §4.1
+//! end-to-end checkpoints (A740 10.96 s, A750 < 9 s; Apple M1 Ultra
+//! 3.86 s / M4 Pro 5.34 s vs CoreML).
+
+use mldrift::baselines::Baseline;
+use mldrift::bench::Table;
+use mldrift::device::registry::device;
+use mldrift::diffusion::SdPipeline;
+use mldrift::engine::compile::CompileOptions;
+
+fn main() {
+    let opts = CompileOptions::default();
+    let mut t = Table::new(
+        "Figure 5 — SD 1.4 single-step latency by component (ms)",
+        &["device", "text encoder", "UNet (1 step)", "VAE decoder", "e2e 20 it. (s)"],
+    );
+    for name in ["adreno_830", "adreno_750", "adreno_740", "immortalis_g720", "mali_g715"] {
+        let dev = device(name).unwrap();
+        let r = SdPipeline::compile(&dev, &opts).unwrap().run(20);
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", r.text_encoder_s * 1e3),
+            format!("{:.0}", r.unet_step_s * 1e3),
+            format!("{:.0}", r.vae_decoder_s * 1e3),
+            format!("{:.2}", r.end_to_end_s),
+        ]);
+    }
+    t.print();
+    println!("paper §4.1 checkpoints: Adreno 740 = 10.96 s, Adreno 750 < 9 s");
+
+    // Apple Silicon vs CoreML (§4.1).
+    let mut t = Table::new(
+        "SD 1.4 on Apple Silicon: ML Drift Metal vs CoreML — measured (paper)",
+        &["device", "ML Drift (s)", "CoreML (s)"],
+    );
+    for (name, p_drift, p_coreml) in [("m1_ultra", 3.86, 5.03), ("m4_pro", 5.34, 6.16)] {
+        let dev = device(name).unwrap();
+        let drift = Baseline::mldrift().run_sd(&dev, 20).unwrap().end_to_end_s;
+        let coreml = Baseline::coreml_sd().run_sd(&dev, 20).unwrap().end_to_end_s;
+        t.row(&[
+            name.to_string(),
+            format!("{drift:.2} ({p_drift:.2})"),
+            format!("{coreml:.2} ({p_coreml:.2})"),
+        ]);
+    }
+    t.print();
+}

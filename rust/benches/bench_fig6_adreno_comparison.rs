@@ -1,0 +1,59 @@
+//! Figure 6: LLM performance on Adreno 830 — ML Drift vs llama.cpp
+//! (OpenCL) vs MLC LLM. Headline: 5–11× prefill speedup; also the Mali
+//! comparison from §4.2 (Drift 791/12.5 vs MLC 89.2/11.2 on Llama3.2 3B).
+
+use mldrift::baselines::{mobile_llm_baselines, Baseline};
+use mldrift::bench::Table;
+use mldrift::device::registry::device;
+use mldrift::models::llm_config;
+
+fn main() {
+    let dev = device("adreno_830").unwrap();
+    let mut t = Table::new(
+        "Figure 6 — Adreno 830 tokens/s by engine",
+        &["model", "engine", "prefill", "decode", "prefill speedup"],
+    );
+    for model in ["gemma_2b", "gemma2_2b", "llama3.2_3b", "llama3.1_8b"] {
+        let cfg = llm_config(model).unwrap();
+        let mut drift_prefill = 0.0;
+        for b in mobile_llm_baselines() {
+            match b.run_llm(&cfg, &dev, 1024, 256) {
+                Ok((p, d)) => {
+                    if b.name.starts_with("ML Drift") {
+                        drift_prefill = p;
+                    }
+                    let speedup = if b.name.starts_with("ML Drift") {
+                        "1.0×".to_string()
+                    } else {
+                        format!("{:.1}× behind", drift_prefill / p)
+                    };
+                    t.row(&[
+                        model.to_string(),
+                        b.name.to_string(),
+                        format!("{p:.0}"),
+                        format!("{d:.1}"),
+                        speedup,
+                    ]);
+                }
+                Err(e) => {
+                    t.row(&[model.to_string(), b.name.to_string(), format!("{e}"), "—".into(), "—".into()]);
+                }
+            }
+        }
+    }
+    t.print();
+    println!("paper claim: ML Drift prefill 5–11× over open-source engines on Adreno\n");
+
+    // §4.2 Mali datapoint: Llama3.2 3B q8 on Immortalis-G720:
+    // Drift 791 prefill / 12.5 decode; MLC q4f16 89.2 / 11.2.
+    let mali = device("immortalis_g720").unwrap();
+    let cfg = llm_config("llama3.2_3b").unwrap();
+    let drift = Baseline { scheme: mldrift::quant::QuantScheme::Q8, ..Baseline::mldrift() }
+        .run_llm(&cfg, &mali, 1024, 256)
+        .unwrap();
+    let mlc = Baseline::mlc_llm().run_llm(&cfg, &mali, 1024, 256).unwrap();
+    println!(
+        "Mali G720, Llama3.2 3B: Drift q8 {:.0}/{:.1} (paper 791/12.5) vs MLC {:.0}/{:.1} (paper 89.2/11.2)",
+        drift.0, drift.1, mlc.0, mlc.1
+    );
+}

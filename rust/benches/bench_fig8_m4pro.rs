@@ -1,0 +1,37 @@
+//! Figure 8: LLM performance on Apple M4 Pro (20-core GPU, Metal) —
+//! ML Drift vs llama.cpp, ollama, MLX LM. Paper: Drift prefill +14 % over
+//! llama.cpp and +20 % over MLX on Gemma2 2B; decode consistently ahead
+//! of llama.cpp/ollama.
+
+use mldrift::baselines::apple_llm_baselines;
+use mldrift::bench::Table;
+use mldrift::device::registry::device;
+
+fn main() {
+    let dev = device("m4_pro").unwrap();
+    let mut t = Table::new(
+        "Figure 8 — Apple M4 Pro tokens/s by engine",
+        &["model", "engine", "prefill", "decode"],
+    );
+    let mut gemma2_rows: Vec<(String, f64)> = Vec::new();
+    for model in ["gemma_2b", "gemma2_2b", "llama3.2_3b", "llama3.1_8b"] {
+        let cfg = mldrift::models::llm_config(model).unwrap();
+        for b in apple_llm_baselines() {
+            let (p, d) = b.run_llm(&cfg, &dev, 1024, 256).unwrap();
+            if model == "gemma2_2b" {
+                gemma2_rows.push((b.name.to_string(), p));
+            }
+            t.row(&[model.to_string(), b.name.to_string(), format!("{p:.0}"), format!("{d:.1}")]);
+        }
+    }
+    t.print();
+    let drift = gemma2_rows.iter().find(|(n, _)| n.starts_with("ML Drift")).unwrap().1;
+    let lcpp = gemma2_rows.iter().find(|(n, _)| n.contains("llama.cpp")).unwrap().1;
+    let mlx = gemma2_rows.iter().find(|(n, _)| n.contains("MLX")).unwrap().1;
+    println!(
+        "Gemma2 2B prefill lead: +{:.0}% over llama.cpp (paper +14%), +{:.0}% over MLX (paper +20%)",
+        (drift / lcpp - 1.0) * 100.0,
+        (drift / mlx - 1.0) * 100.0
+    );
+    println!("note (§4.2): quant-scheme prefill variance is attenuated on Apple's high-bandwidth memory");
+}

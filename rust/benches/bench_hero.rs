@@ -1,0 +1,55 @@
+//! Hero table (paper p.1): ML Drift on mobile (Adreno 750) and laptop
+//! (Intel Ultra 7 258V) — SD 512×512 20 it., Gemma2 2B and Llama 3.1 8B
+//! at mixed-q8/4/4, prefill + decode tokens/s.
+
+use mldrift::bench::Table;
+use mldrift::device::registry::device;
+use mldrift::diffusion::SdPipeline;
+use mldrift::engine::compile::CompileOptions;
+use mldrift::engine::llm::simulate_llm;
+use mldrift::models::llm_config;
+use mldrift::quant::QuantScheme;
+
+fn main() {
+    let opts = CompileOptions::default();
+    let mobile = device("adreno_750").unwrap();
+    let laptop = device("intel_258v").unwrap();
+
+    let mut t = Table::new(
+        "Hero table — ML Drift performance (paper values in parens)",
+        &["workload", "metric", "mobile A750", "laptop 258V"],
+    );
+
+    // Stable Diffusion.
+    let sd_m = SdPipeline::compile(&mobile, &opts).unwrap().run(20).end_to_end_s;
+    let sd_l = SdPipeline::compile(&laptop, &opts).unwrap().run(20).end_to_end_s;
+    t.row(&[
+        "Stable Diffusion 512×512, 20 it.".into(),
+        "seconds".into(),
+        format!("{sd_m:.2} (8.97)"),
+        format!("{sd_l:.2} (3.40)"),
+    ]);
+
+    // LLM rows.
+    for (model, p_m, d_m, p_l, d_l) in [
+        ("gemma2_2b", 1370.0, 37.1, 3920.0, 45.7),
+        ("llama3.1_8b", 412.0, 12.7, 1280.0, 22.9),
+    ] {
+        let cfg = llm_config(model).unwrap();
+        let m = simulate_llm(&cfg, &mobile, QuantScheme::Mixed844, 1024, 256, &opts).unwrap();
+        let l = simulate_llm(&cfg, &laptop, QuantScheme::Mixed844, 1024, 256, &opts).unwrap();
+        t.row(&[
+            format!("{model} mixed-q8/4/4"),
+            "prefill tok/s".into(),
+            format!("{:.0} ({p_m:.0})", m.prefill_tokens_per_s),
+            format!("{:.0} ({p_l:.0})", l.prefill_tokens_per_s),
+        ]);
+        t.row(&[
+            String::new(),
+            "decode tok/s".into(),
+            format!("{:.1} ({d_m:.1})", m.decode_tokens_per_s),
+            format!("{:.1} ({d_l:.1})", l.decode_tokens_per_s),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,44 @@
+//! Real-runtime benchmark: TinyLM on PJRT-CPU through the full L3 path.
+//! This is the measured (not simulated) half of EXPERIMENTS.md §E2E/§Perf.
+//! Skips gracefully when `make artifacts` has not run.
+
+use mldrift::runtime::{Runtime, TinyLmRuntime};
+use mldrift::util::stats::Summary;
+
+fn main() {
+    let dir = std::env::var("MLDRIFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("SKIP bench_runtime: no artifacts at {dir}/ (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let model = TinyLmRuntime::load(&rt, &dir).unwrap();
+
+    // Prefill latency per bucket.
+    for bucket in model.buckets() {
+        let prompt: Vec<i32> = (0..bucket as i32).collect();
+        let mut samples = Vec::new();
+        for _ in 0..5 {
+            let t = std::time::Instant::now();
+            let _ = model.prefill(&prompt).unwrap();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let s = Summary::from_samples(samples);
+        println!(
+            "prefill s{bucket}: {} -> {:.0} tokens/s",
+            s.report("s"),
+            bucket as f64 / s.median()
+        );
+    }
+
+    // Decode throughput over a 32-token generation.
+    let prompt: Vec<i32> = (0..16).collect();
+    let g = model.generate(&prompt, 32).unwrap();
+    let s = Summary::from_samples(g.decode_s.clone());
+    println!("decode step: {}", s.report("s"));
+    println!(
+        "decode throughput: {:.1} tokens/s | ttft {:.1} ms",
+        g.decode_tokens_per_s(),
+        g.ttft_s() * 1e3
+    );
+}

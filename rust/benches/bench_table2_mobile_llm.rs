@@ -1,0 +1,56 @@
+//! Table 2: LLM tokens/s on Qualcomm and Arm GPUs — 4 models × {q8, 8/4/4}
+//! × 5 mobile devices, 1024 prefill + 256 decode. OOM entries must match
+//! the paper's footnote (Llama 3.1 8B q8 on the 8/12 GB phones).
+
+use mldrift::bench::Table;
+use mldrift::device::registry::device;
+use mldrift::engine::compile::CompileOptions;
+use mldrift::engine::llm::simulate_llm;
+use mldrift::models::llm_config;
+use mldrift::quant::QuantScheme;
+
+/// Paper Table 2 values (prefill, decode) per (model+scheme, device).
+const PAPER: &[(&str, QuantScheme, [(f64, f64); 5])] = &[
+    ("gemma_2b", QuantScheme::Q8, [(1440., 22.8), (1440., 23.1), (1120., 20.4), (1280., 18.2), (796., 11.9)]),
+    ("gemma_2b", QuantScheme::Mixed844, [(1490., 42.5), (1480., 42.7), (1150., 38.1), (1380., 32.5), (813., 12.2)]),
+    ("gemma2_2b", QuantScheme::Q8, [(1220., 20.8), (1290., 21.3), (1010., 18.3), (1170., 15.7), (700., 11.2)]),
+    ("gemma2_2b", QuantScheme::Mixed844, [(1250., 37.0), (1370., 37.1), (1040., 32.4), (1250., 27.3), (729., 18.4)]),
+    ("llama3.2_3b", QuantScheme::Q8, [(960., 17.1), (917., 17.5), (720., 15.4), (791., 12.5), (507., 8.71)]),
+    ("llama3.2_3b", QuantScheme::Mixed844, [(983., 30.4), (959., 30.3), (741., 26.8), (850., 21.2), (516., 15.0)]),
+    ("llama3.1_8b", QuantScheme::Q8, [(389., 7.70), (0., 0.), (0., 0.), (270., 4.72), (0., 0.)]),
+    ("llama3.1_8b", QuantScheme::Mixed844, [(413., 13.4), (412., 12.7), (325., 10.7), (378., 8.88), (240., 6.46)]),
+];
+
+const DEVICES: [&str; 5] =
+    ["adreno_830", "adreno_750", "adreno_740", "immortalis_g720", "mali_g715"];
+
+fn main() {
+    let opts = CompileOptions::default();
+    let mut t = Table::new(
+        "Table 2 — LLM tokens/s on mobile GPUs: measured (paper)",
+        &["model", "stage", "A830", "A750", "A740", "G720", "G715"],
+    );
+    for (model, scheme, paper) in PAPER {
+        let cfg = llm_config(model).unwrap();
+        let mut pre = vec![format!("{model} {}", scheme.name()), "prefill".to_string()];
+        let mut dec = vec![String::new(), "decode".to_string()];
+        for (i, dev_name) in DEVICES.iter().enumerate() {
+            let dev = device(dev_name).unwrap();
+            match simulate_llm(&cfg, &dev, *scheme, 1024, 256, &opts) {
+                Ok(p) => {
+                    pre.push(format!("{:.0} ({:.0})", p.prefill_tokens_per_s, paper[i].0));
+                    dec.push(format!("{:.1} ({:.1})", p.decode_tokens_per_s, paper[i].1));
+                }
+                Err(mldrift::DriftError::OutOfMemory { .. }) => {
+                    let expected_oom = paper[i] == (0., 0.);
+                    pre.push(if expected_oom { "OOM (OOM)".into() } else { "OOM (!?)".into() });
+                    dec.push("—".into());
+                }
+                Err(e) => panic!("{model} {dev_name}: {e}"),
+            }
+        }
+        t.row(&pre);
+        t.row(&dec);
+    }
+    t.print();
+}

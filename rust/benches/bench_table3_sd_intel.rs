@@ -1,0 +1,41 @@
+//! Table 3: Stable Diffusion 1.4 on Intel Meteor Lake Ultra 7 165U —
+//! ML Drift OpenCL vs ML Drift WebGPU vs ONNX Runtime DirectML.
+
+use mldrift::baselines::Baseline;
+use mldrift::bench::Table;
+use mldrift::device::registry::device;
+
+fn main() {
+    let dev = device("intel_165u").unwrap();
+    let engines = [
+        (Baseline::mldrift(), 0.64, 13.5),
+        (Baseline::mldrift_webgpu(), 1.28, 27.9),
+        (Baseline::onnx_directml(), 1.75, 37.0),
+    ];
+    let mut t = Table::new(
+        "Table 3 — SD 1.4 on Intel Ultra 7 165U: measured (paper)",
+        &["engine", "per iteration (s)", "end-to-end (s)"],
+    );
+    let mut e2e = Vec::new();
+    for (b, paper_iter, paper_e2e) in engines {
+        let r = b.run_sd(&dev, 20).unwrap();
+        e2e.push(r.end_to_end_s);
+        t.row(&[
+            b.name.to_string(),
+            format!("{:.2} ({paper_iter:.2})", r.unet_step_s),
+            format!("{:.1} ({paper_e2e:.1})", r.end_to_end_s),
+        ]);
+    }
+    t.print();
+    println!(
+        "speedups vs DirectML: OpenCL {:.1}× (paper 2.7×), WebGPU {:.1}× (paper 1.3×)",
+        e2e[2] / e2e[0],
+        e2e[2] / e2e[1]
+    );
+
+    // §4.1 Lunar Lake comparison: 258V generates in 3.4 s (Intel's 288V
+    // figure: 3.89 s).
+    let lnl = device("intel_258v").unwrap();
+    let r = Baseline::mldrift().run_sd(&lnl, 20).unwrap();
+    println!("Lunar Lake 258V end-to-end: {:.2} s (paper 3.4 s; Intel 288V reported 3.89 s)", r.end_to_end_s);
+}

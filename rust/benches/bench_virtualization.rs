@@ -1,0 +1,79 @@
+//! Microbenchmarks for the virtualization machinery itself (§3.2–3.3):
+//! logical→physical index translation throughput, layout pack/unpack,
+//! codegen latency, and the memory planner on large graphs. These are
+//! the L3 hot paths `EXPERIMENTS.md §Perf` tracks.
+
+use mldrift::bench::harness::{black_box, Bencher};
+use mldrift::memory::{lifetimes, plan, Strategy};
+use mldrift::models::sd::sd_unet;
+use mldrift::tensor::{ActivationLayout, DType, HostTensor, Shape};
+use mldrift::translate::codegen::{read_write_helpers, translation_coords};
+use mldrift::vgpu::descriptor::TensorDescriptor;
+use mldrift::vgpu::mapper::VirtualMapping;
+use mldrift::vgpu::object::StorageType;
+
+fn main() {
+    let b = Bencher::default();
+
+    // Index translation: one logical→physical map call.
+    let desc = TensorDescriptor::with_default_layout(
+        "t",
+        Shape::bhwc(1, 64, 64, 320),
+        DType::F16,
+        StorageType::Texture2D,
+    )
+    .unwrap();
+    let mapping = VirtualMapping::single(desc.clone());
+    let mut i = 0usize;
+    b.bench("virtual mapping: map() per element", || {
+        i = (i + 7) % (64 * 64);
+        black_box(mapping.map(0, i / 64, i % 64, 0, (i * 3) % 320));
+    });
+
+    // Symbolic translation construction (codegen-time cost).
+    b.bench("translation_coords (codegen-time)", || {
+        black_box(translation_coords(&desc));
+    });
+    b.bench("read_write_helpers source gen", || {
+        black_box(read_write_helpers("src", &desc));
+    });
+
+    // Layout pack of a 64×64×320 activation (weights conversion path).
+    let t = HostTensor::zeros(Shape::bhwc(1, 64, 64, 320));
+    let layout = ActivationLayout::hswbdc4();
+    b.bench("pack 1.3M-element tensor to HSWBDC4", || {
+        black_box(t.pack(&layout));
+    });
+
+    // Memory planning on the UNet graph (±1900 tensors).
+    let g = sd_unet().unwrap();
+    let usages = lifetimes(&g, DType::F16);
+    println!("unet intermediate tensors: {}", usages.len());
+    b.bench("GREEDY_BY_SIZE plan (UNet graph)", || {
+        black_box(plan(&usages, Strategy::GreedyBySize));
+    });
+    b.bench("GREEDY_BY_BREADTH plan (UNet graph)", || {
+        black_box(plan(&usages, Strategy::GreedyByBreadth));
+    });
+
+    // Full compile pipeline latency (graph → plan).
+    let dev = mldrift::device::registry::device("adreno_750").unwrap();
+    let cfg = mldrift::models::llm_config("gemma2_2b").unwrap();
+    b.bench("compile gemma2 decode graph end-to-end", || {
+        let g = mldrift::models::llm::build_llm_graph(
+            &cfg,
+            1,
+            mldrift::models::llm::LlmStageGraph::Decode { cache_len: 1152 },
+            mldrift::quant::QuantScheme::Mixed844,
+        )
+        .unwrap();
+        let c = mldrift::engine::compile::compile_graph(
+            g,
+            &dev,
+            mldrift::codegen::select::Stage::Decode,
+            &mldrift::engine::compile::CompileOptions::default(),
+        )
+        .unwrap();
+        black_box(c.report.total_s);
+    });
+}

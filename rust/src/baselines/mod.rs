@@ -1,0 +1,358 @@
+//! Baseline inference-engine models for the paper's comparisons.
+//!
+//! The paper compares ML Drift against llama.cpp, MLC LLM, ollama,
+//! torchchat, MLX LM (LLM; Figs. 6–8), ONNX Runtime DirectML and CoreML
+//! (diffusion; Table 3, §4.1). None of those run in this environment, so
+//! each baseline is modeled as *the same roofline simulator* driving the
+//! same model graphs, parameterized by that engine's documented design
+//! choices (substitution table in DESIGN.md):
+//!
+//! * **Quantization format** — GGUF `q4_0` group quant for the
+//!   llama.cpp family (model size between q8 and 8/4/4, §4.2).
+//! * **Extension access** — llama.cpp's OpenCL backend does not use the
+//!   mobile int8 dot-product extensions ML Drift's prefill path exploits
+//!   (the 5–11× prefill gap of Fig. 6); its CUDA backend *does* reach
+//!   tensor cores (Fig. 7's framing).
+//! * **No stage-aware kernel split / no QKV+RoPE fusion** — the §3.6/3.7
+//!   optimizations are ML Drift contributions.
+//! * **Engine maturity multipliers** — residual per-engine efficiency
+//!   deltas (kernel tuning, launch overheads) calibrated against one
+//!   anchor bar per figure; everything else is prediction.
+
+
+use crate::device::profile::DeviceProfile;
+use crate::device::registry::webgpu_variant;
+use crate::engine::compile::CompileOptions;
+use crate::engine::llm::simulate_llm;
+use crate::error::Result;
+use crate::memory::Strategy;
+use crate::models::llm::LlmConfig;
+use crate::quant::QuantScheme;
+
+/// A baseline engine model.
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    pub name: &'static str,
+    /// Weight format the engine deploys.
+    pub scheme: QuantScheme,
+    /// Whether the engine applies ML-Drift-style fusion.
+    pub fuse: bool,
+    /// Whether it splits prefill/decode kernels (§3.7).
+    pub stage_aware: bool,
+    /// Engine reaches the device's int8 dot / coop-matrix extensions.
+    pub int8_extensions: bool,
+    /// CUDA-class backend: tensor cores + fp16 reachable (Fig. 7).
+    pub cuda_class: bool,
+    /// Residual compute-efficiency multiplier vs ML Drift kernels.
+    pub compute_mult: f64,
+    /// Residual bandwidth-efficiency multiplier.
+    pub bw_mult: f64,
+    /// Kernel-launch overhead multiplier.
+    pub launch_mult: f64,
+}
+
+impl Baseline {
+    /// ML Drift itself (identity baseline).
+    pub fn mldrift() -> Baseline {
+        Baseline {
+            name: "ML Drift",
+            scheme: QuantScheme::Mixed844,
+            fuse: true,
+            stage_aware: true,
+            int8_extensions: true,
+            cuda_class: false,
+            compute_mult: 1.0,
+            bw_mult: 1.0,
+            launch_mult: 1.0,
+        }
+    }
+
+    /// llama.cpp's OpenCL backend on mobile GPUs (Fig. 6).
+    pub fn llamacpp_opencl() -> Baseline {
+        Baseline {
+            name: "llama.cpp (OpenCL)",
+            scheme: QuantScheme::GgufQ4_0,
+            fuse: false,
+            stage_aware: false,
+            int8_extensions: false,
+            cuda_class: false,
+            compute_mult: 0.40,
+            bw_mult: 0.72,
+            launch_mult: 1.6,
+        }
+    }
+
+    /// MLC LLM (TVM-compiled, q4f16) on mobile (Fig. 6).
+    pub fn mlc_llm() -> Baseline {
+        Baseline {
+            name: "MLC LLM (q4f16)",
+            scheme: QuantScheme::GgufQ4_0,
+            fuse: true, // TVM fuses elementwise chains
+            stage_aware: false,
+            int8_extensions: false,
+            cuda_class: false,
+            compute_mult: 0.45,
+            bw_mult: 0.80,
+            launch_mult: 1.3,
+        }
+    }
+
+    /// llama.cpp's CUDA backend on the RTX 4090 (Fig. 7): tensor cores
+    /// and fp16 fully reachable, and CUDA's memory path achieves a higher
+    /// fraction of peak bandwidth than the OpenCL driver (the 5–25 %
+    /// decode lead the paper reports).
+    pub fn llamacpp_cuda() -> Baseline {
+        Baseline {
+            name: "llama.cpp (CUDA)",
+            scheme: QuantScheme::GgufQ4_0,
+            fuse: true,
+            stage_aware: true,
+            int8_extensions: true,
+            cuda_class: true,
+            compute_mult: 0.95,
+            bw_mult: 1.25, // 0.62 (OpenCL-calibrated base) × 1.25 ≈ 0.78 of peak
+            launch_mult: 0.8,
+        }
+    }
+
+    /// ollama: llama.cpp CUDA wrapped with a serving layer (Fig. 7 shows
+    /// it below both llama.cpp and ML Drift).
+    pub fn ollama_cuda() -> Baseline {
+        Baseline { name: "ollama (CUDA)", bw_mult: 0.80, compute_mult: 0.80, ..Self::llamacpp_cuda() }
+    }
+
+    /// torchchat CUDA (Fig. 7's slowest decode bars).
+    pub fn torchchat_cuda() -> Baseline {
+        Baseline { name: "torchchat (CUDA)", bw_mult: 0.58, compute_mult: 0.60, ..Self::llamacpp_cuda() }
+    }
+
+    /// llama.cpp's Metal backend on Apple Silicon (Fig. 8): mature, but
+    /// ~14 % behind ML Drift prefill and consistently behind on decode.
+    pub fn llamacpp_metal() -> Baseline {
+        Baseline {
+            name: "llama.cpp (Metal)",
+            scheme: QuantScheme::GgufQ4_0,
+            fuse: true,
+            stage_aware: false,
+            int8_extensions: false,
+            cuda_class: false,
+            compute_mult: 0.88,
+            bw_mult: 0.82,
+            launch_mult: 1.0,
+        }
+    }
+
+    /// ollama on Metal.
+    pub fn ollama_metal() -> Baseline {
+        Baseline { name: "ollama (Metal)", bw_mult: 0.68, compute_mult: 0.75, ..Self::llamacpp_metal() }
+    }
+
+    /// MLX LM on Apple Silicon (Fig. 8: ~20 % behind Drift prefill on
+    /// Gemma; competitive decode on Llama).
+    pub fn mlx_lm() -> Baseline {
+        Baseline {
+            name: "MLX LM",
+            scheme: QuantScheme::GgufQ4_0,
+            fuse: true,
+            stage_aware: true,
+            int8_extensions: false,
+            cuda_class: false,
+            compute_mult: 0.83,
+            bw_mult: 0.92,
+            launch_mult: 0.9,
+        }
+    }
+
+    /// ONNX Runtime + DirectML running Stable Diffusion (Table 3).
+    pub fn onnx_directml() -> Baseline {
+        Baseline {
+            name: "ONNX Runtime DirectML",
+            scheme: QuantScheme::F16,
+            fuse: false,
+            stage_aware: false,
+            int8_extensions: false,
+            cuda_class: false,
+            compute_mult: 0.37,
+            bw_mult: 0.55,
+            launch_mult: 2.5,
+        }
+    }
+
+    /// Apple CoreML Stable Diffusion (§4.1: 5.03 s on M1 Ultra vs Drift
+    /// 3.86 s; 6.16 s on M4 Pro vs 5.34 s).
+    pub fn coreml_sd() -> Baseline {
+        Baseline {
+            name: "CoreML SD",
+            scheme: QuantScheme::F16,
+            fuse: true,
+            stage_aware: false,
+            int8_extensions: false,
+            cuda_class: false,
+            compute_mult: 0.80,
+            bw_mult: 0.85,
+            launch_mult: 1.2,
+        }
+    }
+
+    /// ML Drift's WebGPU backend (Table 3 / §4.2): same engine, reduced
+    /// extension access + dispatch overhead, modeled via
+    /// [`webgpu_variant`]. `compute_mult` etc. stay 1.0.
+    pub fn mldrift_webgpu() -> Baseline {
+        Baseline { name: "ML Drift WebGPU", ..Self::mldrift() }
+    }
+
+    /// Apply the baseline's device adjustments.
+    pub fn adjust_device(&self, dev: &DeviceProfile) -> DeviceProfile {
+        let mut d = if self.name == "ML Drift WebGPU" { webgpu_variant(dev) } else { dev.clone() };
+        d.eff_compute *= self.compute_mult;
+        d.eff_bandwidth *= self.bw_mult;
+        d.launch_overhead_us *= self.launch_mult;
+        if !self.int8_extensions {
+            d.extensions.int8_dot = false;
+            d.extensions.coop_matrix_int8 = false;
+            d.int8_gops = 0.0;
+        }
+        if self.cuda_class {
+            // CUDA path: fp16 + tensor-core matmuls reachable.
+            d.extensions.fp16_arith = true;
+            d.extensions.matrix_units_unreachable = false;
+            d.extensions.int8_dot = true;
+            // RTX 4090 tensor-core fp16 ≈ 330 TFLOPS dense.
+            d.int8_gops = 660_000.0 * d.eff_compute.min(1.0);
+            d.fp16_gflops = 330_000.0;
+        }
+        d
+    }
+
+    /// Compile options this engine's design corresponds to.
+    pub fn compile_options(&self) -> CompileOptions {
+        CompileOptions {
+            fuse: self.fuse,
+            attn_fusion: None, // set per model by simulate_llm
+            stage_aware: self.stage_aware,
+            memory_strategy: Strategy::GreedyBySize,
+            emit_shaders: false,
+        }
+    }
+
+    /// Run the LLM benchmark under this baseline.
+    pub fn run_llm(
+        &self,
+        cfg: &LlmConfig,
+        dev: &DeviceProfile,
+        prefill: usize,
+        gen: usize,
+    ) -> Result<(f64, f64)> {
+        let d = self.adjust_device(dev);
+        let perf = simulate_llm(cfg, &d, self.scheme, prefill, gen, &self.compile_options())?;
+        Ok((perf.prefill_tokens_per_s, perf.decode_tokens_per_s))
+    }
+
+    /// Run the Stable Diffusion pipeline under this baseline.
+    pub fn run_sd(&self, dev: &DeviceProfile, iterations: usize) -> Result<crate::diffusion::SdReport> {
+        let d = self.adjust_device(dev);
+        let p = crate::diffusion::SdPipeline::compile(&d, &self.compile_options())?;
+        Ok(p.run(iterations))
+    }
+}
+
+/// The Fig. 6 lineup (mobile).
+pub fn mobile_llm_baselines() -> Vec<Baseline> {
+    vec![Baseline::mldrift(), Baseline::llamacpp_opencl(), Baseline::mlc_llm()]
+}
+
+/// The Fig. 7 lineup (RTX 4090 decode).
+pub fn nvidia_llm_baselines() -> Vec<Baseline> {
+    vec![
+        Baseline::mldrift(),
+        Baseline::llamacpp_cuda(),
+        Baseline::ollama_cuda(),
+        Baseline::torchchat_cuda(),
+    ]
+}
+
+/// The Fig. 8 lineup (Apple M4 Pro).
+pub fn apple_llm_baselines() -> Vec<Baseline> {
+    vec![
+        Baseline::mldrift(),
+        Baseline::llamacpp_metal(),
+        Baseline::ollama_metal(),
+        Baseline::mlx_lm(),
+    ]
+}
+
+/// Stage marker re-export for bench binaries.
+pub use crate::codegen::select::Stage as LlmStage;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::registry::device;
+    use crate::models::llm_config;
+
+    #[test]
+    fn fig6_prefill_gap_5_to_11x() {
+        // ML Drift vs llama.cpp OpenCL on Adreno 830 (Fig. 6 headline).
+        let cfg = llm_config("gemma2_2b").unwrap();
+        let dev = device("adreno_830").unwrap();
+        let (drift_p, drift_d) =
+            Baseline::mldrift().run_llm(&cfg, &dev, 1024, 256).unwrap();
+        let (lcpp_p, lcpp_d) =
+            Baseline::llamacpp_opencl().run_llm(&cfg, &dev, 1024, 256).unwrap();
+        let ratio = drift_p / lcpp_p;
+        assert!(ratio > 4.0 && ratio < 13.0, "prefill speedup {ratio} (paper 5–11×)");
+        assert!(drift_d > lcpp_d, "decode should also lead");
+    }
+
+    #[test]
+    fn fig7_nvidia_decode_ordering() {
+        // Fig. 7: llama.cpp CUDA ≥ ML Drift (within 5–25 %) > ollama > torchchat.
+        let cfg = llm_config("llama3.1_8b").unwrap();
+        let dev = device("rtx_4090").unwrap();
+        let get = |b: Baseline| b.run_llm(&cfg, &dev, 1024, 256).unwrap().1;
+        let drift = get(Baseline::mldrift());
+        let lcpp = get(Baseline::llamacpp_cuda());
+        let oll = get(Baseline::ollama_cuda());
+        let tch = get(Baseline::torchchat_cuda());
+        assert!(lcpp > drift, "CUDA llama.cpp leads decode: {lcpp} vs {drift}");
+        let gap = 1.0 - drift / lcpp;
+        assert!(gap > 0.02 && gap < 0.35, "gap {gap} (paper 5–25 %)");
+        assert!(drift > oll, "Drift beats ollama: {drift} vs {oll}");
+        assert!(oll > tch, "ollama beats torchchat");
+    }
+
+    #[test]
+    fn fig8_apple_prefill_lead() {
+        // Fig. 8: Drift prefill ~14 % over llama.cpp Metal, ~20 % over MLX.
+        let cfg = llm_config("gemma2_2b").unwrap();
+        let dev = device("m4_pro").unwrap();
+        let (drift_p, drift_d) = Baseline::mldrift().run_llm(&cfg, &dev, 1024, 256).unwrap();
+        let (lcpp_p, lcpp_d) = Baseline::llamacpp_metal().run_llm(&cfg, &dev, 1024, 256).unwrap();
+        let (mlx_p, _) = Baseline::mlx_lm().run_llm(&cfg, &dev, 1024, 256).unwrap();
+        assert!(drift_p > lcpp_p, "prefill lead over llama.cpp");
+        assert!(drift_p > mlx_p, "prefill lead over MLX");
+        assert!(drift_d > lcpp_d, "decode lead over llama.cpp");
+        let lead = drift_p / lcpp_p;
+        assert!(lead < 1.6, "lead should be modest on Apple: {lead}");
+    }
+
+    #[test]
+    fn table3_sd_ordering_on_intel() {
+        // Drift OpenCL < Drift WebGPU < ONNX DirectML (end-to-end seconds).
+        let dev = device("intel_165u").unwrap();
+        let cl = Baseline::mldrift().run_sd(&dev, 20).unwrap().end_to_end_s;
+        let web = Baseline::mldrift_webgpu().run_sd(&dev, 20).unwrap().end_to_end_s;
+        let dml = Baseline::onnx_directml().run_sd(&dev, 20).unwrap().end_to_end_s;
+        assert!(cl < web && web < dml, "{cl} < {web} < {dml} (paper 13.5 < 27.9 < 37.0)");
+        let dml_ratio = dml / cl;
+        assert!(dml_ratio > 1.8 && dml_ratio < 4.5, "DirectML ratio {dml_ratio} (paper 2.7×)");
+    }
+
+    #[test]
+    fn coreml_slower_than_drift_metal() {
+        let dev = device("m1_ultra").unwrap();
+        let drift = Baseline::mldrift().run_sd(&dev, 20).unwrap().end_to_end_s;
+        let coreml = Baseline::coreml_sd().run_sd(&dev, 20).unwrap().end_to_end_s;
+        assert!(drift < coreml, "{drift} < {coreml} (paper 3.86 < 5.03)");
+    }
+}

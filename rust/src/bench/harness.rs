@@ -1,0 +1,156 @@
+//! Wall-clock measurement with warmup and adaptive iteration counts.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Result of one benchmark: timing summary in seconds per iteration.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean() * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean() * 1e6
+    }
+
+    /// One-line report.
+    pub fn line(&self) -> String {
+        let mean = self.summary.mean();
+        let (scale, unit) = if mean < 1e-6 {
+            (1e9, "ns")
+        } else if mean < 1e-3 {
+            (1e6, "µs")
+        } else if mean < 1.0 {
+            (1e3, "ms")
+        } else {
+            (1.0, "s")
+        };
+        format!(
+            "{:<48} {:>10.3} {unit}/iter (±{:.1}%, n={})",
+            self.name,
+            mean * scale,
+            if mean > 0.0 { self.summary.stddev() / mean * 100.0 } else { 0.0 },
+            self.summary.len()
+        )
+    }
+}
+
+/// Benchmark runner with warmup and target measurement time.
+pub struct Bencher {
+    /// Warmup duration before sampling.
+    pub warmup: Duration,
+    /// Target total sampling time.
+    pub measure: Duration,
+    /// Maximum number of samples collected.
+    pub max_samples: usize,
+    /// Minimum number of samples collected (even if over time budget).
+    pub min_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(800),
+            max_samples: 200,
+            min_samples: 10,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for cheap closures in unit-ish benches.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(30),
+            measure: Duration::from_millis(200),
+            max_samples: 64,
+            min_samples: 5,
+        }
+    }
+
+    /// Measure `f`, returning seconds-per-iteration samples.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup and estimate per-iter cost.
+        let warm_start = Instant::now();
+        let mut iters_per_sample = 1u64;
+        let mut t = Instant::now();
+        f();
+        let first = t.elapsed();
+        while warm_start.elapsed() < self.warmup {
+            f();
+        }
+        if first < Duration::from_micros(50) {
+            // Batch very cheap closures so timer overhead doesn't dominate.
+            iters_per_sample = (Duration::from_micros(200).as_nanos() / first.as_nanos().max(1))
+                .clamp(1, 10_000) as u64;
+        }
+
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.measure || samples.len() < self.min_samples)
+            && samples.len() < self.max_samples
+        {
+            t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        BenchResult { name: name.to_string(), summary: Summary::from_samples(samples) }
+    }
+
+    /// Measure and print the one-line report.
+    pub fn bench<F: FnMut()>(&self, name: &str, f: F) -> BenchResult {
+        let r = self.run(name, f);
+        println!("{}", r.line());
+        r
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box re-export
+/// point so benches don't import std paths everywhere).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(40),
+            max_samples: 10,
+            min_samples: 3,
+        };
+        let r = b.run("sleep 2ms", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.mean_ms() >= 1.5, "mean {} ms", r.mean_ms());
+        assert!(r.mean_ms() < 20.0, "mean {} ms", r.mean_ms());
+    }
+
+    #[test]
+    fn batches_cheap_closures() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b.run("add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.summary.len() >= 5);
+        assert!(r.mean_s() < 1e-5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Benchmark harness (criterion substitute) + paper-style table rendering.
+//!
+//! Each `rust/benches/bench_*.rs` binary uses [`Bencher`] for wall-clock
+//! measurements of real code paths and [`Table`] to print rows in the same
+//! arrangement as the paper's tables/figures so EXPERIMENTS.md can show
+//! paper-vs-measured side by side.
+
+pub mod harness;
+pub mod table;
+
+pub use harness::{Bencher, BenchResult};
+pub use table::Table;

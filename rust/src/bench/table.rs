@@ -1,0 +1,108 @@
+//! Paper-style table rendering for bench outputs.
+
+/// A simple column-aligned table with a title, printed to stdout.
+#[derive(Clone, Debug)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                let pad = widths[i] - cells[i].chars().count();
+                line.push_str(&cells[i]);
+                line.push_str(&" ".repeat(pad));
+                if i + 1 < ncols {
+                    line.push_str("  ");
+                }
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push_str(&format!("{}\n", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1))));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format helper: value with a paper reference in parens, e.g. `37.1 (37.1)`.
+pub fn vs_paper(measured: f64, paper: f64, decimals: usize) -> String {
+    format!("{measured:.decimals$} (paper {paper:.decimals$})")
+}
+
+/// Format a speedup factor.
+pub fn speedup(ours: f64, theirs: f64) -> String {
+    if theirs <= 0.0 || ours <= 0.0 {
+        return "—".to_string();
+    }
+    format!("{:.2}×", ours / theirs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["model", "prefill", "decode"]);
+        t.row_strs(&["Gemma2 2B", "1370", "37.1"]);
+        t.row_strs(&["Llama3.1 8B", "412", "12.7"]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("Gemma2 2B    1370     37.1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_strs(&["1"]);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(vs_paper(36.9, 37.1, 1), "36.9 (paper 37.1)");
+        assert_eq!(speedup(10.0, 5.0), "2.00×");
+        assert_eq!(speedup(1.0, 0.0), "—");
+    }
+}

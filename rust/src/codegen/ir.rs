@@ -1,0 +1,79 @@
+//! Kernel IR: a backend-neutral kernel specification.
+
+use crate::codegen::select::KernelVariant;
+use crate::vgpu::descriptor::TensorDescriptor;
+
+/// One kernel argument: a named tensor bound to a storage decision.
+#[derive(Clone, Debug)]
+pub struct KernelArg {
+    pub name: String,
+    pub desc: TensorDescriptor,
+    /// Written by the kernel (vs read).
+    pub is_output: bool,
+}
+
+/// A backend-neutral kernel specification, ready for a [`super::Backend`]
+/// emitter. The `body` is template text in the shared C-like dialect with
+/// `FLT4` vectors and per-arg `<name>_Read` / `<name>_Write` helpers.
+#[derive(Clone, Debug)]
+pub struct KernelSpec {
+    pub name: String,
+    pub variant: KernelVariant,
+    pub args: Vec<KernelArg>,
+    pub body: String,
+    /// Workgroup (threadgroup) dimensions.
+    pub workgroup: [usize; 3],
+    /// Global grid in workgroups.
+    pub grid: [usize; 3],
+    /// Compile-time integer constants folded into the source.
+    pub defines: Vec<(String, i64)>,
+}
+
+impl KernelSpec {
+    /// Total threads launched.
+    pub fn total_threads(&self) -> usize {
+        self.workgroup.iter().product::<usize>() * self.grid.iter().product::<usize>()
+    }
+
+    pub fn input_args(&self) -> impl Iterator<Item = &KernelArg> {
+        self.args.iter().filter(|a| !a.is_output)
+    }
+
+    pub fn output_args(&self) -> impl Iterator<Item = &KernelArg> {
+        self.args.iter().filter(|a| a.is_output)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::select::KernelVariant;
+    use crate::tensor::{DType, Shape};
+    use crate::vgpu::object::StorageType;
+
+    #[test]
+    fn spec_thread_accounting() {
+        let desc = TensorDescriptor::with_default_layout(
+            "x",
+            Shape::bhwc(1, 8, 8, 16),
+            DType::F16,
+            StorageType::Buffer,
+        )
+        .unwrap();
+        let spec = KernelSpec {
+            name: "k".into(),
+            variant: KernelVariant::Elementwise,
+            args: vec![
+                KernelArg { name: "src".into(), desc: desc.clone(), is_output: false },
+                KernelArg { name: "dst".into(), desc, is_output: true },
+            ],
+            body: String::new(),
+            workgroup: [8, 8, 1],
+            grid: [4, 2, 1],
+            defines: vec![],
+        };
+        assert_eq!(spec.total_threads(), 8 * 8 * 4 * 2);
+        assert_eq!(spec.input_args().count(), 1);
+        assert_eq!(spec.output_args().count(), 1);
+    }
+}

@@ -1,0 +1,371 @@
+//! Manually-optimized kernel body templates.
+//!
+//! Bodies are written in the shared C-like dialect: `FLT4` vectors,
+//! `<arg>_Read(b,x,y,d,s)` / `<arg>_Write(v,b,x,y,d,s)` helpers generated
+//! by [`crate::translate`], and `DEF_*` compile-time constants. Backend
+//! emitters translate this dialect into OpenCL-C / MSL / WGSL.
+
+use crate::codegen::select::KernelVariant;
+use crate::graph::{BinOp, EwOp, Node, OpKind};
+
+/// Epilogue source for fused elementwise ops (applied to `acc`).
+pub fn epilogue_src(epilogue: &[EwOp]) -> String {
+    let mut s = String::new();
+    for op in epilogue {
+        let line = match op {
+            EwOp::Relu => "  acc = max(acc, FLT4_ZERO);".to_string(),
+            EwOp::Gelu => {
+                "  acc = acc * 0.5f * (FLT4_ONE + tanh4(0.7978845608f * (acc + 0.044715f * acc * acc * acc)));".to_string()
+            }
+            EwOp::Silu => "  acc = acc / (FLT4_ONE + exp4(-acc));".to_string(),
+            EwOp::Tanh => "  acc = tanh4(acc);".to_string(),
+            EwOp::Sigmoid => "  acc = FLT4_ONE / (FLT4_ONE + exp4(-acc));".to_string(),
+            EwOp::Exp => "  acc = exp4(acc);".to_string(),
+            EwOp::Rsqrt => "  acc = rsqrt4(acc);".to_string(),
+            EwOp::Neg => "  acc = -acc;".to_string(),
+            EwOp::Scale(v) => format!("  acc = acc * {v:?}f;"),
+            EwOp::Offset(v) => format!("  acc = acc + {v:?}f;"),
+        };
+        s.push_str(&line);
+        s.push('\n');
+    }
+    s
+}
+
+/// Fused-add source for branch merges (Fig. 4 left).
+pub fn fused_adds_src(fused: &[(usize, BinOp)]) -> String {
+    let mut s = String::new();
+    for (idx, (_, op)) in fused.iter().enumerate() {
+        let sym = match op {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+        };
+        s.push_str(&format!(
+            "  acc = acc {sym} fused{idx}_Read(B, X, Y, D, S);\n"
+        ));
+    }
+    s
+}
+
+/// Body template for a kernel variant instantiated for `node`.
+pub fn body_for(variant: KernelVariant, node: &Node) -> String {
+    let epi = epilogue_src(&node.epilogue);
+    let fused = fused_adds_src(&node.fused_adds);
+    match variant {
+        KernelVariant::Conv2dGeneric => format!(
+            r#"// Direct convolution: each thread computes one vec4 output slice
+// at (B, X, Y); weights walk (ky, kx, S_in) with vec4 MADs.
+int X = GID0; int Y = GID1; int S = GID2; int B = 0; int D = 0;
+if (X >= DEF_OW || Y >= DEF_OH || S >= DEF_OS) return;
+FLT4 acc = bias_Read(0, S, 0, 0, 0);
+for (int ky = 0; ky < DEF_KH; ++ky) {{
+  int iy = Y * DEF_STRIDE - DEF_PAD + ky;
+  if (iy < 0 || iy >= DEF_IH) continue;  // zero clamp (free on 2D textures)
+  for (int kx = 0; kx < DEF_KW; ++kx) {{
+    int ix = X * DEF_STRIDE - DEF_PAD + kx;
+    if (ix < 0 || ix >= DEF_IW) continue;
+    for (int si = 0; si < DEF_IS; ++si) {{
+      FLT4 v = src_Read(B, ix, iy, D, si);
+      acc += v.x * w_Read4(S, ky, kx, si, 0);
+      acc += v.y * w_Read4(S, ky, kx, si, 1);
+      acc += v.z * w_Read4(S, ky, kx, si, 2);
+      acc += v.w * w_Read4(S, ky, kx, si, 3);
+    }}
+  }}
+}}
+{fused}{epi}dst_Write(acc, B, X, Y, D, S);
+"#
+        ),
+        KernelVariant::Conv2dWinograd => format!(
+            r#"// Winograd F(4x4, 3x3): input tile 6x6 -> 36 MADs replaced by 16
+// per-channel products after B^T d B transform; weights pre-transformed
+// at conversion time (4.5x fewer multiplies, more adds).
+int TX = GID0; int TY = GID1; int S = GID2; int B = 0; int D = 0;
+if (TX >= DEF_TILES_X || TY >= DEF_TILES_Y || S >= DEF_OS) return;
+FLT4 d_tile[36]; FLT4 m[16];
+for (int i = 0; i < 36; ++i) {{
+  int ix = TX * 4 - 1 + (i % 6), iy = TY * 4 - 1 + (i / 6);
+  d_tile[i] = (ix < 0 || iy < 0 || ix >= DEF_IW || iy >= DEF_IH)
+      ? FLT4_ZERO : src_Read(B, ix, iy, D, 0);
+}}
+winograd_input_transform(d_tile);
+for (int si = 0; si < DEF_IS; ++si) {{
+  for (int i = 0; i < 16; ++i) m[i] += d_tile[i] * wT_ReadTile(S, si, i);
+}}
+winograd_output_transform(m);
+for (int oy = 0; oy < 4; ++oy) for (int ox = 0; ox < 4; ++ox) {{
+  int X = TX * 4 + ox, Y = TY * 4 + oy;
+  if (X >= DEF_OW || Y >= DEF_OH) continue;
+  FLT4 acc = m[oy * 4 + ox] + bias_Read(0, S, 0, 0, 0);
+{fused}{epi}  dst_Write(acc, B, X, Y, D, S);
+}}
+"#
+        ),
+        KernelVariant::FcGemmTiled => format!(
+            r#"// Tiled GEMM: 32x4 threads, each accumulating a 4(M)x4(N) tile in
+// registers; A tiles staged through local memory.
+int X = GID0; int S = GID1; int B = 0; int Y = 0; int D = 0;
+if (X >= DEF_M || S >= DEF_OS) return;
+FLT4 acc = bias_Read(0, S, 0, 0, 0);
+for (int si = 0; si < DEF_IS; ++si) {{
+  FLT4 a = src_Read(B, X, Y, D, si);
+  acc += a.x * w_Read4(S, 0, 0, si, 0);
+  acc += a.y * w_Read4(S, 0, 0, si, 1);
+  acc += a.z * w_Read4(S, 0, 0, si, 2);
+  acc += a.w * w_Read4(S, 0, 0, si, 3);
+}}
+{fused}{epi}dst_Write(acc, B, X, Y, D, S);
+"#
+        ),
+        KernelVariant::FcGemmInt8Dot => format!(
+            r#"// int8 GEMM via dot-product extension: activations pre-quantized by
+// quantize_act into CHAR4 + per-row scale; weights per-channel int8.
+// acc_i32 += dot8(a4, w4) per 4-channel slice; dequantize on store (§3.7).
+int X = GID0; int S = GID1; int B = 0; int Y = 0; int D = 0;
+if (X >= DEF_M || S >= DEF_OS) return;
+INT4 acc_i = INT4_ZERO;
+for (int si = 0; si < DEF_IS; ++si) {{
+  CHAR4 a = src_q_ReadC(B, X, Y, D, si);
+  acc_i.x += DOT8(a, wq_ReadC(S, si, 0));
+  acc_i.y += DOT8(a, wq_ReadC(S, si, 1));
+  acc_i.z += DOT8(a, wq_ReadC(S, si, 2));
+  acc_i.w += DOT8(a, wq_ReadC(S, si, 3));
+}}
+FLT4 acc = convert_flt4(acc_i) * src_scale_Read(0, X, 0, 0, 0) * w_scale_Read(0, S, 0, 0, 0)
+         + bias_Read(0, S, 0, 0, 0);
+{fused}{epi}dst_Write(acc, B, X, Y, D, S);
+"#
+        ),
+        KernelVariant::FcGemvDequantFused => format!(
+            r#"// Decode mat-vec: one workgroup per 4 output channels; weights are
+// dequantized in-register (§3.7 decode path: no separate quant kernel,
+// memory traffic = quantized bytes only).
+int S = GID0; int B = 0; int X = 0; int Y = 0; int D = 0;
+if (S >= DEF_OS) return;
+FLT4 acc = FLT4_ZERO;
+for (int si = LID0; si < DEF_IS; si += WG0) {{
+  FLT4 a = src_Read(B, 0, 0, 0, si);
+  FLT4 w0 = dequant4(wq_ReadC(S, si, 0), w_scale_Read(0, S, 0, 0, 0));
+  FLT4 w1 = dequant4(wq_ReadC(S, si, 1), w_scale_Read(0, S, 0, 0, 0));
+  FLT4 w2 = dequant4(wq_ReadC(S, si, 2), w_scale_Read(0, S, 0, 0, 0));
+  FLT4 w3 = dequant4(wq_ReadC(S, si, 3), w_scale_Read(0, S, 0, 0, 0));
+  acc.x += dot(a, w0); acc.y += dot(a, w1);
+  acc.z += dot(a, w2); acc.w += dot(a, w3);
+}}
+acc = workgroup_reduce_add(acc) + bias_Read(0, S, 0, 0, 0);
+if (LID0 != 0) return;
+{fused}{epi}dst_Write(acc, B, X, Y, D, S);
+"#
+        ),
+        KernelVariant::MatMulTiled => format!(
+            r#"// Batched matmul for attention: (B,1,M,K) x (B,1,K,N).
+int X = GID0; int S = GID1; int B = GID2; int Y = 0; int D = 0;
+if (X >= DEF_M || S >= DEF_NS || B >= DEF_B) return;
+FLT4 acc = FLT4_ZERO;
+for (int si = 0; si < DEF_KS; ++si) {{
+  FLT4 a = lhs_Read(B, X, Y, D, si);
+  acc += a.x * rhs_Read4(B, si, S, 0);
+  acc += a.y * rhs_Read4(B, si, S, 1);
+  acc += a.z * rhs_Read4(B, si, S, 2);
+  acc += a.w * rhs_Read4(B, si, S, 3);
+}}
+{fused}{epi}dst_Write(acc, B, X, Y, D, S);
+"#
+        ),
+        KernelVariant::QuantizeAct => r#"// Dedicated activation quantization (prefill, §3.7): one workgroup
+// per row computes absmax, then emits CHAR4 + scale.
+int X = GID0; int B = 0; int Y = 0; int D = 0;
+FLT lmax = 0.0f;
+for (int si = LID0; si < DEF_IS; si += WG0) {
+  FLT4 v = fabs4(src_Read(B, X, Y, D, si));
+  lmax = max(lmax, max(max(v.x, v.y), max(v.z, v.w)));
+}
+lmax = workgroup_reduce_max(lmax);
+FLT scale = lmax / 127.0f;
+scale_Write1(scale, 0, X, 0, 0, 0);
+for (int si = LID0; si < DEF_IS; si += WG0) {
+  FLT4 v = src_Read(B, X, Y, D, si);
+  dst_WriteC(quant_char4(v, scale), B, X, Y, D, si);
+}
+"#
+        .to_string(),
+        KernelVariant::Softmax => r#"// Numerically-stable softmax over the channel axis, one row per WG.
+int X = GID0; int B = GID1; int Y = 0; int D = 0;
+FLT m = -FLT_INF;
+for (int si = LID0; si < DEF_S; si += WG0) {
+  FLT4 v = src_Read(B, X, Y, D, si);
+  m = max(m, max(max(v.x, v.y), max(v.z, v.w)));
+}
+m = workgroup_reduce_max(m);
+FLT sum = 0.0f;
+for (int si = LID0; si < DEF_S; si += WG0) {
+  FLT4 e = exp4(src_Read(B, X, Y, D, si) - m);
+  sum += e.x + e.y + e.z + e.w;
+}
+sum = workgroup_reduce_add(sum);
+FLT inv = 1.0f / sum;
+for (int si = LID0; si < DEF_S; si += WG0) {
+  FLT4 e = exp4(src_Read(B, X, Y, D, si) - m);
+  dst_Write(e * inv, B, X, Y, D, si);
+}
+"#
+        .to_string(),
+        KernelVariant::RmsNorm | KernelVariant::LayerNorm => r#"// RMS / layer norm over channels, one row per workgroup.
+int X = GID0; int B = GID1; int Y = 0; int D = 0;
+FLT ss = 0.0f;
+for (int si = LID0; si < DEF_S; si += WG0) {
+  FLT4 v = src_Read(B, X, Y, D, si);
+  ss += dot(v, v);
+}
+ss = workgroup_reduce_add(ss);
+FLT inv = rsqrt(ss / DEF_C + DEF_EPS);
+for (int si = LID0; si < DEF_S; si += WG0) {
+  FLT4 v = src_Read(B, X, Y, D, si) * inv * gamma_Read(0, si, 0, 0, 0);
+  dst_Write(v, B, X, Y, D, si);
+}
+"#
+        .to_string(),
+        KernelVariant::FusedAddRmsNorm => r#"// Fused residual + RMSNorm (Fig. 4 right): one pass computes
+// sum = a + b, writes it as the secondary output, accumulates sum^2,
+// then normalizes - saving a full read+write of the activation.
+int X = GID0; int B = GID1; int Y = 0; int D = 0;
+FLT ss = 0.0f;
+for (int si = LID0; si < DEF_S; si += WG0) {
+  FLT4 s = a_Read(B, X, Y, D, si) + b_Read(B, X, Y, D, si);
+  sum_Write(s, B, X, Y, D, si);   // secondary output (residual chain)
+  ss += dot(s, s);
+}
+ss = workgroup_reduce_add(ss);
+FLT inv = rsqrt(ss / DEF_C + DEF_EPS);
+for (int si = LID0; si < DEF_S; si += WG0) {
+  FLT4 s = sum_Read(B, X, Y, D, si);
+  dst_Write(s * inv * gamma_Read(0, si, 0, 0, 0), B, X, Y, D, si);
+}
+"#
+        .to_string(),
+        KernelVariant::GroupNorm => r#"// Group norm: mean/var per (group, batch) via two-pass reduction.
+int G = GID0; int B = GID1;
+FLT mean = 0.0f, var = 0.0f;
+for (int i = LID0; i < DEF_GROUP_ELEMS; i += WG0) mean += group_elem(G, B, i);
+mean = workgroup_reduce_add(mean) / DEF_GROUP_ELEMS;
+for (int i = LID0; i < DEF_GROUP_ELEMS; i += WG0) {
+  FLT d = group_elem(G, B, i) - mean; var += d * d;
+}
+var = workgroup_reduce_add(var) / DEF_GROUP_ELEMS;
+FLT inv = rsqrt(var + DEF_EPS);
+for (int i = LID0; i < DEF_GROUP_ELEMS; i += WG0)
+  group_store(G, B, i, (group_elem(G, B, i) - mean) * inv);
+"#
+        .to_string(),
+        KernelVariant::QkvRopeFused => r#"// Fused QKV layout transform + RoPE (§3.6): reads the packed
+// projection (B,1,S,(hq+2*hkv)*dh), applies rotary embedding to Q and K
+// halves, and scatters into the attention layouts:
+//   Q: (B*h_kv, S*h_q/h_kv, d_h)   K: OHWI (cache, d_h)   V: OHWI (d_h, cache)
+int T = GID0; int H = GID1; int B = GID2;   // token, head
+if (T >= DEF_S || H >= DEF_HQ) return;
+FLT c = rope_cos(T, LID0), s = rope_sin(T, LID0);
+for (int si = LID0; si < DEF_DH / 8; si += WG0) {
+  FLT4 even = qkv_Read(B, T, 0, 0, q_slice(H, 2 * si));
+  FLT4 odd  = qkv_Read(B, T, 0, 0, q_slice(H, 2 * si + 1));
+  q_out_Write(even * c - odd * s, q_batch(B, H), q_row(T, H), 0, 0, si);
+  q_out_Write(even * s + odd * c, q_batch(B, H), q_row(T, H), 0, 0, si + DEF_DH / 8);
+}
+if (H < DEF_HKV) {
+  for (int si = LID0; si < DEF_DH / 4; si += WG0) {
+    FLT4 k = rope_rotate(qkv_Read(B, T, 0, 0, k_slice(H, si)), c, s);
+    k_cache_Write(k, T, H, si);        // OHWI: O=cache_pos, I=d_h
+    FLT4 v = qkv_Read(B, T, 0, 0, v_slice(H, si));
+    v_cache_Write(v, H, si, T);        // OHWI reversed: O=d_h, I=cache_pos
+  }
+}
+"#
+        .to_string(),
+        KernelVariant::Rope => r#"// Standalone rotary embedding (unfused baseline path).
+int T = GID0; int S = GID1; int B = GID2;
+FLT c = rope_cos(T, S), s = rope_sin(T, S);
+FLT4 even = src_Read(B, T, 0, 0, 2 * S);
+FLT4 odd  = src_Read(B, T, 0, 0, 2 * S + 1);
+dst_Write(even * c - odd * s, B, T, 0, 0, 2 * S);
+dst_Write(even * s + odd * c, B, T, 0, 0, 2 * S + 1);
+"#
+        .to_string(),
+        KernelVariant::Elementwise => {
+            let inner = match &node.kind {
+                OpKind::Binary(op) => {
+                    let sym = match op {
+                        BinOp::Add => "+",
+                        BinOp::Sub => "-",
+                        BinOp::Mul => "*",
+                        BinOp::Div => "/",
+                    };
+                    format!("FLT4 acc = a_Read(B, X, Y, D, S) {sym} b_Read(B, X, Y, D, S);")
+                }
+                _ => "FLT4 acc = src_Read(B, X, Y, D, S);".to_string(),
+            };
+            format!(
+                r#"// Elementwise kernel (standalone: only when fusion could not absorb).
+int X = GID0; int S = GID1; int B = GID2; int Y = 0; int D = 0;
+if (X >= DEF_W || S >= DEF_NS) return;
+{inner}
+{epi}dst_Write(acc, B, X, Y, D, S);
+"#
+            )
+        }
+        KernelVariant::Embedding => r#"// Token embedding gather: one row per token id.
+int T = GID0; int S = GID1; int B = GID2;
+int id = token_ReadI(B, T, 0, 0, 0);
+dst_Write(table_Read4(id, S), B, T, 0, 0, S);
+"#
+        .to_string(),
+        KernelVariant::Memory => r#"// Data-movement kernel (reshape/transpose/concat/upsample/pool):
+// pure coordinate remap through the translation helpers.
+int X = GID0; int Y = GID1; int S = GID2; int B = 0; int D = 0;
+if (X >= DEF_OW || Y >= DEF_OH || S >= DEF_OS) return;
+dst_Write(src_Read(remap_b(B), remap_x(X), remap_y(Y), remap_d(D), remap_s(S)), B, X, Y, D, S);
+"#
+        .to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Graph;
+    use crate::tensor::{DType, Shape};
+
+    #[test]
+    fn bodies_reference_helpers() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let fc = g.fully_connected("fc", x, 64, DType::I8).unwrap();
+        let body = body_for(KernelVariant::FcGemvDequantFused, &g.nodes[fc]);
+        assert!(body.contains("src_Read"));
+        assert!(body.contains("dst_Write"));
+        assert!(body.contains("dequant4"));
+    }
+
+    #[test]
+    fn epilogue_rendering() {
+        let src = epilogue_src(&[EwOp::Silu, EwOp::Scale(2.0)]);
+        assert!(src.contains("exp4(-acc)"));
+        assert!(src.contains("* 2.0f"));
+    }
+
+    #[test]
+    fn fused_adds_render_reads() {
+        let src = fused_adds_src(&[(3, BinOp::Mul)]);
+        assert!(src.contains("acc * fused0_Read"));
+    }
+
+    #[test]
+    fn binary_elementwise_body() {
+        let mut g = Graph::new("t");
+        let a = g.input("a", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let b = g.input("b", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let add = g.binary("add", a, b, BinOp::Add).unwrap();
+        let body = body_for(KernelVariant::Elementwise, &g.nodes[add]);
+        assert!(body.contains("a_Read(B, X, Y, D, S) + b_Read(B, X, Y, D, S)"));
+    }
+}

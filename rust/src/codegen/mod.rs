@@ -1,0 +1,25 @@
+//! Shader code generation and device specialization (§3.4).
+//!
+//! ML Drift performs *dynamic code generation at runtime from manually
+//! optimized shader templates*. The pipeline per operator is:
+//!
+//! 1. **Adaptive kernel selection** ([`select`]) — pick the fastest kernel
+//!    variant for the op, device, and LLM stage (Winograd convolutions,
+//!    int8-dot GEMMs, decode matvecs with inline dequantization …).
+//! 2. **Storage decisions** — preferred GPU object types per vendor,
+//!    validated against texture limits (falling back to buffers).
+//! 3. **Helper generation** — coordinate-translation `Read`/`Write`
+//!    helpers from [`crate::translate`] baked into the source.
+//! 4. **Syntax translation** ([`backend`]) — the backend emitter converts
+//!    the template into OpenCL-C, Metal Shading Language, or WGSL.
+//! 5. **Weights conversion** — weight layouts chosen per §3.1
+//!    (`(G, S_O, O4, HWD, S_I, I4)` permutations) for the selected kernel.
+
+pub mod ir;
+pub mod kernels;
+pub mod backend;
+pub mod select;
+
+pub use backend::{emit, Backend};
+pub use ir::{KernelArg, KernelSpec};
+pub use select::{select_kernel, KernelChoice, KernelVariant, Stage};

@@ -1,0 +1,282 @@
+//! Adaptive kernel selection (§3.4, §3.7).
+//!
+//! Given an operator node, a device profile, and the LLM inference stage,
+//! pick the kernel variant, storage types, weight layout, and workgroup
+//! shape. These decisions are "empirically determined offline" in the
+//! paper; here they are encoded as the rules the paper describes.
+
+use crate::device::profile::{DeviceProfile, Vendor};
+use crate::graph::{Node, OpKind};
+use crate::tensor::layout::WeightLayout;
+use crate::vgpu::object::StorageType;
+
+/// LLM inference stage (the paper's §3.7 distinction). Diffusion and
+/// generic CNN workloads use `Single`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Compute-bound prompt processing (long sequences).
+    Prefill,
+    /// Memory-bound autoregressive token generation.
+    Decode,
+    /// Non-staged workloads (diffusion, CNNs).
+    Single,
+}
+
+/// Kernel implementation variants the generator can instantiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelVariant {
+    /// Direct convolution, vec4 slices.
+    Conv2dGeneric,
+    /// Winograd F(4×4, 3×3) fast convolution (large-C 3×3 stride-1).
+    Conv2dWinograd,
+    /// Tiled GEMM for long-sequence FC / conv-as-matmul (prefill).
+    FcGemmTiled,
+    /// GEMM using int8 dot-product / cooperative-matrix extensions over
+    /// pre-quantized activations (prefill fast path, §3.7).
+    FcGemmInt8Dot,
+    /// Mat-vec with weights dequantized inside the kernel (decode path,
+    /// §3.7: quantization integrated in the operational kernel).
+    FcGemvDequantFused,
+    /// Generic batched matmul (attention scores / context).
+    MatMulTiled,
+    /// Dedicated activation-quantization kernel (prefill, §3.7).
+    QuantizeAct,
+    Softmax,
+    RmsNorm,
+    FusedAddRmsNorm,
+    GroupNorm,
+    LayerNorm,
+    /// Fused QKV layout transform + rotary embedding (§3.6).
+    QkvRopeFused,
+    Rope,
+    Elementwise,
+    Embedding,
+    /// Data movement (reshape / transpose / concat / upsample / pool).
+    Memory,
+}
+
+impl KernelVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelVariant::Conv2dGeneric => "conv2d_generic",
+            KernelVariant::Conv2dWinograd => "conv2d_winograd4x4",
+            KernelVariant::FcGemmTiled => "fc_gemm_tiled",
+            KernelVariant::FcGemmInt8Dot => "fc_gemm_int8dot",
+            KernelVariant::FcGemvDequantFused => "fc_gemv_dequant",
+            KernelVariant::MatMulTiled => "matmul_tiled",
+            KernelVariant::QuantizeAct => "quantize_act",
+            KernelVariant::Softmax => "softmax",
+            KernelVariant::RmsNorm => "rms_norm",
+            KernelVariant::FusedAddRmsNorm => "fused_add_rms_norm",
+            KernelVariant::GroupNorm => "group_norm",
+            KernelVariant::LayerNorm => "layer_norm",
+            KernelVariant::QkvRopeFused => "qkv_rope_fused",
+            KernelVariant::Rope => "rope",
+            KernelVariant::Elementwise => "elementwise",
+            KernelVariant::Embedding => "embedding",
+            KernelVariant::Memory => "memory_op",
+        }
+    }
+}
+
+/// A complete specialization decision for one node.
+#[derive(Clone, Debug)]
+pub struct KernelChoice {
+    pub variant: KernelVariant,
+    /// Storage for input/output activations.
+    pub act_storage: StorageType,
+    /// Storage for weights (if the op has them).
+    pub weight_storage: StorageType,
+    /// Weight layout (if the op has weights).
+    pub weight_layout: Option<WeightLayout>,
+    /// Workgroup size.
+    pub workgroup: [usize; 3],
+    /// Whether a dedicated activation-quantization kernel must precede
+    /// this one (prefill int8 path).
+    pub needs_act_quant: bool,
+}
+
+/// Vendor-tuned workgroup defaults (offline-tuned in the paper).
+fn default_workgroup(vendor: Vendor, variant: KernelVariant) -> [usize; 3] {
+    use KernelVariant::*;
+    match (vendor, variant) {
+        (Vendor::Qualcomm, Conv2dGeneric | Conv2dWinograd) => [8, 4, 2],
+        (Vendor::Qualcomm, FcGemmTiled | FcGemmInt8Dot | MatMulTiled) => [32, 4, 1],
+        (Vendor::Arm, Conv2dGeneric | Conv2dWinograd) => [4, 4, 2],
+        (Vendor::Arm, FcGemmTiled | FcGemmInt8Dot | MatMulTiled) => [16, 4, 1],
+        (Vendor::Apple, _) => [32, 1, 1],
+        (Vendor::Intel, FcGemmTiled | FcGemmInt8Dot | MatMulTiled) => [16, 8, 1],
+        (Vendor::Nvidia, _) => [32, 4, 1],
+        (_, FcGemvDequantFused) => [64, 1, 1],
+        _ => [8, 8, 1],
+    }
+}
+
+/// Pick storage for activations, falling back to buffers when the
+/// realization would exceed the device's texture limits.
+fn pick_act_storage(node: &Node, dev: &DeviceProfile) -> StorageType {
+    let pref = dev.preferred_activation_storage();
+    if pref == StorageType::Buffer {
+        return pref;
+    }
+    let desc = crate::vgpu::descriptor::TensorDescriptor::with_default_layout(
+        &node.name,
+        node.shape,
+        node.dtype,
+        pref,
+    );
+    match desc {
+        Ok(d) if d.validate(&dev.texture_limits).is_ok() => pref,
+        _ => StorageType::Buffer,
+    }
+}
+
+/// The selection rules.
+pub fn select_kernel(node: &Node, dev: &DeviceProfile, stage: Stage) -> KernelChoice {
+    let quantized_weights = node.weight.map(|w| w.dtype.is_quantized()).unwrap_or(false);
+    let has_int8_path = dev.extensions.int8_dot || dev.extensions.coop_matrix_int8;
+
+    let (variant, needs_act_quant) = match &node.kind {
+        OpKind::Conv2D { kh, kw, stride, .. } => {
+            let in_c = node.weight.map(|w| w.shape.i).unwrap_or(0);
+            // Winograd F(4,3): 3×3 stride-1 convs with enough channels to
+            // amortize the transforms; not profitable under WebGPU (no
+            // subgroup shuffles in the paper's implementation).
+            if *kh == 3
+                && *kw == 3
+                && *stride == 1
+                && in_c >= 16
+                && node.kind.is_compute()
+                && dev.api != crate::device::profile::Api::WebGpu
+            {
+                (KernelVariant::Conv2dWinograd, false)
+            } else {
+                (KernelVariant::Conv2dGeneric, false)
+            }
+        }
+        OpKind::FullyConnected { .. } => match stage {
+            // §3.7: prefill = compute-bound, convert activations to int8
+            // once (dedicated kernel) and hit the int8 dot/coop-matrix
+            // path; decode = memory-bound, dequantize inside the matvec.
+            Stage::Prefill if quantized_weights && has_int8_path => {
+                (KernelVariant::FcGemmInt8Dot, true)
+            }
+            Stage::Prefill => (KernelVariant::FcGemmTiled, false),
+            Stage::Decode => (KernelVariant::FcGemvDequantFused, false),
+            Stage::Single => (KernelVariant::FcGemmTiled, false),
+        },
+        OpKind::MatMul { .. } => (KernelVariant::MatMulTiled, false),
+        OpKind::QuantAct => (KernelVariant::QuantizeAct, false),
+        OpKind::Softmax => (KernelVariant::Softmax, false),
+        OpKind::RmsNorm { .. } => (KernelVariant::RmsNorm, false),
+        OpKind::FusedAddRmsNorm { .. } => (KernelVariant::FusedAddRmsNorm, false),
+        OpKind::GroupNorm { .. } => (KernelVariant::GroupNorm, false),
+        OpKind::LayerNorm { .. } => (KernelVariant::LayerNorm, false),
+        OpKind::FusedQkvRope { .. } => (KernelVariant::QkvRopeFused, false),
+        OpKind::Rope { .. } => (KernelVariant::Rope, false),
+        OpKind::Elementwise(_) | OpKind::Binary(_) => (KernelVariant::Elementwise, false),
+        OpKind::Embedding { .. } => (KernelVariant::Embedding, false),
+        _ => (KernelVariant::Memory, false),
+    };
+
+    // Weight layout: kernels that walk input slices innermost want I4
+    // innermost; the decode matvec wants O4 innermost (one vec4 of output
+    // channels per thread). Group size 4 batches output slices per
+    // workgroup on tiled GEMMs (the ≤20 % matmul speedup of §3.1).
+    let weight_layout = node.weight.map(|_| match variant {
+        KernelVariant::FcGemvDequantFused => WeightLayout::gso_hwdsi_i4o4(1),
+        KernelVariant::FcGemmInt8Dot | KernelVariant::FcGemmTiled => {
+            WeightLayout::gso_hwdsi_o4i4(4)
+        }
+        KernelVariant::Conv2dWinograd => WeightLayout::gso_hwdsi_o4i4(2),
+        _ => WeightLayout::gso_hwdsi_i4o4(2),
+    });
+
+    KernelChoice {
+        variant,
+        act_storage: pick_act_storage(node, dev),
+        weight_storage: dev.preferred_weight_storage(),
+        weight_layout,
+        workgroup: default_workgroup(dev.vendor, variant),
+        needs_act_quant,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::registry::device;
+    use crate::graph::Graph;
+    use crate::tensor::{DType, Shape};
+
+    fn fc_node(wdtype: DType) -> Node {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 128, 2048), DType::F16);
+        let id = g.fully_connected("fc", x, 2048, wdtype).unwrap();
+        g.nodes[id].clone()
+    }
+
+    #[test]
+    fn stage_aware_fc_selection() {
+        let dev = device("adreno_750").unwrap();
+        let n = fc_node(DType::I8);
+        let pre = select_kernel(&n, &dev, Stage::Prefill);
+        assert_eq!(pre.variant, KernelVariant::FcGemmInt8Dot);
+        assert!(pre.needs_act_quant, "prefill inserts a dedicated quant kernel");
+        let dec = select_kernel(&n, &dev, Stage::Decode);
+        assert_eq!(dec.variant, KernelVariant::FcGemvDequantFused);
+        assert!(!dec.needs_act_quant, "decode fuses quantization into the kernel");
+    }
+
+    #[test]
+    fn prefill_without_int8_ext_uses_float_gemm() {
+        let dev = device("rtx_4090").unwrap(); // no int8 path via OpenCL
+        let n = fc_node(DType::I8);
+        let pre = select_kernel(&n, &dev, Stage::Prefill);
+        assert_eq!(pre.variant, KernelVariant::FcGemmTiled);
+        assert!(!pre.needs_act_quant);
+    }
+
+    #[test]
+    fn winograd_for_3x3_stride1_large_c() {
+        let dev = device("adreno_750").unwrap();
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 64, 64, 320), DType::F16);
+        let c = g.conv2d("c", x, 320, 3, 1, 1, DType::F16).unwrap();
+        let choice = select_kernel(&g.nodes[c], &dev, Stage::Single);
+        assert_eq!(choice.variant, KernelVariant::Conv2dWinograd);
+        // 1×1 conv stays generic.
+        let c1 = g.conv2d("c1", x, 320, 1, 1, 0, DType::F16).unwrap();
+        let choice = select_kernel(&g.nodes[c1], &dev, Stage::Single);
+        assert_eq!(choice.variant, KernelVariant::Conv2dGeneric);
+    }
+
+    #[test]
+    fn storage_prefers_vendor_then_falls_back() {
+        let adreno = device("adreno_750").unwrap();
+        let mali = device("mali_g715").unwrap();
+        let n = fc_node(DType::I8);
+        assert_eq!(select_kernel(&n, &adreno, Stage::Single).act_storage, StorageType::Texture2D);
+        assert_eq!(select_kernel(&n, &mali, Stage::Single).act_storage, StorageType::Buffer);
+        // Oversized tensor falls back to buffer even on Adreno.
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 60000, 64), DType::F16);
+        let big = g.softmax("s", x).unwrap();
+        assert_eq!(
+            select_kernel(&g.nodes[big], &adreno, Stage::Single).act_storage,
+            StorageType::Buffer
+        );
+    }
+
+    #[test]
+    fn decode_gemv_wants_o4_innermost() {
+        let dev = device("adreno_750").unwrap();
+        let n = fc_node(DType::I4);
+        let dec = select_kernel(&n, &dev, Stage::Decode);
+        let wl = dec.weight_layout.unwrap();
+        assert!(wl.name.contains("I4O4"), "decode layout should end in O4: {}", wl.name);
+        let pre = select_kernel(&n, &dev, Stage::Prefill);
+        let wl = pre.weight_layout.unwrap();
+        assert!(wl.name.contains("O4I4"), "prefill dot8 layout should end in I4: {}", wl.name);
+    }
+}

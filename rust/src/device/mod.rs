@@ -1,0 +1,20 @@
+//! Device specialization: GPU profiles and the device registry (§3.4).
+//!
+//! ML Drift determines the optimal GPU object types and kernel variants
+//! per device offline, then selects them at initialization from the
+//! detected hardware. This module is the "detected hardware" side: a
+//! profile database covering every GPU in the paper's evaluation —
+//! Qualcomm Adreno 830/750/740, Arm Immortalis-G720 / Mali-G715, Intel
+//! Ultra 7 165U / 258V, NVIDIA RTX 4090, and Apple M1 Ultra / M4 Pro.
+//!
+//! Since no GPU hardware is reachable in this reproduction, profiles
+//! additionally carry the *calibrated efficiency factors* the roofline
+//! simulator uses (see `DESIGN.md` §6: peak specs from public data, one
+//! efficiency fit per device family against a single paper row; all other
+//! rows are predictions).
+
+pub mod profile;
+pub mod registry;
+
+pub use profile::{Api, DeviceClass, DeviceProfile, Extensions, Vendor};
+pub use registry::{all_devices, device, device_names};

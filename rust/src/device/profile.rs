@@ -1,0 +1,206 @@
+//! GPU device profiles.
+
+use crate::vgpu::object::{StorageType, TextureLimits};
+
+/// GPU vendor (drives kernel-selection and extension decisions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Vendor {
+    Qualcomm,
+    Arm,
+    Intel,
+    Nvidia,
+    Apple,
+}
+
+/// Graphics/compute API backend used on this device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Api {
+    OpenCl,
+    Metal,
+    WebGpu,
+}
+
+impl Api {
+    pub fn name(self) -> &'static str {
+        match self {
+            Api::OpenCl => "OpenCL",
+            Api::Metal => "Metal",
+            Api::WebGpu => "WebGPU",
+        }
+    }
+}
+
+/// Device class for reporting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    Mobile,
+    Laptop,
+    Desktop,
+}
+
+/// Vendor extensions relevant to kernel selection (§3.4).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Extensions {
+    /// 8-bit dot product instructions reachable from the API
+    /// (e.g. `cl_arm_matrix_multiply`, Adreno dot8).
+    pub int8_dot: bool,
+    /// 8-bit cooperative-matrix / subgroup-matrix extension (Intel XMX via
+    /// `cl_intel_subgroup_matrix_multiply_accumulate` on Lunar Lake).
+    pub coop_matrix_int8: bool,
+    /// Dedicated matrix units exist but are NOT reachable from this API
+    /// (NVIDIA tensor cores under OpenCL/WebGPU — paper §4.2 reports a
+    /// 4–7× prefill penalty from this).
+    pub matrix_units_unreachable: bool,
+    /// FP16 arithmetic support (NVIDIA OpenCL lacks it → FP32 fallback).
+    pub fp16_arith: bool,
+}
+
+/// A GPU device profile: peak capabilities + calibrated efficiencies.
+///
+/// Peaks come from public spec sheets; `eff_*` factors are the fraction of
+/// peak a well-tuned kernel achieves on that device family. They are
+/// calibrated once against a single paper measurement per device (see
+/// EXPERIMENTS.md) — every other workload point is then a prediction.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub marketing_name: &'static str,
+    pub vendor: Vendor,
+    pub class: DeviceClass,
+    pub api: Api,
+    /// Peak half-precision throughput, GFLOP/s.
+    pub fp16_gflops: f64,
+    /// Peak single-precision throughput, GFLOP/s.
+    pub fp32_gflops: f64,
+    /// Peak int8 MAC throughput via dot/coop-matrix extensions, GOP/s
+    /// (0 when no extension).
+    pub int8_gops: f64,
+    /// Peak DRAM bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Kernel launch + driver overhead per dispatch, microseconds.
+    pub launch_overhead_us: f64,
+    /// GPU-accessible memory budget, bytes (≈ 62 % of system RAM on
+    /// phones — reproduces the paper's Llama-8B-q8 OOM entries).
+    pub mem_budget_bytes: u64,
+    /// Achievable fraction of peak compute for tuned matmul kernels.
+    pub eff_compute: f64,
+    /// Achievable fraction of peak bandwidth for streaming kernels.
+    pub eff_bandwidth: f64,
+    /// Texture path effectiveness: relative speedup of texture reads vs
+    /// buffer reads for cache-friendly access (1.0 = no benefit).
+    pub texture_cache_boost: f64,
+    pub extensions: Extensions,
+    pub texture_limits: TextureLimits,
+}
+
+impl DeviceProfile {
+    /// Effective compute throughput for a given precision, GFLOP/s.
+    pub fn effective_gflops(&self, precision: Precision) -> f64 {
+        let peak = match precision {
+            Precision::Fp16 => {
+                if self.extensions.coop_matrix_int8 {
+                    // Cooperative-matrix units (Intel XMX) also run fp16
+                    // matmuls at half their int8 rate — the Lunar Lake SD
+                    // numbers depend on this path.
+                    self.fp16_gflops.max(self.int8_gops / 2.0)
+                } else if self.extensions.fp16_arith {
+                    self.fp16_gflops
+                } else {
+                    self.fp32_gflops
+                }
+            }
+            Precision::Fp32 => self.fp32_gflops,
+            Precision::Int8 => {
+                if self.int8_gops > 0.0 {
+                    self.int8_gops
+                } else if self.extensions.fp16_arith {
+                    self.fp16_gflops
+                } else {
+                    self.fp32_gflops
+                }
+            }
+        };
+        peak * self.eff_compute
+    }
+
+    /// Effective memory bandwidth, GB/s.
+    pub fn effective_bandwidth(&self) -> f64 {
+        self.mem_bw_gbps * self.eff_bandwidth
+    }
+
+    /// Preferred storage type for activations on this device family.
+    /// (Empirically determined offline per the paper: Adreno favours
+    /// textures, Mali buffers, Apple/Intel/NVIDIA buffers with images for
+    /// spatial workloads.)
+    pub fn preferred_activation_storage(&self) -> StorageType {
+        match self.vendor {
+            Vendor::Qualcomm => StorageType::Texture2D,
+            Vendor::Apple => StorageType::Texture2D,
+            Vendor::Arm | Vendor::Intel | Vendor::Nvidia => StorageType::Buffer,
+        }
+    }
+
+    /// Preferred storage for weights.
+    pub fn preferred_weight_storage(&self) -> StorageType {
+        match self.vendor {
+            Vendor::Qualcomm => StorageType::Texture2DArray,
+            _ => StorageType::Buffer,
+        }
+    }
+}
+
+/// Arithmetic precision classes used by kernel selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DeviceProfile {
+        DeviceProfile {
+            name: "test_gpu",
+            marketing_name: "Test GPU",
+            vendor: Vendor::Qualcomm,
+            class: DeviceClass::Mobile,
+            api: Api::OpenCl,
+            fp16_gflops: 1000.0,
+            fp32_gflops: 500.0,
+            int8_gops: 2000.0,
+            mem_bw_gbps: 100.0,
+            launch_overhead_us: 10.0,
+            mem_budget_bytes: 4 << 30,
+            eff_compute: 0.5,
+            eff_bandwidth: 0.7,
+            texture_cache_boost: 1.2,
+            extensions: Extensions { int8_dot: true, fp16_arith: true, ..Default::default() },
+            texture_limits: TextureLimits::default(),
+        }
+    }
+
+    #[test]
+    fn effective_numbers_apply_efficiency() {
+        let d = sample();
+        assert_eq!(d.effective_gflops(Precision::Fp16), 500.0);
+        assert_eq!(d.effective_gflops(Precision::Int8), 1000.0);
+        assert_eq!(d.effective_bandwidth(), 70.0);
+    }
+
+    #[test]
+    fn no_fp16_falls_back_to_fp32() {
+        let mut d = sample();
+        d.extensions.fp16_arith = false;
+        assert_eq!(d.effective_gflops(Precision::Fp16), 250.0);
+    }
+
+    #[test]
+    fn no_int8_extension_uses_float_path() {
+        let mut d = sample();
+        d.int8_gops = 0.0;
+        assert_eq!(d.effective_gflops(Precision::Int8), 500.0);
+    }
+}

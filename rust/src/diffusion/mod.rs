@@ -1,0 +1,119 @@
+//! Stable Diffusion pipeline runner (paper §4.1).
+//!
+//! Text encoder → UNet × N iterations → VAE decoder, compiled through the
+//! full pipeline per device. Drives the hero table, Fig. 5, Table 3, and
+//! the Fig. 3 memory experiment.
+
+use crate::codegen::select::Stage;
+use crate::device::profile::DeviceProfile;
+use crate::engine::compile::{compile_graph, CompileOptions, CompiledGraph};
+use crate::error::Result;
+use crate::models::sd::{sd_text_encoder, sd_unet, sd_vae_decoder};
+
+/// Compiled SD pipeline + per-component latency.
+#[derive(Clone, Debug)]
+pub struct SdPipeline {
+    pub device: &'static str,
+    pub text_encoder: CompiledGraph,
+    pub unet: CompiledGraph,
+    pub vae_decoder: CompiledGraph,
+}
+
+/// Latency report for a full generation.
+#[derive(Clone, Copy, Debug)]
+pub struct SdReport {
+    pub text_encoder_s: f64,
+    pub unet_step_s: f64,
+    pub vae_decoder_s: f64,
+    pub iterations: usize,
+    pub end_to_end_s: f64,
+}
+
+impl SdPipeline {
+    /// Compile all three components for a device.
+    pub fn compile(dev: &DeviceProfile, opts: &CompileOptions) -> Result<SdPipeline> {
+        Ok(SdPipeline {
+            device: dev.name,
+            text_encoder: compile_graph(sd_text_encoder()?, dev, Stage::Single, opts)?,
+            unet: compile_graph(sd_unet()?, dev, Stage::Single, opts)?,
+            vae_decoder: compile_graph(sd_vae_decoder()?, dev, Stage::Single, opts)?,
+        })
+    }
+
+    /// Generate one 512×512 image with `iterations` denoising steps.
+    /// Each iteration runs the UNet **twice** (classifier-free guidance:
+    /// conditional + unconditional evaluations), matching the paper's
+    /// measurement protocol; `unet_step_s` reports the per-iteration cost.
+    pub fn run(&self, iterations: usize) -> SdReport {
+        let te = self.text_encoder.report.total_s;
+        let unet_eval = self.unet.report.total_s;
+        let unet = 2.0 * unet_eval; // CFG: cond + uncond per iteration
+        let vae = self.vae_decoder.report.total_s;
+        SdReport {
+            text_encoder_s: te,
+            unet_step_s: unet,
+            vae_decoder_s: vae,
+            iterations,
+            end_to_end_s: te + unet * iterations as f64 + vae,
+        }
+    }
+
+    /// Peak runtime memory for intermediates (the Fig. 3 metric): the
+    /// components run sequentially, so the peak is the max arena, and the
+    /// naive comparison is the sum of per-tensor footprints.
+    pub fn memory_summary(&self) -> [(&'static str, usize, usize); 3] {
+        [
+            (
+                "text_encoder",
+                self.text_encoder.naive_memory_bytes,
+                self.text_encoder.memory.total_bytes,
+            ),
+            ("unet", self.unet.naive_memory_bytes, self.unet.memory.total_bytes),
+            (
+                "vae_decoder",
+                self.vae_decoder.naive_memory_bytes,
+                self.vae_decoder.memory.total_bytes,
+            ),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::registry::device;
+
+    #[test]
+    fn pipeline_compiles_and_runs() {
+        let dev = device("adreno_740").unwrap();
+        let p = SdPipeline::compile(&dev, &CompileOptions::default()).unwrap();
+        let r = p.run(20);
+        assert!(r.end_to_end_s > 1.0, "e2e {}", r.end_to_end_s);
+        assert!(r.end_to_end_s < 60.0, "e2e {}", r.end_to_end_s);
+        // UNet dominates (Fig. 5's shape).
+        assert!(r.unet_step_s * 20.0 > r.vae_decoder_s);
+        assert!(r.text_encoder_s < r.vae_decoder_s);
+    }
+
+    #[test]
+    fn memory_savings_match_fig3_shape() {
+        let dev = device("adreno_740").unwrap();
+        let p = SdPipeline::compile(&dev, &CompileOptions::default()).unwrap();
+        let summary = p.memory_summary();
+        let naive_total: usize = summary.iter().map(|(_, n, _)| n).sum();
+        let opt_total: usize = summary.iter().map(|(_, _, o)| o).sum();
+        let savings = 1.0 - opt_total as f64 / naive_total as f64;
+        // Paper: 93 % savings for GREEDY BY SIZE.
+        assert!(savings > 0.80, "savings {savings:.3} (paper 0.93)");
+    }
+
+    #[test]
+    fn faster_device_is_faster() {
+        let slow = device("mali_g715").unwrap();
+        let fast = device("m4_pro").unwrap();
+        let o = CompileOptions::default();
+        let r_slow = SdPipeline::compile(&slow, &o).unwrap().run(20);
+        let r_fast = SdPipeline::compile(&fast, &o).unwrap().run(20);
+        assert!(r_fast.end_to_end_s < r_slow.end_to_end_s);
+    }
+}

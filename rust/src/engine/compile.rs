@@ -1,0 +1,200 @@
+//! The compile pipeline: graph → fused graph → specialized plan + shaders.
+
+use crate::codegen::backend::{emit, Backend};
+use crate::codegen::ir::{KernelArg, KernelSpec};
+use crate::codegen::kernels::body_for;
+use crate::codegen::select::Stage;
+use crate::device::profile::{Api, DeviceProfile};
+use crate::error::Result;
+use crate::fusion::{fuse_all, FusionReport};
+use crate::graph::Graph;
+use crate::memory::{lifetimes, naive_bytes, plan as mem_plan, MemoryPlan, Strategy};
+use crate::sim::exec::{build_plan, simulate, ExecutionPlan, SimReport};
+use crate::tensor::DType;
+use crate::vgpu::descriptor::TensorDescriptor;
+
+/// Ablation-friendly compilation switches (the paper's §5 ablation study).
+#[derive(Clone, Copy, Debug)]
+pub struct CompileOptions {
+    /// Run operator fusion (§3.6).
+    pub fuse: bool,
+    /// QKV+RoPE attention fusion parameters (heads_q, heads_kv, head_dim);
+    /// None disables that pass (e.g. for CNN graphs).
+    pub attn_fusion: Option<(usize, usize, usize)>,
+    /// Stage-aware kernel selection (§3.7); when false every stage uses
+    /// `Stage::Single` selections.
+    pub stage_aware: bool,
+    /// Intermediate-tensor memory strategy (§3.5).
+    pub memory_strategy: Strategy,
+    /// Emit shader sources (off for fast simulation sweeps).
+    pub emit_shaders: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            fuse: true,
+            attn_fusion: None,
+            stage_aware: true,
+            memory_strategy: Strategy::GreedyBySize,
+            emit_shaders: false,
+        }
+    }
+}
+
+/// A fully compiled graph: fused ops, memory plan, roofline plan, and
+/// (optionally) generated shader sources.
+#[derive(Clone, Debug)]
+pub struct CompiledGraph {
+    pub graph: Graph,
+    pub fusion: FusionReport,
+    pub memory: MemoryPlan,
+    pub naive_memory_bytes: usize,
+    pub plan: ExecutionPlan,
+    pub report: SimReport,
+    /// Generated kernel sources (kernel name → source) when requested.
+    pub shaders: Vec<(String, String)>,
+}
+
+/// Backend for a device's API.
+pub fn backend_for(api: Api) -> Backend {
+    match api {
+        Api::OpenCl => Backend::OpenCl,
+        Api::Metal => Backend::Metal,
+        Api::WebGpu => Backend::Wgsl,
+    }
+}
+
+/// Run the full pipeline.
+pub fn compile_graph(
+    mut graph: Graph,
+    dev: &DeviceProfile,
+    stage: Stage,
+    opts: &CompileOptions,
+) -> Result<CompiledGraph> {
+    let fusion = if opts.fuse {
+        fuse_all(&mut graph, opts.attn_fusion)
+    } else {
+        FusionReport::default()
+    };
+    let effective_stage = if opts.stage_aware { stage } else { Stage::Single };
+
+    let usages = lifetimes(&graph, DType::F16);
+    let naive_memory_bytes = naive_bytes(&usages);
+    let memory = mem_plan(&usages, opts.memory_strategy);
+
+    let plan = build_plan(&graph, dev, effective_stage, opts.memory_strategy)?;
+    let report = simulate(&plan);
+
+    let mut shaders = Vec::new();
+    if opts.emit_shaders {
+        let backend = backend_for(dev.api);
+        for k in &plan.kernels {
+            let node = &graph.nodes[k.node];
+            let mut args = Vec::new();
+            for (i, &inp) in node.inputs.iter().enumerate() {
+                let src = &graph.nodes[inp];
+                args.push(KernelArg {
+                    name: if node.inputs.len() == 1 { "src".into() } else { format!("src{i}") },
+                    desc: TensorDescriptor::with_default_layout(
+                        &src.name,
+                        src.shape,
+                        src.dtype,
+                        k.choice.act_storage,
+                    )?,
+                    is_output: false,
+                });
+            }
+            args.push(KernelArg {
+                name: "dst".into(),
+                desc: TensorDescriptor::with_default_layout(
+                    &node.name,
+                    node.shape,
+                    node.dtype,
+                    k.choice.act_storage,
+                )?,
+                is_output: true,
+            });
+            let spec = KernelSpec {
+                name: sanitize(&k.name),
+                variant: k.choice.variant,
+                args,
+                body: body_for(k.choice.variant, node),
+                workgroup: k.choice.workgroup,
+                grid: [1, 1, 1],
+                defines: vec![
+                    ("DEF_OS".into(), node.shape.slices() as i64),
+                    ("DEF_OW".into(), node.shape.w as i64),
+                    ("DEF_OH".into(), node.shape.h as i64),
+                ],
+            };
+            shaders.push((spec.name.clone(), emit(backend, &spec)));
+        }
+    }
+
+    Ok(CompiledGraph { graph, fusion, memory, naive_memory_bytes, plan, report, shaders })
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_alphanumeric() { c } else { '_' }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::registry::device;
+    use crate::models::llm::{build_llm_graph, LlmStageGraph};
+    use crate::models::llm_config;
+    use crate::quant::QuantScheme;
+
+    #[test]
+    fn compile_tinylm_prefill_with_shaders() {
+        let cfg = llm_config("tinylm").unwrap();
+        let g = build_llm_graph(&cfg, 1, LlmStageGraph::Prefill { seq: 64 }, QuantScheme::Q8)
+            .unwrap();
+        let dev = device("adreno_750").unwrap();
+        let opts = CompileOptions {
+            attn_fusion: Some((cfg.heads_q, cfg.heads_kv, cfg.head_dim)),
+            emit_shaders: true,
+            ..Default::default()
+        };
+        let c = compile_graph(g, &dev, Stage::Prefill, &opts).unwrap();
+        assert!(c.fusion.total() > 0);
+        assert!(c.report.total_s > 0.0);
+        assert!(!c.shaders.is_empty());
+        // Memory plan must beat naive.
+        assert!(c.memory.total_bytes < c.naive_memory_bytes);
+        // Every shader contains an entry point.
+        for (name, src) in &c.shaders {
+            assert!(src.contains("__kernel"), "shader {name} missing entry point");
+        }
+    }
+
+    #[test]
+    fn fusion_off_vs_on_kernel_counts() {
+        let cfg = llm_config("tinylm").unwrap();
+        let dev = device("adreno_750").unwrap();
+        let mk = || {
+            build_llm_graph(&cfg, 1, LlmStageGraph::Prefill { seq: 64 }, QuantScheme::Q8).unwrap()
+        };
+        let fused = compile_graph(
+            mk(),
+            &dev,
+            Stage::Prefill,
+            &CompileOptions {
+                attn_fusion: Some((cfg.heads_q, cfg.heads_kv, cfg.head_dim)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let unfused = compile_graph(
+            mk(),
+            &dev,
+            Stage::Prefill,
+            &CompileOptions { fuse: false, ..Default::default() },
+        )
+        .unwrap();
+        assert!(fused.plan.kernels.len() < unfused.plan.kernels.len());
+        assert!(fused.report.total_s < unfused.report.total_s);
+    }
+}

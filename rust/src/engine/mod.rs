@@ -1,0 +1,14 @@
+//! The inference engine: compile pipeline + stage-aware LLM execution.
+//!
+//! [`compile`] runs the full ML Drift pipeline on a model graph:
+//! fusion → device specialization (kernel selection) → memory planning →
+//! shader generation → roofline plan. [`llm`] drives the two-stage
+//! (prefill/decode) LLM flow over compiled plans, producing the
+//! tokens/s numbers the paper's Tables 2/4 report, including KV-cache
+//! growth and the per-token CPU/GPU synchronization the paper performs.
+
+pub mod compile;
+pub mod llm;
+
+pub use compile::{compile_graph, CompileOptions, CompiledGraph};
+pub use llm::{simulate_llm, LlmPerf};

@@ -1,0 +1,73 @@
+//! Unified error type for the mldrift crate.
+
+use std::fmt;
+
+/// Errors produced by the ML Drift compiler, simulator, and runtime.
+#[derive(Debug)]
+pub enum DriftError {
+    /// Shape inference or shape compatibility failure.
+    Shape(String),
+    /// Invalid or unsupported layout request.
+    Layout(String),
+    /// Graph construction / validation failure (cycles, dangling refs …).
+    Graph(String),
+    /// Memory planning failure.
+    Memory(String),
+    /// Code generation failure.
+    Codegen(String),
+    /// Device capability mismatch (e.g. texture width exceeded).
+    Device(String),
+    /// Model would not fit in device memory (paper Table 2 OOM entries).
+    OutOfMemory { required_bytes: u64, budget_bytes: u64 },
+    /// Quantization error.
+    Quant(String),
+    /// PJRT runtime error (wraps the `xla` crate error).
+    Runtime(String),
+    /// Serving-layer error (queue closed, bad request …).
+    Serving(String),
+    /// Configuration / CLI / JSON parse error.
+    Config(String),
+    /// I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for DriftError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DriftError::Shape(m) => write!(f, "shape error: {m}"),
+            DriftError::Layout(m) => write!(f, "layout error: {m}"),
+            DriftError::Graph(m) => write!(f, "graph error: {m}"),
+            DriftError::Memory(m) => write!(f, "memory planning error: {m}"),
+            DriftError::Codegen(m) => write!(f, "codegen error: {m}"),
+            DriftError::Device(m) => write!(f, "device error: {m}"),
+            DriftError::OutOfMemory { required_bytes, budget_bytes } => write!(
+                f,
+                "out of device memory: required {:.2} GB > budget {:.2} GB",
+                *required_bytes as f64 / 1e9,
+                *budget_bytes as f64 / 1e9
+            ),
+            DriftError::Quant(m) => write!(f, "quantization error: {m}"),
+            DriftError::Runtime(m) => write!(f, "runtime error: {m}"),
+            DriftError::Serving(m) => write!(f, "serving error: {m}"),
+            DriftError::Config(m) => write!(f, "config error: {m}"),
+            DriftError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DriftError {}
+
+impl From<std::io::Error> for DriftError {
+    fn from(e: std::io::Error) -> Self {
+        DriftError::Io(e)
+    }
+}
+
+impl From<xla::Error> for DriftError {
+    fn from(e: xla::Error) -> Self {
+        DriftError::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, DriftError>;

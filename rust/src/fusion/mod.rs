@@ -1,0 +1,29 @@
+//! Operator fusion (paper §3.6, Fig. 4).
+//!
+//! ML Drift automatically fuses memory-bound operations into neighbouring
+//! kernels to cut kernel-launch overhead and intermediate memory traffic:
+//!
+//! 1. **Elementwise epilogues** — a unary elementwise op whose producer has
+//!    no other consumer is absorbed into the producer's kernel.
+//! 2. **Two-branch merges** (Fig. 4 left) — a binary elementwise combining a
+//!    matmul-family result with another branch executes inside the
+//!    matmul-family kernel (reading the other branch's buffer directly).
+//! 3. **Residual + RMSNorm** (Fig. 4 right) — `RMSNorm(a + b)` becomes a
+//!    single [`crate::graph::OpKind::FusedAddRmsNorm`] kernel; if the sum
+//!    feeds further consumers (the usual pre-norm residual chain) the
+//!    kernel also writes the sum as a secondary output (the original add
+//!    node survives with `absorbed_into` set: a buffer, but no kernel).
+//! 4. **QKV + RoPE layout fusion** — the Q/K/V projections sharing one
+//!    input fuse into a single packed projection followed by the custom
+//!    [`crate::graph::OpKind::FusedQkvRope`] kernel that applies rotary
+//!    embeddings while transforming `(B, 1, S, h·d_h)` into the
+//!    attention-ready `(B·h_kv, S·h_q/h_kv, d_h)` layout; the old per-path
+//!    rope and K/V projection nodes become zero-cost views.
+//!
+//! Passes mutate the graph in place (absorption flags + epilogues) — node
+//! ids and topological order are preserved, which keeps memory planning
+//! and the simulator straightforward.
+
+pub mod passes;
+
+pub use passes::{fuse_all, live_kernel_count, FusionReport};

@@ -1,0 +1,470 @@
+//! The fusion passes.
+
+use crate::graph::{BinOp, Graph, NodeId, OpKind};
+
+/// Statistics from a fusion run (surfaced by the ablation bench).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FusionReport {
+    pub elementwise_absorbed: usize,
+    pub branch_merges: usize,
+    pub add_rmsnorm_fused: usize,
+    pub qkv_rope_fused: usize,
+}
+
+impl FusionReport {
+    pub fn total(&self) -> usize {
+        self.elementwise_absorbed + self.branch_merges + self.add_rmsnorm_fused + self.qkv_rope_fused
+    }
+}
+
+/// Is this node still a live kernel (not absorbed)?
+fn live(g: &Graph, id: NodeId) -> bool {
+    g.nodes[id].absorbed_into.is_none()
+}
+
+/// Resolve a node to the kernel that actually materializes its value:
+/// follows `absorbed_into` for *rewired* elementwise absorption.
+fn consumers_live(g: &Graph) -> Vec<Vec<NodeId>> {
+    let mut cons = vec![Vec::new(); g.nodes.len()];
+    for n in &g.nodes {
+        if !live(g, n.id) {
+            continue;
+        }
+        for &i in &n.inputs {
+            cons[i].push(n.id);
+        }
+        for &(i, _) in &n.fused_adds {
+            cons[i].push(n.id);
+        }
+    }
+    cons
+}
+
+/// Pass 1: absorb unary elementwise chains into their producers.
+///
+/// `producer → ew` where the producer is a live compute kernel with exactly
+/// one consumer: the ew op joins `producer.epilogue`, consumers of the ew
+/// node are rewired to the producer, and the ew node is absorbed (it owns
+/// neither kernel nor buffer).
+pub fn fuse_elementwise(g: &mut Graph) -> usize {
+    let mut count = 0;
+    loop {
+        let cons = consumers_live(g);
+        let mut changed = false;
+        for id in 0..g.nodes.len() {
+            if !live(g, id) {
+                continue;
+            }
+            let OpKind::Elementwise(op) = g.nodes[id].kind else { continue };
+            let producer = g.nodes[id].inputs[0];
+            // Producer must be a live compute kernel solely feeding this op,
+            // must not be a graph output (its buffer would change meaning),
+            // and shapes must match (epilogues are in-place).
+            if !live(g, producer)
+                || !g.nodes[producer].kind.is_compute()
+                || cons[producer].len() != 1
+                || g.outputs.contains(&producer)
+                || g.nodes[producer].shape != g.nodes[id].shape
+            {
+                continue;
+            }
+            // Absorb: push epilogue onto producer; rewire ew's consumers.
+            g.nodes[producer].epilogue.push(op);
+            g.nodes[id].absorbed_into = Some(producer);
+            for later in (id + 1)..g.nodes.len() {
+                let node = &mut g.nodes[later];
+                for inp in node.inputs.iter_mut() {
+                    if *inp == id {
+                        *inp = producer;
+                    }
+                }
+                for fa in node.fused_adds.iter_mut() {
+                    if fa.0 == id {
+                        fa.0 = producer;
+                    }
+                }
+            }
+            for o in g.outputs.iter_mut() {
+                if *o == id {
+                    *o = producer;
+                }
+            }
+            count += 1;
+            changed = true;
+            break; // consumer map is stale; restart scan
+        }
+        if !changed {
+            return count;
+        }
+    }
+}
+
+/// Pass 2 (Fig. 4 left): merge a binary elementwise into a matmul-family
+/// producer. `binary(matmul_out, other)` runs inside the matmul kernel,
+/// which reads `other`'s buffer directly.
+pub fn fuse_branch_binary(g: &mut Graph) -> usize {
+    let mut count = 0;
+    loop {
+        let cons = consumers_live(g);
+        let mut changed = false;
+        for id in 0..g.nodes.len() {
+            if !live(g, id) {
+                continue;
+            }
+            let OpKind::Binary(op) = g.nodes[id].kind else { continue };
+            let (a, b) = (g.nodes[id].inputs[0], g.nodes[id].inputs[1]);
+            // Choose a matmul-family producer with a single consumer. Prefer
+            // the later node so the other operand is already materialized.
+            let pick = [a, b]
+                .into_iter()
+                .filter(|&p| {
+                    live(g, p)
+                        && g.nodes[p].kind.is_matmul_family()
+                        && cons[p].len() == 1
+                        && !g.outputs.contains(&p)
+                        && g.nodes[p].shape == g.nodes[id].shape
+                })
+                .max();
+            let Some(p) = pick else { continue };
+            let other = if p == a { b } else { a };
+            // Non-commutative ops need operand order preserved: only fuse
+            // Sub/Div when the matmul output is the left operand.
+            if matches!(op, BinOp::Sub | BinOp::Div) && p != a {
+                continue;
+            }
+            // `other` must be materialized before p executes.
+            if other > p {
+                continue;
+            }
+            g.nodes[p].fused_adds.push((other, op));
+            g.nodes[id].absorbed_into = Some(p);
+            for later in (id + 1)..g.nodes.len() {
+                let node = &mut g.nodes[later];
+                for inp in node.inputs.iter_mut() {
+                    if *inp == id {
+                        *inp = p;
+                    }
+                }
+                for fa in node.fused_adds.iter_mut() {
+                    if fa.0 == id {
+                        fa.0 = p;
+                    }
+                }
+            }
+            for o in g.outputs.iter_mut() {
+                if *o == id {
+                    *o = p;
+                }
+            }
+            count += 1;
+            changed = true;
+            break;
+        }
+        if !changed {
+            return count;
+        }
+    }
+}
+
+/// Pass 3 (Fig. 4 right): fuse `RMSNorm(a + b)` into one kernel.
+///
+/// The RMSNorm node becomes [`OpKind::FusedAddRmsNorm`] with inputs
+/// `(a, b)`. If the add has other consumers (the residual chain), the add
+/// node survives as a secondary output of the fused kernel
+/// (`absorbed_into = norm`): it keeps its buffer but costs no kernel.
+/// All remaining consumers must execute after the fused kernel, which holds
+/// in topological insertion order whenever they have larger ids.
+pub fn fuse_add_rmsnorm(g: &mut Graph) -> usize {
+    let mut count = 0;
+    loop {
+        let cons = consumers_live(g);
+        let mut changed = false;
+        for id in 0..g.nodes.len() {
+            if !live(g, id) {
+                continue;
+            }
+            let OpKind::RmsNorm { eps } = g.nodes[id].kind else { continue };
+            let add = g.nodes[id].inputs[0];
+            if !live(g, add) || !matches!(g.nodes[add].kind, OpKind::Binary(BinOp::Add)) {
+                continue;
+            }
+            // The fused kernel runs at the norm's position: every *other*
+            // consumer of the add must come later, and the add must not
+            // already carry fusion state.
+            let others: Vec<NodeId> = cons[add].iter().copied().filter(|&c| c != id).collect();
+            if others.iter().any(|&c| c < id) || !g.nodes[add].fused_adds.is_empty() {
+                continue;
+            }
+            if g.nodes[add].epilogue.is_empty() {
+                let (a, b) = (g.nodes[add].inputs[0], g.nodes[add].inputs[1]);
+                g.nodes[id].kind = OpKind::FusedAddRmsNorm { eps };
+                g.nodes[id].inputs = vec![a, b];
+                g.nodes[add].absorbed_into = Some(id);
+                // If nothing else reads the sum and it isn't an output, the
+                // secondary buffer is dropped by the memory planner (it
+                // checks liveness); nothing more to do here.
+                count += 1;
+                changed = true;
+                break;
+            }
+        }
+        if !changed {
+            return count;
+        }
+    }
+}
+
+/// Pass 4: QKV projection + RoPE layout fusion (§3.6).
+///
+/// Detects three live `FullyConnected` nodes sharing one input where at
+/// least two feed `Rope` nodes (the Q and K paths). Replaces the trio with
+/// a packed projection (the Q projection node widens to `q+k+v` output
+/// channels) followed by a [`OpKind::FusedQkvRope`] kernel; the K/V path
+/// heads and all rope nodes become zero-cost views of the fused kernel.
+pub fn fuse_qkv_rope(g: &mut Graph, heads_q: usize, heads_kv: usize, head_dim: usize) -> usize {
+    let mut count = 0;
+    loop {
+        let cons = consumers_live(g);
+        let mut changed = false;
+        // Group live FC nodes by input.
+        for src in 0..g.nodes.len() {
+            let fcs: Vec<NodeId> = cons[src]
+                .iter()
+                .copied()
+                .filter(|&c| {
+                    live(g, c)
+                        && matches!(g.nodes[c].kind, OpKind::FullyConnected { .. })
+                        && g.nodes[c].epilogue.is_empty()
+                        && g.nodes[c].fused_adds.is_empty()
+                })
+                .collect();
+            if fcs.len() < 3 {
+                continue;
+            }
+            // Expected channel widths.
+            let (qc, kvc) = (heads_q * head_dim, heads_kv * head_dim);
+            let find = |want: usize, exclude: &[NodeId]| -> Option<NodeId> {
+                fcs.iter()
+                    .copied()
+                    .find(|&f| g.nodes[f].shape.c == want && !exclude.contains(&f))
+            };
+            let Some(q) = find(qc, &[]) else { continue };
+            let Some(k) = find(kvc, &[q]) else { continue };
+            let Some(v) = find(kvc, &[q, k]) else { continue };
+            // Q and K must each feed exactly one rope.
+            let rope_of = |fc: NodeId| -> Option<NodeId> {
+                let c: Vec<NodeId> = cons[fc].to_vec();
+                if c.len() == 1 && matches!(g.nodes[c[0]].kind, OpKind::Rope { .. }) {
+                    Some(c[0])
+                } else {
+                    None
+                }
+            };
+            let (Some(rq), Some(rk)) = (rope_of(q), rope_of(k)) else { continue };
+
+            // Widen Q's projection into the packed QKV projection.
+            let packed_c = qc + 2 * kvc;
+            let in_c = g.nodes[src].shape.c;
+            g.nodes[q].kind = OpKind::FullyConnected { out_c: packed_c };
+            g.nodes[q].name = format!("{}_qkv_packed", g.nodes[q].name);
+            g.nodes[q].shape.c = packed_c;
+            if let Some(w) = g.nodes[q].weight.as_mut() {
+                w.shape = crate::tensor::WeightShape::fc(packed_c, in_c);
+            }
+            // The Q rope becomes the fused QKV+RoPE kernel.
+            g.nodes[rq].kind = OpKind::FusedQkvRope { heads_q, heads_kv, head_dim };
+            g.nodes[rq].name = format!("{}_fused_qkv_rope", g.nodes[rq].name);
+            g.nodes[rq].inputs = vec![q];
+            g.nodes[rq].shape = crate::tensor::Shape::bhwc(
+                g.nodes[src].shape.b * heads_kv,
+                1,
+                g.nodes[src].shape.w * heads_q / heads_kv,
+                head_dim,
+            );
+            // K/V projections and the K rope become views of the fused kernel.
+            for &view in &[k, v, rk] {
+                g.nodes[view].absorbed_into = Some(rq);
+            }
+            // The fused kernel writes Q/K/V directly in their attention
+            // layouts (§3.6/§3.8), so the fold-reshapes downstream of the
+            // Q/K/V paths become views as well.
+            let mut views = vec![q, k, v, rk, rq];
+            for id in 0..g.nodes.len() {
+                if g.nodes[id].absorbed_into.is_some() {
+                    continue;
+                }
+                if matches!(g.nodes[id].kind, OpKind::Reshape { .. })
+                    && g.nodes[id].inputs.len() == 1
+                    && views.contains(&g.nodes[id].inputs[0])
+                {
+                    g.nodes[id].absorbed_into = Some(rq);
+                    views.push(id);
+                }
+            }
+            count += 1;
+            changed = true;
+            break;
+        }
+        if !changed {
+            return count;
+        }
+    }
+}
+
+/// Run every fusion pass in the canonical order.
+pub fn fuse_all(g: &mut Graph, attn: Option<(usize, usize, usize)>) -> FusionReport {
+    let mut rep = FusionReport::default();
+    if let Some((hq, hkv, dh)) = attn {
+        rep.qkv_rope_fused = fuse_qkv_rope(g, hq, hkv, dh);
+    }
+    rep.add_rmsnorm_fused = fuse_add_rmsnorm(g);
+    rep.branch_merges = fuse_branch_binary(g);
+    rep.elementwise_absorbed = fuse_elementwise(g);
+    rep
+}
+
+/// Number of live kernels (launches) after fusion.
+pub fn live_kernel_count(g: &Graph) -> usize {
+    g.nodes
+        .iter()
+        .filter(|n| n.kind.is_compute() && n.absorbed_into.is_none())
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::EwOp;
+    use crate::tensor::{DType, Shape};
+
+    #[test]
+    fn elementwise_chain_absorbs() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let h = g.fully_connected("fc", x, 128, DType::I8).unwrap();
+        let h = g.unary("gelu", h, EwOp::Gelu).unwrap();
+        let h = g.unary("scale", h, EwOp::Scale(0.5)).unwrap();
+        g.output(h);
+        let n = fuse_elementwise(&mut g);
+        assert_eq!(n, 2);
+        assert_eq!(live_kernel_count(&g), 1);
+        let fc = &g.nodes[1];
+        assert_eq!(fc.epilogue, vec![EwOp::Gelu, EwOp::Scale(0.5)]);
+        // Output rewired to the fc node.
+        assert_eq!(g.outputs, vec![1]);
+    }
+
+    #[test]
+    fn elementwise_not_absorbed_with_two_consumers() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let h = g.fully_connected("fc", x, 64, DType::I8).unwrap();
+        let a = g.unary("gelu", h, EwOp::Gelu).unwrap();
+        let b = g.binary("mul", h, a, crate::graph::BinOp::Mul).unwrap(); // h has 2 consumers
+        g.output(b);
+        let n = fuse_elementwise(&mut g);
+        assert_eq!(n, 0, "fc output feeds two consumers; gelu must not absorb");
+    }
+
+    #[test]
+    fn branch_merge_into_fc() {
+        // Fig 4 left: fc(x) + branch → fused into fc's kernel.
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let branch = g.unary("gate", x, EwOp::Silu).unwrap();
+        let up = g.fully_connected("up", x, 64, DType::I8).unwrap();
+        let merged = g.binary("mul", up, branch, crate::graph::BinOp::Mul).unwrap();
+        g.output(merged);
+        let n = fuse_branch_binary(&mut g);
+        assert_eq!(n, 1);
+        assert_eq!(g.nodes[up].fused_adds, vec![(branch, crate::graph::BinOp::Mul)]);
+        assert_eq!(g.outputs, vec![up]);
+    }
+
+    #[test]
+    fn sub_not_fused_when_matmul_is_rhs() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let fc = g.fully_connected("fc", x, 64, DType::I8).unwrap();
+        // x - fc: fc is the RHS of a non-commutative op → no fuse.
+        let s = g.binary("sub", x, fc, crate::graph::BinOp::Sub).unwrap();
+        g.output(s);
+        assert_eq!(fuse_branch_binary(&mut g), 0);
+    }
+
+    #[test]
+    fn add_rmsnorm_fuses_and_keeps_residual_buffer() {
+        // Pre-norm block shape: add feeds both the norm and a later add.
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let y = g.input("y", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let sum = g.binary("residual", x, y, crate::graph::BinOp::Add).unwrap();
+        let norm = g.rms_norm("norm", sum).unwrap();
+        let ffn = g.fully_connected("ffn", norm, 64, DType::I8).unwrap();
+        let out = g.binary("residual2", sum, ffn, crate::graph::BinOp::Add).unwrap();
+        g.output(out);
+        let n = fuse_add_rmsnorm(&mut g);
+        assert_eq!(n, 1);
+        assert!(matches!(g.nodes[norm].kind, OpKind::FusedAddRmsNorm { .. }));
+        assert_eq!(g.nodes[norm].inputs, vec![x, y]);
+        assert_eq!(g.nodes[sum].absorbed_into, Some(norm));
+        // The later residual add still reads the sum's buffer.
+        assert_eq!(g.nodes[out].inputs, vec![sum, ffn]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn qkv_rope_fusion_packs_projections() {
+        // MHA (h_q == h_kv) so the unfused scores/ctx matmuls type-check
+        // without per-head reshapes (the fused path handles GQA).
+        let (hq, hkv, dh) = (4, 4, 32);
+        let s = 16;
+        let mut g = Graph::new("attn");
+        let x = g.input("x", Shape::bhwc(1, 1, s, 256), DType::F16);
+        let q = g.fully_connected("wq", x, hq * dh, DType::I8).unwrap();
+        let k = g.fully_connected("wk", x, hkv * dh, DType::I8).unwrap();
+        let v = g.fully_connected("wv", x, hkv * dh, DType::I8).unwrap();
+        let rq = g.rope("rope_q", q).unwrap();
+        let rk = g.rope("rope_k", k).unwrap();
+        let scores = g.matmul("scores", rq, rk, true).unwrap();
+        let probs = g.softmax("probs", scores).unwrap();
+        let ctx = g.matmul("ctx", probs, v, false).unwrap();
+        g.output(ctx);
+
+        let before = live_kernel_count(&g);
+        let n = fuse_qkv_rope(&mut g, hq, hkv, dh);
+        assert_eq!(n, 1);
+        let after = live_kernel_count(&g);
+        // wk, wv, rope_k absorbed: 3 fewer kernels.
+        assert_eq!(after, before - 3);
+        // Packed projection widened.
+        assert_eq!(g.nodes[q].shape.c, (hq + 2 * hkv) * dh);
+        // Fused node produces the paper's Q layout (B·h_kv, S·h_q/h_kv, d_h).
+        assert!(matches!(g.nodes[rq].kind, OpKind::FusedQkvRope { .. }));
+        assert_eq!(g.nodes[rq].shape, Shape::bhwc(hkv, 1, s * hq / hkv, dh));
+    }
+
+    #[test]
+    fn fuse_all_on_transformer_ffn() {
+        // silu-gated FFN: down(silu(gate(x)) * up(x)) with residual + norm.
+        let mut g = Graph::new("ffn");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let resid = g.input("r", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let sum = g.binary("add", x, resid, crate::graph::BinOp::Add).unwrap();
+        let norm = g.rms_norm("norm", sum).unwrap();
+        let gate = g.fully_connected("gate", norm, 256, DType::I4).unwrap();
+        let gate_act = g.unary("silu", gate, EwOp::Silu).unwrap();
+        let up = g.fully_connected("up", norm, 256, DType::I4).unwrap();
+        let prod = g.binary("mul", up, gate_act, crate::graph::BinOp::Mul).unwrap();
+        let down = g.fully_connected("down", prod, 64, DType::I4).unwrap();
+        g.output(down);
+
+        let before = live_kernel_count(&g);
+        let rep = fuse_all(&mut g, None);
+        assert!(rep.add_rmsnorm_fused == 1, "{rep:?}");
+        assert!(rep.elementwise_absorbed >= 1, "{rep:?}");
+        assert!(rep.branch_merges >= 1, "{rep:?}");
+        assert!(live_kernel_count(&g) < before);
+        g.validate().unwrap();
+    }
+}

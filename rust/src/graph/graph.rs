@@ -1,0 +1,366 @@
+//! DAG container + fluent builder.
+
+use crate::error::{DriftError, Result};
+use crate::graph::infer;
+use crate::graph::op::{BinOp, EwOp, OpKind, WeightInfo};
+use crate::tensor::{DType, Shape, WeightShape};
+
+/// Node identifier (index into `Graph::nodes`).
+pub type NodeId = usize;
+
+/// One operator node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<NodeId>,
+    /// Inferred output shape.
+    pub shape: Shape,
+    /// Output activation dtype.
+    pub dtype: DType,
+    /// Weights consumed by this node (conv / FC / embedding).
+    pub weight: Option<WeightInfo>,
+    /// Fused elementwise epilogue (populated by the fusion pass).
+    pub epilogue: Vec<EwOp>,
+    /// Extra fused binary inputs (residual adds merged into this kernel);
+    /// each entry is `(node, op)` — the node's output is combined into this
+    /// node's output inside the same kernel.
+    pub fused_adds: Vec<(NodeId, BinOp)>,
+    /// If set, this node's output is produced *inside* the kernel of the
+    /// referenced node (secondary output / zero-cost view): it owns no
+    /// kernel launch and no compute cost, but may still own a buffer.
+    pub absorbed_into: Option<NodeId>,
+}
+
+/// An operator DAG in topological insertion order.
+///
+/// Nodes are appended by the builder methods; each node's inputs must
+/// already exist, so insertion order is a valid execution order (verified
+/// by [`Graph::validate`]).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Graph { name: name.to_string(), ..Default::default() }
+    }
+
+    fn push(&mut self, name: &str, kind: OpKind, inputs: Vec<NodeId>, weight: Option<WeightInfo>) -> Result<NodeId> {
+        let id = self.nodes.len();
+        for &i in &inputs {
+            if i >= id {
+                return Err(DriftError::Graph(format!(
+                    "node {name}: input {i} does not precede node {id}"
+                )));
+            }
+        }
+        let in_shapes: Vec<Shape> = inputs.iter().map(|&i| self.nodes[i].shape).collect();
+        let shape = infer::infer_shape(&kind, &in_shapes, weight.as_ref())
+            .map_err(|e| DriftError::Shape(format!("node {name}: {e}")))?;
+        let dtype = infer::infer_dtype(&kind, &inputs.iter().map(|&i| self.nodes[i].dtype).collect::<Vec<_>>());
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            kind,
+            inputs,
+            shape,
+            dtype,
+            weight,
+            epilogue: Vec::new(),
+            fused_adds: Vec::new(),
+            absorbed_into: None,
+        });
+        Ok(id)
+    }
+
+    // ---- builder methods -------------------------------------------------
+
+    pub fn input(&mut self, name: &str, shape: Shape, dtype: DType) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            kind: OpKind::Input,
+            inputs: vec![],
+            shape,
+            dtype,
+            weight: None,
+            epilogue: Vec::new(),
+            fused_adds: Vec::new(),
+            absorbed_into: None,
+        });
+        id
+    }
+
+    pub fn constant(&mut self, name: &str, shape: Shape, dtype: DType) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            kind: OpKind::Const,
+            inputs: vec![],
+            shape,
+            dtype,
+            weight: None,
+            epilogue: Vec::new(),
+            fused_adds: Vec::new(),
+            absorbed_into: None,
+        });
+        id
+    }
+
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        x: NodeId,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        wdtype: DType,
+    ) -> Result<NodeId> {
+        let in_c = self.nodes[x].shape.c;
+        let weight = WeightInfo { shape: WeightShape::ohwi(out_c, k, k, in_c), dtype: wdtype };
+        self.push(name, OpKind::Conv2D { out_c, kh: k, kw: k, stride, pad }, vec![x], Some(weight))
+    }
+
+    pub fn fully_connected(&mut self, name: &str, x: NodeId, out_c: usize, wdtype: DType) -> Result<NodeId> {
+        let in_c = self.nodes[x].shape.c;
+        let weight = WeightInfo { shape: WeightShape::fc(out_c, in_c), dtype: wdtype };
+        self.push(name, OpKind::FullyConnected { out_c }, vec![x], Some(weight))
+    }
+
+    pub fn matmul(&mut self, name: &str, a: NodeId, b: NodeId, transpose_b: bool) -> Result<NodeId> {
+        self.push(name, OpKind::MatMul { transpose_b }, vec![a, b], None)
+    }
+
+    pub fn unary(&mut self, name: &str, x: NodeId, op: EwOp) -> Result<NodeId> {
+        self.push(name, OpKind::Elementwise(op), vec![x], None)
+    }
+
+    pub fn binary(&mut self, name: &str, a: NodeId, b: NodeId, op: BinOp) -> Result<NodeId> {
+        self.push(name, OpKind::Binary(op), vec![a, b], None)
+    }
+
+    pub fn rms_norm(&mut self, name: &str, x: NodeId) -> Result<NodeId> {
+        self.push(name, OpKind::RmsNorm { eps: 1e-6 }, vec![x], None)
+    }
+
+    pub fn layer_norm(&mut self, name: &str, x: NodeId) -> Result<NodeId> {
+        self.push(name, OpKind::LayerNorm { eps: 1e-5 }, vec![x], None)
+    }
+
+    pub fn group_norm(&mut self, name: &str, x: NodeId, groups: usize) -> Result<NodeId> {
+        self.push(name, OpKind::GroupNorm { groups, eps: 1e-5 }, vec![x], None)
+    }
+
+    pub fn softmax(&mut self, name: &str, x: NodeId) -> Result<NodeId> {
+        self.push(name, OpKind::Softmax, vec![x], None)
+    }
+
+    pub fn rope(&mut self, name: &str, x: NodeId) -> Result<NodeId> {
+        self.push(name, OpKind::Rope { theta: 10000.0 }, vec![x], None)
+    }
+
+    pub fn reshape(&mut self, name: &str, x: NodeId, out: Shape) -> Result<NodeId> {
+        self.push(name, OpKind::Reshape { out }, vec![x], None)
+    }
+
+    pub fn transpose(&mut self, name: &str, x: NodeId, perm: [usize; 5]) -> Result<NodeId> {
+        self.push(name, OpKind::Transpose { perm }, vec![x], None)
+    }
+
+    pub fn concat(&mut self, name: &str, inputs: Vec<NodeId>, axis: usize) -> Result<NodeId> {
+        self.push(name, OpKind::Concat { axis }, inputs, None)
+    }
+
+    pub fn embedding(&mut self, name: &str, ids: NodeId, vocab: usize, dim: usize, wdtype: DType) -> Result<NodeId> {
+        let weight = WeightInfo { shape: WeightShape::fc(vocab, dim), dtype: wdtype };
+        self.push(name, OpKind::Embedding { vocab, dim }, vec![ids], Some(weight))
+    }
+
+    pub fn upsample2x(&mut self, name: &str, x: NodeId) -> Result<NodeId> {
+        self.push(name, OpKind::Upsample2x, vec![x], None)
+    }
+
+    pub fn avg_pool(&mut self, name: &str, x: NodeId, k: usize) -> Result<NodeId> {
+        self.push(name, OpKind::AvgPool { k }, vec![x], None)
+    }
+
+    pub fn quant_act(&mut self, name: &str, x: NodeId) -> Result<NodeId> {
+        self.push(name, OpKind::QuantAct, vec![x], None)
+    }
+
+    pub fn fused_add_rms_norm(&mut self, name: &str, residual: NodeId, x: NodeId) -> Result<NodeId> {
+        self.push(name, OpKind::FusedAddRmsNorm { eps: 1e-6 }, vec![residual, x], None)
+    }
+
+    pub fn fused_qkv_rope(
+        &mut self,
+        name: &str,
+        qkv: NodeId,
+        heads_q: usize,
+        heads_kv: usize,
+        head_dim: usize,
+    ) -> Result<NodeId> {
+        self.push(name, OpKind::FusedQkvRope { heads_q, heads_kv, head_dim }, vec![qkv], None)
+    }
+
+    /// Mark a node as a graph output.
+    pub fn output(&mut self, id: NodeId) {
+        if !self.outputs.contains(&id) {
+            self.outputs.push(id);
+        }
+    }
+
+    // ---- queries ----------------------------------------------------------
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Consumers of each node (adjacency reversed).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                cons[i].push(n.id);
+            }
+        }
+        cons
+    }
+
+    /// Count of compute nodes (kernel launches before fusion).
+    pub fn compute_node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind.is_compute()).count()
+    }
+
+    /// Total weight bytes across the graph.
+    pub fn weight_bytes(&self) -> usize {
+        self.nodes.iter().filter_map(|n| n.weight.as_ref()).map(|w| w.bytes()).sum()
+    }
+
+    /// Validate DAG invariants: inputs precede nodes, outputs exist, and
+    /// every non-input node has the right arity.
+    pub fn validate(&self) -> Result<()> {
+        for (idx, n) in self.nodes.iter().enumerate() {
+            if n.id != idx {
+                return Err(DriftError::Graph(format!("node {idx} has id {}", n.id)));
+            }
+            for &i in &n.inputs {
+                if i >= idx {
+                    return Err(DriftError::Graph(format!(
+                        "node {} ({}) depends on later node {i}",
+                        n.name, idx
+                    )));
+                }
+            }
+            let arity_ok = match &n.kind {
+                OpKind::Input | OpKind::Const => n.inputs.is_empty(),
+                OpKind::Binary(_) | OpKind::MatMul { .. } | OpKind::FusedAddRmsNorm { .. } => {
+                    n.inputs.len() == 2
+                }
+                OpKind::Concat { .. } => n.inputs.len() >= 2,
+                _ => n.inputs.len() == 1,
+            };
+            if !arity_ok {
+                return Err(DriftError::Graph(format!(
+                    "node {} ({}) has wrong arity {}",
+                    n.name,
+                    n.kind.name(),
+                    n.inputs.len()
+                )));
+            }
+        }
+        for &o in &self.outputs {
+            if o >= self.nodes.len() {
+                return Err(DriftError::Graph(format!("output {o} out of range")));
+            }
+        }
+        if self.outputs.is_empty() {
+            return Err(DriftError::Graph("graph has no outputs".into()));
+        }
+        Ok(())
+    }
+
+    /// One-line-per-node dump for debugging and the `plan` CLI command.
+    pub fn dump(&self) -> String {
+        let mut s = format!("graph {} ({} nodes, {} outputs)\n", self.name, self.nodes.len(), self.outputs.len());
+        for n in &self.nodes {
+            let ins: Vec<String> = n.inputs.iter().map(|i| i.to_string()).collect();
+            let w = n
+                .weight
+                .as_ref()
+                .map(|w| format!(" w={}x{}x{}x{} {}", w.shape.o, w.shape.h, w.shape.w, w.shape.i, w.dtype))
+                .unwrap_or_default();
+            let ep = if n.epilogue.is_empty() { String::new() } else { format!(" +{} epilogue", n.epilogue.len()) };
+            s.push_str(&format!(
+                "  [{:>3}] {:<24} {:<18} in=[{}] out={}{}{}\n",
+                n.id,
+                n.name,
+                n.kind.name(),
+                ins.join(","),
+                n.shape,
+                w,
+                ep
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_small_mlp() {
+        let mut g = Graph::new("mlp");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let h = g.fully_connected("fc1", x, 256, DType::I8).unwrap();
+        let h = g.unary("gelu", h, EwOp::Gelu).unwrap();
+        let y = g.fully_connected("fc2", h, 64, DType::I8).unwrap();
+        g.output(y);
+        g.validate().unwrap();
+        assert_eq!(g.node(y).shape, Shape::bhwc(1, 1, 8, 64));
+        assert_eq!(g.compute_node_count(), 3);
+        assert_eq!(g.weight_bytes(), 64 * 256 + 256 * 64);
+    }
+
+    #[test]
+    fn rejects_missing_outputs() {
+        let mut g = Graph::new("empty");
+        g.input("x", Shape::linear(4), DType::F32);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn consumers_reversed_edges() {
+        let mut g = Graph::new("g");
+        let x = g.input("x", Shape::bhwc(1, 1, 4, 8), DType::F16);
+        let a = g.unary("a", x, EwOp::Relu).unwrap();
+        let b = g.unary("b", x, EwOp::Gelu).unwrap();
+        let c = g.binary("c", a, b, BinOp::Add).unwrap();
+        g.output(c);
+        let cons = g.consumers();
+        assert_eq!(cons[x], vec![a, b]);
+        assert_eq!(cons[a], vec![c]);
+        assert!(cons[c].is_empty());
+    }
+
+    #[test]
+    fn dump_contains_nodes() {
+        let mut g = Graph::new("d");
+        let x = g.input("x", Shape::bhwc(1, 1, 4, 8), DType::F16);
+        let y = g.softmax("sm", x).unwrap();
+        g.output(y);
+        let d = g.dump();
+        assert!(d.contains("softmax"));
+        assert!(d.contains("(1,1,4,8)"));
+    }
+}

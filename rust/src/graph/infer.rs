@@ -1,0 +1,277 @@
+//! Shape and dtype inference for every operator.
+
+use crate::graph::op::{OpKind, WeightInfo};
+use crate::tensor::{DType, Shape};
+
+/// Infer the output shape of `kind` given input shapes (and weights where
+/// relevant). Returns a human-readable error string on mismatch (wrapped
+/// into `DriftError::Shape` by the builder).
+pub fn infer_shape(
+    kind: &OpKind,
+    inputs: &[Shape],
+    weight: Option<&WeightInfo>,
+) -> Result<Shape, String> {
+    let one = |name: &str| -> Result<Shape, String> {
+        inputs.first().copied().ok_or_else(|| format!("{name} needs an input"))
+    };
+    match kind {
+        OpKind::Input | OpKind::Const => Err("inputs/consts are created directly".into()),
+
+        OpKind::Conv2D { out_c, kh, kw, stride, pad } => {
+            let x = one("conv2d")?;
+            let w = weight.ok_or("conv2d needs weights")?;
+            if w.shape.i != x.c {
+                return Err(format!("conv2d weight I={} != input C={}", w.shape.i, x.c));
+            }
+            if w.shape.o != *out_c || w.shape.h != *kh || w.shape.w != *kw {
+                return Err("conv2d weight shape inconsistent with attributes".into());
+            }
+            let oh = (x.h + 2 * pad).checked_sub(*kh).ok_or("conv2d kernel larger than padded input")? / stride + 1;
+            let ow = (x.w + 2 * pad).checked_sub(*kw).ok_or("conv2d kernel larger than padded input")? / stride + 1;
+            Ok(Shape::bhwc(x.b, oh, ow, *out_c))
+        }
+
+        OpKind::FullyConnected { out_c } => {
+            let x = one("fully_connected")?;
+            let w = weight.ok_or("fully_connected needs weights")?;
+            if w.shape.i != x.c {
+                return Err(format!("fc weight I={} != input C={}", w.shape.i, x.c));
+            }
+            Ok(Shape { c: *out_c, ..x })
+        }
+
+        OpKind::MatMul { transpose_b } => {
+            let (a, b) = (inputs[0], inputs[1]);
+            if a.b != b.b || a.h != b.h || a.d != b.d {
+                return Err(format!("matmul batch dims mismatch: {a} vs {b}"));
+            }
+            // A: (B,1,M,K) as w=M, c=K. B: (B,1,K,N) or transposed (B,1,N,K).
+            let (k_b, n) = if *transpose_b { (b.c, b.w) } else { (b.w, b.c) };
+            if a.c != k_b {
+                return Err(format!("matmul K mismatch: A K={} vs B K={k_b}", a.c));
+            }
+            Ok(Shape::bhwc(a.b, a.h, a.w, n))
+        }
+
+        OpKind::Elementwise(_) | OpKind::QuantAct => one("elementwise"),
+
+        OpKind::Binary(_) => {
+            let (a, b) = (inputs[0], inputs[1]);
+            if a != b {
+                return Err(format!("binary op shape mismatch: {a} vs {b}"));
+            }
+            Ok(a)
+        }
+
+        OpKind::RmsNorm { .. } | OpKind::LayerNorm { .. } | OpKind::Softmax => one("norm"),
+
+        OpKind::GroupNorm { groups, .. } => {
+            let x = one("group_norm")?;
+            if x.c % groups != 0 {
+                return Err(format!("group_norm: C={} not divisible by groups={groups}", x.c));
+            }
+            Ok(x)
+        }
+
+        OpKind::Rope { .. } => {
+            let x = one("rope")?;
+            if x.c % 2 != 0 {
+                return Err("rope needs even channel count".into());
+            }
+            Ok(x)
+        }
+
+        OpKind::Reshape { out } => {
+            let x = one("reshape")?;
+            if x.elements() != out.elements() {
+                return Err(format!(
+                    "reshape element count mismatch: {x} ({}) vs {out} ({})",
+                    x.elements(),
+                    out.elements()
+                ));
+            }
+            Ok(*out)
+        }
+
+        OpKind::Transpose { perm } => {
+            let x = one("transpose")?;
+            let mut sorted = *perm;
+            sorted.sort();
+            if sorted != [0, 1, 2, 3, 4] {
+                return Err(format!("transpose perm {perm:?} is not a permutation"));
+            }
+            let dims = [x.b, x.h, x.w, x.d, x.c];
+            Ok(Shape {
+                b: dims[perm[0]],
+                h: dims[perm[1]],
+                w: dims[perm[2]],
+                d: dims[perm[3]],
+                c: dims[perm[4]],
+                rank: 5,
+            })
+        }
+
+        OpKind::Concat { axis } => {
+            if *axis > 4 {
+                return Err(format!("concat axis {axis} out of range"));
+            }
+            let first = inputs[0];
+            let mut total = 0;
+            for s in inputs {
+                let dims_a = [s.b, s.h, s.w, s.d, s.c];
+                let dims_f = [first.b, first.h, first.w, first.d, first.c];
+                for ax in 0..5 {
+                    if ax != *axis && dims_a[ax] != dims_f[ax] {
+                        return Err(format!("concat: non-axis dims differ: {first} vs {s}"));
+                    }
+                }
+                total += dims_a[*axis];
+            }
+            let mut dims = [first.b, first.h, first.w, first.d, first.c];
+            dims[*axis] = total;
+            Ok(Shape { b: dims[0], h: dims[1], w: dims[2], d: dims[3], c: dims[4], rank: first.rank })
+        }
+
+        OpKind::Embedding { dim, .. } => {
+            let ids = one("embedding")?;
+            Ok(Shape::bhwc(ids.b, ids.h.max(1), ids.w, *dim))
+        }
+
+        OpKind::Upsample2x => {
+            let x = one("upsample2x")?;
+            Ok(Shape { h: x.h * 2, w: x.w * 2, ..x })
+        }
+
+        OpKind::AvgPool { k } => {
+            let x = one("avg_pool")?;
+            if x.h % k != 0 || x.w % k != 0 {
+                return Err(format!("avg_pool: {x} not divisible by k={k}"));
+            }
+            Ok(Shape { h: x.h / k, w: x.w / k, ..x })
+        }
+
+        OpKind::FusedAddRmsNorm { .. } => {
+            let (a, b) = (inputs[0], inputs[1]);
+            if a != b {
+                return Err(format!("fused_add_rms_norm shape mismatch: {a} vs {b}"));
+            }
+            Ok(a)
+        }
+
+        OpKind::FusedQkvRope { heads_q, heads_kv, head_dim } => {
+            let x = one("fused_qkv_rope")?;
+            let packed = (heads_q + 2 * heads_kv) * head_dim;
+            if x.c != packed {
+                return Err(format!(
+                    "fused_qkv_rope: input C={} != (h_q + 2·h_kv)·d_h = {packed}",
+                    x.c
+                ));
+            }
+            // Paper §3.6: Q emerges as (B·h_kv, S·h_q/h_kv, d_h).
+            let s = x.w;
+            Ok(Shape::bhwc(x.b * heads_kv, 1, s * heads_q / heads_kv, *head_dim))
+        }
+    }
+}
+
+/// Output dtype: quantizing ops emit I8; everything else propagates the
+/// first input's dtype.
+pub fn infer_dtype(kind: &OpKind, input_dtypes: &[DType]) -> DType {
+    match kind {
+        OpKind::QuantAct => DType::I8,
+        OpKind::Embedding { .. } => DType::F16,
+        _ => input_dtypes.first().copied().unwrap_or(DType::F16),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::WeightShape;
+
+    fn wi(o: usize, h: usize, w: usize, i: usize) -> WeightInfo {
+        WeightInfo { shape: WeightShape::ohwi(o, h, w, i), dtype: DType::F16 }
+    }
+
+    #[test]
+    fn conv_same_padding() {
+        let kind = OpKind::Conv2D { out_c: 320, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let out = infer_shape(&kind, &[Shape::bhwc(1, 64, 64, 4)], Some(&wi(320, 3, 3, 4))).unwrap();
+        assert_eq!(out, Shape::bhwc(1, 64, 64, 320));
+    }
+
+    #[test]
+    fn conv_stride_two() {
+        let kind = OpKind::Conv2D { out_c: 8, kh: 3, kw: 3, stride: 2, pad: 1 };
+        let out = infer_shape(&kind, &[Shape::bhwc(1, 64, 64, 4)], Some(&wi(8, 3, 3, 4))).unwrap();
+        assert_eq!(out, Shape::bhwc(1, 32, 32, 8));
+    }
+
+    #[test]
+    fn conv_channel_mismatch_rejected() {
+        let kind = OpKind::Conv2D { out_c: 8, kh: 3, kw: 3, stride: 1, pad: 1 };
+        assert!(infer_shape(&kind, &[Shape::bhwc(1, 8, 8, 5)], Some(&wi(8, 3, 3, 4))).is_err());
+    }
+
+    #[test]
+    fn matmul_shapes() {
+        // (1,1,128,64) × (1,1,64,256) → (1,1,128,256)
+        let out = infer_shape(
+            &OpKind::MatMul { transpose_b: false },
+            &[Shape::bhwc(1, 1, 128, 64), Shape::bhwc(1, 1, 64, 256)],
+            None,
+        )
+        .unwrap();
+        assert_eq!(out, Shape::bhwc(1, 1, 128, 256));
+        // transposed B: (1,1,256,64)
+        let out = infer_shape(
+            &OpKind::MatMul { transpose_b: true },
+            &[Shape::bhwc(1, 1, 128, 64), Shape::bhwc(1, 1, 256, 64)],
+            None,
+        )
+        .unwrap();
+        assert_eq!(out, Shape::bhwc(1, 1, 128, 256));
+    }
+
+    #[test]
+    fn qkv_rope_paper_layout() {
+        // Gemma2-2B-like: h_q=8, h_kv=4, d_h=256, S=128.
+        let kind = OpKind::FusedQkvRope { heads_q: 8, heads_kv: 4, head_dim: 256 };
+        let packed_c = (8 + 2 * 4) * 256;
+        let out = infer_shape(&kind, &[Shape::bhwc(1, 1, 128, packed_c)], None).unwrap();
+        // (B·h_kv, S·h_q/h_kv, d_h) = (4, 256, 256)
+        assert_eq!(out, Shape::bhwc(4, 1, 128 * 2, 256));
+    }
+
+    #[test]
+    fn transpose_and_reshape() {
+        let out = infer_shape(
+            &OpKind::Transpose { perm: [0, 2, 1, 3, 4] },
+            &[Shape::bhwdc(2, 3, 4, 1, 5)],
+            None,
+        )
+        .unwrap();
+        assert_eq!((out.h, out.w), (4, 3));
+        assert!(infer_shape(
+            &OpKind::Reshape { out: Shape::linear(10) },
+            &[Shape::bhwc(1, 1, 3, 4)],
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn concat_axis_checks() {
+        let a = Shape::bhwc(1, 4, 4, 8);
+        let b = Shape::bhwc(1, 4, 4, 16);
+        let out = infer_shape(&OpKind::Concat { axis: 4 }, &[a, b], None).unwrap();
+        assert_eq!(out.c, 24);
+        assert!(infer_shape(&OpKind::Concat { axis: 1 }, &[a, b], None).is_err());
+    }
+
+    #[test]
+    fn quant_act_emits_i8() {
+        assert_eq!(infer_dtype(&OpKind::QuantAct, &[DType::F16]), DType::I8);
+        assert_eq!(infer_dtype(&OpKind::Softmax, &[DType::F32]), DType::F32);
+    }
+}

@@ -1,0 +1,566 @@
+//! Host graph interpreter: execute a (possibly fused) graph numerically.
+//!
+//! This is the compiler's semantic oracle. Shader execution is simulated
+//! in this reproduction, so the interpreter is what makes graph-level
+//! transformations *testable as math*, not just as shapes:
+//!
+//! * **Fusion equivalence** — a fused graph must produce the same values
+//!   as the unfused one (`tests` below run both and compare), covering
+//!   the elementwise/branch/residual+RMSNorm passes of §3.6.
+//! * **Quantization semantics** — quantized weight dtypes are
+//!   quantize-dequantized through [`crate::quant`], so the interpreter
+//!   reproduces deployment numerics, and `QuantAct` performs the real
+//!   §3.7 dynamic activation quantization round-trip.
+//!
+//! Weights come from a seeded [`WeightStore`] keyed by node name, so two
+//! structurally-different-but-equivalent graphs see identical parameters.
+
+use std::collections::HashMap;
+
+use crate::error::{DriftError, Result};
+use crate::graph::op::{BinOp, EwOp, OpKind};
+use crate::graph::{Graph, NodeId};
+use crate::quant::{dequantize_i4, dequantize_i8, quantize_i4, quantize_i8};
+use crate::tensor::{DType, HostTensor, Shape};
+use crate::util::rng::Pcg32;
+
+/// Deterministic weight provider: weights are generated from the node
+/// name's hash so equivalent nodes in different graphs agree.
+pub struct WeightStore {
+    seed: u64,
+    cache: HashMap<String, Vec<f32>>,
+}
+
+impl WeightStore {
+    pub fn new(seed: u64) -> Self {
+        WeightStore { seed, cache: HashMap::new() }
+    }
+
+    fn name_seed(&self, name: &str) -> u64 {
+        // FNV-1a over the name, mixed with the store seed.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in name.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h ^ self.seed
+    }
+
+    /// Raw f32 weights for a node (`rows = O`, `cols = H·W·D·I`), scaled
+    /// small so deep graphs stay numerically tame.
+    pub fn weights(&mut self, name: &str, rows: usize, cols: usize) -> &[f32] {
+        let seed = self.name_seed(name);
+        self.cache.entry(name.to_string()).or_insert_with(|| {
+            let mut rng = Pcg32::seeded(seed);
+            (0..rows * cols).map(|_| (rng.gen_f32() * 2.0 - 1.0) * 0.1).collect()
+        })
+    }
+
+    /// Weights after the deployment quantization round-trip for `dtype`.
+    pub fn deployed_weights(
+        &mut self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        dtype: DType,
+    ) -> Result<Vec<f32>> {
+        let w = self.weights(name, rows, cols).to_vec();
+        Ok(match dtype {
+            DType::I8 => dequantize_i8(&quantize_i8(rows, cols, &w)?),
+            DType::I4 => dequantize_i4(&quantize_i4(rows, cols, &w)?),
+            _ => w,
+        })
+    }
+}
+
+/// Execute `g` with the given input feeds; returns the values of
+/// `g.outputs` in order.
+pub fn execute(
+    g: &Graph,
+    feeds: &HashMap<String, HostTensor>,
+    store: &mut WeightStore,
+) -> Result<Vec<HostTensor>> {
+    g.validate()?;
+    let mut values: Vec<Option<HostTensor>> = vec![None; g.nodes.len()];
+    for n in &g.nodes {
+        let val = |id: NodeId| -> Result<&HostTensor> {
+            values[id]
+                .as_ref()
+                .ok_or_else(|| DriftError::Graph(format!("node {id} evaluated out of order")))
+        };
+        let mut out = match &n.kind {
+            OpKind::Input => feeds
+                .get(&n.name)
+                .cloned()
+                .ok_or_else(|| DriftError::Graph(format!("missing feed for input {}", n.name)))?,
+            OpKind::Const => HostTensor::zeros(n.shape),
+            OpKind::FullyConnected { out_c } => {
+                let x = val(n.inputs[0])?;
+                let wi = n.weight.expect("fc weights");
+                let w = store.deployed_weights(&n.name, *out_c, wi.shape.i, wi.dtype)?;
+                fully_connected(x, &w, *out_c)
+            }
+            OpKind::Conv2D { out_c, kh, kw, stride, pad } => {
+                let x = val(n.inputs[0])?;
+                let wi = n.weight.expect("conv weights");
+                let w = store.deployed_weights(
+                    &n.name,
+                    *out_c,
+                    kh * kw * wi.shape.i,
+                    wi.dtype,
+                )?;
+                conv2d(x, &w, *out_c, *kh, *kw, *stride, *pad)
+            }
+            OpKind::MatMul { transpose_b } => {
+                matmul(val(n.inputs[0])?, val(n.inputs[1])?, *transpose_b)
+            }
+            OpKind::Elementwise(op) => unary(val(n.inputs[0])?, *op),
+            OpKind::Binary(op) => binary(val(n.inputs[0])?, val(n.inputs[1])?, *op),
+            OpKind::RmsNorm { eps } => rms_norm(val(n.inputs[0])?, *eps),
+            OpKind::FusedAddRmsNorm { eps } => {
+                let sum = binary(val(n.inputs[0])?, val(n.inputs[1])?, BinOp::Add);
+                rms_norm(&sum, *eps)
+            }
+            OpKind::LayerNorm { eps } => layer_norm(val(n.inputs[0])?, *eps),
+            OpKind::Softmax => softmax(val(n.inputs[0])?),
+            OpKind::Rope { theta } => rope(val(n.inputs[0])?, *theta),
+            OpKind::Reshape { out } => {
+                HostTensor::from_vec(*out, val(n.inputs[0])?.data.clone())?
+            }
+            OpKind::QuantAct => quant_act(val(n.inputs[0])?),
+            OpKind::Upsample2x => upsample2x(val(n.inputs[0])?),
+            OpKind::AvgPool { k } => avg_pool(val(n.inputs[0])?, *k),
+            other => {
+                return Err(DriftError::Graph(format!(
+                    "interpreter does not implement {} (node {})",
+                    other.name(),
+                    n.name
+                )))
+            }
+        };
+        // Fused state on live kernels: consumers read the post-epilogue
+        // value from this node's buffer.
+        for (other, op) in &n.fused_adds {
+            out = binary(&out, val(*other)?, *op);
+        }
+        for e in &n.epilogue {
+            out = unary(&out, *e);
+        }
+        values[n.id] = Some(out);
+    }
+    g.outputs
+        .iter()
+        .map(|&o| {
+            values[o]
+                .clone()
+                .ok_or_else(|| DriftError::Graph(format!("output {o} not evaluated")))
+        })
+        .collect()
+}
+
+// ---- op kernels (reference semantics) -----------------------------------
+
+fn fully_connected(x: &HostTensor, w: &[f32], out_c: usize) -> HostTensor {
+    let s = x.shape;
+    let in_c = s.c;
+    let rows = s.elements() / in_c;
+    let mut out = vec![0f32; rows * out_c];
+    for r in 0..rows {
+        for o in 0..out_c {
+            let mut acc = 0f32;
+            for i in 0..in_c {
+                acc += x.data[r * in_c + i] * w[o * in_c + i];
+            }
+            out[r * out_c + o] = acc;
+        }
+    }
+    HostTensor::from_vec(Shape { c: out_c, ..s }, out).unwrap()
+}
+
+fn conv2d(
+    x: &HostTensor,
+    w: &[f32],
+    out_c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> HostTensor {
+    let s = x.shape;
+    let (oh, ow) = ((s.h + 2 * pad - kh) / stride + 1, (s.w + 2 * pad - kw) / stride + 1);
+    let out_shape = Shape::bhwc(s.b, oh, ow, out_c);
+    let mut out = HostTensor::zeros(out_shape);
+    for b in 0..s.b {
+        for y in 0..oh {
+            for xx in 0..ow {
+                for o in 0..out_c {
+                    let mut acc = 0f32;
+                    for ky in 0..kh {
+                        let iy = (y * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= s.h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (xx * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= s.w as isize {
+                                continue;
+                            }
+                            for i in 0..s.c {
+                                // w layout: (O, KH, KW, I) row-major.
+                                acc += x.get(b, iy as usize, ix as usize, 0, i)
+                                    * w[((o * kh + ky) * kw + kx) * s.c + i];
+                            }
+                        }
+                    }
+                    out.set(b, y, xx, 0, o, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn matmul(a: &HostTensor, b: &HostTensor, transpose_b: bool) -> HostTensor {
+    let (sa, sb) = (a.shape, b.shape);
+    let (m, k) = (sa.w, sa.c);
+    let n = if transpose_b { sb.w } else { sb.c };
+    let out_shape = Shape::bhwc(sa.b, sa.h, m, n);
+    let mut out = HostTensor::zeros(out_shape);
+    for bi in 0..sa.b {
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut acc = 0f32;
+                for ki in 0..k {
+                    let bv = if transpose_b {
+                        b.get(bi, 0, ni, 0, ki)
+                    } else {
+                        b.get(bi, 0, ki, 0, ni)
+                    };
+                    acc += a.get(bi, 0, mi, 0, ki) * bv;
+                }
+                out.set(bi, 0, mi, 0, ni, acc);
+            }
+        }
+    }
+    out
+}
+
+fn unary(x: &HostTensor, op: EwOp) -> HostTensor {
+    let f = |v: f32| -> f32 {
+        match op {
+            EwOp::Relu => v.max(0.0),
+            EwOp::Gelu => 0.5 * v * (1.0 + ((2.0 / std::f32::consts::PI).sqrt() * (v + 0.044715 * v * v * v)).tanh()),
+            EwOp::Silu => v / (1.0 + (-v).exp()),
+            EwOp::Tanh => v.tanh(),
+            EwOp::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+            EwOp::Exp => v.exp(),
+            EwOp::Rsqrt => 1.0 / v.sqrt(),
+            EwOp::Neg => -v,
+            EwOp::Scale(s) => v * s,
+            EwOp::Offset(o) => v + o,
+        }
+    };
+    HostTensor::from_vec(x.shape, x.data.iter().map(|v| f(*v)).collect()).unwrap()
+}
+
+fn binary(a: &HostTensor, b: &HostTensor, op: BinOp) -> HostTensor {
+    let f = |x: f32, y: f32| match op {
+        BinOp::Add => x + y,
+        BinOp::Sub => x - y,
+        BinOp::Mul => x * y,
+        BinOp::Div => x / y,
+    };
+    HostTensor::from_vec(
+        a.shape,
+        a.data.iter().zip(&b.data).map(|(x, y)| f(*x, *y)).collect(),
+    )
+    .unwrap()
+}
+
+fn per_row<F: Fn(&[f32], &mut [f32])>(x: &HostTensor, f: F) -> HostTensor {
+    let c = x.shape.c;
+    let mut out = vec![0f32; x.data.len()];
+    for (xr, or) in x.data.chunks(c).zip(out.chunks_mut(c)) {
+        f(xr, or);
+    }
+    HostTensor::from_vec(x.shape, out).unwrap()
+}
+
+fn rms_norm(x: &HostTensor, eps: f32) -> HostTensor {
+    per_row(x, |xr, or| {
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / xr.len() as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (o, v) in or.iter_mut().zip(xr) {
+            *o = v * inv;
+        }
+    })
+}
+
+fn layer_norm(x: &HostTensor, eps: f32) -> HostTensor {
+    per_row(x, |xr, or| {
+        let mean = xr.iter().sum::<f32>() / xr.len() as f32;
+        let var = xr.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / xr.len() as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (o, v) in or.iter_mut().zip(xr) {
+            *o = (v - mean) * inv;
+        }
+    })
+}
+
+fn softmax(x: &HostTensor) -> HostTensor {
+    per_row(x, |xr, or| {
+        let m = xr.iter().cloned().fold(f32::MIN, f32::max);
+        let mut sum = 0.0;
+        for (o, v) in or.iter_mut().zip(xr) {
+            *o = (v - m).exp();
+            sum += *o;
+        }
+        for o in or.iter_mut() {
+            *o /= sum;
+        }
+    })
+}
+
+fn rope(x: &HostTensor, theta: f32) -> HostTensor {
+    // Positions run along W; rotate (even, odd) halves of C.
+    let s = x.shape;
+    let half = s.c / 2;
+    let mut out = HostTensor::zeros(s);
+    for b in 0..s.b {
+        for t in 0..s.w {
+            for j in 0..half {
+                let freq = 1.0 / theta.powf(j as f32 / half as f32);
+                let (sin, cos) = (t as f32 * freq).sin_cos();
+                let x1 = x.get(b, 0, t, 0, j);
+                let x2 = x.get(b, 0, t, 0, j + half);
+                out.set(b, 0, t, 0, j, x1 * cos - x2 * sin);
+                out.set(b, 0, t, 0, j + half, x1 * sin + x2 * cos);
+            }
+        }
+    }
+    out
+}
+
+fn quant_act(x: &HostTensor) -> HostTensor {
+    // Dynamic per-row int8 quantize + dequantize (§3.7 round-trip).
+    per_row(x, |xr, or| {
+        let absmax = xr.iter().fold(0f32, |m, v| m.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        for (o, v) in or.iter_mut().zip(xr) {
+            *o = (v / scale).round().clamp(-127.0, 127.0) * scale;
+        }
+    })
+}
+
+fn upsample2x(x: &HostTensor) -> HostTensor {
+    let s = x.shape;
+    let mut out = HostTensor::zeros(Shape { h: s.h * 2, w: s.w * 2, ..s });
+    for b in 0..s.b {
+        for y in 0..s.h * 2 {
+            for xx in 0..s.w * 2 {
+                for c in 0..s.c {
+                    let v = x.get(b, y / 2, xx / 2, 0, c);
+                    out.set(b, y, xx, 0, c, v);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn avg_pool(x: &HostTensor, k: usize) -> HostTensor {
+    let s = x.shape;
+    let mut out = HostTensor::zeros(Shape { h: s.h / k, w: s.w / k, ..s });
+    let inv = 1.0 / (k * k) as f32;
+    for b in 0..s.b {
+        for y in 0..s.h / k {
+            for xx in 0..s.w / k {
+                for c in 0..s.c {
+                    let mut acc = 0f32;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            acc += x.get(b, y * k + dy, xx * k + dx, 0, c);
+                        }
+                    }
+                    out.set(b, y, xx, 0, c, acc * inv);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::passes::fuse_all;
+    use crate::graph::Graph;
+    use crate::util::propcheck::assert_close;
+
+    fn feed(name: &str, t: HostTensor) -> HashMap<String, HostTensor> {
+        let mut m = HashMap::new();
+        m.insert(name.to_string(), t);
+        m
+    }
+
+    fn run(g: &Graph, feeds: &HashMap<String, HostTensor>) -> Vec<HostTensor> {
+        let mut store = WeightStore::new(99);
+        execute(g, feeds, &mut store).unwrap()
+    }
+
+    /// The key property: fusion must not change the computed values.
+    fn assert_fusion_equivalent(mut g: Graph, feeds: HashMap<String, HostTensor>) {
+        let unfused = run(&g, &feeds);
+        fuse_all(&mut g, None);
+        let fused = run(&g, &feeds);
+        assert_eq!(unfused.len(), fused.len());
+        for (a, b) in unfused.iter().zip(&fused) {
+            assert_close(&a.data, &b.data, 1e-5, 1e-5)
+                .unwrap_or_else(|e| panic!("fusion changed values: {e}"));
+        }
+    }
+
+    #[test]
+    fn fc_matches_manual() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 2, 3), DType::F32);
+        let y = g.fully_connected("fc", x, 2, DType::F32).unwrap();
+        g.output(y);
+        let mut store = WeightStore::new(1);
+        let xs = HostTensor::from_vec(
+            Shape::bhwc(1, 1, 2, 3),
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        )
+        .unwrap();
+        let out = execute(&g, &feed("x", xs.clone()), &mut store).unwrap();
+        let w = store.weights("fc", 2, 3).to_vec();
+        // row 0 · w[o]
+        let want00 = 1.0 * w[0] + 2.0 * w[1] + 3.0 * w[2];
+        assert!((out[0].data[0] - want00).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantized_weights_change_values_slightly() {
+        let mut build = |dt: DType| {
+            let mut g = Graph::new("t");
+            let x = g.input("x", Shape::bhwc(1, 1, 4, 32), DType::F32);
+            let y = g.fully_connected("fc", x, 16, dt).unwrap();
+            g.output(y);
+            let mut rng = Pcg32::seeded(3);
+            let xs = HostTensor::random(Shape::bhwc(1, 1, 4, 32), &mut rng);
+            run(&g, &feed("x", xs))
+        };
+        let f = build(DType::F32);
+        let q8 = build(DType::I8);
+        let q4 = build(DType::I4);
+        let err = |a: &HostTensor, b: &HostTensor| {
+            a.data
+                .iter()
+                .zip(&b.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max)
+        };
+        let e8 = err(&f[0], &q8[0]);
+        let e4 = err(&f[0], &q4[0]);
+        assert!(e8 > 0.0 && e4 > e8, "quant error ordering: {e8} vs {e4}");
+        assert!(e4 < 0.2, "int4 error bounded: {e4}");
+    }
+
+    #[test]
+    fn fusion_preserves_ffn_semantics() {
+        // The Fig. 4 patterns all at once: residual + rmsnorm + gated FFN.
+        let mut g = Graph::new("ffn");
+        let x = g.input("x", Shape::bhwc(1, 1, 6, 32), DType::F32);
+        let r = g.input("r", Shape::bhwc(1, 1, 6, 32), DType::F32);
+        let sum = g.binary("add", x, r, BinOp::Add).unwrap();
+        let normed = g.rms_norm("norm", sum).unwrap();
+        let gate = g.fully_connected("gate", normed, 64, DType::F32).unwrap();
+        let gate = g.unary("silu", gate, EwOp::Silu).unwrap();
+        let up = g.fully_connected("up", normed, 64, DType::F32).unwrap();
+        let prod = g.binary("mul", up, gate, BinOp::Mul).unwrap();
+        let down = g.fully_connected("down", prod, 32, DType::F32).unwrap();
+        let out = g.binary("resid2", sum, down, BinOp::Add).unwrap();
+        g.output(out);
+
+        let mut rng = Pcg32::seeded(11);
+        let mut feeds = HashMap::new();
+        feeds.insert("x".into(), HostTensor::random(Shape::bhwc(1, 1, 6, 32), &mut rng));
+        feeds.insert("r".into(), HostTensor::random(Shape::bhwc(1, 1, 6, 32), &mut rng));
+        assert_fusion_equivalent(g, feeds);
+    }
+
+    #[test]
+    fn fusion_preserves_conv_epilogue_semantics() {
+        let mut g = Graph::new("conv");
+        let x = g.input("x", Shape::bhwc(1, 6, 6, 8), DType::F32);
+        let c = g.conv2d("c1", x, 8, 3, 1, 1, DType::F32).unwrap();
+        let a = g.unary("relu", c, EwOp::Relu).unwrap();
+        let c2 = g.conv2d("c2", a, 8, 3, 1, 1, DType::F32).unwrap();
+        let merged = g.binary("skip", c2, a, BinOp::Add).unwrap();
+        g.output(merged);
+        let mut rng = Pcg32::seeded(21);
+        assert_fusion_equivalent(
+            g,
+            feed("x", HostTensor::random(Shape::bhwc(1, 6, 6, 8), &mut rng)),
+        );
+    }
+
+    #[test]
+    fn fusion_equivalence_property_random_chains() {
+        use crate::util::propcheck::{check, Config};
+        check("fusion preserves elementwise-chain semantics", Config::cases(20), |rng| {
+            let len = 1 + rng.gen_range(4) as usize;
+            let mut g = Graph::new("chain");
+            let x = g.input("x", Shape::bhwc(1, 1, 4, 16), DType::F32);
+            let mut h = g.fully_connected("fc", x, 16, DType::F32).unwrap();
+            for i in 0..len {
+                let op = *rng.choose(&[
+                    EwOp::Relu,
+                    EwOp::Silu,
+                    EwOp::Tanh,
+                    EwOp::Sigmoid,
+                    EwOp::Scale(0.5),
+                    EwOp::Offset(0.1),
+                ]);
+                h = g.unary(&format!("ew{i}"), h, op).unwrap();
+            }
+            g.output(h);
+            let xs = HostTensor::random(Shape::bhwc(1, 1, 4, 16), rng);
+            let feeds = feed("x", xs);
+            let unfused = run(&g, &feeds);
+            crate::fusion::passes::fuse_all(&mut g, None);
+            let fused = run(&g, &feeds);
+            crate::util::propcheck::assert_close(&unfused[0].data, &fused[0].data, 1e-5, 1e-5)
+        });
+    }
+
+    #[test]
+    fn quant_act_roundtrip_semantics() {
+        let mut g = Graph::new("q");
+        let x = g.input("x", Shape::bhwc(1, 1, 2, 64), DType::F32);
+        let q = g.quant_act("q", x).unwrap();
+        g.output(q);
+        let mut rng = Pcg32::seeded(31);
+        let xs = HostTensor::random(Shape::bhwc(1, 1, 2, 64), &mut rng);
+        let out = run(&g, &feed("x", xs.clone()));
+        // Round-trip error bounded by scale/2 per element.
+        for (a, b) in xs.data.iter().zip(&out[0].data) {
+            assert!((a - b).abs() <= 1.0 / 127.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut g = Graph::new("s");
+        let x = g.input("x", Shape::bhwc(2, 1, 3, 16), DType::F32);
+        let s = g.softmax("sm", x).unwrap();
+        g.output(s);
+        let mut rng = Pcg32::seeded(41);
+        let xs = HostTensor::random(Shape::bhwc(2, 1, 3, 16), &mut rng);
+        let out = run(&g, &feed("x", xs));
+        for row in out[0].data.chunks(16) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row sum {sum}");
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Operator graph: op set, DAG, builder, and shape inference.
+//!
+//! Neural networks are represented as DAGs of operator nodes over logical
+//! BHWDC tensors. The graph is the input to every downstream stage:
+//! fusion ([`crate::fusion`]), memory planning ([`crate::memory`]), kernel
+//! selection + shader codegen ([`crate::codegen`]), and the roofline
+//! simulator ([`crate::sim`]).
+//!
+//! Convention (paper §3.6): LLM activations are 4D `(B, 1, S, C)` — height
+//! is 1, the sequence runs along W, features along C — which lets the same
+//! conv/FC kernels serve both CNN and transformer workloads. Attention
+//! heads fold into the batch axis, e.g. `(B·h_kv, S·h_q/h_kv, d_h)`.
+
+pub mod op;
+pub mod graph;
+pub mod infer;
+pub mod interp;
+
+pub use graph::{Graph, Node, NodeId};
+pub use op::{BinOp, EwOp, OpKind, WeightInfo};

@@ -1,0 +1,171 @@
+//! The operator set.
+
+use crate::tensor::{DType, Shape, WeightShape};
+
+/// Unary elementwise operations (fusable epilogues).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EwOp {
+    Relu,
+    Gelu,
+    Silu,
+    Tanh,
+    Sigmoid,
+    Exp,
+    Rsqrt,
+    Neg,
+    /// Multiply by a compile-time scalar.
+    Scale(f32),
+    /// Add a compile-time scalar.
+    Offset(f32),
+}
+
+/// Binary elementwise operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// Weight metadata attached to conv / FC / embedding nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WeightInfo {
+    pub shape: WeightShape,
+    /// Storage dtype of the weights (F16, I8, I4 …).
+    pub dtype: DType,
+}
+
+impl WeightInfo {
+    pub fn bytes(&self) -> usize {
+        self.dtype.bytes_for(self.shape.elements())
+    }
+}
+
+/// Operator kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// Graph input (activations, token ids, KV-cache views …).
+    Input,
+    /// Compile-time constant tensor (e.g. timestep embedding table).
+    Const,
+    /// 2D convolution `OHWI`; `same` padding when `pad = k/2`.
+    Conv2D { out_c: usize, kh: usize, kw: usize, stride: usize, pad: usize },
+    /// Fully connected over the channel axis (1×1 spatial).
+    FullyConnected { out_c: usize },
+    /// Batched matmul `(B,1,M,K) × (B,1,K,N) → (B,1,M,N)`;
+    /// `transpose_b` consumes `(B,1,N,K)` as the second operand.
+    MatMul { transpose_b: bool },
+    /// Unary elementwise.
+    Elementwise(EwOp),
+    /// Binary elementwise (broadcast on matching trailing dims unsupported —
+    /// shapes must match exactly; residuals always do).
+    Binary(BinOp),
+    /// RMS normalization over channels.
+    RmsNorm { eps: f32 },
+    /// Layer normalization over channels.
+    LayerNorm { eps: f32 },
+    /// Group normalization (UNet blocks).
+    GroupNorm { groups: usize, eps: f32 },
+    /// Softmax over the channel axis.
+    Softmax,
+    /// Rotary position embedding over channels (paper §3.6 fuses this with
+    /// the QKV layout transform).
+    Rope { theta: f32 },
+    /// Reshape to an explicit target shape (element count preserved).
+    Reshape { out: Shape },
+    /// Transpose of the canonical BHWDC axes (permutation of [0..5)).
+    Transpose { perm: [usize; 5] },
+    /// Concatenate along a canonical axis index (0=B,1=H,2=W,3=D,4=C).
+    Concat { axis: usize },
+    /// Token embedding lookup: `(B,1,S,1)` i32 → `(B,1,S,dim)`.
+    Embedding { vocab: usize, dim: usize },
+    /// Nearest-neighbour 2× spatial upsample (UNet decoder).
+    Upsample2x,
+    /// Average pool with square kernel+stride `k` (UNet encoder).
+    AvgPool { k: usize },
+    /// Dynamic activation quantization: computes per-tensor scales and
+    /// int8 activations (prefill stage, §3.7). Shape-preserving.
+    QuantAct,
+    /// Fused residual-add + RMSNorm (produced by the fusion pass, Fig. 4
+    /// right). Two inputs: residual, x.
+    FusedAddRmsNorm { eps: f32 },
+    /// Fused QKV layout transform + RoPE custom kernel (§3.6). Input is the
+    /// packed QKV projection `(B,1,S,(h_q+2·h_kv)·d_h)`; outputs the
+    /// attention-ready Q view `(B·h_kv, 1, S·h_q/h_kv, d_h)`.
+    FusedQkvRope { heads_q: usize, heads_kv: usize, head_dim: usize },
+}
+
+impl OpKind {
+    /// Whether this op is a "compute" op that owns a GPU kernel (as opposed
+    /// to inputs/constants which only bind memory).
+    pub fn is_compute(&self) -> bool {
+        !matches!(self, OpKind::Input | OpKind::Const)
+    }
+
+    /// Whether this op is a pure elementwise op (fusable as an epilogue).
+    pub fn is_elementwise(&self) -> bool {
+        matches!(self, OpKind::Elementwise(_) | OpKind::Binary(_))
+    }
+
+    /// Whether this op performs matrix multiplication work (conv / FC /
+    /// matmul) — the ops whose weights the quantizer targets and whose
+    /// kernels the stage-aware selector specializes.
+    pub fn is_matmul_family(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2D { .. } | OpKind::FullyConnected { .. } | OpKind::MatMul { .. }
+        )
+    }
+
+    /// Short name for reports and generated kernel labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::Const => "const",
+            OpKind::Conv2D { .. } => "conv2d",
+            OpKind::FullyConnected { .. } => "fully_connected",
+            OpKind::MatMul { .. } => "matmul",
+            OpKind::Elementwise(_) => "elementwise",
+            OpKind::Binary(_) => "binary",
+            OpKind::RmsNorm { .. } => "rms_norm",
+            OpKind::LayerNorm { .. } => "layer_norm",
+            OpKind::GroupNorm { .. } => "group_norm",
+            OpKind::Softmax => "softmax",
+            OpKind::Rope { .. } => "rope",
+            OpKind::Reshape { .. } => "reshape",
+            OpKind::Transpose { .. } => "transpose",
+            OpKind::Concat { .. } => "concat",
+            OpKind::Embedding { .. } => "embedding",
+            OpKind::Upsample2x => "upsample2x",
+            OpKind::AvgPool { .. } => "avg_pool",
+            OpKind::QuantAct => "quant_act",
+            OpKind::FusedAddRmsNorm { .. } => "fused_add_rms_norm",
+            OpKind::FusedQkvRope { .. } => "fused_qkv_rope",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification() {
+        assert!(OpKind::Conv2D { out_c: 8, kh: 3, kw: 3, stride: 1, pad: 1 }.is_matmul_family());
+        assert!(OpKind::FullyConnected { out_c: 8 }.is_matmul_family());
+        assert!(!OpKind::Softmax.is_matmul_family());
+        assert!(OpKind::Elementwise(EwOp::Gelu).is_elementwise());
+        assert!(OpKind::Binary(BinOp::Add).is_elementwise());
+        assert!(!OpKind::Input.is_compute());
+        assert!(OpKind::Softmax.is_compute());
+    }
+
+    #[test]
+    fn weight_bytes() {
+        let wi = WeightInfo { shape: WeightShape::fc(256, 128), dtype: DType::I8 };
+        assert_eq!(wi.bytes(), 256 * 128);
+        let wi4 = WeightInfo { shape: WeightShape::fc(256, 128), dtype: DType::I4 };
+        assert_eq!(wi4.bytes(), 256 * 128 / 2);
+    }
+}

@@ -1,0 +1,181 @@
+//! GPU-optimized KV cache layouts and cache management (paper §3.8).
+//!
+//! ML Drift performs LLM matmuls with convolution kernels; the KV cache
+//! therefore acts as *convolution weights* and is stored in layouts
+//! compatible with the §3.6 QKV transform:
+//!
+//! * **K cache**: `OHWI` with `O = cache_size`, `I = d_h` — this *is*
+//!   `Kᵀ`, so the `QKᵀ` score matmul consumes it directly.
+//! * **V cache**: `OHWI` with reversed roles, `O = d_h`,
+//!   `I = cache_size` — the attention-output matmul then yields the
+//!   desired `(B·h_kv, S·h_q/h_kv, d_h)` layout with no transpose.
+
+use crate::error::{DriftError, Result};
+use crate::tensor::WeightShape;
+
+/// The §3.8 cache layouts for one attention layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    /// K stored as OHWI (O = cache capacity, I = d_h): Kᵀ for QKᵀ.
+    pub k: WeightShape,
+    /// V stored as OHWI reversed (O = d_h, I = cache capacity).
+    pub v: WeightShape,
+}
+
+impl KvLayout {
+    pub fn new(capacity: usize, head_dim: usize) -> Self {
+        KvLayout {
+            k: WeightShape::fc(capacity, head_dim),
+            v: WeightShape::fc(head_dim, capacity),
+        }
+    }
+
+    /// Bytes for one layer's K+V at fp16 across `heads_kv` heads.
+    pub fn bytes(&self, heads_kv: usize) -> usize {
+        2 * heads_kv * (self.k.elements() + self.v.elements())
+    }
+}
+
+/// Per-sequence KV cache state across all layers of a model.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub layers: usize,
+    pub heads_kv: usize,
+    pub head_dim: usize,
+    pub capacity: usize,
+    /// Number of valid positions (past tokens).
+    pub len: usize,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, heads_kv: usize, head_dim: usize, capacity: usize) -> Self {
+        KvCache { layers, heads_kv, head_dim, capacity, len: 0 }
+    }
+
+    /// Layout of one layer at current capacity.
+    pub fn layout(&self) -> KvLayout {
+        KvLayout::new(self.capacity, self.head_dim)
+    }
+
+    /// Total bytes (fp16) across layers and heads.
+    pub fn bytes(&self) -> usize {
+        2 * 2 * self.layers * self.heads_kv * self.head_dim * self.capacity
+    }
+
+    /// Append `n` token positions (the fused QKV kernel writes K/V rows in
+    /// place, so append is O(1) bookkeeping).
+    pub fn append(&mut self, n: usize) -> Result<()> {
+        if self.len + n > self.capacity {
+            return Err(DriftError::Memory(format!(
+                "kv cache overflow: {} + {n} > capacity {}",
+                self.len, self.capacity
+            )));
+        }
+        self.len += n;
+        Ok(())
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+}
+
+/// Cache pool for a serving engine: one slot per concurrent sequence.
+#[derive(Clone, Debug)]
+pub struct KvCachePool {
+    template: KvCache,
+    slots: Vec<Option<KvCache>>,
+}
+
+impl KvCachePool {
+    pub fn new(template: KvCache, max_sequences: usize) -> Self {
+        KvCachePool { template, slots: vec![None; max_sequences] }
+    }
+
+    /// Claim a free slot; returns its index.
+    pub fn claim(&mut self) -> Result<usize> {
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.is_none() {
+                *s = Some(self.template.clone());
+                return Ok(i);
+            }
+        }
+        Err(DriftError::Serving("no free KV cache slots".into()))
+    }
+
+    pub fn get_mut(&mut self, slot: usize) -> Result<&mut KvCache> {
+        self.slots
+            .get_mut(slot)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| DriftError::Serving(format!("kv slot {slot} not claimed")))
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        if let Some(s) = self.slots.get_mut(slot) {
+            *s = None;
+        }
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Total bytes across claimed slots.
+    pub fn bytes(&self) -> usize {
+        self.slots.iter().flatten().map(|c| c.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts_match_section_3_8() {
+        let l = KvLayout::new(1280, 256);
+        // K: O=cache_size, I=d_h.
+        assert_eq!((l.k.o, l.k.i), (1280, 256));
+        // V: reversed.
+        assert_eq!((l.v.o, l.v.i), (256, 1280));
+    }
+
+    #[test]
+    fn cache_append_and_overflow() {
+        let mut c = KvCache::new(26, 4, 256, 1280);
+        c.append(1024).unwrap();
+        assert_eq!(c.len, 1024);
+        assert_eq!(c.remaining(), 256);
+        c.append(256).unwrap();
+        assert!(c.append(1).is_err(), "overflow must error");
+        c.reset();
+        assert_eq!(c.len, 0);
+    }
+
+    #[test]
+    fn cache_bytes_match_config_math() {
+        let c = KvCache::new(26, 4, 256, 1280);
+        // = layers · heads · dh · cap · 2 (K+V) · 2 (fp16)
+        assert_eq!(c.bytes(), 26 * 4 * 256 * 1280 * 4);
+        let cfg = crate::models::llm_config("gemma2_2b").unwrap();
+        assert_eq!(c.bytes(), cfg.kv_bytes_per_token() * 1280);
+    }
+
+    #[test]
+    fn pool_claim_release() {
+        let t = KvCache::new(4, 2, 64, 128);
+        let mut pool = KvCachePool::new(t, 2);
+        let a = pool.claim().unwrap();
+        let b = pool.claim().unwrap();
+        assert_ne!(a, b);
+        assert!(pool.claim().is_err());
+        pool.get_mut(a).unwrap().append(5).unwrap();
+        pool.release(a);
+        assert_eq!(pool.in_use(), 1);
+        let c = pool.claim().unwrap();
+        assert_eq!(pool.get_mut(c).unwrap().len, 0, "fresh slot state");
+    }
+}

@@ -1,0 +1,238 @@
+//! `mldrift` — the ML Drift reproduction CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//! * `devices`  — list the GPU profile registry.
+//! * `plan`     — compile a model for a device and print the plan.
+//! * `sd`       — simulate the Stable Diffusion pipeline on a device.
+//! * `llm`      — simulate the paper's LLM benchmark (Tables 2/4 rows).
+//! * `generate` — run *real* generation through the PJRT runtime.
+//! * `serve`    — serve a synthetic workload through the batching engine.
+
+use mldrift::codegen::select::Stage;
+use mldrift::device::registry::{all_devices, device};
+use mldrift::diffusion::SdPipeline;
+use mldrift::engine::compile::{compile_graph, CompileOptions};
+use mldrift::engine::llm::simulate_llm;
+use mldrift::models::llm::{build_llm_graph, LlmStageGraph};
+use mldrift::models::llm_config;
+use mldrift::quant::QuantScheme;
+use mldrift::serving::{InferenceRequest, SchedulerConfig, ServingEngine};
+use mldrift::util::cli::{flag, opt, Cli, CommandSpec};
+use mldrift::util::human_bytes;
+use mldrift::util::rng::Pcg32;
+
+fn cli() -> Cli {
+    Cli {
+        bin: "mldrift",
+        about: "on-device GPU inference for large generative models (paper reproduction)",
+        commands: vec![
+            CommandSpec {
+                name: "devices",
+                about: "list registered GPU profiles",
+                args: vec![],
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "plan",
+                about: "compile a model and print the execution plan summary",
+                args: vec![
+                    opt("model", "gemma2_2b", "model name (see models::llm_configs)"),
+                    opt("device", "adreno_750", "device name"),
+                    opt("quant", "8/4/4", "quant scheme: f16 | q8 | 8/4/4 | q4"),
+                    opt("stage", "prefill", "prefill | decode"),
+                    opt("seq", "1024", "prefill length / decode cache length"),
+                    flag("dump", "dump the fused graph node list"),
+                ],
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "sd",
+                about: "simulate Stable Diffusion 1.4 on a device",
+                args: vec![
+                    opt("device", "adreno_740", "device name"),
+                    opt("iterations", "20", "denoising iterations"),
+                ],
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "llm",
+                about: "simulate the paper's LLM benchmark for one row",
+                args: vec![
+                    opt("model", "gemma2_2b", "model name"),
+                    opt("device", "adreno_750", "device name"),
+                    opt("quant", "8/4/4", "quant scheme"),
+                    opt("prefill", "1024", "prompt tokens"),
+                    opt("gen", "256", "generated tokens"),
+                ],
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "generate",
+                about: "REAL generation via the PJRT runtime (needs `make artifacts`)",
+                args: vec![
+                    opt("artifacts", "artifacts", "artifacts directory"),
+                    opt("prompt-len", "16", "prompt length (padded to a bucket)"),
+                    opt("steps", "16", "tokens to generate"),
+                ],
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "serve",
+                about: "serve a synthetic workload through the batching engine",
+                args: vec![
+                    opt("artifacts", "artifacts", "artifacts directory"),
+                    opt("requests", "16", "number of requests"),
+                    opt("gen", "8", "tokens per request"),
+                    opt("concurrency", "4", "max active sequences"),
+                ],
+                positionals: vec![],
+            },
+        ],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(m) = cli().parse(&argv)? else { return Ok(()) };
+    match m.command.as_str() {
+        "devices" => {
+            for d in all_devices() {
+                println!(
+                    "{:<16} {:<48} {:>8.0} GF fp16  {:>7.0} GOPS int8  {:>6.1} GB/s  budget {}",
+                    d.name,
+                    d.marketing_name,
+                    d.fp16_gflops,
+                    d.int8_gops,
+                    d.mem_bw_gbps,
+                    human_bytes(d.mem_budget_bytes)
+                );
+            }
+        }
+        "plan" => {
+            let cfg = llm_config(m.req("model"))
+                .ok_or_else(|| anyhow::anyhow!("unknown model {}", m.req("model")))?;
+            let dev = device(m.req("device"))
+                .ok_or_else(|| anyhow::anyhow!("unknown device {}", m.req("device")))?;
+            let scheme = QuantScheme::parse(m.req("quant"))
+                .ok_or_else(|| anyhow::anyhow!("unknown quant {}", m.req("quant")))?;
+            let seq: usize = m.parse("seq")?;
+            let (stage_graph, stage) = match m.req("stage") {
+                "decode" => (LlmStageGraph::Decode { cache_len: seq }, Stage::Decode),
+                _ => (LlmStageGraph::Prefill { seq }, Stage::Prefill),
+            };
+            let g = build_llm_graph(&cfg, 1, stage_graph, scheme)?;
+            let opts = CompileOptions {
+                attn_fusion: Some((cfg.heads_q, cfg.heads_kv, cfg.head_dim)),
+                ..Default::default()
+            };
+            let c = compile_graph(g, &dev, stage, &opts)?;
+            println!(
+                "model {} on {} ({} stage, {})",
+                cfg.name,
+                dev.name,
+                m.req("stage"),
+                scheme.name()
+            );
+            println!("fusion: {:?}", c.fusion);
+            println!("kernels: {}", c.plan.kernels.len());
+            println!("weights: {}", human_bytes(c.plan.weight_bytes as u64));
+            println!(
+                "memory: naive {} -> {} ({:.0}% saved)",
+                human_bytes(c.naive_memory_bytes as u64),
+                human_bytes(c.memory.total_bytes as u64),
+                c.memory.savings_vs(c.naive_memory_bytes) * 100.0
+            );
+            println!(
+                "simulated: {:.2} ms ({:.0}% compute-bound) -> {:.1} tokens/s",
+                c.report.total_s * 1e3,
+                c.report.compute_bound_frac * 100.0,
+                seq as f64 / c.report.total_s
+            );
+            if m.flag("dump") {
+                println!("\n{}", c.graph.dump());
+            }
+        }
+        "sd" => {
+            let dev = device(m.req("device"))
+                .ok_or_else(|| anyhow::anyhow!("unknown device {}", m.req("device")))?;
+            let iters: usize = m.parse("iterations")?;
+            let p = SdPipeline::compile(&dev, &CompileOptions::default())?;
+            let r = p.run(iters);
+            println!("SD 1.4 on {} ({iters} iterations):", dev.marketing_name);
+            println!("  text encoder {:.1} ms", r.text_encoder_s * 1e3);
+            println!("  UNet step    {:.1} ms", r.unet_step_s * 1e3);
+            println!("  VAE decoder  {:.1} ms", r.vae_decoder_s * 1e3);
+            println!("  end-to-end   {:.2} s", r.end_to_end_s);
+        }
+        "llm" => {
+            let cfg = llm_config(m.req("model"))
+                .ok_or_else(|| anyhow::anyhow!("unknown model {}", m.req("model")))?;
+            let dev = device(m.req("device"))
+                .ok_or_else(|| anyhow::anyhow!("unknown device {}", m.req("device")))?;
+            let scheme = QuantScheme::parse(m.req("quant"))
+                .ok_or_else(|| anyhow::anyhow!("unknown quant {}", m.req("quant")))?;
+            let p = simulate_llm(
+                &cfg,
+                &dev,
+                scheme,
+                m.parse("prefill")?,
+                m.parse("gen")?,
+                &CompileOptions::default(),
+            )?;
+            println!(
+                "{} {} on {}: prefill {:.0} tok/s, decode {:.1} tok/s (weights {})",
+                cfg.name,
+                scheme.name(),
+                dev.name,
+                p.prefill_tokens_per_s,
+                p.decode_tokens_per_s,
+                human_bytes(p.weight_bytes)
+            );
+        }
+        "generate" => {
+            use mldrift::runtime::{Runtime, TinyLmRuntime};
+            let rt = Runtime::cpu()?;
+            let model = TinyLmRuntime::load(&rt, m.req("artifacts"))?;
+            let len: usize = m.parse("prompt-len")?;
+            let bucket = model.bucket_for(len)?;
+            let prompt: Vec<i32> = (0..bucket as i32).collect();
+            let steps: usize = m.parse("steps")?;
+            let out = model.generate(&prompt, steps)?;
+            println!("tokens: {:?}", out.tokens);
+            println!(
+                "prefill {:.0} tok/s, decode {:.1} tok/s, ttft {:.1} ms",
+                out.prefill_tokens_per_s(),
+                out.decode_tokens_per_s(),
+                out.ttft_s() * 1e3
+            );
+        }
+        "serve" => {
+            let engine = ServingEngine::start(
+                m.req("artifacts"),
+                SchedulerConfig { max_active: m.parse("concurrency")?, max_prefills_per_round: 1 },
+            )?;
+            let n: usize = m.parse("requests")?;
+            let gen: usize = m.parse("gen")?;
+            let mut rng = Pcg32::seeded(1);
+            let rxs: Vec<_> = (0..n)
+                .map(|i| {
+                    let prompt: Vec<i32> = (0..16).map(|_| rng.gen_range(2000) as i32).collect();
+                    engine.submit(InferenceRequest::new(i as u64, prompt, gen)).unwrap()
+                })
+                .collect();
+            for rx in rxs {
+                let r = rx.recv()?;
+                println!(
+                    "req {:>3}: {} tokens, ttft {:.0} ms, decode {:.1} tok/s",
+                    r.id,
+                    r.tokens.len(),
+                    r.ttft_s * 1e3,
+                    r.decode_tokens_per_s()
+                );
+            }
+            println!("\n{}", engine.stats().report);
+        }
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+    Ok(())
+}

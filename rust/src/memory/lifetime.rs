@@ -1,0 +1,185 @@
+//! Tensor lifetime extraction from a (fused) graph.
+
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::tensor::DType;
+
+/// One intermediate tensor's memory requirement and lifetime, in units of
+/// *execution steps* (live-kernel order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorUsage {
+    /// Graph node whose output this buffer holds.
+    pub node: NodeId,
+    pub name: String,
+    /// Buffer size in bytes (slice-padded storage footprint).
+    pub bytes: usize,
+    /// Step of the kernel that writes the buffer.
+    pub first: usize,
+    /// Last step of any kernel that reads it (≥ first).
+    pub last: usize,
+}
+
+/// Extract intermediate-tensor usages from a graph.
+///
+/// * Steps are indices into the live-kernel execution order (absorbed
+///   nodes execute inside their absorber's kernel).
+/// * Graph inputs and constants are externally owned — not planned.
+/// * Graph outputs stay live until the final step.
+/// * Absorbed nodes own a buffer only if someone still reads it (the
+///   secondary-output case of the fused residual+RMSNorm kernel);
+///   rewired elementwise nodes own nothing.
+/// * Buffer sizes use the slice-padded footprint (`⌈C/4⌉·4` channels) at
+///   the node's activation dtype — matching what the GPU actually
+///   allocates for PHWC4-family layouts.
+pub fn lifetimes(g: &Graph, activation_dtype: DType) -> Vec<TensorUsage> {
+    // Map node -> execution step of the kernel that materializes it.
+    let mut step_of = vec![usize::MAX; g.nodes.len()];
+    let mut step = 0usize;
+    for n in &g.nodes {
+        if n.kind.is_compute() && n.absorbed_into.is_none() {
+            step_of[n.id] = step;
+            step += 1;
+        }
+    }
+    let last_step = step.saturating_sub(1);
+    // Absorbed nodes materialize at their absorber's step (transitively).
+    for n in &g.nodes {
+        if let Some(mut a) = n.absorbed_into {
+            while let Some(next) = g.nodes[a].absorbed_into {
+                a = next;
+            }
+            step_of[n.id] = step_of[a];
+        }
+    }
+
+    // Which nodes are read by live kernels?
+    let mut usages = Vec::new();
+    for n in &g.nodes {
+        if matches!(n.kind, OpKind::Input | OpKind::Const) {
+            continue;
+        }
+        let def = step_of[n.id];
+        if def == usize::MAX {
+            continue; // dead node
+        }
+        // Readers: any live kernel consuming this node (directly or as a
+        // fused add operand).
+        let mut last = def;
+        let mut referenced = g.outputs.contains(&n.id);
+        for m in &g.nodes {
+            if m.id == n.id || step_of[m.id] == usize::MAX {
+                continue;
+            }
+            let reads = m.inputs.contains(&n.id) || m.fused_adds.iter().any(|(i, _)| *i == n.id);
+            if reads && m.absorbed_into.is_none() {
+                referenced = true;
+                last = last.max(step_of[m.id]);
+            } else if reads {
+                // Reader absorbed into another kernel: charge that kernel's step.
+                referenced = true;
+                last = last.max(step_of[m.id]);
+            }
+        }
+        if n.absorbed_into.is_some() && !referenced {
+            continue; // rewired away: owns no buffer
+        }
+        if g.outputs.contains(&n.id) {
+            last = last_step;
+        }
+        let bytes = activation_dtype.bytes_for(n.shape.padded_elements());
+        usages.push(TensorUsage { node: n.id, name: n.name.clone(), bytes, first: def, last });
+    }
+    usages
+}
+
+/// Sum of all usage sizes — the naive (no reuse) footprint.
+pub fn naive_bytes(usages: &[TensorUsage]) -> usize {
+    usages.iter().map(|u| u.bytes).sum()
+}
+
+/// Peak of the liveness profile — a lower bound for any planner.
+pub fn liveness_lower_bound(usages: &[TensorUsage]) -> usize {
+    let max_step = usages.iter().map(|u| u.last).max().unwrap_or(0);
+    let mut profile = vec![0usize; max_step + 1];
+    for u in usages {
+        for s in u.first..=u.last {
+            profile[s] += u.bytes;
+        }
+    }
+    profile.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{EwOp, Graph};
+    use crate::tensor::{DType, Shape};
+
+    fn chain_graph() -> Graph {
+        let mut g = Graph::new("chain");
+        let x = g.input("x", Shape::bhwc(1, 8, 8, 16), DType::F16);
+        let a = g.conv2d("a", x, 32, 3, 1, 1, DType::F16).unwrap();
+        let b = g.conv2d("b", a, 32, 3, 1, 1, DType::F16).unwrap();
+        let c = g.conv2d("c", b, 16, 3, 1, 1, DType::F16).unwrap();
+        g.output(c);
+        g
+    }
+
+    #[test]
+    fn chain_lifetimes_are_tight() {
+        let g = chain_graph();
+        let us = lifetimes(&g, DType::F16);
+        assert_eq!(us.len(), 3);
+        // a: defined step 0, read by b at step 1.
+        assert_eq!((us[0].first, us[0].last), (0, 1));
+        assert_eq!((us[1].first, us[1].last), (1, 2));
+        // c is the output: lives to the end.
+        assert_eq!((us[2].first, us[2].last), (2, 2));
+        assert_eq!(us[0].bytes, 8 * 8 * 32 * 2);
+    }
+
+    #[test]
+    fn inputs_not_planned() {
+        let g = chain_graph();
+        let us = lifetimes(&g, DType::F16);
+        assert!(us.iter().all(|u| g.node(u.node).kind.is_compute()));
+    }
+
+    #[test]
+    fn absorbed_elementwise_owns_no_buffer() {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let fc = g.fully_connected("fc", x, 64, DType::I8).unwrap();
+        let act = g.unary("gelu", fc, EwOp::Gelu).unwrap();
+        g.output(act);
+        crate::fusion::passes::fuse_elementwise(&mut g);
+        let us = lifetimes(&g, DType::F16);
+        assert_eq!(us.len(), 1, "only the fc buffer remains: {us:?}");
+        assert_eq!(us[0].node, fc);
+    }
+
+    #[test]
+    fn fused_secondary_output_keeps_buffer() {
+        // residual add absorbed into FusedAddRmsNorm but still read later.
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let y = g.input("y", Shape::bhwc(1, 1, 8, 64), DType::F16);
+        let sum = g.binary("residual", x, y, crate::graph::BinOp::Add).unwrap();
+        let norm = g.rms_norm("norm", sum).unwrap();
+        let ffn = g.fully_connected("ffn", norm, 64, DType::I8).unwrap();
+        let out = g.binary("residual2", sum, ffn, crate::graph::BinOp::Add).unwrap();
+        g.output(out);
+        crate::fusion::passes::fuse_add_rmsnorm(&mut g);
+        let us = lifetimes(&g, DType::F16);
+        let sum_usage = us.iter().find(|u| u.node == sum).expect("sum buffer still planned");
+        // Defined at the fused kernel's step (0), read by residual2 (2).
+        assert_eq!((sum_usage.first, sum_usage.last), (0, 2));
+    }
+
+    #[test]
+    fn lower_bound_le_naive() {
+        let g = chain_graph();
+        let us = lifetimes(&g, DType::F16);
+        assert!(liveness_lower_bound(&us) <= naive_bytes(&us));
+        assert!(liveness_lower_bound(&us) > 0);
+    }
+}

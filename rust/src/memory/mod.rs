@@ -1,0 +1,21 @@
+//! Intermediate-tensor memory planning (paper §3.5, Fig. 3).
+//!
+//! Neural networks execute sequentially over a DAG, so intermediate
+//! tensors need not occupy memory simultaneously: buffers can be reused
+//! across tensors with non-overlapping lifetimes. Following Pisarchyk &
+//! Lee [43], two families of strategies are provided:
+//!
+//! * **Offset calculation** — pre-allocate one arena and assign each
+//!   tensor an offset inside it (`GREEDY BY SIZE` is the paper's choice
+//!   for Stable Diffusion: 4.31 GB → 387 MB, 93 % savings).
+//! * **Shared objects** — maintain a pool of reusable buffers and assign
+//!   tensors to the best free one (`GREEDY BY BREADTH`).
+//!
+//! [`lifetime`] extracts tensor usage records from a (possibly fused)
+//! graph; [`plan`] implements the strategies and validates plans.
+
+pub mod lifetime;
+pub mod plan;
+
+pub use lifetime::{lifetimes, liveness_lower_bound, naive_bytes, TensorUsage};
+pub use plan::{plan, validate_plan, Assignment, MemoryPlan, Strategy};

@@ -1,0 +1,341 @@
+//! Memory planning strategies.
+
+use crate::error::{DriftError, Result};
+use crate::graph::NodeId;
+use crate::memory::lifetime::TensorUsage;
+use crate::util::align_up;
+
+/// Buffer alignment (bytes). GPU APIs typically require 64–256; 64 keeps
+/// the Fig. 3 numbers comparable to the paper's MB-granular reporting.
+pub const ALIGN: usize = 64;
+
+/// Planning strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Every tensor gets its own allocation (no reuse).
+    Naive,
+    /// Offset calculation, tensors placed in descending size order
+    /// (Pisarchyk & Lee's GREEDY BY SIZE — the paper's Fig. 3 policy).
+    GreedyBySize,
+    /// Shared objects, tensors assigned in descending size order to the
+    /// largest free object (GREEDY BY BREADTH).
+    GreedyByBreadth,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Naive => "NAIVE",
+            Strategy::GreedyBySize => "GREEDY_BY_SIZE",
+            Strategy::GreedyByBreadth => "GREEDY_BY_BREADTH",
+        }
+    }
+}
+
+/// One tensor's placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub node: NodeId,
+    /// Arena object this tensor lives in (0 for offset strategies).
+    pub object: usize,
+    /// Byte offset within the object.
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// A complete plan: placements + total footprint.
+#[derive(Clone, Debug)]
+pub struct MemoryPlan {
+    pub strategy: Strategy,
+    pub assignments: Vec<Assignment>,
+    /// Total bytes across all objects.
+    pub total_bytes: usize,
+    /// Per-object sizes.
+    pub object_bytes: Vec<usize>,
+}
+
+impl MemoryPlan {
+    /// Savings relative to the naive footprint, in [0, 1].
+    pub fn savings_vs(&self, naive_total: usize) -> f64 {
+        if naive_total == 0 {
+            return 0.0;
+        }
+        1.0 - self.total_bytes as f64 / naive_total as f64
+    }
+}
+
+fn overlap(a: &TensorUsage, b: &TensorUsage) -> bool {
+    a.first <= b.last && b.first <= a.last
+}
+
+/// Plan memory for `usages` with the given strategy.
+pub fn plan(usages: &[TensorUsage], strategy: Strategy) -> MemoryPlan {
+    match strategy {
+        Strategy::Naive => plan_naive(usages),
+        Strategy::GreedyBySize => plan_greedy_by_size(usages),
+        Strategy::GreedyByBreadth => plan_greedy_by_breadth(usages),
+    }
+}
+
+fn plan_naive(usages: &[TensorUsage]) -> MemoryPlan {
+    let mut offset = 0usize;
+    let mut assignments = Vec::with_capacity(usages.len());
+    for u in usages {
+        assignments.push(Assignment { node: u.node, object: 0, offset, bytes: u.bytes });
+        offset += align_up(u.bytes, ALIGN);
+    }
+    MemoryPlan {
+        strategy: Strategy::Naive,
+        assignments,
+        total_bytes: offset,
+        object_bytes: vec![offset],
+    }
+}
+
+/// GREEDY BY SIZE offset calculation: place tensors in descending size
+/// order; each goes to the lowest offset where it fits without byte-range
+/// overlap against already-placed tensors with overlapping lifetimes.
+fn plan_greedy_by_size(usages: &[TensorUsage]) -> MemoryPlan {
+    let mut order: Vec<usize> = (0..usages.len()).collect();
+    order.sort_by(|&a, &b| {
+        usages[b]
+            .bytes
+            .cmp(&usages[a].bytes)
+            .then(usages[a].first.cmp(&usages[b].first))
+            .then(usages[a].node.cmp(&usages[b].node))
+    });
+
+    let mut placed: Vec<(usize, Assignment)> = Vec::new(); // (usage idx, placement)
+    let mut total = 0usize;
+    // §Perf: the conflict buffer and aligned end offsets are reused across
+    // placements (one allocation for the whole plan instead of one per
+    // tensor), and lifetimes are pre-fetched to a flat array to keep the
+    // O(n²) overlap scan cache-friendly.
+    let mut conflicts: Vec<(usize, usize)> = Vec::with_capacity(usages.len());
+    let spans: Vec<(usize, usize)> = usages.iter().map(|u| (u.first, u.last)).collect();
+    for &ui in &order {
+        let u = &usages[ui];
+        let (uf, ul) = spans[ui];
+        let size = align_up(u.bytes.max(1), ALIGN);
+        // Conflicting placements sorted by offset.
+        conflicts.clear();
+        for (pi, a) in &placed {
+            let (pf, pl) = spans[*pi];
+            if pf <= ul && uf <= pl {
+                conflicts.push((a.offset, a.offset + align_up(a.bytes.max(1), ALIGN)));
+            }
+        }
+        conflicts.sort_unstable();
+        // First-fit gap scan.
+        let mut offset = 0usize;
+        for &(start, end) in conflicts.iter() {
+            if offset + size <= start {
+                break;
+            }
+            offset = offset.max(end);
+        }
+        total = total.max(offset + size);
+        placed.push((ui, Assignment { node: u.node, object: 0, offset, bytes: u.bytes }));
+    }
+    // Restore usage order for readability.
+    placed.sort_by_key(|(ui, _)| *ui);
+    MemoryPlan {
+        strategy: Strategy::GreedyBySize,
+        assignments: placed.into_iter().map(|(_, a)| a).collect(),
+        total_bytes: total,
+        object_bytes: vec![total],
+    }
+}
+
+/// GREEDY BY BREADTH shared objects: tensors in descending size order are
+/// assigned to the largest existing object that is free throughout their
+/// lifetime; if none fits, a new object of exactly their size is created
+/// (growing an existing smaller free object is allowed when it is the
+/// largest free one — matching [43]'s formulation).
+fn plan_greedy_by_breadth(usages: &[TensorUsage]) -> MemoryPlan {
+    let mut order: Vec<usize> = (0..usages.len()).collect();
+    order.sort_by(|&a, &b| {
+        usages[b]
+            .bytes
+            .cmp(&usages[a].bytes)
+            .then(usages[a].first.cmp(&usages[b].first))
+            .then(usages[a].node.cmp(&usages[b].node))
+    });
+
+    struct Obj {
+        bytes: usize,
+        users: Vec<usize>, // usage indices
+    }
+    let mut objects: Vec<Obj> = Vec::new();
+    let mut assign: Vec<(usize, usize)> = Vec::new(); // (usage idx, object)
+    for &ui in &order {
+        let u = &usages[ui];
+        // Free objects (no lifetime conflict), prefer the largest.
+        let mut best: Option<usize> = None;
+        for (oi, o) in objects.iter().enumerate() {
+            let free = o.users.iter().all(|&other| !overlap(&usages[other], u));
+            if free {
+                best = match best {
+                    Some(b) if objects[b].bytes >= o.bytes => Some(b),
+                    _ => Some(oi),
+                };
+            }
+        }
+        match best {
+            Some(oi) => {
+                objects[oi].bytes = objects[oi].bytes.max(align_up(u.bytes, ALIGN));
+                objects[oi].users.push(ui);
+                assign.push((ui, oi));
+            }
+            None => {
+                objects.push(Obj { bytes: align_up(u.bytes, ALIGN), users: vec![ui] });
+                assign.push((ui, objects.len() - 1));
+            }
+        }
+    }
+    assign.sort_by_key(|(ui, _)| *ui);
+    let object_bytes: Vec<usize> = objects.iter().map(|o| o.bytes).collect();
+    MemoryPlan {
+        strategy: Strategy::GreedyByBreadth,
+        assignments: assign
+            .into_iter()
+            .map(|(ui, oi)| Assignment {
+                node: usages[ui].node,
+                object: oi,
+                offset: 0,
+                bytes: usages[ui].bytes,
+            })
+            .collect(),
+        total_bytes: object_bytes.iter().sum(),
+        object_bytes,
+    }
+}
+
+/// Verify a plan: every pair of assignments with overlapping lifetimes in
+/// the same object must not overlap in byte ranges.
+pub fn validate_plan(usages: &[TensorUsage], plan: &MemoryPlan) -> Result<()> {
+    if usages.len() != plan.assignments.len() {
+        return Err(DriftError::Memory(format!(
+            "plan covers {} tensors, expected {}",
+            plan.assignments.len(),
+            usages.len()
+        )));
+    }
+    for (i, (ua, aa)) in usages.iter().zip(&plan.assignments).enumerate() {
+        if ua.node != aa.node {
+            return Err(DriftError::Memory(format!("assignment {i} node mismatch")));
+        }
+        for (ub, ab) in usages.iter().zip(&plan.assignments).skip(i + 1) {
+            if aa.object != ab.object || !overlap(ua, ub) {
+                continue;
+            }
+            let a_end = aa.offset + aa.bytes;
+            let b_end = ab.offset + ab.bytes;
+            let byte_overlap = aa.offset < b_end && ab.offset < a_end;
+            if byte_overlap {
+                return Err(DriftError::Memory(format!(
+                    "tensors {} and {} overlap in object {} (lifetimes [{},{}] vs [{},{}])",
+                    ua.name, ub.name, aa.object, ua.first, ua.last, ub.first, ub.last
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::lifetime::{liveness_lower_bound, naive_bytes};
+    use crate::util::propcheck::{check, Config};
+    use crate::util::rng::Pcg32;
+
+    fn usage(node: usize, bytes: usize, first: usize, last: usize) -> TensorUsage {
+        TensorUsage { node, name: format!("t{node}"), bytes, first, last }
+    }
+
+    #[test]
+    fn chain_reuses_two_buffers() {
+        // A classic chain a→b→c: disjoint lifetimes alternate, so GREEDY BY
+        // SIZE needs only the two largest concurrent tensors.
+        let us = vec![usage(0, 1000, 0, 1), usage(1, 1000, 1, 2), usage(2, 1000, 2, 3)];
+        let p = plan(&us, Strategy::GreedyBySize);
+        validate_plan(&us, &p).unwrap();
+        assert_eq!(p.total_bytes, 2 * align_up(1000, ALIGN));
+        let naive = plan(&us, Strategy::Naive);
+        assert_eq!(naive.total_bytes, 3 * align_up(1000, ALIGN));
+    }
+
+    #[test]
+    fn greedy_by_size_packs_around_big_tensor() {
+        // Big long-lived tensor + small short ones with pairwise-disjoint
+        // lifetimes: smalls pack into one slot above the big tensor.
+        let us = vec![
+            usage(0, 10_000, 0, 5),
+            usage(1, 100, 1, 1),
+            usage(2, 100, 2, 2),
+            usage(3, 100, 3, 3),
+        ];
+        let p = plan(&us, Strategy::GreedyBySize);
+        validate_plan(&us, &p).unwrap();
+        // Smalls share one slot above the big tensor.
+        assert_eq!(p.total_bytes, align_up(10_000, ALIGN) + align_up(100, ALIGN));
+    }
+
+    #[test]
+    fn breadth_creates_objects() {
+        let us = vec![usage(0, 1000, 0, 1), usage(1, 500, 0, 1), usage(2, 900, 2, 3)];
+        let p = plan(&us, Strategy::GreedyByBreadth);
+        validate_plan(&us, &p).unwrap();
+        // t0 and t1 overlap → 2 objects; t2 reuses the 1000-byte object.
+        assert_eq!(p.object_bytes.len(), 2);
+        assert_eq!(p.total_bytes, align_up(1000, ALIGN) + align_up(500, ALIGN));
+    }
+
+    #[test]
+    fn planners_never_beat_liveness_bound() {
+        let us = vec![
+            usage(0, 3000, 0, 2),
+            usage(1, 2000, 1, 3),
+            usage(2, 1500, 2, 4),
+            usage(3, 800, 3, 5),
+        ];
+        let lb = liveness_lower_bound(&us);
+        for s in [Strategy::GreedyBySize, Strategy::GreedyByBreadth, Strategy::Naive] {
+            let p = plan(&us, s);
+            validate_plan(&us, &p).unwrap();
+            assert!(p.total_bytes >= lb, "{s:?} beat the liveness bound");
+            assert!(p.total_bytes <= naive_bytes(&us) + us.len() * ALIGN);
+        }
+    }
+
+    #[test]
+    fn property_random_lifetimes_valid_plans() {
+        check("memory plans are overlap-free", Config::cases(60), |rng: &mut Pcg32| {
+            let n = 2 + rng.gen_range(40) as usize;
+            let steps = 3 + rng.gen_range(30) as usize;
+            let us: Vec<TensorUsage> = (0..n)
+                .map(|i| {
+                    let first = rng.gen_range(steps as u64) as usize;
+                    let last = first + rng.gen_range((steps - first) as u64 + 1) as usize;
+                    usage(i, 1 + rng.gen_range(5000) as usize, first, last.min(steps))
+                })
+                .collect();
+            for s in [Strategy::Naive, Strategy::GreedyBySize, Strategy::GreedyByBreadth] {
+                let p = plan(&us, s);
+                validate_plan(&us, &p).map_err(|e| format!("{s:?}: {e}"))?;
+                let lb = liveness_lower_bound(&us);
+                if p.total_bytes < lb {
+                    return Err(format!("{s:?} beat lower bound: {} < {lb}", p.total_bytes));
+                }
+            }
+            // Greedy-by-size should never exceed naive.
+            let gs = plan(&us, Strategy::GreedyBySize).total_bytes;
+            let nv = plan(&us, Strategy::Naive).total_bytes;
+            if gs > nv {
+                return Err(format!("greedy {gs} worse than naive {nv}"));
+            }
+            Ok(())
+        });
+    }
+}

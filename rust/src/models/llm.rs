@@ -1,0 +1,327 @@
+//! LLM architecture configs and the transformer graph builder.
+
+use crate::error::Result;
+use crate::graph::{BinOp, EwOp, Graph};
+use crate::quant::{scheme_dtype_for, QuantScheme, WeightClass};
+use crate::tensor::{DType, Shape};
+
+/// Transformer architecture description (decoder-only).
+#[derive(Clone, Copy, Debug)]
+pub struct LlmConfig {
+    pub name: &'static str,
+    pub layers: usize,
+    pub d_model: usize,
+    pub heads_q: usize,
+    pub heads_kv: usize,
+    pub head_dim: usize,
+    pub ffn_hidden: usize,
+    pub vocab: usize,
+    /// Gated FFN (SiLU/GeLU-gated: 3 matrices) vs plain 2-matrix MLP.
+    pub gated_ffn: bool,
+    /// Gate activation.
+    pub act: EwOp,
+    /// LM head shares the embedding matrix.
+    pub tied_embeddings: bool,
+}
+
+impl LlmConfig {
+    /// Parameter count (weights only, no biases — these models are
+    /// bias-free).
+    pub fn params(&self) -> usize {
+        let embed = self.vocab * self.d_model;
+        let qkv = self.d_model * (self.heads_q + 2 * self.heads_kv) * self.head_dim;
+        let o = self.heads_q * self.head_dim * self.d_model;
+        let ffn = if self.gated_ffn {
+            3 * self.d_model * self.ffn_hidden
+        } else {
+            2 * self.d_model * self.ffn_hidden
+        };
+        let norms = 2 * self.d_model;
+        let lm_head = if self.tied_embeddings { 0 } else { embed };
+        embed + self.layers * (qkv + o + ffn + norms) + self.d_model + lm_head
+    }
+
+    /// Model weight bytes under a quantization scheme (scale overheads
+    /// folded in via effective bit widths).
+    pub fn weight_bytes(&self, scheme: QuantScheme) -> u64 {
+        use crate::quant::schemes::effective_bits;
+        let embed_copies = if self.tied_embeddings { 1.0 } else { 2.0 };
+        let embed = embed_copies
+            * (self.vocab * self.d_model) as f64
+            * effective_bits(scheme, WeightClass::Embedding)
+            / 8.0;
+        let qkv_o = (self.d_model * (self.heads_q + 2 * self.heads_kv) * self.head_dim
+            + self.heads_q * self.head_dim * self.d_model) as f64
+            * effective_bits(scheme, WeightClass::Attention)
+            / 8.0;
+        let ffn_n = if self.gated_ffn { 3 } else { 2 } * self.d_model * self.ffn_hidden;
+        let ffn = ffn_n as f64 * effective_bits(scheme, WeightClass::FeedForward) / 8.0;
+        (embed + self.layers as f64 * (qkv_o + ffn)) as u64
+    }
+
+    /// Bytes of KV cache per token (fp16 K and V across all layers).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.layers * self.heads_kv * self.head_dim * 2 // 2 bytes fp16
+    }
+}
+
+/// The paper's evaluation models (public architecture parameters) plus
+/// TinyLM (the model served for real through the PJRT runtime).
+pub fn llm_configs() -> Vec<LlmConfig> {
+    vec![
+        LlmConfig {
+            name: "gemma_2b",
+            layers: 18,
+            d_model: 2048,
+            heads_q: 8,
+            heads_kv: 1, // MQA
+            head_dim: 256,
+            ffn_hidden: 16384,
+            vocab: 256128,
+            gated_ffn: true,
+            act: EwOp::Gelu,
+            tied_embeddings: true,
+        },
+        LlmConfig {
+            name: "gemma2_2b",
+            layers: 26,
+            d_model: 2304,
+            heads_q: 8,
+            heads_kv: 4, // GQA
+            head_dim: 256,
+            ffn_hidden: 9216,
+            vocab: 256128,
+            gated_ffn: true,
+            act: EwOp::Gelu,
+            tied_embeddings: true,
+        },
+        LlmConfig {
+            name: "llama3.2_3b",
+            layers: 28,
+            d_model: 3072,
+            heads_q: 24,
+            heads_kv: 8,
+            head_dim: 128,
+            ffn_hidden: 8192,
+            vocab: 128256,
+            gated_ffn: true,
+            act: EwOp::Silu,
+            tied_embeddings: true,
+        },
+        LlmConfig {
+            name: "llama3.1_8b",
+            layers: 32,
+            d_model: 4096,
+            heads_q: 32,
+            heads_kv: 8,
+            head_dim: 128,
+            ffn_hidden: 14336,
+            vocab: 128256,
+            gated_ffn: true,
+            act: EwOp::Silu,
+            tied_embeddings: false,
+        },
+        LlmConfig {
+            name: "tinylm",
+            layers: 4,
+            d_model: 256,
+            heads_q: 4,
+            heads_kv: 2,
+            head_dim: 64,
+            ffn_hidden: 1024,
+            vocab: 2048,
+            gated_ffn: true,
+            act: EwOp::Silu,
+            tied_embeddings: true,
+        },
+    ]
+}
+
+/// Look up a config by name.
+pub fn llm_config(name: &str) -> Option<LlmConfig> {
+    llm_configs().into_iter().find(|c| c.name == name)
+}
+
+/// Which stage graph to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LlmStageGraph {
+    /// Process `seq` prompt tokens; K/V for the whole prompt are produced
+    /// by the layer itself.
+    Prefill { seq: usize },
+    /// Generate one token against a KV cache holding `cache_len` entries
+    /// (including the current token's slot — the fused QKV kernel writes
+    /// it in place, §3.8).
+    Decode { cache_len: usize },
+}
+
+/// Build the *unfused* transformer graph for one stage. The fusion passes
+/// ([`crate::fusion::fuse_all`]) then produce the deployed form; keeping
+/// construction unfused lets the ablation bench measure each fusion.
+pub fn build_llm_graph(
+    cfg: &LlmConfig,
+    batch: usize,
+    stage: LlmStageGraph,
+    scheme: QuantScheme,
+) -> Result<Graph> {
+    let attn_dt = scheme_dtype_for(scheme, WeightClass::Attention);
+    let ffn_dt = scheme_dtype_for(scheme, WeightClass::FeedForward);
+    let embed_dt = scheme_dtype_for(scheme, WeightClass::Embedding);
+
+    let (seq, stage_tag) = match stage {
+        LlmStageGraph::Prefill { seq } => (seq, "prefill"),
+        LlmStageGraph::Decode { .. } => (1, "decode"),
+    };
+    let mut g = Graph::new(&format!("{}_{stage_tag}_{}", cfg.name, scheme.name()));
+    let d = cfg.d_model;
+    let (hq, hkv, dh) = (cfg.heads_q, cfg.heads_kv, cfg.head_dim);
+    let group = hq / hkv;
+
+    let tokens = g.input("tokens", Shape::bhwc(batch, 1, seq, 1), DType::I32);
+    let mut x = g.embedding("embed", tokens, cfg.vocab, d, embed_dt)?;
+
+    for l in 0..cfg.layers {
+        let p = |n: &str| format!("l{l}_{n}");
+        // ---- attention block (pre-norm) --------------------------------
+        let normed = g.rms_norm(&p("attn_norm"), x)?;
+        let q = g.fully_connected(&p("wq"), normed, hq * dh, attn_dt)?;
+        let k = g.fully_connected(&p("wk"), normed, hkv * dh, attn_dt)?;
+        let v = g.fully_connected(&p("wv"), normed, hkv * dh, attn_dt)?;
+        let q = g.rope(&p("rope_q"), q)?;
+        let k_roped = g.rope(&p("rope_k"), k)?;
+        // Head-folded attention layouts (§3.6).
+        let q_r = g.reshape(&p("q_fold"), q, Shape::bhwc(batch * hkv, 1, seq * group, dh))?;
+        let (scores_k, ctx_v) = match stage {
+            LlmStageGraph::Prefill { seq } => {
+                let k_r = g.reshape(&p("k_fold"), k_roped, Shape::bhwc(batch * hkv, 1, seq, dh))?;
+                let v_r = g.reshape(&p("v_fold"), v, Shape::bhwc(batch * hkv, 1, seq, dh))?;
+                (k_r, v_r)
+            }
+            LlmStageGraph::Decode { cache_len } => {
+                // K cache in OHWI (O=cache, I=d_h); V reversed (§3.8). The
+                // current token's K/V are written in place by the QKV
+                // kernel; `k_roped`/`v` above model those cache writes.
+                let kc = g.input(
+                    &p("kv_k"),
+                    Shape::bhwc(batch * hkv, 1, cache_len, dh),
+                    DType::F16,
+                );
+                let vc = g.input(
+                    &p("kv_v"),
+                    Shape::bhwc(batch * hkv, 1, cache_len, dh),
+                    DType::F16,
+                );
+                let _ = k_roped; // cache write, no further reader in-graph
+                (kc, vc)
+            }
+        };
+        let scores = g.matmul(&p("scores"), q_r, scores_k, true)?;
+        let scaled = g.unary(&p("scale"), scores, EwOp::Scale(1.0 / (dh as f32).sqrt()))?;
+        let probs = g.softmax(&p("probs"), scaled)?;
+        let ctx = g.matmul(&p("ctx"), probs, ctx_v, false)?;
+        let ctx_r = g.reshape(&p("ctx_unfold"), ctx, Shape::bhwc(batch, 1, seq, hq * dh))?;
+        let attn_out = g.fully_connected(&p("wo"), ctx_r, d, attn_dt)?;
+        let x_attn = g.binary(&p("attn_residual"), x, attn_out, BinOp::Add)?;
+
+        // ---- feed-forward block (pre-norm) ------------------------------
+        let normed = g.rms_norm(&p("ffn_norm"), x_attn)?;
+        let ffn_out = if cfg.gated_ffn {
+            let gate = g.fully_connected(&p("ffn_gate"), normed, cfg.ffn_hidden, ffn_dt)?;
+            let gate = g.unary(&p("ffn_act"), gate, cfg.act)?;
+            let up = g.fully_connected(&p("ffn_up"), normed, cfg.ffn_hidden, ffn_dt)?;
+            let prod = g.binary(&p("ffn_mul"), up, gate, BinOp::Mul)?;
+            g.fully_connected(&p("ffn_down"), prod, d, ffn_dt)?
+        } else {
+            let h = g.fully_connected(&p("ffn_up"), normed, cfg.ffn_hidden, ffn_dt)?;
+            let h = g.unary(&p("ffn_act"), h, cfg.act)?;
+            g.fully_connected(&p("ffn_down"), h, d, ffn_dt)?
+        };
+        x = g.binary(&p("ffn_residual"), x_attn, ffn_out, BinOp::Add)?;
+    }
+
+    let normed = g.rms_norm("final_norm", x)?;
+    let logits = g.fully_connected("lm_head", normed, cfg.vocab, embed_dt)?;
+    g.output(logits);
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_public_numbers() {
+        // Published totals: Gemma 2B ≈ 2.5B, Gemma2 2B ≈ 2.6B,
+        // Llama 3.2 3B ≈ 3.2B, Llama 3.1 8B ≈ 8.0B.
+        let check = |name: &str, want_b: f64| {
+            let p = llm_config(name).unwrap().params() as f64 / 1e9;
+            assert!(
+                (p - want_b).abs() / want_b < 0.08,
+                "{name}: {p:.2}B vs published {want_b}B"
+            );
+        };
+        check("gemma_2b", 2.51);
+        check("gemma2_2b", 2.61);
+        check("llama3.2_3b", 3.21);
+        check("llama3.1_8b", 8.03);
+    }
+
+    #[test]
+    fn weight_bytes_ordering_by_scheme() {
+        let cfg = llm_config("gemma2_2b").unwrap();
+        let q8 = cfg.weight_bytes(QuantScheme::Q8);
+        let m844 = cfg.weight_bytes(QuantScheme::Mixed844);
+        let gguf = cfg.weight_bytes(QuantScheme::GgufQ4_0);
+        let f16 = cfg.weight_bytes(QuantScheme::F16);
+        assert!(m844 < gguf && gguf < q8 && q8 < f16, "{m844} {gguf} {q8} {f16}");
+        // Llama 3.1 8B q8 ≈ 8.0–8.6 GB (the Table 2 OOM threshold).
+        let l8 = llm_config("llama3.1_8b").unwrap().weight_bytes(QuantScheme::Q8);
+        assert!(l8 > 7_800_000_000 && l8 < 9_000_000_000, "{l8}");
+    }
+
+    #[test]
+    fn prefill_graph_builds_and_validates() {
+        let cfg = llm_config("tinylm").unwrap();
+        let g = build_llm_graph(&cfg, 1, LlmStageGraph::Prefill { seq: 64 }, QuantScheme::Mixed844)
+            .unwrap();
+        assert_eq!(g.outputs.len(), 1);
+        let logits = g.node(g.outputs[0]);
+        assert_eq!(logits.shape, Shape::bhwc(1, 1, 64, cfg.vocab));
+    }
+
+    #[test]
+    fn decode_graph_has_kv_inputs() {
+        let cfg = llm_config("tinylm").unwrap();
+        let g = build_llm_graph(&cfg, 1, LlmStageGraph::Decode { cache_len: 128 }, QuantScheme::Q8)
+            .unwrap();
+        let kv_inputs = g
+            .nodes
+            .iter()
+            .filter(|n| n.name.contains("kv_"))
+            .count();
+        assert_eq!(kv_inputs, 2 * cfg.layers);
+        let logits = g.node(g.outputs[0]);
+        assert_eq!(logits.shape.w, 1, "decode emits one position");
+    }
+
+    #[test]
+    fn fusion_applies_to_built_graph() {
+        let cfg = llm_config("tinylm").unwrap();
+        let mut g =
+            build_llm_graph(&cfg, 1, LlmStageGraph::Prefill { seq: 32 }, QuantScheme::Mixed844)
+                .unwrap();
+        let before = crate::fusion::live_kernel_count(&g);
+        let rep = crate::fusion::fuse_all(&mut g, Some((cfg.heads_q, cfg.heads_kv, cfg.head_dim)));
+        assert!(rep.qkv_rope_fused >= cfg.layers, "{rep:?}");
+        assert!(rep.add_rmsnorm_fused >= 1, "{rep:?}");
+        assert!(crate::fusion::live_kernel_count(&g) < before);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn kv_bytes_per_token() {
+        let cfg = llm_config("gemma2_2b").unwrap();
+        // 26 layers × 4 kv heads × 256 dim × 2 (K+V) × 2 bytes = 212992.
+        assert_eq!(cfg.kv_bytes_per_token(), 26 * 4 * 256 * 2 * 2);
+    }
+}

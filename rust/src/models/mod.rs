@@ -1,0 +1,16 @@
+//! Model zoo: the paper's evaluation models as graph builders.
+//!
+//! * [`llm`] — Gemma 2B, Gemma2 2B, Llama 3.2 3B, Llama 3.1 8B (public
+//!   architecture dimensions) plus `TinyLM`, the small model actually
+//!   served end-to-end through the PJRT runtime. Builders emit *unfused*
+//!   transformer graphs; [`crate::fusion`] then applies the paper's
+//!   fusions (so ablations can toggle them).
+//! * [`sd`] — Stable Diffusion 1.4's three components (CLIP text encoder,
+//!   UNet, VAE decoder) at their real dimensions for the memory-planning
+//!   (Fig. 3) and latency (Fig. 5, Table 3) experiments.
+
+pub mod llm;
+pub mod sd;
+
+pub use llm::{llm_config, llm_configs, LlmConfig};
+pub use sd::{sd_text_encoder, sd_unet, sd_vae_decoder, SdComponent};

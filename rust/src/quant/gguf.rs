@@ -1,0 +1,107 @@
+//! GGUF `q4_0` group quantization — the format llama.cpp-family baselines
+//! use (paper §4.2: "other open-source solutions often utilize GGUF q4
+//! group quantization, which produces a model size that falls between
+//! those resulting from ML Drift's q8 and 8/4/4 methods").
+
+use crate::error::{DriftError, Result};
+
+/// One q4_0 block: 32 weights, fp16 scale, 4-bit payload, 18 bytes total.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Q4_0Block {
+    /// Scale stored as f32 here (fp16 on disk; 2 bytes counted in sizes).
+    pub scale: f32,
+    /// 32 4-bit values packed into 16 bytes (llama.cpp order: element i
+    /// low nibble of byte i, element i+16 high nibble of byte i).
+    pub packed: [u8; 16],
+}
+
+pub const Q4_0_GROUP: usize = 32;
+/// Bytes per block on disk: 2 (fp16 scale) + 16 (payload).
+pub const Q4_0_BLOCK_BYTES: usize = 18;
+
+/// Quantize a flat weight slice into q4_0 blocks (length must be a
+/// multiple of 32, as in GGUF).
+pub fn quantize_q4_0(w: &[f32]) -> Result<Vec<Q4_0Block>> {
+    if w.len() % Q4_0_GROUP != 0 {
+        return Err(DriftError::Quant(format!(
+            "q4_0 needs length divisible by {Q4_0_GROUP}, got {}",
+            w.len()
+        )));
+    }
+    let mut blocks = Vec::with_capacity(w.len() / Q4_0_GROUP);
+    for chunk in w.chunks_exact(Q4_0_GROUP) {
+        let absmax = chunk.iter().fold(0f32, |m, x| m.max(x.abs()));
+        // q4_0: values mapped to [-8, 7] around zero with scale absmax/8.
+        let scale = if absmax > 0.0 { absmax / 8.0 } else { 1.0 };
+        let mut packed = [0u8; 16];
+        for (i, x) in chunk.iter().enumerate() {
+            let q = ((x / scale).round().clamp(-8.0, 7.0) as i8 + 8) as u8; // bias to [0,15]
+            if i < 16 {
+                packed[i] = (packed[i] & 0xF0) | (q & 0x0F);
+            } else {
+                packed[i - 16] = (packed[i - 16] & 0x0F) | ((q & 0x0F) << 4);
+            }
+        }
+        blocks.push(Q4_0Block { scale, packed });
+    }
+    Ok(blocks)
+}
+
+/// Dequantize q4_0 blocks back to f32.
+pub fn dequantize_q4_0(blocks: &[Q4_0Block]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(blocks.len() * Q4_0_GROUP);
+    for b in blocks {
+        for i in 0..Q4_0_GROUP {
+            let nib = if i < 16 { b.packed[i] & 0x0F } else { b.packed[i - 16] >> 4 };
+            out.push((nib as i8 - 8) as f32 * b.scale);
+        }
+    }
+    out
+}
+
+/// On-disk bytes for `n` weights in q4_0 (4.5 bits/weight).
+pub fn gguf_q4_0_bytes(n: usize) -> usize {
+    n.div_ceil(Q4_0_GROUP) * Q4_0_BLOCK_BYTES
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut rng = Pcg32::seeded(7);
+        let w: Vec<f32> = (0..256).map(|_| rng.gen_f32() * 4.0 - 2.0).collect();
+        let blocks = quantize_q4_0(&w).unwrap();
+        assert_eq!(blocks.len(), 8);
+        let d = dequantize_q4_0(&blocks);
+        assert_eq!(d.len(), w.len());
+        let absmax = w.iter().fold(0f32, |m, x| m.max(x.abs()));
+        for (a, b) in w.iter().zip(&d) {
+            assert!((a - b).abs() <= absmax / 8.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn non_multiple_rejected() {
+        assert!(quantize_q4_0(&[0.0; 33]).is_err());
+    }
+
+    #[test]
+    fn size_is_4_5_bits_per_weight() {
+        let bytes = gguf_q4_0_bytes(1_000_000_032);
+        let bits_per_weight = bytes as f64 * 8.0 / 1_000_000_032.0;
+        assert!((bits_per_weight - 4.5).abs() < 0.01, "{bits_per_weight}");
+    }
+
+    #[test]
+    fn sizes_sit_between_q8_and_844() {
+        // For an FFN-heavy 1M-weight tensor.
+        let n = 1_000_000 / 32 * 32;
+        let q8 = n; // 1 byte each
+        let m844 = n / 2; // int4
+        let gguf = gguf_q4_0_bytes(n);
+        assert!(m844 < gguf && gguf < q8, "{m844} < {gguf} < {q8}");
+    }
+}

@@ -1,0 +1,26 @@
+//! Weight quantization (paper §4.2).
+//!
+//! ML Drift implements two schemes:
+//!
+//! * **q8** — per-(output-)channel symmetric int8 for *all* weights.
+//! * **8/4/4** — mixed precision: int8 for attention weights, int4 for
+//!   embedding and feed-forward weights (per-channel, symmetric).
+//!
+//! Baseline engines use **GGUF q4_0** group quantization (32-element
+//! groups, fp16 scale per group) whose model size lands between q8 and
+//! 8/4/4 — exactly the paper's observation.
+//!
+//! Activation quantization for the prefill path (dynamic per-row absmax
+//! int8, §3.7) lives here too; the Pallas kernel implements the same
+//! algorithm on-device and is tested against it.
+
+pub mod schemes;
+pub mod pack;
+pub mod gguf;
+
+pub use pack::{
+    dequantize_i4, dequantize_i8, int8_matmul_reference, quantize_activations, quantize_i4,
+    quantize_i8, QuantizedTensor,
+};
+pub use schemes::{effective_bits, scheme_dtype_for, QuantScheme, WeightClass};
+pub use gguf::{dequantize_q4_0, gguf_q4_0_bytes, quantize_q4_0, Q4_0Block};

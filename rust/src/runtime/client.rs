@@ -1,0 +1,134 @@
+//! Thin ergonomic wrapper over the `xla` crate's PJRT client.
+
+use std::path::Path;
+
+use crate::error::{DriftError, Result};
+
+/// A PJRT runtime (CPU client in this environment; the same API serves
+/// GPU/TPU PJRT plugins).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled executable loaded from an HLO text artifact.
+pub struct LoadedModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Err(DriftError::Runtime(format!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| DriftError::Runtime("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(LoadedModel {
+            name: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+            exe,
+        })
+    }
+}
+
+impl LoadedModel {
+    /// Execute with literal inputs; returns the decomposed output tuple
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args)?;
+        let out = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| DriftError::Runtime("empty execution result".into()))?
+            .to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Helpers for building literals.
+pub mod lit {
+    use super::*;
+
+    /// i32 row vector of shape (1, n).
+    pub fn tokens_row(tokens: &[i32]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(tokens).reshape(&[1, tokens.len() as i64])?)
+    }
+
+    /// i32 vector of shape (n,).
+    pub fn i32_vec(values: &[i32]) -> xla::Literal {
+        xla::Literal::vec1(values)
+    }
+
+    /// f32 tensor from flat data + dims.
+    pub fn f32_tensor(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// Flatten any literal to f32 host data.
+    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in `rust/tests/` (integration)
+    // so `cargo test --lib` stays independent of `make artifacts`.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        match rt.load_hlo("/nonexistent/model.hlo.txt") {
+            Err(e) => assert!(e.to_string().contains("make artifacts"), "{e}"),
+            Ok(_) => panic!("expected load failure"),
+        }
+    }
+
+    #[test]
+    fn literal_helpers_shapes() {
+        let t = lit::tokens_row(&[1, 2, 3]).unwrap();
+        assert_eq!(t.element_count(), 3);
+        let f = lit::f32_tensor(&[0.0; 6], &[2, 3]).unwrap();
+        assert_eq!(f.element_count(), 6);
+    }
+}
+
+impl LoadedModel {
+    /// Execute and return the raw per-output device buffers (artifacts
+    /// lowered with `return_tuple=False`, i.e. native multi-output).
+    pub fn run_raw(&self, args: &[xla::Literal]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result = self.exe.execute::<xla::Literal>(args)?;
+        if result.is_empty() {
+            return Err(DriftError::Runtime("empty execution result".into()));
+        }
+        Ok(result.remove(0))
+    }
+
+    /// Execute over device buffers (zero host round-trip for carried state
+    /// such as the KV cache) and return per-output device buffers.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let borrowed: Vec<&xla::PjRtBuffer> = args.to_vec();
+        let mut result = self.exe.execute_b(&borrowed)?;
+        if result.is_empty() {
+            return Err(DriftError::Runtime("empty execution result".into()));
+        }
+        Ok(result.remove(0))
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts, execute them, drive generation.
+//!
+//! Python runs once (`make artifacts`): JAX lowers TinyLM (whose hot
+//! spots are Pallas kernels) to **HLO text**; this module loads the text
+//! through the `xla` crate (`HloModuleProto::from_text_file` →
+//! `PjRtClient::compile` → `execute`) and is the only thing the request
+//! path touches — Python is never on it.
+
+pub mod client;
+pub mod tinylm;
+
+pub use client::{LoadedModel, Runtime};
+pub use tinylm::{GenerationResult, KvState, TinyLmManifest, TinyLmRuntime};

@@ -1,0 +1,105 @@
+//! Serving metrics: counters + latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::Histogram;
+
+/// Engine-wide metrics, safe to share across threads.
+#[derive(Debug)]
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub prefill_tokens: AtomicU64,
+    ttft: Mutex<Histogram>,
+    decode_step: Mutex<Histogram>,
+    e2e: Mutex<Histogram>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests_submitted: AtomicU64::new(0),
+            requests_completed: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
+            // 100 µs .. ~100 s exponential buckets.
+            ttft: Mutex::new(Histogram::exponential(1e-4, 1.6, 32)),
+            decode_step: Mutex::new(Histogram::exponential(1e-5, 1.6, 32)),
+            e2e: Mutex::new(Histogram::exponential(1e-4, 1.6, 32)),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_submit(&self) {
+        self.requests_submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, prefill_tokens: usize, gen_tokens: usize, ttft_s: f64, e2e_s: f64) {
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(gen_tokens as u64, Ordering::Relaxed);
+        self.prefill_tokens.fetch_add(prefill_tokens as u64, Ordering::Relaxed);
+        self.ttft.lock().unwrap().record(ttft_s);
+        self.e2e.lock().unwrap().record(e2e_s);
+    }
+
+    pub fn record_decode_step(&self, s: f64) {
+        self.decode_step.lock().unwrap().record(s);
+    }
+
+    pub fn ttft_p50_p95(&self) -> (f64, f64) {
+        let h = self.ttft.lock().unwrap();
+        (h.percentile(50.0), h.percentile(95.0))
+    }
+
+    pub fn decode_step_p50_p95(&self) -> (f64, f64) {
+        let h = self.decode_step.lock().unwrap();
+        (h.percentile(50.0), h.percentile(95.0))
+    }
+
+    pub fn e2e_mean(&self) -> f64 {
+        self.e2e.lock().unwrap().mean()
+    }
+
+    /// One-paragraph human report.
+    pub fn report(&self) -> String {
+        let (t50, t95) = self.ttft_p50_p95();
+        let (d50, d95) = self.decode_step_p50_p95();
+        format!(
+            "requests: {} submitted, {} completed | tokens: {} prefill, {} generated\n\
+             ttft p50 {:.1} ms, p95 {:.1} ms | decode step p50 {:.2} ms, p95 {:.2} ms | e2e mean {:.1} ms",
+            self.requests_submitted.load(Ordering::Relaxed),
+            self.requests_completed.load(Ordering::Relaxed),
+            self.prefill_tokens.load(Ordering::Relaxed),
+            self.tokens_generated.load(Ordering::Relaxed),
+            t50 * 1e3,
+            t95 * 1e3,
+            d50 * 1e3,
+            d95 * 1e3,
+            self.e2e_mean() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let m = Metrics::default();
+        m.record_submit();
+        m.record_submit();
+        m.record_completion(64, 16, 0.05, 0.5);
+        m.record_decode_step(0.002);
+        m.record_decode_step(0.004);
+        assert_eq!(m.requests_submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.requests_completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 16);
+        let (p50, p95) = m.decode_step_p50_p95();
+        assert!(p50 > 0.0 && p95 >= p50);
+        assert!(m.report().contains("requests: 2 submitted"));
+    }
+}

@@ -1,0 +1,24 @@
+//! The L3 serving coordinator: request routing, continuous batching,
+//! stage-aware scheduling, and metrics.
+//!
+//! The paper's contribution is the inference engine; this layer is the
+//! coordinator a deployment wraps around it (the vLLM-router shape):
+//!
+//! * [`request`] — request/response types with per-stage timing.
+//! * [`scheduler`] — a continuous-batching scheduler that admits waiting
+//!   prompts (prefill) and round-robins active sequences (decode),
+//!   decode-first to protect inter-token latency — mirroring §3.7's
+//!   prefill/decode split at the serving level.
+//! * [`server`] — a thread-based engine that owns the PJRT runtime and
+//!   serves a channel of requests (no Python, no async runtime).
+//! * [`metrics`] — TTFT / latency / throughput accounting.
+
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod metrics;
+
+pub use request::{InferenceRequest, InferenceResponse, RequestId};
+pub use scheduler::{Scheduler, SchedulerConfig, SeqState};
+pub use server::{ServerStats, ServingEngine};
+pub use metrics::Metrics;

@@ -1,0 +1,63 @@
+//! Request/response types.
+
+use std::time::Instant;
+
+/// Monotonically assigned request id.
+pub type RequestId = u64;
+
+/// One inference request (token ids in; the tokenizer is out of scope —
+/// the paper benchmarks token-level throughput).
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrival: Instant,
+}
+
+impl InferenceRequest {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        InferenceRequest { id, prompt, max_new_tokens, arrival: Instant::now() }
+    }
+}
+
+/// Completed response with the latency split the benchmarks report.
+#[derive(Clone, Debug)]
+pub struct InferenceResponse {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    /// Queue wait before prefill started.
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    /// Sum of decode step times.
+    pub decode_s: f64,
+    /// Time to first token (queue + prefill + first decode).
+    pub ttft_s: f64,
+    /// Wall-clock end-to-end.
+    pub total_s: f64,
+}
+
+impl InferenceResponse {
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        self.tokens.len() as f64 / self.decode_s.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_throughput() {
+        let r = InferenceResponse {
+            id: 1,
+            tokens: vec![1; 10],
+            queue_s: 0.0,
+            prefill_s: 0.1,
+            decode_s: 0.5,
+            ttft_s: 0.15,
+            total_s: 0.6,
+        };
+        assert!((r.decode_tokens_per_s() - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,274 @@
+//! Continuous-batching scheduler with decode-first stage awareness.
+//!
+//! Invariants (enforced + property-tested):
+//! * a request is either waiting, active, or finished — never two at once;
+//! * at most `max_active` sequences hold KV slots;
+//! * no token is generated past `max_new_tokens`;
+//! * every admitted request eventually finishes (no starvation: FIFO
+//!   admission).
+
+use std::collections::VecDeque;
+
+use crate::serving::request::{InferenceRequest, RequestId};
+
+/// Scheduler tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Max concurrently active sequences (KV slots).
+    pub max_active: usize,
+    /// Admit at most this many prefills per scheduling round (guards
+    /// decode latency against prefill bursts — the serving-level analogue
+    /// of §3.7's stage split).
+    pub max_prefills_per_round: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_active: 4, max_prefills_per_round: 1 }
+    }
+}
+
+/// One active sequence.
+#[derive(Clone, Debug)]
+pub struct SeqState {
+    pub request: InferenceRequest,
+    pub generated: Vec<i32>,
+    /// Next position to decode at (prompt length + generated so far).
+    pub pos: usize,
+    pub prefill_done: bool,
+}
+
+impl SeqState {
+    pub fn finished(&self) -> bool {
+        self.prefill_done && self.generated.len() >= self.request.max_new_tokens
+    }
+}
+
+/// What the engine should do next for one scheduling round.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Run prefill for this request id.
+    Prefill(RequestId),
+    /// Run one decode step for this request id.
+    Decode(RequestId),
+    /// Nothing runnable.
+    Idle,
+}
+
+/// The scheduler: owns waiting queue + active set.
+#[derive(Debug, Default)]
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    waiting: VecDeque<InferenceRequest>,
+    active: Vec<SeqState>,
+    prefills_this_round: usize,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Scheduler { cfg, ..Default::default() }
+    }
+
+    pub fn submit(&mut self, req: InferenceRequest) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn seq(&self, id: RequestId) -> Option<&SeqState> {
+        self.active.iter().find(|s| s.request.id == id)
+    }
+
+    pub fn seq_mut(&mut self, id: RequestId) -> Option<&mut SeqState> {
+        self.active.iter_mut().find(|s| s.request.id == id)
+    }
+
+    /// Decide the next action. Decode-first: active sequences with pending
+    /// tokens are served round-robin before new prefills are admitted,
+    /// except that up to `max_prefills_per_round` prefills interleave per
+    /// round so waiting requests cannot starve while decodes stream.
+    pub fn next_action(&mut self) -> Action {
+        // 1. Any admitted-but-not-prefilled sequence runs its prefill.
+        if let Some(s) = self.active.iter().find(|s| !s.prefill_done) {
+            return Action::Prefill(s.request.id);
+        }
+        // 2. Decode: round-robin the active, unfinished sequences.
+        if let Some(idx) = self.active.iter().position(|s| !s.finished()) {
+            // Rotate so the chosen sequence moves to the back (fairness).
+            let s = self.active.remove(idx);
+            let id = s.request.id;
+            self.active.push(s);
+            self.prefills_this_round = 0;
+            return Action::Decode(id);
+        }
+        // 3. Admit a waiting request if a KV slot is free.
+        if self.active.len() < self.cfg.max_active
+            && self.prefills_this_round < self.cfg.max_prefills_per_round
+        {
+            if let Some(req) = self.waiting.pop_front() {
+                let pos = req.prompt.len();
+                self.active.push(SeqState {
+                    request: req,
+                    generated: Vec::new(),
+                    pos,
+                    prefill_done: false,
+                });
+                self.prefills_this_round += 1;
+                let id = self.active.last().unwrap().request.id;
+                return Action::Prefill(id);
+            }
+        }
+        Action::Idle
+    }
+
+    /// Admission check each round start: pull waiting requests into free
+    /// slots (continuous batching: join mid-stream).
+    pub fn admit(&mut self) {
+        self.prefills_this_round = 0;
+        while self.active.len() < self.cfg.max_active {
+            match self.waiting.pop_front() {
+                Some(req) => {
+                    let pos = req.prompt.len();
+                    self.active.push(SeqState {
+                        request: req,
+                        generated: Vec::new(),
+                        pos,
+                        prefill_done: false,
+                    });
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Remove and return finished sequences.
+    pub fn reap_finished(&mut self) -> Vec<SeqState> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finished() {
+                done.push(self.active.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    fn req(id: u64, prompt_len: usize, gen: usize) -> InferenceRequest {
+        InferenceRequest::new(id, vec![1; prompt_len], gen)
+    }
+
+    #[test]
+    fn admits_up_to_max_active() {
+        let mut s = Scheduler::new(SchedulerConfig { max_active: 2, max_prefills_per_round: 2 });
+        for i in 0..5 {
+            s.submit(req(i, 16, 4));
+        }
+        s.admit();
+        assert_eq!(s.active_len(), 2);
+        assert_eq!(s.waiting_len(), 3);
+    }
+
+    #[test]
+    fn prefill_before_decode_per_sequence() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        s.submit(req(1, 16, 2));
+        s.admit();
+        assert_eq!(s.next_action(), Action::Prefill(1));
+        s.seq_mut(1).unwrap().prefill_done = true;
+        assert_eq!(s.next_action(), Action::Decode(1));
+    }
+
+    #[test]
+    fn round_robin_across_sequences() {
+        let mut s = Scheduler::new(SchedulerConfig { max_active: 2, max_prefills_per_round: 2 });
+        s.submit(req(1, 16, 10));
+        s.submit(req(2, 16, 10));
+        s.admit();
+        for id in [1, 2] {
+            s.seq_mut(id).unwrap().prefill_done = true;
+        }
+        let a = s.next_action();
+        let b = s.next_action();
+        assert_ne!(a, b, "round robin must alternate: {a:?} then {b:?}");
+    }
+
+    #[test]
+    fn finished_sequences_reaped() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        s.submit(req(7, 8, 1));
+        s.admit();
+        s.seq_mut(7).unwrap().prefill_done = true;
+        s.seq_mut(7).unwrap().generated.push(42);
+        let done = s.reap_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].request.id, 7);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn property_conservation_and_termination() {
+        check("scheduler conserves requests and terminates", Config::cases(50), |rng| {
+            let n = 1 + rng.gen_range(12) as usize;
+            let max_active = 1 + rng.gen_range(4) as usize;
+            let mut s = Scheduler::new(SchedulerConfig {
+                max_active,
+                max_prefills_per_round: 1 + rng.gen_range(2) as usize,
+            });
+            for i in 0..n {
+                s.submit(req(i as u64, 8, 1 + rng.gen_range(5) as usize));
+            }
+            let mut finished = 0usize;
+            let mut steps = 0usize;
+            loop {
+                s.admit();
+                if s.active_len() > max_active {
+                    return Err(format!("active {} > max {max_active}", s.active_len()));
+                }
+                match s.next_action() {
+                    Action::Prefill(id) => {
+                        s.seq_mut(id).unwrap().prefill_done = true;
+                    }
+                    Action::Decode(id) => {
+                        let seq = s.seq_mut(id).unwrap();
+                        if seq.generated.len() >= seq.request.max_new_tokens {
+                            return Err(format!("seq {id} decoded past its budget"));
+                        }
+                        seq.generated.push(0);
+                        seq.pos += 1;
+                    }
+                    Action::Idle => {}
+                }
+                finished += s.reap_finished().len();
+                if s.is_idle() {
+                    break;
+                }
+                steps += 1;
+                if steps > 10_000 {
+                    return Err("scheduler did not terminate".into());
+                }
+            }
+            if finished != n {
+                return Err(format!("finished {finished} != submitted {n}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,256 @@
+//! The serving engine: a worker thread owning the PJRT runtime, a
+//! continuous-batching scheduler, and per-sequence KV state.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::error::{DriftError, Result};
+use crate::runtime::tinylm::TinyLmRuntime;
+use crate::runtime::Runtime;
+use crate::serving::metrics::Metrics;
+use crate::serving::request::{InferenceRequest, InferenceResponse, RequestId};
+use crate::serving::scheduler::{Scheduler, SchedulerConfig};
+
+enum Msg {
+    Request(InferenceRequest, Sender<InferenceResponse>),
+    Shutdown,
+}
+
+/// Aggregate statistics snapshot.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub completed: u64,
+    pub tokens_generated: u64,
+    pub report: String,
+}
+
+/// Per-sequence runtime state the scheduler doesn't own: host KV state
+/// and timing.
+struct SeqRuntime {
+    kv: crate::runtime::tinylm::KvState,
+    next_token: i32,
+    prefill_s: f64,
+    decode_s: f64,
+    first_decode_s: Option<f64>,
+    started: Instant,
+    queue_s: f64,
+    reply: Sender<InferenceResponse>,
+}
+
+/// A thread-based serving engine over the TinyLM PJRT runtime.
+pub struct ServingEngine {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl ServingEngine {
+    /// Start the engine: spawns the worker, which loads the artifacts
+    /// (PJRT handles are not `Send`, so the worker thread owns the whole
+    /// runtime; the constructor blocks until loading succeeds or fails).
+    pub fn start(artifacts_dir: &str, sched_cfg: SchedulerConfig) -> Result<ServingEngine> {
+        let metrics = Arc::new(Metrics::default());
+        let m2 = Arc::clone(&metrics);
+        let (tx, rx) = channel();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let dir = artifacts_dir.to_string();
+        let worker = std::thread::Builder::new()
+            .name("mldrift-serving".into())
+            .spawn(move || {
+                let model = match Runtime::cpu().and_then(|rt| TinyLmRuntime::load(&rt, &dir)) {
+                    Ok(m) => {
+                        let _ = ready_tx.send(Ok(()));
+                        m
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(model, sched_cfg, rx, m2)
+            })
+            .map_err(|e| DriftError::Serving(format!("spawn worker: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| DriftError::Serving("worker died during startup".into()))??;
+        Ok(ServingEngine { tx, worker: Some(worker), metrics })
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: InferenceRequest) -> Result<Receiver<InferenceResponse>> {
+        let (reply_tx, reply_rx) = channel();
+        self.metrics.record_submit();
+        self.tx
+            .send(Msg::Request(req, reply_tx))
+            .map_err(|_| DriftError::Serving("engine stopped".into()))?;
+        Ok(reply_rx)
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| DriftError::Serving("engine dropped request".into()))
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            completed: self.metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+            tokens_generated: self
+                .metrics
+                .tokens_generated
+                .load(std::sync::atomic::Ordering::Relaxed),
+            report: self.metrics.report(),
+        }
+    }
+}
+
+impl Drop for ServingEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    model: TinyLmRuntime,
+    sched_cfg: SchedulerConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) {
+    let mut sched = Scheduler::new(sched_cfg);
+    let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
+    let mut replies: HashMap<RequestId, Sender<InferenceResponse>> = HashMap::new();
+    let mut shutdown = false;
+
+    while !shutdown || !sched.is_idle() {
+        // Drain incoming requests (non-blocking when busy, blocking when idle).
+        loop {
+            let msg = if sched.is_idle() && !shutdown {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                Msg::Request(req, reply) => {
+                    replies.insert(req.id, reply);
+                    sched.submit(req);
+                }
+                Msg::Shutdown => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if sched.is_idle() {
+            continue;
+        }
+
+        sched.admit();
+        use crate::serving::scheduler::Action;
+        match sched.next_action() {
+            Action::Prefill(id) => {
+                let seq = sched.seq_mut(id).expect("scheduled seq exists");
+                let queue_s = seq.request.arrival.elapsed().as_secs_f64();
+                let t = Instant::now();
+                match model.prefill(&seq.request.prompt) {
+                    Ok((logits, kv)) => {
+                        let prefill_s = t.elapsed().as_secs_f64();
+                        seq.prefill_done = true;
+                        let next = argmax(&logits) as i32;
+                        let reply = replies.remove(&id).expect("reply channel");
+                        runtimes.insert(
+                            id,
+                            SeqRuntime {
+                                kv,
+                                next_token: next,
+                                prefill_s,
+                                decode_s: 0.0,
+                                first_decode_s: None,
+                                started: seq.request.arrival,
+                                queue_s,
+                                reply,
+                            },
+                        );
+                    }
+                    Err(e) => {
+                        crate::log_error!("prefill failed for request {id}: {e}");
+                        seq.prefill_done = true;
+                        seq.request.max_new_tokens = 0; // finish immediately
+                        replies.remove(&id);
+                    }
+                }
+            }
+            Action::Decode(id) => {
+                let seq = sched.seq_mut(id).expect("scheduled seq exists");
+                if let Some(srt) = runtimes.get_mut(&id) {
+                    let token = srt.next_token;
+                    seq.generated.push(token);
+                    let pos = seq.pos;
+                    seq.pos += 1;
+                    let t = Instant::now();
+                    match model.decode_step(token, pos, &mut srt.kv) {
+                        Ok(logits) => {
+                            let dt = t.elapsed().as_secs_f64();
+                            srt.decode_s += dt;
+                            srt.first_decode_s.get_or_insert(dt);
+                            metrics.record_decode_step(dt);
+                            srt.next_token = argmax(&logits) as i32;
+                        }
+                        Err(e) => {
+                            crate::log_error!("decode failed for request {id}: {e}");
+                            seq.request.max_new_tokens = seq.generated.len();
+                        }
+                    }
+                }
+            }
+            Action::Idle => {}
+        }
+
+        for done in sched.reap_finished() {
+            let id = done.request.id;
+            if let Some(srt) = runtimes.remove(&id) {
+                let total_s = srt.started.elapsed().as_secs_f64();
+                let ttft_s = srt.queue_s + srt.prefill_s + srt.first_decode_s.unwrap_or(0.0);
+                metrics.record_completion(
+                    done.request.prompt.len(),
+                    done.generated.len(),
+                    ttft_s,
+                    total_s,
+                );
+                let _ = srt.reply.send(InferenceResponse {
+                    id,
+                    tokens: done.generated,
+                    queue_s: srt.queue_s,
+                    prefill_s: srt.prefill_s,
+                    decode_s: srt.decode_s,
+                    ttft_s,
+                    total_s,
+                });
+            }
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}

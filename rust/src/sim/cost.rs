@@ -1,0 +1,274 @@
+//! Per-kernel cost model.
+
+use crate::codegen::select::{KernelChoice, KernelVariant, Stage};
+use crate::device::profile::{DeviceProfile, Precision};
+use crate::graph::{Graph, Node, OpKind};
+
+
+/// Cost breakdown for one kernel launch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelCost {
+    /// Floating/integer operations (MACs counted as 2 ops).
+    pub flops: f64,
+    /// Bytes moved to/from DRAM (weights at quantized width, activations
+    /// at their dtype, texture-cache boost already applied).
+    pub bytes: f64,
+    /// Compute-limited time (s).
+    pub t_compute: f64,
+    /// Bandwidth-limited time (s).
+    pub t_memory: f64,
+    /// Launch/driver overhead (s).
+    pub t_launch: f64,
+}
+
+impl KernelCost {
+    /// Total kernel time under the roofline: bound by the slower resource.
+    pub fn total(&self) -> f64 {
+        self.t_compute.max(self.t_memory) + self.t_launch
+    }
+
+    /// True when compute-bound.
+    pub fn compute_bound(&self) -> bool {
+        self.t_compute >= self.t_memory
+    }
+}
+
+/// FLOP count for a node (2 ops per MAC).
+pub fn node_flops(g: &Graph, n: &Node) -> f64 {
+    let out = n.shape;
+    let out_el = out.elements() as f64;
+    let base = match &n.kind {
+        OpKind::Conv2D { kh, kw, .. } => {
+            let in_c = n.weight.map(|w| w.shape.i).unwrap_or(0) as f64;
+            2.0 * out_el * in_c * (*kh as f64) * (*kw as f64)
+        }
+        OpKind::FullyConnected { .. } => {
+            let in_c = n.weight.map(|w| w.shape.i).unwrap_or(0) as f64;
+            2.0 * out_el * in_c
+        }
+        OpKind::MatMul { .. } => {
+            let k = g.nodes[n.inputs[0]].shape.c as f64;
+            2.0 * out_el * k
+        }
+        OpKind::Embedding { .. } => out_el, // gather
+        OpKind::RmsNorm { .. } | OpKind::LayerNorm { .. } | OpKind::GroupNorm { .. } => {
+            4.0 * out_el
+        }
+        OpKind::FusedAddRmsNorm { .. } => 5.0 * out_el,
+        OpKind::Softmax => 5.0 * out_el,
+        OpKind::Rope { .. } | OpKind::FusedQkvRope { .. } => 4.0 * out_el,
+        OpKind::QuantAct => 2.0 * out_el,
+        OpKind::Elementwise(_) | OpKind::Binary(_) => out_el,
+        OpKind::Upsample2x | OpKind::AvgPool { .. } | OpKind::Reshape { .. }
+        | OpKind::Transpose { .. } | OpKind::Concat { .. } => 0.0,
+        OpKind::Input | OpKind::Const => 0.0,
+    };
+    // Epilogues and fused adds are ~free relative to matmuls but counted.
+    base + (n.epilogue.len() as f64 + n.fused_adds.len() as f64) * out_el
+}
+
+/// Bytes moved by a node's kernel.
+pub fn node_bytes(g: &Graph, n: &Node, choice: &KernelChoice) -> f64 {
+    let act_bytes = |node: &Node| -> f64 {
+        node.dtype.bytes_for(node.shape.padded_elements()) as f64
+    };
+    // Inputs (reads).
+    let mut bytes: f64 = n.inputs.iter().map(|&i| act_bytes(&g.nodes[i])).sum();
+    bytes += n.fused_adds.iter().map(|&(i, _)| act_bytes(&g.nodes[i])).sum::<f64>();
+    // Weights at quantized width (the decisive decode-path term).
+    if let Some(w) = &n.weight {
+        // Embedding gathers read only the used rows; lm_head-style FC reads
+        // all of them. Embedding op → rows = out elements / dim.
+        let wbytes = match &n.kind {
+            OpKind::Embedding { dim, .. } => {
+                let rows = n.shape.elements() / dim;
+                w.dtype.bytes_for(rows * dim) as f64
+            }
+            _ => w.bytes() as f64,
+        };
+        bytes += wbytes;
+    }
+    // Output (write).
+    bytes += act_bytes(n);
+    // Texture path: better cache behaviour on spatially-local reads.
+    if choice.act_storage.is_texture() {
+        bytes /= choice_boost(choice);
+    }
+    bytes
+}
+
+fn choice_boost(choice: &KernelChoice) -> f64 {
+    // Boost applies to texture-friendly access patterns; stored on the
+    // choice as a constant factor (device-level boost is applied by the
+    // caller via the profile; this keeps cost pure).
+    match choice.variant {
+        KernelVariant::Conv2dGeneric | KernelVariant::Conv2dWinograd => 1.15,
+        _ => 1.0,
+    }
+}
+
+/// Arithmetic precision the kernel computes in.
+pub fn kernel_precision(n: &Node, choice: &KernelChoice, dev: &DeviceProfile) -> Precision {
+    match choice.variant {
+        KernelVariant::FcGemmInt8Dot => Precision::Int8,
+        // Decode matvec dequantizes to fp16 in-register: compute runs at
+        // float rate (it's memory-bound anyway).
+        _ => {
+            if dev.extensions.fp16_arith && n.dtype == crate::tensor::DType::F16 {
+                Precision::Fp16
+            } else {
+                Precision::Fp32
+            }
+        }
+    }
+}
+
+/// Full cost for one node under a kernel choice.
+pub fn kernel_cost(
+    g: &Graph,
+    n: &Node,
+    choice: &KernelChoice,
+    dev: &DeviceProfile,
+    _stage: Stage,
+) -> KernelCost {
+    if n.absorbed_into.is_some() || !n.kind.is_compute() {
+        return KernelCost::default();
+    }
+    let mut flops = node_flops(g, n);
+    if choice.variant == KernelVariant::Conv2dWinograd {
+        flops /= 2.25; // F(4×4,3×3) multiply reduction
+    }
+    // Kernel-family efficiency: `eff_compute` is calibrated on tuned FC
+    // GEMMs; spatial convolutions and attention matmuls achieve a lower
+    // fraction of peak (irregular access, small K tiles). Vendors with
+    // texture-path conv kernels (Adreno, Apple) retain more of it —
+    // calibrated against the paper's SD end-to-end checkpoints (§4.1).
+    let family_eff = match choice.variant {
+        KernelVariant::Conv2dGeneric | KernelVariant::Conv2dWinograd => {
+            match dev.vendor {
+                crate::device::profile::Vendor::Qualcomm => 0.95,
+                crate::device::profile::Vendor::Apple => 0.60,
+                crate::device::profile::Vendor::Arm => 0.65,
+                _ => 0.50,
+            }
+        }
+        KernelVariant::MatMulTiled => 0.65,
+        _ => 1.0,
+    };
+    let bytes = node_bytes(g, n, choice);
+    let precision = kernel_precision(n, choice, dev);
+    let gflops = dev.effective_gflops(precision).max(1e-9);
+    let bw = dev.effective_bandwidth().max(1e-9);
+    let tex_boost = if choice.act_storage.is_texture() { dev.texture_cache_boost } else { 1.0 };
+    KernelCost {
+        flops,
+        bytes,
+        t_compute: flops / (gflops * family_eff * 1e9),
+        t_memory: bytes / (bw * 1e9 * tex_boost),
+        t_launch: dev.launch_overhead_us * 1e-6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::select::{select_kernel, Stage};
+    use crate::device::registry::device;
+    use crate::graph::Graph;
+    use crate::tensor::{DType, Shape};
+
+    fn fc_graph(seq: usize, wdtype: DType) -> (Graph, usize) {
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 1, seq, 2048), DType::F16);
+        let fc = g.fully_connected("fc", x, 2048, wdtype).unwrap();
+        g.output(fc);
+        (g, fc)
+    }
+
+    #[test]
+    fn decode_fc_is_memory_bound_prefill_compute_bound() {
+        let dev = device("adreno_750").unwrap();
+        // Decode: seq 1.
+        let (g, fc) = fc_graph(1, DType::I8);
+        let choice = select_kernel(&g.nodes[fc], &dev, Stage::Decode);
+        let c = kernel_cost(&g, &g.nodes[fc], &choice, &dev, Stage::Decode);
+        assert!(!c.compute_bound(), "decode matvec must be memory-bound: {c:?}");
+        // Prefill: seq 1024.
+        let (g, fc) = fc_graph(1024, DType::I8);
+        let choice = select_kernel(&g.nodes[fc], &dev, Stage::Prefill);
+        let c = kernel_cost(&g, &g.nodes[fc], &choice, &dev, Stage::Prefill);
+        assert!(c.compute_bound(), "long-seq GEMM must be compute-bound: {c:?}");
+    }
+
+    #[test]
+    fn quantization_speeds_decode_not_prefill() {
+        let dev = device("adreno_750").unwrap();
+        let time = |wdtype: DType, seq: usize, stage: Stage| {
+            let (g, fc) = fc_graph(seq, wdtype);
+            let choice = select_kernel(&g.nodes[fc], &dev, stage);
+            kernel_cost(&g, &g.nodes[fc], &choice, &dev, stage).total()
+        };
+        let d8 = time(DType::I8, 1, Stage::Decode);
+        let d4 = time(DType::I4, 1, Stage::Decode);
+        // int4 halves weight traffic → decode nearly 2× faster (launch
+        // overhead prevents exactly 2×).
+        let ratio = d8 / d4;
+        assert!(ratio > 1.4 && ratio < 2.1, "decode q8/q4 ratio {ratio}");
+        let p8 = time(DType::I8, 1024, Stage::Prefill);
+        let p4 = time(DType::I4, 1024, Stage::Prefill);
+        let pratio = p8 / p4;
+        assert!(pratio < 1.1, "prefill barely moves with weight quant: {pratio}");
+    }
+
+    #[test]
+    fn absorbed_nodes_cost_nothing() {
+        let dev = device("adreno_750").unwrap();
+        let (mut g, fc) = fc_graph(8, DType::I8);
+        let act = g.unary("gelu", fc, crate::graph::EwOp::Gelu).unwrap();
+        g.outputs = vec![act];
+        crate::fusion::passes::fuse_elementwise(&mut g);
+        let choice = select_kernel(&g.nodes[act], &dev, Stage::Single);
+        let c = kernel_cost(&g, &g.nodes[act], &choice, &dev, Stage::Single);
+        assert_eq!(c.total(), 0.0);
+    }
+
+    #[test]
+    fn winograd_cuts_conv_compute() {
+        let dev = device("adreno_750").unwrap();
+        let mut g = Graph::new("t");
+        let x = g.input("x", Shape::bhwc(1, 64, 64, 320), DType::F16);
+        let c = g.conv2d("c", x, 320, 3, 1, 1, DType::F16).unwrap();
+        g.output(c);
+        let node = &g.nodes[c];
+        let win = select_kernel(node, &dev, Stage::Single);
+        assert_eq!(win.variant, KernelVariant::Conv2dWinograd);
+        let cost_win = kernel_cost(&g, node, &win, &dev, Stage::Single);
+        let mut generic = win.clone();
+        generic.variant = KernelVariant::Conv2dGeneric;
+        let cost_gen = kernel_cost(&g, node, &generic, &dev, Stage::Single);
+        assert!(cost_win.t_compute < cost_gen.t_compute);
+    }
+
+    #[test]
+    fn int8_dot_path_fast_on_extension_devices() {
+        let adreno = device("adreno_750").unwrap();
+        let nv = device("rtx_4090").unwrap();
+        let (g, fc) = fc_graph(1024, DType::I8);
+        let a_choice = select_kernel(&g.nodes[fc], &adreno, Stage::Prefill);
+        let a = kernel_cost(&g, &g.nodes[fc], &a_choice, &adreno, Stage::Prefill);
+        // Adreno int8 path beats its own fp16 path ~2–3×.
+        let mut f16_choice = a_choice.clone();
+        f16_choice.variant = KernelVariant::FcGemmTiled;
+        let f = kernel_cost(&g, &g.nodes[fc], &f16_choice, &adreno, Stage::Prefill);
+        assert!(a.t_compute < f.t_compute);
+        // NVIDIA prefill runs at fp32 rate (tensor cores unreachable).
+        let n_choice = select_kernel(&g.nodes[fc], &nv, Stage::Prefill);
+        assert_eq!(n_choice.variant, KernelVariant::FcGemmTiled);
+        let n = kernel_cost(&g, &g.nodes[fc], &n_choice, &nv, Stage::Prefill);
+        assert_eq!(
+            n.t_compute,
+            n.flops / (nv.fp32_gflops * nv.eff_compute * 1e9),
+            "fp32 fallback"
+        );
+    }
+}

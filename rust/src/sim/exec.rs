@@ -1,0 +1,232 @@
+//! Execution-plan construction and whole-graph simulation.
+
+use crate::codegen::select::{select_kernel, KernelChoice, KernelVariant, Stage};
+use crate::device::profile::DeviceProfile;
+use crate::error::{DriftError, Result};
+use crate::graph::Graph;
+use crate::memory::{lifetimes, plan as mem_plan, Strategy};
+use crate::sim::cost::{kernel_cost, KernelCost};
+use crate::tensor::DType;
+
+/// One planned kernel: node + specialization + cost.
+#[derive(Clone, Debug)]
+pub struct PlannedKernel {
+    pub node: usize,
+    pub name: String,
+    pub choice: KernelChoice,
+    pub cost: KernelCost,
+}
+
+/// A compiled execution plan for one graph on one device.
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    pub graph_name: String,
+    pub device_name: &'static str,
+    pub stage: Stage,
+    pub kernels: Vec<PlannedKernel>,
+    /// Intermediate-tensor arena size from the memory planner.
+    pub arena_bytes: usize,
+    /// Total weight bytes (quantized widths).
+    pub weight_bytes: usize,
+}
+
+/// Simulation results for a plan.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub total_s: f64,
+    pub launch_s: f64,
+    pub compute_s: f64,
+    pub memory_s: f64,
+    pub kernel_count: usize,
+    pub flops: f64,
+    pub bytes: f64,
+    /// Fraction of kernel time spent in compute-bound kernels.
+    pub compute_bound_frac: f64,
+}
+
+impl SimReport {
+    pub fn tokens_per_s(&self, tokens: usize) -> f64 {
+        if self.total_s <= 0.0 {
+            return 0.0;
+        }
+        tokens as f64 / self.total_s
+    }
+}
+
+/// Build an execution plan: per-node kernel selection, activation-quant
+/// kernel insertion accounting (§3.7), memory planning, and an OOM check
+/// against the device budget.
+pub fn build_plan(
+    g: &Graph,
+    dev: &DeviceProfile,
+    stage: Stage,
+    memory_strategy: Strategy,
+) -> Result<ExecutionPlan> {
+    g.validate()?;
+    let mut kernels = Vec::new();
+    for n in &g.nodes {
+        if !n.kind.is_compute() || n.absorbed_into.is_some() {
+            continue;
+        }
+        let choice = select_kernel(n, dev, stage);
+        // §3.7: the prefill int8 path needs a dedicated activation-quant
+        // kernel before each matmul-family op. Its cost: read+write the
+        // input activations once, trivial compute.
+        if choice.needs_act_quant {
+            let in_node = &g.nodes[n.inputs[0]];
+            let in_bytes =
+                in_node.dtype.bytes_for(in_node.shape.padded_elements()) as f64;
+            let quant_cost = KernelCost {
+                flops: 2.0 * in_node.shape.elements() as f64,
+                bytes: in_bytes + in_bytes / 2.0, // read fp16, write int8+scales
+                t_compute: 2.0 * in_node.shape.elements() as f64
+                    / (dev.effective_gflops(crate::device::profile::Precision::Fp16) * 1e9),
+                t_memory: (in_bytes * 1.5) / (dev.effective_bandwidth() * 1e9),
+                t_launch: dev.launch_overhead_us * 1e-6,
+            };
+            kernels.push(PlannedKernel {
+                node: n.id,
+                name: format!("{}_act_quant", n.name),
+                choice: KernelChoice {
+                    variant: KernelVariant::QuantizeAct,
+                    ..choice.clone()
+                },
+                cost: quant_cost,
+            });
+        }
+        let cost = kernel_cost(g, n, &choice, dev, stage);
+        kernels.push(PlannedKernel { node: n.id, name: n.name.clone(), choice, cost });
+    }
+
+    let usages = lifetimes(g, DType::F16);
+    let mplan = mem_plan(&usages, memory_strategy);
+    let weight_bytes = g.weight_bytes();
+    let required = weight_bytes as u64 + mplan.total_bytes as u64;
+    if required > dev.mem_budget_bytes {
+        return Err(DriftError::OutOfMemory {
+            required_bytes: required,
+            budget_bytes: dev.mem_budget_bytes,
+        });
+    }
+    Ok(ExecutionPlan {
+        graph_name: g.name.clone(),
+        device_name: dev.name,
+        stage,
+        kernels,
+        arena_bytes: mplan.total_bytes,
+        weight_bytes,
+    })
+}
+
+/// Simulate a plan: sequential kernel execution (the paper synchronizes
+/// after each token; within a token, kernels serialize on data deps and
+/// mobile GPUs execute one compute kernel at a time).
+pub fn simulate(plan: &ExecutionPlan) -> SimReport {
+    let mut r = SimReport { kernel_count: plan.kernels.len(), ..Default::default() };
+    let mut compute_bound_time = 0.0;
+    for k in &plan.kernels {
+        let t = k.cost.total();
+        r.total_s += t;
+        r.launch_s += k.cost.t_launch;
+        r.compute_s += k.cost.t_compute;
+        r.memory_s += k.cost.t_memory;
+        r.flops += k.cost.flops;
+        r.bytes += k.cost.bytes;
+        if k.cost.compute_bound() {
+            compute_bound_time += t;
+        }
+    }
+    if r.total_s > 0.0 {
+        r.compute_bound_frac = compute_bound_time / r.total_s;
+    }
+    r
+}
+
+/// Convenience: plan + simulate.
+pub fn simulate_graph(
+    g: &Graph,
+    dev: &DeviceProfile,
+    stage: Stage,
+    memory_strategy: Strategy,
+) -> Result<(ExecutionPlan, SimReport)> {
+    let plan = build_plan(g, dev, stage, memory_strategy)?;
+    let report = simulate(&plan);
+    Ok((plan, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::registry::device;
+    use crate::graph::Graph;
+    use crate::tensor::{DType, Shape};
+
+    fn mlp(seq: usize, wdtype: DType) -> Graph {
+        let mut g = Graph::new("mlp");
+        let x = g.input("x", Shape::bhwc(1, 1, seq, 1024), DType::F16);
+        let h = g.fully_connected("up", x, 4096, wdtype).unwrap();
+        let h = g.unary("gelu", h, crate::graph::EwOp::Gelu).unwrap();
+        let y = g.fully_connected("down", h, 1024, wdtype).unwrap();
+        g.output(y);
+        g
+    }
+
+    #[test]
+    fn plan_and_simulate_smoke() {
+        let dev = device("adreno_750").unwrap();
+        let g = mlp(128, DType::I8);
+        let (plan, rep) = simulate_graph(&g, &dev, Stage::Prefill, Strategy::GreedyBySize).unwrap();
+        assert!(rep.total_s > 0.0);
+        assert!(rep.flops > 0.0);
+        assert!(plan.weight_bytes > 0);
+        // Prefill int8 path inserts act-quant kernels before each FC.
+        let quants = plan
+            .kernels
+            .iter()
+            .filter(|k| k.choice.variant == KernelVariant::QuantizeAct)
+            .count();
+        assert_eq!(quants, 2);
+    }
+
+    #[test]
+    fn oom_on_huge_model() {
+        let dev = device("adreno_750").unwrap(); // ~4.96 GB budget
+        let mut g = Graph::new("huge");
+        let x = g.input("x", Shape::bhwc(1, 1, 1, 8192), DType::F16);
+        // 8192×8192 fp16 ≈ 134 MB per layer × 48 layers ≈ 6.4 GB.
+        let mut h = x;
+        for i in 0..48 {
+            h = g.fully_connected(&format!("fc{i}"), h, 8192, DType::F16).unwrap();
+        }
+        g.output(h);
+        let err = build_plan(&g, &dev, Stage::Decode, Strategy::GreedyBySize).unwrap_err();
+        assert!(matches!(err, DriftError::OutOfMemory { .. }), "{err}");
+    }
+
+    #[test]
+    fn fusion_reduces_simulated_time() {
+        let dev = device("adreno_750").unwrap();
+        let mut fused = mlp(256, DType::I8);
+        crate::fusion::passes::fuse_all(&mut fused, None);
+        let unfused = mlp(256, DType::I8);
+        let (_, t_fused) =
+            simulate_graph(&fused, &dev, Stage::Prefill, Strategy::GreedyBySize).unwrap();
+        let (_, t_unfused) =
+            simulate_graph(&unfused, &dev, Stage::Prefill, Strategy::GreedyBySize).unwrap();
+        assert!(
+            t_fused.total_s < t_unfused.total_s,
+            "fused {} vs unfused {}",
+            t_fused.total_s,
+            t_unfused.total_s
+        );
+        assert!(t_fused.kernel_count < t_unfused.kernel_count);
+    }
+
+    #[test]
+    fn decode_dominated_by_memory() {
+        let dev = device("adreno_750").unwrap();
+        let g = mlp(1, DType::I4);
+        let (_, rep) = simulate_graph(&g, &dev, Stage::Decode, Strategy::GreedyBySize).unwrap();
+        assert!(rep.compute_bound_frac < 0.2, "decode should be memory-bound: {rep:?}");
+    }
+}

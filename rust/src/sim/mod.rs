@@ -1,0 +1,24 @@
+//! GPU roofline performance simulator.
+//!
+//! The paper evaluates on physical GPUs; none are reachable here, so
+//! latency comes from an analytical roofline over the *real execution
+//! plans* the compiler emits (substitution documented in DESIGN.md §1).
+//! For every planned kernel:
+//!
+//! ```text
+//! t = max(flops / effective_compute, bytes / effective_bandwidth) + launch
+//! ```
+//!
+//! with per-device effective compute (fp16 / fp32 / int8-extension paths),
+//! effective bandwidth, texture-cache boosts, and launch overheads from
+//! [`crate::device`]. The paper's headline phenomena all emerge from this
+//! model because they are roofline phenomena: prefill is compute-bound,
+//! decode is memory-bound (so weight quantization speeds decode by the
+//! byte ratio but barely moves prefill), int8 extensions move only
+//! prefill, and missing tensor-core access costs NVIDIA prefill 4–7×.
+
+pub mod cost;
+pub mod exec;
+
+pub use cost::{kernel_cost, KernelCost};
+pub use exec::{simulate_graph, ExecutionPlan, PlannedKernel, SimReport};

@@ -1,0 +1,94 @@
+//! Element data types supported by the framework.
+
+/// Element type of a tensor, weight store, or KV cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 32-bit IEEE float (NVIDIA-OpenCL fallback path in the paper).
+    F32,
+    /// 16-bit IEEE float (primary activation type).
+    F16,
+    /// bfloat16 (TPU-side accumulation format for the Pallas kernels).
+    BF16,
+    /// Per-channel quantized signed 8-bit integer.
+    I8,
+    /// Packed signed 4-bit integer (two elements per byte).
+    I4,
+    /// Unsigned 8-bit (e.g. token bytes).
+    U8,
+    /// 32-bit signed integer (token ids, positions).
+    I32,
+    /// Boolean mask.
+    Bool,
+}
+
+impl DType {
+    /// Size of one element in **bits** (I4 is sub-byte).
+    pub fn bits(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 32,
+            DType::F16 | DType::BF16 => 16,
+            DType::I8 | DType::U8 | DType::Bool => 8,
+            DType::I4 => 4,
+        }
+    }
+
+    /// Bytes needed to store `n` elements of this type, including the
+    /// final partial byte for sub-byte types.
+    pub fn bytes_for(self, n: usize) -> usize {
+        (n * self.bits()).div_ceil(8)
+    }
+
+    /// Whether this is a quantized integer weight type.
+    pub fn is_quantized(self) -> bool {
+        matches!(self, DType::I8 | DType::I4)
+    }
+
+    /// Whether this is a floating-point type.
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F16 | DType::BF16)
+    }
+
+    /// Short lowercase name used in shader codegen and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::I8 => "i8",
+            DType::I4 => "i4",
+            DType::U8 => "u8",
+            DType::I32 => "i32",
+            DType::Bool => "bool",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.bits(), 32);
+        assert_eq!(DType::F16.bits(), 16);
+        assert_eq!(DType::I4.bits(), 4);
+        assert_eq!(DType::F32.bytes_for(3), 12);
+        assert_eq!(DType::I4.bytes_for(3), 2); // packed: 1.5 bytes → 2
+        assert_eq!(DType::I4.bytes_for(4), 2);
+    }
+
+    #[test]
+    fn classification() {
+        assert!(DType::I8.is_quantized());
+        assert!(DType::I4.is_quantized());
+        assert!(!DType::F16.is_quantized());
+        assert!(DType::F16.is_float());
+        assert!(!DType::I8.is_float());
+    }
+}

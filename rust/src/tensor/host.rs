@@ -1,0 +1,224 @@
+//! Host-side tensors: canonical f32 storage + layout packing.
+//!
+//! Host tensors are the reference representation used to validate layout
+//! transforms, feed the quantizer, and marshal data into PJRT literals.
+//! GPU-side representations are produced by packing through an
+//! [`ActivationLayout`] / [`WeightLayout`].
+
+use crate::error::{DriftError, Result};
+use crate::tensor::layout::{ActivationLayout, WeightLayout, WeightShape};
+use crate::tensor::shape::Shape;
+use crate::util::rng::Pcg32;
+
+/// A host activation tensor in canonical BHWDC row-major order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Shape) -> Self {
+        HostTensor { data: vec![0.0; shape.elements()], shape }
+    }
+
+    /// Fill from a function of logical coordinates.
+    pub fn from_fn(shape: Shape, mut f: impl FnMut(usize, usize, usize, usize, usize) -> f32) -> Self {
+        let mut t = Self::zeros(shape);
+        for b in 0..shape.b {
+            for h in 0..shape.h {
+                for w in 0..shape.w {
+                    for d in 0..shape.d {
+                        for c in 0..shape.c {
+                            let idx = shape.logical_index(b, h, w, d, c);
+                            t.data[idx] = f(b, h, w, d, c);
+                        }
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// From an existing flat buffer (must match element count).
+    pub fn from_vec(shape: Shape, data: Vec<f32>) -> Result<Self> {
+        if data.len() != shape.elements() {
+            return Err(DriftError::Shape(format!(
+                "data length {} != shape {} elements {}",
+                data.len(),
+                shape,
+                shape.elements()
+            )));
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    /// Uniform random in [-1, 1) from a seeded generator.
+    pub fn random(shape: Shape, rng: &mut Pcg32) -> Self {
+        let data = (0..shape.elements()).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        HostTensor { shape, data }
+    }
+
+    pub fn get(&self, b: usize, h: usize, w: usize, d: usize, c: usize) -> f32 {
+        self.data[self.shape.logical_index(b, h, w, d, c)]
+    }
+
+    pub fn set(&mut self, b: usize, h: usize, w: usize, d: usize, c: usize, v: f32) {
+        let idx = self.shape.logical_index(b, h, w, d, c);
+        self.data[idx] = v;
+    }
+
+    /// Pack into a physical layout. Padding positions are zero-filled
+    /// (required for SIMD correctness per §3.1).
+    pub fn pack(&self, layout: &ActivationLayout) -> Vec<f32> {
+        let mut out = vec![0.0; layout.padded_elements(&self.shape)];
+        let s = self.shape;
+        for b in 0..s.b {
+            for h in 0..s.h {
+                for w in 0..s.w {
+                    for d in 0..s.d {
+                        for c in 0..s.c {
+                            out[layout.linear_index(&s, b, h, w, d, c)] =
+                                self.get(b, h, w, d, c);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`pack`].
+    pub fn unpack(shape: Shape, layout: &ActivationLayout, packed: &[f32]) -> Result<Self> {
+        if packed.len() != layout.padded_elements(&shape) {
+            return Err(DriftError::Layout(format!(
+                "packed length {} != expected {}",
+                packed.len(),
+                layout.padded_elements(&shape)
+            )));
+        }
+        let mut t = Self::zeros(shape);
+        for b in 0..shape.b {
+            for h in 0..shape.h {
+                for w in 0..shape.w {
+                    for d in 0..shape.d {
+                        for c in 0..shape.c {
+                            let v = packed[layout.linear_index(&shape, b, h, w, d, c)];
+                            t.set(b, h, w, d, c, v);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(t)
+    }
+}
+
+/// A host weight tensor in canonical OHWDI row-major order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostWeights {
+    pub shape: WeightShape,
+    pub data: Vec<f32>,
+}
+
+impl HostWeights {
+    pub fn zeros(shape: WeightShape) -> Self {
+        HostWeights { data: vec![0.0; shape.elements()], shape }
+    }
+
+    pub fn random(shape: WeightShape, rng: &mut Pcg32) -> Self {
+        let data = (0..shape.elements()).map(|_| rng.gen_f32() * 2.0 - 1.0).collect();
+        HostWeights { shape, data }
+    }
+
+    #[inline]
+    fn logical_index(&self, o: usize, h: usize, w: usize, d: usize, i: usize) -> usize {
+        let s = self.shape;
+        debug_assert!(o < s.o && h < s.h && w < s.w && d < s.d && i < s.i);
+        (((o * s.h + h) * s.w + w) * s.d + d) * s.i + i
+    }
+
+    pub fn get(&self, o: usize, h: usize, w: usize, d: usize, i: usize) -> f32 {
+        self.data[self.logical_index(o, h, w, d, i)]
+    }
+
+    /// Rearrange into a physical weight layout (the paper's *weights
+    /// conversion* transformation, §3.4), zero-padding O and I to slice
+    /// multiples and G·S_O coverage.
+    pub fn pack(&self, layout: &WeightLayout) -> Vec<f32> {
+        let mut out = vec![0.0; layout.padded_elements(&self.shape)];
+        let s = self.shape;
+        for o in 0..s.o {
+            for h in 0..s.h {
+                for w in 0..s.w {
+                    for d in 0..s.d {
+                        for i in 0..s.i {
+                            out[layout.linear_index(&s, o, h, w, d, i)] =
+                                self.get(o, h, w, d, i);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Pcg32::seeded(11);
+        let shape = Shape::bhwc(2, 3, 4, 5);
+        let t = HostTensor::random(shape, &mut rng);
+        for layout in [
+            ActivationLayout::phwc4(),
+            ActivationLayout::hswbdc4(),
+            ActivationLayout::dshwbc4(),
+        ] {
+            let packed = t.pack(&layout);
+            let back = HostTensor::unpack(shape, &layout, &packed).unwrap();
+            assert_eq!(t, back, "roundtrip failed for {layout}");
+        }
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let shape = Shape::hwc(1, 1, 5); // 2 slices, 3 padded lanes
+        let t = HostTensor::from_fn(shape, |_, _, _, _, c| (c + 1) as f32);
+        let packed = t.pack(&ActivationLayout::phwc4());
+        assert_eq!(packed.len(), 8);
+        // Lane values 1..5 present; padding zero.
+        let nonzero: Vec<f32> = packed.iter().copied().filter(|v| *v != 0.0).collect();
+        assert_eq!(nonzero.len(), 5);
+        assert_eq!(packed.iter().filter(|v| **v == 0.0).count(), 3);
+    }
+
+    #[test]
+    fn from_vec_length_checked() {
+        assert!(HostTensor::from_vec(Shape::linear(4), vec![0.0; 3]).is_err());
+        assert!(HostTensor::from_vec(Shape::linear(4), vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn weights_pack_preserves_values() {
+        let mut rng = Pcg32::seeded(21);
+        let ws = WeightShape::ohwi(5, 2, 1, 7);
+        let w = HostWeights::random(ws, &mut rng);
+        let layout = WeightLayout::gso_hwdsi_i4o4(2);
+        let packed = w.pack(&layout);
+        // Every logical value appears exactly where linear_index points.
+        for o in 0..ws.o {
+            for h in 0..ws.h {
+                for i in 0..ws.i {
+                    assert_eq!(packed[layout.linear_index(&ws, o, h, 0, 0, i)], w.get(o, h, 0, 0, i));
+                }
+            }
+        }
+        // Padded footprint from Fig. 2: 4 textures × (4,2) × vec4 = 2·1·2·1·1·2·4·4
+        assert_eq!(packed.len(), layout.padded_elements(&ws));
+    }
+}

@@ -1,0 +1,491 @@
+//! Slice-aware memory layouts (paper §3.1).
+//!
+//! ML Drift organizes GPU-resident data into contiguous **4-channel slices**
+//! to exploit 4-element SIMD. A layout is a *permutation* of slice-aware
+//! dimensions; the physical linear order is the mixed-radix number system
+//! over that permutation (outermost dimension first).
+//!
+//! Activation layouts permute `{B, H, W, D, S, C4}` — e.g. the paper's
+//! `PHWC4`, `HSWBDC4` (2D-texture friendly: H outermost gives automatic zero
+//! clamp on H), and `DSHWBC4` (3D-texture / image-buffer friendly).
+//!
+//! Weight layouts permute `(G, S_O, O4, H, W, D, S_I, I4)` where
+//! `G · S_O = ceil(O/4)` — the paper's `(G, S_O, O4, HWD, S_I, I4)` family.
+//! `G` is a kernel-design-dependent output-slice grouping factor (a kernel
+//! computing `G` output slices per workgroup wants those slices adjacent).
+
+use crate::error::{DriftError, Result};
+use crate::tensor::shape::Shape;
+
+/// One dimension of an activation layout permutation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActDim {
+    B,
+    H,
+    W,
+    D,
+    /// Slice index: `floor(C / 4)`.
+    S,
+    /// Index within a slice: `C mod 4`. Extent is always 4 (zero-padded).
+    C4,
+}
+
+/// An activation memory layout: an ordered permutation of all six
+/// slice-aware dimensions, outermost first.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ActivationLayout {
+    pub name: String,
+    pub order: Vec<ActDim>,
+}
+
+impl ActivationLayout {
+    /// Construct and validate a layout from a permutation.
+    pub fn new(name: &str, order: Vec<ActDim>) -> Result<Self> {
+        use ActDim::*;
+        for required in [B, H, W, D, S, C4] {
+            if order.iter().filter(|d| **d == required).count() != 1 {
+                return Err(DriftError::Layout(format!(
+                    "layout {name}: dimension {required:?} must appear exactly once"
+                )));
+            }
+        }
+        if order.len() != 6 {
+            return Err(DriftError::Layout(format!("layout {name}: expected 6 dims")));
+        }
+        Ok(ActivationLayout { name: name.to_string(), order })
+    }
+
+    /// `PHWC4` — the classic mobile-GPU buffer layout [26]: batch, then
+    /// 4-channel planes, each plane HW-major. (D folded next to B; D=1 for
+    /// non-3D-conv tensors.)
+    pub fn phwc4() -> Self {
+        use ActDim::*;
+        Self::new("PHWC4", vec![B, D, S, H, W, C4]).unwrap()
+    }
+
+    /// `HSWBDC4` — 2D-texture layout: H outermost (y axis), so texture
+    /// sampling clamps H automatically (paper §3.1).
+    pub fn hswbdc4() -> Self {
+        use ActDim::*;
+        Self::new("HSWBDC4", vec![H, S, W, B, D, C4]).unwrap()
+    }
+
+    /// `DSHWBC4` — 3D-texture / linear image-buffer layout (paper Fig. 1).
+    pub fn dshwbc4() -> Self {
+        use ActDim::*;
+        Self::new("DSHWBC4", vec![D, S, H, W, B, C4]).unwrap()
+    }
+
+    /// Extent of a layout dimension for a given logical shape.
+    pub fn extent(shape: &Shape, dim: ActDim) -> usize {
+        match dim {
+            ActDim::B => shape.b,
+            ActDim::H => shape.h,
+            ActDim::W => shape.w,
+            ActDim::D => shape.d,
+            ActDim::S => shape.slices(),
+            ActDim::C4 => 4,
+        }
+    }
+
+    /// Total padded element count under this layout.
+    pub fn padded_elements(&self, shape: &Shape) -> usize {
+        self.order.iter().map(|d| Self::extent(shape, *d)).product()
+    }
+
+    /// Linear physical index of logical `(b, h, w, d, c)`.
+    pub fn linear_index(
+        &self,
+        shape: &Shape,
+        b: usize,
+        h: usize,
+        w: usize,
+        d: usize,
+        c: usize,
+    ) -> usize {
+        debug_assert!(
+            b < shape.b && h < shape.h && w < shape.w && d < shape.d && c < shape.c,
+            "coords ({b},{h},{w},{d},{c}) out of bounds for {shape}"
+        );
+        let coord = |dim: ActDim| -> usize {
+            match dim {
+                ActDim::B => b,
+                ActDim::H => h,
+                ActDim::W => w,
+                ActDim::D => d,
+                ActDim::S => c / 4,
+                ActDim::C4 => c % 4,
+            }
+        };
+        let mut idx = 0;
+        for dim in &self.order {
+            idx = idx * Self::extent(shape, *dim) + coord(*dim);
+        }
+        idx
+    }
+
+    /// Inverse of [`linear_index`]: recover logical coords from a physical
+    /// index. Returns `None` for padding positions (c >= C).
+    #[allow(clippy::type_complexity)]
+    pub fn logical_coords(
+        &self,
+        shape: &Shape,
+        mut idx: usize,
+    ) -> Option<(usize, usize, usize, usize, usize)> {
+        let mut coords = [0usize; 6];
+        for (slot, dim) in self.order.iter().enumerate().rev() {
+            let ext = Self::extent(shape, *dim);
+            coords[slot] = idx % ext;
+            idx /= ext;
+        }
+        if idx != 0 {
+            return None; // out of range
+        }
+        let (mut b, mut h, mut w, mut d, mut s, mut c4) = (0, 0, 0, 0, 0, 0);
+        for (slot, dim) in self.order.iter().enumerate() {
+            match dim {
+                ActDim::B => b = coords[slot],
+                ActDim::H => h = coords[slot],
+                ActDim::W => w = coords[slot],
+                ActDim::D => d = coords[slot],
+                ActDim::S => s = coords[slot],
+                ActDim::C4 => c4 = coords[slot],
+            }
+        }
+        let c = s * 4 + c4;
+        if c >= shape.c {
+            return None; // zero padding
+        }
+        Some((b, h, w, d, c))
+    }
+}
+
+impl std::fmt::Display for ActivationLayout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
+/// One dimension of a weight layout permutation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WeightDim {
+    /// Output-slice group index (extent = `group`).
+    G,
+    /// Output slice within the group (extent = `ceil(ceil(O/4) / group)`).
+    So,
+    /// Element within the output slice (extent 4).
+    O4,
+    H,
+    W,
+    D,
+    /// Input slice (extent = `ceil(I/4)`).
+    Si,
+    /// Element within the input slice (extent 4).
+    I4,
+}
+
+/// Logical weight shape for convolution / fully-connected weights:
+/// `OHWDI` with `O` output channels and `I` input channels (paper §3.1;
+/// `D = 1` except for 3D convolutions; `H = W = 1` for fully connected).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WeightShape {
+    pub o: usize,
+    pub h: usize,
+    pub w: usize,
+    pub d: usize,
+    pub i: usize,
+}
+
+impl WeightShape {
+    pub fn ohwi(o: usize, h: usize, w: usize, i: usize) -> Self {
+        WeightShape { o, h, w, d: 1, i }
+    }
+
+    /// Fully-connected weight: spatial dims 1.
+    pub fn fc(o: usize, i: usize) -> Self {
+        WeightShape { o, h: 1, w: 1, d: 1, i }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.o * self.h * self.w * self.d * self.i
+    }
+
+    pub fn slices_o(&self) -> usize {
+        self.o.div_ceil(4)
+    }
+
+    pub fn slices_i(&self) -> usize {
+        self.i.div_ceil(4)
+    }
+}
+
+/// A weight memory layout: grouping factor + permutation of all eight dims.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct WeightLayout {
+    pub name: String,
+    /// Output-slice grouping factor `G` (blocked grouping).
+    pub group: usize,
+    pub order: Vec<WeightDim>,
+}
+
+impl WeightLayout {
+    pub fn new(name: &str, group: usize, order: Vec<WeightDim>) -> Result<Self> {
+        use WeightDim::*;
+        if group == 0 {
+            return Err(DriftError::Layout(format!("layout {name}: group must be > 0")));
+        }
+        for required in [G, So, O4, H, W, D, Si, I4] {
+            if order.iter().filter(|d| **d == required).count() != 1 {
+                return Err(DriftError::Layout(format!(
+                    "weight layout {name}: dimension {required:?} must appear exactly once"
+                )));
+            }
+        }
+        Ok(WeightLayout { name: name.to_string(), group, order })
+    }
+
+    /// The framework's default high-performance layout: groups of output
+    /// slices outermost, spatial next, input slices inner, `O4` innermost so
+    /// one vec4 store covers four output channels.
+    /// Order: `(G, S_O, HWD, S_I, I4, O4)`.
+    pub fn gso_hwdsi_i4o4(group: usize) -> Self {
+        use WeightDim::*;
+        Self::new(&format!("G{group}SO_HWDSI_I4O4"), group, vec![G, So, H, W, D, Si, I4, O4])
+            .unwrap()
+    }
+
+    /// Variant with `I4` innermost (one vec4 load covers four input
+    /// channels — preferred by dot-product-extension kernels).
+    pub fn gso_hwdsi_o4i4(group: usize) -> Self {
+        use WeightDim::*;
+        Self::new(&format!("G{group}SO_HWDSI_O4I4"), group, vec![G, So, H, W, D, Si, O4, I4])
+            .unwrap()
+    }
+
+    /// Naive padded row-major `OHWI` (the baseline the paper's ≤20 %
+    /// matmul speedup is measured against).
+    pub fn naive_ohwi() -> Self {
+        use WeightDim::*;
+        Self::new("OHWDI_naive", 1, vec![G, So, O4, H, W, D, Si, I4]).unwrap()
+    }
+
+    /// Output slices per group, padded: `ceil(ceil(O/4) / G)`.
+    pub fn so_extent(&self, ws: &WeightShape) -> usize {
+        ws.slices_o().div_ceil(self.group)
+    }
+
+    /// Extent of a layout dimension for a given weight shape.
+    pub fn extent(&self, ws: &WeightShape, dim: WeightDim) -> usize {
+        match dim {
+            WeightDim::G => self.group,
+            WeightDim::So => self.so_extent(ws),
+            WeightDim::O4 => 4,
+            WeightDim::H => ws.h,
+            WeightDim::W => ws.w,
+            WeightDim::D => ws.d,
+            WeightDim::Si => ws.slices_i(),
+            WeightDim::I4 => 4,
+        }
+    }
+
+    /// Total padded element count (G·S_O·4 ≥ O, S_I·4 ≥ I).
+    pub fn padded_elements(&self, ws: &WeightShape) -> usize {
+        use WeightDim::*;
+        [G, So, O4, H, W, D, Si, I4].iter().map(|d| self.extent(ws, *d)).product()
+    }
+
+    /// Linear physical index of logical weight element `(o, h, w, d, i)`.
+    pub fn linear_index(
+        &self,
+        ws: &WeightShape,
+        o: usize,
+        h: usize,
+        w: usize,
+        d: usize,
+        i: usize,
+    ) -> usize {
+        debug_assert!(o < ws.o && h < ws.h && w < ws.w && d < ws.d && i < ws.i);
+        let so_total = self.so_extent(ws);
+        let slice_o = o / 4;
+        // Blocked grouping: group g owns output slices [g*so_total, (g+1)*so_total).
+        let g = slice_o / so_total;
+        let so = slice_o % so_total;
+        let coord = |dim: WeightDim| -> usize {
+            match dim {
+                WeightDim::G => g,
+                WeightDim::So => so,
+                WeightDim::O4 => o % 4,
+                WeightDim::H => h,
+                WeightDim::W => w,
+                WeightDim::D => d,
+                WeightDim::Si => i / 4,
+                WeightDim::I4 => i % 4,
+            }
+        };
+        let mut idx = 0;
+        for dim in &self.order {
+            idx = idx * self.extent(ws, *dim) + coord(*dim);
+        }
+        idx
+    }
+}
+
+impl std::fmt::Display for WeightLayout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    #[test]
+    fn named_layouts_validate() {
+        ActivationLayout::phwc4();
+        ActivationLayout::hswbdc4();
+        ActivationLayout::dshwbc4();
+        WeightLayout::gso_hwdsi_i4o4(2);
+        WeightLayout::naive_ohwi();
+    }
+
+    #[test]
+    fn duplicate_dim_rejected() {
+        use ActDim::*;
+        assert!(ActivationLayout::new("bad", vec![B, B, W, D, S, C4]).is_err());
+        assert!(ActivationLayout::new("short", vec![B, H, W, D, S]).is_err());
+    }
+
+    #[test]
+    fn paper_figure1_sizes() {
+        // Logical (1,2,3,5): 2 slices.
+        let s = Shape::bhwc(1, 2, 3, 5);
+        // 3D texture (2,3,2) = h × w × s → 12 vec4 texels = 48 elements.
+        assert_eq!(ActivationLayout::dshwbc4().padded_elements(&s), 48);
+        // 2D texture (2·2, 3) = 12 texels.
+        assert_eq!(ActivationLayout::hswbdc4().padded_elements(&s), 48);
+        // 1D image buffer: 2·3·2 = 12 pixels.
+        assert_eq!(ActivationLayout::phwc4().padded_elements(&s), 48);
+    }
+
+    #[test]
+    fn phwc4_order_matches_reference() {
+        // For PHWC4 with B=D=1, index should be ((s*H + h)*W + w)*4 + c4.
+        let shape = Shape::hwc(3, 5, 9);
+        let l = ActivationLayout::phwc4();
+        for h in 0..3 {
+            for w in 0..5 {
+                for c in 0..9 {
+                    let expect = (((c / 4) * 3 + h) * 5 + w) * 4 + c % 4;
+                    assert_eq!(l.linear_index(&shape, 0, h, w, 0, c), expect);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn activation_roundtrip_all_layouts() {
+        let shape = Shape::bhwdc(2, 3, 4, 2, 7);
+        for layout in [
+            ActivationLayout::phwc4(),
+            ActivationLayout::hswbdc4(),
+            ActivationLayout::dshwbc4(),
+        ] {
+            let mut seen = vec![false; layout.padded_elements(&shape)];
+            for b in 0..shape.b {
+                for h in 0..shape.h {
+                    for w in 0..shape.w {
+                        for d in 0..shape.d {
+                            for c in 0..shape.c {
+                                let idx = layout.linear_index(&shape, b, h, w, d, c);
+                                assert!(!seen[idx], "{layout}: collision at {idx}");
+                                seen[idx] = true;
+                                assert_eq!(
+                                    layout.logical_coords(&shape, idx),
+                                    Some((b, h, w, d, c)),
+                                    "{layout}: inverse mismatch"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            // Unvisited positions must be padding (logical_coords → None).
+            for (idx, v) in seen.iter().enumerate() {
+                if !v {
+                    assert_eq!(layout.logical_coords(&shape, idx), None);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weight_roundtrip_is_injective() {
+        // Figure 2's example: OHWI weights (5,2,1,7).
+        let ws = WeightShape::ohwi(5, 2, 1, 7);
+        for layout in [
+            WeightLayout::gso_hwdsi_i4o4(2),
+            WeightLayout::gso_hwdsi_o4i4(1),
+            WeightLayout::naive_ohwi(),
+        ] {
+            let mut seen = vec![false; layout.padded_elements(&ws)];
+            for o in 0..ws.o {
+                for h in 0..ws.h {
+                    for w in 0..ws.w {
+                        for i in 0..ws.i {
+                            let idx = layout.linear_index(&ws, o, h, w, 0, i);
+                            assert!(idx < seen.len(), "{}: index {idx} out of range", layout.name);
+                            assert!(!seen[idx], "{}: collision", layout.name);
+                            seen[idx] = true;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weight_group_times_so_covers_slices() {
+        let ws = WeightShape::fc(37, 16); // 10 output slices
+        for g in 1..=5 {
+            let l = WeightLayout::gso_hwdsi_i4o4(g);
+            assert!(g * l.so_extent(&ws) >= ws.slices_o(), "G·S_O must cover all slices");
+        }
+    }
+
+    #[test]
+    fn property_layout_bijection_random_shapes() {
+        check("activation layout bijection", Config::cases(40), |rng| {
+            let shape = Shape::bhwdc(
+                1 + rng.gen_range(3) as usize,
+                1 + rng.gen_range(5) as usize,
+                1 + rng.gen_range(5) as usize,
+                1 + rng.gen_range(2) as usize,
+                1 + rng.gen_range(9) as usize,
+            );
+            let layout = match rng.gen_range(3) {
+                0 => ActivationLayout::phwc4(),
+                1 => ActivationLayout::hswbdc4(),
+                _ => ActivationLayout::dshwbc4(),
+            };
+            let mut seen = vec![false; layout.padded_elements(&shape)];
+            for b in 0..shape.b {
+                for h in 0..shape.h {
+                    for w in 0..shape.w {
+                        for d in 0..shape.d {
+                            for c in 0..shape.c {
+                                let idx = layout.linear_index(&shape, b, h, w, d, c);
+                                if seen[idx] {
+                                    return Err(format!("collision at {idx} in {layout}"));
+                                }
+                                seen[idx] = true;
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

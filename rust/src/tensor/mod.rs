@@ -1,0 +1,29 @@
+//! Logical tensor core (paper §3.1).
+//!
+//! A *logical* tensor is a multidimensional array with semantically
+//! meaningful axes. ML Drift assigns implicit axis semantics per rank:
+//!
+//! | rank | semantics |
+//! |------|-----------|
+//! | 0D   | scalar    |
+//! | 1D   | Linear    |
+//! | 2D   | HW        |
+//! | 3D   | HWC       |
+//! | 4D   | BHWC      |
+//! | 5D   | BHWDC     |
+//!
+//! Data destined for the GPU is organized into contiguous **4-channel
+//! slices** (`S = ceil(C/4)`, `C4 = C mod 4`) to exploit 4-element SIMD —
+//! the PHWC4 family of layouts. [`layout`] generalizes this to arbitrary
+//! slice-aware dimension orders (`HSWBDC4`, `DSHWBC4`, …) and to the weight
+//! layout family `(G, S_O, O4, HWD, S_I, I4)`.
+
+pub mod dtype;
+pub mod shape;
+pub mod layout;
+pub mod host;
+
+pub use dtype::DType;
+pub use shape::{Axis, Shape};
+pub use layout::{ActDim, ActivationLayout, WeightDim, WeightLayout, WeightShape};
+pub use host::{HostTensor, HostWeights};

@@ -1,0 +1,181 @@
+//! Logical tensor shapes with BHWDC axis semantics (paper §3.1).
+
+use crate::error::{DriftError, Result};
+
+/// Semantic axis of a logical tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Axis {
+    Batch,
+    Height,
+    Width,
+    Depth,
+    Channel,
+}
+
+/// A logical tensor shape. All tensors are canonicalized to 5D **BHWDC**
+/// internally; lower ranks embed per the paper's implicit semantics
+/// (0D scalar, 1D Linear→C, 2D HW, 3D HWC, 4D BHWC, 5D BHWDC).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub b: usize,
+    pub h: usize,
+    pub w: usize,
+    pub d: usize,
+    pub c: usize,
+    /// Original logical rank (0–5) — retained so reports and codegen can
+    /// show the tensor as the user declared it.
+    pub rank: u8,
+}
+
+impl Shape {
+    /// 0D scalar.
+    pub fn scalar() -> Shape {
+        Shape { b: 1, h: 1, w: 1, d: 1, c: 1, rank: 0 }
+    }
+
+    /// 1D Linear: a vector of `n` elements mapped onto the channel axis.
+    pub fn linear(n: usize) -> Shape {
+        Shape { b: 1, h: 1, w: 1, d: 1, c: n, rank: 1 }
+    }
+
+    /// 2D HW.
+    pub fn hw(h: usize, w: usize) -> Shape {
+        Shape { b: 1, h, w, d: 1, c: 1, rank: 2 }
+    }
+
+    /// 3D HWC.
+    pub fn hwc(h: usize, w: usize, c: usize) -> Shape {
+        Shape { b: 1, h, w, d: 1, c, rank: 3 }
+    }
+
+    /// 4D BHWC.
+    pub fn bhwc(b: usize, h: usize, w: usize, c: usize) -> Shape {
+        Shape { b, h, w, d: 1, c, rank: 4 }
+    }
+
+    /// 5D BHWDC (D used only by 3D convolutions; otherwise D = 1).
+    pub fn bhwdc(b: usize, h: usize, w: usize, d: usize, c: usize) -> Shape {
+        Shape { b, h, w, d, c, rank: 5 }
+    }
+
+    /// Build from a dims slice using the implicit per-rank semantics.
+    pub fn from_dims(dims: &[usize]) -> Result<Shape> {
+        Ok(match dims {
+            [] => Shape::scalar(),
+            [n] => Shape::linear(*n),
+            [h, w] => Shape::hw(*h, *w),
+            [h, w, c] => Shape::hwc(*h, *w, *c),
+            [b, h, w, c] => Shape::bhwc(*b, *h, *w, *c),
+            [b, h, w, d, c] => Shape::bhwdc(*b, *h, *w, *d, *c),
+            _ => {
+                return Err(DriftError::Shape(format!(
+                    "rank {} > 5 unsupported",
+                    dims.len()
+                )))
+            }
+        })
+    }
+
+    /// Extent along a semantic axis.
+    pub fn axis(&self, a: Axis) -> usize {
+        match a {
+            Axis::Batch => self.b,
+            Axis::Height => self.h,
+            Axis::Width => self.w,
+            Axis::Depth => self.d,
+            Axis::Channel => self.c,
+        }
+    }
+
+    /// Number of logical elements (no padding).
+    pub fn elements(&self) -> usize {
+        self.b * self.h * self.w * self.d * self.c
+    }
+
+    /// Number of 4-channel slices: `S = ceil(C/4)`.
+    pub fn slices(&self) -> usize {
+        self.c.div_ceil(4)
+    }
+
+    /// Number of elements after zero-padding C to a multiple of 4
+    /// (SIMD-compatible storage footprint).
+    pub fn padded_elements(&self) -> usize {
+        self.b * self.h * self.w * self.d * self.slices() * 4
+    }
+
+    /// Whether any axis is zero (empty tensor).
+    pub fn is_empty(&self) -> bool {
+        self.elements() == 0
+    }
+
+    /// Dims in declared-rank order (inverse of `from_dims`).
+    pub fn dims(&self) -> Vec<usize> {
+        match self.rank {
+            0 => vec![],
+            1 => vec![self.c],
+            2 => vec![self.h, self.w],
+            3 => vec![self.h, self.w, self.c],
+            4 => vec![self.b, self.h, self.w, self.c],
+            _ => vec![self.b, self.h, self.w, self.d, self.c],
+        }
+    }
+
+    /// Flat logical index of `(b, h, w, d, c)` in canonical BHWDC row-major
+    /// order. Used as the reference ordering by layout round-trip tests.
+    pub fn logical_index(&self, b: usize, h: usize, w: usize, d: usize, c: usize) -> usize {
+        debug_assert!(b < self.b && h < self.h && w < self.w && d < self.d && c < self.c);
+        (((b * self.h + h) * self.w + w) * self.d + d) * self.c + c
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dims = self.dims();
+        if dims.is_empty() {
+            return write!(f, "()");
+        }
+        let strs: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "({})", strs.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn implicit_semantics() {
+        let s = Shape::from_dims(&[1, 2, 3, 5]).unwrap();
+        assert_eq!((s.b, s.h, s.w, s.d, s.c), (1, 2, 3, 1, 5));
+        assert_eq!(s.rank, 4);
+        let s = Shape::from_dims(&[7]).unwrap();
+        assert_eq!(s.c, 7);
+        assert_eq!(Shape::from_dims(&[]).unwrap().elements(), 1);
+        assert!(Shape::from_dims(&[1, 2, 3, 4, 5, 6]).is_err());
+    }
+
+    #[test]
+    fn paper_figure1_tensor() {
+        // Figure 1's running example: logical (1,2,3,5) BHWC tensor.
+        let s = Shape::bhwc(1, 2, 3, 5);
+        assert_eq!(s.slices(), 2); // ceil(5/4)
+        assert_eq!(s.elements(), 30);
+        assert_eq!(s.padded_elements(), 1 * 2 * 3 * 2 * 4); // 48
+    }
+
+    #[test]
+    fn logical_index_rowmajor() {
+        let s = Shape::bhwc(2, 2, 2, 3);
+        assert_eq!(s.logical_index(0, 0, 0, 0, 0), 0);
+        assert_eq!(s.logical_index(0, 0, 0, 0, 2), 2);
+        assert_eq!(s.logical_index(0, 0, 1, 0, 0), 3);
+        assert_eq!(s.logical_index(1, 1, 1, 0, 2), s.elements() - 1);
+    }
+
+    #[test]
+    fn display_and_dims_roundtrip() {
+        let s = Shape::bhwdc(2, 3, 4, 5, 6);
+        assert_eq!(format!("{s}"), "(2,3,4,5,6)");
+        assert_eq!(Shape::from_dims(&s.dims()).unwrap(), s);
+    }
+}

@@ -1,0 +1,222 @@
+//! Table-1 coordinate translation and Read/Write helper generation.
+//!
+//! Given a [`TensorDescriptor`], produce the symbolic storage coordinates
+//! for logical `(b, x, y, s)` (BHWC convention: `x` = width index, `y` =
+//! height index, `s` = slice index) and emit the `Read`/`Write` helper
+//! functions that shaders call. Shape extents are folded as constants, so
+//! e.g. batch-1 tensors lose their `* batch + b` terms entirely — this is
+//! why the paper reports negligible overhead for virtualization.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::ActDim;
+use crate::translate::expr::Expr;
+use crate::vgpu::descriptor::TensorDescriptor;
+use crate::vgpu::object::StorageType;
+
+/// Variable name for each layout dimension in the logical coordinate
+/// convention of Table 1 (`x`=W, `y`=H, `s`=slice, `b`=batch, `d`=depth).
+fn dim_var(dim: ActDim) -> Expr {
+    match dim {
+        ActDim::B => Expr::var("b"),
+        ActDim::H => Expr::var("y"),
+        ActDim::W => Expr::var("x"),
+        ActDim::D => Expr::var("d"),
+        ActDim::S => Expr::var("s"),
+        ActDim::C4 => unreachable!("C4 is the texel lane, not a coordinate"),
+    }
+}
+
+/// Symbolic storage coordinates for a descriptor, outermost-first matching
+/// the native coordinate system:
+/// * 1D storages → `[flat_texel]`
+/// * 2D textures → `[u, v]`
+/// * 3D/array textures → `[u, v, w]`
+///
+/// Each coordinate is the mixed-radix combination of one coordinate group
+/// (see [`TensorDescriptor::coord_groups`]) with shape extents folded.
+pub fn translation_coords(desc: &TensorDescriptor) -> Vec<Expr> {
+    let groups = desc.coord_groups();
+    let mut exprs: Vec<Expr> = groups
+        .iter()
+        .map(|group| {
+            let mut e = Expr::c(0);
+            for dim in group {
+                let ext = crate::tensor::ActivationLayout::extent(&desc.shape, *dim) as i64;
+                // An extent-1 dimension contributes a coordinate that is
+                // always 0 — fold the whole term away (this is what makes
+                // batch-1 translations free).
+                if ext == 1 {
+                    continue;
+                }
+                e = e.mul(Expr::c(ext)).add(dim_var(*dim));
+            }
+            e
+        })
+        .collect();
+    // Native ordering is innermost-first (u, v, w); groups are outermost-first.
+    exprs.reverse();
+    exprs
+}
+
+/// Generated Read/Write helper source for one tensor argument.
+#[derive(Clone, Debug)]
+pub struct ReadWriteHelpers {
+    /// Argument name as visible to the kernel (`args.src` → `src`).
+    pub arg: String,
+    /// Generated function source (backend-neutral C-style; the backend
+    /// emitters wrap storage-specific access intrinsics around it).
+    pub source: String,
+    /// The translated coordinate expressions (innermost-first).
+    pub coords: Vec<Expr>,
+    pub storage: StorageType,
+}
+
+/// Emit the helper functions for a descriptor. The body uses placeholder
+/// access intrinsics `LOAD_TEXEL` / `STORE_TEXEL` that each backend
+/// ([`crate::codegen`]) substitutes with its native construct
+/// (`read_imagef`, `tex.read`, `textureLoad`, raw pointer indexing …).
+pub fn read_write_helpers(arg: &str, desc: &TensorDescriptor) -> ReadWriteHelpers {
+    let coords = translation_coords(desc);
+    let coord_src: Vec<String> = coords.iter().map(|e| e.emit()).collect();
+    let sig_args = "int b, int x, int y, int d, int s";
+    let coord_decl = match desc.storage {
+        StorageType::Buffer | StorageType::ImageBuffer => {
+            format!("  int idx = {};\n", coord_src[0])
+        }
+        StorageType::Texture2D => {
+            format!("  int u = {};\n  int v = {};\n", coord_src[0], coord_src[1])
+        }
+        StorageType::Texture2DArray | StorageType::Texture3D => format!(
+            "  int u = {};\n  int v = {};\n  int w = {};\n",
+            coord_src[0], coord_src[1], coord_src[2]
+        ),
+    };
+    let access = match desc.storage {
+        StorageType::Buffer | StorageType::ImageBuffer => "idx",
+        StorageType::Texture2D => "u, v",
+        StorageType::Texture2DArray | StorageType::Texture3D => "u, v, w",
+    };
+    let source = format!(
+        "FLT4 {arg}_Read({sig_args}) {{\n{coord_decl}  return LOAD_TEXEL({arg}, {access});\n}}\n\
+         void {arg}_Write(FLT4 value, {sig_args}) {{\n{coord_decl}  STORE_TEXEL({arg}, {access}, value);\n}}\n"
+    );
+    ReadWriteHelpers { arg: arg.to_string(), source, coords, storage: desc.storage }
+}
+
+/// Numerically validate the symbolic translation against the mapper for
+/// every logical coordinate (codegen-time self-check; also used in tests).
+pub fn validate_translation(desc: &TensorDescriptor) -> Result<(), String> {
+    let mapping = crate::vgpu::mapper::VirtualMapping::single(desc.clone());
+    let coords = translation_coords(desc);
+    let s = desc.shape;
+    for b in 0..s.b {
+        for y in 0..s.h {
+            for x in 0..s.w {
+                for d in 0..s.d {
+                    for c in 0..s.c {
+                        let env: BTreeMap<&str, i64> = [
+                            ("b", b as i64),
+                            ("x", x as i64),
+                            ("y", y as i64),
+                            ("d", d as i64),
+                            ("s", (c / 4) as i64),
+                        ]
+                        .into_iter()
+                        .collect();
+                        let sym: Vec<usize> =
+                            coords.iter().map(|e| e.eval(&env) as usize).collect();
+                        let phys = mapping.map(b, y, x, d, c);
+                        let want: Vec<usize> = match desc.storage {
+                            StorageType::Buffer => vec![phys.coords[0] / 4],
+                            StorageType::ImageBuffer => vec![phys.coords[0]],
+                            StorageType::Texture2D => vec![phys.coords[0], phys.coords[1]],
+                            _ => phys.coords.to_vec(),
+                        };
+                        if sym != want {
+                            return Err(format!(
+                                "translation mismatch at (b{b},x{x},y{y},d{d},c{c}): sym {sym:?} vs mapper {want:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, Shape};
+    use crate::util::propcheck::{check, Config};
+
+    fn desc(shape: Shape, storage: StorageType) -> TensorDescriptor {
+        TensorDescriptor::with_default_layout("src", shape, DType::F16, storage).unwrap()
+    }
+
+    #[test]
+    fn table1_formulas_hold_for_all_storages() {
+        let shape = Shape::bhwc(2, 3, 4, 9);
+        for st in [
+            StorageType::Buffer,
+            StorageType::ImageBuffer,
+            StorageType::Texture2D,
+            StorageType::Texture3D,
+            StorageType::Texture2DArray,
+        ] {
+            validate_translation(&desc(shape, st)).unwrap();
+        }
+    }
+
+    #[test]
+    fn batch1_folds_away() {
+        // With B = 1 the `* batch + b` term must fold out of the u coord.
+        let d2 = desc(Shape::bhwc(1, 2, 3, 5), StorageType::Texture2D);
+        let coords = translation_coords(&d2);
+        let u = coords[0].emit();
+        assert!(!u.contains('b'), "u should not reference b when batch == 1: {u}");
+        // With B = 2 it must appear.
+        let d2 = desc(Shape::bhwc(2, 2, 3, 5), StorageType::Texture2D);
+        let u = translation_coords(&d2)[0].emit();
+        assert!(u.contains('b'), "u must reference b when batch == 2: {u}");
+    }
+
+    #[test]
+    fn helper_source_contains_read_and_write() {
+        let h = read_write_helpers("src", &desc(Shape::bhwc(1, 8, 8, 16), StorageType::Texture2D));
+        assert!(h.source.contains("src_Read"));
+        assert!(h.source.contains("src_Write"));
+        assert!(h.source.contains("LOAD_TEXEL(src, u, v)"));
+        assert!(h.source.contains("STORE_TEXEL(src, u, v, value)"));
+    }
+
+    #[test]
+    fn translation_op_count_is_small() {
+        // The folded 2D-texture translation for a batch-1 tensor is ≤ 3 ops
+        // (y*S + s and x) — the paper's "negligible overhead" claim.
+        let d = desc(Shape::bhwc(1, 64, 64, 320), StorageType::Texture2D);
+        let total: usize = translation_coords(&d).iter().map(|e| e.op_count()).sum();
+        assert!(total <= 4, "folded translation should be tiny, got {total} ops");
+    }
+
+    #[test]
+    fn property_translation_matches_mapper() {
+        check("symbolic translation == mapper", Config::cases(25), |rng| {
+            let shape = Shape::bhwc(
+                1 + rng.gen_range(2) as usize,
+                1 + rng.gen_range(5) as usize,
+                1 + rng.gen_range(5) as usize,
+                1 + rng.gen_range(12) as usize,
+            );
+            let st = *rng.choose(&[
+                StorageType::Buffer,
+                StorageType::ImageBuffer,
+                StorageType::Texture2D,
+                StorageType::Texture3D,
+            ]);
+            validate_translation(&desc(shape, st))
+        });
+    }
+}

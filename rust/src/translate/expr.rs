@@ -1,0 +1,184 @@
+//! Affine index-expression IR with constant folding.
+//!
+//! Coordinate translations are built symbolically so the shader generator
+//! can fold shape constants at codegen time (e.g. `((s*3 + y)*4 + x)*1 + b`
+//! simplifies to `(s*3 + y)*4 + x + b` with batch = 1 folded away).
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// A symbolic integer index expression.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Expr {
+    /// Free variable (logical coordinate such as `b`, `x`, `y`, `s`).
+    Var(&'static str),
+    /// Integer constant (folded shape extents).
+    Const(i64),
+    Add(Rc<Expr>, Rc<Expr>),
+    Mul(Rc<Expr>, Rc<Expr>),
+    /// Truncating division (non-negative operands in practice).
+    Div(Rc<Expr>, Rc<Expr>),
+    Mod(Rc<Expr>, Rc<Expr>),
+}
+
+impl Expr {
+    pub fn var(name: &'static str) -> Expr {
+        Expr::Var(name)
+    }
+
+    pub fn c(v: i64) -> Expr {
+        Expr::Const(v)
+    }
+
+    pub fn add(self, rhs: Expr) -> Expr {
+        Expr::Add(Rc::new(self), Rc::new(rhs)).fold()
+    }
+
+    pub fn mul(self, rhs: Expr) -> Expr {
+        Expr::Mul(Rc::new(self), Rc::new(rhs)).fold()
+    }
+
+    pub fn div(self, rhs: Expr) -> Expr {
+        Expr::Div(Rc::new(self), Rc::new(rhs)).fold()
+    }
+
+    pub fn rem(self, rhs: Expr) -> Expr {
+        Expr::Mod(Rc::new(self), Rc::new(rhs)).fold()
+    }
+
+    /// One level of algebraic simplification (children are already folded
+    /// because the builders fold bottom-up).
+    fn fold(self) -> Expr {
+        use Expr::*;
+        match &self {
+            Add(a, b) => match (a.as_ref(), b.as_ref()) {
+                (Const(x), Const(y)) => Const(x + y),
+                (Const(0), e) | (e, Const(0)) => e.clone(),
+                _ => self,
+            },
+            Mul(a, b) => match (a.as_ref(), b.as_ref()) {
+                (Const(x), Const(y)) => Const(x * y),
+                (Const(1), e) | (e, Const(1)) => e.clone(),
+                (Const(0), _) | (_, Const(0)) => Const(0),
+                _ => self,
+            },
+            Div(a, b) => match (a.as_ref(), b.as_ref()) {
+                (Const(x), Const(y)) if *y != 0 => Const(x / y),
+                (e, Const(1)) => e.clone(),
+                (Const(0), _) => Const(0),
+                _ => self,
+            },
+            Mod(a, b) => match (a.as_ref(), b.as_ref()) {
+                (Const(x), Const(y)) if *y != 0 => Const(x % y),
+                (_, Const(1)) => Const(0),
+                (Const(0), _) => Const(0),
+                _ => self,
+            },
+            _ => self,
+        }
+    }
+
+    /// Evaluate with a variable environment.
+    pub fn eval(&self, env: &BTreeMap<&str, i64>) -> i64 {
+        match self {
+            Expr::Var(v) => *env
+                .get(v)
+                .unwrap_or_else(|| panic!("unbound variable {v} in index expression")),
+            Expr::Const(c) => *c,
+            Expr::Add(a, b) => a.eval(env) + b.eval(env),
+            Expr::Mul(a, b) => a.eval(env) * b.eval(env),
+            Expr::Div(a, b) => a.eval(env) / b.eval(env),
+            Expr::Mod(a, b) => a.eval(env) % b.eval(env),
+        }
+    }
+
+    /// Emit C-like source (valid in OpenCL-C, MSL, and WGSL expressions).
+    pub fn emit(&self) -> String {
+        self.emit_prec(0)
+    }
+
+    fn emit_prec(&self, parent: u8) -> String {
+        // precedence: 1 = additive, 2 = multiplicative
+        let (text, prec) = match self {
+            Expr::Var(v) => (v.to_string(), 3),
+            Expr::Const(c) => (c.to_string(), 3),
+            Expr::Add(a, b) => (format!("{} + {}", a.emit_prec(1), b.emit_prec(1)), 1),
+            Expr::Mul(a, b) => (format!("{} * {}", a.emit_prec(2), b.emit_prec(2)), 2),
+            Expr::Div(a, b) => (format!("{} / {}", a.emit_prec(2), b.emit_prec(3)), 2),
+            Expr::Mod(a, b) => (format!("{} % {}", a.emit_prec(2), b.emit_prec(3)), 2),
+        };
+        if prec < parent {
+            format!("({text})")
+        } else {
+            text
+        }
+    }
+
+    /// Count operations remaining after folding (codegen-quality metric:
+    /// the paper's point is that translation cost is folded to near-zero
+    /// when shape constants are known).
+    pub fn op_count(&self) -> usize {
+        match self {
+            Expr::Var(_) | Expr::Const(_) => 0,
+            Expr::Add(a, b) | Expr::Mul(a, b) | Expr::Div(a, b) | Expr::Mod(a, b) => {
+                1 + a.op_count() + b.op_count()
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Expr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.emit())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(&'static str, i64)]) -> BTreeMap<&'static str, i64> {
+        pairs.iter().copied().collect()
+    }
+
+    #[test]
+    fn folding_collapses_units() {
+        let e = Expr::var("x").mul(Expr::c(1)).add(Expr::c(0));
+        assert_eq!(e, Expr::Var("x"));
+        let e = Expr::var("x").mul(Expr::c(0));
+        assert_eq!(e, Expr::Const(0));
+        let e = Expr::c(6).div(Expr::c(2));
+        assert_eq!(e, Expr::Const(3));
+        let e = Expr::var("x").rem(Expr::c(1));
+        assert_eq!(e, Expr::Const(0));
+    }
+
+    #[test]
+    fn eval_matches_structure() {
+        // ((s*3 + y)*4 + x)
+        let e = Expr::var("s")
+            .mul(Expr::c(3))
+            .add(Expr::var("y"))
+            .mul(Expr::c(4))
+            .add(Expr::var("x"));
+        assert_eq!(e.eval(&env(&[("s", 1), ("y", 2), ("x", 3)])), (1 * 3 + 2) * 4 + 3);
+    }
+
+    #[test]
+    fn emit_is_valid_c() {
+        let e = Expr::var("y").mul(Expr::c(2)).add(Expr::var("s"));
+        assert_eq!(e.emit(), "y * 2 + s");
+        let e = Expr::var("y").add(Expr::c(2)).mul(Expr::var("s"));
+        assert_eq!(e.emit(), "(y + 2) * s");
+        let e = Expr::var("a").div(Expr::var("b").add(Expr::c(1)));
+        assert_eq!(e.emit(), "a / (b + 1)");
+    }
+
+    #[test]
+    fn op_count_reflects_folding() {
+        let folded = Expr::var("x").mul(Expr::c(1)); // folds to x
+        assert_eq!(folded.op_count(), 0);
+        let unfolded = Expr::var("x").mul(Expr::c(2)).add(Expr::var("b"));
+        assert_eq!(unfolded.op_count(), 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! Coordinate translation (paper §3.3, Table 1).
+//!
+//! Consuming shader programs access tensor elements through generated helper
+//! functions (e.g. `args.src.Read(b, x, y, s)`) that translate logical
+//! coordinates into the physical GPU object's coordinates. The translation
+//! is resolved **during shader code generation** — a pre-processing stage —
+//! so it adds zero runtime latency.
+//!
+//! * [`expr`] — a small affine index-expression IR with constant folding.
+//! * [`codegen`] — Table-1 translation expressions for every storage type
+//!   and the `Read`/`Write` helper source emitted into shaders.
+
+pub mod expr;
+pub mod codegen;
+
+pub use expr::Expr;
+pub use codegen::{translation_coords, ReadWriteHelpers};

@@ -1,0 +1,255 @@
+//! Declarative command-line parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options with
+//! defaults, and positional arguments; generates usage text from the spec.
+
+use std::collections::BTreeMap;
+
+use crate::error::{DriftError, Result};
+
+/// Specification of one option or flag.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None ⇒ boolean flag; Some(default) ⇒ value option.
+    pub default: Option<&'static str>,
+    /// Value option with no default that must be supplied.
+    pub required: bool,
+}
+
+/// Specification of a subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>,
+}
+
+/// Parsed argument values for one invocation.
+#[derive(Debug, Default)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Matches {
+    /// Value of `--name` (or its default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required string value (panics with clear message if spec guaranteed it).
+    pub fn req(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_else(|| panic!("missing required arg --{name}"))
+    }
+
+    /// Parse a value as `T`.
+    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| DriftError::Config(format!("missing argument --{name}")))?;
+        raw.parse::<T>()
+            .map_err(|_| DriftError::Config(format!("--{name}: cannot parse {raw:?}")))
+    }
+
+    /// Whether a boolean flag was set.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// A CLI application: a list of subcommands plus global help.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    /// Render usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str(&format!("\nRun `{} <command> --help` for command options.\n", self.bin));
+        s
+    }
+
+    fn command_usage(&self, c: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.bin, c.name, c.about);
+        for a in &c.args {
+            let left = match a.default {
+                Some(d) => format!("--{} <v> (default {d})", a.name),
+                None if a.required => format!("--{} <v> (required)", a.name),
+                None => format!("--{}", a.name),
+            };
+            s.push_str(&format!("  {left:<36} {}\n", a.help));
+        }
+        for (p, h) in &c.positionals {
+            s.push_str(&format!("  <{p}>{:<32} {h}\n", ""));
+        }
+        s
+    }
+
+    /// Parse argv (excluding argv[0]). Returns Err with usage text on problems,
+    /// and `Ok(None)` when help was requested.
+    pub fn parse(&self, argv: &[String]) -> Result<Option<Matches>> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            println!("{}", self.usage());
+            return Ok(None);
+        }
+        let cmd_name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| DriftError::Config(format!("unknown command {cmd_name:?}\n\n{}", self.usage())))?;
+
+        let mut m = Matches { command: cmd.name.to_string(), ..Default::default() };
+        // Seed defaults.
+        for a in &cmd.args {
+            if let Some(d) = a.default {
+                m.values.insert(a.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                println!("{}", self.command_usage(cmd));
+                return Ok(None);
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = cmd
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| DriftError::Config(format!("unknown option --{key} for {cmd_name}")))?;
+                if spec.default.is_none() && !spec.required && inline_val.is_none() {
+                    // Check: flag (no value) unless the next token is a value
+                    // and the spec is a value option.
+                    m.flags.insert(key.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| DriftError::Config(format!("--{key} needs a value")))?
+                        }
+                    };
+                    m.values.insert(key.to_string(), val);
+                }
+            } else {
+                m.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        for a in &cmd.args {
+            if a.required && !m.values.contains_key(a.name) {
+                return Err(DriftError::Config(format!(
+                    "missing required option --{} for {}\n\n{}",
+                    a.name,
+                    cmd.name,
+                    self.command_usage(cmd)
+                )));
+            }
+        }
+        Ok(Some(m))
+    }
+}
+
+/// Shorthand for a value option with a default.
+pub fn opt(name: &'static str, default: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { name, help, default: Some(default), required: false }
+}
+
+/// Shorthand for a required value option.
+pub fn req(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { name, help, default: None, required: true }
+}
+
+/// Shorthand for a boolean flag.
+pub fn flag(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { name, help, default: None, required: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "mldrift",
+            about: "test",
+            commands: vec![CommandSpec {
+                name: "serve",
+                about: "serve a model",
+                args: vec![
+                    opt("port", "8080", "port"),
+                    opt("model", "tinylm", "model name"),
+                    flag("verbose", "noisy"),
+                    req("artifacts", "artifact dir"),
+                ],
+                positionals: vec![],
+            }],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let m = cli()
+            .parse(&argv(&["serve", "--port", "9999", "--artifacts", "a/"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(m.get("port"), Some("9999"));
+        assert_eq!(m.get("model"), Some("tinylm"));
+        assert_eq!(m.req("artifacts"), "a/");
+        assert!(!m.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let m = cli()
+            .parse(&argv(&["serve", "--port=1", "--verbose", "--artifacts=x"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(m.get("port"), Some("1"));
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv(&["serve"])).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(cli().parse(&argv(&["nope"])).is_err());
+    }
+
+    #[test]
+    fn typed_parse() {
+        let m = cli()
+            .parse(&argv(&["serve", "--artifacts", "a", "--port", "123"]))
+            .unwrap()
+            .unwrap();
+        let p: u16 = m.parse("port").unwrap();
+        assert_eq!(p, 123);
+        assert!(m.parse::<u16>("model").is_err());
+    }
+}

@@ -1,0 +1,78 @@
+//! Infrastructure substrates built in-crate.
+//!
+//! The offline crate registry only carries the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (tokio, clap, serde, criterion,
+//! proptest, rand) are unavailable. Everything the framework needs from them
+//! is implemented here, tested, and kept deliberately small:
+//!
+//! * [`rng`] — PCG-family pseudorandom generator (deterministic, seedable).
+//! * [`json`] — minimal JSON value model, parser, and pretty-printer.
+//! * [`cli`] — declarative command-line argument parser.
+//! * [`stats`] — streaming summary statistics and percentile estimation.
+//! * [`threadpool`] — fixed-size worker pool with job handles.
+//! * [`propcheck`] — property-based testing harness (generate + shrink-lite).
+//! * [`log`] — leveled stderr logger.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod threadpool;
+pub mod propcheck;
+pub mod log;
+
+/// Integer ceiling division: `ceil(a / b)` for positive integers.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn align_up(a: usize, b: usize) -> usize {
+    div_ceil(a, b) * b
+}
+
+/// Human-readable byte count (binary prefixes, two decimals).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[unit])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_exact_and_inexact() {
+        assert_eq!(div_ceil(8, 4), 2);
+        assert_eq!(div_ceil(9, 4), 3);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(0, 4), 0);
+    }
+
+    #[test]
+    fn align_up_basic() {
+        assert_eq!(align_up(5, 4), 8);
+        assert_eq!(align_up(8, 4), 8);
+        assert_eq!(align_up(0, 16), 0);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

@@ -1,0 +1,127 @@
+//! Property-based testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Pcg32`]; the harness runs it for
+//! `cases` seeds and, on failure, retries with nearby seeds to report the
+//! smallest failing seed it can find (a light-weight stand-in for shrinking —
+//! generators should derive *sizes* from early draws so smaller seeds tend to
+//! produce smaller cases).
+//!
+//! ```no_run
+//! use mldrift::util::propcheck::{check, Config};
+//! check("sum is commutative", Config::default(), |rng| {
+//!     let a = rng.gen_range(1000) as i64;
+//!     let b = rng.gen_range(1000) as i64;
+//!     if a + b != b + a { return Err(format!("{a}+{b}")); }
+//!     Ok(())
+//! });
+//! ```
+//! (`no_run`: doctest binaries don't inherit the rpath link flags this
+//! offline environment needs; the same property runs in the unit tests.)
+
+use super::rng::Pcg32;
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: u64,
+    /// Base seed; each case uses `base_seed + case_index`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, base_seed: 0x5eed }
+    }
+}
+
+impl Config {
+    pub fn cases(n: u64) -> Self {
+        Config { cases: n, ..Default::default() }
+    }
+}
+
+/// Run `prop` for `cfg.cases` seeds; panics with the failing seed and message
+/// on the first failure (after probing for a smaller failing seed).
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case);
+        let mut rng = Pcg32::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            // Probe smaller seeds for a (usually smaller) reproduction.
+            let mut best = (seed, msg);
+            for probe in 0..seed.min(64) {
+                let mut rng = Pcg32::seeded(probe);
+                if let Err(m) = prop(&mut rng) {
+                    best = (probe, m);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed at seed {} (case {case}/{}): {}",
+                best.0, cfg.cases, best.1
+            );
+        }
+    }
+}
+
+/// Helper: draw a vector of length in `[min_len, max_len]` using `gen_elem`.
+pub fn vec_of<T>(
+    rng: &mut Pcg32,
+    min_len: usize,
+    max_len: usize,
+    mut gen_elem: impl FnMut(&mut Pcg32) -> T,
+) -> Vec<T> {
+    let len = min_len + rng.gen_range((max_len - min_len + 1) as u64) as usize;
+    (0..len).map(|_| gen_elem(rng)).collect()
+}
+
+/// Helper: assert two f32 slices are close; returns an Err description if not.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", Config::cases(64), |rng| {
+            let xs = vec_of(rng, 0, 32, |r| r.gen_range(100));
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            if xs == ys {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", Config::cases(8), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_catches_divergence() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-6], 1e-5, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[2.0], 1e-5, 1e-5).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Summary statistics and percentile estimation for benchmarks and metrics.
+
+/// A collected sample set with summary statistics (criterion substitute).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    sorted: Vec<f64>,
+    sum: f64,
+}
+
+impl Summary {
+    /// Build from raw samples (takes ownership, sorts once).
+    pub fn from_samples(mut xs: Vec<f64>) -> Self {
+        xs.retain(|x| x.is_finite());
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let sum = xs.iter().sum();
+        Summary { sorted: xs, sum }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        self.sum / self.sorted.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(f64::NAN)
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.sorted.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.sorted.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let p = p.clamp(0.0, 100.0);
+        let rank = p / 100.0 * (self.sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Compact one-line report: `mean ± sd [min … p50 … p95 … max]`.
+    pub fn report(&self, unit: &str) -> String {
+        format!(
+            "{:.3} ± {:.3} {unit} [min {:.3}, p50 {:.3}, p95 {:.3}, max {:.3}] n={}",
+            self.mean(),
+            self.stddev(),
+            self.min(),
+            self.median(),
+            self.percentile(95.0),
+            self.max(),
+            self.len()
+        )
+    }
+}
+
+/// Streaming histogram with fixed bucket boundaries (for serving metrics —
+/// latency distributions without retaining every sample).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Exponential bucket boundaries from `lo` with `factor` growth, `n` buckets.
+    pub fn exponential(lo: f64, factor: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && factor > 1.0 && n > 0);
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = lo;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= factor;
+        }
+        Histogram { counts: vec![0; n + 1], bounds, total: 0, sum: 0.0, max: 0.0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|b| *b < v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Percentile estimate: upper bound of the bucket containing the quantile.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (p.clamp(0.0, 100.0) / 100.0 * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from_samples(vec![4.0, 1.0, 3.0, 2.0, 5.0]);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.median(), 3.0);
+        assert!((s.stddev() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = Summary::from_samples(vec![0.0, 10.0]);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn nan_samples_dropped() {
+        let s = Summary::from_samples(vec![1.0, f64::NAN, 3.0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.mean(), 2.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let mut h = Histogram::exponential(0.1, 2.0, 16);
+        for i in 1..=1000 {
+            h.record(i as f64 / 100.0);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 of uniform(0.01..10) ≈ 5; bucketed upper bound should bracket it.
+        assert!(p50 >= 5.0 && p50 <= 13.0, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_mean_exact() {
+        let mut h = Histogram::exponential(1.0, 2.0, 8);
+        for v in [1.0, 2.0, 3.0] {
+            h.record(v);
+        }
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(h.max(), 3.0);
+    }
+}

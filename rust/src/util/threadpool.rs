@@ -1,0 +1,179 @@
+//! Fixed-size worker thread pool (tokio is unavailable offline).
+//!
+//! The serving layer and the benchmark sweeps are thread-structured rather
+//! than async: request handling on an inference server is a small number of
+//! long-lived pipeline stages, which maps naturally onto dedicated threads
+//! plus channels (this is also how llama.cpp's server is structured).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<State>,
+    cv: Condvar,
+}
+
+struct State {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+/// A fixed pool of worker threads executing boxed jobs FIFO.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    idle_cv: Arc<(Mutex<()>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (min 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State { jobs: VecDeque::new(), shutdown: false, in_flight: 0 }),
+            cv: Condvar::new(),
+        });
+        let idle_cv = Arc::new((Mutex::new(()), Condvar::new()));
+        let workers = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let idle = Arc::clone(&idle_cv);
+                std::thread::Builder::new()
+                    .name(format!("mldrift-worker-{i}"))
+                    .spawn(move || worker_loop(shared, idle))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, idle_cv }
+    }
+
+    /// Pool sized to available parallelism.
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut st = self.shared.queue.lock().unwrap();
+        assert!(!st.shutdown, "execute after shutdown");
+        st.jobs.push_back(Box::new(f));
+        drop(st);
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until the queue is empty and no job is running.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.idle_cv;
+        let mut guard = lock.lock().unwrap();
+        loop {
+            {
+                let st = self.shared.queue.lock().unwrap();
+                if st.jobs.is_empty() && st.in_flight == 0 {
+                    return;
+                }
+            }
+            let (g, _timeout) = cv.wait_timeout(guard, std::time::Duration::from_millis(20)).unwrap();
+            guard = g;
+        }
+    }
+
+    /// Run a batch of jobs and wait for all of them (scoped helper).
+    pub fn scope_all<F: FnOnce() + Send + 'static>(&self, jobs: Vec<F>) {
+        for j in jobs {
+            self.execute(j);
+        }
+        self.wait_idle();
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, idle: Arc<(Mutex<()>, Condvar)>) {
+    loop {
+        let job = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = st.jobs.pop_front() {
+                    st.in_flight += 1;
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        job();
+        {
+            let mut st = shared.queue.lock().unwrap();
+            st.in_flight -= 1;
+        }
+        idle.1.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        let pool = ThreadPool::new(4);
+        let running = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let r = Arc::clone(&running);
+            let p = Arc::clone(&peak);
+            pool.execute(move || {
+                let now = r.fetch_add(1, Ordering::SeqCst) + 1;
+                p.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                r.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert!(peak.load(Ordering::SeqCst) >= 2, "no parallelism observed");
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+}

@@ -1,0 +1,242 @@
+//! Tensor descriptors: a logical tensor bound to a storage decision.
+
+use crate::error::{DriftError, Result};
+use crate::tensor::{ActDim, ActivationLayout, DType, Shape};
+use crate::vgpu::object::{GpuObject, ObjectKind, StorageType, TextureLimits};
+
+/// A logical tensor together with the physical realization choice made for
+/// it (storage type + slice-aware layout). Producing the concrete
+/// [`GpuObject`]s is [`TensorDescriptor::realize`]; index translation lives
+/// in [`crate::vgpu::mapper`].
+///
+/// The paper's Figure 1 example: the logical (1,2,3,5) tensor realized as
+/// a 3D texture (2,3,2) in `DSHWBC4`, a 2D texture (4,3) in `HSWBDC4`, or a
+/// 12-pixel image buffer in `DSHWBC4`.
+#[derive(Clone, Debug)]
+pub struct TensorDescriptor {
+    pub name: String,
+    pub shape: Shape,
+    pub dtype: DType,
+    pub layout: ActivationLayout,
+    pub storage: StorageType,
+}
+
+impl TensorDescriptor {
+    pub fn new(
+        name: &str,
+        shape: Shape,
+        dtype: DType,
+        layout: ActivationLayout,
+        storage: StorageType,
+    ) -> Result<Self> {
+        if layout.order.last() != Some(&ActDim::C4) {
+            return Err(DriftError::Layout(format!(
+                "descriptor {name}: layout {} must keep C4 innermost so texels are 4-channel slices",
+                layout.name
+            )));
+        }
+        Ok(TensorDescriptor {
+            name: name.to_string(),
+            shape,
+            dtype,
+            layout,
+            storage,
+        })
+    }
+
+    /// Default pairing used by the framework when the device profile has no
+    /// overriding preference: buffers/image buffers and 3D textures take
+    /// `DSHWBC4`; 2D textures take `HSWBDC4` (automatic zero clamp on H).
+    pub fn with_default_layout(
+        name: &str,
+        shape: Shape,
+        dtype: DType,
+        storage: StorageType,
+    ) -> Result<Self> {
+        let layout = match storage {
+            StorageType::Texture2D => ActivationLayout::hswbdc4(),
+            _ => ActivationLayout::dshwbc4(),
+        };
+        Self::new(name, shape, dtype, layout, storage)
+    }
+
+    /// Total vec4 texels (padded elements / 4).
+    pub fn texels(&self) -> usize {
+        self.layout.padded_elements(&self.shape) / 4
+    }
+
+    /// Partition the non-C4 layout dims into native coordinate groups,
+    /// outermost group first. 1D storage: one group. 2D: (v, u). 3D/array:
+    /// (layer/depth, v, u). The innermost group always maps to the texture
+    /// u axis so horizontally adjacent texels are memory-adjacent.
+    pub fn coord_groups(&self) -> Vec<Vec<ActDim>> {
+        let dims: Vec<ActDim> =
+            self.layout.order.iter().copied().filter(|d| *d != ActDim::C4).collect();
+        match self.storage.coord_dims() {
+            1 => vec![dims],
+            2 => vec![dims[..2].to_vec(), dims[2..].to_vec()],
+            _ => vec![dims[..2].to_vec(), dims[2..3].to_vec(), dims[3..].to_vec()],
+        }
+    }
+
+    /// Extent (in texels) of each coordinate group, outermost first.
+    pub fn coord_extents(&self) -> Vec<usize> {
+        self.coord_groups()
+            .iter()
+            .map(|g| g.iter().map(|d| ActivationLayout::extent(&self.shape, *d)).product())
+            .collect()
+    }
+
+    /// Realize the descriptor into concrete GPU object dimensions.
+    pub fn realize(&self) -> GpuObject {
+        let ext = self.coord_extents();
+        let kind = match self.storage {
+            StorageType::Buffer => ObjectKind::Buffer {
+                len: self.layout.padded_elements(&self.shape),
+            },
+            StorageType::ImageBuffer => ObjectKind::ImageBuffer { texels: self.texels() },
+            StorageType::Texture2D => ObjectKind::Texture2D {
+                // ext = [v, u] outermost first; width is the innermost axis.
+                width: ext[1],
+                height: ext[0],
+            },
+            StorageType::Texture2DArray => ObjectKind::Texture2DArray {
+                width: ext[2],
+                height: ext[1],
+                layers: ext[0],
+            },
+            StorageType::Texture3D => ObjectKind::Texture3D {
+                width: ext[2],
+                height: ext[1],
+                depth: ext[0],
+            },
+        };
+        GpuObject::new(&self.name, kind, self.dtype)
+    }
+
+    /// Check the realization against device texture limits.
+    pub fn validate(&self, limits: &TextureLimits) -> Result<()> {
+        let obj = self.realize();
+        if limits.allows(&obj.kind) {
+            Ok(())
+        } else {
+            Err(DriftError::Device(format!(
+                "descriptor {}: realization {:?} exceeds device limits",
+                self.name, obj.kind
+            )))
+        }
+    }
+
+    /// Bytes of GPU memory the realization occupies.
+    pub fn bytes(&self) -> usize {
+        self.realize().bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig1_shape() -> Shape {
+        Shape::bhwc(1, 2, 3, 5)
+    }
+
+    #[test]
+    fn figure1_3d_texture() {
+        // (1,2,3,5) as 3D texture in DSHWBC4 → (2,3,2) = (depth? no: w,h,d).
+        let d = TensorDescriptor::with_default_layout(
+            "t",
+            fig1_shape(),
+            DType::F16,
+            StorageType::Texture3D,
+        )
+        .unwrap();
+        // DSHWBC4 groups: [D,S],[H],[W,B] → depth=1·2=2, height=2, width=3·1=3.
+        match d.realize().kind {
+            ObjectKind::Texture3D { width, height, depth } => {
+                assert_eq!((width, height, depth), (3, 2, 2));
+            }
+            k => panic!("wrong kind {k:?}"),
+        }
+        assert_eq!(d.texels(), 12);
+    }
+
+    #[test]
+    fn figure1_2d_texture() {
+        // (1,2,3,5) as 2D texture in HSWBDC4 → (2·⌈5/4⌉, 3) = (4,3):
+        // height = H·S = 4, width = W·B·D = 3.
+        let d = TensorDescriptor::with_default_layout(
+            "t",
+            fig1_shape(),
+            DType::F16,
+            StorageType::Texture2D,
+        )
+        .unwrap();
+        match d.realize().kind {
+            ObjectKind::Texture2D { width, height } => {
+                assert_eq!((width, height), (3, 4));
+            }
+            k => panic!("wrong kind {k:?}"),
+        }
+    }
+
+    #[test]
+    fn figure1_image_buffer() {
+        // (1,2,3,5) as a 1D image buffer → 2·3·⌈5/4⌉ = 12 pixels.
+        let d = TensorDescriptor::with_default_layout(
+            "t",
+            fig1_shape(),
+            DType::F16,
+            StorageType::ImageBuffer,
+        )
+        .unwrap();
+        match d.realize().kind {
+            ObjectKind::ImageBuffer { texels } => assert_eq!(texels, 12),
+            k => panic!("wrong kind {k:?}"),
+        }
+    }
+
+    #[test]
+    fn c4_must_be_innermost() {
+        use crate::tensor::ActDim::*;
+        let weird = ActivationLayout::new("C4_outer", vec![C4, B, H, W, D, S]).unwrap();
+        assert!(TensorDescriptor::new(
+            "t",
+            fig1_shape(),
+            DType::F16,
+            weird,
+            StorageType::Buffer
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_against_limits() {
+        let big = Shape::bhwc(1, 20000, 8, 4);
+        let d = TensorDescriptor::with_default_layout("t", big, DType::F16, StorageType::Texture2D)
+            .unwrap();
+        assert!(d.validate(&TextureLimits::default()).is_err());
+        let d = TensorDescriptor::with_default_layout("t", big, DType::F16, StorageType::Buffer)
+            .unwrap();
+        assert!(d.validate(&TextureLimits::default()).is_ok());
+    }
+
+    #[test]
+    fn bytes_scale_with_dtype() {
+        let d16 = TensorDescriptor::with_default_layout(
+            "t",
+            fig1_shape(),
+            DType::F16,
+            StorageType::Buffer,
+        )
+        .unwrap();
+        let d32 = TensorDescriptor::with_default_layout(
+            "t",
+            fig1_shape(),
+            DType::F32,
+            StorageType::Buffer,
+        )
+        .unwrap();
+        assert_eq!(d32.bytes(), 2 * d16.bytes());
+    }
+}

@@ -1,0 +1,362 @@
+//! Logical→physical index translation, including multi-object splits.
+//!
+//! The mapper is the runtime-facing half of tensor virtualization: given a
+//! [`TensorDescriptor`] (or a weight layout + split), it translates logical
+//! element coordinates into `(object, native coords, lane)` physical
+//! indices. The translation is *established once* (here, and in shader form
+//! by [`crate::translate`]) so it adds no per-access runtime latency.
+
+use crate::tensor::layout::{WeightLayout, WeightShape};
+use crate::vgpu::descriptor::TensorDescriptor;
+use crate::vgpu::object::{GpuObject, ObjectKind, StorageType};
+
+/// A resolved physical location: which object, which native coordinates
+/// (u, v, layer/depth as applicable), and which lane within the vec4 texel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PhysicalIndex {
+    pub object: usize,
+    /// Native coords, meaning depends on storage: buffers use `[flat,0,0]`
+    /// (element index), image buffers `[texel,0,0]`, 2D textures `[u,v,0]`,
+    /// 3D/array textures `[u,v,w]`.
+    pub coords: [usize; 3],
+    /// Lane within the vec4 texel (equals `C4` for activations, `I4`/`O4`
+    /// for weights depending on layout).
+    pub lane: usize,
+}
+
+/// Mapping for an activation tensor realized as one or more objects.
+#[derive(Clone, Debug)]
+pub struct VirtualMapping {
+    desc: TensorDescriptor,
+    /// Number of physical objects the tensor is distributed across. The
+    /// split axis is the outermost coordinate group (e.g. slice planes), so
+    /// each object holds a contiguous sub-volume.
+    pub objects: usize,
+    /// Texels per object (all objects equal; last may be padded).
+    pub texels_per_object: usize,
+    /// Cached coordinate-group extents (outermost first): `map()` is a
+    /// host-side packing hot path, so `coord_extents()`'s per-call `Vec`
+    /// allocation is hoisted to construction time (EXPERIMENTS.md §Perf).
+    ext: [usize; 3],
+}
+
+impl VirtualMapping {
+    fn cache_ext(desc: &TensorDescriptor) -> [usize; 3] {
+        let e = desc.coord_extents();
+        match e.len() {
+            1 => [e[0], 1, 1],
+            2 => [e[0], e[1], 1],
+            _ => [e[0], e[1], e[2]],
+        }
+    }
+
+    /// Single-object mapping.
+    pub fn single(desc: TensorDescriptor) -> Self {
+        let texels = desc.texels();
+        let ext = Self::cache_ext(&desc);
+        VirtualMapping { desc, objects: 1, texels_per_object: texels, ext }
+    }
+
+    /// Split across `n` objects along the outermost coordinate group —
+    /// the Fig. 2 pattern generalized (a convolution kernel reading several
+    /// textures simultaneously to improve cache behaviour).
+    pub fn split(desc: TensorDescriptor, n: usize) -> Self {
+        let n = n.max(1);
+        let ext = Self::cache_ext(&desc);
+        let outer = ext[0];
+        // Split along the outer axis in contiguous blocks.
+        let outer_per_obj = outer.div_ceil(n);
+        let inner: usize = desc.coord_extents()[1..].iter().product();
+        VirtualMapping { desc, objects: n, texels_per_object: outer_per_obj * inner, ext }
+    }
+
+    pub fn descriptor(&self) -> &TensorDescriptor {
+        &self.desc
+    }
+
+    /// Translate logical `(b,h,w,d,c)` to a physical index.
+    pub fn map(&self, b: usize, h: usize, w: usize, d: usize, c: usize) -> PhysicalIndex {
+        let flat = self.desc.layout.linear_index(&self.desc.shape, b, h, w, d, c);
+        let lane = flat % 4;
+        let texel = flat / 4;
+        let (object, local_texel) = if self.objects == 1 {
+            (0, texel)
+        } else {
+            (texel / self.texels_per_object, texel % self.texels_per_object)
+        };
+        let coords = match self.desc.storage {
+            StorageType::Buffer => [flat - object * self.texels_per_object * 4, 0, 0],
+            StorageType::ImageBuffer => [local_texel, 0, 0],
+            StorageType::Texture2D => {
+                let width = self.ext[1];
+                [local_texel % width, local_texel / width, 0]
+            }
+            StorageType::Texture2DArray | StorageType::Texture3D => {
+                let (width, height) = (self.ext[2], self.ext[1]);
+                [
+                    local_texel % width,
+                    (local_texel / width) % height,
+                    local_texel / (width * height),
+                ]
+            }
+        };
+        PhysicalIndex { object, coords, lane }
+    }
+
+    /// Realize all objects (equal-size sub-volumes of the descriptor).
+    pub fn realize_objects(&self) -> Vec<GpuObject> {
+        if self.objects == 1 {
+            return vec![self.desc.realize()];
+        }
+        (0..self.objects)
+            .map(|i| {
+                let name = format!("{}.{i}", self.desc.name);
+                let kind = match self.desc.storage {
+                    StorageType::Buffer => ObjectKind::Buffer { len: self.texels_per_object * 4 },
+                    StorageType::ImageBuffer => {
+                        ObjectKind::ImageBuffer { texels: self.texels_per_object }
+                    }
+                    StorageType::Texture2D => {
+                        let ext = self.desc.coord_extents();
+                        ObjectKind::Texture2D {
+                            width: ext[1],
+                            height: self.texels_per_object / ext[1],
+                        }
+                    }
+                    StorageType::Texture2DArray | StorageType::Texture3D => {
+                        let ext = self.desc.coord_extents();
+                        ObjectKind::Texture2DArray {
+                            width: ext[2],
+                            height: ext[1],
+                            layers: self.texels_per_object / (ext[1] * ext[2]),
+                        }
+                    }
+                };
+                GpuObject::new(&name, kind, self.desc.dtype)
+            })
+            .collect()
+    }
+}
+
+/// Mapping for convolution / fully-connected weights distributed across
+/// `G · S_I` 2D textures — the exact arrangement of the paper's Figure 2:
+/// an OHWI (5,2,1,7) weight tensor as four (4,2) textures, texel = vec4 of
+/// input channels, width covering `O4·W·D`, height covering `S_O·H`.
+#[derive(Clone, Debug)]
+pub struct WeightTextureSplit {
+    pub shape: WeightShape,
+    pub layout: WeightLayout,
+}
+
+impl WeightTextureSplit {
+    pub fn new(shape: WeightShape, layout: WeightLayout) -> Self {
+        WeightTextureSplit { shape, layout }
+    }
+
+    /// Number of textures: one per (group, input-slice) pair.
+    pub fn num_objects(&self) -> usize {
+        self.layout.group * self.shape.slices_i()
+    }
+
+    /// Per-texture dimensions in texels: width = `O4 · W · D`, height =
+    /// `S_O · H`; each texel is a vec4 of 4 input channels (`I4`).
+    pub fn texture_dims(&self) -> (usize, usize) {
+        let so = self.layout.so_extent(&self.shape);
+        (4 * self.shape.w * self.shape.d, so * self.shape.h)
+    }
+
+    /// Translate logical weight element `(o,h,w,d,i)` to a physical index.
+    pub fn map(&self, o: usize, h: usize, w: usize, d: usize, i: usize) -> PhysicalIndex {
+        let so_ext = self.layout.so_extent(&self.shape);
+        let slice_o = o / 4;
+        let g = slice_o / so_ext;
+        let so = slice_o % so_ext;
+        let si = i / 4;
+        let object = g * self.shape.slices_i() + si;
+        let (width, _h) = self.texture_dims();
+        // u covers (w, d, o4); v covers (so, h).
+        let u = (w * self.shape.d + d) * 4 + o % 4;
+        let v = so * self.shape.h + h;
+        debug_assert!(u < width);
+        PhysicalIndex { object, coords: [u, v, 0], lane: i % 4 }
+    }
+
+    /// Realize the texture array objects.
+    pub fn realize_objects(&self, dtype: crate::tensor::DType, name: &str) -> Vec<GpuObject> {
+        let (w, h) = self.texture_dims();
+        (0..self.num_objects())
+            .map(|i| {
+                GpuObject::new(&format!("{name}.{i}"), ObjectKind::Texture2D { width: w, height: h }, dtype)
+            })
+            .collect()
+    }
+}
+
+/// Convenience: exhaustively verify a mapping is injective over texel+lane
+/// positions (used by tests and the property suite).
+pub fn mapping_is_injective(m: &VirtualMapping) -> bool {
+    let s = m.descriptor().shape;
+    let mut seen = std::collections::HashSet::new();
+    for b in 0..s.b {
+        for h in 0..s.h {
+            for w in 0..s.w {
+                for d in 0..s.d {
+                    for c in 0..s.c {
+                        let p = m.map(b, h, w, d, c);
+                        if !seen.insert((p.object, p.coords, p.lane)) {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, Shape};
+    use crate::util::propcheck::{check, Config};
+
+    fn fig1_desc(storage: StorageType) -> TensorDescriptor {
+        TensorDescriptor::with_default_layout("t", Shape::bhwc(1, 2, 3, 5), DType::F16, storage)
+            .unwrap()
+    }
+
+    #[test]
+    fn single_mapping_injective_all_storages() {
+        for st in [
+            StorageType::Buffer,
+            StorageType::ImageBuffer,
+            StorageType::Texture2D,
+            StorageType::Texture3D,
+        ] {
+            let m = VirtualMapping::single(fig1_desc(st));
+            assert!(mapping_is_injective(&m), "not injective for {st}");
+        }
+    }
+
+    #[test]
+    fn texture2d_coords_match_table1() {
+        // Table 1, 2D texture row: (x·batch + b, y·slice + s) for BHWC.
+        let m = VirtualMapping::single(fig1_desc(StorageType::Texture2D));
+        let s = Shape::bhwc(1, 2, 3, 5);
+        for h in 0..2 {
+            for w in 0..3 {
+                for c in 0..5 {
+                    let p = m.map(0, h, w, 0, c);
+                    assert_eq!(p.coords[0], w * s.b, "u = x·batch + b");
+                    assert_eq!(p.coords[1], h * s.slices() + c / 4, "v = y·slice + s");
+                    assert_eq!(p.lane, c % 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn texture3d_coords_match_table1() {
+        // Table 1, 3D texture row: (x·batch + b, y, s).
+        let m = VirtualMapping::single(fig1_desc(StorageType::Texture3D));
+        for h in 0..2 {
+            for w in 0..3 {
+                for c in 0..5 {
+                    let p = m.map(0, h, w, 0, c);
+                    assert_eq!(p.coords, [w, h, c / 4]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn buffer_flat_index_matches_table1() {
+        // Table 1, 1D buffer row: ((s·height + y)·width + x)·batch + b.
+        let m = VirtualMapping::single(fig1_desc(StorageType::ImageBuffer));
+        let s = Shape::bhwc(1, 2, 3, 5);
+        for h in 0..2 {
+            for w in 0..3 {
+                for c in 0..5 {
+                    let p = m.map(0, h, w, 0, c);
+                    let expect = ((c / 4) * s.h + h) * s.w + w; // b = 0, B = 1
+                    assert_eq!(p.coords[0], expect);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_mapping_covers_multiple_objects() {
+        let desc = TensorDescriptor::with_default_layout(
+            "t",
+            Shape::bhwc(1, 4, 4, 16), // 4 slices
+            DType::F16,
+            StorageType::ImageBuffer,
+        )
+        .unwrap();
+        let m = VirtualMapping::split(desc, 4);
+        assert_eq!(m.objects, 4);
+        assert!(mapping_is_injective(&m));
+        let mut used: Vec<bool> = vec![false; 4];
+        let s = Shape::bhwc(1, 4, 4, 16);
+        for h in 0..s.h {
+            for w in 0..s.w {
+                for c in 0..s.c {
+                    used[m.map(0, h, w, 0, c).object] = true;
+                }
+            }
+        }
+        assert!(used.iter().all(|u| *u), "all objects referenced");
+    }
+
+    #[test]
+    fn figure2_weight_split() {
+        // OHWI (5,2,1,7) with G=2 → 4 textures of (4,2), 8 vec4 each.
+        let ws = WeightShape::ohwi(5, 2, 1, 7);
+        let split = WeightTextureSplit::new(ws, WeightLayout::gso_hwdsi_o4i4(2));
+        assert_eq!(split.num_objects(), 4);
+        assert_eq!(split.texture_dims(), (4, 2));
+        let objs = split.realize_objects(DType::F16, "w");
+        assert_eq!(objs.len(), 4);
+        assert_eq!(objs[0].kind.elements(), 32); // 8 texels · 4
+
+        // Injectivity across (object, coords, lane).
+        let mut seen = std::collections::HashSet::new();
+        for o in 0..5 {
+            for h in 0..2 {
+                for i in 0..7 {
+                    let p = split.map(o, h, 0, 0, i);
+                    assert!(p.object < 4);
+                    assert!(seen.insert((p.object, p.coords, p.lane)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_split_mappings_injective() {
+        check("virtual mapping injective under random splits", Config::cases(30), |rng| {
+            let shape = Shape::bhwc(
+                1 + rng.gen_range(2) as usize,
+                1 + rng.gen_range(6) as usize,
+                1 + rng.gen_range(6) as usize,
+                1 + rng.gen_range(20) as usize,
+            );
+            let storage = *rng.choose(&[
+                StorageType::Buffer,
+                StorageType::ImageBuffer,
+                StorageType::Texture2D,
+                StorageType::Texture3D,
+            ]);
+            let desc =
+                TensorDescriptor::with_default_layout("t", shape, DType::F16, storage).unwrap();
+            let n = 1 + rng.gen_range(4) as usize;
+            let m = VirtualMapping::split(desc, n);
+            if mapping_is_injective(&m) {
+                Ok(())
+            } else {
+                Err(format!("collision: shape {shape}, storage {storage}, n {n}"))
+            }
+        });
+    }
+}

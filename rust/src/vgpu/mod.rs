@@ -1,0 +1,23 @@
+//! Tensor virtualization (paper §3.2).
+//!
+//! *Tensor virtualization* decouples a tensor's **logical** representation
+//! (a BHWDC array) from its **physical** storage on the GPU (buffers,
+//! image buffers, 2D/3D textures, texture arrays — possibly *several*
+//! objects for one tensor). An abstraction layer owns the mapping between
+//! logical tensor indices and physical GPU object indices, handling
+//! fragmentation and distribution, so kernel authors never touch low-level
+//! memory concerns.
+//!
+//! * [`object`] — the physical GPU object model and device limits.
+//! * [`descriptor`] — a logical tensor bound to a storage decision
+//!   (object type + layout + split policy).
+//! * [`mapper`] — the logical→physical index translation, including the
+//!   multi-object split of Fig. 2 (one tensor across four textures).
+
+pub mod object;
+pub mod descriptor;
+pub mod mapper;
+
+pub use object::{GpuObject, ObjectKind, StorageType, TextureLimits};
+pub use descriptor::TensorDescriptor;
+pub use mapper::{PhysicalIndex, VirtualMapping};

@@ -1,0 +1,197 @@
+//! Physical GPU object model.
+
+use crate::tensor::DType;
+
+/// The kind of physical GPU memory object a tensor may be realized as
+/// (paper §3.1: "GPU buffers, image buffers, texture arrays, 2D textures,
+/// and 3D textures").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StorageType {
+    /// Raw linear buffer (OpenCL buffer / Metal buffer / WGSL storage).
+    Buffer,
+    /// 1D image buffer: linear memory with texture-unit access (vec4 texels).
+    ImageBuffer,
+    /// 2D texture (vec4 texels, 2D cache locality, free edge clamping).
+    Texture2D,
+    /// 2D texture array (Fig. 2: several 2D layers under one handle).
+    Texture2DArray,
+    /// 3D texture.
+    Texture3D,
+}
+
+impl StorageType {
+    /// Whether access goes through the texture path (vec4 texels, sampler
+    /// cache) rather than raw pointers.
+    pub fn is_texture(self) -> bool {
+        !matches!(self, StorageType::Buffer)
+    }
+
+    /// Dimensionality of the native coordinate system.
+    pub fn coord_dims(self) -> usize {
+        match self {
+            StorageType::Buffer | StorageType::ImageBuffer => 1,
+            StorageType::Texture2D => 2,
+            StorageType::Texture2DArray | StorageType::Texture3D => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StorageType::Buffer => "buffer",
+            StorageType::ImageBuffer => "image_buffer",
+            StorageType::Texture2D => "texture2d",
+            StorageType::Texture2DArray => "texture2d_array",
+            StorageType::Texture3D => "texture3d",
+        }
+    }
+}
+
+impl std::fmt::Display for StorageType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Concrete dimensions of one physical object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjectKind {
+    /// Linear buffer of `len` *elements* (not texels).
+    Buffer { len: usize },
+    /// Image buffer of `texels` vec4 texels.
+    ImageBuffer { texels: usize },
+    /// 2D texture, `width × height` vec4 texels.
+    Texture2D { width: usize, height: usize },
+    /// 2D texture array: `layers` layers of `width × height` texels.
+    Texture2DArray { width: usize, height: usize, layers: usize },
+    /// 3D texture of `width × height × depth` texels.
+    Texture3D { width: usize, height: usize, depth: usize },
+}
+
+impl ObjectKind {
+    pub fn storage_type(&self) -> StorageType {
+        match self {
+            ObjectKind::Buffer { .. } => StorageType::Buffer,
+            ObjectKind::ImageBuffer { .. } => StorageType::ImageBuffer,
+            ObjectKind::Texture2D { .. } => StorageType::Texture2D,
+            ObjectKind::Texture2DArray { .. } => StorageType::Texture2DArray,
+            ObjectKind::Texture3D { .. } => StorageType::Texture3D,
+        }
+    }
+
+    /// Total element capacity (texels hold 4 elements).
+    pub fn elements(&self) -> usize {
+        match *self {
+            ObjectKind::Buffer { len } => len,
+            ObjectKind::ImageBuffer { texels } => texels * 4,
+            ObjectKind::Texture2D { width, height } => width * height * 4,
+            ObjectKind::Texture2DArray { width, height, layers } => width * height * layers * 4,
+            ObjectKind::Texture3D { width, height, depth } => width * height * depth * 4,
+        }
+    }
+}
+
+/// A physical GPU object: kind + element dtype + a debug name.
+/// In this reproduction objects model *allocations* (the simulator charges
+/// bytes and access costs); host data for the PJRT path lives in literals.
+#[derive(Clone, Debug)]
+pub struct GpuObject {
+    pub name: String,
+    pub kind: ObjectKind,
+    pub dtype: DType,
+}
+
+impl GpuObject {
+    pub fn new(name: &str, kind: ObjectKind, dtype: DType) -> Self {
+        GpuObject { name: name.to_string(), kind, dtype }
+    }
+
+    /// Allocated size in bytes (texel-padded for texture types).
+    pub fn bytes(&self) -> usize {
+        self.dtype.bytes_for(self.kind.elements())
+    }
+}
+
+/// Device texture limits used to decide whether a realization is legal
+/// (part of device specialization, §3.4).
+#[derive(Clone, Copy, Debug)]
+pub struct TextureLimits {
+    pub max_texture_2d: usize,
+    pub max_texture_3d: usize,
+    pub max_array_layers: usize,
+    pub max_image_buffer_texels: usize,
+}
+
+impl Default for TextureLimits {
+    fn default() -> Self {
+        // Conservative mobile-class limits.
+        TextureLimits {
+            max_texture_2d: 16384,
+            max_texture_3d: 2048,
+            max_array_layers: 2048,
+            max_image_buffer_texels: 1 << 27,
+        }
+    }
+}
+
+impl TextureLimits {
+    /// Whether an object of this kind fits the limits.
+    pub fn allows(&self, kind: &ObjectKind) -> bool {
+        match *kind {
+            ObjectKind::Buffer { .. } => true,
+            ObjectKind::ImageBuffer { texels } => texels <= self.max_image_buffer_texels,
+            ObjectKind::Texture2D { width, height } => {
+                width <= self.max_texture_2d && height <= self.max_texture_2d
+            }
+            ObjectKind::Texture2DArray { width, height, layers } => {
+                width <= self.max_texture_2d
+                    && height <= self.max_texture_2d
+                    && layers <= self.max_array_layers
+            }
+            ObjectKind::Texture3D { width, height, depth } => {
+                width <= self.max_texture_3d
+                    && height <= self.max_texture_3d
+                    && depth <= self.max_texture_3d
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_counts_texels_as_vec4() {
+        assert_eq!(ObjectKind::Buffer { len: 10 }.elements(), 10);
+        assert_eq!(ObjectKind::ImageBuffer { texels: 12 }.elements(), 48);
+        assert_eq!(ObjectKind::Texture2D { width: 4, height: 3 }.elements(), 48);
+        assert_eq!(
+            ObjectKind::Texture2DArray { width: 4, height: 2, layers: 4 }.elements(),
+            128
+        );
+    }
+
+    #[test]
+    fn byte_sizes_respect_dtype() {
+        let o = GpuObject::new("t", ObjectKind::Texture2D { width: 2, height: 2 }, DType::F16);
+        assert_eq!(o.bytes(), 16 * 2);
+        let o = GpuObject::new("t", ObjectKind::Buffer { len: 3 }, DType::I4);
+        assert_eq!(o.bytes(), 2);
+    }
+
+    #[test]
+    fn limits_gate_sizes() {
+        let lim = TextureLimits { max_texture_2d: 8, ..Default::default() };
+        assert!(lim.allows(&ObjectKind::Texture2D { width: 8, height: 8 }));
+        assert!(!lim.allows(&ObjectKind::Texture2D { width: 9, height: 1 }));
+        assert!(lim.allows(&ObjectKind::Buffer { len: usize::MAX / 2 }));
+    }
+
+    #[test]
+    fn storage_type_properties() {
+        assert!(!StorageType::Buffer.is_texture());
+        assert!(StorageType::Texture3D.is_texture());
+        assert_eq!(StorageType::Texture2D.coord_dims(), 2);
+        assert_eq!(StorageType::Texture2DArray.coord_dims(), 3);
+    }
+}

@@ -1,0 +1,80 @@
+//! End-to-end integration: AOT artifacts → PJRT → token-exact generation.
+//!
+//! Requires `make artifacts` (the tests skip loudly when artifacts are
+//! absent so `cargo test` stays runnable on a fresh checkout).
+
+use mldrift::runtime::{Runtime, TinyLmRuntime};
+use mldrift::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("MLDRIFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir}/ — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn loads_and_reports_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = TinyLmRuntime::load(&rt, &dir).unwrap();
+    model.check_shapes().unwrap();
+    let buckets = model.buckets();
+    assert!(buckets.contains(&16), "{buckets:?}");
+    assert!(buckets.contains(&64), "{buckets:?}");
+    assert_eq!(model.bucket_for(10).unwrap(), 16);
+    assert_eq!(model.bucket_for(17).unwrap(), 64);
+    assert!(model.bucket_for(65).is_err());
+}
+
+#[test]
+fn generation_matches_python_reference_exactly() {
+    let Some(dir) = artifacts_dir() else { return };
+    // The AOT step stored a reference generation in the manifest; the
+    // Rust runtime must reproduce it token for token.
+    let manifest =
+        Json::parse(&std::fs::read_to_string(format!("{dir}/manifest.json")).unwrap()).unwrap();
+    let tv = manifest.get("test_vector").expect("manifest has test_vector");
+    let prompt: Vec<i32> =
+        tv.get("prompt").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as i32).collect();
+    let steps = tv.get("steps").unwrap().as_u64().unwrap() as usize;
+    let expected: Vec<i32> = tv
+        .get("expected_tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+
+    let rt = Runtime::cpu().unwrap();
+    let model = TinyLmRuntime::load(&rt, &dir).unwrap();
+    let out = model.generate(&prompt, steps).unwrap();
+    assert_eq!(out.tokens, expected, "rust generation diverged from the python oracle");
+    assert!(out.prefill_s > 0.0);
+    assert_eq!(out.decode_s.len(), steps);
+}
+
+#[test]
+fn generation_is_deterministic_across_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = TinyLmRuntime::load(&rt, &dir).unwrap();
+    let prompt: Vec<i32> = (0..16).collect();
+    let a = model.generate(&prompt, 4).unwrap();
+    let b = model.generate(&prompt, 4).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+}
+
+#[test]
+fn overlong_generation_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = TinyLmRuntime::load(&rt, &dir).unwrap();
+    let prompt: Vec<i32> = (0..64).collect();
+    // capacity 320: 64 + 300 > 320.
+    assert!(model.generate(&prompt, 300).is_err());
+}

@@ -1,0 +1,71 @@
+//! Serving-layer integration: the thread-based engine over real PJRT.
+
+use mldrift::serving::{InferenceRequest, SchedulerConfig, ServingEngine};
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("MLDRIFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir}/ — run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn serves_single_request() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = ServingEngine::start(&dir, SchedulerConfig::default()).unwrap();
+    let prompt: Vec<i32> = (1..=16).collect();
+    let resp = engine.infer(InferenceRequest::new(1, prompt, 4)).unwrap();
+    assert_eq!(resp.tokens.len(), 4);
+    assert!(resp.prefill_s > 0.0);
+    assert!(resp.ttft_s >= resp.prefill_s);
+    assert!(resp.total_s >= resp.decode_s);
+}
+
+#[test]
+fn serves_concurrent_requests_with_batching() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = ServingEngine::start(
+        &dir,
+        SchedulerConfig { max_active: 3, max_prefills_per_round: 1 },
+    )
+    .unwrap();
+    // Submit 6 requests at once; the continuous batcher interleaves them.
+    let receivers: Vec<_> = (0..6)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..16).map(|t| (t + i) as i32).collect();
+            engine.submit(InferenceRequest::new(i as u64, prompt, 3)).unwrap()
+        })
+        .collect();
+    let mut ids = Vec::new();
+    for rx in receivers {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.tokens.len(), 3);
+        ids.push(resp.id);
+    }
+    ids.sort();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4, 5], "all requests answered exactly once");
+    let stats = engine.stats();
+    assert_eq!(stats.completed, 6);
+    assert_eq!(stats.tokens_generated, 18);
+}
+
+#[test]
+fn identical_prompts_get_identical_tokens_under_load() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = ServingEngine::start(
+        &dir,
+        SchedulerConfig { max_active: 4, max_prefills_per_round: 2 },
+    )
+    .unwrap();
+    let prompt: Vec<i32> = (1..=16).collect();
+    let rxs: Vec<_> = (0..4)
+        .map(|i| engine.submit(InferenceRequest::new(i, prompt.clone(), 5)).unwrap())
+        .collect();
+    let outs: Vec<Vec<i32>> = rxs.into_iter().map(|rx| rx.recv().unwrap().tokens).collect();
+    for o in &outs[1..] {
+        assert_eq!(o, &outs[0], "KV isolation: interleaved sequences must not interfere");
+    }
+}
