@@ -1,0 +1,25 @@
+# ML Drift reproduction — top-level targets.
+
+.PHONY: tier1 build test fmt artifacts bench-batched
+
+# The tier-1 gate CI runs on every push.
+tier1:
+	cd rust && cargo build --release && cargo test -q
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+fmt:
+	cd rust && cargo fmt --check
+
+# AOT-lower TinyLM to HLO text artifacts for the PJRT runtime
+# (needs the Python side: JAX + Pallas).
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../artifacts
+
+# Batched-serving decode-throughput sweep (simulated).
+bench-batched:
+	cd rust && cargo bench --bench bench_batched_serving

@@ -17,7 +17,7 @@ use mldrift::vgpu::descriptor::TensorDescriptor;
 use mldrift::vgpu::mapper::WeightTextureSplit;
 use mldrift::vgpu::object::StorageType;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldrift::Result<()> {
     // Figure 1: the logical (1,2,3,5) tensor realized three ways.
     let shape = Shape::bhwc(1, 2, 3, 5);
     println!("logical tensor {shape} — realizations (Fig. 1):");

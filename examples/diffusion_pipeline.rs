@@ -11,7 +11,7 @@ use mldrift::diffusion::SdPipeline;
 use mldrift::engine::compile::CompileOptions;
 use mldrift::util::human_bytes;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldrift::Result<()> {
     let opts = CompileOptions::default();
 
     // Per-component latency on one device (the Fig. 5 view).

@@ -10,7 +10,7 @@ use mldrift::memory::{lifetimes, liveness_lower_bound, naive_bytes, plan, valida
 use mldrift::models::sd::{sd_text_encoder, sd_unet, sd_vae_decoder};
 use mldrift::tensor::DType;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldrift::Result<()> {
     let mut t = Table::new(
         "Intermediate-tensor memory by strategy (MB, fp16)",
         &["component", "naive", "greedy-by-size", "greedy-by-breadth", "lower bound"],

@@ -13,7 +13,7 @@ use mldrift::models::llm_config;
 use mldrift::quant::QuantScheme;
 use mldrift::util::human_bytes;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldrift::Result<()> {
     // 1. Pick a model and a device from the registry.
     let cfg = llm_config("gemma2_2b").expect("model registered");
     let dev = device("adreno_750").expect("device registered");

@@ -2,6 +2,8 @@
 
 use std::fmt;
 
+use crate::runtime::xla;
+
 /// Errors produced by the ML Drift compiler, simulator, and runtime.
 #[derive(Debug)]
 pub enum DriftError {

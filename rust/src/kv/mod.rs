@@ -9,9 +9,19 @@
 //! * **V cache**: `OHWI` with reversed roles, `O = d_h`,
 //!   `I = cache_size` — the attention-output matmul then yields the
 //!   desired `(B·h_kv, S·h_q/h_kv, d_h)` layout with no transpose.
+//!
+//! For multi-tenant serving, per-sequence caches live in one **shared KV
+//! arena** ([`KvArena`]): a single contiguous device region carved into
+//! fixed-size blocks (byte size rounded up to the §3.5 planner's
+//! [`ALIGN`](crate::memory::plan::ALIGN)). Sequences reserve whole blocks
+//! at admission, so mid-stream overflow is impossible by construction and
+//! a full arena surfaces as *backpressure* (defer admission) rather than
+//! a failed request.
 
 use crate::error::{DriftError, Result};
+use crate::memory::plan::ALIGN;
 use crate::tensor::WeightShape;
+use crate::util::{align_up, div_ceil};
 
 /// The §3.8 cache layouts for one attention layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,55 +94,329 @@ impl KvCache {
     }
 }
 
-/// Cache pool for a serving engine: one slot per concurrent sequence.
-#[derive(Clone, Debug)]
-pub struct KvCachePool {
-    template: KvCache,
-    slots: Vec<Option<KvCache>>,
+/// Geometry of a shared KV arena.
+#[derive(Clone, Copy, Debug)]
+pub struct KvArenaConfig {
+    pub layers: usize,
+    pub heads_kv: usize,
+    pub head_dim: usize,
+    /// Token positions per block (the allocation granule).
+    pub block_tokens: usize,
+    /// Total blocks in the arena.
+    pub num_blocks: usize,
 }
 
-impl KvCachePool {
-    pub fn new(template: KvCache, max_sequences: usize) -> Self {
-        KvCachePool { template, slots: vec![None; max_sequences] }
+impl KvArenaConfig {
+    /// Size the arena to hold `total_tokens` positions at `block_tokens`
+    /// granularity.
+    pub fn for_capacity(
+        layers: usize,
+        heads_kv: usize,
+        head_dim: usize,
+        total_tokens: usize,
+        block_tokens: usize,
+    ) -> Self {
+        assert!(block_tokens > 0, "block_tokens must be positive");
+        KvArenaConfig {
+            layers,
+            heads_kv,
+            head_dim,
+            block_tokens,
+            num_blocks: div_ceil(total_tokens, block_tokens),
+        }
     }
 
-    /// Claim a free slot; returns its index.
-    pub fn claim(&mut self) -> Result<usize> {
-        for (i, s) in self.slots.iter_mut().enumerate() {
-            if s.is_none() {
-                *s = Some(self.template.clone());
-                return Ok(i);
+    /// fp16 K+V bytes per token position across all layers and heads.
+    pub fn bytes_per_token(&self) -> usize {
+        2 * 2 * self.layers * self.heads_kv * self.head_dim
+    }
+
+    /// Bytes per block, rounded up to the §3.5 planner alignment so
+    /// blocks tile the region on GPU-legal offsets.
+    pub fn block_bytes(&self) -> usize {
+        align_up(self.block_tokens * self.bytes_per_token(), ALIGN)
+    }
+
+    /// Size of the contiguous region backing the arena.
+    pub fn total_bytes(&self) -> usize {
+        self.num_blocks * self.block_bytes()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.num_blocks * self.block_tokens
+    }
+}
+
+/// Handle to one sequence's reservation in a [`KvArena`].
+///
+/// Generation-tagged: slots are reused after `release`, so a stale handle
+/// held past its release must be *inert* — append/len/release against it
+/// are rejected (or no-ops) instead of aliasing whichever sequence now
+/// occupies the slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct KvSeqHandle {
+    slot: usize,
+    gen: u64,
+}
+
+#[derive(Clone, Debug)]
+struct SeqEntry {
+    blocks: Vec<usize>,
+    /// Valid token positions written so far.
+    len: usize,
+    /// Reservation ceiling in tokens (blocks × block_tokens ≥ this).
+    reserved_tokens: usize,
+}
+
+/// Occupancy / fragmentation snapshot of the arena.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvArenaStats {
+    pub total_blocks: usize,
+    pub blocks_in_use: usize,
+    pub peak_blocks_in_use: usize,
+    pub sequences: usize,
+    /// Token positions actually written.
+    pub tokens_used: usize,
+    /// Token positions reserved (claimed capacity).
+    pub tokens_reserved: usize,
+    /// Bytes reserved but unusable or not (yet) holding valid positions:
+    /// unwritten reserved tokens plus the per-block `ALIGN` padding — the
+    /// internal fragmentation cost of block-granular reservation.
+    pub internal_fragmentation_bytes: usize,
+}
+
+impl KvArenaStats {
+    /// Written fraction of the reserved region, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.tokens_reserved == 0 {
+            return 0.0;
+        }
+        self.tokens_used as f64 / self.tokens_reserved as f64
+    }
+}
+
+/// Shared KV arena: block-granular slot allocation over one contiguous
+/// region, with per-sequence length bookkeeping and an explicit
+/// overflow→backpressure contract ([`KvArena::can_claim`] +
+/// `Err(DriftError::Memory)` from [`KvArena::claim`]).
+#[derive(Clone, Debug)]
+pub struct KvArena {
+    cfg: KvArenaConfig,
+    /// Free block ids (LIFO so recently released blocks are reused warm).
+    free: Vec<usize>,
+    /// Per-block owner: `None` = free, `Some(slot)` = claimed. The
+    /// double-claim guard the property tests exercise.
+    owner: Vec<Option<usize>>,
+    seqs: Vec<Option<SeqEntry>>,
+    /// Per-slot generation counter; bumped on release to invalidate
+    /// outstanding handles to the old occupant.
+    gens: Vec<u64>,
+    peak_blocks_in_use: usize,
+}
+
+impl KvArena {
+    pub fn new(cfg: KvArenaConfig) -> Self {
+        // Config fields are pub (tests build them literally), so validate
+        // here too — a zero granule would divide-by-zero on first claim.
+        assert!(cfg.block_tokens > 0, "kv arena block_tokens must be positive");
+        KvArena {
+            free: (0..cfg.num_blocks).rev().collect(),
+            owner: vec![None; cfg.num_blocks],
+            seqs: Vec::new(),
+            gens: Vec::new(),
+            peak_blocks_in_use: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &KvArenaConfig {
+        &self.cfg
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        div_ceil(tokens.max(1), self.cfg.block_tokens)
+    }
+
+    /// Would a reservation of `tokens` positions succeed right now?
+    /// Admission control asks this *before* popping a request off the
+    /// waiting queue; `false` means "defer", never "fail".
+    pub fn can_claim(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) <= self.free.len()
+    }
+
+    /// Reserve capacity for a sequence of up to `tokens` positions.
+    /// Whole-lifetime reservation makes mid-stream overflow impossible;
+    /// the error here is the backpressure signal the scheduler converts
+    /// into deferred admission.
+    pub fn claim(&mut self, tokens: usize) -> Result<KvSeqHandle> {
+        let need = self.blocks_for(tokens);
+        if need > self.free.len() {
+            return Err(DriftError::Memory(format!(
+                "kv arena exhausted: need {need} blocks for {tokens} tokens, {} free of {}",
+                self.free.len(),
+                self.cfg.num_blocks
+            )));
+        }
+        let slot = match self.seqs.iter().position(|s| s.is_none()) {
+            Some(i) => i,
+            None => {
+                self.seqs.push(None);
+                self.gens.push(0);
+                self.seqs.len() - 1
+            }
+        };
+        let mut blocks = Vec::with_capacity(need);
+        for _ in 0..need {
+            let b = self.free.pop().expect("free count checked above");
+            debug_assert!(self.owner[b].is_none(), "block {b} double-claimed");
+            self.owner[b] = Some(slot);
+            blocks.push(b);
+        }
+        self.seqs[slot] = Some(SeqEntry { blocks, len: 0, reserved_tokens: tokens.max(1) });
+        self.peak_blocks_in_use = self.peak_blocks_in_use.max(self.blocks_in_use());
+        Ok(KvSeqHandle { slot, gen: self.gens[slot] })
+    }
+
+    fn entry_mut(&mut self, h: KvSeqHandle) -> Result<&mut SeqEntry> {
+        if self.gens.get(h.slot) != Some(&h.gen) {
+            return Err(DriftError::Serving(format!(
+                "stale kv arena handle (slot {}, gen {})",
+                h.slot, h.gen
+            )));
+        }
+        self.seqs
+            .get_mut(h.slot)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| DriftError::Serving(format!("kv arena slot {} not claimed", h.slot)))
+    }
+
+    /// Record `n` newly written token positions for a sequence.
+    pub fn append(&mut self, h: KvSeqHandle, n: usize) -> Result<()> {
+        let e = self.entry_mut(h)?;
+        if e.len + n > e.reserved_tokens {
+            return Err(DriftError::Memory(format!(
+                "kv arena sequence overflow: {} + {n} > reservation {}",
+                e.len, e.reserved_tokens
+            )));
+        }
+        e.len += n;
+        Ok(())
+    }
+
+    /// Valid positions written for a sequence (0 for stale/unknown handles).
+    pub fn len(&self, h: KvSeqHandle) -> usize {
+        if self.gens.get(h.slot) != Some(&h.gen) {
+            return 0;
+        }
+        self.seqs.get(h.slot).and_then(|s| s.as_ref()).map_or(0, |e| e.len)
+    }
+
+    /// Release a sequence's blocks back to the free list. Stale or unknown
+    /// handles are a no-op (the generation tag makes double-release on the
+    /// reap path safe even after the slot is reused).
+    pub fn release(&mut self, h: KvSeqHandle) {
+        if self.gens.get(h.slot) != Some(&h.gen) {
+            return; // stale handle: the slot now belongs to someone else
+        }
+        let entry = self.seqs.get_mut(h.slot).and_then(|s| s.take());
+        if let Some(e) = entry {
+            self.gens[h.slot] += 1; // invalidate outstanding copies of `h`
+            for b in e.blocks {
+                debug_assert_eq!(self.owner[b], Some(h.slot), "block {b} owner mismatch");
+                self.owner[b] = None;
+                self.free.push(b);
             }
         }
-        Err(DriftError::Serving("no free KV cache slots".into()))
     }
 
-    pub fn get_mut(&mut self, slot: usize) -> Result<&mut KvCache> {
-        self.slots
-            .get_mut(slot)
-            .and_then(|s| s.as_mut())
-            .ok_or_else(|| DriftError::Serving(format!("kv slot {slot} not claimed")))
+    pub fn seq_count(&self) -> usize {
+        self.seqs.iter().filter(|s| s.is_some()).count()
     }
 
-    pub fn release(&mut self, slot: usize) {
-        if let Some(s) = self.slots.get_mut(slot) {
-            *s = None;
+    pub fn blocks_in_use(&self) -> usize {
+        self.cfg.num_blocks - self.free.len()
+    }
+
+    pub fn blocks_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Occupancy + fragmentation snapshot.
+    pub fn stats(&self) -> KvArenaStats {
+        let mut tokens_used = 0;
+        let mut tokens_reserved = 0;
+        let mut sequences = 0;
+        for e in self.seqs.iter().flatten() {
+            sequences += 1;
+            tokens_used += e.len;
+            tokens_reserved += e.blocks.len() * self.cfg.block_tokens;
+        }
+        // Per-block ALIGN padding is claimed arena memory no sequence can
+        // ever write — count it alongside the unwritten reserved tokens.
+        let block_padding =
+            self.cfg.block_bytes() - self.cfg.block_tokens * self.cfg.bytes_per_token();
+        KvArenaStats {
+            total_blocks: self.cfg.num_blocks,
+            blocks_in_use: self.blocks_in_use(),
+            peak_blocks_in_use: self.peak_blocks_in_use,
+            sequences,
+            tokens_used,
+            tokens_reserved,
+            internal_fragmentation_bytes: (tokens_reserved - tokens_used)
+                * self.cfg.bytes_per_token()
+                + self.blocks_in_use() * block_padding,
         }
     }
 
-    pub fn in_use(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
-    }
-
-    /// Total bytes across claimed slots.
-    pub fn bytes(&self) -> usize {
-        self.slots.iter().flatten().map(|c| c.bytes()).sum()
+    /// Structural invariant check for the property tests: every block is
+    /// either free or owned by exactly one live sequence, and the
+    /// ownership map agrees with the per-sequence block lists.
+    pub fn verify(&self) -> Result<()> {
+        let mut seen = vec![false; self.cfg.num_blocks];
+        for &b in &self.free {
+            if b >= self.cfg.num_blocks {
+                return Err(DriftError::Memory(format!("free list block {b} out of range")));
+            }
+            if seen[b] {
+                return Err(DriftError::Memory(format!("block {b} twice in free list")));
+            }
+            seen[b] = true;
+            if self.owner[b].is_some() {
+                return Err(DriftError::Memory(format!("free block {b} has an owner")));
+            }
+        }
+        for (slot, e) in self.seqs.iter().enumerate() {
+            let Some(e) = e else { continue };
+            if e.len > e.blocks.len() * self.cfg.block_tokens {
+                return Err(DriftError::Memory(format!(
+                    "seq slot {slot} len {} exceeds its {} blocks",
+                    e.len,
+                    e.blocks.len()
+                )));
+            }
+            for &b in &e.blocks {
+                if seen[b] {
+                    return Err(DriftError::Memory(format!("block {b} double-claimed")));
+                }
+                seen[b] = true;
+                if self.owner[b] != Some(slot) {
+                    return Err(DriftError::Memory(format!(
+                        "block {b} owner map disagrees with seq slot {slot}"
+                    )));
+                }
+            }
+        }
+        if seen.iter().any(|s| !s) {
+            return Err(DriftError::Memory("leaked block: neither free nor owned".into()));
+        }
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::propcheck::{check, Config};
 
     #[test]
     fn layouts_match_section_3_8() {
@@ -164,18 +448,141 @@ mod tests {
         assert_eq!(c.bytes(), cfg.kv_bytes_per_token() * 1280);
     }
 
+    fn small_arena(blocks: usize) -> KvArena {
+        KvArena::new(KvArenaConfig {
+            layers: 4,
+            heads_kv: 2,
+            head_dim: 64,
+            block_tokens: 16,
+            num_blocks: blocks,
+        })
+    }
+
     #[test]
-    fn pool_claim_release() {
-        let t = KvCache::new(4, 2, 64, 128);
-        let mut pool = KvCachePool::new(t, 2);
-        let a = pool.claim().unwrap();
-        let b = pool.claim().unwrap();
-        assert_ne!(a, b);
-        assert!(pool.claim().is_err());
-        pool.get_mut(a).unwrap().append(5).unwrap();
-        pool.release(a);
-        assert_eq!(pool.in_use(), 1);
-        let c = pool.claim().unwrap();
-        assert_eq!(pool.get_mut(c).unwrap().len, 0, "fresh slot state");
+    fn arena_geometry_is_planner_aligned() {
+        let cfg = KvArenaConfig::for_capacity(26, 4, 256, 1280, 16);
+        assert_eq!(cfg.num_blocks, 80);
+        assert_eq!(cfg.block_bytes() % ALIGN, 0, "blocks must tile on ALIGN");
+        assert_eq!(cfg.total_tokens(), 1280);
+        // 16 tokens × bytes/token is already 64-aligned here, so the
+        // arena is exactly the dense §3.8 footprint.
+        assert_eq!(cfg.total_bytes(), KvCache::new(26, 4, 256, 1280).bytes());
+    }
+
+    #[test]
+    fn arena_claim_append_release() {
+        let mut a = small_arena(8);
+        let h1 = a.claim(40).unwrap(); // 3 blocks of 16
+        let h2 = a.claim(16).unwrap(); // 1 block
+        assert_ne!(h1, h2);
+        assert_eq!(a.blocks_in_use(), 4);
+        a.append(h1, 32).unwrap();
+        a.append(h1, 8).unwrap();
+        assert_eq!(a.len(h1), 40);
+        assert!(a.append(h1, 1).is_err(), "reservation ceiling enforced");
+        a.verify().unwrap();
+
+        let s = a.stats();
+        assert_eq!(s.sequences, 2);
+        assert_eq!(s.tokens_used, 40);
+        assert_eq!(s.tokens_reserved, 64);
+        assert_eq!(
+            s.internal_fragmentation_bytes,
+            24 * a.config().bytes_per_token()
+        );
+
+        a.release(h1);
+        a.release(h1); // stale double-release: no-op
+        assert_eq!(a.blocks_in_use(), 1);
+        a.verify().unwrap();
+        let h3 = a.claim(100).unwrap(); // 7 blocks: needs the released ones
+        assert_eq!(a.len(h3), 0, "fresh reservation starts empty");
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn fragmentation_counts_align_padding() {
+        let mut a = KvArena::new(KvArenaConfig {
+            layers: 1,
+            heads_kv: 1,
+            head_dim: 40, // 160 B/token → block rounds 160 → 192 B
+            block_tokens: 1,
+            num_blocks: 4,
+        });
+        assert_eq!(a.config().bytes_per_token(), 160);
+        assert_eq!(a.config().block_bytes(), 192);
+        let h = a.claim(2).unwrap(); // 2 blocks, fully written below
+        a.append(h, 2).unwrap();
+        let s = a.stats();
+        assert_eq!(s.tokens_used, 2);
+        assert_eq!(s.tokens_reserved, 2);
+        // All reserved tokens written, yet 32 B of ALIGN padding per
+        // claimed block is still dead arena memory.
+        assert_eq!(s.internal_fragmentation_bytes, 2 * 32);
+    }
+
+    #[test]
+    fn stale_handle_after_slot_reuse_is_inert() {
+        // Regression: handles are generation-tagged, so a handle kept past
+        // its release must not touch the sequence that reused the slot.
+        let mut a = small_arena(4);
+        let h1 = a.claim(16).unwrap();
+        a.release(h1);
+        let h2 = a.claim(16).unwrap(); // reuses the freed slot
+        assert_ne!(h1, h2, "reused slot must carry a new generation");
+        a.release(h1); // stale: must NOT free h2's blocks
+        assert_eq!(a.blocks_in_use(), 1, "live sequence survived stale release");
+        assert!(a.append(h1, 1).is_err(), "stale handle rejected");
+        assert_eq!(a.len(h1), 0);
+        a.append(h2, 16).unwrap();
+        assert_eq!(a.len(h2), 16);
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn arena_full_is_backpressure_not_request_failure() {
+        let mut a = small_arena(4);
+        assert!(a.can_claim(64));
+        let h = a.claim(64).unwrap(); // all 4 blocks
+        assert!(!a.can_claim(1), "full arena must report backpressure");
+        let err = a.claim(16).unwrap_err();
+        assert!(matches!(err, DriftError::Memory(_)), "{err}");
+        a.verify().unwrap();
+        a.release(h);
+        assert!(a.can_claim(64), "released capacity is reusable");
+    }
+
+    #[test]
+    fn arena_blocks_never_double_claimed_property() {
+        check("kv arena block ownership stays disjoint", Config::cases(64), |rng| {
+            let mut a = small_arena(1 + rng.gen_range(16) as usize);
+            let mut live: Vec<KvSeqHandle> = Vec::new();
+            for _ in 0..64 {
+                match rng.gen_range(3) {
+                    0 => {
+                        let tokens = 1 + rng.gen_range(80) as usize;
+                        if a.can_claim(tokens) {
+                            live.push(a.claim(tokens).map_err(|e| e.to_string())?);
+                        } else if a.claim(tokens).is_ok() {
+                            return Err("claim succeeded after can_claim said no".into());
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            a.release(live.swap_remove(i));
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            let _ = a.append(live[i], 1 + rng.gen_range(8) as usize);
+                        }
+                    }
+                }
+                a.verify().map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        });
     }
 }

@@ -8,6 +8,7 @@
 //! * `generate` — run *real* generation through the PJRT runtime.
 //! * `serve`    — serve a synthetic workload through the batching engine.
 
+use mldrift::DriftError;
 use mldrift::codegen::select::Stage;
 use mldrift::device::registry::{all_devices, device};
 use mldrift::diffusion::SdPipeline;
@@ -91,7 +92,7 @@ fn cli() -> Cli {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldrift::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(m) = cli().parse(&argv)? else { return Ok(()) };
     match m.command.as_str() {
@@ -110,11 +111,11 @@ fn main() -> anyhow::Result<()> {
         }
         "plan" => {
             let cfg = llm_config(m.req("model"))
-                .ok_or_else(|| anyhow::anyhow!("unknown model {}", m.req("model")))?;
+                .ok_or_else(|| DriftError::Config(format!("unknown model {}", m.req("model"))))?;
             let dev = device(m.req("device"))
-                .ok_or_else(|| anyhow::anyhow!("unknown device {}", m.req("device")))?;
+                .ok_or_else(|| DriftError::Config(format!("unknown device {}", m.req("device"))))?;
             let scheme = QuantScheme::parse(m.req("quant"))
-                .ok_or_else(|| anyhow::anyhow!("unknown quant {}", m.req("quant")))?;
+                .ok_or_else(|| DriftError::Config(format!("unknown quant {}", m.req("quant"))))?;
             let seq: usize = m.parse("seq")?;
             let (stage_graph, stage) = match m.req("stage") {
                 "decode" => (LlmStageGraph::Decode { cache_len: seq }, Stage::Decode),
@@ -154,7 +155,7 @@ fn main() -> anyhow::Result<()> {
         }
         "sd" => {
             let dev = device(m.req("device"))
-                .ok_or_else(|| anyhow::anyhow!("unknown device {}", m.req("device")))?;
+                .ok_or_else(|| DriftError::Config(format!("unknown device {}", m.req("device"))))?;
             let iters: usize = m.parse("iterations")?;
             let p = SdPipeline::compile(&dev, &CompileOptions::default())?;
             let r = p.run(iters);
@@ -166,11 +167,11 @@ fn main() -> anyhow::Result<()> {
         }
         "llm" => {
             let cfg = llm_config(m.req("model"))
-                .ok_or_else(|| anyhow::anyhow!("unknown model {}", m.req("model")))?;
+                .ok_or_else(|| DriftError::Config(format!("unknown model {}", m.req("model"))))?;
             let dev = device(m.req("device"))
-                .ok_or_else(|| anyhow::anyhow!("unknown device {}", m.req("device")))?;
+                .ok_or_else(|| DriftError::Config(format!("unknown device {}", m.req("device"))))?;
             let scheme = QuantScheme::parse(m.req("quant"))
-                .ok_or_else(|| anyhow::anyhow!("unknown quant {}", m.req("quant")))?;
+                .ok_or_else(|| DriftError::Config(format!("unknown quant {}", m.req("quant"))))?;
             let p = simulate_llm(
                 &cfg,
                 &dev,
@@ -221,18 +222,21 @@ fn main() -> anyhow::Result<()> {
                 })
                 .collect();
             for rx in rxs {
-                let r = rx.recv()?;
-                println!(
-                    "req {:>3}: {} tokens, ttft {:.0} ms, decode {:.1} tok/s",
-                    r.id,
-                    r.tokens.len(),
-                    r.ttft_s * 1e3,
-                    r.decode_tokens_per_s()
-                );
+                let r = rx.recv().map_err(|_| DriftError::Serving("engine dropped request".into()))?;
+                match &r.error {
+                    Some(err) => println!("req {:>3}: FAILED — {err}", r.id),
+                    None => println!(
+                        "req {:>3}: {} tokens, ttft {:.0} ms, decode {:.1} tok/s",
+                        r.id,
+                        r.tokens.len(),
+                        r.ttft_s * 1e3,
+                        r.decode_tokens_per_s()
+                    ),
+                }
             }
             println!("\n{}", engine.stats().report);
         }
-        other => anyhow::bail!("unhandled command {other}"),
+        other => return Err(DriftError::Config(format!("unhandled command {other}"))),
     }
     Ok(())
 }

@@ -3,6 +3,7 @@
 use std::path::Path;
 
 use crate::error::{DriftError, Result};
+use crate::runtime::xla;
 
 /// A PJRT runtime (CPU client in this environment; the same API serves
 /// GPU/TPU PJRT plugins).

@@ -6,8 +6,19 @@
 //! `PjRtClient::compile` → `execute`) and is the only thing the request
 //! path touches — Python is never on it.
 
+/// The `xla` crate when the `pjrt` feature is on; the offline stub
+/// otherwise. Everything in this crate reaches PJRT through this alias so
+/// the zero-dependency default build stays compilable.
+#[cfg(feature = "pjrt")]
+pub use ::xla;
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
+pub mod xla;
+
 pub mod client;
 pub mod tinylm;
 
 pub use client::{LoadedModel, Runtime};
-pub use tinylm::{GenerationResult, KvState, TinyLmManifest, TinyLmRuntime};
+pub use tinylm::{
+    GenerationResult, KvState, RoundStep, RoundStepOutcome, TinyLmManifest, TinyLmRuntime,
+};

@@ -12,6 +12,7 @@ use std::time::Instant;
 
 use crate::error::{DriftError, Result};
 use crate::runtime::client::{lit, LoadedModel, Runtime};
+use crate::runtime::xla;
 use crate::util::json::Json;
 
 /// TinyLM dimensions parsed from `artifacts/manifest.json`.
@@ -105,6 +106,21 @@ impl GenerationResult {
 pub struct KvState {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+}
+
+/// One sequence's slot in a batched decode round
+/// ([`TinyLmRuntime::decode_round`]).
+pub struct RoundStep<'a> {
+    pub token: i32,
+    pub pos: usize,
+    pub kv: &'a mut KvState,
+}
+
+/// Per-sequence outcome of a decode round: last-position logits and this
+/// step's wall clock (includes the per-step host sync).
+pub struct RoundStepOutcome {
+    pub logits: Vec<f32>,
+    pub step_s: f64,
 }
 
 /// The loaded TinyLM: compiled prefill buckets + decode step.
@@ -220,6 +236,31 @@ impl TinyLmRuntime {
             }
         }
         lit::to_f32(&logits)
+    }
+
+    /// Execute one batched decode round: one decode step per member
+    /// sequence, returning per-sequence outcomes in input order.
+    ///
+    /// The PJRT CPU artifact is compiled for batch 1, so the round loops
+    /// the per-sequence executions — that keeps the numerics *exactly*
+    /// the single-stream ones (the serving tests rely on token-identical
+    /// outputs under load). The batching win this round shape exists for
+    /// — streaming the weights once for all member sequences — is
+    /// modeled by the roofline simulator
+    /// ([`crate::sim::exec::simulate_batched`]), which reports the
+    /// round's batched latency on the target GPU profiles. A failed step
+    /// fails only its own sequence, never the round.
+    pub fn decode_round(&self, steps: Vec<RoundStep<'_>>) -> Vec<Result<RoundStepOutcome>> {
+        steps
+            .into_iter()
+            .map(|s| {
+                let t = Instant::now();
+                self.decode_step(s.token, s.pos, s.kv).map(|logits| RoundStepOutcome {
+                    logits,
+                    step_s: t.elapsed().as_secs_f64(),
+                })
+            })
+            .collect()
     }
 
     /// Greedy generation: prefill + `steps` decode iterations with

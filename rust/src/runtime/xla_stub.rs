@@ -1,0 +1,180 @@
+//! Offline stand-in for the `xla` crate, compiled when the `pjrt` feature
+//! is off (the zero-dependency default build).
+//!
+//! The stub mirrors exactly the slice of the `xla` API this crate touches.
+//! Host-side literal plumbing ([`Literal`]) is fully functional so unit
+//! tests of shape/packing logic run everywhere; anything that would need a
+//! real PJRT plugin (compiling HLO, executing) returns a uniform
+//! "built without pjrt" error instead.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT unavailable: built without the `pjrt` feature (stub xla backend); \
+     add the `xla` dependency and build with `--features pjrt` for real execution";
+
+/// Stub for `xla::Error`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element types a [`Literal`] can carry (the crate only moves i32/f32).
+pub trait LiteralElem: Copy {
+    fn to_f64(self) -> f64;
+    fn from_f64(v: f64) -> Self;
+}
+
+impl LiteralElem for i32 {
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as i32
+    }
+}
+
+impl LiteralElem for f32 {
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+}
+
+/// Host literal: flat data + dims. Fully functional in the stub.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f64>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: LiteralElem>(xs: &[T]) -> Literal {
+        Literal {
+            data: xs.iter().map(|x| x.to_f64()).collect(),
+            dims: vec![xs.len() as i64],
+        }
+    }
+
+    /// Reshape; element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>, Error> {
+        Ok(self.data.iter().map(|&v| T::from_f64(v)).collect())
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples (nothing
+    /// can execute to produce one), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+}
+
+/// Stub for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// Stub for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Stub for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// Stub for `xla::PjRtClient`. Construction succeeds (so error paths that
+/// check for missing artifacts before touching PJRT keep their messages);
+/// compilation is where the stub reports itself.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub (pjrt feature off)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        assert_eq!(l.element_count(), 6);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.element_count(), 6);
+        assert!(l.reshape(&[4, 2]).is_err());
+        let back: Vec<f32> = r.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn execution_paths_report_missing_feature() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -1,4 +1,4 @@
-//! Serving metrics: counters + latency histograms.
+//! Serving metrics: counters + latency histograms + round/batch occupancy.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -12,9 +12,18 @@ pub struct Metrics {
     pub requests_completed: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub prefill_tokens: AtomicU64,
+    /// Scheduling rounds executed (only rounds with work).
+    pub rounds_executed: AtomicU64,
     ttft: Mutex<Histogram>,
     decode_step: Mutex<Histogram>,
     e2e: Mutex<Histogram>,
+    /// Executed decode-batch size per round — how well weight streaming
+    /// amortizes.
+    batch_occupancy: Mutex<Histogram>,
+    /// Generated tokens per round. Can exceed the executed batch:
+    /// final-token emissions need no decode step, and speculative decode
+    /// will widen the gap further.
+    tokens_per_round: Mutex<Histogram>,
 }
 
 impl Default for Metrics {
@@ -24,10 +33,14 @@ impl Default for Metrics {
             requests_completed: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
+            rounds_executed: AtomicU64::new(0),
             // 100 µs .. ~100 s exponential buckets.
             ttft: Mutex::new(Histogram::exponential(1e-4, 1.6, 32)),
             decode_step: Mutex::new(Histogram::exponential(1e-5, 1.6, 32)),
             e2e: Mutex::new(Histogram::exponential(1e-4, 1.6, 32)),
+            // Exact buckets 1..=64 (batch sizes are small integers).
+            batch_occupancy: Mutex::new(Histogram::linear(1.0, 1.0, 64)),
+            tokens_per_round: Mutex::new(Histogram::linear(1.0, 1.0, 64)),
         }
     }
 }
@@ -49,6 +62,19 @@ impl Metrics {
         self.decode_step.lock().unwrap().record(s);
     }
 
+    /// Record one executed round: decode-batch occupancy and generated
+    /// tokens. Zero-valued samples (pure-prefill rounds, or emission-only
+    /// rounds with no executed step) don't pollute either distribution.
+    pub fn record_round(&self, decode_batch: usize, gen_tokens: usize) {
+        self.rounds_executed.fetch_add(1, Ordering::Relaxed);
+        if decode_batch > 0 {
+            self.batch_occupancy.lock().unwrap().record(decode_batch as f64);
+        }
+        if gen_tokens > 0 {
+            self.tokens_per_round.lock().unwrap().record(gen_tokens as f64);
+        }
+    }
+
     pub fn ttft_p50_p95(&self) -> (f64, f64) {
         let h = self.ttft.lock().unwrap();
         (h.percentile(50.0), h.percentile(95.0))
@@ -63,13 +89,26 @@ impl Metrics {
         self.e2e.lock().unwrap().mean()
     }
 
+    /// (mean, p50, max) decode-batch occupancy across rounds.
+    pub fn batch_occupancy_summary(&self) -> (f64, f64, f64) {
+        let h = self.batch_occupancy.lock().unwrap();
+        (h.mean(), h.percentile(50.0), h.max())
+    }
+
+    /// Mean generated tokens per round.
+    pub fn tokens_per_round_mean(&self) -> f64 {
+        self.tokens_per_round.lock().unwrap().mean()
+    }
+
     /// One-paragraph human report.
     pub fn report(&self) -> String {
         let (t50, t95) = self.ttft_p50_p95();
         let (d50, d95) = self.decode_step_p50_p95();
+        let (occ_mean, occ_p50, occ_max) = self.batch_occupancy_summary();
         format!(
             "requests: {} submitted, {} completed | tokens: {} prefill, {} generated\n\
-             ttft p50 {:.1} ms, p95 {:.1} ms | decode step p50 {:.2} ms, p95 {:.2} ms | e2e mean {:.1} ms",
+             ttft p50 {:.1} ms, p95 {:.1} ms | decode step p50 {:.2} ms, p95 {:.2} ms | e2e mean {:.1} ms\n\
+             rounds: {} | batch occupancy mean {:.2}, p50 {:.0}, max {:.0} | tokens/round mean {:.2}",
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.prefill_tokens.load(Ordering::Relaxed),
@@ -79,6 +118,11 @@ impl Metrics {
             d50 * 1e3,
             d95 * 1e3,
             self.e2e_mean() * 1e3,
+            self.rounds_executed.load(Ordering::Relaxed),
+            occ_mean,
+            occ_p50,
+            occ_max,
+            self.tokens_per_round_mean(),
         )
     }
 }
@@ -101,5 +145,21 @@ mod tests {
         let (p50, p95) = m.decode_step_p50_p95();
         assert!(p50 > 0.0 && p95 >= p50);
         assert!(m.report().contains("requests: 2 submitted"));
+    }
+
+    #[test]
+    fn round_occupancy_tracked_exactly() {
+        let m = Metrics::default();
+        m.record_round(4, 4);
+        m.record_round(4, 4);
+        m.record_round(2, 2);
+        m.record_round(0, 0); // pure-prefill round: counted, not sampled
+        assert_eq!(m.rounds_executed.load(Ordering::Relaxed), 4);
+        let (mean, p50, max) = m.batch_occupancy_summary();
+        assert!((mean - 10.0 / 3.0).abs() < 1e-9, "{mean}");
+        assert_eq!(p50, 4.0);
+        assert_eq!(max, 4.0);
+        assert!((m.tokens_per_round_mean() - 10.0 / 3.0).abs() < 1e-9);
+        assert!(m.report().contains("batch occupancy"));
     }
 }

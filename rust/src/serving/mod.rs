@@ -5,13 +5,17 @@
 //! coordinator a deployment wraps around it (the vLLM-router shape):
 //!
 //! * [`request`] — request/response types with per-stage timing.
-//! * [`scheduler`] — a continuous-batching scheduler that admits waiting
-//!   prompts (prefill) and round-robins active sequences (decode),
+//! * [`scheduler`] — a **round-based** continuous-batching scheduler:
+//!   each round packs *all* runnable decodes into one batch (weights
+//!   stream once per round) plus a capped number of prefills,
 //!   decode-first to protect inter-token latency — mirroring §3.7's
 //!   prefill/decode split at the serving level.
-//! * [`server`] — a thread-based engine that owns the PJRT runtime and
-//!   serves a channel of requests (no Python, no async runtime).
-//! * [`metrics`] — TTFT / latency / throughput accounting.
+//! * [`server`] — a thread-based engine that owns the PJRT runtime, a
+//!   shared KV arena ([`crate::kv::KvArena`]) with backpressure-gated
+//!   admission, and serves a channel of requests (no Python, no async
+//!   runtime).
+//! * [`metrics`] — TTFT / latency / throughput / batch-occupancy
+//!   accounting.
 
 pub mod request;
 pub mod scheduler;
@@ -19,6 +23,6 @@ pub mod server;
 pub mod metrics;
 
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
-pub use scheduler::{Scheduler, SchedulerConfig, SeqState};
+pub use scheduler::{Round, Scheduler, SchedulerConfig, SeqState};
 pub use server::{ServerStats, ServingEngine};
 pub use metrics::Metrics;

@@ -31,15 +31,28 @@ pub struct InferenceResponse {
     pub prefill_s: f64,
     /// Sum of decode step times.
     pub decode_s: f64,
-    /// Time to first token (queue + prefill + first decode).
+    /// Time to first token: arrival → first emitted token, including any
+    /// round-scheduling gaps (queue + prefill when no decode round ran,
+    /// i.e. `max_new_tokens ≤ 1`).
     pub ttft_s: f64,
     /// Wall-clock end-to-end.
     pub total_s: f64,
+    /// Why the request failed (rejected or errored mid-flight); `None`
+    /// for a successful generation. Failed requests still get a response
+    /// so one bad request cannot wedge a caller draining a whole batch.
+    pub error: Option<String>,
 }
 
 impl InferenceResponse {
+    /// Decode throughput over the steps that actually ran: the first
+    /// token comes straight from prefill logits, so `N` emitted tokens
+    /// took `N − 1` decode steps; 0 when no step ran.
     pub fn decode_tokens_per_s(&self) -> f64 {
-        self.tokens.len() as f64 / self.decode_s.max(1e-12)
+        let steps = self.tokens.len().saturating_sub(1);
+        if self.decode_s <= 0.0 || steps == 0 {
+            return 0.0;
+        }
+        steps as f64 / self.decode_s
     }
 }
 
@@ -57,7 +70,9 @@ mod tests {
             decode_s: 0.5,
             ttft_s: 0.15,
             total_s: 0.6,
+            error: None,
         };
-        assert!((r.decode_tokens_per_s() - 20.0).abs() < 1e-9);
+        // 10 tokens = 9 decode steps (the first came from prefill).
+        assert!((r.decode_tokens_per_s() - 18.0).abs() < 1e-9);
     }
 }

@@ -1,11 +1,23 @@
-//! Continuous-batching scheduler with decode-first stage awareness.
+//! Round-based continuous-batching scheduler with decode-first stage
+//! awareness.
+//!
+//! The engine no longer asks "what single thing should I do next" —
+//! every call to [`Scheduler::next_round`] plans one **round**: *all*
+//! runnable decodes packed into one batch (so weight streaming is paid
+//! once per round, the §3.7 bandwidth argument applied across users)
+//! plus up to `max_prefills_per_round` prefills (guarding inter-token
+//! latency against prefill bursts).
 //!
 //! Invariants (enforced + property-tested):
 //! * a request is either waiting, active, or finished — never two at once;
-//! * at most `max_active` sequences hold KV slots;
+//! * at most `max_active` sequences hold KV reservations;
+//! * a round never contains more than `max_active` work items and never
+//!   names a request twice;
 //! * no token is generated past `max_new_tokens`;
 //! * every admitted request eventually finishes (no starvation: FIFO
-//!   admission).
+//!   admission, and every unfinished active sequence decodes every round);
+//! * admission blocked by KV-arena backpressure defers the request, it
+//!   never fails it.
 
 use std::collections::VecDeque;
 
@@ -14,7 +26,7 @@ use crate::serving::request::{InferenceRequest, RequestId};
 /// Scheduler tuning.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
-    /// Max concurrently active sequences (KV slots).
+    /// Max concurrently active sequences (KV reservations).
     pub max_active: usize,
     /// Admit at most this many prefills per scheduling round (guards
     /// decode latency against prefill bursts — the serving-level analogue
@@ -44,15 +56,33 @@ impl SeqState {
     }
 }
 
-/// What the engine should do next for one scheduling round.
-#[derive(Debug, PartialEq, Eq)]
-pub enum Action {
-    /// Run prefill for this request id.
-    Prefill(RequestId),
-    /// Run one decode step for this request id.
-    Decode(RequestId),
-    /// Nothing runnable.
-    Idle,
+/// One scheduling round: the prefills to run and the decode batch to
+/// execute as a single batched step. Decode runs *first* when the engine
+/// executes the round (decode-first latency protection).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Round {
+    /// Requests to prefill this round (≤ `max_prefills_per_round`).
+    pub prefills: Vec<RequestId>,
+    /// Every active, prefilled, unfinished sequence: one decode step each,
+    /// batched so the weights stream once.
+    pub decode_batch: Vec<RequestId>,
+}
+
+impl Round {
+    /// Nothing runnable this round.
+    pub fn is_idle(&self) -> bool {
+        self.prefills.is_empty() && self.decode_batch.is_empty()
+    }
+
+    /// Decode batch size (the occupancy metric).
+    pub fn batch_size(&self) -> usize {
+        self.decode_batch.len()
+    }
+
+    /// Total work items planned.
+    pub fn work_items(&self) -> usize {
+        self.prefills.len() + self.decode_batch.len()
+    }
 }
 
 /// The scheduler: owns waiting queue + active set.
@@ -61,7 +91,6 @@ pub struct Scheduler {
     cfg: SchedulerConfig,
     waiting: VecDeque<InferenceRequest>,
     active: Vec<SeqState>,
-    prefills_this_round: usize,
 }
 
 impl Scheduler {
@@ -89,62 +118,59 @@ impl Scheduler {
         self.active.iter_mut().find(|s| s.request.id == id)
     }
 
-    /// Decide the next action. Decode-first: active sequences with pending
-    /// tokens are served round-robin before new prefills are admitted,
-    /// except that up to `max_prefills_per_round` prefills interleave per
-    /// round so waiting requests cannot starve while decodes stream.
-    pub fn next_action(&mut self) -> Action {
-        // 1. Any admitted-but-not-prefilled sequence runs its prefill.
-        if let Some(s) = self.active.iter().find(|s| !s.prefill_done) {
-            return Action::Prefill(s.request.id);
-        }
-        // 2. Decode: round-robin the active, unfinished sequences.
-        if let Some(idx) = self.active.iter().position(|s| !s.finished()) {
-            // Rotate so the chosen sequence moves to the back (fairness).
-            let s = self.active.remove(idx);
-            let id = s.request.id;
-            self.active.push(s);
-            self.prefills_this_round = 0;
-            return Action::Decode(id);
-        }
-        // 3. Admit a waiting request if a KV slot is free.
-        if self.active.len() < self.cfg.max_active
-            && self.prefills_this_round < self.cfg.max_prefills_per_round
-        {
-            if let Some(req) = self.waiting.pop_front() {
-                let pos = req.prompt.len();
-                self.active.push(SeqState {
-                    request: req,
-                    generated: Vec::new(),
-                    pos,
-                    prefill_done: false,
-                });
-                self.prefills_this_round += 1;
-                let id = self.active.last().unwrap().request.id;
-                return Action::Prefill(id);
-            }
-        }
-        Action::Idle
+    /// Admission at round start: pull waiting requests into free slots in
+    /// FIFO order (continuous batching: join mid-stream).
+    pub fn admit(&mut self) {
+        self.admit_where(|_| true);
     }
 
-    /// Admission check each round start: pull waiting requests into free
-    /// slots (continuous batching: join mid-stream).
-    pub fn admit(&mut self) {
-        self.prefills_this_round = 0;
-        while self.active.len() < self.cfg.max_active {
-            match self.waiting.pop_front() {
-                Some(req) => {
-                    let pos = req.prompt.len();
-                    self.active.push(SeqState {
-                        request: req,
-                        generated: Vec::new(),
-                        pos,
-                        prefill_done: false,
-                    });
+    /// Admission with an external gate: `can_admit` is called once per
+    /// candidate in FIFO order and may claim resources (KV arena blocks)
+    /// as a side effect. Admission stops at the first rejected candidate
+    /// rather than skipping past it — skipping would starve large
+    /// requests behind a stream of small ones. A rejection is
+    /// *backpressure*: the request stays queued and is retried next round.
+    pub fn admit_where(&mut self, mut can_admit: impl FnMut(&InferenceRequest) -> bool) {
+        // Like the prefill cap, a limit of 0 would strand the waiting
+        // queue forever (nothing admitted ⇒ nothing ever finishes):
+        // clamp to at least one concurrent sequence.
+        let max_active = self.cfg.max_active.max(1);
+        while self.active.len() < max_active {
+            let Some(req) = self.waiting.front() else { break };
+            if !can_admit(req) {
+                break;
+            }
+            let req = self.waiting.pop_front().expect("front observed above");
+            let pos = req.prompt.len();
+            self.active.push(SeqState {
+                request: req,
+                generated: Vec::new(),
+                pos,
+                prefill_done: false,
+            });
+        }
+    }
+
+    /// Plan the next round: every decodable sequence joins the decode
+    /// batch; up to `max_prefills_per_round` admitted-but-unprefilled
+    /// sequences get their prefill (in admission order, so prefill order
+    /// follows FIFO and nobody is starved).
+    pub fn next_round(&self) -> Round {
+        // A cap of 0 would strand admitted sequences forever (admitted but
+        // never prefilled ⇒ never decodable ⇒ livelock): always allow at
+        // least one prefill per round.
+        let prefill_cap = self.cfg.max_prefills_per_round.max(1);
+        let mut round = Round::default();
+        for s in &self.active {
+            if !s.prefill_done {
+                if round.prefills.len() < prefill_cap {
+                    round.prefills.push(s.request.id);
                 }
-                None => break,
+            } else if !s.finished() {
+                round.decode_batch.push(s.request.id);
             }
         }
+        round
     }
 
     /// Remove and return finished sequences.
@@ -169,10 +195,28 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kv::{KvArena, KvArenaConfig};
     use crate::util::propcheck::{check, Config};
 
     fn req(id: u64, prompt_len: usize, gen: usize) -> InferenceRequest {
         InferenceRequest::new(id, vec![1; prompt_len], gen)
+    }
+
+    /// Execute one planned round against the scheduler state, the way the
+    /// engine does: decode batch first, then prefills.
+    fn execute_round(s: &mut Scheduler, round: &Round) {
+        for &id in &round.decode_batch {
+            let seq = s.seq_mut(id).unwrap();
+            assert!(
+                seq.generated.len() < seq.request.max_new_tokens,
+                "seq {id} decoded past its budget"
+            );
+            seq.generated.push(0);
+            seq.pos += 1;
+        }
+        for &id in &round.prefills {
+            s.seq_mut(id).unwrap().prefill_done = true;
+        }
     }
 
     #[test]
@@ -191,23 +235,78 @@ mod tests {
         let mut s = Scheduler::new(SchedulerConfig::default());
         s.submit(req(1, 16, 2));
         s.admit();
-        assert_eq!(s.next_action(), Action::Prefill(1));
-        s.seq_mut(1).unwrap().prefill_done = true;
-        assert_eq!(s.next_action(), Action::Decode(1));
+        let r = s.next_round();
+        assert_eq!(r.prefills, vec![1]);
+        assert!(r.decode_batch.is_empty(), "no decode before prefill: {r:?}");
+        execute_round(&mut s, &r);
+        let r = s.next_round();
+        assert_eq!(r.decode_batch, vec![1]);
+        assert!(r.prefills.is_empty());
     }
 
     #[test]
-    fn round_robin_across_sequences() {
-        let mut s = Scheduler::new(SchedulerConfig { max_active: 2, max_prefills_per_round: 2 });
-        s.submit(req(1, 16, 10));
-        s.submit(req(2, 16, 10));
-        s.admit();
-        for id in [1, 2] {
-            s.seq_mut(id).unwrap().prefill_done = true;
+    fn decode_batch_packs_all_runnable_sequences() {
+        let mut s = Scheduler::new(SchedulerConfig { max_active: 4, max_prefills_per_round: 4 });
+        for i in 0..4 {
+            s.submit(req(i, 16, 10));
         }
-        let a = s.next_action();
-        let b = s.next_action();
-        assert_ne!(a, b, "round robin must alternate: {a:?} then {b:?}");
+        s.admit();
+        let r = s.next_round();
+        execute_round(&mut s, &r); // all four prefill
+        let r = s.next_round();
+        assert_eq!(r.batch_size(), 4, "all decodes batch into one round: {r:?}");
+        assert_eq!(r.decode_batch, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn prefills_capped_per_round_decodes_are_not() {
+        let mut s = Scheduler::new(SchedulerConfig { max_active: 4, max_prefills_per_round: 1 });
+        for i in 0..4 {
+            s.submit(req(i, 16, 10));
+        }
+        s.admit();
+        // Four rounds of capped prefill; decode batch grows behind it.
+        for expect_batch in 0..4usize {
+            let r = s.next_round();
+            assert_eq!(r.prefills.len(), 1, "{r:?}");
+            assert_eq!(r.batch_size(), expect_batch, "{r:?}");
+            execute_round(&mut s, &r);
+        }
+        let r = s.next_round();
+        assert!(r.prefills.is_empty());
+        assert_eq!(r.batch_size(), 4);
+    }
+
+    #[test]
+    fn zero_max_active_still_makes_progress() {
+        // Regression: a (mis)configured max_active of 0 must not leave the
+        // waiting queue stranded (the engine would busy-spin forever).
+        let mut s = Scheduler::new(SchedulerConfig { max_active: 0, max_prefills_per_round: 1 });
+        s.submit(req(1, 8, 1));
+        s.admit();
+        assert_eq!(s.active_len(), 1, "clamped to one concurrent sequence");
+        let r = s.next_round();
+        execute_round(&mut s, &r);
+        let r = s.next_round();
+        execute_round(&mut s, &r);
+        assert_eq!(s.reap_finished().len(), 1);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn zero_prefill_cap_still_makes_progress() {
+        // Regression: a (mis)configured cap of 0 must not strand admitted
+        // sequences in the never-prefilled state forever.
+        let mut s = Scheduler::new(SchedulerConfig { max_active: 2, max_prefills_per_round: 0 });
+        s.submit(req(1, 8, 1));
+        s.admit();
+        let r = s.next_round();
+        assert_eq!(r.prefills, vec![1], "at least one prefill per round: {r:?}");
+        execute_round(&mut s, &r);
+        let r = s.next_round();
+        execute_round(&mut s, &r);
+        assert_eq!(s.reap_finished().len(), 1);
+        assert!(s.is_idle());
     }
 
     #[test]
@@ -215,12 +314,65 @@ mod tests {
         let mut s = Scheduler::new(SchedulerConfig::default());
         s.submit(req(7, 8, 1));
         s.admit();
-        s.seq_mut(7).unwrap().prefill_done = true;
-        s.seq_mut(7).unwrap().generated.push(42);
+        let r = s.next_round();
+        execute_round(&mut s, &r); // prefill
+        let r = s.next_round();
+        execute_round(&mut s, &r); // decode the single token
         let done = s.reap_finished();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].request.id, 7);
         assert!(s.is_idle());
+    }
+
+    #[test]
+    fn full_arena_defers_admission_instead_of_erroring() {
+        // Regression: a request that does not fit the arena *now* stays
+        // waiting and is admitted after capacity frees up.
+        let mut s = Scheduler::new(SchedulerConfig { max_active: 4, max_prefills_per_round: 4 });
+        let mut arena = KvArena::new(KvArenaConfig {
+            layers: 2,
+            heads_kv: 2,
+            head_dim: 32,
+            block_tokens: 16,
+            num_blocks: 4, // 64 tokens total
+        });
+        s.submit(req(0, 32, 16)); // 48 tokens → 3 blocks
+        s.submit(req(1, 32, 16)); // would need 3 more → must wait
+        let mut handles = std::collections::HashMap::new();
+        s.admit_where(|r| {
+            let tokens = r.prompt.len() + r.max_new_tokens;
+            match arena.claim(tokens) {
+                Ok(h) => {
+                    handles.insert(r.id, h);
+                    true
+                }
+                Err(_) => false,
+            }
+        });
+        assert_eq!(s.active_len(), 1, "second request deferred, not failed");
+        assert_eq!(s.waiting_len(), 1);
+
+        // Drive request 0 to completion; its release unblocks request 1.
+        while s.seq(0).is_some() {
+            let r = s.next_round();
+            execute_round(&mut s, &r);
+            for done in s.reap_finished() {
+                arena.release(handles[&done.request.id]);
+            }
+        }
+        s.admit_where(|r| {
+            let tokens = r.prompt.len() + r.max_new_tokens;
+            match arena.claim(tokens) {
+                Ok(h) => {
+                    handles.insert(r.id, h);
+                    true
+                }
+                Err(_) => false,
+            }
+        });
+        assert_eq!(s.active_len(), 1, "freed capacity admits the deferred request");
+        assert_eq!(s.waiting_len(), 0);
+        arena.verify().unwrap();
     }
 
     #[test]
@@ -236,37 +388,131 @@ mod tests {
                 s.submit(req(i as u64, 8, 1 + rng.gen_range(5) as usize));
             }
             let mut finished = 0usize;
-            let mut steps = 0usize;
+            let mut rounds = 0usize;
             loop {
                 s.admit();
                 if s.active_len() > max_active {
                     return Err(format!("active {} > max {max_active}", s.active_len()));
                 }
-                match s.next_action() {
-                    Action::Prefill(id) => {
-                        s.seq_mut(id).unwrap().prefill_done = true;
+                let round = s.next_round();
+                // Round invariants: bounded size, no request named twice.
+                if round.work_items() > max_active {
+                    return Err(format!("round exceeds max_active: {round:?}"));
+                }
+                let mut ids: Vec<_> =
+                    round.prefills.iter().chain(&round.decode_batch).collect();
+                ids.sort();
+                ids.dedup();
+                if ids.len() != round.work_items() {
+                    return Err(format!("request appears twice in a round: {round:?}"));
+                }
+                for &id in &round.decode_batch {
+                    let seq = s.seq(id).unwrap();
+                    if seq.generated.len() >= seq.request.max_new_tokens {
+                        return Err(format!("seq {id} scheduled past its budget"));
                     }
-                    Action::Decode(id) => {
-                        let seq = s.seq_mut(id).unwrap();
-                        if seq.generated.len() >= seq.request.max_new_tokens {
-                            return Err(format!("seq {id} decoded past its budget"));
-                        }
-                        seq.generated.push(0);
-                        seq.pos += 1;
-                    }
-                    Action::Idle => {}
+                }
+                for &id in &round.decode_batch {
+                    let seq = s.seq_mut(id).unwrap();
+                    seq.generated.push(0);
+                    seq.pos += 1;
+                }
+                for &id in &round.prefills {
+                    s.seq_mut(id).unwrap().prefill_done = true;
                 }
                 finished += s.reap_finished().len();
                 if s.is_idle() {
                     break;
                 }
-                steps += 1;
-                if steps > 10_000 {
+                rounds += 1;
+                if rounds > 10_000 {
                     return Err("scheduler did not terminate".into());
                 }
             }
             if finished != n {
                 return Err(format!("finished {finished} != submitted {n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_no_starvation_under_batching_with_arena() {
+        // Random arrivals + KV-arena backpressure: every request finishes,
+        // no arena block is ever double-claimed, and requests with equal
+        // token budgets finish in submission order (FIFO fairness).
+        check("batched rounds starve nobody", Config::cases(40), |rng| {
+            let max_active = 1 + rng.gen_range(4) as usize;
+            let gen_tokens = 1 + rng.gen_range(6) as usize; // shared budget
+            let mut s = Scheduler::new(SchedulerConfig {
+                max_active,
+                max_prefills_per_round: 1 + rng.gen_range(2) as usize,
+            });
+            let mut arena = KvArena::new(KvArenaConfig {
+                layers: 2,
+                heads_kv: 2,
+                head_dim: 32,
+                block_tokens: 8,
+                num_blocks: 2 + rng.gen_range(10) as usize,
+            });
+            let total = 1 + rng.gen_range(10) as usize;
+            let prompt_len = 8usize;
+            if !arena.can_claim(prompt_len + gen_tokens) {
+                return Ok(()); // arena smaller than one request: uninteresting draw
+            }
+            let mut submitted = 0u64;
+            let mut handles = std::collections::HashMap::new();
+            let mut finish_order = Vec::new();
+            let mut rounds = 0usize;
+            while finish_order.len() < total {
+                if (submitted as usize) < total && rng.gen_bool(0.6) {
+                    s.submit(req(submitted, prompt_len, gen_tokens));
+                    submitted += 1;
+                }
+                s.admit_where(|r| {
+                    let tokens = r.prompt.len() + r.max_new_tokens;
+                    match arena.claim(tokens) {
+                        Ok(h) => {
+                            handles.insert(r.id, h);
+                            true
+                        }
+                        Err(_) => false,
+                    }
+                });
+                let round = s.next_round();
+                for &id in &round.decode_batch {
+                    arena.append(handles[&id], 1).map_err(|e| e.to_string())?;
+                    let seq = s.seq_mut(id).unwrap();
+                    seq.generated.push(0);
+                    seq.pos += 1;
+                }
+                for &id in &round.prefills {
+                    let seq = s.seq_mut(id).unwrap();
+                    let n = seq.request.prompt.len();
+                    seq.prefill_done = true;
+                    arena.append(handles[&id], n).map_err(|e| e.to_string())?;
+                }
+                arena.verify().map_err(|e| e.to_string())?;
+                for done in s.reap_finished() {
+                    arena.release(handles[&done.request.id]);
+                    finish_order.push(done.request.id);
+                }
+                rounds += 1;
+                if rounds > 10_000 {
+                    return Err(format!(
+                        "starvation: {} of {total} finished after {rounds} rounds",
+                        finish_order.len()
+                    ));
+                }
+            }
+            // Equal budgets ⇒ FIFO admission implies FIFO completion.
+            let mut sorted = finish_order.clone();
+            sorted.sort();
+            if finish_order != sorted {
+                return Err(format!("completion out of order: {finish_order:?}"));
+            }
+            if arena.blocks_in_use() != 0 {
+                return Err("arena leaked blocks after drain".into());
             }
             Ok(())
         });

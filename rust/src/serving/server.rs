@@ -1,5 +1,13 @@
 //! The serving engine: a worker thread owning the PJRT runtime, a
-//! continuous-batching scheduler, and per-sequence KV state.
+//! round-based continuous-batching scheduler, a shared KV arena, and
+//! per-sequence KV state.
+//!
+//! Each iteration of the worker loop executes one scheduling **round**:
+//! the decode batch first (one step for every active sequence — weights
+//! stream once per round on the simulated GPU), then up to
+//! `max_prefills_per_round` prefills. Admission is gated by the KV
+//! arena: a request whose reservation does not fit is *deferred* (stays
+//! queued), never failed.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -8,11 +16,17 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::error::{DriftError, Result};
-use crate::runtime::tinylm::TinyLmRuntime;
+use crate::kv::{KvArena, KvArenaConfig, KvSeqHandle};
+use crate::runtime::tinylm::{RoundStep, TinyLmRuntime};
 use crate::runtime::Runtime;
 use crate::serving::metrics::Metrics;
 use crate::serving::request::{InferenceRequest, InferenceResponse, RequestId};
 use crate::serving::scheduler::{Scheduler, SchedulerConfig};
+
+/// KV-arena allocation granule (token positions per block). 16 divides
+/// every prefill bucket and keeps worst-case internal fragmentation to
+/// 15 positions per sequence.
+const KV_BLOCK_TOKENS: usize = 16;
 
 enum Msg {
     Request(InferenceRequest, Sender<InferenceResponse>),
@@ -27,17 +41,23 @@ pub struct ServerStats {
     pub report: String,
 }
 
-/// Per-sequence runtime state the scheduler doesn't own: host KV state
-/// and timing.
+/// Per-sequence runtime state the scheduler doesn't own: host KV state,
+/// the arena reservation, and timing.
 struct SeqRuntime {
     kv: crate::runtime::tinylm::KvState,
     next_token: i32,
     prefill_s: f64,
     decode_s: f64,
-    first_decode_s: Option<f64>,
+    /// Arrival → first emitted token, captured when the first decode
+    /// outcome lands (so it includes round-scheduling gaps, not just the
+    /// step durations).
+    ttft_s: Option<f64>,
     started: Instant,
     queue_s: f64,
     reply: Sender<InferenceResponse>,
+    /// First mid-flight failure (e.g. a decode error that truncated the
+    /// generation); reported in the final response's `error` field.
+    error: Option<String>,
 }
 
 /// A thread-based serving engine over the TinyLM PJRT runtime.
@@ -123,7 +143,24 @@ fn worker_loop(
     metrics: Arc<Metrics>,
 ) {
     let mut sched = Scheduler::new(sched_cfg);
+    // One shared arena sized for `max_active` full-capacity sequences
+    // (per-sequence reservations are block-rounded, so size in blocks,
+    // not tokens): with whole-lifetime reservations this makes the slot
+    // count the binding constraint and the arena a safety net; shrinking
+    // the arena below `max_active` full reservations (or moving to
+    // expected-footprint admission, see ROADMAP) is what would make KV
+    // backpressure the contended resource in production.
+    let m = &model.manifest;
+    let mut arena = KvArena::new(KvArenaConfig {
+        layers: m.layers,
+        heads_kv: m.heads_kv,
+        head_dim: m.head_dim,
+        block_tokens: KV_BLOCK_TOKENS,
+        num_blocks: sched_cfg.max_active.max(1)
+            * crate::util::div_ceil(m.cache_capacity.max(1), KV_BLOCK_TOKENS),
+    });
     let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
+    let mut handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
     let mut replies: HashMap<RequestId, Sender<InferenceResponse>> = HashMap::new();
     let mut shutdown = false;
 
@@ -146,6 +183,30 @@ fn worker_loop(
             };
             match msg {
                 Msg::Request(req, reply) => {
+                    // Per-sequence ceiling: the decode artifact scatters
+                    // K/V rows at `pos`, so a sequence must never outgrow
+                    // the model's cache capacity (the arena bounds the
+                    // *sum* across sequences, not any one of them).
+                    let tokens = req.prompt.len() + req.max_new_tokens;
+                    if tokens > model.manifest.cache_capacity {
+                        let msg = format!(
+                            "prompt + max_new_tokens = {tokens} exceeds cache capacity {}",
+                            model.manifest.cache_capacity
+                        );
+                        crate::log_error!("request {} rejected: {msg}", req.id);
+                        let _ = reply.send(rejection(&req, msg));
+                        continue;
+                    }
+                    // Ids key every per-sequence map (replies before
+                    // prefill, handles from admission to reap): a
+                    // duplicate in-flight id would cross-wire two
+                    // sequences and leak the first one's arena blocks.
+                    if replies.contains_key(&req.id) || handles.contains_key(&req.id) {
+                        let msg = format!("request id {} is already in flight", req.id);
+                        crate::log_error!("request rejected: {msg}");
+                        let _ = reply.send(rejection(&req, msg));
+                        continue;
+                    }
                     replies.insert(req.id, reply);
                     sched.submit(req);
                 }
@@ -159,72 +220,142 @@ fn worker_loop(
             continue;
         }
 
-        sched.admit();
-        use crate::serving::scheduler::Action;
-        match sched.next_action() {
-            Action::Prefill(id) => {
+        // Admission, gated by the arena (overflow → defer, i.e. the
+        // request stays at the queue head until blocks free up).
+        sched.admit_where(|req| {
+            let tokens = req.prompt.len() + req.max_new_tokens;
+            match arena.claim(tokens) {
+                Ok(h) => {
+                    handles.insert(req.id, h);
+                    true
+                }
+                Err(_) => false,
+            }
+        });
+        // (Every queued request fits an empty arena: enqueue rejects
+        // anything over `cache_capacity`, and the arena holds `max_active`
+        // full-capacity reservations — so deferral can never wedge.)
+
+        let round = sched.next_round();
+
+        // ---- decode batch first (latency protection) --------------------
+        // Advance scheduler state and collect per-sequence step inputs.
+        let mut round_tokens = 0usize;
+        let mut inputs: HashMap<RequestId, (i32, usize)> = HashMap::new();
+        for &id in &round.decode_batch {
+            if let Some(srt) = runtimes.get_mut(&id) {
+                let token = srt.next_token;
                 let seq = sched.seq_mut(id).expect("scheduled seq exists");
-                let queue_s = seq.request.arrival.elapsed().as_secs_f64();
-                let t = Instant::now();
-                match model.prefill(&seq.request.prompt) {
-                    Ok((logits, kv)) => {
-                        let prefill_s = t.elapsed().as_secs_f64();
-                        seq.prefill_done = true;
-                        let next = argmax(&logits) as i32;
-                        let reply = replies.remove(&id).expect("reply channel");
-                        runtimes.insert(
-                            id,
-                            SeqRuntime {
-                                kv,
-                                next_token: next,
-                                prefill_s,
-                                decode_s: 0.0,
-                                first_decode_s: None,
-                                started: seq.request.arrival,
-                                queue_s,
-                                reply,
-                            },
-                        );
+                seq.generated.push(token);
+                if srt.ttft_s.is_none() {
+                    // The first token is emitted *here* (it was computed by
+                    // prefill's logits); stamping after the batched round
+                    // would inflate TTFT by the other sequences' steps.
+                    srt.ttft_s = Some(srt.started.elapsed().as_secs_f64());
+                }
+                let pos = seq.pos;
+                seq.pos += 1;
+                round_tokens += 1;
+                // The token just emitted was computed by the *previous*
+                // step's logits. A sequence emitting its final token needs
+                // no decode step — the step would only produce a successor
+                // token (and KV row) that no round will ever consume.
+                if seq.generated.len() < seq.request.max_new_tokens {
+                    inputs.insert(id, (token, pos));
+                }
+            }
+        }
+        // One batched round over the runtime. Per-sequence PJRT decode
+        // inside one round keeps numerics exactly single-stream; the
+        // batched *latency* (weights streamed once per round) is what
+        // `sim::exec::simulate_batched` reports for GPUs.
+        let mut step_ids = Vec::with_capacity(inputs.len());
+        let mut steps = Vec::with_capacity(inputs.len());
+        for (&id, srt) in runtimes.iter_mut() {
+            if let Some(&(token, pos)) = inputs.get(&id) {
+                step_ids.push(id);
+                steps.push(RoundStep { token, pos, kv: &mut srt.kv });
+            }
+        }
+        let outcomes = model.decode_round(steps);
+        for (id, outcome) in step_ids.into_iter().zip(outcomes) {
+            match outcome {
+                Ok(out) => {
+                    let srt = runtimes.get_mut(&id).expect("member collected above");
+                    srt.decode_s += out.step_s;
+                    metrics.record_decode_step(out.step_s);
+                    srt.next_token = argmax(&out.logits) as i32;
+                    if let Err(e) = arena.append(handles[&id], 1) {
+                        crate::log_error!("kv arena append for request {id}: {e}");
                     }
-                    Err(e) => {
-                        crate::log_error!("prefill failed for request {id}: {e}");
-                        seq.prefill_done = true;
-                        seq.request.max_new_tokens = 0; // finish immediately
-                        replies.remove(&id);
+                }
+                Err(e) => {
+                    crate::log_error!("decode failed for request {id}: {e}");
+                    if let Some(srt) = runtimes.get_mut(&id) {
+                        srt.error.get_or_insert(format!("decode failed mid-generation: {e}"));
+                    }
+                    let seq = sched.seq_mut(id).expect("scheduled seq exists");
+                    seq.request.max_new_tokens = seq.generated.len();
+                }
+            }
+        }
+        if !round.is_idle() {
+            // Occupancy = the *executed* kernel batch (sequences emitting
+            // their final token need no step and don't amortize weights).
+            metrics.record_round(inputs.len(), round_tokens);
+        }
+
+        // ---- prefills ---------------------------------------------------
+        for &id in &round.prefills {
+            let seq = sched.seq_mut(id).expect("scheduled seq exists");
+            let queue_s = seq.request.arrival.elapsed().as_secs_f64();
+            let t = Instant::now();
+            match model.prefill(&seq.request.prompt) {
+                Ok((logits, kv)) => {
+                    let prefill_s = t.elapsed().as_secs_f64();
+                    seq.prefill_done = true;
+                    let prompt_len = seq.request.prompt.len();
+                    let next = argmax(&logits) as i32;
+                    let reply = replies.remove(&id).expect("reply channel");
+                    if let Err(e) = arena.append(handles[&id], prompt_len) {
+                        crate::log_error!("kv arena append for request {id}: {e}");
+                    }
+                    runtimes.insert(
+                        id,
+                        SeqRuntime {
+                            kv,
+                            next_token: next,
+                            prefill_s,
+                            decode_s: 0.0,
+                            ttft_s: None,
+                            started: seq.request.arrival,
+                            queue_s,
+                            reply,
+                            error: None,
+                        },
+                    );
+                }
+                Err(e) => {
+                    crate::log_error!("prefill failed for request {id}: {e}");
+                    seq.prefill_done = true;
+                    seq.request.max_new_tokens = 0; // finish immediately
+                    if let Some(reply) = replies.remove(&id) {
+                        let _ = reply.send(rejection(&seq.request, format!("prefill failed: {e}")));
                     }
                 }
             }
-            Action::Decode(id) => {
-                let seq = sched.seq_mut(id).expect("scheduled seq exists");
-                if let Some(srt) = runtimes.get_mut(&id) {
-                    let token = srt.next_token;
-                    seq.generated.push(token);
-                    let pos = seq.pos;
-                    seq.pos += 1;
-                    let t = Instant::now();
-                    match model.decode_step(token, pos, &mut srt.kv) {
-                        Ok(logits) => {
-                            let dt = t.elapsed().as_secs_f64();
-                            srt.decode_s += dt;
-                            srt.first_decode_s.get_or_insert(dt);
-                            metrics.record_decode_step(dt);
-                            srt.next_token = argmax(&logits) as i32;
-                        }
-                        Err(e) => {
-                            crate::log_error!("decode failed for request {id}: {e}");
-                            seq.request.max_new_tokens = seq.generated.len();
-                        }
-                    }
-                }
-            }
-            Action::Idle => {}
         }
 
         for done in sched.reap_finished() {
             let id = done.request.id;
+            if let Some(h) = handles.remove(&id) {
+                arena.release(h);
+            }
             if let Some(srt) = runtimes.remove(&id) {
                 let total_s = srt.started.elapsed().as_secs_f64();
-                let ttft_s = srt.queue_s + srt.prefill_s + srt.first_decode_s.unwrap_or(0.0);
+                // No decode step ever ran (max_new_tokens ≤ 1): the first
+                // token came straight from prefill, so TTFT ≈ completion.
+                let ttft_s = srt.ttft_s.unwrap_or(srt.queue_s + srt.prefill_s);
                 metrics.record_completion(
                     done.request.prompt.len(),
                     done.generated.len(),
@@ -239,9 +370,46 @@ fn worker_loop(
                     decode_s: srt.decode_s,
                     ttft_s,
                     total_s,
+                    error: srt.error,
+                });
+            } else if let Some(reply) = replies.remove(&id) {
+                // Defense in depth: a sequence reaped without a runtime
+                // whose reply wasn't already answered (today that's
+                // impossible — prefill failures respond inline — but a
+                // caller must never hang on a dropped channel).
+                let waited = done.request.arrival.elapsed().as_secs_f64();
+                metrics.record_completion(0, done.generated.len(), waited, waited);
+                let _ = reply.send(InferenceResponse {
+                    id,
+                    tokens: done.generated,
+                    queue_s: waited,
+                    prefill_s: 0.0,
+                    decode_s: 0.0,
+                    ttft_s: waited,
+                    total_s: waited,
+                    error: None,
                 });
             }
         }
+    }
+}
+
+/// A failed-request response: no tokens, the queue time it did spend, and
+/// the reason in `error` — so callers draining a batch of receivers see a
+/// response for every request instead of a dropped channel.
+fn rejection(req: &InferenceRequest, error: String) -> InferenceResponse {
+    let waited = req.arrival.elapsed().as_secs_f64();
+    InferenceResponse {
+        id: req.id,
+        tokens: Vec::new(),
+        queue_s: waited,
+        prefill_s: 0.0,
+        decode_s: 0.0,
+        // No token was ever produced; report the full wait so the timing
+        // record stays internally consistent (ttft == total == queue).
+        ttft_s: waited,
+        total_s: waited,
+        error: Some(error),
     }
 }
 

@@ -13,6 +13,12 @@ pub struct KernelCost {
     /// Bytes moved to/from DRAM (weights at quantized width, activations
     /// at their dtype, texture-cache boost already applied).
     pub bytes: f64,
+    /// The *batch-shared* weight portion of `bytes` (same texture boost
+    /// applied) — the part batched decode reads once per round, not once
+    /// per sequence. Activations, KV-cache traffic, and gather-style
+    /// weight reads (embedding rows differ per sequence) are `bytes -
+    /// weight_bytes` and scale per sequence.
+    pub weight_bytes: f64,
     /// Compute-limited time (s).
     pub t_compute: f64,
     /// Bandwidth-limited time (s).
@@ -30,6 +36,38 @@ impl KernelCost {
     /// True when compute-bound.
     pub fn compute_bound(&self) -> bool {
         self.t_compute >= self.t_memory
+    }
+
+    /// Roofline time for this kernel serving a decode batch of `batch`
+    /// sequences in one launch (§3.7 applied across users):
+    ///
+    /// * weight bytes stream **once** for the whole batch;
+    /// * activation + KV bytes are per-sequence and scale with `batch`;
+    /// * per-sequence FLOPs scale with `batch` (a batched matvec does
+    ///   `batch` times the MACs);
+    /// * launch overhead is paid once per round, not once per sequence.
+    ///
+    /// `batched_total(1)` equals [`total`](Self::total) exactly, so the
+    /// single-stream numbers are the B=1 point of the same model.
+    pub fn batched_total(&self, batch: usize) -> f64 {
+        if batch <= 1 {
+            return self.total(); // bit-exact B=1 ⇒ single-stream identity
+        }
+        (self.t_compute * batch as f64).max(self.batched_t_memory(batch)) + self.t_launch
+    }
+
+    /// Memory-limited time for a batch-`batch` launch: weight bytes once,
+    /// per-sequence bytes × batch. The single source of the batched
+    /// scaling rule — `batched_total` and the round simulator both use it.
+    pub fn batched_t_memory(&self, batch: usize) -> f64 {
+        if batch <= 1 {
+            return self.t_memory; // bit-exact single-stream identity
+        }
+        if self.bytes <= 0.0 {
+            return 0.0;
+        }
+        let per_seq = self.bytes - self.weight_bytes;
+        self.t_memory * (self.weight_bytes + batch as f64 * per_seq) / self.bytes
     }
 }
 
@@ -67,6 +105,34 @@ pub fn node_flops(g: &Graph, n: &Node) -> f64 {
     base + (n.epilogue.len() as f64 + n.fused_adds.len() as f64) * out_el
 }
 
+/// Weight bytes read by a node's kernel (quantized width, before the
+/// texture-cache boost).
+pub fn node_weight_bytes(n: &Node) -> f64 {
+    match &n.weight {
+        // Embedding gathers read only the used rows; lm_head-style FC reads
+        // all of them. Embedding op → rows = out elements / dim.
+        Some(w) => match &n.kind {
+            OpKind::Embedding { dim, .. } => {
+                let rows = n.shape.elements() / dim;
+                w.dtype.bytes_for(rows * dim) as f64
+            }
+            _ => w.bytes() as f64,
+        },
+        None => 0.0,
+    }
+}
+
+/// The *batch-shared* portion of a node's weight read: dense weights are
+/// streamed once for every sequence in a batched round, but gather-style
+/// reads (embedding rows) touch different rows per sequence and scale
+/// with batch — so they count as per-sequence traffic, not shared.
+pub fn node_shared_weight_bytes(n: &Node) -> f64 {
+    match &n.kind {
+        OpKind::Embedding { .. } => 0.0,
+        _ => node_weight_bytes(n),
+    }
+}
+
 /// Bytes moved by a node's kernel.
 pub fn node_bytes(g: &Graph, n: &Node, choice: &KernelChoice) -> f64 {
     let act_bytes = |node: &Node| -> f64 {
@@ -76,18 +142,7 @@ pub fn node_bytes(g: &Graph, n: &Node, choice: &KernelChoice) -> f64 {
     let mut bytes: f64 = n.inputs.iter().map(|&i| act_bytes(&g.nodes[i])).sum();
     bytes += n.fused_adds.iter().map(|&(i, _)| act_bytes(&g.nodes[i])).sum::<f64>();
     // Weights at quantized width (the decisive decode-path term).
-    if let Some(w) = &n.weight {
-        // Embedding gathers read only the used rows; lm_head-style FC reads
-        // all of them. Embedding op → rows = out elements / dim.
-        let wbytes = match &n.kind {
-            OpKind::Embedding { dim, .. } => {
-                let rows = n.shape.elements() / dim;
-                w.dtype.bytes_for(rows * dim) as f64
-            }
-            _ => w.bytes() as f64,
-        };
-        bytes += wbytes;
-    }
+    bytes += node_weight_bytes(n);
     // Output (write).
     bytes += act_bytes(n);
     // Texture path: better cache behaviour on spatially-local reads.
@@ -156,6 +211,13 @@ pub fn kernel_cost(
         _ => 1.0,
     };
     let bytes = node_bytes(g, n, choice);
+    // Batch-shared weight bytes, under the same texture boost so the
+    // shared/per-sequence split stays a consistent fraction of the total.
+    let weight_bytes = if choice.act_storage.is_texture() {
+        node_shared_weight_bytes(n) / choice_boost(choice)
+    } else {
+        node_shared_weight_bytes(n)
+    };
     let precision = kernel_precision(n, choice, dev);
     let gflops = dev.effective_gflops(precision).max(1e-9);
     let bw = dev.effective_bandwidth().max(1e-9);
@@ -163,6 +225,7 @@ pub fn kernel_cost(
     KernelCost {
         flops,
         bytes,
+        weight_bytes,
         t_compute: flops / (gflops * family_eff * 1e9),
         t_memory: bytes / (bw * 1e9 * tex_boost),
         t_launch: dev.launch_overhead_us * 1e-6,
@@ -218,6 +281,49 @@ mod tests {
         let p4 = time(DType::I4, 1024, Stage::Prefill);
         let pratio = p8 / p4;
         assert!(pratio < 1.1, "prefill barely moves with weight quant: {pratio}");
+    }
+
+    #[test]
+    fn batched_decode_amortizes_weight_reads() {
+        let dev = device("adreno_750").unwrap();
+        let (g, fc) = fc_graph(1, DType::I8);
+        let choice = select_kernel(&g.nodes[fc], &dev, Stage::Decode);
+        let c = kernel_cost(&g, &g.nodes[fc], &choice, &dev, Stage::Decode);
+        assert!(c.weight_bytes > 0.0 && c.weight_bytes < c.bytes);
+        // B=1 batched total is exactly the single-stream total.
+        assert_eq!(c.batched_total(1), c.total());
+        // A weight-dominated matvec barely slows down at B=8 …
+        let t1 = c.batched_total(1);
+        let t8 = c.batched_total(8);
+        assert!(t8 < 2.0 * t1, "decode FC round at B=8 must cost ≪ 8×: {t8} vs {t1}");
+        // … so per-token cost drops steeply, and monotonically in B.
+        let mut prev = f64::INFINITY;
+        for b in [1usize, 2, 4, 8, 16] {
+            let per_token = c.batched_total(b) / b as f64;
+            assert!(per_token < prev, "per-token cost must fall with batch (B={b})");
+            prev = per_token;
+        }
+    }
+
+    #[test]
+    fn batching_does_not_help_weightless_kernels() {
+        // Attention score matmuls read per-sequence KV, not shared
+        // weights: their memory time scales linearly with the batch.
+        let dev = device("adreno_750").unwrap();
+        let mut g = Graph::new("t");
+        let q = g.input("q", Shape::bhwc(4, 1, 2, 256), DType::F16);
+        let k = g.input("k", Shape::bhwc(4, 1, 1024, 256), DType::F16);
+        let s = g.matmul("scores", q, k, true).unwrap();
+        g.output(s);
+        let choice = select_kernel(&g.nodes[s], &dev, Stage::Decode);
+        let c = kernel_cost(&g, &g.nodes[s], &choice, &dev, Stage::Decode);
+        assert_eq!(c.weight_bytes, 0.0);
+        let body1 = c.batched_total(1) - c.t_launch;
+        let body8 = c.batched_total(8) - c.t_launch;
+        assert!(
+            (body8 - 8.0 * body1).abs() < 1e-12,
+            "KV traffic is per-sequence: {body8} vs 8×{body1}"
+        );
     }
 
     #[test]

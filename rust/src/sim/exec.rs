@@ -79,6 +79,7 @@ pub fn build_plan(
             let quant_cost = KernelCost {
                 flops: 2.0 * in_node.shape.elements() as f64,
                 bytes: in_bytes + in_bytes / 2.0, // read fp16, write int8+scales
+                weight_bytes: 0.0,               // pure activation traffic
                 t_compute: 2.0 * in_node.shape.elements() as f64
                     / (dev.effective_gflops(crate::device::profile::Precision::Fp16) * 1e9),
                 t_memory: (in_bytes * 1.5) / (dev.effective_bandwidth() * 1e9),
@@ -120,19 +121,37 @@ pub fn build_plan(
 
 /// Simulate a plan: sequential kernel execution (the paper synchronizes
 /// after each token; within a token, kernels serialize on data deps and
-/// mobile GPUs execute one compute kernel at a time).
+/// mobile GPUs execute one compute kernel at a time). Structurally the
+/// B=1 point of [`simulate_batched`], so the two can never diverge.
 pub fn simulate(plan: &ExecutionPlan) -> SimReport {
+    simulate_batched(plan, 1)
+}
+
+/// Simulate a plan executed as one **batched decode round** over `batch`
+/// sequences: every kernel launches once, weight bytes stream once for
+/// the whole batch, activation/KV bytes and FLOPs scale per sequence
+/// ([`KernelCost::batched_total`]). `simulate_batched(plan, 1)` is the
+/// bit-exact single-stream simulation ([`simulate`] delegates here). The
+/// reported `total_s` is the *round* latency; divide token count by it
+/// for round throughput.
+pub fn simulate_batched(plan: &ExecutionPlan, batch: usize) -> SimReport {
+    let b = batch.max(1) as f64;
     let mut r = SimReport { kernel_count: plan.kernels.len(), ..Default::default() };
     let mut compute_bound_time = 0.0;
     for k in &plan.kernels {
-        let t = k.cost.total();
+        let t = k.cost.batched_total(batch);
+        let t_memory = k.cost.batched_t_memory(batch);
         r.total_s += t;
         r.launch_s += k.cost.t_launch;
-        r.compute_s += k.cost.t_compute;
-        r.memory_s += k.cost.t_memory;
-        r.flops += k.cost.flops;
-        r.bytes += k.cost.bytes;
-        if k.cost.compute_bound() {
+        r.compute_s += k.cost.t_compute * b;
+        r.memory_s += t_memory;
+        r.flops += k.cost.flops * b;
+        r.bytes += if batch <= 1 {
+            k.cost.bytes
+        } else {
+            k.cost.weight_bytes + b * (k.cost.bytes - k.cost.weight_bytes)
+        };
+        if k.cost.t_compute * b >= t_memory {
             compute_bound_time += t;
         }
     }

@@ -21,4 +21,4 @@ pub mod cost;
 pub mod exec;
 
 pub use cost::{kernel_cost, KernelCost};
-pub use exec::{simulate_graph, ExecutionPlan, PlannedKernel, SimReport};
+pub use exec::{simulate_batched, simulate_graph, ExecutionPlan, PlannedKernel, SimReport};

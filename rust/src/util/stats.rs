@@ -110,6 +110,15 @@ impl Histogram {
         Histogram { counts: vec![0; n + 1], bounds, total: 0, sum: 0.0, max: 0.0 }
     }
 
+    /// Linear bucket boundaries `lo, lo+step, …`, `n` buckets — exact for
+    /// small-integer metrics (batch occupancy, tokens per round) where
+    /// exponential buckets would blur adjacent values together.
+    pub fn linear(lo: f64, step: f64, n: usize) -> Self {
+        assert!(step > 0.0 && n > 0);
+        let bounds: Vec<f64> = (0..n).map(|i| lo + step * i as f64).collect();
+        Histogram { counts: vec![0; n + 1], bounds, total: 0, sum: 0.0, max: 0.0 }
+    }
+
     pub fn record(&mut self, v: f64) {
         let idx = self.bounds.partition_point(|b| *b < v);
         self.counts[idx] += 1;
