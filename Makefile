@@ -1,6 +1,6 @@
 # ML Drift reproduction — top-level targets.
 
-.PHONY: tier1 build test fmt artifacts bench-batched
+.PHONY: tier1 build test fmt artifacts bench bench-batched
 
 # The tier-1 gate CI runs on every push.
 tier1:
@@ -20,6 +20,10 @@ fmt:
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../artifacts
 
-# Batched-serving decode-throughput sweep (simulated).
+# Batched-serving decode-throughput + fixed-memory KV sweep (simulated).
+# Writes rust/BENCH_batched.json so the perf trajectory is tracked
+# across PRs.
+bench: bench-batched
+
 bench-batched:
 	cd rust && cargo bench --bench bench_batched_serving

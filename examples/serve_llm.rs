@@ -29,7 +29,7 @@ fn main() -> mldrift::Result<()> {
     let engine = ServingEngine::start(
         &artifacts,
         // 8 KV reservations so the whole burst batches into one round.
-        SchedulerConfig { max_active: 8, max_prefills_per_round: 2 },
+        SchedulerConfig { max_active: 8, max_prefills_per_round: 2, ..Default::default() },
     )?;
 
     // Workload: 8 concurrent requests (16-token prompts — the small

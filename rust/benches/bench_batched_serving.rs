@@ -1,27 +1,44 @@
-//! Batched-serving sweep: simulated decode throughput vs concurrency.
+//! Batched-serving sweep: simulated decode throughput vs concurrency,
+//! plus the **fixed-memory** comparison of KV reservation disciplines.
 //!
-//! One scheduling round advances every active sequence by one token with
-//! the weights streamed **once** (decode is weight-bandwidth-bound, so
-//! batching B users amortizes the dominant traffic term B-ways while KV
-//! and activation traffic still scale per sequence). This bench sweeps
-//! B ∈ {1, 2, 4, 8, 16} and reports aggregate tokens/s, the speedup over
-//! single-stream, and the per-round latency each user observes.
+//! Part 1 — batch sweep. One scheduling round advances every active
+//! sequence by one token with the weights streamed **once** (decode is
+//! weight-bandwidth-bound, so batching B users amortizes the dominant
+//! traffic term B-ways while KV and activation traffic still scale per
+//! sequence). Sweeps B ∈ {1, 2, 4, 8, 16} and reports aggregate
+//! tokens/s, the speedup over single-stream, and per-round latency.
+//!
+//! Part 2 — fixed-memory sweep. Same arena bytes, same workload (long
+//! `max_new_tokens` budgets, short actual generations), two disciplines:
+//! whole-lifetime reservation vs paged on-demand growth with
+//! expected-footprint admission. Reports sustained batch occupancy,
+//! tokens/s, preemption/re-prefill counts, and peak internal
+//! fragmentation — the memory the lifetime discipline strands.
+//!
+//! Writes every number to `BENCH_batched.json` (machine-readable, one
+//! file per run) so the perf trajectory is tracked across PRs.
 //!
 //! ```sh
-//! cargo bench --bench bench_batched_serving
+//! make bench   # = cargo bench --bench bench_batched_serving
 //! ```
 
 use mldrift::bench::Table;
 use mldrift::device::registry::device;
 use mldrift::engine::compile::CompileOptions;
 use mldrift::engine::llm::{batched_decode_tokens_per_s, simulate_llm};
+use mldrift::kv::KvArenaConfig;
 use mldrift::models::llm_config;
 use mldrift::quant::QuantScheme;
+use mldrift::serving::{AdmissionPolicy, SchedulerConfig};
+use mldrift::sim::{simulate_serving, KvReservation, ServingSimConfig, SimRequest};
+use mldrift::util::json::Json;
 
 const BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
+const OUT_PATH: &str = "BENCH_batched.json";
 
 fn main() {
     let opts = CompileOptions::default();
+    let mut json_batch = Vec::new();
 
     for (model, devices) in [
         ("gemma2_2b", &["adreno_750", "intel_258v", "m4_pro"][..]),
@@ -48,6 +65,13 @@ fn main() {
             for b in BATCHES {
                 let tps = batched_decode_tokens_per_s(&p.decode, b);
                 cells.push(format!("{tps:.1} ({:.2}×)", tps / base));
+                json_batch.push(Json::obj(vec![
+                    ("model", model.into()),
+                    ("device", dev_name.into()),
+                    ("batch", b.into()),
+                    ("tokens_per_s", tps.into()),
+                    ("speedup_vs_b1", (tps / base).into()),
+                ]));
             }
             let round_ms = 8.0 / batched_decode_tokens_per_s(&p.decode, 8) * 1e3;
             cells.push(format!("{round_ms:.1}"));
@@ -57,11 +81,91 @@ fn main() {
         println!();
     }
 
-    // Sanity gate (the acceptance bar this bench exists to demonstrate):
-    // monotone scaling, with B=8 ≥ 3× B=1 on at least one device profile.
+    // ---- Part 2: fixed-memory occupancy sweep (Adreno 750) --------------
+    // Long budgets (192) + short actual generations (16): the workload
+    // where lifetime reservation strands ~2/3 of every claim.
     let cfg = llm_config("gemma2_2b").unwrap();
     let dev = device("adreno_750").unwrap();
     let p = simulate_llm(&cfg, &dev, QuantScheme::Mixed844, 1024, 256, &opts).unwrap();
+    let workload =
+        vec![SimRequest { prompt_tokens: 64, max_new_tokens: 192, actual_new_tokens: 16 }; 32];
+    let mut json_fixed = Vec::new();
+    let mut t = Table::new(
+        "gemma2_2b on Adreno 750 — fixed arena, lifetime vs paged KV (32 reqs, \
+         prompt 64, budget 192, actual 16)",
+        &["arena blocks", "policy", "occ mean", "occ peak", "tok/s", "preempt", "re-prefill tok",
+          "peak frag MB"],
+    );
+    let mut occupancy_at_48 = (0.0f64, 0.0f64); // (lifetime, paged)
+    for arena_blocks in [32usize, 48, 64, 96] {
+        for (name, reservation) in [
+            ("lifetime", KvReservation::Lifetime),
+            (
+                "paged",
+                KvReservation::Paged {
+                    policy: AdmissionPolicy::Expected { safety_margin: 1.5 },
+                },
+            ),
+        ] {
+            let sim_cfg = ServingSimConfig {
+                sched: SchedulerConfig {
+                    max_active: 16,
+                    max_prefills_per_round: 2,
+                    ..Default::default()
+                },
+                arena: KvArenaConfig {
+                    layers: cfg.layers,
+                    heads_kv: cfg.heads_kv,
+                    head_dim: cfg.head_dim,
+                    block_tokens: 16,
+                    num_blocks: arena_blocks,
+                },
+                reservation,
+                sync_s: 150e-6,
+                prefill_plan_tokens: 1024,
+            };
+            let rep = simulate_serving(&p.decode.plan, &p.prefill.plan, &sim_cfg, &workload);
+            assert_eq!(
+                rep.completed,
+                workload.len(),
+                "{name}@{arena_blocks}: every request must complete"
+            );
+            if arena_blocks == 48 {
+                if name == "lifetime" {
+                    occupancy_at_48.0 = rep.mean_occupancy;
+                } else {
+                    occupancy_at_48.1 = rep.mean_occupancy;
+                }
+            }
+            t.row(&[
+                arena_blocks.to_string(),
+                name.to_string(),
+                format!("{:.2}", rep.mean_occupancy),
+                rep.peak_occupancy.to_string(),
+                format!("{:.1}", rep.tokens_per_s()),
+                rep.preemptions.to_string(),
+                rep.reprefill_tokens.to_string(),
+                format!("{:.2}", rep.peak_fragmentation_bytes as f64 / 1e6),
+            ]);
+            json_fixed.push(Json::obj(vec![
+                ("arena_blocks", arena_blocks.into()),
+                ("policy", name.into()),
+                ("mean_occupancy", rep.mean_occupancy.into()),
+                ("peak_occupancy", rep.peak_occupancy.into()),
+                ("tokens_per_s", rep.tokens_per_s().into()),
+                ("preemptions", rep.preemptions.into()),
+                ("reprefill_tokens", rep.reprefill_tokens.into()),
+                ("peak_fragmentation_bytes", rep.peak_fragmentation_bytes.into()),
+                ("rounds", rep.rounds.into()),
+            ]));
+        }
+    }
+    t.print();
+    println!();
+
+    // Sanity gates (the acceptance bars this bench exists to demonstrate):
+    // monotone batch scaling with B=8 ≥ 3× B=1, and paged admission
+    // sustaining ≥ 1.5× lifetime occupancy at the same arena bytes.
     let mut prev = 0.0;
     for b in BATCHES {
         let t = batched_decode_tokens_per_s(&p.decode, b);
@@ -71,5 +175,23 @@ fn main() {
     let speedup =
         batched_decode_tokens_per_s(&p.decode, 8) / batched_decode_tokens_per_s(&p.decode, 1);
     assert!(speedup >= 3.0, "B=8 speedup {speedup:.2} < 3.0");
-    println!("OK: decode throughput scales monotonically; B=8 = {speedup:.2}× B=1 on Adreno 750");
+    let (l_occ, p_occ) = occupancy_at_48;
+    assert!(
+        p_occ >= 1.5 * l_occ,
+        "paged occupancy {p_occ:.2} < 1.5× lifetime {l_occ:.2} at 48 blocks"
+    );
+    println!(
+        "OK: decode scales monotonically (B=8 = {speedup:.2}× B=1); paged KV sustains \
+         {:.2}× lifetime occupancy at fixed memory on Adreno 750",
+        p_occ / l_occ
+    );
+
+    let doc = Json::obj(vec![
+        ("model_sweep", Json::Arr(json_batch)),
+        ("fixed_memory_adreno_750", Json::Arr(json_fixed)),
+    ]);
+    match std::fs::write(OUT_PATH, doc.pretty() + "\n") {
+        Ok(()) => println!("wrote {OUT_PATH}"),
+        Err(e) => eprintln!("WARN: could not write {OUT_PATH}: {e}"),
+    }
 }

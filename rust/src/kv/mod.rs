@@ -13,10 +13,25 @@
 //! For multi-tenant serving, per-sequence caches live in one **shared KV
 //! arena** ([`KvArena`]): a single contiguous device region carved into
 //! fixed-size blocks (byte size rounded up to the §3.5 planner's
-//! [`ALIGN`](crate::memory::plan::ALIGN)). Sequences reserve whole blocks
-//! at admission, so mid-stream overflow is impossible by construction and
-//! a full arena surfaces as *backpressure* (defer admission) rather than
-//! a failed request.
+//! [`ALIGN`](crate::memory::plan::ALIGN)). The arena supports two
+//! reservation disciplines:
+//!
+//! * **Lifetime reservation** — [`KvArena::claim`] the whole
+//!   `prompt + max_new_tokens` footprint at admission. Mid-stream
+//!   overflow is impossible by construction, but every token the
+//!   sequence never generates is internal fragmentation
+//!   ([`KvArenaStats::internal_fragmentation_bytes`]) that caps batch
+//!   occupancy.
+//! * **Paged, on-demand growth** — claim only the prompt footprint at
+//!   admission and [`KvArena::grow`]/[`KvArena::ensure`] block-by-block
+//!   during decode. Occupancy tracks *actual* footprints, and genuine
+//!   exhaustion mid-decode surfaces as `Err(DriftError::Memory)` from
+//!   `grow`, which the serving layer converts into **preemption** (evict
+//!   the lowest-progress sequence, re-prefill on re-admission) instead
+//!   of a failed request.
+//!
+//! Either way a full arena at admission time is *backpressure* (defer
+//! admission), never a failed request.
 
 use crate::error::{DriftError, Result};
 use crate::memory::plan::ALIGN;
@@ -234,20 +249,30 @@ impl KvArena {
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
-        div_ceil(tokens.max(1), self.cfg.block_tokens)
+        div_ceil(tokens, self.cfg.block_tokens)
     }
 
     /// Would a reservation of `tokens` positions succeed right now?
     /// Admission control asks this *before* popping a request off the
-    /// waiting queue; `false` means "defer", never "fail".
+    /// waiting queue; `false` means "defer", never "fail". `tokens == 0`
+    /// always fits (it reserves no blocks — see [`claim`](Self::claim)).
     pub fn can_claim(&self, tokens: usize) -> bool {
         self.blocks_for(tokens) <= self.free.len()
     }
 
     /// Reserve capacity for a sequence of up to `tokens` positions.
-    /// Whole-lifetime reservation makes mid-stream overflow impossible;
-    /// the error here is the backpressure signal the scheduler converts
-    /// into deferred admission.
+    ///
+    /// Contract for `tokens == 0`: the claim is *valid* and reserves zero
+    /// blocks — the slot exists, `len` is 0, and the first
+    /// [`grow`](Self::grow) (or [`ensure`](Self::ensure)) allocates the
+    /// first block. This is
+    /// the paged-admission shape for an empty-prompt sequence; the old
+    /// behaviour silently rounded 0 up to one block.
+    ///
+    /// Under lifetime reservation the error here is the backpressure
+    /// signal the scheduler converts into deferred admission; under paged
+    /// admission callers claim only the prompt footprint and rely on
+    /// [`grow`](Self::grow) during decode.
     pub fn claim(&mut self, tokens: usize) -> Result<KvSeqHandle> {
         let need = self.blocks_for(tokens);
         if need > self.free.len() {
@@ -272,9 +297,90 @@ impl KvArena {
             self.owner[b] = Some(slot);
             blocks.push(b);
         }
-        self.seqs[slot] = Some(SeqEntry { blocks, len: 0, reserved_tokens: tokens.max(1) });
+        self.seqs[slot] = Some(SeqEntry { blocks, len: 0, reserved_tokens: tokens });
         self.peak_blocks_in_use = self.peak_blocks_in_use.max(self.blocks_in_use());
         Ok(KvSeqHandle { slot, gen: self.gens[slot] })
+    }
+
+    /// Raise a sequence's reservation ceiling by `additional_tokens`,
+    /// allocating whatever new blocks that requires. All-or-nothing: on
+    /// exhaustion no blocks are taken and the reservation is unchanged —
+    /// the `Err(DriftError::Memory)` is the signal the serving layer
+    /// turns into preemption (evict a victim, retry), never a failed
+    /// request. Returns the number of blocks newly allocated (possibly 0
+    /// when the current tail block still has slack).
+    pub fn grow(&mut self, h: KvSeqHandle, additional_tokens: usize) -> Result<usize> {
+        if self.gens.get(h.slot) != Some(&h.gen) {
+            return Err(DriftError::Serving(format!(
+                "stale kv arena handle (slot {}, gen {})",
+                h.slot, h.gen
+            )));
+        }
+        let e = self
+            .seqs
+            .get_mut(h.slot)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| DriftError::Serving(format!("kv arena slot {} not claimed", h.slot)))?;
+        let new_reserved = e.reserved_tokens + additional_tokens;
+        let need = div_ceil(new_reserved, self.cfg.block_tokens).saturating_sub(e.blocks.len());
+        if need > self.free.len() {
+            return Err(DriftError::Memory(format!(
+                "kv arena exhausted on grow: need {need} more blocks for \
+                 +{additional_tokens} tokens, {} free of {}",
+                self.free.len(),
+                self.cfg.num_blocks
+            )));
+        }
+        for _ in 0..need {
+            let b = self.free.pop().expect("free count checked above");
+            debug_assert!(self.owner[b].is_none(), "block {b} double-claimed");
+            self.owner[b] = Some(h.slot);
+            e.blocks.push(b);
+        }
+        e.reserved_tokens = new_reserved;
+        let in_use = self.cfg.num_blocks - self.free.len();
+        self.peak_blocks_in_use = self.peak_blocks_in_use.max(in_use);
+        Ok(need)
+    }
+
+    /// Would [`grow`](Self::grow)`(h, additional_tokens)` succeed right
+    /// now? `false` for stale handles.
+    pub fn can_grow(&self, h: KvSeqHandle, additional_tokens: usize) -> bool {
+        if self.gens.get(h.slot) != Some(&h.gen) {
+            return false;
+        }
+        let Some(e) = self.seqs.get(h.slot).and_then(|s| s.as_ref()) else {
+            return false;
+        };
+        let need = div_ceil(e.reserved_tokens + additional_tokens, self.cfg.block_tokens)
+            .saturating_sub(e.blocks.len());
+        need <= self.free.len()
+    }
+
+    /// Make sure the next `n` appends will fit: grows the reservation
+    /// exactly to `len + n` when it falls short. The per-step call on the
+    /// paged decode path (`n = 1` per round). Returns blocks allocated.
+    pub fn ensure(&mut self, h: KvSeqHandle, n: usize) -> Result<usize> {
+        let shortfall = {
+            if self.gens.get(h.slot) != Some(&h.gen) {
+                return Err(DriftError::Serving(format!(
+                    "stale kv arena handle (slot {}, gen {})",
+                    h.slot, h.gen
+                )));
+            }
+            let e = self
+                .seqs
+                .get(h.slot)
+                .and_then(|s| s.as_ref())
+                .ok_or_else(|| {
+                    DriftError::Serving(format!("kv arena slot {} not claimed", h.slot))
+                })?;
+            (e.len + n).saturating_sub(e.reserved_tokens)
+        };
+        if shortfall == 0 {
+            return Ok(0);
+        }
+        self.grow(h, shortfall)
     }
 
     fn entry_mut(&mut self, h: KvSeqHandle) -> Result<&mut SeqEntry> {
@@ -391,6 +497,16 @@ impl KvArena {
                 return Err(DriftError::Memory(format!(
                     "seq slot {slot} len {} exceeds its {} blocks",
                     e.len,
+                    e.blocks.len()
+                )));
+            }
+            if e.len > e.reserved_tokens
+                || e.reserved_tokens > e.blocks.len() * self.cfg.block_tokens
+            {
+                return Err(DriftError::Memory(format!(
+                    "seq slot {slot}: len {} / reservation {} / {} blocks out of order",
+                    e.len,
+                    e.reserved_tokens,
                     e.blocks.len()
                 )));
             }
@@ -550,6 +666,140 @@ mod tests {
         a.verify().unwrap();
         a.release(h);
         assert!(a.can_claim(64), "released capacity is reusable");
+    }
+
+    #[test]
+    fn claim_zero_tokens_reserves_no_blocks() {
+        // Explicit contract: a zero-token claim is valid, holds no blocks,
+        // and the first grow allocates the first block (the old behaviour
+        // silently rounded 0 up to one block via `tokens.max(1)`).
+        let mut a = small_arena(2);
+        assert!(a.can_claim(0), "zero tokens always fit");
+        let h = a.claim(0).unwrap();
+        assert_eq!(a.blocks_in_use(), 0, "no blocks for an empty claim");
+        assert_eq!(a.seq_count(), 1, "the slot itself exists");
+        assert!(a.append(h, 1).is_err(), "no capacity until grown");
+        assert_eq!(a.grow(h, 1).unwrap(), 1, "first grow allocates the first block");
+        a.append(h, 1).unwrap();
+        assert_eq!(a.len(h), 1);
+        a.verify().unwrap();
+        a.release(h);
+        assert_eq!(a.blocks_in_use(), 0);
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn grow_extends_reservation_block_by_block() {
+        let mut a = small_arena(4); // blocks of 16 tokens
+        let h = a.claim(16).unwrap(); // 1 block
+        a.append(h, 16).unwrap();
+        assert!(a.append(h, 1).is_err(), "ceiling before growth");
+        // Slack growth within the current tail block allocates nothing.
+        let h2 = a.claim(10).unwrap();
+        assert_eq!(a.grow(h2, 3).unwrap(), 0, "10+3 still fits one block");
+        // Crossing the block boundary allocates exactly one block.
+        assert!(a.can_grow(h, 16));
+        assert_eq!(a.grow(h, 16).unwrap(), 1);
+        a.append(h, 16).unwrap();
+        assert_eq!(a.len(h), 32);
+        // `ensure` is the per-step form: grows only on shortfall.
+        assert_eq!(a.ensure(h, 1).unwrap(), 1, "boundary: one more block");
+        a.append(h, 1).unwrap();
+        assert_eq!(a.ensure(h, 1).unwrap(), 0, "slack: no allocation");
+        a.verify().unwrap();
+        // Exhaustion: 4 blocks total, 3+1 in use, next grow must fail
+        // without changing state (all-or-nothing).
+        let before = a.blocks_in_use();
+        assert!(!a.can_grow(h, 32));
+        let err = a.grow(h, 32).unwrap_err();
+        assert!(matches!(err, DriftError::Memory(_)), "{err}");
+        assert_eq!(a.blocks_in_use(), before, "failed grow took nothing");
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn stale_handle_grow_is_rejected_not_aliased() {
+        // Generation tags must cover the growth path too: a stale handle
+        // after release + slot reuse must error, never grow (or shrink)
+        // the new occupant's reservation.
+        let mut a = small_arena(4);
+        let h1 = a.claim(16).unwrap();
+        a.release(h1);
+        let h2 = a.claim(16).unwrap(); // reuses slot 0 with a new gen
+        assert_ne!(h1, h2);
+        assert!(a.grow(h1, 16).is_err(), "stale grow rejected");
+        assert!(a.ensure(h1, 1).is_err(), "stale ensure rejected");
+        assert!(!a.can_grow(h1, 1), "stale can_grow is false");
+        assert_eq!(a.blocks_in_use(), 1, "h2's reservation untouched");
+        a.append(h2, 16).unwrap();
+        assert!(a.append(h2, 1).is_err(), "h2 ceiling unchanged by stale calls");
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn property_block_accounting_conserves_under_admit_grow_release() {
+        // Satellite invariant: under random claim/grow/append/release
+        // interleavings, `blocks_in_use + blocks_free == total` always,
+        // ownership stays disjoint (verify), and failed grows are
+        // all-or-nothing.
+        check("kv arena conserves blocks under paged growth", Config::cases(64), |rng| {
+            let total = 1 + rng.gen_range(24) as usize;
+            let mut a = small_arena(total);
+            let mut live: Vec<KvSeqHandle> = Vec::new();
+            for _ in 0..96 {
+                match rng.gen_range(4) {
+                    0 => {
+                        let tokens = rng.gen_range(64) as usize; // 0 is a valid claim
+                        if a.can_claim(tokens) {
+                            live.push(a.claim(tokens).map_err(|e| e.to_string())?);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            let h = live[i];
+                            let add = 1 + rng.gen_range(40) as usize;
+                            let before = a.blocks_in_use();
+                            match a.grow(h, add) {
+                                Ok(_) => {}
+                                Err(_) => {
+                                    if a.blocks_in_use() != before {
+                                        return Err("failed grow leaked blocks".into());
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    2 => {
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            a.release(live.swap_remove(i));
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            let _ = a.append(live[i], 1 + rng.gen_range(8) as usize);
+                        }
+                    }
+                }
+                if a.blocks_in_use() + a.blocks_free() != total {
+                    return Err(format!(
+                        "accounting broke: {} in use + {} free != {total}",
+                        a.blocks_in_use(),
+                        a.blocks_free()
+                    ));
+                }
+                a.verify().map_err(|e| e.to_string())?;
+            }
+            for h in live {
+                a.release(h);
+            }
+            if a.blocks_in_use() != 0 {
+                return Err("drained arena still holds blocks".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -210,7 +210,11 @@ fn main() -> mldrift::Result<()> {
         "serve" => {
             let engine = ServingEngine::start(
                 m.req("artifacts"),
-                SchedulerConfig { max_active: m.parse("concurrency")?, max_prefills_per_round: 1 },
+                SchedulerConfig {
+                    max_active: m.parse("concurrency")?,
+                    max_prefills_per_round: 1,
+                    ..Default::default()
+                },
             )?;
             let n: usize = m.parse("requests")?;
             let gen: usize = m.parse("gen")?;

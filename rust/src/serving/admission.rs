@@ -1,0 +1,165 @@
+//! KV admission policy: how many token positions to gate admission on.
+//!
+//! Lifetime reservation gates (and claims) the worst case,
+//! `prompt + max_new_tokens` — overflow-free, but every token a sequence
+//! never generates is internal fragmentation that caps batch occupancy
+//! (the gap `KvArenaStats::internal_fragmentation_bytes` reports).
+//! Paged admission gates on the *expected* footprint instead: the
+//! context that must prefill now, plus the observed mean generation
+//! length (×  a safety margin), clamped to the request's own budget.
+//! Only the context is actually claimed; decode grows block-by-block,
+//! and a wrong guess degrades to preemption (queueing latency), never to
+//! a failed request.
+
+use crate::kv::{KvArena, KvSeqHandle};
+use crate::serving::request::InferenceRequest;
+
+/// Admission-footprint policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Gate on `context + remaining max_new_tokens` (the PR-1 discipline;
+    /// pairs with whole-lifetime [`crate::kv::KvArena::claim`]).
+    WorstCase,
+    /// Gate on `context + min(remaining, ceil(margin × mean_gen))`,
+    /// where `mean_gen` is the live mean generation length (e.g.
+    /// [`crate::serving::Metrics::mean_gen_tokens`]). Falls back to the
+    /// worst case until the first completion lands (cold start admits
+    /// conservatively, then the expectation takes over).
+    Expected {
+        /// Multiplier on the observed mean (≥ 1.0 hedges against
+        /// longer-than-average sequences; preemption absorbs the tail).
+        safety_margin: f64,
+    },
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy::Expected { safety_margin: 1.5 }
+    }
+}
+
+impl AdmissionPolicy {
+    /// Token positions admission should require free for a candidate
+    /// whose prefill must cover `context_tokens` right now (prompt for a
+    /// fresh request, prompt + generated for a re-admitted preempted
+    /// sequence). `mean_gen` is the observed mean generation length, if
+    /// any completions have been recorded yet.
+    pub fn footprint(
+        &self,
+        req: &InferenceRequest,
+        context_tokens: usize,
+        mean_gen: Option<f64>,
+    ) -> usize {
+        // Tokens this sequence may still generate (generated-so-far is
+        // `context - prompt` for re-admissions).
+        let already = context_tokens.saturating_sub(req.prompt.len());
+        let remaining = req.max_new_tokens.saturating_sub(already);
+        let expected_new = match (self, mean_gen) {
+            (AdmissionPolicy::WorstCase, _) | (AdmissionPolicy::Expected { .. }, None) => {
+                remaining
+            }
+            (AdmissionPolicy::Expected { safety_margin }, Some(mean)) => {
+                let margin = safety_margin.max(1.0);
+                ((mean * margin).ceil() as usize).min(remaining)
+            }
+        };
+        context_tokens + expected_new
+    }
+
+    /// Gate-and-claim for one admission candidate — the single admission
+    /// step both the engine and the serving simulator run (shared for
+    /// the same reason as `Scheduler::ensure_round_capacity`: so the
+    /// simulator can never drift from the serving policy). Gates on
+    /// [`footprint`](Self::footprint); on success claims the whole
+    /// footprint for [`WorstCase`](AdmissionPolicy::WorstCase) (lifetime
+    /// discipline — growth, and therefore preemption, can never occur)
+    /// but only `context_tokens` for
+    /// [`Expected`](AdmissionPolicy::Expected) (paged: grow during
+    /// decode). `None` means defer — backpressure, never failure.
+    pub fn admit(
+        &self,
+        arena: &mut KvArena,
+        req: &InferenceRequest,
+        context_tokens: usize,
+        mean_gen: Option<f64>,
+    ) -> Option<KvSeqHandle> {
+        let expected = self.footprint(req, context_tokens, mean_gen);
+        if !arena.can_claim(expected) {
+            return None;
+        }
+        let claim_tokens = match self {
+            AdmissionPolicy::WorstCase => expected,
+            AdmissionPolicy::Expected { .. } => context_tokens,
+        };
+        arena.claim(claim_tokens).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt_len: usize, max_new: usize) -> InferenceRequest {
+        InferenceRequest::new(1, vec![0; prompt_len], max_new)
+    }
+
+    #[test]
+    fn worst_case_is_lifetime_footprint() {
+        let r = req(64, 192);
+        assert_eq!(AdmissionPolicy::WorstCase.footprint(&r, 64, Some(10.0)), 256);
+    }
+
+    #[test]
+    fn expected_footprint_tracks_mean_with_margin() {
+        let r = req(64, 192);
+        let p = AdmissionPolicy::Expected { safety_margin: 1.5 };
+        // No history yet: conservative cold start.
+        assert_eq!(p.footprint(&r, 64, None), 256);
+        // Mean 16 → expect ceil(24) beyond the context.
+        assert_eq!(p.footprint(&r, 64, Some(16.0)), 64 + 24);
+        // Expectation never exceeds the request's own budget.
+        assert_eq!(p.footprint(&r, 64, Some(1000.0)), 256);
+    }
+
+    #[test]
+    fn readmission_counts_generated_tokens_against_budget() {
+        // A preempted sequence re-admitting with 32 tokens generated has
+        // context 96 and at most 160 still to come.
+        let r = req(64, 192);
+        assert_eq!(AdmissionPolicy::WorstCase.footprint(&r, 96, None), 96 + 160);
+        let p = AdmissionPolicy::Expected { safety_margin: 1.0 };
+        assert_eq!(p.footprint(&r, 96, Some(8.0)), 96 + 8);
+    }
+
+    #[test]
+    fn admit_claims_footprint_for_worst_case_and_context_for_expected() {
+        use crate::kv::KvArenaConfig;
+        let arena_cfg = KvArenaConfig {
+            layers: 1,
+            heads_kv: 1,
+            head_dim: 64,
+            block_tokens: 16,
+            num_blocks: 8,
+        };
+        let r = req(16, 48); // worst case = 64 tokens = 4 blocks
+        let mut arena = KvArena::new(arena_cfg);
+        let h = AdmissionPolicy::WorstCase.admit(&mut arena, &r, 16, None).unwrap();
+        assert_eq!(arena.blocks_in_use(), 4, "lifetime claims the whole footprint");
+        arena.release(h);
+        let p = AdmissionPolicy::Expected { safety_margin: 1.0 };
+        let _h = p.admit(&mut arena, &r, 16, None).unwrap();
+        assert_eq!(arena.blocks_in_use(), 1, "paged claims only the context");
+        // The gate defers when the expectation does not fit, even though
+        // the context alone would.
+        let mut tiny = KvArena::new(KvArenaConfig { num_blocks: 2, ..arena_cfg });
+        assert!(p.admit(&mut tiny, &r, 16, None).is_none(), "cold start gates worst-case");
+        assert!(p.admit(&mut tiny, &r, 16, Some(8.0)).is_some(), "expectation fits");
+    }
+
+    #[test]
+    fn margin_below_one_is_clamped() {
+        let r = req(10, 100);
+        let p = AdmissionPolicy::Expected { safety_margin: 0.5 };
+        assert_eq!(p.footprint(&r, 10, Some(10.0)), 10 + 10, "margin clamps to 1.0");
+    }
+}

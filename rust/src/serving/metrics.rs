@@ -14,6 +14,14 @@ pub struct Metrics {
     pub prefill_tokens: AtomicU64,
     /// Scheduling rounds executed (only rounds with work).
     pub rounds_executed: AtomicU64,
+    /// Paged-KV evictions: sequences bounced back to the re-admission
+    /// queue because the arena could not grow mid-round.
+    pub preemptions: AtomicU64,
+    /// Token positions recomputed because of eviction: a prefilled
+    /// victim bills its whole context — prompt + generated so far — to
+    /// the re-prefill on re-admission; one evicted before its prefill
+    /// ever ran bills nothing. The honest price of thrashing.
+    pub reprefill_tokens: AtomicU64,
     ttft: Mutex<Histogram>,
     decode_step: Mutex<Histogram>,
     e2e: Mutex<Histogram>,
@@ -34,6 +42,8 @@ impl Default for Metrics {
             tokens_generated: AtomicU64::new(0),
             prefill_tokens: AtomicU64::new(0),
             rounds_executed: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            reprefill_tokens: AtomicU64::new(0),
             // 100 µs .. ~100 s exponential buckets.
             ttft: Mutex::new(Histogram::exponential(1e-4, 1.6, 32)),
             decode_step: Mutex::new(Histogram::exponential(1e-5, 1.6, 32)),
@@ -60,6 +70,24 @@ impl Metrics {
 
     pub fn record_decode_step(&self, s: f64) {
         self.decode_step.lock().unwrap().record(s);
+    }
+
+    /// Record one eviction and the context it will have to re-prefill.
+    pub fn record_preemption(&self, reprefill_tokens: usize) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+        self.reprefill_tokens.fetch_add(reprefill_tokens as u64, Ordering::Relaxed);
+    }
+
+    /// Mean generated tokens per completed request — the signal
+    /// expected-footprint admission gates on
+    /// ([`crate::serving::AdmissionPolicy::Expected`]). `None` until the
+    /// first completion lands (cold start admits by worst case).
+    pub fn mean_gen_tokens(&self) -> Option<f64> {
+        let completed = self.requests_completed.load(Ordering::Relaxed);
+        if completed == 0 {
+            return None;
+        }
+        Some(self.tokens_generated.load(Ordering::Relaxed) as f64 / completed as f64)
     }
 
     /// Record one executed round: decode-batch occupancy and generated
@@ -108,7 +136,8 @@ impl Metrics {
         format!(
             "requests: {} submitted, {} completed | tokens: {} prefill, {} generated\n\
              ttft p50 {:.1} ms, p95 {:.1} ms | decode step p50 {:.2} ms, p95 {:.2} ms | e2e mean {:.1} ms\n\
-             rounds: {} | batch occupancy mean {:.2}, p50 {:.0}, max {:.0} | tokens/round mean {:.2}",
+             rounds: {} | batch occupancy mean {:.2}, p50 {:.0}, max {:.0} | tokens/round mean {:.2}\n\
+             preemptions: {} | re-prefill tokens: {}",
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.prefill_tokens.load(Ordering::Relaxed),
@@ -123,6 +152,8 @@ impl Metrics {
             occ_p50,
             occ_max,
             self.tokens_per_round_mean(),
+            self.preemptions.load(Ordering::Relaxed),
+            self.reprefill_tokens.load(Ordering::Relaxed),
         )
     }
 }
@@ -145,6 +176,20 @@ mod tests {
         let (p50, p95) = m.decode_step_p50_p95();
         assert!(p50 > 0.0 && p95 >= p50);
         assert!(m.report().contains("requests: 2 submitted"));
+    }
+
+    #[test]
+    fn preemption_and_mean_gen_tracked() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_gen_tokens(), None, "no completions: no expectation");
+        m.record_completion(64, 10, 0.05, 0.5);
+        m.record_completion(64, 20, 0.05, 0.5);
+        assert_eq!(m.mean_gen_tokens(), Some(15.0));
+        m.record_preemption(72);
+        m.record_preemption(40);
+        assert_eq!(m.preemptions.load(Ordering::Relaxed), 2);
+        assert_eq!(m.reprefill_tokens.load(Ordering::Relaxed), 112);
+        assert!(m.report().contains("preemptions: 2"));
     }
 
     #[test]

@@ -5,23 +5,30 @@
 //! coordinator a deployment wraps around it (the vLLM-router shape):
 //!
 //! * [`request`] — request/response types with per-stage timing.
+//! * [`admission`] — KV admission policy: worst-case (lifetime) vs
+//!   **expected-footprint** gating (mean generation length × safety
+//!   margin), the knob that converts internal fragmentation into batch
+//!   occupancy.
 //! * [`scheduler`] — a **round-based** continuous-batching scheduler:
 //!   each round packs *all* runnable decodes into one batch (weights
 //!   stream once per round) plus a capped number of prefills,
 //!   decode-first to protect inter-token latency — mirroring §3.7's
 //!   prefill/decode split at the serving level.
 //! * [`server`] — a thread-based engine that owns the PJRT runtime, a
-//!   shared KV arena ([`crate::kv::KvArena`]) with backpressure-gated
-//!   admission, and serves a channel of requests (no Python, no async
-//!   runtime).
+//!   shared **paged** KV arena ([`crate::kv::KvArena`]: prompt-only
+//!   claims, on-demand block growth, preemption on exhaustion) with
+//!   backpressure-gated admission, and serves a channel of requests (no
+//!   Python, no async runtime).
 //! * [`metrics`] — TTFT / latency / throughput / batch-occupancy
 //!   accounting.
 
+pub mod admission;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod metrics;
 
+pub use admission::AdmissionPolicy;
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use scheduler::{Round, Scheduler, SchedulerConfig, SeqState};
 pub use server::{ServerStats, ServingEngine};

@@ -5,11 +5,20 @@
 //! Each iteration of the worker loop executes one scheduling **round**:
 //! the decode batch first (one step for every active sequence — weights
 //! stream once per round on the simulated GPU), then up to
-//! `max_prefills_per_round` prefills. Admission is gated by the KV
-//! arena: a request whose reservation does not fit is *deferred* (stays
-//! queued), never failed.
+//! `max_prefills_per_round` prefills.
+//!
+//! KV is **paged**: admission claims only the context that must prefill
+//! now (the prompt, or prompt + generated for a re-admitted sequence),
+//! gated by the *expected* footprint
+//! ([`AdmissionPolicy`]), and each decode step grows the reservation
+//! block-by-block ([`KvArena::ensure`]). A request whose expected
+//! footprint does not fit is *deferred* (stays queued), never failed;
+//! genuine exhaustion mid-round **preempts** a victim (lowest-progress,
+//! youngest, never the FIFO head) back to the re-admission queue, where
+//! it re-prefills its whole context on re-admission — recompute
+//! semantics, so eviction costs latency, never tokens.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -19,6 +28,7 @@ use crate::error::{DriftError, Result};
 use crate::kv::{KvArena, KvArenaConfig, KvSeqHandle};
 use crate::runtime::tinylm::{RoundStep, TinyLmRuntime};
 use crate::runtime::Runtime;
+use crate::serving::admission::AdmissionPolicy;
 use crate::serving::metrics::Metrics;
 use crate::serving::request::{InferenceRequest, InferenceResponse, RequestId};
 use crate::serving::scheduler::{Scheduler, SchedulerConfig};
@@ -60,6 +70,77 @@ struct SeqRuntime {
     error: Option<String>,
 }
 
+/// Reply channel + the timing a sequence has accumulated while it is
+/// *not* running: before its first prefill, and parked across
+/// preemptions (eviction drops the `SeqRuntime` — its KV state is
+/// recomputed — but the caller's channel and the seconds already spent
+/// must survive).
+struct PendingReply {
+    reply: Sender<InferenceResponse>,
+    prefill_s: f64,
+    decode_s: f64,
+    ttft_s: Option<f64>,
+    /// Queue wait before the *first* prefill started — preserved across
+    /// evictions (recomputing it from arrival would double-count the
+    /// time the sequence already spent running).
+    queue_s: Option<f64>,
+    error: Option<String>,
+}
+
+impl SeqRuntime {
+    /// Park a live runtime across an eviction: the KV state is dropped
+    /// (recomputed by the re-prefill), everything the final response
+    /// needs survives. The single inverse of [`PendingReply::resume`] —
+    /// add a carried field in both places or it silently zeroes.
+    fn park(self) -> PendingReply {
+        PendingReply {
+            reply: self.reply,
+            prefill_s: self.prefill_s,
+            decode_s: self.decode_s,
+            ttft_s: self.ttft_s,
+            queue_s: Some(self.queue_s),
+            error: self.error,
+        }
+    }
+}
+
+impl PendingReply {
+    fn new(reply: Sender<InferenceResponse>) -> Self {
+        PendingReply {
+            reply,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            ttft_s: None,
+            queue_s: None,
+            error: None,
+        }
+    }
+
+    /// Resume into a live runtime after a successful (re-)prefill,
+    /// folding the newly spent prefill seconds into the carried total
+    /// and keeping the first-prefill queue wait.
+    fn resume(
+        self,
+        kv: crate::runtime::tinylm::KvState,
+        next_token: i32,
+        prefill_s: f64,
+        started: Instant,
+        queue_now_s: f64,
+    ) -> SeqRuntime {
+        SeqRuntime {
+            kv,
+            next_token,
+            prefill_s: self.prefill_s + prefill_s,
+            decode_s: self.decode_s,
+            ttft_s: self.ttft_s,
+            started,
+            queue_s: self.queue_s.unwrap_or(queue_now_s),
+            reply: self.reply,
+            error: self.error,
+        }
+    }
+}
+
 /// A thread-based serving engine over the TinyLM PJRT runtime.
 pub struct ServingEngine {
     tx: Sender<Msg>,
@@ -68,10 +149,21 @@ pub struct ServingEngine {
 }
 
 impl ServingEngine {
-    /// Start the engine: spawns the worker, which loads the artifacts
-    /// (PJRT handles are not `Send`, so the worker thread owns the whole
+    /// Start the engine with the default expected-footprint admission
+    /// policy. Spawns the worker, which loads the artifacts (PJRT
+    /// handles are not `Send`, so the worker thread owns the whole
     /// runtime; the constructor blocks until loading succeeds or fails).
     pub fn start(artifacts_dir: &str, sched_cfg: SchedulerConfig) -> Result<ServingEngine> {
+        Self::start_with_policy(artifacts_dir, sched_cfg, AdmissionPolicy::default())
+    }
+
+    /// Start the engine with an explicit KV admission policy
+    /// ([`AdmissionPolicy::WorstCase`] restores the PR-1 lifetime gate).
+    pub fn start_with_policy(
+        artifacts_dir: &str,
+        sched_cfg: SchedulerConfig,
+        policy: AdmissionPolicy,
+    ) -> Result<ServingEngine> {
         let metrics = Arc::new(Metrics::default());
         let m2 = Arc::clone(&metrics);
         let (tx, rx) = channel();
@@ -90,7 +182,7 @@ impl ServingEngine {
                         return;
                     }
                 };
-                worker_loop(model, sched_cfg, rx, m2)
+                worker_loop(model, sched_cfg, policy, rx, m2)
             })
             .map_err(|e| DriftError::Serving(format!("spawn worker: {e}")))?;
         ready_rx
@@ -139,29 +231,31 @@ impl Drop for ServingEngine {
 fn worker_loop(
     model: TinyLmRuntime,
     sched_cfg: SchedulerConfig,
+    policy: AdmissionPolicy,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
 ) {
     let mut sched = Scheduler::new(sched_cfg);
-    // One shared arena sized for `max_active` full-capacity sequences
-    // (per-sequence reservations are block-rounded, so size in blocks,
-    // not tokens): with whole-lifetime reservations this makes the slot
-    // count the binding constraint and the arena a safety net; shrinking
-    // the arena below `max_active` full reservations (or moving to
-    // expected-footprint admission, see ROADMAP) is what would make KV
-    // backpressure the contended resource in production.
+    // Default arena: `max_active` full-capacity sequences (per-sequence
+    // reservations are block-rounded, so size in blocks, not tokens) —
+    // generous, so even worst-case growth (every sequence hitting its
+    // `cache_capacity` ceiling) stays preemption-free and the arena is a
+    // safety net. `kv_arena_blocks` fixes the budget instead: KV becomes
+    // the contended resource and the preemption path below takes over.
     let m = &model.manifest;
     let mut arena = KvArena::new(KvArenaConfig {
         layers: m.layers,
         heads_kv: m.heads_kv,
         head_dim: m.head_dim,
         block_tokens: KV_BLOCK_TOKENS,
-        num_blocks: sched_cfg.max_active.max(1)
-            * crate::util::div_ceil(m.cache_capacity.max(1), KV_BLOCK_TOKENS),
+        num_blocks: sched_cfg.kv_arena_blocks.unwrap_or_else(|| {
+            sched_cfg.max_active.max(1)
+                * crate::util::div_ceil(m.cache_capacity.max(1), KV_BLOCK_TOKENS)
+        }),
     });
     let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
     let mut handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
-    let mut replies: HashMap<RequestId, Sender<InferenceResponse>> = HashMap::new();
+    let mut replies: HashMap<RequestId, PendingReply> = HashMap::new();
     let mut shutdown = false;
 
     while !shutdown || !sched.is_idle() {
@@ -185,29 +279,32 @@ fn worker_loop(
                 Msg::Request(req, reply) => {
                     // Per-sequence ceiling: the decode artifact scatters
                     // K/V rows at `pos`, so a sequence must never outgrow
-                    // the model's cache capacity (the arena bounds the
-                    // *sum* across sequences, not any one of them).
+                    // the model's cache capacity — nor the whole arena,
+                    // when `kv_arena_blocks` shrank it below one
+                    // full-capacity sequence (admission defers on
+                    // backpressure, so a request that could NEVER fit
+                    // must fail here or it would wedge the queue).
                     let tokens = req.prompt.len() + req.max_new_tokens;
-                    if tokens > model.manifest.cache_capacity {
+                    let cap = model.manifest.cache_capacity.min(arena.config().total_tokens());
+                    if tokens > cap {
                         let msg = format!(
-                            "prompt + max_new_tokens = {tokens} exceeds cache capacity {}",
-                            model.manifest.cache_capacity
+                            "prompt + max_new_tokens = {tokens} exceeds per-sequence capacity {cap}"
                         );
                         crate::log_error!("request {} rejected: {msg}", req.id);
                         let _ = reply.send(rejection(&req, msg));
                         continue;
                     }
                     // Ids key every per-sequence map (replies before
-                    // prefill, handles from admission to reap): a
-                    // duplicate in-flight id would cross-wire two
-                    // sequences and leak the first one's arena blocks.
+                    // prefill and while parked, handles from admission to
+                    // reap): a duplicate in-flight id would cross-wire
+                    // two sequences and leak the first one's arena blocks.
                     if replies.contains_key(&req.id) || handles.contains_key(&req.id) {
                         let msg = format!("request id {} is already in flight", req.id);
                         crate::log_error!("request rejected: {msg}");
                         let _ = reply.send(rejection(&req, msg));
                         continue;
                     }
-                    replies.insert(req.id, reply);
+                    replies.insert(req.id, PendingReply::new(reply));
                     sched.submit(req);
                 }
                 Msg::Shutdown => {
@@ -220,29 +317,64 @@ fn worker_loop(
             continue;
         }
 
-        // Admission, gated by the arena (overflow → defer, i.e. the
-        // request stays at the queue head until blocks free up).
-        sched.admit_where(|req| {
-            let tokens = req.prompt.len() + req.max_new_tokens;
-            match arena.claim(tokens) {
-                Ok(h) => {
+        // Admission: gate on the *expected* footprint (mean generation
+        // length with a safety margin; worst case until history exists),
+        // claim only the context that prefill must cover now. A gate or
+        // claim miss defers the request — backpressure, never failure.
+        let mean_gen = metrics.mean_gen_tokens();
+        sched.admit_where(|req, ctx_tokens| {
+            match policy.admit(&mut arena, req, ctx_tokens, mean_gen) {
+                Some(h) => {
                     handles.insert(req.id, h);
                     true
                 }
-                Err(_) => false,
+                None => false,
             }
         });
-        // (Every queued request fits an empty arena: enqueue rejects
-        // anything over `cache_capacity`, and the arena holds `max_active`
-        // full-capacity reservations — so deferral can never wedge.)
+        // (Deferral can never wedge: enqueue rejects anything over the
+        // per-sequence capacity — `cache_capacity` capped to the arena —
+        // so every queued request's worst-case footprint fits an empty
+        // arena, and the FIFO head can always run to completion.)
 
         let round = sched.next_round();
+
+        // ---- paged growth + preemption (before any state advances) ------
+        // Every decode step scatters one KV row, so reservations must
+        // cover it *before* the scheduler emits anything. Sequences
+        // emitting their final token run no step and need no row.
+        // `ensure_round_capacity` evicts victims when the arena cannot
+        // grow; the callback parks the victim's reply channel and timing
+        // (its KV state is recomputed on re-admission). Held-out
+        // sequences sit out the whole round — they lose time, never
+        // tokens.
+        let needs_row: Vec<RequestId> = round
+            .decode_batch
+            .iter()
+            .copied()
+            .filter(|&id| {
+                let seq = sched.seq(id).expect("scheduled seq exists");
+                seq.generated.len() + 1 < seq.request.max_new_tokens
+            })
+            .collect();
+        let held_out: HashSet<RequestId> =
+            sched.ensure_round_capacity(&mut arena, &mut handles, &needs_row, |victim, bill| {
+                if let Some(srt) = runtimes.remove(&victim) {
+                    replies.insert(victim, srt.park());
+                }
+                metrics.record_preemption(bill);
+                crate::log_warn!(
+                    "kv arena exhausted: preempted request {victim} (re-prefill {bill} tokens)"
+                );
+            });
 
         // ---- decode batch first (latency protection) --------------------
         // Advance scheduler state and collect per-sequence step inputs.
         let mut round_tokens = 0usize;
         let mut inputs: HashMap<RequestId, (i32, usize)> = HashMap::new();
         for &id in &round.decode_batch {
+            if held_out.contains(&id) {
+                continue;
+            }
             if let Some(srt) = runtimes.get_mut(&id) {
                 let token = srt.next_token;
                 let seq = sched.seq_mut(id).expect("scheduled seq exists");
@@ -285,6 +417,8 @@ fn worker_loop(
                     srt.decode_s += out.step_s;
                     metrics.record_decode_step(out.step_s);
                     srt.next_token = argmax(&out.logits) as i32;
+                    // Capacity was ensured before the round, so this
+                    // bookkeeping append cannot overflow.
                     if let Err(e) = arena.append(handles[&id], 1) {
                         crate::log_error!("kv arena append for request {id}: {e}");
                     }
@@ -307,40 +441,44 @@ fn worker_loop(
 
         // ---- prefills ---------------------------------------------------
         for &id in &round.prefills {
+            if held_out.contains(&id) {
+                // Evicted this round before its prefill ran (a fresh,
+                // zero-progress admission is the preferred victim): it is
+                // back in the preempted queue, not active — skip it.
+                continue;
+            }
             let seq = sched.seq_mut(id).expect("scheduled seq exists");
             let queue_s = seq.request.arrival.elapsed().as_secs_f64();
+            // Re-prefill after a preemption covers prompt + generated:
+            // recompute rebuilds the evicted KV rows, and the logits over
+            // this context reproduce the pending next token exactly.
+            let ctx: Vec<i32> =
+                seq.request.prompt.iter().chain(seq.generated.iter()).copied().collect();
             let t = Instant::now();
-            match model.prefill(&seq.request.prompt) {
+            match model.prefill(&ctx) {
                 Ok((logits, kv)) => {
                     let prefill_s = t.elapsed().as_secs_f64();
                     seq.prefill_done = true;
-                    let prompt_len = seq.request.prompt.len();
                     let next = argmax(&logits) as i32;
-                    let reply = replies.remove(&id).expect("reply channel");
-                    if let Err(e) = arena.append(handles[&id], prompt_len) {
+                    let pending = replies.remove(&id).expect("pending reply");
+                    if let Err(e) = arena.append(handles[&id], ctx.len()) {
                         crate::log_error!("kv arena append for request {id}: {e}");
                     }
-                    runtimes.insert(
-                        id,
-                        SeqRuntime {
-                            kv,
-                            next_token: next,
-                            prefill_s,
-                            decode_s: 0.0,
-                            ttft_s: None,
-                            started: seq.request.arrival,
-                            queue_s,
-                            reply,
-                            error: None,
-                        },
-                    );
+                    let arrival = seq.request.arrival;
+                    runtimes.insert(id, pending.resume(kv, next, prefill_s, arrival, queue_s));
                 }
                 Err(e) => {
+                    // Finish the sequence with whatever it already has:
+                    // for a fresh request that's an empty error response,
+                    // but a re-prefill failure after preemption must not
+                    // discard the tokens generated before eviction (the
+                    // reap fallback below replies with `done.generated`
+                    // plus the parked timings and this error).
                     crate::log_error!("prefill failed for request {id}: {e}");
                     seq.prefill_done = true;
-                    seq.request.max_new_tokens = 0; // finish immediately
-                    if let Some(reply) = replies.remove(&id) {
-                        let _ = reply.send(rejection(&seq.request, format!("prefill failed: {e}")));
+                    seq.request.max_new_tokens = seq.generated.len(); // finish now
+                    if let Some(pending) = replies.get_mut(&id) {
+                        pending.error.get_or_insert(format!("prefill failed: {e}"));
                     }
                 }
             }
@@ -372,22 +510,36 @@ fn worker_loop(
                     total_s,
                     error: srt.error,
                 });
-            } else if let Some(reply) = replies.remove(&id) {
-                // Defense in depth: a sequence reaped without a runtime
-                // whose reply wasn't already answered (today that's
-                // impossible — prefill failures respond inline — but a
-                // caller must never hang on a dropped channel).
+            } else if let Some(pending) = replies.remove(&id) {
+                // A sequence reaped without a runtime: its (re-)prefill
+                // failed, or it never ran at all. Reply with whatever it
+                // accumulated — tokens generated before an eviction, the
+                // parked timings, and the recorded error — so a caller
+                // never hangs on a dropped channel and never loses
+                // delivered work. Failed requests stay OUT of the
+                // completion metrics: counting their zero-length
+                // generations would drag `mean_gen_tokens` down and make
+                // expected-footprint admission over-admit, and their
+                // wall-clock wait would pollute the TTFT/e2e histograms.
                 let waited = done.request.arrival.elapsed().as_secs_f64();
-                metrics.record_completion(0, done.generated.len(), waited, waited);
-                let _ = reply.send(InferenceResponse {
+                if pending.error.is_none() {
+                    let ttft = pending.ttft_s.unwrap_or(waited);
+                    metrics.record_completion(
+                        done.request.prompt.len(),
+                        done.generated.len(),
+                        ttft,
+                        waited,
+                    );
+                }
+                let _ = pending.reply.send(InferenceResponse {
                     id,
                     tokens: done.generated,
-                    queue_s: waited,
-                    prefill_s: 0.0,
-                    decode_s: 0.0,
-                    ttft_s: waited,
+                    queue_s: pending.queue_s.unwrap_or(waited),
+                    prefill_s: pending.prefill_s,
+                    decode_s: pending.decode_s,
+                    ttft_s: pending.ttft_s.unwrap_or(waited),
                     total_s: waited,
-                    error: None,
+                    error: pending.error,
                 });
             }
         }

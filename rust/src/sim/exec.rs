@@ -161,6 +161,18 @@ pub fn simulate_batched(plan: &ExecutionPlan, batch: usize) -> SimReport {
     r
 }
 
+/// Time to (re-)prefill a context of `tokens` positions, given a prefill
+/// plan compiled at `plan_tokens`. Prefill is compute-bound and its
+/// matmul work is linear in sequence length at fixed model/hardware, so
+/// the plan's simulated time scales by `tokens / plan_tokens` — the
+/// approximation the serving simulator uses to charge **preemption
+/// re-prefills** (an evicted sequence recomputes its whole context on
+/// re-admission; pricing that recompute is what keeps the simulator
+/// honest about thrashing).
+pub fn prefill_time_s(plan: &ExecutionPlan, plan_tokens: usize, tokens: usize) -> f64 {
+    simulate(plan).total_s * tokens as f64 / plan_tokens.max(1) as f64
+}
+
 /// Convenience: plan + simulate.
 pub fn simulate_graph(
     g: &Graph,

@@ -19,6 +19,10 @@
 
 pub mod cost;
 pub mod exec;
+pub mod serving;
 
 pub use cost::{kernel_cost, KernelCost};
 pub use exec::{simulate_batched, simulate_graph, ExecutionPlan, PlannedKernel, SimReport};
+pub use serving::{
+    simulate_serving, KvReservation, ServingSimConfig, ServingSimReport, SimRequest,
+};

@@ -1,6 +1,6 @@
 //! Serving-layer integration: the thread-based engine over real PJRT.
 
-use mldrift::serving::{InferenceRequest, SchedulerConfig, ServingEngine};
+use mldrift::serving::{AdmissionPolicy, InferenceRequest, SchedulerConfig, ServingEngine};
 
 fn artifacts_dir() -> Option<String> {
     let dir = std::env::var("MLDRIFT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
@@ -29,7 +29,7 @@ fn serves_concurrent_requests_with_batching() {
     let Some(dir) = artifacts_dir() else { return };
     let engine = ServingEngine::start(
         &dir,
-        SchedulerConfig { max_active: 3, max_prefills_per_round: 1 },
+        SchedulerConfig { max_active: 3, max_prefills_per_round: 1, ..Default::default() },
     )
     .unwrap();
     // Submit 6 requests at once; the continuous batcher interleaves them.
@@ -57,7 +57,7 @@ fn identical_prompts_get_identical_tokens_under_load() {
     let Some(dir) = artifacts_dir() else { return };
     let engine = ServingEngine::start(
         &dir,
-        SchedulerConfig { max_active: 4, max_prefills_per_round: 2 },
+        SchedulerConfig { max_active: 4, max_prefills_per_round: 2, ..Default::default() },
     )
     .unwrap();
     let prompt: Vec<i32> = (1..=16).collect();
@@ -68,4 +68,41 @@ fn identical_prompts_get_identical_tokens_under_load() {
     for o in &outs[1..] {
         assert_eq!(o, &outs[0], "KV isolation: interleaved sequences must not interfere");
     }
+}
+
+#[test]
+fn preemption_under_tiny_arena_loses_no_tokens() {
+    // Shrink the KV arena below the burst's total footprint (3 blocks =
+    // 48 tokens vs 3 sequences × 32): growth exhausts the arena, the
+    // engine must evict and re-prefill, and — since eviction is
+    // recompute, not truncation — every request still gets its full,
+    // deterministic generation.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = ServingEngine::start_with_policy(
+        &dir,
+        SchedulerConfig {
+            max_active: 3,
+            max_prefills_per_round: 3,
+            kv_arena_blocks: Some(3),
+            ..Default::default()
+        },
+        AdmissionPolicy::Expected { safety_margin: 1.0 },
+    )
+    .unwrap();
+    let prompt: Vec<i32> = (1..=16).collect();
+    let rxs: Vec<_> = (0..3)
+        .map(|i| engine.submit(InferenceRequest::new(i, prompt.clone(), 16)).unwrap())
+        .collect();
+    let outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    for o in &outs {
+        assert!(o.error.is_none(), "eviction must not fail requests: {:?}", o.error);
+        assert_eq!(o.tokens.len(), 16, "eviction must cost time, never tokens");
+    }
+    for o in &outs[1..] {
+        assert_eq!(o.tokens, outs[0].tokens, "recompute preemption preserves determinism");
+    }
+    let preemptions = engine.metrics.preemptions.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(preemptions > 0, "a 3-block arena under this burst must have evicted");
+    let reprefill = engine.metrics.reprefill_tokens.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(reprefill > 0, "evicted prefilled sequences must bill recompute");
 }
