@@ -20,9 +20,10 @@ fmt:
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../artifacts
 
-# Batched-serving decode-throughput + fixed-memory KV sweep (simulated).
-# Writes rust/BENCH_batched.json so the perf trajectory is tracked
-# across PRs.
+# Batched-serving decode-throughput + fixed-memory and device-memory KV
+# sweeps (simulated). Writes BENCH_batched.json at the repo root (the
+# trajectory file the harness tracks across PRs) and mirrors it to the
+# legacy rust/BENCH_batched.json path.
 bench: bench-batched
 
 bench-batched:

@@ -15,8 +15,14 @@
 //! tokens/s, preemption/re-prefill counts, and peak internal
 //! fragmentation — the memory the lifetime discipline strands.
 //!
-//! Writes every number to `BENCH_batched.json` (machine-readable, one
-//! file per run) so the perf trajectory is tracked across PRs.
+//! Part 3 — device-memory sweep. The same runs, read for *memory*
+//! instead of throughput: peak device bytes the paged block region
+//! commits vs what the pre-paging dense runtime would have resident
+//! (peak concurrent sequences × one full-capacity §3.8 tensor pair).
+//!
+//! Writes every number to `BENCH_batched.json` at the **repo root** (the
+//! trajectory file the harness tracks across PRs) and mirrors it to the
+//! legacy `rust/BENCH_batched.json` path.
 //!
 //! ```sh
 //! make bench   # = cargo bench --bench bench_batched_serving
@@ -30,11 +36,15 @@ use mldrift::kv::KvArenaConfig;
 use mldrift::models::llm_config;
 use mldrift::quant::QuantScheme;
 use mldrift::serving::{AdmissionPolicy, SchedulerConfig};
-use mldrift::sim::{simulate_serving, KvReservation, ServingSimConfig, SimRequest};
+use mldrift::sim::{
+    simulate_serving, GenLenEstimator, KvReservation, ServingSimConfig, SimRequest,
+};
 use mldrift::util::json::Json;
 
 const BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
-const OUT_PATH: &str = "BENCH_batched.json";
+/// The repo-root trajectory file (cargo runs benches from `rust/`, so
+/// `..` is the repo root) plus the legacy in-crate mirror.
+const OUT_PATHS: [&str; 2] = ["../BENCH_batched.json", "BENCH_batched.json"];
 
 fn main() {
     let opts = CompileOptions::default();
@@ -84,18 +94,31 @@ fn main() {
     // ---- Part 2: fixed-memory occupancy sweep (Adreno 750) --------------
     // Long budgets (192) + short actual generations (16): the workload
     // where lifetime reservation strands ~2/3 of every claim.
+    // One plan context for parts 2 and 3 — the dense-residency baseline
+    // below must describe the same cache capacity the plans are built at.
+    const PREFILL_LEN: usize = 1024;
+    const GEN_LEN: usize = 256;
     let cfg = llm_config("gemma2_2b").unwrap();
     let dev = device("adreno_750").unwrap();
-    let p = simulate_llm(&cfg, &dev, QuantScheme::Mixed844, 1024, 256, &opts).unwrap();
+    let p = simulate_llm(&cfg, &dev, QuantScheme::Mixed844, PREFILL_LEN, GEN_LEN, &opts).unwrap();
     let workload =
         vec![SimRequest { prompt_tokens: 64, max_new_tokens: 192, actual_new_tokens: 16 }; 32];
     let mut json_fixed = Vec::new();
+    let mut json_devmem = Vec::new();
     let mut t = Table::new(
         "gemma2_2b on Adreno 750 — fixed arena, lifetime vs paged KV (32 reqs, \
          prompt 64, budget 192, actual 16)",
         &["arena blocks", "policy", "occ mean", "occ peak", "tok/s", "preempt", "re-prefill tok",
           "peak frag MB"],
     );
+    let mut dm = Table::new(
+        "gemma2_2b on Adreno 750 — device-memory sweep: paged block region vs \
+         dense per-sequence KV residency (same runs)",
+        &["arena blocks", "policy", "peak seqs", "paged peak MB", "dense-equiv MB", "saving"],
+    );
+    // Dense baseline: the pre-paging runtime held one full-capacity
+    // §3.8 tensor pair per live sequence, at the plans' cache capacity.
+    let dense_bytes_per_seq = cfg.kv_bytes_per_token() * (PREFILL_LEN + GEN_LEN);
     let mut occupancy_at_48 = (0.0f64, 0.0f64); // (lifetime, paged)
     for arena_blocks in [32usize, 48, 64, 96] {
         for (name, reservation) in [
@@ -122,7 +145,8 @@ fn main() {
                 },
                 reservation,
                 sync_s: 150e-6,
-                prefill_plan_tokens: 1024,
+                prefill_plan_tokens: PREFILL_LEN,
+                estimator: GenLenEstimator::Blended,
             };
             let rep = simulate_serving(&p.decode.plan, &p.prefill.plan, &sim_cfg, &workload);
             assert_eq!(
@@ -158,9 +182,31 @@ fn main() {
                 ("peak_fragmentation_bytes", rep.peak_fragmentation_bytes.into()),
                 ("rounds", rep.rounds.into()),
             ]));
+            // Part 3: the same run read for device memory. The dense
+            // equivalent is what per-sequence full-capacity tensors would
+            // have held resident at the run's peak concurrency.
+            let dense_equiv = rep.peak_seqs * dense_bytes_per_seq;
+            dm.row(&[
+                arena_blocks.to_string(),
+                name.to_string(),
+                rep.peak_seqs.to_string(),
+                format!("{:.2}", rep.peak_device_bytes as f64 / 1e6),
+                format!("{:.2}", dense_equiv as f64 / 1e6),
+                format!("{:.1}×", dense_equiv as f64 / rep.peak_device_bytes.max(1) as f64),
+            ]);
+            json_devmem.push(Json::obj(vec![
+                ("arena_blocks", arena_blocks.into()),
+                ("policy", name.into()),
+                ("peak_seqs", rep.peak_seqs.into()),
+                ("peak_device_bytes", rep.peak_device_bytes.into()),
+                ("dense_equiv_bytes", dense_equiv.into()),
+                ("gather_s", rep.gather_s.into()),
+            ]));
         }
     }
     t.print();
+    println!();
+    dm.print();
     println!();
 
     // Sanity gates (the acceptance bars this bench exists to demonstrate):
@@ -189,9 +235,13 @@ fn main() {
     let doc = Json::obj(vec![
         ("model_sweep", Json::Arr(json_batch)),
         ("fixed_memory_adreno_750", Json::Arr(json_fixed)),
+        ("device_memory_sweep_adreno_750", Json::Arr(json_devmem)),
     ]);
-    match std::fs::write(OUT_PATH, doc.pretty() + "\n") {
-        Ok(()) => println!("wrote {OUT_PATH}"),
-        Err(e) => eprintln!("WARN: could not write {OUT_PATH}: {e}"),
+    let text = doc.pretty() + "\n";
+    for path in OUT_PATHS {
+        match std::fs::write(path, &text) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("WARN: could not write {path}: {e}"),
+        }
     }
 }

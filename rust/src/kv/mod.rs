@@ -38,6 +38,30 @@ use crate::memory::plan::ALIGN;
 use crate::tensor::WeightShape;
 use crate::util::{align_up, div_ceil};
 
+pub mod region;
+
+pub use region::{KvRegion, PagedKvStore};
+
+/// The reservation operations the serving policy code (admission gating,
+/// the scheduler's growth/preemption loop) needs from a KV backing.
+/// Implemented by the accounting-only [`KvArena`] (the serving simulator)
+/// and by the device-backed [`PagedKvStore`] (the engine), so both run
+/// the *identical* policy code — the simulator can never drift from the
+/// runtime on admission or eviction behaviour.
+pub trait KvPool {
+    /// Would a reservation of `tokens` positions succeed right now?
+    fn can_claim(&self, tokens: usize) -> bool;
+    /// Reserve capacity for a sequence of up to `tokens` positions.
+    fn claim(&mut self, tokens: usize) -> Result<KvSeqHandle>;
+    /// Make sure the next `n` appends fit, growing the reservation on
+    /// shortfall. Returns blocks newly allocated.
+    fn ensure(&mut self, h: KvSeqHandle, n: usize) -> Result<usize>;
+    /// Release a sequence's blocks. Returns the **device bytes** freed
+    /// (0 for stale handles) — the quantity the preemption watermark
+    /// assertions are built on.
+    fn release(&mut self, h: KvSeqHandle) -> usize;
+}
+
 /// The §3.8 cache layouts for one attention layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KvLayout {
@@ -159,6 +183,27 @@ impl KvArenaConfig {
 
     pub fn total_tokens(&self) -> usize {
         self.num_blocks * self.block_tokens
+    }
+
+    /// Host `f32` elements one token position occupies in the backing
+    /// region: a K row and a V row (`layers × heads_kv × head_dim` each).
+    /// The *device* footprint is fp16 ([`bytes_per_token`]
+    /// (Self::bytes_per_token)); the host mirror carries f32 because the
+    /// PJRT literals are f32.
+    pub fn floats_per_token(&self) -> usize {
+        2 * self.layers * self.heads_kv * self.head_dim
+    }
+
+    /// Host `f32` elements per block in the backing region.
+    pub fn block_floats(&self) -> usize {
+        self.block_tokens * self.floats_per_token()
+    }
+
+    /// Device byte offset of a block inside the contiguous region.
+    /// `block_bytes()` is `ALIGN`-rounded, so every offset this returns
+    /// is §3.5-legal by construction.
+    pub fn block_offset_bytes(&self, block: usize) -> usize {
+        block * self.block_bytes()
     }
 }
 
@@ -417,22 +462,47 @@ impl KvArena {
         self.seqs.get(h.slot).and_then(|s| s.as_ref()).map_or(0, |e| e.len)
     }
 
+    /// A sequence's **block table**: the arena block ids backing it, in
+    /// token-position order (position `p` lives in
+    /// `table[p / block_tokens]`). Multiplying an entry by
+    /// [`KvArenaConfig::block_bytes`] gives its byte offset in the
+    /// contiguous device region — this table is what the decode path
+    /// gathers K/V through ([`PagedKvStore`]), vLLM-style. Stale handles
+    /// are rejected, never resolved to the slot's new occupant.
+    pub fn block_table(&self, h: KvSeqHandle) -> Result<&[usize]> {
+        if self.gens.get(h.slot) != Some(&h.gen) {
+            return Err(DriftError::Serving(format!(
+                "stale kv arena handle (slot {}, gen {})",
+                h.slot, h.gen
+            )));
+        }
+        self.seqs
+            .get(h.slot)
+            .and_then(|s| s.as_ref())
+            .map(|e| e.blocks.as_slice())
+            .ok_or_else(|| DriftError::Serving(format!("kv arena slot {} not claimed", h.slot)))
+    }
+
     /// Release a sequence's blocks back to the free list. Stale or unknown
     /// handles are a no-op (the generation tag makes double-release on the
-    /// reap path safe even after the slot is reused).
-    pub fn release(&mut self, h: KvSeqHandle) {
+    /// reap path safe even after the slot is reused). Returns the device
+    /// bytes the reservation covered (0 for stale handles).
+    pub fn release(&mut self, h: KvSeqHandle) -> usize {
         if self.gens.get(h.slot) != Some(&h.gen) {
-            return; // stale handle: the slot now belongs to someone else
+            return 0; // stale handle: the slot now belongs to someone else
         }
         let entry = self.seqs.get_mut(h.slot).and_then(|s| s.take());
+        let mut freed_blocks = 0;
         if let Some(e) = entry {
             self.gens[h.slot] += 1; // invalidate outstanding copies of `h`
             for b in e.blocks {
                 debug_assert_eq!(self.owner[b], Some(h.slot), "block {b} owner mismatch");
                 self.owner[b] = None;
                 self.free.push(b);
+                freed_blocks += 1;
             }
         }
+        freed_blocks * self.cfg.block_bytes()
     }
 
     pub fn seq_count(&self) -> usize {
@@ -526,6 +596,24 @@ impl KvArena {
             return Err(DriftError::Memory("leaked block: neither free nor owned".into()));
         }
         Ok(())
+    }
+}
+
+impl KvPool for KvArena {
+    fn can_claim(&self, tokens: usize) -> bool {
+        KvArena::can_claim(self, tokens)
+    }
+
+    fn claim(&mut self, tokens: usize) -> Result<KvSeqHandle> {
+        KvArena::claim(self, tokens)
+    }
+
+    fn ensure(&mut self, h: KvSeqHandle, n: usize) -> Result<usize> {
+        KvArena::ensure(self, h, n)
+    }
+
+    fn release(&mut self, h: KvSeqHandle) -> usize {
+        KvArena::release(self, h)
     }
 }
 
@@ -800,6 +888,100 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn block_table_maps_positions_to_blocks_in_order() {
+        let mut a = small_arena(8); // blocks of 16 tokens
+        let h = a.claim(40).unwrap(); // 3 blocks
+        let table = a.block_table(h).unwrap().to_vec();
+        assert_eq!(table.len(), 3);
+        // Growth appends to the tail: positions keep their blocks.
+        a.grow(h, 16).unwrap();
+        let grown = a.block_table(h).unwrap();
+        assert_eq!(&grown[..3], &table[..], "growth must not move existing blocks");
+        assert_eq!(grown.len(), 4);
+        // Offsets are ALIGN-legal by construction.
+        for &b in grown {
+            assert_eq!(a.config().block_offset_bytes(b) % ALIGN, 0);
+        }
+    }
+
+    #[test]
+    fn stale_handle_block_table_is_rejected_not_aliased() {
+        // The stale-handle guarantee must cover block-table lookups too:
+        // a handle kept past release must never resolve to the block table
+        // of whichever sequence reused the slot (that would let a dead
+        // sequence's decode read/write a live sequence's KV bytes).
+        let mut a = small_arena(4);
+        let h1 = a.claim(16).unwrap();
+        a.release(h1);
+        let h2 = a.claim(32).unwrap(); // reuses slot 0, new generation
+        assert_ne!(h1, h2);
+        assert!(a.block_table(h1).is_err(), "stale block-table lookup rejected");
+        assert_eq!(a.block_table(h2).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn property_block_table_offsets_never_alias_across_live_sequences() {
+        // Satellite invariant: under random admit/grow/preempt(release)/
+        // release interleavings, the byte ranges
+        // `[offset, offset + block_bytes)` owned by live sequences are
+        // pairwise disjoint — no two sequences can ever gather or scatter
+        // through overlapping device memory.
+        check("kv block-table offsets stay disjoint", Config::cases(64), |rng| {
+            let mut a = small_arena(1 + rng.gen_range(20) as usize);
+            let block_bytes = a.config().block_bytes();
+            let mut live: Vec<KvSeqHandle> = Vec::new();
+            for _ in 0..96 {
+                match rng.gen_range(3) {
+                    0 => {
+                        let tokens = rng.gen_range(64) as usize;
+                        if a.can_claim(tokens) {
+                            live.push(a.claim(tokens).map_err(|e| e.to_string())?);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            let _ = a.grow(live[i], 1 + rng.gen_range(24) as usize);
+                        }
+                    }
+                    _ => {
+                        // Preemption and completion both end in release.
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            a.release(live.swap_remove(i));
+                        }
+                    }
+                }
+                let mut claimed_offsets = std::collections::HashSet::new();
+                for &h in &live {
+                    for &b in a.block_table(h).map_err(|e| e.to_string())? {
+                        let off = a.config().block_offset_bytes(b);
+                        if off % ALIGN != 0 {
+                            return Err(format!("offset {off} not ALIGN-legal"));
+                        }
+                        if !claimed_offsets.insert(off) {
+                            return Err(format!(
+                                "byte range [{off}, {}) aliased across live sequences",
+                                off + block_bytes
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn release_reports_freed_device_bytes() {
+        let mut a = small_arena(8);
+        let h = a.claim(40).unwrap(); // 3 blocks
+        let freed = a.release(h);
+        assert_eq!(freed, 3 * a.config().block_bytes());
+        assert_eq!(a.release(h), 0, "stale release frees nothing");
     }
 
     #[test]

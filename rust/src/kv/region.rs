@@ -1,0 +1,602 @@
+//! Device-resident backing for the paged KV arena (§3.5 + §3.8).
+//!
+//! PR 2's [`KvArena`] was *accounting only*: it tracked block ownership
+//! while the runtime's per-sequence caches stayed dense tensors, so
+//! preemption freed bookkeeping blocks but not one byte of real memory.
+//! This module closes that gap, vLLM-style: the block→buffer mapping
+//! lives in the tensor storage itself.
+//!
+//! * [`KvRegion`] is **one contiguous region** carved into
+//!   `num_blocks × block_bytes` slices on `ALIGN`-legal offsets
+//!   ([`KvArenaConfig::block_offset_bytes`]). Every K/V row a sequence
+//!   owns lives inside its blocks; there are no per-sequence dense
+//!   tensors anywhere in the serving path. The region tracks a
+//!   **device-bytes-in-use watermark** that rises when blocks commit and
+//!   falls when they release — so eviction is assertably real memory,
+//!   not a counter.
+//! * [`PagedKvStore`] couples the region to a [`KvArena`]: every
+//!   claim/grow commits the newly allocated blocks, every release scrubs
+//!   and decommits them. It implements [`KvPool`], so the scheduler's
+//!   growth/preemption loop and the admission policy run the *same* code
+//!   over the simulator's accounting arena and the engine's real store.
+//!
+//! Block interior layout: token positions are contiguous; each position
+//! holds its K row then its V row (`layers × heads_kv × head_dim` f32
+//! each). Position `p` of a sequence lives at slot `p % block_tokens` of
+//! block `table[p / block_tokens]`.
+//!
+//! The decode artifact still consumes the dense §3.8 layouts
+//! (K `(L, h_kv, C, d_h)`, V `(L, h_kv, d_h, C)`), so each step
+//! **gathers** the sequence's written positions from its blocks into a
+//! shared dense scratch (unwritten positions are zero — exactly what the
+//! dense path holds there, which is what makes B=1 token streams
+//! bit-identical) and **scatters** the step's new row back into the
+//! tail block. The simulator prices this indirection
+//! ([`crate::sim::exec::paged_gather_overhead_s`]).
+
+use crate::error::{DriftError, Result};
+use crate::kv::{KvArena, KvArenaConfig, KvPool, KvSeqHandle};
+
+/// One contiguous device region carved into arena blocks, with real
+/// storage behind every committed block and a device-bytes watermark.
+#[derive(Clone, Debug)]
+pub struct KvRegion {
+    cfg: KvArenaConfig,
+    /// The contiguous backing store: `num_blocks × block_floats` f32.
+    data: Vec<f32>,
+    committed: Vec<bool>,
+    bytes_in_use: usize,
+    peak_bytes_in_use: usize,
+}
+
+impl KvRegion {
+    pub fn new(cfg: KvArenaConfig) -> Self {
+        KvRegion {
+            data: vec![0.0; cfg.num_blocks * cfg.block_floats()],
+            committed: vec![false; cfg.num_blocks],
+            bytes_in_use: 0,
+            peak_bytes_in_use: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &KvArenaConfig {
+        &self.cfg
+    }
+
+    /// Device bytes currently committed to live sequences (block-granular,
+    /// including the per-block `ALIGN` padding — the same unit the arena
+    /// accounts in). This is the watermark preemption must lower.
+    pub fn device_bytes_in_use(&self) -> usize {
+        self.bytes_in_use
+    }
+
+    pub fn peak_device_bytes_in_use(&self) -> usize {
+        self.peak_bytes_in_use
+    }
+
+    /// Size of the whole contiguous region.
+    pub fn total_bytes(&self) -> usize {
+        self.cfg.total_bytes()
+    }
+
+    /// Commit one block to a live sequence: raises the watermark. The
+    /// block's storage is zeroed so a fresh claimant can never observe a
+    /// previous occupant's rows.
+    pub fn commit_block(&mut self, b: usize) {
+        debug_assert!(!self.committed[b], "block {b} committed twice");
+        self.committed[b] = true;
+        let f = self.cfg.block_floats();
+        self.data[b * f..(b + 1) * f].fill(0.0);
+        self.bytes_in_use += self.cfg.block_bytes();
+        self.peak_bytes_in_use = self.peak_bytes_in_use.max(self.bytes_in_use);
+    }
+
+    /// Decommit one block: scrubs its storage (the evicted rows are
+    /// *really* gone, not merely unaccounted) and lowers the watermark.
+    pub fn release_block(&mut self, b: usize) {
+        debug_assert!(self.committed[b], "block {b} released while uncommitted");
+        self.committed[b] = false;
+        let f = self.cfg.block_floats();
+        self.data[b * f..(b + 1) * f].fill(0.0);
+        self.bytes_in_use -= self.cfg.block_bytes();
+    }
+
+    /// Base offset (in f32 elements) of token position `pos` inside the
+    /// region, resolved through a block table.
+    fn token_base(&self, table: &[usize], pos: usize) -> usize {
+        let bt = self.cfg.block_tokens;
+        let block = table[pos / bt];
+        debug_assert!(self.committed[block], "read/write through uncommitted block {block}");
+        block * self.cfg.block_floats() + (pos % bt) * self.cfg.floats_per_token()
+    }
+
+    /// Write one token position's K/V rows (`layers × heads_kv × head_dim`
+    /// f32 each — the decode artifact's per-step delta) at `pos`.
+    pub fn write_token(
+        &mut self,
+        table: &[usize],
+        pos: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<()> {
+        let row = self.cfg.layers * self.cfg.heads_kv * self.cfg.head_dim;
+        if k_rows.len() != row || v_rows.len() != row {
+            return Err(DriftError::Memory(format!(
+                "kv row arity mismatch: {} / {} vs {row}",
+                k_rows.len(),
+                v_rows.len()
+            )));
+        }
+        if pos / self.cfg.block_tokens >= table.len() {
+            return Err(DriftError::Memory(format!(
+                "position {pos} beyond the {}-block table",
+                table.len()
+            )));
+        }
+        let base = self.token_base(table, pos);
+        self.data[base..base + row].copy_from_slice(k_rows);
+        self.data[base + row..base + 2 * row].copy_from_slice(v_rows);
+        Ok(())
+    }
+
+    /// Gather a sequence's first `len` positions into dense §3.8 caches of
+    /// capacity `capacity`: K `(L, h_kv, C, d_h)`, V `(L, h_kv, d_h, C)`.
+    /// Positions `≥ len` are zero — bit-identical to what the dense path
+    /// holds there (prefill writes exactly its context; decode scatters
+    /// one row per step; everything else stays zero).
+    pub fn gather_dense(
+        &self,
+        table: &[usize],
+        len: usize,
+        capacity: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> Result<()> {
+        let (l_n, h_n, dh) = (self.cfg.layers, self.cfg.heads_kv, self.cfg.head_dim);
+        let need = l_n * h_n * capacity * dh;
+        if k_out.len() != need || v_out.len() != need {
+            return Err(DriftError::Memory(format!(
+                "dense gather arity mismatch: {} / {} vs {need}",
+                k_out.len(),
+                v_out.len()
+            )));
+        }
+        if len > capacity || len > table.len() * self.cfg.block_tokens {
+            return Err(DriftError::Memory(format!(
+                "gather of {len} positions exceeds capacity {capacity} or the \
+                 {}-block table",
+                table.len()
+            )));
+        }
+        k_out.fill(0.0);
+        v_out.fill(0.0);
+        let row = l_n * h_n * dh;
+        for p in 0..len {
+            let base = self.token_base(table, p);
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let r = base + (l * h_n + h) * dh; // K row at this position
+                    let kbase = ((l * h_n + h) * capacity + p) * dh;
+                    k_out[kbase..kbase + dh].copy_from_slice(&self.data[r..r + dh]);
+                    let rv = base + row + (l * h_n + h) * dh; // V row
+                    let vbase = (l * h_n + h) * dh * capacity + p;
+                    for j in 0..dh {
+                        v_out[vbase + j * capacity] = self.data[rv + j];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter the first `len` positions of dense §3.8 caches (what the
+    /// prefill artifact returns) into the sequence's blocks — the inverse
+    /// of [`gather_dense`](Self::gather_dense).
+    pub fn scatter_dense(
+        &mut self,
+        table: &[usize],
+        len: usize,
+        capacity: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        let (l_n, h_n, dh) = (self.cfg.layers, self.cfg.heads_kv, self.cfg.head_dim);
+        let need = l_n * h_n * capacity * dh;
+        if k.len() != need || v.len() != need {
+            return Err(DriftError::Memory(format!(
+                "dense scatter arity mismatch: {} / {} vs {need}",
+                k.len(),
+                v.len()
+            )));
+        }
+        if len > capacity || len > table.len() * self.cfg.block_tokens {
+            return Err(DriftError::Memory(format!(
+                "scatter of {len} positions exceeds capacity {capacity} or the \
+                 {}-block table",
+                table.len()
+            )));
+        }
+        let row = l_n * h_n * dh;
+        for p in 0..len {
+            let base = self.token_base(table, p);
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    let kbase = ((l * h_n + h) * capacity + p) * dh;
+                    let r = base + (l * h_n + h) * dh;
+                    self.data[r..r + dh].copy_from_slice(&k[kbase..kbase + dh]);
+                    let vbase = (l * h_n + h) * dh * capacity + p;
+                    let rv = base + row + (l * h_n + h) * dh;
+                    for j in 0..dh {
+                        self.data[rv + j] = v[vbase + j * capacity];
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The device-backed paged KV store the serving engine owns: a
+/// [`KvArena`] (reservation accounting, block tables, generation-tagged
+/// handles) welded to a [`KvRegion`] (the real bytes). Every arena
+/// transition is mirrored into the region, so `device_bytes_in_use`
+/// always equals `blocks_in_use × block_bytes` — and eviction releases
+/// actual storage, scrubbed, not a counter.
+#[derive(Clone, Debug)]
+pub struct PagedKvStore {
+    arena: KvArena,
+    region: KvRegion,
+    /// Dense gather scratch reused across decode steps (shared by all
+    /// sequences — the only dense-shaped K/V buffers in the engine, and
+    /// there is exactly one pair of them, not one per sequence).
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl PagedKvStore {
+    pub fn new(cfg: KvArenaConfig) -> Self {
+        PagedKvStore {
+            arena: KvArena::new(cfg),
+            region: KvRegion::new(cfg),
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+        }
+    }
+
+    pub fn arena(&self) -> &KvArena {
+        &self.arena
+    }
+
+    pub fn config(&self) -> &KvArenaConfig {
+        self.arena.config()
+    }
+
+    pub fn device_bytes_in_use(&self) -> usize {
+        self.region.device_bytes_in_use()
+    }
+
+    pub fn peak_device_bytes_in_use(&self) -> usize {
+        self.region.peak_device_bytes_in_use()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.region.total_bytes()
+    }
+
+    pub fn len(&self, h: KvSeqHandle) -> usize {
+        self.arena.len(h)
+    }
+
+    pub fn append(&mut self, h: KvSeqHandle, n: usize) -> Result<()> {
+        self.arena.append(h, n)
+    }
+
+    pub fn block_table(&self, h: KvSeqHandle) -> Result<&[usize]> {
+        self.arena.block_table(h)
+    }
+
+    pub fn stats(&self) -> crate::kv::KvArenaStats {
+        self.arena.stats()
+    }
+
+    pub fn can_claim(&self, tokens: usize) -> bool {
+        self.arena.can_claim(tokens)
+    }
+
+    pub fn can_grow(&self, h: KvSeqHandle, additional_tokens: usize) -> bool {
+        self.arena.can_grow(h, additional_tokens)
+    }
+
+    /// Commit the last `n` entries of a sequence's block table (the arena
+    /// appends newly allocated blocks at the tail).
+    fn commit_tail(&mut self, h: KvSeqHandle, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let table = self.arena.block_table(h).expect("handle valid: arena call just succeeded");
+        for &b in &table[table.len() - n..] {
+            self.region.commit_block(b);
+        }
+    }
+
+    pub fn claim(&mut self, tokens: usize) -> Result<KvSeqHandle> {
+        let h = self.arena.claim(tokens)?;
+        let n = self.arena.block_table(h).map_or(0, |t| t.len());
+        self.commit_tail(h, n);
+        Ok(h)
+    }
+
+    pub fn grow(&mut self, h: KvSeqHandle, additional_tokens: usize) -> Result<usize> {
+        let n = self.arena.grow(h, additional_tokens)?;
+        self.commit_tail(h, n);
+        Ok(n)
+    }
+
+    pub fn ensure(&mut self, h: KvSeqHandle, n: usize) -> Result<usize> {
+        let added = self.arena.ensure(h, n)?;
+        self.commit_tail(h, added);
+        Ok(added)
+    }
+
+    /// Release a sequence: scrub + decommit its region blocks *and* free
+    /// its arena reservation. Stale handles are a no-op (and free 0
+    /// bytes). Returns the device bytes released — the watermark drop.
+    pub fn release(&mut self, h: KvSeqHandle) -> usize {
+        if let Ok(table) = self.arena.block_table(h) {
+            for &b in table {
+                self.region.release_block(b);
+            }
+        }
+        self.arena.release(h)
+    }
+
+    /// Write one decoded token's K/V rows at `pos` through the block
+    /// table. Stale handles are rejected by the table lookup.
+    pub fn write_token(
+        &mut self,
+        h: KvSeqHandle,
+        pos: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> Result<()> {
+        let table = self.arena.block_table(h)?;
+        self.region.write_token(table, pos, k_rows, v_rows)
+    }
+
+    /// Scatter a prefill's dense K/V output (first `len` positions) into
+    /// the sequence's blocks.
+    pub fn scatter_context(
+        &mut self,
+        h: KvSeqHandle,
+        len: usize,
+        capacity: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        let table = self.arena.block_table(h)?;
+        self.region.scatter_dense(table, len, capacity, k, v)
+    }
+
+    /// Gather a sequence's written positions into the shared dense
+    /// scratch and return `(k, v)` views in the §3.8 layouts at
+    /// `capacity`. The scratch is overwritten on every call — consume the
+    /// views (e.g. copy into PJRT literals) before the next gather.
+    pub fn gather_dense_scratch(
+        &mut self,
+        h: KvSeqHandle,
+        capacity: usize,
+    ) -> Result<(&[f32], &[f32])> {
+        let cfg = *self.arena.config();
+        let need = cfg.layers * cfg.heads_kv * capacity * cfg.head_dim;
+        if self.scratch_k.len() != need {
+            self.scratch_k = vec![0.0; need];
+            self.scratch_v = vec![0.0; need];
+        }
+        let len = self.arena.len(h);
+        let table = self.arena.block_table(h)?;
+        self.region.gather_dense(table, len, capacity, &mut self.scratch_k, &mut self.scratch_v)?;
+        Ok((&self.scratch_k, &self.scratch_v))
+    }
+
+    /// Structural check for tests: arena invariants hold and the region's
+    /// committed bytes agree with the arena's block accounting.
+    pub fn verify(&self) -> Result<()> {
+        self.arena.verify()?;
+        let expect = self.arena.blocks_in_use() * self.config().block_bytes();
+        if expect != self.region.device_bytes_in_use() {
+            return Err(DriftError::Memory(format!(
+                "region watermark {} disagrees with arena accounting {expect}",
+                self.region.device_bytes_in_use()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl KvPool for PagedKvStore {
+    fn can_claim(&self, tokens: usize) -> bool {
+        PagedKvStore::can_claim(self, tokens)
+    }
+
+    fn claim(&mut self, tokens: usize) -> Result<KvSeqHandle> {
+        PagedKvStore::claim(self, tokens)
+    }
+
+    fn ensure(&mut self, h: KvSeqHandle, n: usize) -> Result<usize> {
+        PagedKvStore::ensure(self, h, n)
+    }
+
+    fn release(&mut self, h: KvSeqHandle) -> usize {
+        PagedKvStore::release(self, h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Config};
+
+    fn cfg(num_blocks: usize) -> KvArenaConfig {
+        KvArenaConfig {
+            layers: 2,
+            heads_kv: 2,
+            head_dim: 8,
+            block_tokens: 4,
+            num_blocks,
+        }
+    }
+
+    /// Deterministic per-(position, element) value so copies are exact.
+    fn row_vals(pos: usize, salt: usize, n: usize) -> Vec<f32> {
+        (0..n).map(|j| (pos * 131 + salt * 31 + j) as f32 * 0.25 + 1.0).collect()
+    }
+
+    #[test]
+    fn preemption_releases_real_device_bytes() {
+        // The tentpole assertion, engine-shape but PJRT-free: evicting a
+        // sequence lowers the device-bytes-in-use watermark by its whole
+        // footprint, and the freed storage is scrubbed — eviction frees
+        // real memory, not arena bookkeeping.
+        let mut s = PagedKvStore::new(cfg(8));
+        let bb = s.config().block_bytes();
+        let victim = s.claim(12).unwrap(); // 3 blocks
+        let keeper = s.claim(4).unwrap(); // 1 block
+        assert_eq!(s.device_bytes_in_use(), 4 * bb);
+        assert_eq!(s.peak_device_bytes_in_use(), 4 * bb);
+        s.verify().unwrap();
+
+        // Write real rows so "released" is observable as scrubbed data.
+        let row = s.config().layers * s.config().heads_kv * s.config().head_dim;
+        for p in 0..12 {
+            s.write_token(victim, p, &row_vals(p, 1, row), &row_vals(p, 2, row)).unwrap();
+        }
+        s.append(victim, 12).unwrap();
+
+        let freed = s.release(victim);
+        assert_eq!(freed, 3 * bb, "eviction must free the victim's whole footprint");
+        assert_eq!(s.device_bytes_in_use(), 1 * bb, "watermark dropped by real bytes");
+        assert_eq!(s.peak_device_bytes_in_use(), 4 * bb, "peak is a high-water mark");
+        s.verify().unwrap();
+
+        // The freed bytes are reusable: a new claim over the same blocks
+        // starts from scrubbed storage (gather sees zeros, not the
+        // victim's rows).
+        let fresh = s.claim(12).unwrap();
+        let cap = 16;
+        let (k, v) = s.gather_dense_scratch(fresh, cap).unwrap();
+        assert!(k.iter().all(|&x| x == 0.0), "fresh claim must not see evicted K rows");
+        assert!(v.iter().all(|&x| x == 0.0), "fresh claim must not see evicted V rows");
+        let _ = keeper;
+    }
+
+    #[test]
+    fn stale_handle_store_ops_are_inert() {
+        // Stale-handle coverage extended to the device-backed store: a
+        // handle kept past release must not write into, gather from, or
+        // free the storage of whichever sequence reused its blocks.
+        let mut s = PagedKvStore::new(cfg(4));
+        let row = s.config().layers * s.config().heads_kv * s.config().head_dim;
+        let h1 = s.claim(4).unwrap();
+        s.release(h1);
+        let h2 = s.claim(4).unwrap(); // reuses the slot and the blocks
+        s.write_token(h2, 0, &row_vals(0, 1, row), &row_vals(0, 2, row)).unwrap();
+        s.append(h2, 1).unwrap();
+
+        assert!(s.write_token(h1, 0, &vec![9.0; row], &vec![9.0; row]).is_err());
+        assert!(s.gather_dense_scratch(h1, 8).is_err());
+        assert_eq!(s.release(h1), 0, "stale release frees nothing");
+        assert_eq!(s.device_bytes_in_use(), s.config().block_bytes());
+        let (k, _v) = s.gather_dense_scratch(h2, 8).unwrap();
+        assert_eq!(k[0], row_vals(0, 1, row)[0], "live sequence's rows survived");
+        s.verify().unwrap();
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_is_exact() {
+        // Dense → blocks → dense must be the identity over written
+        // positions and zero elsewhere (the bit-identity the B=1
+        // guarantee rests on).
+        let c = cfg(8);
+        let cap = 20;
+        let (l_n, h_n, dh) = (c.layers, c.heads_kv, c.head_dim);
+        let need = l_n * h_n * cap * dh;
+        let len = 11;
+        // Build a dense reference with nonzero values at positions < len.
+        let mut k_dense = vec![0.0f32; need];
+        let mut v_dense = vec![0.0f32; need];
+        for p in 0..len {
+            for l in 0..l_n {
+                for h in 0..h_n {
+                    for j in 0..dh {
+                        let val = (p * 1009 + l * 101 + h * 11 + j) as f32 * 0.5 - 3.0;
+                        k_dense[((l * h_n + h) * cap + p) * dh + j] = val;
+                        v_dense[(l * h_n + h) * dh * cap + j * cap + p] = -val;
+                    }
+                }
+            }
+        }
+        let mut s = PagedKvStore::new(c);
+        let h = s.claim(len).unwrap();
+        s.scatter_context(h, len, cap, &k_dense, &v_dense).unwrap();
+        s.append(h, len).unwrap();
+        let (k, v) = s.gather_dense_scratch(h, cap).unwrap();
+        assert_eq!(k, &k_dense[..], "K roundtrip must be bit-exact");
+        assert_eq!(v, &v_dense[..], "V roundtrip must be bit-exact");
+    }
+
+    #[test]
+    fn property_watermark_tracks_arena_under_admit_grow_preempt_release() {
+        // Under random interleavings the region watermark always equals
+        // blocks_in_use × block_bytes, never exceeds the region, and the
+        // peak is monotone.
+        check("kv region watermark stays truthful", Config::cases(48), |rng| {
+            let total = 1 + rng.gen_range(16) as usize;
+            let mut s = PagedKvStore::new(cfg(total));
+            let bb = s.config().block_bytes();
+            let mut live: Vec<KvSeqHandle> = Vec::new();
+            let mut last_peak = 0usize;
+            for _ in 0..80 {
+                match rng.gen_range(3) {
+                    0 => {
+                        let tokens = rng.gen_range(24) as usize;
+                        if s.can_claim(tokens) {
+                            live.push(s.claim(tokens).map_err(|e| e.to_string())?);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            let _ = s.grow(live[i], 1 + rng.gen_range(12) as usize);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            let before = s.device_bytes_in_use();
+                            let freed = s.release(live.swap_remove(i));
+                            if s.device_bytes_in_use() + freed != before {
+                                return Err("release freed inconsistent bytes".into());
+                            }
+                        }
+                    }
+                }
+                s.verify().map_err(|e| e.to_string())?;
+                if s.device_bytes_in_use() > s.total_bytes() {
+                    return Err("watermark exceeds the region".into());
+                }
+                if s.peak_device_bytes_in_use() < last_peak {
+                    return Err("peak watermark regressed".into());
+                }
+                last_peak = s.peak_device_bytes_in_use();
+            }
+            for h in live {
+                s.release(h);
+            }
+            if s.device_bytes_in_use() != 0 {
+                return Err("drained store still holds device bytes".into());
+            }
+            Ok(())
+        });
+    }
+}

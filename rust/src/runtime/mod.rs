@@ -20,5 +20,5 @@ pub mod tinylm;
 
 pub use client::{LoadedModel, Runtime};
 pub use tinylm::{
-    GenerationResult, KvState, RoundStep, RoundStepOutcome, TinyLmManifest, TinyLmRuntime,
+    GenerationResult, KvState, PagedRoundStep, RoundStepOutcome, TinyLmManifest, TinyLmRuntime,
 };

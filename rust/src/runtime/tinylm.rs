@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::error::{DriftError, Result};
+use crate::kv::{KvSeqHandle, PagedKvStore};
 use crate::runtime::client::{lit, LoadedModel, Runtime};
 use crate::runtime::xla;
 use crate::util::json::Json;
@@ -100,20 +101,28 @@ impl GenerationResult {
     }
 }
 
-/// Host-resident KV cache state in the §3.8 layouts:
+/// Host-resident **dense** KV cache state in the §3.8 layouts:
 /// `k`: `(L, h_kv, C, d_h)` row-major, `v`: `(L, h_kv, d_h, C)` row-major.
+///
+/// This is the B=1 reference path ([`TinyLmRuntime::generate`]). The
+/// serving engine no longer holds one of these per sequence — its KV
+/// lives in the shared block region ([`PagedKvStore`]) and is gathered
+/// into the dense layouts per step; the two paths are bit-identical
+/// because the gather reproduces exactly these tensors.
 #[derive(Clone, Debug)]
 pub struct KvState {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
 }
 
-/// One sequence's slot in a batched decode round
-/// ([`TinyLmRuntime::decode_round`]).
-pub struct RoundStep<'a> {
+/// One sequence's slot in a paged batched decode round
+/// ([`TinyLmRuntime::decode_round_paged`]): its KV is addressed through
+/// the store by handle, not carried as a dense tensor.
+#[derive(Clone, Copy, Debug)]
+pub struct PagedRoundStep {
     pub token: i32,
     pub pos: usize,
-    pub kv: &'a mut KvState,
+    pub handle: KvSeqHandle,
 }
 
 /// Per-sequence outcome of a decode round: last-position logits and this
@@ -194,7 +203,41 @@ impl TinyLmRuntime {
         Ok((v_last, KvState { k: lit::to_f32(&k)?, v: lit::to_f32(&v)? }))
     }
 
-    /// One decode step over host-resident KV state.
+    /// Run the decode artifact once over dense K/V literals; returns
+    /// (logits, new K rows, new V rows) with the rows arity-checked. The
+    /// single execution path both the dense and the paged step share —
+    /// they can only differ in where the rows are stored.
+    fn decode_exec(
+        &self,
+        token: i32,
+        pos: usize,
+        k_dense: &[f32],
+        v_dense: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (kd, vd) = self.kv_dims();
+        let out = self.decode.run(&[
+            lit::i32_vec(&[token]),
+            lit::i32_vec(&[pos as i32]),
+            lit::f32_tensor(k_dense, &kd)?,
+            lit::f32_tensor(v_dense, &vd)?,
+        ])?;
+        let [logits, k_new, v_new]: [xla::Literal; 3] = out
+            .try_into()
+            .map_err(|_| DriftError::Runtime("decode returned wrong arity".into()))?;
+        let m = &self.manifest;
+        let k_rows = lit::to_f32(&k_new)?;
+        let v_rows = lit::to_f32(&v_new)?;
+        if k_rows.len() != m.layers * m.heads_kv * m.head_dim {
+            return Err(DriftError::Runtime(format!(
+                "decode delta arity mismatch: {} rows",
+                k_rows.len()
+            )));
+        }
+        Ok((lit::to_f32(&logits)?, k_rows, v_rows))
+    }
+
+    /// One decode step over host-resident dense KV state (the B=1
+    /// reference path).
     ///
     /// §Perf: the decode artifact returns only the *new* K/V rows
     /// (`(L, h_kv, d_h)` each) rather than the full caches, shrinking the
@@ -202,44 +245,57 @@ impl TinyLmRuntime {
     /// the host caches here (K rows are contiguous `d_h` runs; V columns
     /// are strided by the cache capacity per the reversed §3.8 layout).
     pub fn decode_step(&self, token: i32, pos: usize, kv: &mut KvState) -> Result<Vec<f32>> {
-        let (kd, vd) = self.kv_dims();
-        let out = self.decode.run(&[
-            lit::i32_vec(&[token]),
-            lit::i32_vec(&[pos as i32]),
-            lit::f32_tensor(&kv.k, &kd)?,
-            lit::f32_tensor(&kv.v, &vd)?,
-        ])?;
-        let [logits, k_new, v_new]: [xla::Literal; 3] = out
-            .try_into()
-            .map_err(|_| DriftError::Runtime("decode returned wrong arity".into()))?;
-        let m = &self.manifest;
-        let (cap, dh) = (m.cache_capacity, m.head_dim);
-        let k_rows = lit::to_f32(&k_new)?;
-        let v_rows = lit::to_f32(&v_new)?;
-        if k_rows.len() != m.layers * m.heads_kv * dh {
-            return Err(DriftError::Runtime(format!(
-                "decode delta arity mismatch: {} rows",
-                k_rows.len()
-            )));
-        }
-        for l in 0..m.layers {
-            for h in 0..m.heads_kv {
-                let row = (l * m.heads_kv + h) * dh;
-                // K (L, h_kv, C, d_h): contiguous run at [l, h, pos, :].
-                let kbase = ((l * m.heads_kv + h) * cap + pos) * dh;
-                kv.k[kbase..kbase + dh].copy_from_slice(&k_rows[row..row + dh]);
-                // V (L, h_kv, d_h, C): strided column at [l, h, :, pos].
-                let vbase = (l * m.heads_kv + h) * dh * cap + pos;
-                for j in 0..dh {
-                    kv.v[vbase + j * cap] = v_rows[row + j];
-                }
-            }
-        }
-        lit::to_f32(&logits)
+        let (logits, k_rows, v_rows) = self.decode_exec(token, pos, &kv.k, &kv.v)?;
+        scatter_rows_dense(&self.manifest, kv, pos, &k_rows, &v_rows);
+        Ok(logits)
     }
 
-    /// Execute one batched decode round: one decode step per member
-    /// sequence, returning per-sequence outcomes in input order.
+    /// One decode step over the **paged** store: gather the sequence's
+    /// blocks into the dense layouts (unwritten positions zero — exactly
+    /// what the dense path holds there, so the artifact sees bit-identical
+    /// inputs and the token stream cannot diverge), execute, then scatter
+    /// the new K/V row back into the tail block through the block table.
+    pub fn decode_step_paged(
+        &self,
+        token: i32,
+        pos: usize,
+        store: &mut PagedKvStore,
+        h: KvSeqHandle,
+    ) -> Result<Vec<f32>> {
+        if store.len(h) != pos {
+            return Err(DriftError::Serving(format!(
+                "paged decode position {pos} disagrees with {} written KV rows",
+                store.len(h)
+            )));
+        }
+        let cap = self.manifest.cache_capacity;
+        let (logits, k_rows, v_rows) = {
+            let (k, v) = store.gather_dense_scratch(h, cap)?;
+            // The literals copy the scratch, so the borrow ends here and
+            // the store is free for the row write below.
+            self.decode_exec(token, pos, k, v)?
+        };
+        store.write_token(h, pos, &k_rows, &v_rows)?;
+        Ok(logits)
+    }
+
+    /// Run prefill and scatter its dense K/V output into the sequence's
+    /// blocks — the paged serving engine's admission path. Returns the
+    /// last-position logits; the dense tensors live only for the copy.
+    pub fn prefill_paged(
+        &self,
+        tokens: &[i32],
+        store: &mut PagedKvStore,
+        h: KvSeqHandle,
+    ) -> Result<Vec<f32>> {
+        let (logits, kv) = self.prefill(tokens)?;
+        store.scatter_context(h, tokens.len(), self.manifest.cache_capacity, &kv.k, &kv.v)?;
+        Ok(logits)
+    }
+
+    /// Execute one batched decode round over the paged store: one decode
+    /// step per member sequence, returning per-sequence outcomes in input
+    /// order.
     ///
     /// The PJRT CPU artifact is compiled for batch 1, so the round loops
     /// the per-sequence executions — that keeps the numerics *exactly*
@@ -248,16 +304,21 @@ impl TinyLmRuntime {
     /// — streaming the weights once for all member sequences — is
     /// modeled by the roofline simulator
     /// ([`crate::sim::exec::simulate_batched`]), which reports the
-    /// round's batched latency on the target GPU profiles. A failed step
-    /// fails only its own sequence, never the round.
-    pub fn decode_round(&self, steps: Vec<RoundStep<'_>>) -> Vec<Result<RoundStepOutcome>> {
+    /// round's batched latency on the target GPU profiles; the gather
+    /// indirection this path adds is priced by
+    /// [`crate::sim::exec::paged_gather_overhead_s`]. A failed step fails
+    /// only its own sequence, never the round.
+    pub fn decode_round_paged(
+        &self,
+        store: &mut PagedKvStore,
+        steps: &[PagedRoundStep],
+    ) -> Vec<Result<RoundStepOutcome>> {
         steps
-            .into_iter()
+            .iter()
             .map(|s| {
                 let t = Instant::now();
-                self.decode_step(s.token, s.pos, s.kv).map(|logits| RoundStepOutcome {
-                    logits,
-                    step_s: t.elapsed().as_secs_f64(),
+                self.decode_step_paged(s.token, s.pos, store, s.handle).map(|logits| {
+                    RoundStepOutcome { logits, step_s: t.elapsed().as_secs_f64() }
                 })
             })
             .collect()
@@ -304,6 +365,33 @@ impl TinyLmRuntime {
     }
 }
 
+/// Scatter one step's new K/V rows (`(L, h_kv, d_h)` each) into dense
+/// §3.8 caches at `pos`: K rows are contiguous `d_h` runs at
+/// `[l, h, pos, :]`; V columns are strided by the cache capacity at
+/// `[l, h, :, pos]`. Shared by the dense reference path and the
+/// bit-identity tests (the paged path performs the same write through a
+/// block table — [`PagedKvStore::write_token`]).
+fn scatter_rows_dense(
+    m: &TinyLmManifest,
+    kv: &mut KvState,
+    pos: usize,
+    k_rows: &[f32],
+    v_rows: &[f32],
+) {
+    let (cap, dh) = (m.cache_capacity, m.head_dim);
+    for l in 0..m.layers {
+        for h in 0..m.heads_kv {
+            let row = (l * m.heads_kv + h) * dh;
+            let kbase = ((l * m.heads_kv + h) * cap + pos) * dh;
+            kv.k[kbase..kbase + dh].copy_from_slice(&k_rows[row..row + dh]);
+            let vbase = (l * m.heads_kv + h) * dh * cap + pos;
+            for j in 0..dh {
+                kv.v[vbase + j * cap] = v_rows[row + j];
+            }
+        }
+    }
+}
+
 fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, v) in xs.iter().enumerate() {
@@ -317,6 +405,70 @@ fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kv::KvArenaConfig;
+
+    /// Geometry stand-in for the PJRT-free bit-identity test below.
+    fn tiny_manifest() -> TinyLmManifest {
+        TinyLmManifest {
+            layers: 3,
+            heads_kv: 2,
+            head_dim: 8,
+            vocab: 32,
+            cache_capacity: 24,
+            prefill: BTreeMap::new(),
+            decode: String::new(),
+        }
+    }
+
+    #[test]
+    fn paged_store_reproduces_dense_kv_state_bitwise() {
+        // The B=1 bit-identity guarantee, provable without PJRT: the
+        // decode artifact is a pure function of its input literals, so if
+        // the paged gather reproduces the dense `KvState` tensors
+        // bit-for-bit at every step, the token streams cannot diverge.
+        // Drive both representations through an identical prefill +
+        // decode write sequence and compare the dense views exactly.
+        let m = tiny_manifest();
+        let cap = m.cache_capacity;
+        let dense_elems = m.layers * m.heads_kv * cap * m.head_dim;
+        let row = m.layers * m.heads_kv * m.head_dim;
+        let mut dense = KvState { k: vec![0.0; dense_elems], v: vec![0.0; dense_elems] };
+        let rows_at = |pos: usize, salt: usize| -> Vec<f32> {
+            (0..row).map(|j| ((pos * 257 + salt * 31 + j) as f32).sin()).collect()
+        };
+
+        // "Prefill": write positions 0..ctx into the dense state, then
+        // scatter that dense output into the paged store (exactly what
+        // `prefill_paged` does with the artifact's output).
+        let ctx = 9usize;
+        for p in 0..ctx {
+            let (k, v) = (rows_at(p, 1), rows_at(p, 2));
+            scatter_rows_dense(&m, &mut dense, p, &k, &v);
+        }
+        let mut store = PagedKvStore::new(KvArenaConfig {
+            layers: m.layers,
+            heads_kv: m.heads_kv,
+            head_dim: m.head_dim,
+            block_tokens: 4,
+            num_blocks: 8,
+        });
+        let h = store.claim(ctx).unwrap();
+        store.scatter_context(h, ctx, cap, &dense.k, &dense.v).unwrap();
+        store.append(h, ctx).unwrap();
+
+        // "Decode": scatter per-step rows into both representations,
+        // growing the paged reservation block-by-block like the engine.
+        for pos in ctx..ctx + 6 {
+            let (k, v) = (rows_at(pos, 3), rows_at(pos, 4));
+            scatter_rows_dense(&m, &mut dense, pos, &k, &v);
+            store.ensure(h, 1).unwrap();
+            store.write_token(h, pos, &k, &v).unwrap();
+            store.append(h, 1).unwrap();
+            let (gk, gv) = store.gather_dense_scratch(h, cap).unwrap();
+            assert_eq!(gk, &dense.k[..], "gathered K must match dense bit-for-bit");
+            assert_eq!(gv, &dense.v[..], "gathered V must match dense bit-for-bit");
+        }
+    }
 
     #[test]
     fn argmax_basics() {

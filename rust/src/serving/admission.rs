@@ -11,8 +11,38 @@
 //! and a wrong guess degrades to preemption (queueing latency), never to
 //! a failed request.
 
-use crate::kv::{KvArena, KvSeqHandle};
+use crate::kv::{KvPool, KvSeqHandle};
 use crate::serving::request::InferenceRequest;
+
+/// Survivorship-corrected mean generation length, the signal
+/// [`AdmissionPolicy::Expected`] gates on.
+///
+/// A completed-only mean is biased low during warm-up: short generations
+/// finish first, so admission over-admits and preemptions spike exactly
+/// when the arena first fills. Every in-flight sequence's
+/// generated-so-far count is a *lower bound* on its final length, so the
+/// pooled mean over completed ∪ in-flight is a second (often tighter)
+/// lower-bound estimate. Taking the max of the two means the blend can
+/// only *raise* the estimate — admission never becomes more aggressive
+/// than the completed-only form, and rises toward the true mean as the
+/// long tail keeps generating.
+///
+/// `None` until the first completion lands (in-flight lower bounds alone
+/// say nothing useful cold — everyone just started — so cold start stays
+/// worst-case conservative).
+pub fn blended_mean_gen(
+    completed: u64,
+    completed_tokens: u64,
+    inflight: u64,
+    inflight_tokens: u64,
+) -> Option<f64> {
+    if completed == 0 {
+        return None;
+    }
+    let completed_mean = completed_tokens as f64 / completed as f64;
+    let pooled = (completed_tokens + inflight_tokens) as f64 / (completed + inflight) as f64;
+    Some(completed_mean.max(pooled))
+}
 
 /// Admission-footprint policy.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -69,29 +99,33 @@ impl AdmissionPolicy {
     /// Gate-and-claim for one admission candidate — the single admission
     /// step both the engine and the serving simulator run (shared for
     /// the same reason as `Scheduler::ensure_round_capacity`: so the
-    /// simulator can never drift from the serving policy). Gates on
-    /// [`footprint`](Self::footprint); on success claims the whole
-    /// footprint for [`WorstCase`](AdmissionPolicy::WorstCase) (lifetime
-    /// discipline — growth, and therefore preemption, can never occur)
-    /// but only `context_tokens` for
-    /// [`Expected`](AdmissionPolicy::Expected) (paged: grow during
-    /// decode). `None` means defer — backpressure, never failure.
-    pub fn admit(
+    /// simulator can never drift from the serving policy). Generic over
+    /// [`KvPool`]: the simulator admits into the accounting
+    /// [`crate::kv::KvArena`], the engine into the device-backed
+    /// [`crate::kv::PagedKvStore`] (where a claim commits real region
+    /// blocks). Gates on [`footprint`](Self::footprint); on success
+    /// claims the whole footprint for
+    /// [`WorstCase`](AdmissionPolicy::WorstCase) (lifetime discipline —
+    /// growth, and therefore preemption, can never occur) but only
+    /// `context_tokens` for [`Expected`](AdmissionPolicy::Expected)
+    /// (paged: grow during decode). `None` means defer — backpressure,
+    /// never failure.
+    pub fn admit<K: KvPool>(
         &self,
-        arena: &mut KvArena,
+        pool: &mut K,
         req: &InferenceRequest,
         context_tokens: usize,
         mean_gen: Option<f64>,
     ) -> Option<KvSeqHandle> {
         let expected = self.footprint(req, context_tokens, mean_gen);
-        if !arena.can_claim(expected) {
+        if !pool.can_claim(expected) {
             return None;
         }
         let claim_tokens = match self {
             AdmissionPolicy::WorstCase => expected,
             AdmissionPolicy::Expected { .. } => context_tokens,
         };
-        arena.claim(claim_tokens).ok()
+        pool.claim(claim_tokens).ok()
     }
 }
 
@@ -132,8 +166,24 @@ mod tests {
     }
 
     #[test]
+    fn blended_mean_corrects_survivorship_bias_upward_only() {
+        // No completions: stay worst-case conservative regardless of
+        // in-flight lower bounds (they say nothing useful cold).
+        assert_eq!(blended_mean_gen(0, 0, 8, 16), None);
+        // Shorts completed (mean 4) while longs are in flight at 20
+        // tokens each: the pooled lower bound pulls the estimate up.
+        assert_eq!(blended_mean_gen(4, 16, 4, 80), Some(12.0));
+        // A fresh admission wave (tiny in-flight counts) must NOT drag
+        // the estimate below the completed mean — the blend only raises.
+        assert_eq!(blended_mean_gen(4, 16, 4, 4), Some(4.0));
+        // Uniform workloads are unaffected: in-flight lower bounds never
+        // exceed the completed mean, so the estimate is unchanged.
+        assert_eq!(blended_mean_gen(10, 160, 5, 40), Some(16.0));
+    }
+
+    #[test]
     fn admit_claims_footprint_for_worst_case_and_context_for_expected() {
-        use crate::kv::KvArenaConfig;
+        use crate::kv::{KvArena, KvArenaConfig};
         let arena_cfg = KvArenaConfig {
             layers: 1,
             heads_kv: 1,

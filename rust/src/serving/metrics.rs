@@ -22,6 +22,21 @@ pub struct Metrics {
     /// the re-prefill on re-admission; one evicted before its prefill
     /// ever ran bills nothing. The honest price of thrashing.
     pub reprefill_tokens: AtomicU64,
+    /// In-flight gauge: sequences currently active or preempted (set by
+    /// the engine each round from scheduler state).
+    pub inflight_seqs: AtomicU64,
+    /// In-flight gauge: tokens generated so far by those sequences —
+    /// per-sequence lower bounds the blended estimator folds in.
+    pub inflight_gen_tokens: AtomicU64,
+    /// Gauge: device bytes currently committed to live KV blocks in the
+    /// paged region ([`crate::kv::PagedKvStore::device_bytes_in_use`]).
+    pub kv_device_bytes_in_use: AtomicU64,
+    /// Gauge: high-water mark of `kv_device_bytes_in_use`.
+    pub kv_device_bytes_peak: AtomicU64,
+    /// Device bytes released by preemptions (scrubbed region blocks) —
+    /// nonzero iff eviction actually lowered the device watermark, which
+    /// is exactly what the paged-KV e2e test asserts.
+    pub kv_bytes_freed_by_preemption: AtomicU64,
     ttft: Mutex<Histogram>,
     decode_step: Mutex<Histogram>,
     e2e: Mutex<Histogram>,
@@ -44,6 +59,11 @@ impl Default for Metrics {
             rounds_executed: AtomicU64::new(0),
             preemptions: AtomicU64::new(0),
             reprefill_tokens: AtomicU64::new(0),
+            inflight_seqs: AtomicU64::new(0),
+            inflight_gen_tokens: AtomicU64::new(0),
+            kv_device_bytes_in_use: AtomicU64::new(0),
+            kv_device_bytes_peak: AtomicU64::new(0),
+            kv_bytes_freed_by_preemption: AtomicU64::new(0),
             // 100 µs .. ~100 s exponential buckets.
             ttft: Mutex::new(Histogram::exponential(1e-4, 1.6, 32)),
             decode_step: Mutex::new(Histogram::exponential(1e-5, 1.6, 32)),
@@ -72,22 +92,43 @@ impl Metrics {
         self.decode_step.lock().unwrap().record(s);
     }
 
-    /// Record one eviction and the context it will have to re-prefill.
-    pub fn record_preemption(&self, reprefill_tokens: usize) {
+    /// Record one eviction: the context it will have to re-prefill and
+    /// the device bytes its released blocks freed.
+    pub fn record_preemption(&self, reprefill_tokens: usize, device_bytes_freed: usize) {
         self.preemptions.fetch_add(1, Ordering::Relaxed);
         self.reprefill_tokens.fetch_add(reprefill_tokens as u64, Ordering::Relaxed);
+        self.kv_bytes_freed_by_preemption.fetch_add(device_bytes_freed as u64, Ordering::Relaxed);
     }
 
-    /// Mean generated tokens per completed request — the signal
-    /// expected-footprint admission gates on
-    /// ([`crate::serving::AdmissionPolicy::Expected`]). `None` until the
-    /// first completion lands (cold start admits by worst case).
+    /// Update the in-flight gauges (engine: once per round, from
+    /// [`crate::serving::Scheduler::inflight_gen`]).
+    pub fn set_inflight_gen(&self, seqs: u64, gen_tokens: u64) {
+        self.inflight_seqs.store(seqs, Ordering::Relaxed);
+        self.inflight_gen_tokens.store(gen_tokens, Ordering::Relaxed);
+    }
+
+    /// Update the paged-KV device-memory gauges (engine: once per round,
+    /// from the store's watermark).
+    pub fn set_kv_device_bytes(&self, in_use: u64, peak: u64) {
+        self.kv_device_bytes_in_use.store(in_use, Ordering::Relaxed);
+        self.kv_device_bytes_peak.store(peak, Ordering::Relaxed);
+    }
+
+    /// Mean generation length — the signal expected-footprint admission
+    /// gates on ([`crate::serving::AdmissionPolicy::Expected`]). Blends
+    /// the completed mean with the in-flight generated-so-far lower
+    /// bounds ([`crate::serving::blended_mean_gen`]) to correct the
+    /// survivorship bias of completed-only averaging (short generations
+    /// finish first, so the early completed mean under-estimates and
+    /// admission over-admits during warm-up). `None` until the first
+    /// completion lands (cold start admits by worst case).
     pub fn mean_gen_tokens(&self) -> Option<f64> {
-        let completed = self.requests_completed.load(Ordering::Relaxed);
-        if completed == 0 {
-            return None;
-        }
-        Some(self.tokens_generated.load(Ordering::Relaxed) as f64 / completed as f64)
+        crate::serving::admission::blended_mean_gen(
+            self.requests_completed.load(Ordering::Relaxed),
+            self.tokens_generated.load(Ordering::Relaxed),
+            self.inflight_seqs.load(Ordering::Relaxed),
+            self.inflight_gen_tokens.load(Ordering::Relaxed),
+        )
     }
 
     /// Record one executed round: decode-batch occupancy and generated
@@ -137,7 +178,8 @@ impl Metrics {
             "requests: {} submitted, {} completed | tokens: {} prefill, {} generated\n\
              ttft p50 {:.1} ms, p95 {:.1} ms | decode step p50 {:.2} ms, p95 {:.2} ms | e2e mean {:.1} ms\n\
              rounds: {} | batch occupancy mean {:.2}, p50 {:.0}, max {:.0} | tokens/round mean {:.2}\n\
-             preemptions: {} | re-prefill tokens: {}",
+             preemptions: {} | re-prefill tokens: {} | kv device bytes: {} in use, {} peak, \
+             {} freed by preemption",
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.prefill_tokens.load(Ordering::Relaxed),
@@ -154,6 +196,9 @@ impl Metrics {
             self.tokens_per_round_mean(),
             self.preemptions.load(Ordering::Relaxed),
             self.reprefill_tokens.load(Ordering::Relaxed),
+            self.kv_device_bytes_in_use.load(Ordering::Relaxed),
+            self.kv_device_bytes_peak.load(Ordering::Relaxed),
+            self.kv_bytes_freed_by_preemption.load(Ordering::Relaxed),
         )
     }
 }
@@ -185,11 +230,44 @@ mod tests {
         m.record_completion(64, 10, 0.05, 0.5);
         m.record_completion(64, 20, 0.05, 0.5);
         assert_eq!(m.mean_gen_tokens(), Some(15.0));
-        m.record_preemption(72);
-        m.record_preemption(40);
+        m.record_preemption(72, 4096);
+        m.record_preemption(40, 2048);
         assert_eq!(m.preemptions.load(Ordering::Relaxed), 2);
         assert_eq!(m.reprefill_tokens.load(Ordering::Relaxed), 112);
+        assert_eq!(m.kv_bytes_freed_by_preemption.load(Ordering::Relaxed), 6144);
         assert!(m.report().contains("preemptions: 2"));
+        assert!(m.report().contains("freed by preemption"));
+    }
+
+    #[test]
+    fn mean_gen_blends_inflight_lower_bounds() {
+        // Survivorship-bias regression: two short completions (mean 5)
+        // while two long sequences sit in flight at 30 generated each —
+        // the blended estimate must rise toward the true mean instead of
+        // reporting the biased-low completed mean.
+        let m = Metrics::default();
+        m.record_completion(64, 5, 0.05, 0.5);
+        m.record_completion(64, 5, 0.05, 0.5);
+        assert_eq!(m.mean_gen_tokens(), Some(5.0));
+        m.set_inflight_gen(2, 60);
+        assert_eq!(m.mean_gen_tokens(), Some(17.5), "(10 + 60) / 4");
+        // A wave of fresh admissions must never drag the estimate below
+        // the completed mean (the blend only corrects upward).
+        m.set_inflight_gen(6, 0);
+        assert_eq!(m.mean_gen_tokens(), Some(5.0));
+        // Cold start stays conservative even with in-flight sequences.
+        let cold = Metrics::default();
+        cold.set_inflight_gen(4, 8);
+        assert_eq!(cold.mean_gen_tokens(), None);
+    }
+
+    #[test]
+    fn kv_device_byte_gauges_tracked() {
+        let m = Metrics::default();
+        m.set_kv_device_bytes(1 << 20, 2 << 20);
+        assert_eq!(m.kv_device_bytes_in_use.load(Ordering::Relaxed), 1 << 20);
+        assert_eq!(m.kv_device_bytes_peak.load(Ordering::Relaxed), 2 << 20);
+        assert!(m.report().contains("kv device bytes"));
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod scheduler;
 pub mod server;
 pub mod metrics;
 
-pub use admission::AdmissionPolicy;
+pub use admission::{blended_mean_gen, AdmissionPolicy};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use scheduler::{Round, Scheduler, SchedulerConfig, SeqState};
 pub use server::{ServerStats, ServingEngine};

@@ -36,7 +36,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 
-use crate::kv::{KvArena, KvSeqHandle};
+use crate::kv::{KvPool, KvSeqHandle};
 use crate::serving::request::{InferenceRequest, RequestId};
 
 /// Scheduler tuning.
@@ -280,28 +280,31 @@ impl Scheduler {
     }
 
     /// Make room for one more KV row for every sequence in `needs_row`,
-    /// evicting victims when the arena cannot grow — the one
+    /// evicting victims when the KV pool cannot grow — the one
     /// growth/preemption loop both the engine and the serving simulator
-    /// run, so their policies can never diverge.
+    /// run, so their policies can never diverge. Generic over [`KvPool`]:
+    /// the simulator passes the accounting [`crate::kv::KvArena`], the
+    /// engine the device-backed [`crate::kv::PagedKvStore`] — so in the
+    /// engine an eviction here releases (and scrubs) real region bytes.
     ///
-    /// For each id in order: [`KvArena::ensure`]`(h, 1)`; on exhaustion,
+    /// For each id in order: [`KvPool::ensure`]`(h, 1)`; on exhaustion,
     /// evict [`choose_victim`](Self::choose_victim) (escalating past pins
     /// only when the FIFO head itself is the one growing), release the
-    /// victim's blocks, call `on_evict(victim, reprefill_bill)` so the
-    /// caller can park its runtime state and record metrics, and retry.
-    /// If no victim exists — or the grower evicted itself — the sequence
-    /// is **held out**.
+    /// victim's blocks, call `on_evict(victim, reprefill_bill,
+    /// device_bytes_freed)` so the caller can park its runtime state and
+    /// record metrics, and retry. If no victim exists — or the grower
+    /// evicted itself — the sequence is **held out**.
     ///
     /// Returns the held-out set: every evicted victim plus every
     /// capacity-starved grower. Held-out sequences must sit the whole
     /// round out (no emission, no step, no prefill) — an evicted victim
     /// may still be named in the already-planned round.
-    pub fn ensure_round_capacity(
+    pub fn ensure_round_capacity<K: KvPool>(
         &mut self,
-        arena: &mut KvArena,
+        kv: &mut K,
         handles: &mut HashMap<RequestId, KvSeqHandle>,
         needs_row: &[RequestId],
-        mut on_evict: impl FnMut(RequestId, usize),
+        mut on_evict: impl FnMut(RequestId, usize, usize),
     ) -> HashSet<RequestId> {
         let mut held_out = HashSet::new();
         for &id in needs_row {
@@ -310,7 +313,7 @@ impl Scheduler {
             }
             let h = handles[&id];
             loop {
-                match arena.ensure(h, 1) {
+                match kv.ensure(h, 1) {
                     Ok(_) => break,
                     Err(_) => {
                         // Pinning yields when the FIFO head itself needs
@@ -328,10 +331,11 @@ impl Scheduler {
                             break;
                         };
                         let bill = self.preempt(victim).expect("victim is active");
+                        let mut freed = 0;
                         if let Some(vh) = handles.remove(&victim) {
-                            arena.release(vh);
+                            freed = kv.release(vh);
                         }
-                        on_evict(victim, bill);
+                        on_evict(victim, bill, freed);
                         held_out.insert(victim);
                         if victim == id {
                             break; // evicted itself: no step this round
@@ -341,6 +345,24 @@ impl Scheduler {
             }
         }
         held_out
+    }
+
+    /// `(sequences, generated-so-far tokens)` across active **and**
+    /// preempted sequences. Each in-flight count is a per-sequence lower
+    /// bound on its final generation length — the signal the blended
+    /// admission estimator
+    /// ([`crate::serving::admission::blended_mean_gen`]) folds in to
+    /// correct the survivorship bias of completed-only means (short
+    /// generations finish first, so the early completed mean is biased
+    /// low and admission over-admits exactly during warm-up).
+    pub fn inflight_gen(&self) -> (u64, u64) {
+        let mut seqs = 0u64;
+        let mut tokens = 0u64;
+        for s in self.active.iter().chain(self.preempted.iter()) {
+            seqs += 1;
+            tokens += s.generated.len() as u64;
+        }
+        (seqs, tokens)
     }
 
     /// Plan the next round: every decodable sequence joins the decode
@@ -717,10 +739,15 @@ mod tests {
         assert_eq!(round.decode_batch, vec![0]);
         assert_eq!(round.prefills, vec![1]);
         let mut evicted = Vec::new();
-        let held_out =
-            s.ensure_round_capacity(&mut arena, &mut handles, &round.decode_batch, |v, bill| {
+        let held_out = s.ensure_round_capacity(
+            &mut arena,
+            &mut handles,
+            &round.decode_batch,
+            |v, bill, freed| {
                 evicted.push((v, bill));
-            });
+                assert!(freed > 0, "evicting a claimed sequence must free bytes");
+            },
+        );
         assert_eq!(evicted, vec![(1, 0)], "unprefilled victim bills no recompute");
         assert!(held_out.contains(&1), "held-out must cover the planned prefill");
         assert!(s.seq(1).is_none(), "victim left the active set");
@@ -729,6 +756,28 @@ mod tests {
         // Seq 0 got its block: the KV-row append cannot overflow now.
         arena.append(handles[&0], 1).unwrap();
         arena.verify().unwrap();
+    }
+
+    #[test]
+    fn inflight_gen_counts_active_and_preempted() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_active: 2,
+            max_prefills_per_round: 2,
+            ..Default::default()
+        });
+        s.submit(req(0, 8, 4));
+        s.submit(req(1, 8, 4));
+        assert_eq!(s.inflight_gen(), (0, 0), "waiting requests are not in flight");
+        s.admit();
+        let r = s.next_round();
+        execute_round(&mut s, &r); // both prefill
+        let r = s.next_round();
+        execute_round(&mut s, &r); // both decode one token
+        assert_eq!(s.inflight_gen(), (2, 2));
+        s.preempt(1).unwrap();
+        // Eviction must not erase a sequence's lower bound — that would
+        // re-bias the estimator exactly when preemptions spike.
+        assert_eq!(s.inflight_gen(), (2, 2), "preempted sequences still count");
     }
 
     #[test]

@@ -7,16 +7,25 @@
 //! stream once per round on the simulated GPU), then up to
 //! `max_prefills_per_round` prefills.
 //!
-//! KV is **paged**: admission claims only the context that must prefill
-//! now (the prompt, or prompt + generated for a re-admitted sequence),
-//! gated by the *expected* footprint
-//! ([`AdmissionPolicy`]), and each decode step grows the reservation
-//! block-by-block ([`KvArena::ensure`]). A request whose expected
+//! KV is **paged and device-resident**: every sequence's K/V rows live
+//! in one shared contiguous block region ([`PagedKvStore`]) addressed
+//! through per-sequence block tables — there are no dense per-sequence
+//! KV tensors anywhere in the engine. Admission claims (and commits)
+//! only the context that must prefill now (the prompt, or prompt +
+//! generated for a re-admitted sequence), gated by the *expected*
+//! footprint ([`AdmissionPolicy`]) fed the survivorship-corrected
+//! blended mean; each decode step gathers the sequence's blocks into the
+//! dense §3.8 layouts (bit-identical to the dense path), scatters the
+//! new row back through the block table, and grows the reservation
+//! block-by-block ([`PagedKvStore::ensure`]). A request whose expected
 //! footprint does not fit is *deferred* (stays queued), never failed;
 //! genuine exhaustion mid-round **preempts** a victim (lowest-progress,
-//! youngest, never the FIFO head) back to the re-admission queue, where
-//! it re-prefills its whole context on re-admission — recompute
-//! semantics, so eviction costs latency, never tokens.
+//! youngest, never the FIFO head) back to the re-admission queue — and
+//! because the store backs blocks with real storage, that eviction
+//! scrubs and releases real device bytes (watched by the
+//! `kv_device_bytes_*` gauges), not just arena accounting. The victim
+//! re-prefills its whole context on re-admission — recompute semantics,
+//! so eviction costs latency, never tokens.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -25,8 +34,8 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::error::{DriftError, Result};
-use crate::kv::{KvArena, KvArenaConfig, KvSeqHandle};
-use crate::runtime::tinylm::{RoundStep, TinyLmRuntime};
+use crate::kv::{KvArenaConfig, KvSeqHandle, PagedKvStore};
+use crate::runtime::tinylm::{PagedRoundStep, TinyLmRuntime};
 use crate::runtime::Runtime;
 use crate::serving::admission::AdmissionPolicy;
 use crate::serving::metrics::Metrics;
@@ -51,10 +60,11 @@ pub struct ServerStats {
     pub report: String,
 }
 
-/// Per-sequence runtime state the scheduler doesn't own: host KV state,
-/// the arena reservation, and timing.
+/// Per-sequence runtime state the scheduler doesn't own: the pending
+/// token and timing. The sequence's KV lives in the shared paged region
+/// (addressed by its handle in the engine's `handles` map) — dropping
+/// this struct at eviction carries no tensors, because there are none.
 struct SeqRuntime {
-    kv: crate::runtime::tinylm::KvState,
     next_token: i32,
     prefill_s: f64,
     decode_s: f64,
@@ -88,10 +98,11 @@ struct PendingReply {
 }
 
 impl SeqRuntime {
-    /// Park a live runtime across an eviction: the KV state is dropped
-    /// (recomputed by the re-prefill), everything the final response
-    /// needs survives. The single inverse of [`PendingReply::resume`] —
-    /// add a carried field in both places or it silently zeroes.
+    /// Park a live runtime across an eviction: the KV rows were already
+    /// scrubbed when the store released the victim's blocks (recomputed
+    /// by the re-prefill), everything the final response needs survives.
+    /// The single inverse of [`PendingReply::resume`] — add a carried
+    /// field in both places or it silently zeroes.
     fn park(self) -> PendingReply {
         PendingReply {
             reply: self.reply,
@@ -121,14 +132,12 @@ impl PendingReply {
     /// and keeping the first-prefill queue wait.
     fn resume(
         self,
-        kv: crate::runtime::tinylm::KvState,
         next_token: i32,
         prefill_s: f64,
         started: Instant,
         queue_now_s: f64,
     ) -> SeqRuntime {
         SeqRuntime {
-            kv,
             next_token,
             prefill_s: self.prefill_s + prefill_s,
             decode_s: self.decode_s,
@@ -242,8 +251,10 @@ fn worker_loop(
     // `cache_capacity` ceiling) stays preemption-free and the arena is a
     // safety net. `kv_arena_blocks` fixes the budget instead: KV becomes
     // the contended resource and the preemption path below takes over.
+    // The store backs every block with real storage in one contiguous
+    // region — claims commit bytes, evictions scrub and release them.
     let m = &model.manifest;
-    let mut arena = KvArena::new(KvArenaConfig {
+    let mut store = PagedKvStore::new(KvArenaConfig {
         layers: m.layers,
         heads_kv: m.heads_kv,
         head_dim: m.head_dim,
@@ -285,7 +296,7 @@ fn worker_loop(
                     // backpressure, so a request that could NEVER fit
                     // must fail here or it would wedge the queue).
                     let tokens = req.prompt.len() + req.max_new_tokens;
-                    let cap = model.manifest.cache_capacity.min(arena.config().total_tokens());
+                    let cap = model.manifest.cache_capacity.min(store.config().total_tokens());
                     if tokens > cap {
                         let msg = format!(
                             "prompt + max_new_tokens = {tokens} exceeds per-sequence capacity {cap}"
@@ -317,13 +328,17 @@ fn worker_loop(
             continue;
         }
 
-        // Admission: gate on the *expected* footprint (mean generation
-        // length with a safety margin; worst case until history exists),
-        // claim only the context that prefill must cover now. A gate or
-        // claim miss defers the request — backpressure, never failure.
+        // Admission: gate on the *expected* footprint (blended mean
+        // generation length with a safety margin; worst case until
+        // history exists — the in-flight gauges below are what corrects
+        // the completed-only survivorship bias), claim only the context
+        // that prefill must cover now. A gate or claim miss defers the
+        // request — backpressure, never failure.
+        let (inflight_seqs, inflight_tokens) = sched.inflight_gen();
+        metrics.set_inflight_gen(inflight_seqs, inflight_tokens);
         let mean_gen = metrics.mean_gen_tokens();
         sched.admit_where(|req, ctx_tokens| {
-            match policy.admit(&mut arena, req, ctx_tokens, mean_gen) {
+            match policy.admit(&mut store, req, ctx_tokens, mean_gen) {
                 Some(h) => {
                     handles.insert(req.id, h);
                     true
@@ -356,16 +371,21 @@ fn worker_loop(
                 seq.generated.len() + 1 < seq.request.max_new_tokens
             })
             .collect();
-        let held_out: HashSet<RequestId> =
-            sched.ensure_round_capacity(&mut arena, &mut handles, &needs_row, |victim, bill| {
+        let held_out: HashSet<RequestId> = sched.ensure_round_capacity(
+            &mut store,
+            &mut handles,
+            &needs_row,
+            |victim, bill, bytes_freed| {
                 if let Some(srt) = runtimes.remove(&victim) {
                     replies.insert(victim, srt.park());
                 }
-                metrics.record_preemption(bill);
+                metrics.record_preemption(bill, bytes_freed);
                 crate::log_warn!(
-                    "kv arena exhausted: preempted request {victim} (re-prefill {bill} tokens)"
+                    "kv region exhausted: preempted request {victim} (re-prefill {bill} tokens, \
+                     {bytes_freed} device bytes released)"
                 );
-            });
+            },
+        );
 
         // ---- decode batch first (latency protection) --------------------
         // Advance scheduler state and collect per-sequence step inputs.
@@ -398,18 +418,22 @@ fn worker_loop(
             }
         }
         // One batched round over the runtime. Per-sequence PJRT decode
-        // inside one round keeps numerics exactly single-stream; the
-        // batched *latency* (weights streamed once per round) is what
-        // `sim::exec::simulate_batched` reports for GPUs.
+        // inside one round keeps numerics exactly single-stream (each
+        // step gathers its sequence's blocks into the same dense
+        // literals the dense path would pass — bit-identical inputs, so
+        // bit-identical token streams); the batched *latency* (weights
+        // streamed once per round) is what `sim::exec::simulate_batched`
+        // reports for GPUs, with the gather indirection priced by
+        // `sim::exec::paged_gather_overhead_s`.
         let mut step_ids = Vec::with_capacity(inputs.len());
         let mut steps = Vec::with_capacity(inputs.len());
-        for (&id, srt) in runtimes.iter_mut() {
+        for &id in &round.decode_batch {
             if let Some(&(token, pos)) = inputs.get(&id) {
                 step_ids.push(id);
-                steps.push(RoundStep { token, pos, kv: &mut srt.kv });
+                steps.push(PagedRoundStep { token, pos, handle: handles[&id] });
             }
         }
-        let outcomes = model.decode_round(steps);
+        let outcomes = model.decode_round_paged(&mut store, &steps);
         for (id, outcome) in step_ids.into_iter().zip(outcomes) {
             match outcome {
                 Ok(out) => {
@@ -417,10 +441,11 @@ fn worker_loop(
                     srt.decode_s += out.step_s;
                     metrics.record_decode_step(out.step_s);
                     srt.next_token = argmax(&out.logits) as i32;
-                    // Capacity was ensured before the round, so this
-                    // bookkeeping append cannot overflow.
-                    if let Err(e) = arena.append(handles[&id], 1) {
-                        crate::log_error!("kv arena append for request {id}: {e}");
+                    // Capacity was ensured before the round (the row
+                    // itself was written by the step), so this length
+                    // bookkeeping cannot overflow.
+                    if let Err(e) = store.append(handles[&id], 1) {
+                        crate::log_error!("kv store append for request {id}: {e}");
                     }
                 }
                 Err(e) => {
@@ -455,17 +480,20 @@ fn worker_loop(
             let ctx: Vec<i32> =
                 seq.request.prompt.iter().chain(seq.generated.iter()).copied().collect();
             let t = Instant::now();
-            match model.prefill(&ctx) {
-                Ok((logits, kv)) => {
+            // Paged prefill: the dense K/V the artifact returns is
+            // scattered straight into the sequence's region blocks
+            // (admission claimed exactly this context) and dropped.
+            match model.prefill_paged(&ctx, &mut store, handles[&id]) {
+                Ok(logits) => {
                     let prefill_s = t.elapsed().as_secs_f64();
                     seq.prefill_done = true;
                     let next = argmax(&logits) as i32;
                     let pending = replies.remove(&id).expect("pending reply");
-                    if let Err(e) = arena.append(handles[&id], ctx.len()) {
-                        crate::log_error!("kv arena append for request {id}: {e}");
+                    if let Err(e) = store.append(handles[&id], ctx.len()) {
+                        crate::log_error!("kv store append for request {id}: {e}");
                     }
                     let arrival = seq.request.arrival;
-                    runtimes.insert(id, pending.resume(kv, next, prefill_s, arrival, queue_s));
+                    runtimes.insert(id, pending.resume(next, prefill_s, arrival, queue_s));
                 }
                 Err(e) => {
                     // Finish the sequence with whatever it already has:
@@ -487,7 +515,7 @@ fn worker_loop(
         for done in sched.reap_finished() {
             let id = done.request.id;
             if let Some(h) = handles.remove(&id) {
-                arena.release(h);
+                store.release(h);
             }
             if let Some(srt) = runtimes.remove(&id) {
                 let total_s = srt.started.elapsed().as_secs_f64();
@@ -543,6 +571,16 @@ fn worker_loop(
                 });
             }
         }
+
+        // Device-memory gauges: what the paged region actually holds
+        // after this round's growth, evictions, AND completions (the
+        // watermark the paged-KV e2e assertions read) — updated after the
+        // reap so completed sequences' released blocks are reflected and
+        // a drained engine reports zero bytes in use.
+        metrics.set_kv_device_bytes(
+            store.device_bytes_in_use() as u64,
+            store.peak_device_bytes_in_use() as u64,
+        );
     }
 }
 

@@ -162,15 +162,69 @@ pub fn simulate_batched(plan: &ExecutionPlan, batch: usize) -> SimReport {
 }
 
 /// Time to (re-)prefill a context of `tokens` positions, given a prefill
-/// plan compiled at `plan_tokens`. Prefill is compute-bound and its
-/// matmul work is linear in sequence length at fixed model/hardware, so
-/// the plan's simulated time scales by `tokens / plan_tokens` — the
-/// approximation the serving simulator uses to charge **preemption
-/// re-prefills** (an evicted sequence recomputes its whole context on
-/// re-admission; pricing that recompute is what keeps the simulator
-/// honest about thrashing).
+/// plan compiled at `plan_tokens`.
+///
+/// The cost splits by how each kernel scales with sequence length `S` at
+/// fixed model/hardware:
+///
+/// * **linear** — the FC/conv GEMMs, norms, RoPE, embedding: work and
+///   activation traffic ∝ S;
+/// * **quadratic** — the attention score/context matmuls and the softmax
+///   over the `S × S` score matrix: ∝ S².
+///
+/// Structurally, the quadratic kernels are exactly the weightless
+/// [`KernelVariant::MatMulTiled`] launches (attention reads per-sequence
+/// K/V, not shared weights) plus [`KernelVariant::Softmax`]; everything
+/// else is linear. Total: `t(S) = linear·r + quad·r²` with
+/// `r = S / plan_tokens` — monotone and super-linear, so eviction thrash
+/// on *long* contexts is billed at its true quadratic rate instead of
+/// the old linear extrapolation that under-billed it. At `r = 1` this is
+/// exactly `simulate(plan).total_s`.
+///
+/// This is what the serving simulator charges **preemption re-prefills**
+/// with (an evicted sequence recomputes its whole context on
+/// re-admission; pricing that recompute honestly is what keeps the
+/// simulator truthful about thrashing).
 pub fn prefill_time_s(plan: &ExecutionPlan, plan_tokens: usize, tokens: usize) -> f64 {
-    simulate(plan).total_s * tokens as f64 / plan_tokens.max(1) as f64
+    let r = tokens as f64 / plan_tokens.max(1) as f64;
+    let mut linear = 0.0;
+    let mut quad = 0.0;
+    for k in &plan.kernels {
+        let t = k.cost.total();
+        let attention_quadratic = matches!(
+            k.choice.variant,
+            KernelVariant::MatMulTiled | KernelVariant::Softmax
+        ) && k.cost.weight_bytes == 0.0;
+        if attention_quadratic {
+            quad += t;
+        } else {
+            linear += t;
+        }
+    }
+    linear * r + quad * r * r
+}
+
+/// Extra time a **paged-KV** decode round pays over the dense layout for
+/// reading K/V through per-sequence block tables (the §3.5/§3.8
+/// indirection [`crate::kv::PagedKvStore`] performs): per block touched,
+/// one table-entry read plus the burst the memory system loses at each
+/// block boundary (the KV stream restarts at a new address, costing ~two
+/// DRAM transactions for K and V each). `blocks_touched` is summed over
+/// the round's sequences **and attention layers** (every layer's
+/// attention walks its sequence's table).
+///
+/// This is deliberately the same structural operation the runtime's
+/// gather performs, so the simulator and the engine stay in lockstep
+/// about what paging costs; it is priced from the device's effective
+/// bandwidth, and at mobile block sizes it is ~0.1 % of a decode round —
+/// the paging win (occupancy at fixed memory) is not eaten by the
+/// indirection.
+pub fn paged_gather_overhead_s(dev: &DeviceProfile, blocks_touched: usize) -> f64 {
+    const TABLE_ENTRY_BYTES: f64 = 4.0;
+    // Two lost 64 B bursts at each block boundary, for K and for V.
+    const BOUNDARY_BYTES: f64 = 2.0 * 64.0 * 2.0;
+    blocks_touched as f64 * (TABLE_ENTRY_BYTES + BOUNDARY_BYTES)
+        / (dev.effective_bandwidth().max(1e-9) * 1e9)
 }
 
 /// Convenience: plan + simulate.
@@ -251,6 +305,56 @@ mod tests {
             t_unfused.total_s
         );
         assert!(t_fused.kernel_count < t_unfused.kernel_count);
+    }
+
+    #[test]
+    fn prefill_pricing_is_monotone_and_superlinear() {
+        // Regression for the linear re-prefill extrapolation: attention
+        // is quadratic in context, so doubling the context must MORE
+        // than double the price (the old `base × ctx` model under-billed
+        // eviction thrash on long contexts).
+        let cfg = crate::models::llm_config("gemma2_2b").unwrap();
+        let dev = device("adreno_750").unwrap();
+        let p = crate::engine::llm::simulate_llm(
+            &cfg,
+            &dev,
+            crate::quant::QuantScheme::Mixed844,
+            1024,
+            256,
+            &crate::engine::compile::CompileOptions::default(),
+        )
+        .unwrap();
+        let plan = &p.prefill.plan;
+        // Anchor: at the compiled length the split model reproduces the
+        // straight simulation exactly.
+        let t_plan = prefill_time_s(plan, 1024, 1024);
+        assert!((t_plan - simulate(plan).total_s).abs() < 1e-9 * t_plan);
+        // Monotone super-linear: t(2n) > 2·t(n), strictly, at every scale.
+        let mut prev = prefill_time_s(plan, 1024, 256);
+        for tokens in [512usize, 1024, 2048, 4096] {
+            let t = prefill_time_s(plan, 1024, tokens);
+            assert!(
+                t > 2.0 * prev,
+                "prefill cost must be super-linear: t({tokens}) = {t} vs 2×t({}) = {}",
+                tokens / 2,
+                2.0 * prev
+            );
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn paged_gather_overhead_is_small_and_linear_in_blocks() {
+        let dev = device("adreno_750").unwrap();
+        assert_eq!(paged_gather_overhead_s(&dev, 0), 0.0);
+        let one = paged_gather_overhead_s(&dev, 1);
+        assert!(one > 0.0);
+        let many = paged_gather_overhead_s(&dev, 26 * 8);
+        assert!((many - 208.0 * one).abs() < 1e-18, "linear in blocks touched");
+        // A full Gemma-scale round's gather (26 layers × 8 blocks × B=8)
+        // must stay far below one decode round (~tens of ms): the
+        // indirection cannot eat the paging win.
+        assert!(paged_gather_overhead_s(&dev, 26 * 8 * 8) < 1e-4);
     }
 
     #[test]

@@ -22,7 +22,11 @@ pub mod exec;
 pub mod serving;
 
 pub use cost::{kernel_cost, KernelCost};
-pub use exec::{simulate_batched, simulate_graph, ExecutionPlan, PlannedKernel, SimReport};
+pub use exec::{
+    paged_gather_overhead_s, simulate_batched, simulate_graph, ExecutionPlan, PlannedKernel,
+    SimReport,
+};
 pub use serving::{
-    simulate_serving, KvReservation, ServingSimConfig, ServingSimReport, SimRequest,
+    simulate_serving, GenLenEstimator, KvReservation, ServingSimConfig, ServingSimReport,
+    SimRequest,
 };

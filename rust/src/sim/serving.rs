@@ -26,8 +26,9 @@ use std::collections::{HashMap, HashSet};
 use crate::kv::{KvArena, KvArenaConfig, KvSeqHandle};
 use crate::serving::request::{InferenceRequest, RequestId};
 use crate::serving::scheduler::{Scheduler, SchedulerConfig};
-use crate::serving::AdmissionPolicy;
-use crate::sim::exec::{prefill_time_s, simulate_batched, ExecutionPlan};
+use crate::serving::{blended_mean_gen, AdmissionPolicy};
+use crate::sim::exec::{paged_gather_overhead_s, prefill_time_s, simulate_batched, ExecutionPlan};
+use crate::util::div_ceil;
 
 /// One simulated request: what the client *asks for* vs what the model
 /// *actually generates* (the gap lifetime reservation pays for).
@@ -50,6 +51,19 @@ pub enum KvReservation {
     Paged { policy: AdmissionPolicy },
 }
 
+/// Which mean-generation-length estimate admission is fed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GenLenEstimator {
+    /// Average completed sequences only — the survivorship-biased pre-fix
+    /// form, kept as an ablation: short generations finish first, so the
+    /// warm-up mean is biased low and admission over-admits.
+    CompletedOnly,
+    /// Blend in-flight generated-so-far lower bounds into the estimate
+    /// ([`blended_mean_gen`]) — the engine's behaviour.
+    #[default]
+    Blended,
+}
+
 /// Serving-simulation tuning.
 #[derive(Clone, Copy, Debug)]
 pub struct ServingSimConfig {
@@ -58,9 +72,11 @@ pub struct ServingSimConfig {
     pub reservation: KvReservation,
     /// Host/GPU sync per executed round (s).
     pub sync_s: f64,
-    /// Sequence length the prefill plan was compiled at (prefill cost
-    /// scales linearly from it).
+    /// Sequence length the prefill plan was compiled at ([`prefill_time_s`]
+    /// scales its linear and quadratic parts from it).
     pub prefill_plan_tokens: usize,
+    /// Mean-generation estimator admission is fed.
+    pub estimator: GenLenEstimator,
 }
 
 /// What a workload run produced.
@@ -71,6 +87,9 @@ pub struct ServingSimReport {
     pub total_s: f64,
     pub decode_s: f64,
     pub prefill_s: f64,
+    /// Block-table gather indirection billed to paged rounds
+    /// ([`paged_gather_overhead_s`]); 0 under the dense lifetime layout.
+    pub gather_s: f64,
     pub generated_tokens: usize,
     /// All prefilled positions, initial prefills *and* re-prefills.
     pub prefill_tokens: usize,
@@ -81,6 +100,14 @@ pub struct ServingSimReport {
     pub mean_occupancy: f64,
     pub peak_occupancy: usize,
     pub peak_blocks_in_use: usize,
+    /// Peak concurrent live sequences (what the pre-paging dense runtime
+    /// would have held a full-capacity KV tensor for — the device-memory
+    /// sweep's dense baseline).
+    pub peak_seqs: usize,
+    /// Peak device bytes committed to KV blocks
+    /// (`peak_blocks_in_use × block_bytes` — the same watermark the
+    /// engine's [`crate::kv::PagedKvStore`] reports for real storage).
+    pub peak_device_bytes: usize,
     /// Worst internal fragmentation snapshot across the run.
     pub peak_fragmentation_bytes: usize,
 }
@@ -124,21 +151,37 @@ pub fn simulate_serving(
     // The reservation discipline maps onto the shared admission policy:
     // lifetime IS worst-case admission (gate + claim the whole
     // footprint), paged gates on the expectation and claims the context.
-    let policy = match cfg.reservation {
-        KvReservation::Lifetime => AdmissionPolicy::WorstCase,
-        KvReservation::Paged { policy } => policy,
+    let (policy, paged) = match cfg.reservation {
+        KvReservation::Lifetime => (AdmissionPolicy::WorstCase, false),
+        KvReservation::Paged { policy } => (policy, true),
     };
-    // Cache the two per-round prices that never change within a run.
-    let prefill_base_s = prefill_time_s(prefill_plan, cfg.prefill_plan_tokens, 1);
+    // Cache the per-round/per-context prices that repeat within a run.
     let mut round_cost: HashMap<usize, f64> = HashMap::new();
+    let mut prefill_cost: HashMap<usize, f64> = HashMap::new();
+    // Device profile for the paged gather pricing; unknown devices (plans
+    // built against a test profile) just skip the overhead.
+    let gather_dev = crate::device::registry::device(decode_plan.device_name);
 
     while !sched.is_idle() {
         // Admission: the *same* gate-and-claim the engine runs
-        // ([`AdmissionPolicy::admit`]), fed the simulated mean.
-        let mean_gen = if rep.completed > 0 {
-            Some(completed_gen as f64 / rep.completed as f64)
-        } else {
-            None
+        // ([`AdmissionPolicy::admit`]), fed the simulated estimate.
+        let mean_gen = match cfg.estimator {
+            GenLenEstimator::CompletedOnly => {
+                if rep.completed > 0 {
+                    Some(completed_gen as f64 / rep.completed as f64)
+                } else {
+                    None
+                }
+            }
+            GenLenEstimator::Blended => {
+                let (inflight, inflight_tokens) = sched.inflight_gen();
+                blended_mean_gen(
+                    rep.completed as u64,
+                    completed_gen as u64,
+                    inflight,
+                    inflight_tokens,
+                )
+            }
         };
         sched.admit_where(|req, ctx_tokens| {
             match policy.admit(&mut arena, req, ctx_tokens, mean_gen) {
@@ -160,19 +203,26 @@ pub fn simulate_serving(
             &mut arena,
             &mut handles,
             &round.decode_batch,
-            |_victim, bill| {
+            |_victim, bill, _bytes_freed| {
                 rep.preemptions += 1;
                 rep.reprefill_tokens += bill;
             },
         );
 
         // Decode: one token per surviving member, priced as one batched
-        // round (weights stream once; KV/activations scale with B).
+        // round (weights stream once; KV/activations scale with B). Under
+        // the paged layout each member's attention also walks its block
+        // table — that indirection is billed per layer per block touched.
         let mut executed = 0usize;
+        let mut gather_blocks = 0usize;
         for &id in &round.decode_batch {
             if held_out.contains(&id) {
                 continue;
             }
+            // Blocks this member's gather touches: its context so far
+            // (written rows), per attention layer.
+            gather_blocks +=
+                div_ceil(arena.len(handles[&id]).max(1), cfg.arena.block_tokens) * cfg.arena.layers;
             arena.append(handles[&id], 1).expect("capacity ensured above");
             let seq = sched.seq_mut(id).expect("scheduled seq exists");
             seq.generated.push(0);
@@ -190,13 +240,20 @@ pub fn simulate_serving(
                 .entry(executed)
                 .or_insert_with(|| simulate_batched(decode_plan, executed).total_s);
             rep.decode_s += t + cfg.sync_s;
+            if paged {
+                if let Some(dev) = &gather_dev {
+                    rep.gather_s += paged_gather_overhead_s(dev, gather_blocks);
+                }
+            }
             occupancy_sum += executed;
             decode_rounds += 1;
             rep.peak_occupancy = rep.peak_occupancy.max(executed);
         }
 
         // Prefills (initial and re-prefills alike: an evicted sequence
-        // re-enters here with its whole context, and pays for it).
+        // re-enters here with its whole context, and pays for it — at the
+        // plan priced for its *actual* context length, quadratic
+        // attention term included).
         for &id in &round.prefills {
             if held_out.contains(&id) {
                 continue; // evicted this round before its prefill ran
@@ -204,7 +261,10 @@ pub fn simulate_serving(
             let seq = sched.seq_mut(id).expect("scheduled seq exists");
             let ctx = seq.context_len();
             seq.prefill_done = true;
-            rep.prefill_s += prefill_base_s * ctx as f64 + cfg.sync_s;
+            let t = *prefill_cost
+                .entry(ctx)
+                .or_insert_with(|| prefill_time_s(prefill_plan, cfg.prefill_plan_tokens, ctx));
+            rep.prefill_s += t + cfg.sync_s;
             rep.prefill_tokens += ctx;
             // Immediate EOS (actual 0): finish straight out of prefill,
             // before the decode loop could over-generate a token.
@@ -216,6 +276,7 @@ pub fn simulate_serving(
 
         let stats = arena.stats();
         rep.peak_blocks_in_use = rep.peak_blocks_in_use.max(stats.blocks_in_use);
+        rep.peak_seqs = rep.peak_seqs.max(stats.sequences);
         rep.peak_fragmentation_bytes =
             rep.peak_fragmentation_bytes.max(stats.internal_fragmentation_bytes);
 
@@ -234,7 +295,8 @@ pub fn simulate_serving(
     }
 
     arena.verify().expect("arena invariants after drain");
-    rep.total_s = rep.decode_s + rep.prefill_s;
+    rep.peak_device_bytes = rep.peak_blocks_in_use * cfg.arena.block_bytes();
+    rep.total_s = rep.decode_s + rep.prefill_s + rep.gather_s;
     if decode_rounds > 0 {
         rep.mean_occupancy = occupancy_sum as f64 / decode_rounds as f64;
     }
@@ -285,6 +347,7 @@ mod tests {
             reservation,
             sync_s: 150e-6,
             prefill_plan_tokens: 1024,
+            estimator: GenLenEstimator::default(),
         }
     }
 
@@ -382,8 +445,11 @@ mod tests {
     #[test]
     fn lifetime_and_paged_agree_when_memory_is_plentiful() {
         // With an arena big enough for every worst case, the disciplines
-        // admit identically — same occupancy, no preemptions — so paged
-        // mode is a strict generalization, not a different scheduler.
+        // admit identically — same schedule, same occupancy, no
+        // preemptions — so paged mode is a strict generalization, not a
+        // different scheduler. The only difference left is the priced
+        // block-table gather indirection: paged is billed it (a ~1e-4
+        // relative sliver), lifetime's dense layout is not.
         let (decode, prefill, _) = plans();
         let workload = vec![
             SimRequest { prompt_tokens: 64, max_new_tokens: 32, actual_new_tokens: 32 };
@@ -407,6 +473,73 @@ mod tests {
         assert_eq!(p.preemptions, 0, "no pressure, no eviction");
         assert_eq!(l.rounds, p.rounds, "identical schedules");
         assert!((l.mean_occupancy - p.mean_occupancy).abs() < 1e-12);
-        assert!((l.tokens_per_s() - p.tokens_per_s()).abs() < 1e-9 * l.tokens_per_s());
+        // Gather indirection: billed to paged only, and tiny.
+        assert_eq!(l.gather_s, 0.0, "dense layout pays no gather");
+        assert!(p.gather_s > 0.0, "paged layout must be billed the indirection");
+        assert!(
+            (p.total_s - l.total_s - p.gather_s).abs() < 1e-12 * l.total_s,
+            "identical schedules may differ only by the gather bill"
+        );
+        assert!(
+            p.gather_s < 1e-2 * l.total_s,
+            "the indirection must not eat the paging win: {} vs {}",
+            p.gather_s,
+            l.total_s
+        );
+    }
+
+    #[test]
+    fn blended_estimator_cuts_warmup_preemptions_on_bimodal_workload() {
+        // Survivorship-bias regression. Bimodal workload, shorts first:
+        // the shorts complete almost immediately and drag the
+        // completed-only mean to ~1 token, so admission (and especially
+        // re-admission of evicted sequences, whose gate is
+        // context + mean) over-admits the longs and the warm-up phase
+        // thrashes. Blending the in-flight generated-so-far lower bounds
+        // raises the estimate as the longs keep decoding, so the same
+        // workload on the same arena preempts less — and never more.
+        let (decode, prefill, _) = plans();
+        let mut workload = vec![
+            SimRequest { prompt_tokens: 16, max_new_tokens: 96, actual_new_tokens: 1 };
+            8
+        ];
+        workload.extend(vec![
+            SimRequest { prompt_tokens: 16, max_new_tokens: 96, actual_new_tokens: 96 };
+            8
+        ]);
+        let run = |estimator: GenLenEstimator| {
+            let cfg = ServingSimConfig {
+                sched: SchedulerConfig {
+                    max_active: 8,
+                    max_prefills_per_round: 2,
+                    ..Default::default()
+                },
+                arena: arena(30), // 480 tokens: ~4 fully-grown longs
+                reservation: KvReservation::Paged {
+                    policy: AdmissionPolicy::Expected { safety_margin: 1.0 },
+                },
+                sync_s: 150e-6,
+                prefill_plan_tokens: 1024,
+                estimator,
+            };
+            simulate_serving(&decode, &prefill, &cfg, &workload)
+        };
+        let biased = run(GenLenEstimator::CompletedOnly);
+        let blended = run(GenLenEstimator::Blended);
+        assert_eq!(biased.completed, 16, "biased run must still drain");
+        assert_eq!(blended.completed, 16, "blended run must still drain");
+        assert!(
+            biased.preemptions > 0,
+            "the bimodal workload must expose the over-admission pathology: {biased:?}"
+        );
+        assert!(
+            blended.preemptions < biased.preemptions,
+            "blending in-flight lower bounds must cut warm-up preemptions: \
+             blended {} vs completed-only {}",
+            blended.preemptions,
+            biased.preemptions
+        );
+        // Fewer evictions ⇒ less recompute billed.
+        assert!(blended.reprefill_tokens <= biased.reprefill_tokens);
     }
 }

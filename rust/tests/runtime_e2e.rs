@@ -3,6 +3,7 @@
 //! Requires `make artifacts` (the tests skip loudly when artifacts are
 //! absent so `cargo test` stays runnable on a fresh checkout).
 
+use mldrift::kv::{KvArenaConfig, PagedKvStore};
 use mldrift::runtime::{Runtime, TinyLmRuntime};
 use mldrift::util::json::Json;
 
@@ -56,6 +57,54 @@ fn generation_matches_python_reference_exactly() {
     assert_eq!(out.tokens, expected, "rust generation diverged from the python oracle");
     assert!(out.prefill_s > 0.0);
     assert_eq!(out.decode_s.len(), steps);
+}
+
+#[test]
+fn paged_generation_is_bit_identical_to_dense() {
+    // The tentpole guarantee over real PJRT: driving decode through the
+    // block-table store (gather → execute → scatter row) must reproduce
+    // the dense reference path token for token — same artifact, same
+    // inputs, different storage.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let model = TinyLmRuntime::load(&rt, &dir).unwrap();
+    let prompt: Vec<i32> = (0..16).collect();
+    let steps = 6usize;
+    let dense = model.generate(&prompt, steps).unwrap();
+
+    let m = &model.manifest;
+    let mut store = PagedKvStore::new(KvArenaConfig::for_capacity(
+        m.layers,
+        m.heads_kv,
+        m.head_dim,
+        m.cache_capacity,
+        16,
+    ));
+    let h = store.claim(prompt.len()).unwrap();
+    let logits = model.prefill_paged(&prompt, &mut store, h).unwrap();
+    store.append(h, prompt.len()).unwrap();
+    let mut next = argmax(&logits);
+    let mut tokens = Vec::with_capacity(steps);
+    let mut pos = prompt.len();
+    for _ in 0..steps {
+        tokens.push(next);
+        store.ensure(h, 1).unwrap();
+        let logits = model.decode_step_paged(next, pos, &mut store, h).unwrap();
+        store.append(h, 1).unwrap();
+        next = argmax(&logits);
+        pos += 1;
+    }
+    assert_eq!(tokens, dense.tokens, "paged decode diverged from the dense path");
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best as usize] {
+            best = i as i32;
+        }
+    }
+    best
 }
 
 #[test]

@@ -101,8 +101,29 @@ fn preemption_under_tiny_arena_loses_no_tokens() {
     for o in &outs[1..] {
         assert_eq!(o.tokens, outs[0].tokens, "recompute preemption preserves determinism");
     }
-    let preemptions = engine.metrics.preemptions.load(std::sync::atomic::Ordering::Relaxed);
+    // Join the worker before reading the gauges so the final round's
+    // post-reap bookkeeping is flushed (the metrics Arc outlives the
+    // engine).
+    let metrics = std::sync::Arc::clone(&engine.metrics);
+    drop(engine);
+
+    let preemptions = metrics.preemptions.load(std::sync::atomic::Ordering::Relaxed);
     assert!(preemptions > 0, "a 3-block arena under this burst must have evicted");
-    let reprefill = engine.metrics.reprefill_tokens.load(std::sync::atomic::Ordering::Relaxed);
+    let reprefill = metrics.reprefill_tokens.load(std::sync::atomic::Ordering::Relaxed);
     assert!(reprefill > 0, "evicted prefilled sequences must bill recompute");
+
+    // Device-resident paging: eviction must have released *real* region
+    // bytes (scrubbed blocks), not just arena accounting — the watermark
+    // gauges prove preemption lowered device bytes in use.
+    let freed =
+        metrics.kv_bytes_freed_by_preemption.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(freed > 0, "preemption must release real device bytes");
+    let peak = metrics.kv_device_bytes_peak.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(peak > 0, "the run must have committed KV blocks");
+    let in_use = metrics.kv_device_bytes_in_use.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(
+        in_use, 0,
+        "after the drain every completed sequence's blocks are released, so the \
+         watermark must be back to zero (peak was {peak})"
+    );
 }
