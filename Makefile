@@ -1,6 +1,6 @@
 # ML Drift reproduction — top-level targets.
 
-.PHONY: tier1 build test fmt artifacts bench bench-batched
+.PHONY: tier1 build test fmt lint artifacts bench bench-batched bench-check
 
 # The tier-1 gate CI runs on every push.
 tier1:
@@ -15,6 +15,9 @@ test:
 fmt:
 	cd rust && cargo fmt --check
 
+lint:
+	cd rust && cargo clippy --release -- -D warnings
+
 # AOT-lower TinyLM to HLO text artifacts for the PJRT runtime
 # (needs the Python side: JAX + Pallas).
 artifacts:
@@ -28,3 +31,16 @@ bench: bench-batched
 
 bench-batched:
 	cd rust && cargo bench --bench bench_batched_serving
+
+# Bench-regression gate, reusable locally: validates the freshly written
+# BENCH_batched.json against its schema and fails if any tokens_per_s
+# series regressed >10% vs the committed (HEAD) trajectory. A baseline
+# carrying the seed "note" field is schema-checked only — the gate arms
+# once a real `make bench` output is committed. Run `make bench` first.
+BENCH_BASELINE := /tmp/mldrift_bench_baseline.json
+bench-check:
+	@git show HEAD:BENCH_batched.json > $(BENCH_BASELINE) || { \
+	  echo "bench-check: no committed BENCH_batched.json at HEAD to compare against"; \
+	  exit 1; }
+	cd rust && cargo run --release --quiet -- bench-check \
+	  --current ../BENCH_batched.json --baseline $(BENCH_BASELINE)

@@ -20,6 +20,14 @@
 //! commits vs what the pre-paging dense runtime would have resident
 //! (peak concurrent sequences × one full-capacity §3.8 tensor pair).
 //!
+//! Part 4 — speculative-decode sweep. Greedy draft-k with a TinyLM
+//! draft: per-round cost splits into k draft rounds + one k-wide verify
+//! pass (weights stream once), tokens/round = 1 + Σαⁱ. Sweeps
+//! acceptance α × k on a short-context interactive regime and gates the
+//! breakeven bars (≥ 1.5× at α = 0.7, ≥ 0.9× at α = 0, at the
+//! cost-model-chosen k), plus acceptance-parameterized serving-level
+//! runs through the full scheduler/arena loop.
+//!
 //! Writes every number to `BENCH_batched.json` at the **repo root** (the
 //! trajectory file the harness tracks across PRs) and mirrors it to the
 //! legacy `rust/BENCH_batched.json` path.
@@ -31,13 +39,16 @@
 use mldrift::bench::Table;
 use mldrift::device::registry::device;
 use mldrift::engine::compile::CompileOptions;
-use mldrift::engine::llm::{batched_decode_tokens_per_s, simulate_llm};
+use mldrift::engine::llm::{
+    batched_decode_tokens_per_s, simulate_llm, speculative_decode_tokens_per_s,
+};
 use mldrift::kv::KvArenaConfig;
 use mldrift::models::llm_config;
 use mldrift::quant::QuantScheme;
 use mldrift::serving::{AdmissionPolicy, SchedulerConfig};
 use mldrift::sim::{
-    simulate_serving, GenLenEstimator, KvReservation, ServingSimConfig, SimRequest,
+    simulate_serving, simulate_serving_spec, GenLenEstimator, KvReservation, ServingSimConfig,
+    SimRequest, SpecSim,
 };
 use mldrift::util::json::Json;
 
@@ -232,10 +243,204 @@ fn main() {
         p_occ / l_occ
     );
 
+    // ---- Part 4: speculative decode sweep (draft = TinyLM) --------------
+    // Greedy draft-k at B=1 — the paper's on-device interactive regime —
+    // at a *short* context: the verify pass re-reads per-position KV for
+    // each of its k+1 scored positions, so short contexts keep that next
+    // to nothing against the weight stream (the long-context rows in
+    // part 1 are where that trade inverts). Gated on the desktop-class
+    // pair (Llama-8B on M4 Pro: launch overhead is small enough that k
+    // draft rounds stay cheap); the phone pair is recorded ungated — its
+    // per-kernel launch overhead × k draft rounds is exactly the
+    // follow-up the breakeven math in DESIGN.md names.
+    const SPEC_PREFILL: usize = 256;
+    const SPEC_GEN: usize = 64;
+    const SPEC_KS: [usize; 3] = [1, 2, 4];
+    const SPEC_ACCEPTS: [f64; 6] = [0.0, 0.3, 0.5, 0.7, 0.9, 1.0];
+    let mut json_spec = Vec::new();
+    let mut gate = None; // (plain tok/s, best@α=0, best@α=0.7) for the gated pair
+    let mut gate_models = None; // (target, draft) LlmPerf kept for the serving runs
+    let mut st = Table::new(
+        "speculative decode — TinyLM draft, greedy draft-k, B=1, short context \
+         (prefill 256, gen 64): tokens/s (speedup vs plain)",
+        &["target", "device", "k", "α=0", "α=0.3", "α=0.5", "α=0.7", "α=0.9", "α=1.0"],
+    );
+    for (model, dev_name) in [("llama3.1_8b", "m4_pro"), ("gemma2_2b", "adreno_750")] {
+        let cfg = llm_config(model).unwrap();
+        let dev = device(dev_name).unwrap();
+        let target =
+            simulate_llm(&cfg, &dev, QuantScheme::Mixed844, SPEC_PREFILL, SPEC_GEN, &opts)
+                .unwrap();
+        let draft = simulate_llm(
+            &llm_config("tinylm").unwrap(),
+            &dev,
+            QuantScheme::Q8,
+            SPEC_PREFILL,
+            SPEC_GEN,
+            &opts,
+        )
+        .unwrap();
+        let plain = batched_decode_tokens_per_s(&target.decode, 1);
+        let (mut best0, mut best07) = (0.0f64, 0.0f64);
+        for k in SPEC_KS {
+            let mut cells =
+                vec![model.to_string(), dev.marketing_name.to_string(), k.to_string()];
+            for a in SPEC_ACCEPTS {
+                let tps =
+                    speculative_decode_tokens_per_s(&target.decode, &draft.decode, 1, k, a);
+                cells.push(format!("{tps:.1} ({:.2}×)", tps / plain));
+                json_spec.push(Json::obj(vec![
+                    ("model", model.into()),
+                    ("device", dev_name.into()),
+                    ("draft", "tinylm".into()),
+                    ("k", k.into()),
+                    ("acceptance", a.into()),
+                    ("tokens_per_s", tps.into()),
+                    ("speedup_vs_plain", (tps / plain).into()),
+                ]));
+                if a == 0.0 {
+                    best0 = best0.max(tps);
+                }
+                if a == 0.7 {
+                    best07 = best07.max(tps);
+                }
+            }
+            st.row(&cells);
+        }
+        if model == "llama3.1_8b" {
+            gate = Some((plain, best0, best07));
+            gate_models = Some((target, draft));
+        }
+    }
+    st.print();
+    println!();
+
+    // Serving-level: the same amortization claim through the full
+    // admission/scheduler/arena loop (acceptance-rate-parameterized
+    // workloads — `sim::serving::simulate_serving_spec`).
+    let (t_llama, d_tiny) = gate_models.expect("gated pair swept above");
+    let llama_cfg = llm_config("llama3.1_8b").unwrap();
+    let spec_sim_cfg = ServingSimConfig {
+        sched: SchedulerConfig {
+            max_active: 2,
+            max_prefills_per_round: 2,
+            ..Default::default()
+        },
+        arena: KvArenaConfig {
+            layers: llama_cfg.layers,
+            heads_kv: llama_cfg.heads_kv,
+            head_dim: llama_cfg.head_dim,
+            block_tokens: 16,
+            num_blocks: 2 * 8 + 2,
+        },
+        reservation: KvReservation::Lifetime,
+        sync_s: 150e-6,
+        prefill_plan_tokens: SPEC_PREFILL,
+        estimator: GenLenEstimator::Blended,
+    };
+    let spec_workload =
+        vec![SimRequest { prompt_tokens: 64, max_new_tokens: 64, actual_new_tokens: 64 }; 8];
+    let plain_serving = simulate_serving(
+        &t_llama.decode.plan,
+        &t_llama.prefill.plan,
+        &spec_sim_cfg,
+        &spec_workload,
+    );
+    let mut sst = Table::new(
+        "llama3.1_8b + TinyLM draft on M4 Pro — serving-level speculative decode \
+         (8 reqs, prompt 64, gen 64, max_active 2)",
+        &["mode", "tok/s", "rounds", "accepted/proposed", "draft ms", "preempt"],
+    );
+    let mut json_spec_serving = Vec::new();
+    sst.row(&[
+        "plain".into(),
+        format!("{:.1}", plain_serving.tokens_per_s()),
+        plain_serving.rounds.to_string(),
+        "-".into(),
+        "0.0".into(),
+        plain_serving.preemptions.to_string(),
+    ]);
+    json_spec_serving.push(Json::obj(vec![
+        ("mode", "plain".into()),
+        ("k", 0usize.into()),
+        ("acceptance", 0.0f64.into()),
+        ("tokens_per_s", plain_serving.tokens_per_s().into()),
+        ("rounds", plain_serving.rounds.into()),
+    ]));
+    let mut serving_at = |k: usize, acceptance: f64| {
+        let rep = simulate_serving_spec(
+            &t_llama.decode.plan,
+            &t_llama.prefill.plan,
+            &d_tiny.decode.plan,
+            SpecSim { k, acceptance },
+            &spec_sim_cfg,
+            &spec_workload,
+        );
+        assert_eq!(rep.completed, spec_workload.len(), "spec serving run must drain");
+        sst.row(&[
+            format!("spec k={k} α={acceptance}"),
+            format!("{:.1}", rep.tokens_per_s()),
+            rep.rounds.to_string(),
+            format!("{}/{}", rep.spec_accepted_tokens, rep.spec_proposed_tokens),
+            format!("{:.1}", rep.draft_s * 1e3),
+            rep.preemptions.to_string(),
+        ]);
+        json_spec_serving.push(Json::obj(vec![
+            ("mode", "speculative".into()),
+            ("k", k.into()),
+            ("acceptance", acceptance.into()),
+            ("tokens_per_s", rep.tokens_per_s().into()),
+            ("rounds", rep.rounds.into()),
+            ("spec_accepted_tokens", rep.spec_accepted_tokens.into()),
+            ("spec_proposed_tokens", rep.spec_proposed_tokens.into()),
+            ("draft_s", rep.draft_s.into()),
+        ]));
+        rep
+    };
+    let serving_zero = serving_at(2, 0.0);
+    let serving_hi = serving_at(2, 0.7);
+    let _ = serving_at(4, 0.9);
+    drop(serving_at); // release the table borrow before printing
+    sst.print();
+    println!();
+
+    // Speculative gates (the ISSUE's acceptance bars), at the
+    // cost-model-chosen k: spec decode must buy ≥ 1.5× at α = 0.7 and
+    // cost ≤ 10% at α = 0 — round-level AND through the serving loop.
+    let (plain, best0, best07) = gate.expect("gated pair swept above");
+    assert!(
+        best07 >= 1.5 * plain,
+        "spec @ α=0.7 must be ≥ 1.5× plain: {best07:.1} vs {plain:.1} tok/s"
+    );
+    assert!(
+        best0 >= 0.9 * plain,
+        "spec @ α=0 must be ≥ 0.9× plain: {best0:.1} vs {plain:.1} tok/s"
+    );
+    assert!(
+        serving_hi.tokens_per_s() >= 1.5 * plain_serving.tokens_per_s(),
+        "serving-level spec @ α=0.7 must be ≥ 1.5×: {:.1} vs {:.1} tok/s",
+        serving_hi.tokens_per_s(),
+        plain_serving.tokens_per_s()
+    );
+    assert!(
+        serving_zero.tokens_per_s() >= 0.9 * plain_serving.tokens_per_s(),
+        "serving-level spec @ α=0 must be ≥ 0.9×: {:.1} vs {:.1} tok/s",
+        serving_zero.tokens_per_s(),
+        plain_serving.tokens_per_s()
+    );
+    println!(
+        "OK: speculative decode (TinyLM draft, Llama-8B target, M4 Pro) holds the \
+         breakeven bars — {:.2}× at α=0.7, {:.2}× at α=0 (round-level, best k)",
+        best07 / plain,
+        best0 / plain
+    );
+
     let doc = Json::obj(vec![
         ("model_sweep", Json::Arr(json_batch)),
         ("fixed_memory_adreno_750", Json::Arr(json_fixed)),
         ("device_memory_sweep_adreno_750", Json::Arr(json_devmem)),
+        ("speculative_sweep", Json::Arr(json_spec)),
+        ("speculative_serving_m4_pro", Json::Arr(json_spec_serving)),
     ]);
     let text = doc.pretty() + "\n";
     for path in OUT_PATHS {

@@ -7,6 +7,8 @@
 
 pub mod harness;
 pub mod table;
+pub mod trajectory;
 
 pub use harness::{Bencher, BenchResult};
 pub use table::Table;
+pub use trajectory::{check_trajectory, validate_schema, TrajectoryCheck, TOLERANCE};

@@ -1,0 +1,232 @@
+//! `BENCH_batched.json` schema validation + perf-regression gate.
+//!
+//! The repo-root `BENCH_batched.json` is the perf trajectory tracked
+//! across PRs: `make bench` overwrites it with the simulator's exact
+//! numbers, and CI's bench job runs `make bench-check` (reusable
+//! locally) which calls into this module to
+//!
+//! 1. **validate the schema** of the freshly written file — the sections
+//!    and per-entry keys below are the contract; a write-path or schema
+//!    drift now fails CI instead of silently emptying the trajectory;
+//! 2. **gate regressions**: any `tokens_per_s` series that drops more
+//!    than [`TOLERANCE`] below the committed baseline fails the build.
+//!
+//! A baseline carrying a top-level `"note"` field is a **seed-estimated**
+//! trajectory (hand-written roofline estimates, not simulator output);
+//! against such a baseline only the schema is enforced — the regression
+//! gate arms itself the first time a real `make bench` output is
+//! committed (comparing estimates against simulator numbers would gate
+//! on guesswork).
+
+use crate::error::{DriftError, Result};
+use crate::util::json::Json;
+
+/// Maximum tolerated fractional drop in a `tokens_per_s` series before
+/// the gate fails (0.10 = fail on > 10 % regression).
+pub const TOLERANCE: f64 = 0.10;
+
+/// Sections the trajectory must carry: `(name, identity keys, gated
+/// metric)`. The identity keys form each entry's series key; the gated
+/// metric must be a positive finite number. A `None` metric means the
+/// section is schema-validated but not regression-gated (memory sweeps
+/// gate nothing — a *lower* peak is an improvement).
+const SECTIONS: &[(&str, &[&str], Option<&str>)] = &[
+    ("model_sweep", &["model", "device", "batch"], Some("tokens_per_s")),
+    ("fixed_memory_adreno_750", &["arena_blocks", "policy"], Some("tokens_per_s")),
+    ("device_memory_sweep_adreno_750", &["arena_blocks", "policy"], None),
+    ("speculative_sweep", &["model", "device", "k", "acceptance"], Some("tokens_per_s")),
+    ("speculative_serving_m4_pro", &["mode", "k", "acceptance"], Some("tokens_per_s")),
+];
+
+/// Outcome of a trajectory check.
+#[derive(Clone, Debug, Default)]
+pub struct TrajectoryCheck {
+    /// Series compared against the baseline.
+    pub compared: usize,
+    /// Human-readable regression descriptions (empty = gate passes).
+    pub regressions: Vec<String>,
+    /// Baseline carried a `"note"` field (seed estimates): schema was
+    /// validated but the regression gate was skipped.
+    pub baseline_is_estimate: bool,
+}
+
+fn entry_key(entry: &Json, id_keys: &[&str]) -> Result<String> {
+    let mut parts = Vec::with_capacity(id_keys.len());
+    for &k in id_keys {
+        let v = entry.get(k).ok_or_else(|| {
+            DriftError::Config(format!("trajectory entry missing identity key {k:?}: {entry:?}"))
+        })?;
+        parts.push(match v {
+            Json::Str(s) => s.clone(),
+            Json::Num(n) => format!("{n}"),
+            other => {
+                return Err(DriftError::Config(format!(
+                    "identity key {k:?} must be a string or number, got {other:?}"
+                )))
+            }
+        });
+    }
+    Ok(parts.join("|"))
+}
+
+fn metric_value(entry: &Json, metric: &str) -> Result<f64> {
+    let v = entry
+        .get(metric)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| DriftError::Config(format!("trajectory entry missing {metric:?}")))?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(DriftError::Config(format!(
+            "trajectory metric {metric:?} must be positive and finite, got {v}"
+        )));
+    }
+    Ok(v)
+}
+
+/// Validate the trajectory document's schema: every section present,
+/// non-empty, and every entry carrying its identity keys (and a valid
+/// gated metric where one is defined).
+pub fn validate_schema(doc: &Json) -> Result<()> {
+    if doc.as_obj().is_none() {
+        return Err(DriftError::Config("trajectory must be a JSON object".into()));
+    }
+    for &(name, id_keys, metric) in SECTIONS {
+        let arr = doc.get(name).and_then(|v| v.as_arr()).ok_or_else(|| {
+            DriftError::Config(format!("trajectory missing array section {name:?}"))
+        })?;
+        if arr.is_empty() {
+            return Err(DriftError::Config(format!(
+                "trajectory section {name:?} is empty — the write path regressed"
+            )));
+        }
+        for entry in arr {
+            entry_key(entry, id_keys)?;
+            if let Some(metric) = metric {
+                metric_value(entry, metric)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate `current`'s schema and gate its `tokens_per_s` series
+/// against `baseline` (the committed trajectory). Sections absent from
+/// the baseline — e.g. freshly added sweeps — are skipped, so adding a
+/// section never trips the gate retroactively.
+pub fn check_trajectory(current: &Json, baseline: &Json) -> Result<TrajectoryCheck> {
+    validate_schema(current)?;
+    let mut out = TrajectoryCheck {
+        baseline_is_estimate: baseline.get("note").is_some(),
+        ..Default::default()
+    };
+    if out.baseline_is_estimate {
+        return Ok(out);
+    }
+    for &(name, id_keys, metric) in SECTIONS {
+        let Some(metric) = metric else { continue };
+        let (Some(cur), Some(base)) = (
+            current.get(name).and_then(|v| v.as_arr()),
+            baseline.get(name).and_then(|v| v.as_arr()),
+        ) else {
+            continue;
+        };
+        let mut base_by_key = std::collections::BTreeMap::new();
+        for entry in base {
+            if let (Ok(key), Ok(v)) = (entry_key(entry, id_keys), metric_value(entry, metric)) {
+                base_by_key.insert(key, v);
+            }
+        }
+        for entry in cur {
+            let key = entry_key(entry, id_keys)?;
+            let now = metric_value(entry, metric)?;
+            if let Some(&was) = base_by_key.get(&key) {
+                out.compared += 1;
+                if now < (1.0 - TOLERANCE) * was {
+                    out.regressions.push(format!(
+                        "{name}[{key}]: {metric} {now:.2} is {:.1}% below baseline {was:.2}",
+                        (1.0 - now / was) * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(model_tps: f64, spec_tps: f64, note: bool) -> Json {
+        let text = format!(
+            r#"{{
+              {}
+              "model_sweep": [
+                {{"model": "m", "device": "d", "batch": 1, "tokens_per_s": {model_tps},
+                  "speedup_vs_b1": 1.0}}
+              ],
+              "fixed_memory_adreno_750": [
+                {{"arena_blocks": 48, "policy": "paged", "tokens_per_s": 100.0}}
+              ],
+              "device_memory_sweep_adreno_750": [
+                {{"arena_blocks": 48, "policy": "paged", "peak_device_bytes": 1000}}
+              ],
+              "speculative_sweep": [
+                {{"model": "m", "device": "d", "k": 2, "acceptance": 0.7,
+                  "tokens_per_s": {spec_tps}}}
+              ],
+              "speculative_serving_m4_pro": [
+                {{"mode": "plain", "k": 0, "acceptance": 0.0, "tokens_per_s": 60.0}}
+              ]
+            }}"#,
+            if note { r#""note": "seed estimates","# } else { "" }
+        );
+        Json::parse(&text).unwrap()
+    }
+
+    #[test]
+    fn valid_schema_and_no_regression_passes() {
+        let base = doc(50.0, 100.0, false);
+        let cur = doc(49.0, 101.0, false); // 2% dip is inside tolerance
+        let r = check_trajectory(&cur, &base).unwrap();
+        assert!(!r.baseline_is_estimate);
+        assert_eq!(r.compared, 4, "model + fixed-memory + both speculative series");
+        assert!(r.regressions.is_empty(), "{:?}", r.regressions);
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_is_reported() {
+        let base = doc(50.0, 100.0, false);
+        let cur = doc(50.0, 85.0, false); // 15% drop in the spec series
+        let r = check_trajectory(&cur, &base).unwrap();
+        assert_eq!(r.regressions.len(), 1, "{:?}", r.regressions);
+        assert!(r.regressions[0].contains("speculative_sweep"), "{:?}", r.regressions);
+    }
+
+    #[test]
+    fn seed_estimated_baseline_skips_the_gate_but_validates_schema() {
+        let base = doc(50.0, 100.0, true); // "note" marks hand estimates
+        let cur = doc(10.0, 10.0, false); // would be a huge "regression"
+        let r = check_trajectory(&cur, &base).unwrap();
+        assert!(r.baseline_is_estimate);
+        assert!(r.regressions.is_empty(), "estimates must not gate");
+        // …but a schema-broken current file still fails.
+        let broken = Json::parse(r#"{"model_sweep": []}"#).unwrap();
+        assert!(check_trajectory(&broken, &base).is_err(), "empty section = broken write path");
+    }
+
+    #[test]
+    fn missing_sections_and_bad_metrics_fail_schema() {
+        assert!(validate_schema(&Json::parse("{}").unwrap()).is_err());
+        assert!(validate_schema(&Json::parse("[1, 2]").unwrap()).is_err());
+        let zero_tps = doc(0.0, 100.0, false);
+        assert!(validate_schema(&zero_tps).is_err(), "tokens_per_s must be positive");
+        // A baseline missing a newly added section doesn't trip the gate.
+        let mut text = doc(50.0, 100.0, false).pretty();
+        text = text.replace("\"speculative_sweep\"", "\"speculative_sweep_old\"");
+        let old_base = Json::parse(&text).unwrap();
+        let cur = doc(50.0, 100.0, false);
+        let r = check_trajectory(&cur, &old_base).unwrap();
+        assert_eq!(r.compared, 3, "spec sweep skipped against the old baseline");
+        assert!(r.regressions.is_empty());
+    }
+}

@@ -441,6 +441,47 @@ impl KvArena {
             .ok_or_else(|| DriftError::Serving(format!("kv arena slot {} not claimed", h.slot)))
     }
 
+    /// Lower a sequence's reservation ceiling to `tokens` (clamped up to
+    /// its committed length — committed rows are never un-reserved),
+    /// releasing whole tail blocks the smaller ceiling no longer needs.
+    /// Returns the released block ids in pop order (tail first) so a
+    /// device-backed store can decommit the same blocks.
+    ///
+    /// This is the give-back half of the **speculative rollback seam**:
+    /// a draft/verify round grows the reservation by up to `k + 1`
+    /// provisional rows ([`grow`](Self::grow)/[`ensure`](Self::ensure)),
+    /// commits the accepted prefix ([`append`](Self::append)) and may
+    /// then return the rejected tail's blocks here. Block conservation
+    /// is preserved by construction: every released block goes back to
+    /// the free list exactly once (property-tested below).
+    pub fn truncate_reservation(&mut self, h: KvSeqHandle, tokens: usize) -> Result<Vec<usize>> {
+        if self.gens.get(h.slot) != Some(&h.gen) {
+            return Err(DriftError::Serving(format!(
+                "stale kv arena handle (slot {}, gen {})",
+                h.slot, h.gen
+            )));
+        }
+        let bt = self.cfg.block_tokens;
+        let e = self
+            .seqs
+            .get_mut(h.slot)
+            .and_then(|s| s.as_mut())
+            .ok_or_else(|| DriftError::Serving(format!("kv arena slot {} not claimed", h.slot)))?;
+        let new_reserved = e.reserved_tokens.min(tokens.max(e.len));
+        e.reserved_tokens = new_reserved;
+        let need = div_ceil(new_reserved, bt);
+        let mut popped = Vec::new();
+        while e.blocks.len() > need {
+            popped.push(e.blocks.pop().expect("length checked above"));
+        }
+        for &b in &popped {
+            debug_assert_eq!(self.owner[b], Some(h.slot), "block {b} owner mismatch");
+            self.owner[b] = None;
+            self.free.push(b);
+        }
+        Ok(popped)
+    }
+
     /// Record `n` newly written token positions for a sequence.
     pub fn append(&mut self, h: KvSeqHandle, n: usize) -> Result<()> {
         let e = self.entry_mut(h)?;
@@ -803,6 +844,35 @@ mod tests {
         assert!(matches!(err, DriftError::Memory(_)), "{err}");
         assert_eq!(a.blocks_in_use(), before, "failed grow took nothing");
         a.verify().unwrap();
+    }
+
+    #[test]
+    fn truncate_reservation_releases_tail_blocks_only() {
+        let mut a = small_arena(8); // blocks of 16 tokens
+        let h = a.claim(16).unwrap();
+        a.append(h, 10).unwrap();
+        // Speculative growth: room for 6 more provisional rows crosses
+        // into a second block.
+        a.ensure(h, 6 + 1).unwrap();
+        assert_eq!(a.blocks_in_use(), 2);
+        // Rollback: only 1 of the provisional rows was accepted.
+        a.append(h, 1).unwrap();
+        let freed = a.truncate_reservation(h, a.len(h)).unwrap();
+        assert_eq!(freed.len(), 1, "the provisional tail block goes back");
+        assert_eq!(a.blocks_in_use(), 1);
+        // Committed rows are never un-reserved: truncating below len clamps.
+        let none = a.truncate_reservation(h, 0).unwrap();
+        assert!(none.is_empty(), "len = 11 keeps its block");
+        assert_eq!(a.len(h), 11);
+        assert!(a.append(h, 1).is_err(), "ceiling followed the truncation to len");
+        // Growth after a truncation re-fills the same block before taking
+        // a new one.
+        assert_eq!(a.ensure(h, 5).unwrap(), 0, "slack within the kept block");
+        a.append(h, 5).unwrap();
+        a.verify().unwrap();
+        // Stale handles are rejected, never resolved to a new occupant.
+        a.release(h);
+        assert!(a.truncate_reservation(h, 0).is_err());
     }
 
     #[test]

@@ -140,6 +140,26 @@ impl KvRegion {
         Ok(())
     }
 
+    /// Zero the K/V rows of token positions `[from, to)` resolved through
+    /// a block table — the scrub half of the speculative rollback seam:
+    /// rejected provisional rows are *really* erased, not merely left
+    /// uncommitted, so a later gather (or a verify pass re-writing the
+    /// same positions) can never observe a rejected draft's rows.
+    pub fn scrub_rows(&mut self, table: &[usize], from: usize, to: usize) -> Result<()> {
+        if to > table.len() * self.cfg.block_tokens {
+            return Err(DriftError::Memory(format!(
+                "scrub of positions [{from}, {to}) exceeds the {}-block table",
+                table.len()
+            )));
+        }
+        let fpt = self.cfg.floats_per_token();
+        for p in from..to {
+            let base = self.token_base(table, p);
+            self.data[base..base + fpt].fill(0.0);
+        }
+        Ok(())
+    }
+
     /// Gather a sequence's first `len` positions into dense §3.8 caches of
     /// capacity `capacity`: K `(L, h_kv, C, d_h)`, V `(L, h_kv, d_h, C)`.
     /// Positions `≥ len` are zero — bit-identical to what the dense path
@@ -351,6 +371,65 @@ impl PagedKvStore {
         self.arena.release(h)
     }
 
+    /// Commit the accepted prefix of a **provisional speculative
+    /// scatter** and scrub the rejected tail.
+    ///
+    /// A draft/verify round writes `written` rows *past* the committed
+    /// length (positions `[len, len + written)`) through
+    /// [`write_token`](Self::write_token) without appending — scatter is
+    /// provisional until acceptance. This call resolves the round: the
+    /// first `keep` provisional rows become part of the sequence
+    /// (`append(keep)` — the accepted prefix is **never** scrubbed), the
+    /// remaining `written - keep` rejected rows are zeroed in the region.
+    /// Block ownership is untouched (the reservation keeps its slack for
+    /// the next round; [`truncate_reservation`](Self::truncate_reservation)
+    /// is the explicit give-back), so block conservation holds trivially
+    /// — both halves are property-tested below.
+    pub fn commit_provisional(
+        &mut self,
+        h: KvSeqHandle,
+        keep: usize,
+        written: usize,
+    ) -> Result<()> {
+        if keep > written {
+            return Err(DriftError::Serving(format!(
+                "speculative commit of {keep} rows exceeds the {written} written"
+            )));
+        }
+        let len = self.arena.len(h);
+        {
+            let table = self.arena.block_table(h)?;
+            self.region.scrub_rows(table, len + keep, len + written)?;
+        }
+        self.arena.append(h, keep)
+    }
+
+    /// Scrub every provisional row a sequence may have written past its
+    /// committed length (the whole reserved tail). The failure-path
+    /// cleanup for an aborted speculative round: whatever the draft or
+    /// verify pass scattered before erroring is erased, and the next
+    /// round starts from committed state only.
+    pub fn scrub_uncommitted(&mut self, h: KvSeqHandle) -> Result<()> {
+        let len = self.arena.len(h);
+        let bt = self.arena.config().block_tokens;
+        let table = self.arena.block_table(h)?;
+        let hi = table.len() * bt;
+        self.region.scrub_rows(table, len, hi)
+    }
+
+    /// Give back the reservation slack past `tokens` (clamped to the
+    /// committed length): releases *and decommits* whole tail blocks —
+    /// the arena's [`KvArena::truncate_reservation`] mirrored into real
+    /// region storage. Returns the device bytes freed.
+    pub fn truncate_reservation(&mut self, h: KvSeqHandle, tokens: usize) -> Result<usize> {
+        let bb = self.config().block_bytes();
+        let popped = self.arena.truncate_reservation(h, tokens)?;
+        for &b in &popped {
+            self.region.release_block(b);
+        }
+        Ok(popped.len() * bb)
+    }
+
     /// Write one decoded token's K/V rows at `pos` through the block
     /// table. Stale handles are rejected by the table lookup.
     pub fn write_token(
@@ -387,15 +466,37 @@ impl PagedKvStore {
         h: KvSeqHandle,
         capacity: usize,
     ) -> Result<(&[f32], &[f32])> {
+        let len = self.arena.len(h);
+        self.gather_dense_scratch_upto(h, len, capacity)
+    }
+
+    /// [`gather_dense_scratch`](Self::gather_dense_scratch) with an
+    /// explicit position horizon: gathers positions `[0, written)`, which
+    /// may run **past the committed length** — the speculative verify
+    /// path gathers through the provisional rows earlier steps of the
+    /// same round scattered (they are exactly what the committed path
+    /// would have written for the accepted prefix, which is what keeps
+    /// spec-decode output token-identical to plain greedy).
+    pub fn gather_dense_scratch_upto(
+        &mut self,
+        h: KvSeqHandle,
+        written: usize,
+        capacity: usize,
+    ) -> Result<(&[f32], &[f32])> {
         let cfg = *self.arena.config();
         let need = cfg.layers * cfg.heads_kv * capacity * cfg.head_dim;
         if self.scratch_k.len() != need {
             self.scratch_k = vec![0.0; need];
             self.scratch_v = vec![0.0; need];
         }
-        let len = self.arena.len(h);
         let table = self.arena.block_table(h)?;
-        self.region.gather_dense(table, len, capacity, &mut self.scratch_k, &mut self.scratch_v)?;
+        self.region.gather_dense(
+            table,
+            written,
+            capacity,
+            &mut self.scratch_k,
+            &mut self.scratch_v,
+        )?;
         Ok((&self.scratch_k, &self.scratch_v))
     }
 
@@ -543,6 +644,137 @@ mod tests {
         let (k, v) = s.gather_dense_scratch(h, cap).unwrap();
         assert_eq!(k, &k_dense[..], "K roundtrip must be bit-exact");
         assert_eq!(v, &v_dense[..], "V roundtrip must be bit-exact");
+    }
+
+    #[test]
+    fn commit_provisional_keeps_accepted_prefix_and_scrubs_rejected_tail() {
+        let mut s = PagedKvStore::new(cfg(8));
+        let row = s.config().layers * s.config().heads_kv * s.config().head_dim;
+        let dh = s.config().head_dim;
+        let cap = 16;
+        let h = s.claim(4).unwrap();
+        for p in 0..4 {
+            s.write_token(h, p, &row_vals(p, 1, row), &row_vals(p, 2, row)).unwrap();
+        }
+        s.append(h, 4).unwrap();
+
+        // Speculative round, k = 3: scatter 4 provisional rows at 4..8
+        // without appending.
+        s.ensure(h, 4).unwrap();
+        for p in 4..8 {
+            s.write_token(h, p, &row_vals(p, 1, row), &row_vals(p, 2, row)).unwrap();
+        }
+        assert_eq!(s.len(h), 4, "provisional scatter must not advance the length");
+        // The verify pass gathers *through* the provisional rows.
+        {
+            let (k, _v) = s.gather_dense_scratch_upto(h, 8, cap).unwrap();
+            assert_eq!(k[7 * dh], row_vals(7, 1, row)[0], "provisional row visible to verify");
+        }
+
+        // Accept 2 of the 3 proposals: keep rows 4..7, scrub row 7.
+        s.commit_provisional(h, 3, 4).unwrap();
+        assert_eq!(s.len(h), 7);
+        let (k, _v) = s.gather_dense_scratch_upto(h, 8, cap).unwrap();
+        assert_eq!(k[6 * dh], row_vals(6, 1, row)[0], "accepted prefix rows intact");
+        assert_eq!(k[7 * dh], 0.0, "rejected row really scrubbed");
+        s.verify().unwrap();
+
+        assert!(s.commit_provisional(h, 2, 1).is_err(), "keep > written rejected");
+
+        // Failure-path cleanup: a half-written aborted round leaves
+        // nothing behind.
+        s.write_token(h, 7, &row_vals(7, 3, row), &row_vals(7, 4, row)).unwrap();
+        s.scrub_uncommitted(h).unwrap();
+        let (k, _v) = s.gather_dense_scratch_upto(h, 8, cap).unwrap();
+        assert_eq!(k[7 * dh], 0.0, "aborted provisional rows erased");
+        assert_eq!(s.len(h), 7, "cleanup never touches committed rows");
+    }
+
+    #[test]
+    fn truncate_reservation_decommits_real_bytes() {
+        let mut s = PagedKvStore::new(cfg(8));
+        let bb = s.config().block_bytes();
+        let h = s.claim(4).unwrap();
+        s.append(h, 4).unwrap();
+        s.ensure(h, 5).unwrap(); // reservation 9 tokens ⇒ 3 blocks
+        assert_eq!(s.device_bytes_in_use(), 3 * bb);
+        let freed = s.truncate_reservation(h, 4).unwrap();
+        assert_eq!(freed, 2 * bb, "slack blocks are really decommitted");
+        assert_eq!(s.device_bytes_in_use(), bb);
+        s.verify().unwrap();
+        s.release(h);
+        assert!(s.truncate_reservation(h, 0).is_err(), "stale handle rejected");
+    }
+
+    #[test]
+    fn property_speculative_rollback_conserves_blocks_and_accepted_rows() {
+        // The speculative rollback invariants, fuzzed over acceptance
+        // ∈ {0..k}: after any sequence of draft/verify rounds (provisional
+        // scatter → commit accepted prefix → scrub rejected tail →
+        // sometimes give back slack blocks), (1) block accounting
+        // conserves and the region watermark stays truthful (`verify`),
+        // (2) every accepted row is still present bit-for-bit, and
+        // (3) every position past the committed length reads zero.
+        check("speculative rollback conserves blocks + rows", Config::cases(48), |rng| {
+            let total = 6 + rng.gen_range(12) as usize;
+            let mut s = PagedKvStore::new(cfg(total));
+            let row = s.config().layers * s.config().heads_kv * s.config().head_dim;
+            let dh = s.config().head_dim;
+            let cap = total * s.config().block_tokens;
+            let ctx = 1 + rng.gen_range(6) as usize;
+            if !s.can_claim(ctx) {
+                return Ok(()); // arena smaller than the context: uninteresting draw
+            }
+            let h = s.claim(ctx).map_err(|e| e.to_string())?;
+            for p in 0..ctx {
+                s.write_token(h, p, &row_vals(p, 1, row), &row_vals(p, 2, row))
+                    .map_err(|e| e.to_string())?;
+            }
+            s.append(h, ctx).map_err(|e| e.to_string())?;
+            let mut committed = ctx;
+            for _round in 0..12 {
+                let k = 1 + rng.gen_range(4) as usize; // draft width 1..=4
+                if s.ensure(h, k + 1).is_err() {
+                    break; // arena exhausted: preemption territory, not this test
+                }
+                for i in 0..=k {
+                    let p = committed + i;
+                    s.write_token(h, p, &row_vals(p, 1, row), &row_vals(p, 2, row))
+                        .map_err(|e| e.to_string())?;
+                }
+                let accepted = rng.gen_range(k as u64 + 1) as usize; // 0..=k fuzzed
+                s.commit_provisional(h, accepted + 1, k + 1).map_err(|e| e.to_string())?;
+                committed += accepted + 1;
+                if rng.gen_bool(0.5) {
+                    s.truncate_reservation(h, committed).map_err(|e| e.to_string())?;
+                }
+                s.verify().map_err(|e| e.to_string())?;
+                if s.len(h) != committed {
+                    return Err(format!("len {} != committed {committed}", s.len(h)));
+                }
+                // Gather through the whole reserved horizon, not just the
+                // committed length — that is the only view in which a
+                // *survived* rejected row would be visible.
+                let hi = s.block_table(h).map_err(|e| e.to_string())?.len()
+                    * s.config().block_tokens;
+                let (kd, _vd) =
+                    s.gather_dense_scratch_upto(h, hi, cap).map_err(|e| e.to_string())?;
+                for p in 0..hi {
+                    let want = if p < committed { row_vals(p, 1, row)[0] } else { 0.0 };
+                    let got = kd[p * dh];
+                    if got != want {
+                        return Err(format!(
+                            "position {p} (committed {committed}): K[0] = {got}, want {want}"
+                        ));
+                    }
+                }
+            }
+            s.release(h);
+            if s.device_bytes_in_use() != 0 {
+                return Err("drained store still holds device bytes".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -27,6 +27,15 @@
 //! correctness is proven end-to-end on the PJRT CPU runtime ([`runtime`]) with
 //! AOT-compiled JAX+Pallas artifacts. See `DESIGN.md` for the substitution map.
 
+// CI runs `cargo clippy --release -- -D warnings` (tier-1 gate). The
+// two style lints below are deliberate idiom, not defects: `graph/graph.rs`
+// mirrors the paper's layer naming (`module_inception`), and the
+// kernel/scatter code indexes parallel strided arrays where iterator
+// rewrites would obscure the §3.8 layout math (`needless_range_loop`).
+// Everything else in clippy's default set stays a hard error.
+#![allow(clippy::module_inception)]
+#![allow(clippy::needless_range_loop)]
+
 pub mod error;
 pub mod util;
 pub mod tensor;

@@ -88,6 +88,21 @@ fn cli() -> Cli {
                 ],
                 positionals: vec![],
             },
+            CommandSpec {
+                name: "bench-check",
+                about: "validate BENCH_batched.json's schema and gate tokens/s regressions \
+                        (>10%) against a committed baseline (`make bench-check`)",
+                args: vec![
+                    opt("current", "../BENCH_batched.json", "freshly written trajectory file"),
+                    opt(
+                        "baseline",
+                        "",
+                        "committed baseline trajectory (required and distinct from --current; \
+                         `make bench-check` snapshots HEAD's file)",
+                    ),
+                ],
+                positionals: vec![],
+            },
         ],
     }
 }
@@ -239,6 +254,49 @@ fn main() -> mldrift::Result<()> {
                 }
             }
             println!("\n{}", engine.stats().report);
+        }
+        "bench-check" => {
+            use mldrift::bench::check_trajectory;
+            use mldrift::util::json::Json;
+            let read = |path: &str| -> mldrift::Result<Json> {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    DriftError::Config(format!("cannot read trajectory {path}: {e}"))
+                })?;
+                Json::parse(&text)
+            };
+            let (cur_path, base_path) = (m.req("current"), m.req("baseline"));
+            // Comparing a file against itself would always pass — refuse
+            // rather than print a vacuous OK.
+            if base_path.is_empty() || base_path == cur_path {
+                return Err(DriftError::Config(
+                    "bench-check needs a --baseline distinct from --current \
+                     (use `make bench-check`, which snapshots HEAD's BENCH_batched.json)"
+                        .into(),
+                ));
+            }
+            let current = read(cur_path)?;
+            let baseline = read(base_path)?;
+            let r = check_trajectory(&current, &baseline)?;
+            if r.baseline_is_estimate {
+                println!(
+                    "bench-check: schema OK; baseline is seed-estimated (top-level \"note\") — \
+                     regression gate arms once a real `make bench` trajectory is committed"
+                );
+            } else if r.regressions.is_empty() {
+                println!(
+                    "bench-check OK: schema valid, {} series compared, no tokens_per_s \
+                     regression > 10%",
+                    r.compared
+                );
+            } else {
+                for reg in &r.regressions {
+                    eprintln!("REGRESSION: {reg}");
+                }
+                return Err(DriftError::Config(format!(
+                    "bench-check failed: {} tokens_per_s series regressed > 10% vs baseline",
+                    r.regressions.len()
+                )));
+            }
         }
         other => return Err(DriftError::Config(format!("unhandled command {other}"))),
     }

@@ -268,9 +268,27 @@ impl TinyLmRuntime {
                 store.len(h)
             )));
         }
+        self.step_at(token, pos, store, h)
+    }
+
+    /// Gather positions `[0, pos)` (committed *and* this round's earlier
+    /// provisional rows), execute the decode artifact on `token` at
+    /// `pos`, and scatter the new K/V row at `pos`. The one execution
+    /// path the committed step ([`decode_step_paged`]
+    /// (Self::decode_step_paged)) and the speculative provisional step
+    /// ([`PagedStepModel::paged_step`]) share — at `pos == len` the
+    /// gather is exactly the committed one, so the committed path is
+    /// bit-identical to what it was before the speculative seam existed.
+    fn step_at(
+        &self,
+        token: i32,
+        pos: usize,
+        store: &mut PagedKvStore,
+        h: KvSeqHandle,
+    ) -> Result<Vec<f32>> {
         let cap = self.manifest.cache_capacity;
         let (logits, k_rows, v_rows) = {
-            let (k, v) = store.gather_dense_scratch(h, cap)?;
+            let (k, v) = store.gather_dense_scratch_upto(h, pos, cap)?;
             // The literals copy the scratch, so the borrow ends here and
             // the store is free for the row write below.
             self.decode_exec(token, pos, k, v)?
@@ -324,6 +342,32 @@ impl TinyLmRuntime {
             .collect()
     }
 
+    /// Run one speculative draft/verify round for every step, in input
+    /// order — the speculative analogue of
+    /// [`decode_round_paged`](Self::decode_round_paged). A failed step
+    /// fails only its own sequence; its provisional rows are scrubbed so
+    /// the next round starts from committed state.
+    pub fn spec_round_paged(
+        &self,
+        draft: &TinyLmRuntime,
+        store: &mut PagedKvStore,
+        draft_store: &mut PagedKvStore,
+        steps: &[(SpecStepArgs, Vec<i32>)],
+    ) -> Vec<Result<(SpecStepOutcome, f64)>> {
+        steps
+            .iter()
+            .map(|(args, catchup)| {
+                let t = Instant::now();
+                let r = speculative_step_greedy(self, draft, store, draft_store, args, catchup);
+                if r.is_err() {
+                    let _ = store.scrub_uncommitted(args.h);
+                    let _ = draft_store.scrub_uncommitted(args.draft_h);
+                }
+                r.map(|out| (out, t.elapsed().as_secs_f64()))
+            })
+            .collect()
+    }
+
     /// Greedy generation: prefill + `steps` decode iterations with
     /// per-token synchronization (the paper's measurement protocol).
     pub fn generate(&self, prompt: &[i32], steps: usize) -> Result<GenerationResult> {
@@ -363,6 +407,176 @@ impl TinyLmRuntime {
         }
         Ok(())
     }
+}
+
+/// The one greedy-decode primitive speculative decoding is built from:
+/// consume `token` at position `pos` against a paged store, write the
+/// K/V row at `pos` through the block table, and return the
+/// next-position logits.
+///
+/// `pos` may run **ahead of the committed length** — that is the
+/// provisional scatter of a draft/verify round (the caller resolves it
+/// with [`PagedKvStore::commit_provisional`]). Implementations must
+/// gather context through `pos` (committed rows plus this round's
+/// earlier provisional rows) and must refuse `pos < len` (rewriting a
+/// committed row is never part of the protocol).
+///
+/// Implemented by [`TinyLmRuntime`] over the real PJRT decode artifact;
+/// the tests implement it with a deterministic fake so the speculative
+/// algorithm's token-identity and rollback guarantees are provable
+/// without PJRT.
+pub trait PagedStepModel {
+    fn paged_step(
+        &self,
+        token: i32,
+        pos: usize,
+        store: &mut PagedKvStore,
+        h: KvSeqHandle,
+    ) -> Result<Vec<f32>>;
+}
+
+impl PagedStepModel for TinyLmRuntime {
+    fn paged_step(
+        &self,
+        token: i32,
+        pos: usize,
+        store: &mut PagedKvStore,
+        h: KvSeqHandle,
+    ) -> Result<Vec<f32>> {
+        if pos < store.len(h) {
+            return Err(DriftError::Serving(format!(
+                "speculative step at {pos} would rewrite a committed row (len {})",
+                store.len(h)
+            )));
+        }
+        self.step_at(token, pos, store, h)
+    }
+}
+
+/// One sequence's slot in a speculative draft/verify round.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecStepArgs {
+    /// The pending token (emitted this round; computed by the previous
+    /// round's logits — exactly the plain decode path's input).
+    pub token: i32,
+    /// Committed context length = the pending token's position.
+    pub pos: usize,
+    /// Draft proposals this round (`k ≥ 1`; the caller caps it so
+    /// `1 + k` emissions never exceed the request's budget).
+    pub k: usize,
+    /// Target-store handle.
+    pub h: KvSeqHandle,
+    /// Draft-store handle.
+    pub draft_h: KvSeqHandle,
+}
+
+/// What one speculative round produced for one sequence.
+#[derive(Clone, Debug)]
+pub struct SpecStepOutcome {
+    /// Accepted draft proposals, in emission order (the pending token is
+    /// emitted by the caller; these follow it). `accepted_tokens.len()`
+    /// ∈ `0..=k`.
+    pub accepted_tokens: Vec<i32>,
+    /// Proposals offered (= `k`; kept so acceptance-rate accounting does
+    /// not need the args).
+    pub proposed: usize,
+    /// The next pending token — the target's greedy choice at the first
+    /// position the draft got wrong (or the continuation when all `k`
+    /// were accepted). Identical to what plain greedy decode would
+    /// produce at that position.
+    pub next_token: i32,
+}
+
+/// One greedy draft-k speculative round for one sequence
+/// (Leviathan et al. 2023 / Chen et al. 2023, greedy special case):
+///
+/// 1. **Catch-up** — the draft consumes any committed tokens it has not
+///    seen (its KV lags the target's by ≤ 1 row after a fully-accepted
+///    round), committing those rows.
+/// 2. **Draft** — `k` greedy draft steps from the pending token propose
+///    `t₁ … t_k`, scattered provisionally into the draft store.
+/// 3. **Verify** — the target scores all `k + 1` positions
+///    `pos … pos + k` (consuming the pending token then each proposal),
+///    scattering provisional rows. On the B=1 PJRT CPU artifact the
+///    positions execute as a loop — numerics are exactly the sequential
+///    greedy ones, which is what makes the identity guarantee below
+///    hold; the one-pass batched latency is what the cost model prices
+///    ([`crate::sim::exec::verify_time_s`]).
+/// 4. **Accept** — the longest prefix of proposals matching the target's
+///    greedy choices is accepted; `commit_provisional` keeps the
+///    accepted rows (pending + accepted) and scrubs the rejected tail in
+///    both stores.
+///
+/// **Output identity:** every emitted token is the argmax of target
+/// logits computed over a fully-accepted prefix, so the emitted stream
+/// is token-identical to plain greedy decode *regardless of draft
+/// quality* — a bad draft costs rounds, never correctness. Capacity for
+/// the provisional rows (`k + 1` target, catch-up `+ k` draft) must be
+/// ensured by the caller (the scheduler's growth/preemption loop); a
+/// mid-step shortfall surfaces as an error for this sequence only.
+pub fn speculative_step_greedy(
+    target: &impl PagedStepModel,
+    draft: &impl PagedStepModel,
+    store: &mut PagedKvStore,
+    draft_store: &mut PagedKvStore,
+    args: &SpecStepArgs,
+    catchup: &[i32],
+) -> Result<SpecStepOutcome> {
+    let SpecStepArgs { token, pos, k, h, draft_h } = *args;
+    let mut dpos = draft_store.len(draft_h);
+    if dpos + catchup.len() != pos {
+        return Err(DriftError::Serving(format!(
+            "draft catch-up mismatch: {} committed + {} catch-up tokens != position {pos}",
+            dpos,
+            catchup.len()
+        )));
+    }
+    for &t in catchup {
+        draft_store.ensure(draft_h, 1)?;
+        draft.paged_step(t, dpos, draft_store, draft_h)?;
+        draft_store.append(draft_h, 1)?;
+        dpos += 1;
+    }
+
+    // Draft: k provisional rows at pos .. pos + k - 1.
+    draft_store.ensure(draft_h, k)?;
+    let mut proposals = Vec::with_capacity(k);
+    let mut t = token;
+    for i in 0..k {
+        let logits = draft.paged_step(t, pos + i, draft_store, draft_h)?;
+        t = argmax(&logits) as i32;
+        proposals.push(t);
+    }
+
+    // Verify: the target scores k + 1 positions (provisional rows at
+    // pos .. pos + k), recording its greedy choice for each successor.
+    store.ensure(h, k + 1)?;
+    let mut verdicts = Vec::with_capacity(k + 1);
+    let mut x = token;
+    for i in 0..=k {
+        let logits = target.paged_step(x, pos + i, store, h)?;
+        verdicts.push(argmax(&logits) as i32);
+        if i < k {
+            x = proposals[i];
+        }
+    }
+
+    // Accept the longest matching prefix; the target's choice at the
+    // first divergence is the next pending token.
+    let mut accepted = 0;
+    while accepted < k && proposals[accepted] == verdicts[accepted] {
+        accepted += 1;
+    }
+    let next_token = verdicts[accepted];
+
+    // Commit pending + accepted rows; scrub the rejected provisional
+    // tail in both stores (the draft never consumed the last proposal,
+    // so it wrote only k rows and keeps at most that many).
+    store.commit_provisional(h, accepted + 1, k + 1)?;
+    draft_store.commit_provisional(draft_h, (accepted + 1).min(k), k)?;
+
+    proposals.truncate(accepted);
+    Ok(SpecStepOutcome { accepted_tokens: proposals, proposed: k, next_token })
 }
 
 /// Scatter one step's new K/V rows (`(L, h_kv, d_h)` each) into dense
@@ -468,6 +682,250 @@ mod tests {
             assert_eq!(gk, &dense.k[..], "gathered K must match dense bit-for-bit");
             assert_eq!(gv, &dense.v[..], "gathered V must match dense bit-for-bit");
         }
+    }
+
+    /// Deterministic stand-in model for PJRT-free speculative tests: the
+    /// logits depend on (token, position, **a digest of the gathered
+    /// KV**), so any rollback bug — a surviving rejected row, a scrubbed
+    /// accepted row — changes downstream logits and diverges the token
+    /// stream. Rows are pure functions of (token, position), exactly like
+    /// the real artifact's are of its inputs.
+    struct FakeLm {
+        m: TinyLmManifest,
+    }
+
+    impl FakeLm {
+        fn rows(&self, token: i32, pos: usize) -> (Vec<f32>, Vec<f32>) {
+            let row = self.m.layers * self.m.heads_kv * self.m.head_dim;
+            let k = (0..row)
+                .map(|j| ((token as usize * 29 + pos * 7 + j) as f32 * 0.013).sin())
+                .collect();
+            let v = (0..row)
+                .map(|j| ((token as usize * 13 + pos * 3 + j) as f32 * 0.021).cos())
+                .collect();
+            (k, v)
+        }
+    }
+
+    impl PagedStepModel for FakeLm {
+        fn paged_step(
+            &self,
+            token: i32,
+            pos: usize,
+            store: &mut PagedKvStore,
+            h: KvSeqHandle,
+        ) -> Result<Vec<f32>> {
+            if pos < store.len(h) {
+                return Err(crate::error::DriftError::Serving(format!(
+                    "fake step at {pos} would rewrite a committed row (len {})",
+                    store.len(h)
+                )));
+            }
+            let digest: f32 = {
+                let (kd, _vd) = store.gather_dense_scratch_upto(h, pos, self.m.cache_capacity)?;
+                kd.iter().step_by(97).sum()
+            };
+            let (kr, vr) = self.rows(token, pos);
+            store.write_token(h, pos, &kr, &vr)?;
+            Ok((0..self.m.vocab)
+                .map(|j| {
+                    (j as f32 * 0.619 + token as f32 * 0.377 + pos as f32 * 0.173
+                        + digest * 0.831)
+                        .sin()
+                })
+                .collect())
+        }
+    }
+
+    /// A maximally unhelpful draft: always proposes `favorite`, whatever
+    /// the context. Greedy speculative decoding must still emit exactly
+    /// the target's token stream — a bad draft costs rounds, never
+    /// correctness.
+    struct StubbornDraft {
+        inner: FakeLm,
+        favorite: usize,
+    }
+
+    impl PagedStepModel for StubbornDraft {
+        fn paged_step(
+            &self,
+            token: i32,
+            pos: usize,
+            store: &mut PagedKvStore,
+            h: KvSeqHandle,
+        ) -> Result<Vec<f32>> {
+            self.inner.paged_step(token, pos, store, h)?;
+            let mut logits = vec![0.0; self.inner.m.vocab];
+            logits[self.favorite.min(self.inner.m.vocab - 1)] = 1.0;
+            Ok(logits)
+        }
+    }
+
+    fn spec_store(m: &TinyLmManifest) -> (PagedKvStore, KvSeqHandle) {
+        let mut s = PagedKvStore::new(KvArenaConfig {
+            layers: m.layers,
+            heads_kv: m.heads_kv,
+            head_dim: m.head_dim,
+            block_tokens: 4,
+            num_blocks: 10,
+        });
+        let h = s.claim(0).unwrap();
+        (s, h)
+    }
+
+    /// Consume `prompt` as committed steps (a step-by-step prefill);
+    /// returns the pending next token from the final logits.
+    fn drive_prompt(
+        model: &impl PagedStepModel,
+        s: &mut PagedKvStore,
+        h: KvSeqHandle,
+        prompt: &[i32],
+    ) -> i32 {
+        let mut next = 0;
+        for (p, &t) in prompt.iter().enumerate() {
+            s.ensure(h, 1).unwrap();
+            let logits = model.paged_step(t, p, s, h).unwrap();
+            s.append(h, 1).unwrap();
+            next = argmax(&logits) as i32;
+        }
+        next
+    }
+
+    /// Plain committed greedy decode: the reference stream + store state.
+    fn greedy_reference(
+        model: &impl PagedStepModel,
+        s: &mut PagedKvStore,
+        h: KvSeqHandle,
+        prompt: &[i32],
+        n: usize,
+    ) -> Vec<i32> {
+        let mut pending = drive_prompt(model, s, h, prompt);
+        let mut out = Vec::with_capacity(n);
+        let mut pos = prompt.len();
+        for _ in 0..n {
+            out.push(pending);
+            s.ensure(h, 1).unwrap();
+            let logits = model.paged_step(pending, pos, s, h).unwrap();
+            s.append(h, 1).unwrap();
+            pending = argmax(&logits) as i32;
+            pos += 1;
+        }
+        out
+    }
+
+    /// Speculative greedy decode to exactly `n` emissions; returns
+    /// (emitted stream, rounds used, total accepted proposals).
+    fn greedy_speculative(
+        target: &impl PagedStepModel,
+        draft: &impl PagedStepModel,
+        s: &mut PagedKvStore,
+        ds: &mut PagedKvStore,
+        h: KvSeqHandle,
+        dh: KvSeqHandle,
+        prompt: &[i32],
+        n: usize,
+        k: usize,
+    ) -> (Vec<i32>, usize, usize) {
+        let mut pending = drive_prompt(target, s, h, prompt);
+        let _ = drive_prompt(draft, ds, dh, prompt);
+        let mut emitted: Vec<i32> = Vec::with_capacity(n);
+        let mut pos = prompt.len();
+        let (mut rounds, mut accepted_total) = (0usize, 0usize);
+        while emitted.len() < n {
+            let k_eff = k.min(n - emitted.len() - 1);
+            rounds += 1;
+            if k_eff == 0 {
+                // Final emission: a plain committed step, like the
+                // reference (keeps the two stores position-for-position
+                // comparable).
+                emitted.push(pending);
+                s.ensure(h, 1).unwrap();
+                let logits = target.paged_step(pending, pos, s, h).unwrap();
+                s.append(h, 1).unwrap();
+                pending = argmax(&logits) as i32;
+                pos += 1;
+                continue;
+            }
+            let dlen = ds.len(dh);
+            let catchup: Vec<i32> = (dlen..pos)
+                .map(|p| if p < prompt.len() { prompt[p] } else { emitted[p - prompt.len()] })
+                .collect();
+            let args = SpecStepArgs { token: pending, pos, k: k_eff, h, draft_h: dh };
+            let out = speculative_step_greedy(target, draft, s, ds, &args, &catchup).unwrap();
+            emitted.push(pending);
+            emitted.extend(&out.accepted_tokens);
+            accepted_total += out.accepted_tokens.len();
+            pos += 1 + out.accepted_tokens.len();
+            pending = out.next_token;
+        }
+        (emitted, rounds, accepted_total)
+    }
+
+    #[test]
+    fn speculative_with_perfect_draft_is_token_identical_and_accepts_k() {
+        // draft = target ⇒ every proposal matches the verify pass, so
+        // acceptance is k by construction, rounds collapse by ~(k+1)×,
+        // and the emitted stream AND the committed KV state are
+        // bit-identical to plain greedy decode.
+        let m = tiny_manifest();
+        let (prompt, n, k) = (vec![3, 1, 4, 1, 5], 12usize, 3usize);
+        let target = FakeLm { m: m.clone() };
+
+        let (mut s_ref, h_ref) = spec_store(&m);
+        let reference = greedy_reference(&target, &mut s_ref, h_ref, &prompt, n);
+
+        let draft = FakeLm { m: m.clone() };
+        let (mut s, h) = spec_store(&m);
+        let (mut ds, dh) = spec_store(&m);
+        let (emitted, rounds, accepted) =
+            greedy_speculative(&target, &draft, &mut s, &mut ds, h, dh, &prompt, n, k);
+
+        assert_eq!(emitted, reference, "spec output must be token-identical");
+        assert!(
+            rounds < n,
+            "a perfect draft must emit > 1 token/round: {rounds} rounds for {n} tokens"
+        );
+        // Every non-final round accepted its full k_eff.
+        assert_eq!(accepted + rounds, n, "accepted + one pending per round = emissions");
+
+        // Committed KV state is bitwise identical to the reference path.
+        assert_eq!(s.len(h), s_ref.len(h_ref));
+        let cap = m.cache_capacity;
+        let (k_spec, v_spec) = s.gather_dense_scratch(h, cap).unwrap();
+        let (k_ref, v_ref) = s_ref.gather_dense_scratch(h_ref, cap).unwrap();
+        assert_eq!(k_spec, k_ref, "accepted rows must reproduce the committed path's K");
+        assert_eq!(v_spec, v_ref, "accepted rows must reproduce the committed path's V");
+        s.verify().unwrap();
+        ds.verify().unwrap();
+    }
+
+    #[test]
+    fn speculative_with_adversarial_draft_is_still_token_identical() {
+        // The output-identity guarantee must not depend on draft quality:
+        // a draft that always proposes the same token gets (almost)
+        // nothing accepted, every rejected provisional row is rolled
+        // back, and the stream still equals plain greedy exactly.
+        let m = tiny_manifest();
+        let (prompt, n, k) = (vec![7, 2, 9], 10usize, 4usize);
+        let target = FakeLm { m: m.clone() };
+
+        let (mut s_ref, h_ref) = spec_store(&m);
+        let reference = greedy_reference(&target, &mut s_ref, h_ref, &prompt, n);
+
+        let draft = StubbornDraft { inner: FakeLm { m: m.clone() }, favorite: 11 };
+        let (mut s, h) = spec_store(&m);
+        let (mut ds, dh) = spec_store(&m);
+        let (emitted, rounds, accepted) =
+            greedy_speculative(&target, &draft, &mut s, &mut ds, h, dh, &prompt, n, k);
+
+        assert_eq!(emitted, reference, "bad drafts cost rounds, never correctness");
+        assert!(accepted < rounds * k, "a stubborn draft cannot be mostly right");
+        let cap = m.cache_capacity;
+        let (k_spec, _) = s.gather_dense_scratch(h, cap).unwrap();
+        let (k_ref, _) = s_ref.gather_dense_scratch(h_ref, cap).unwrap();
+        assert_eq!(k_spec, k_ref, "rollback must leave exactly the committed-path state");
+        s.verify().unwrap();
+        ds.verify().unwrap();
     }
 
     #[test]

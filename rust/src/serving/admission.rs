@@ -74,6 +74,13 @@ impl AdmissionPolicy {
     /// fresh request, prompt + generated for a re-admitted preempted
     /// sequence). `mean_gen` is the observed mean generation length, if
     /// any completions have been recorded yet.
+    ///
+    /// All of this math is **token**-denominated, never round-denominated:
+    /// under speculative decode a round emits `1 + accepted` tokens, and
+    /// both the generated-so-far credit (`context_tokens - prompt`) and
+    /// `mean_gen` (fed from per-token counters) grow by accepted tokens —
+    /// so the expected footprint stays correct whatever the acceptance
+    /// rate does.
     pub fn footprint(
         &self,
         req: &InferenceRequest,
@@ -163,6 +170,22 @@ mod tests {
         assert_eq!(AdmissionPolicy::WorstCase.footprint(&r, 96, None), 96 + 160);
         let p = AdmissionPolicy::Expected { safety_margin: 1.0 };
         assert_eq!(p.footprint(&r, 96, Some(8.0)), 96 + 8);
+    }
+
+    #[test]
+    fn footprint_counts_accepted_tokens_not_rounds() {
+        // Speculative decode: 20 tokens generated across 5 rounds
+        // (acceptance widened every round). The re-admission footprint
+        // must charge all 20 generated tokens against the budget — a
+        // round-denominated estimate would under-count by the acceptance
+        // factor and over-admit exactly when spec decode performs best.
+        let r = req(32, 64);
+        // context = 32 prompt + 20 generated ⇒ 44 of the budget remain.
+        assert_eq!(AdmissionPolicy::WorstCase.footprint(&r, 52, None), 52 + 44);
+        let p = AdmissionPolicy::Expected { safety_margin: 1.0 };
+        assert_eq!(p.footprint(&r, 52, Some(10.0)), 52 + 10);
+        // The expectation still clamps to the remaining token budget.
+        assert_eq!(p.footprint(&r, 52, Some(100.0)), 52 + 44);
     }
 
     #[test]

@@ -37,6 +37,12 @@ pub struct Metrics {
     /// nonzero iff eviction actually lowered the device watermark, which
     /// is exactly what the paged-KV e2e test asserts.
     pub kv_bytes_freed_by_preemption: AtomicU64,
+    /// Speculative decode: draft tokens proposed across all rounds.
+    pub spec_proposed_tokens: AtomicU64,
+    /// Speculative decode: draft tokens accepted by the verify pass. The
+    /// ratio to `spec_proposed_tokens` is the live acceptance rate — the
+    /// signal the draft-k breakeven math keys on.
+    pub spec_accepted_tokens: AtomicU64,
     ttft: Mutex<Histogram>,
     decode_step: Mutex<Histogram>,
     e2e: Mutex<Histogram>,
@@ -64,6 +70,8 @@ impl Default for Metrics {
             kv_device_bytes_in_use: AtomicU64::new(0),
             kv_device_bytes_peak: AtomicU64::new(0),
             kv_bytes_freed_by_preemption: AtomicU64::new(0),
+            spec_proposed_tokens: AtomicU64::new(0),
+            spec_accepted_tokens: AtomicU64::new(0),
             // 100 µs .. ~100 s exponential buckets.
             ttft: Mutex::new(Histogram::exponential(1e-4, 1.6, 32)),
             decode_step: Mutex::new(Histogram::exponential(1e-5, 1.6, 32)),
@@ -131,9 +139,31 @@ impl Metrics {
         )
     }
 
+    /// Record one speculative draft/verify step: proposals offered and
+    /// proposals the verify pass accepted.
+    pub fn record_spec(&self, proposed: u64, accepted: u64) {
+        self.spec_proposed_tokens.fetch_add(proposed, Ordering::Relaxed);
+        self.spec_accepted_tokens.fetch_add(accepted, Ordering::Relaxed);
+    }
+
+    /// Live draft-acceptance rate (accepted / proposed); `None` until the
+    /// first speculative round runs.
+    pub fn spec_acceptance(&self) -> Option<f64> {
+        let proposed = self.spec_proposed_tokens.load(Ordering::Relaxed);
+        if proposed == 0 {
+            return None;
+        }
+        Some(self.spec_accepted_tokens.load(Ordering::Relaxed) as f64 / proposed as f64)
+    }
+
     /// Record one executed round: decode-batch occupancy and generated
-    /// tokens. Zero-valued samples (pure-prefill rounds, or emission-only
-    /// rounds with no executed step) don't pollute either distribution.
+    /// tokens. **Per-round**, not at completion — `gen_tokens` is what
+    /// this round emitted (final-token emissions plus speculative
+    /// acceptance push it past the executed batch size), so the
+    /// tokens-per-round histogram stays meaningful once rounds emit more
+    /// than one token per sequence. Zero-valued samples (pure-prefill
+    /// rounds, or emission-only rounds with no executed step) don't
+    /// pollute either distribution.
     pub fn record_round(&self, decode_batch: usize, gen_tokens: usize) {
         self.rounds_executed.fetch_add(1, Ordering::Relaxed);
         if decode_batch > 0 {
@@ -178,6 +208,7 @@ impl Metrics {
             "requests: {} submitted, {} completed | tokens: {} prefill, {} generated\n\
              ttft p50 {:.1} ms, p95 {:.1} ms | decode step p50 {:.2} ms, p95 {:.2} ms | e2e mean {:.1} ms\n\
              rounds: {} | batch occupancy mean {:.2}, p50 {:.0}, max {:.0} | tokens/round mean {:.2}\n\
+             speculative: {} proposed, {} accepted ({}) | \
              preemptions: {} | re-prefill tokens: {} | kv device bytes: {} in use, {} peak, \
              {} freed by preemption",
             self.requests_submitted.load(Ordering::Relaxed),
@@ -194,6 +225,12 @@ impl Metrics {
             occ_p50,
             occ_max,
             self.tokens_per_round_mean(),
+            self.spec_proposed_tokens.load(Ordering::Relaxed),
+            self.spec_accepted_tokens.load(Ordering::Relaxed),
+            match self.spec_acceptance() {
+                Some(a) => format!("{:.0}%", a * 100.0),
+                None => "off".to_string(),
+            },
             self.preemptions.load(Ordering::Relaxed),
             self.reprefill_tokens.load(Ordering::Relaxed),
             self.kv_device_bytes_in_use.load(Ordering::Relaxed),
@@ -268,6 +305,37 @@ mod tests {
         assert_eq!(m.kv_device_bytes_in_use.load(Ordering::Relaxed), 1 << 20);
         assert_eq!(m.kv_device_bytes_peak.load(Ordering::Relaxed), 2 << 20);
         assert!(m.report().contains("kv device bytes"));
+    }
+
+    #[test]
+    fn tokens_per_round_is_recorded_per_round_not_at_completion() {
+        // Regression for the speculative-decode seam: the histogram must
+        // sample what each *round* emitted (pending + accepted tokens),
+        // and completions must not feed it — recording `gen_tokens` at
+        // completion would collapse the distribution to per-request
+        // totals and make acceptance invisible.
+        let m = Metrics::default();
+        m.record_round(1, 3); // spec round: pending + 2 accepted
+        m.record_round(1, 1); // plain round
+        assert!((m.tokens_per_round_mean() - 2.0).abs() < 1e-9);
+        m.record_completion(64, 40, 0.05, 0.5);
+        assert!(
+            (m.tokens_per_round_mean() - 2.0).abs() < 1e-9,
+            "completion totals must not leak into the per-round histogram"
+        );
+    }
+
+    #[test]
+    fn spec_counters_and_acceptance_rate() {
+        let m = Metrics::default();
+        assert_eq!(m.spec_acceptance(), None, "no speculative rounds yet");
+        assert!(m.report().contains("speculative: 0 proposed, 0 accepted (off)"));
+        m.record_spec(4, 3);
+        m.record_spec(4, 1);
+        assert_eq!(m.spec_proposed_tokens.load(Ordering::Relaxed), 8);
+        assert_eq!(m.spec_accepted_tokens.load(Ordering::Relaxed), 4);
+        assert_eq!(m.spec_acceptance(), Some(0.5));
+        assert!(m.report().contains("speculative: 8 proposed, 4 accepted (50%)"));
     }
 
     #[test]

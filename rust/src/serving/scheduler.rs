@@ -279,21 +279,27 @@ impl Scheduler {
             .map(|(_, s)| s.request.id)
     }
 
-    /// Make room for one more KV row for every sequence in `needs_row`,
-    /// evicting victims when the KV pool cannot grow — the one
-    /// growth/preemption loop both the engine and the serving simulator
-    /// run, so their policies can never diverge. Generic over [`KvPool`]:
-    /// the simulator passes the accounting [`crate::kv::KvArena`], the
-    /// engine the device-backed [`crate::kv::PagedKvStore`] — so in the
-    /// engine an eviction here releases (and scrubs) real region bytes.
+    /// Make room for `rows` more KV rows for every `(id, rows)` in
+    /// `needs_rows`, evicting victims when the KV pool cannot grow — the
+    /// one growth/preemption loop both the engine and the serving
+    /// simulator run, so their policies can never diverge. Generic over
+    /// [`KvPool`]: the simulator passes the accounting
+    /// [`crate::kv::KvArena`], the engine the device-backed
+    /// [`crate::kv::PagedKvStore`] — so in the engine an eviction here
+    /// releases (and scrubs) real region bytes.
     ///
-    /// For each id in order: [`KvPool::ensure`]`(h, 1)`; on exhaustion,
-    /// evict [`choose_victim`](Self::choose_victim) (escalating past pins
-    /// only when the FIFO head itself is the one growing), release the
-    /// victim's blocks, call `on_evict(victim, reprefill_bill,
-    /// device_bytes_freed)` so the caller can park its runtime state and
-    /// record metrics, and retry. If no victim exists — or the grower
-    /// evicted itself — the sequence is **held out**.
+    /// Plain decode needs one row per sequence; a **speculative**
+    /// sequence needs `k + 1` (the round's provisional draft/verify
+    /// scatter — rejected rows are scrubbed after acceptance, but the
+    /// blocks must exist before any state advances).
+    ///
+    /// For each entry in order: [`KvPool::ensure`]`(h, rows)`; on
+    /// exhaustion, evict [`choose_victim`](Self::choose_victim)
+    /// (escalating past pins only when the FIFO head itself is the one
+    /// growing), release the victim's blocks, call `on_evict(victim,
+    /// reprefill_bill, device_bytes_freed)` so the caller can park its
+    /// runtime state and record metrics, and retry. If no victim exists —
+    /// or the grower evicted itself — the sequence is **held out**.
     ///
     /// Returns the held-out set: every evicted victim plus every
     /// capacity-starved grower. Held-out sequences must sit the whole
@@ -303,17 +309,17 @@ impl Scheduler {
         &mut self,
         kv: &mut K,
         handles: &mut HashMap<RequestId, KvSeqHandle>,
-        needs_row: &[RequestId],
+        needs_rows: &[(RequestId, usize)],
         mut on_evict: impl FnMut(RequestId, usize, usize),
     ) -> HashSet<RequestId> {
         let mut held_out = HashSet::new();
-        for &id in needs_row {
+        for &(id, rows) in needs_rows {
             if held_out.contains(&id) {
                 continue; // evicted by an earlier member's growth
             }
             let h = handles[&id];
             loop {
-                match kv.ensure(h, 1) {
+                match kv.ensure(h, rows) {
                     Ok(_) => break,
                     Err(_) => {
                         // Pinning yields when the FIFO head itself needs
@@ -738,11 +744,13 @@ mod tests {
         let round = s.next_round();
         assert_eq!(round.decode_batch, vec![0]);
         assert_eq!(round.prefills, vec![1]);
+        let needs: Vec<(RequestId, usize)> =
+            round.decode_batch.iter().map(|&id| (id, 1)).collect();
         let mut evicted = Vec::new();
         let held_out = s.ensure_round_capacity(
             &mut arena,
             &mut handles,
-            &round.decode_batch,
+            &needs,
             |v, bill, freed| {
                 evicted.push((v, bill));
                 assert!(freed > 0, "evicting a claimed sequence must free bytes");
@@ -755,6 +763,55 @@ mod tests {
         assert!(!handles.contains_key(&1), "victim handle released");
         // Seq 0 got its block: the KV-row append cannot overflow now.
         arena.append(handles[&0], 1).unwrap();
+        arena.verify().unwrap();
+    }
+
+    #[test]
+    fn speculative_multi_row_growth_follows_the_same_eviction_policy() {
+        // A speculative sequence needs k+1 provisional rows before the
+        // round runs; exhaustion mid-growth must pick the same victims
+        // as plain single-row growth (policy shared, not duplicated).
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_active: 2,
+            max_prefills_per_round: 2,
+            ..Default::default()
+        });
+        let mut arena = KvArena::new(KvArenaConfig {
+            layers: 1,
+            heads_kv: 1,
+            head_dim: 64,
+            block_tokens: 16,
+            num_blocks: 3,
+        });
+        let mut handles = std::collections::HashMap::new();
+        s.submit(req(0, 16, 64));
+        s.submit(req(1, 32, 8));
+        s.admit_where(|r, ctx| match arena.claim(ctx) {
+            Ok(h) => {
+                handles.insert(r.id, h);
+                true
+            }
+            Err(_) => false,
+        });
+        let r = s.next_round();
+        execute_round(&mut s, &r); // both prefill
+        arena.append(handles[&0], 16).unwrap();
+        arena.append(handles[&1], 32).unwrap();
+        assert_eq!(arena.blocks_free(), 0);
+
+        // Seq 0 speculates with k = 4 ⇒ needs 5 rows; only evicting seq 1
+        // (2 blocks) makes room.
+        let mut evicted = Vec::new();
+        let held_out = s.ensure_round_capacity(
+            &mut arena,
+            &mut handles,
+            &[(0, 5)],
+            |v, bill, _freed| evicted.push((v, bill)),
+        );
+        assert_eq!(evicted, vec![(1, 32)], "victim bills its prefilled context");
+        assert!(held_out.contains(&1));
+        assert!(!held_out.contains(&0), "the grower got its rows");
+        arena.append(handles[&0], 5).unwrap();
         arena.verify().unwrap();
     }
 

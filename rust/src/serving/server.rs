@@ -26,6 +26,18 @@
 //! `kv_device_bytes_*` gauges), not just arena accounting. The victim
 //! re-prefills its whole context on re-admission — recompute semantics,
 //! so eviction costs latency, never tokens.
+//!
+//! **Speculative decoding** ([`ServingEngine::start_speculative`]): a
+//! draft model registered next to the target proposes `k` tokens per
+//! sequence per round; the target verifies all `k + 1` positions and the
+//! longest matching prefix is emitted in one round (tokens/round >
+//! batch occupancy — the gap `Metrics::tokens_per_round` exists to
+//! show). Draft KV lives in its own worst-case-sized paged store;
+//! rejected provisional rows are scrubbed via the
+//! [`PagedKvStore::commit_provisional`] rollback seam; admission claims
+//! draft context alongside target context; eviction and reap release
+//! both. Output is token-identical to plain greedy decode by
+//! construction — see [`crate::runtime::speculative_step_greedy`].
 
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -35,7 +47,7 @@ use std::time::Instant;
 
 use crate::error::{DriftError, Result};
 use crate::kv::{KvArenaConfig, KvSeqHandle, PagedKvStore};
-use crate::runtime::tinylm::{PagedRoundStep, TinyLmRuntime};
+use crate::runtime::tinylm::{PagedRoundStep, SpecStepArgs, TinyLmRuntime};
 use crate::runtime::Runtime;
 use crate::serving::admission::AdmissionPolicy;
 use crate::serving::metrics::Metrics;
@@ -58,6 +70,22 @@ pub struct ServerStats {
     pub completed: u64,
     pub tokens_generated: u64,
     pub report: String,
+}
+
+/// Speculative-decode configuration: a draft model registered next to
+/// the target. Greedy draft-k: each round the draft proposes `draft_k`
+/// tokens per sequence, the target verifies all `k + 1` positions, the
+/// longest matching prefix is accepted and rejected KV rows are rolled
+/// back — output is token-identical to plain greedy decode whatever the
+/// draft proposes ([`crate::runtime::speculative_step_greedy`]).
+#[derive(Clone, Debug)]
+pub struct SpecConfig {
+    /// Artifacts directory of the draft model (a truncated/distilled
+    /// TinyLM; pointing it at the target's own artifacts gives
+    /// acceptance = k by construction — the e2e identity fixture).
+    pub draft_artifacts_dir: String,
+    /// Draft proposals per sequence per round (clamped to ≥ 1).
+    pub draft_k: usize,
 }
 
 /// Per-sequence runtime state the scheduler doesn't own: the pending
@@ -173,6 +201,30 @@ impl ServingEngine {
         sched_cfg: SchedulerConfig,
         policy: AdmissionPolicy,
     ) -> Result<ServingEngine> {
+        Self::start_inner(artifacts_dir, sched_cfg, policy, None)
+    }
+
+    /// Start the engine with greedy draft-k **speculative decoding**: a
+    /// draft model is loaded next to the target and every decode round
+    /// runs the draft/verify path for sequences it can serve (falling
+    /// back to plain decode per sequence when the draft cannot — capacity
+    /// or prefill-bucket limits — so speculation is an optimization,
+    /// never a new failure mode).
+    pub fn start_speculative(
+        artifacts_dir: &str,
+        sched_cfg: SchedulerConfig,
+        policy: AdmissionPolicy,
+        spec: SpecConfig,
+    ) -> Result<ServingEngine> {
+        Self::start_inner(artifacts_dir, sched_cfg, policy, Some(spec))
+    }
+
+    fn start_inner(
+        artifacts_dir: &str,
+        sched_cfg: SchedulerConfig,
+        policy: AdmissionPolicy,
+        spec: Option<SpecConfig>,
+    ) -> Result<ServingEngine> {
         let metrics = Arc::new(Metrics::default());
         let m2 = Arc::clone(&metrics);
         let (tx, rx) = channel();
@@ -181,17 +233,30 @@ impl ServingEngine {
         let worker = std::thread::Builder::new()
             .name("mldrift-serving".into())
             .spawn(move || {
-                let model = match Runtime::cpu().and_then(|rt| TinyLmRuntime::load(&rt, &dir)) {
-                    Ok(m) => {
+                // PJRT handles are not `Send`, so the worker thread owns
+                // the whole runtime — target and draft alike.
+                let loaded = Runtime::cpu().and_then(|rt| {
+                    let target = TinyLmRuntime::load(&rt, &dir)?;
+                    let draft = match &spec {
+                        Some(s) => Some((
+                            TinyLmRuntime::load(&rt, &s.draft_artifacts_dir)?,
+                            s.draft_k.max(1),
+                        )),
+                        None => None,
+                    };
+                    Ok((target, draft))
+                });
+                let (model, draft) = match loaded {
+                    Ok(x) => {
                         let _ = ready_tx.send(Ok(()));
-                        m
+                        x
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                worker_loop(model, sched_cfg, policy, rx, m2)
+                worker_loop(model, draft, sched_cfg, policy, rx, m2)
             })
             .map_err(|e| DriftError::Serving(format!("spawn worker: {e}")))?;
         ready_rx
@@ -239,12 +304,17 @@ impl Drop for ServingEngine {
 
 fn worker_loop(
     model: TinyLmRuntime,
+    draft: Option<(TinyLmRuntime, usize)>,
     sched_cfg: SchedulerConfig,
     policy: AdmissionPolicy,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
 ) {
     let mut sched = Scheduler::new(sched_cfg);
+    let (draft_rt, draft_k) = match draft {
+        Some((d, k)) => (Some(d), k),
+        None => (None, 0),
+    };
     // Default arena: `max_active` full-capacity sequences (per-sequence
     // reservations are block-rounded, so size in blocks, not tokens) —
     // generous, so even worst-case growth (every sequence hitting its
@@ -264,6 +334,25 @@ fn worker_loop(
                 * crate::util::div_ceil(m.cache_capacity.max(1), KV_BLOCK_TOKENS)
         }),
     });
+    // Draft KV store (speculative decoding): worst-case sized for
+    // `max_active` full-capacity draft sequences, so draft growth can
+    // never be the thing that preempts — the *target* store is the
+    // contended resource, the draft rides along. A sequence whose budget
+    // exceeds the draft's capacity simply never gets a draft handle and
+    // decodes plainly.
+    let mut draft_store: Option<PagedKvStore> = draft_rt.as_ref().map(|d| {
+        let dm = &d.manifest;
+        PagedKvStore::new(KvArenaConfig {
+            layers: dm.layers,
+            heads_kv: dm.heads_kv,
+            head_dim: dm.head_dim,
+            block_tokens: KV_BLOCK_TOKENS,
+            num_blocks: sched_cfg.max_active.max(1)
+                * crate::util::div_ceil(dm.cache_capacity.max(1), KV_BLOCK_TOKENS),
+        })
+    });
+    let draft_seq_cap = draft_rt.as_ref().map_or(0, |d| d.manifest.cache_capacity);
+    let mut draft_handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
     let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
     let mut handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
     let mut replies: HashMap<RequestId, PendingReply> = HashMap::new();
@@ -340,6 +429,25 @@ fn worker_loop(
         sched.admit_where(|req, ctx_tokens| {
             match policy.admit(&mut store, req, ctx_tokens, mean_gen) {
                 Some(h) => {
+                    // Speculative decode: attach the draft when the
+                    // request fits its capacity, claiming the same
+                    // context in the draft store. A draft-claim miss
+                    // releases the target claim and defers the admission
+                    // — backpressure, so the two stores can never
+                    // disagree about who is admitted.
+                    if let Some(ds) = draft_store.as_mut() {
+                        if req.prompt.len() + req.max_new_tokens <= draft_seq_cap {
+                            match ds.claim(ctx_tokens) {
+                                Ok(dh) => {
+                                    draft_handles.insert(req.id, dh);
+                                }
+                                Err(_) => {
+                                    store.release(h);
+                                    return false;
+                                }
+                            }
+                        }
+                    }
                     handles.insert(req.id, h);
                     true
                 }
@@ -354,35 +462,61 @@ fn worker_loop(
         let round = sched.next_round();
 
         // ---- paged growth + preemption (before any state advances) ------
-        // Every decode step scatters one KV row, so reservations must
-        // cover it *before* the scheduler emits anything. Sequences
-        // emitting their final token run no step and need no row.
-        // `ensure_round_capacity` evicts victims when the arena cannot
-        // grow; the callback parks the victim's reply channel and timing
-        // (its KV state is recomputed on re-admission). Held-out
-        // sequences sit out the whole round — they lose time, never
-        // tokens.
-        let needs_row: Vec<RequestId> = round
+        // Every decode step scatters KV rows, so reservations must cover
+        // them *before* the scheduler emits anything: one row for a plain
+        // step, `k + 1` provisional rows for a speculative draft/verify
+        // step (rejected rows are scrubbed after acceptance, but the
+        // blocks must exist up front). Sequences emitting their final
+        // token run no step and need no row. `ensure_round_capacity`
+        // evicts victims when the arena cannot grow; the callback parks
+        // the victim's reply channel and timing (its KV state is
+        // recomputed on re-admission) and releases its draft blocks.
+        // Held-out sequences sit out the whole round — they lose time,
+        // never tokens.
+        let mut spec_width: HashMap<RequestId, usize> = HashMap::new();
+        let needs_rows: Vec<(RequestId, usize)> = round
             .decode_batch
             .iter()
             .copied()
-            .filter(|&id| {
+            .filter_map(|id| {
                 let seq = sched.seq(id).expect("scheduled seq exists");
-                seq.generated.len() + 1 < seq.request.max_new_tokens
+                let remaining =
+                    seq.request.max_new_tokens.saturating_sub(seq.generated.len() + 1);
+                if remaining == 0 {
+                    return None;
+                }
+                let k_eff = if draft_rt.is_some() && draft_handles.contains_key(&id) {
+                    draft_k.min(remaining)
+                } else {
+                    0
+                };
+                spec_width.insert(id, k_eff);
+                Some((id, k_eff + 1))
             })
             .collect();
         let held_out: HashSet<RequestId> = sched.ensure_round_capacity(
             &mut store,
             &mut handles,
-            &needs_row,
+            &needs_rows,
             |victim, bill, bytes_freed| {
                 if let Some(srt) = runtimes.remove(&victim) {
                     replies.insert(victim, srt.park());
                 }
+                // The draft store's blocks are released too, but only the
+                // *target*-store bytes feed the metric: its documented
+                // invariant ties `kv_bytes_freed_by_preemption` to the
+                // `kv_device_bytes_*` watermark, which gauges the target
+                // store alone.
+                let mut draft_freed = 0;
+                if let Some(ds) = draft_store.as_mut() {
+                    if let Some(dh) = draft_handles.remove(&victim) {
+                        draft_freed = ds.release(dh);
+                    }
+                }
                 metrics.record_preemption(bill, bytes_freed);
                 crate::log_warn!(
                     "kv region exhausted: preempted request {victim} (re-prefill {bill} tokens, \
-                     {bytes_freed} device bytes released)"
+                     {bytes_freed} device bytes released, {draft_freed} draft bytes)"
                 );
             },
         );
@@ -427,10 +561,34 @@ fn worker_loop(
         // `sim::exec::paged_gather_overhead_s`.
         let mut step_ids = Vec::with_capacity(inputs.len());
         let mut steps = Vec::with_capacity(inputs.len());
+        let mut spec_ids = Vec::new();
+        let mut spec_steps: Vec<(SpecStepArgs, Vec<i32>)> = Vec::new();
         for &id in &round.decode_batch {
             if let Some(&(token, pos)) = inputs.get(&id) {
-                step_ids.push(id);
-                steps.push(PagedRoundStep { token, pos, handle: handles[&id] });
+                let k_eff = spec_width.get(&id).copied().unwrap_or(0);
+                if k_eff > 0 {
+                    // Draft catch-up: the committed tokens the draft's KV
+                    // has not consumed yet (lag ≤ 1 after a
+                    // fully-accepted round; the whole context after a
+                    // re-prefill failure would have dropped the handle).
+                    let ds = draft_store.as_ref().expect("spec width implies a draft store");
+                    let dh = draft_handles[&id];
+                    let seq = sched.seq(id).expect("scheduled seq exists");
+                    let plen = seq.request.prompt.len();
+                    let catchup: Vec<i32> = (ds.len(dh)..pos)
+                        .map(|p| {
+                            if p < plen { seq.request.prompt[p] } else { seq.generated[p - plen] }
+                        })
+                        .collect();
+                    spec_ids.push(id);
+                    spec_steps.push((
+                        SpecStepArgs { token, pos, k: k_eff, h: handles[&id], draft_h: dh },
+                        catchup,
+                    ));
+                } else {
+                    step_ids.push(id);
+                    steps.push(PagedRoundStep { token, pos, handle: handles[&id] });
+                }
             }
         }
         let outcomes = model.decode_round_paged(&mut store, &steps);
@@ -458,9 +616,53 @@ fn worker_loop(
                 }
             }
         }
+        // ---- speculative draft/verify steps -----------------------------
+        // Each step proposes k tokens with the draft, verifies all k + 1
+        // positions with the target, commits the accepted prefix into the
+        // paged stores (rejected rows scrubbed — `spec_round_paged` also
+        // scrubs on failure), and hands back the accepted tokens to emit
+        // *this* round. Output is token-identical to plain greedy decode
+        // whatever the draft proposed.
+        if let (Some(draft_m), Some(ds)) = (draft_rt.as_ref(), draft_store.as_mut()) {
+            let spec_outcomes = model.spec_round_paged(draft_m, &mut store, ds, &spec_steps);
+            for (id, outcome) in spec_ids.into_iter().zip(spec_outcomes) {
+                match outcome {
+                    Ok((out, step_s)) => {
+                        let srt = runtimes.get_mut(&id).expect("member collected above");
+                        srt.decode_s += step_s;
+                        metrics.record_decode_step(step_s);
+                        metrics
+                            .record_spec(out.proposed as u64, out.accepted_tokens.len() as u64);
+                        srt.next_token = out.next_token;
+                        // Accepted tokens join the emission stream now —
+                        // this is what lets tokens/round exceed batch
+                        // occupancy. `commit_provisional` inside the step
+                        // already appended the kept KV rows.
+                        let seq = sched.seq_mut(id).expect("scheduled seq exists");
+                        for &tok in &out.accepted_tokens {
+                            seq.generated.push(tok);
+                            seq.pos += 1;
+                        }
+                        round_tokens += out.accepted_tokens.len();
+                    }
+                    Err(e) => {
+                        crate::log_error!("speculative decode failed for request {id}: {e}");
+                        if let Some(srt) = runtimes.get_mut(&id) {
+                            srt.error
+                                .get_or_insert(format!("decode failed mid-generation: {e}"));
+                        }
+                        let seq = sched.seq_mut(id).expect("scheduled seq exists");
+                        seq.request.max_new_tokens = seq.generated.len();
+                    }
+                }
+            }
+        }
         if !round.is_idle() {
             // Occupancy = the *executed* kernel batch (sequences emitting
-            // their final token need no step and don't amortize weights).
+            // their final token need no step and don't amortize weights);
+            // tokens can exceed it via final emissions AND speculative
+            // acceptance — recorded per round, so the tokens/round
+            // histogram reflects live acceptance.
             metrics.record_round(inputs.len(), round_tokens);
         }
 
@@ -494,6 +696,34 @@ fn worker_loop(
                     }
                     let arrival = seq.request.arrival;
                     runtimes.insert(id, pending.resume(next, prefill_s, arrival, queue_s));
+                    // Speculative decode: (re-)prefill the draft over the
+                    // same context so draft and target KV agree. A draft
+                    // prefill failure downgrades this sequence to plain
+                    // decode — speculation is an optimization, never a
+                    // new way to fail a request.
+                    if let (Some(draft_m), Some(ds)) =
+                        (draft_rt.as_ref(), draft_store.as_mut())
+                    {
+                        if let Some(&dh) = draft_handles.get(&id) {
+                            match draft_m.prefill_paged(&ctx, ds, dh) {
+                                Ok(_) => {
+                                    if let Err(e) = ds.append(dh, ctx.len()) {
+                                        crate::log_error!(
+                                            "draft kv append for request {id}: {e}"
+                                        );
+                                    }
+                                }
+                                Err(e) => {
+                                    crate::log_warn!(
+                                        "draft prefill failed for request {id} \
+                                         (plain decode fallback): {e}"
+                                    );
+                                    ds.release(dh);
+                                    draft_handles.remove(&id);
+                                }
+                            }
+                        }
+                    }
                 }
                 Err(e) => {
                     // Finish the sequence with whatever it already has:
@@ -516,6 +746,11 @@ fn worker_loop(
             let id = done.request.id;
             if let Some(h) = handles.remove(&id) {
                 store.release(h);
+            }
+            if let Some(ds) = draft_store.as_mut() {
+                if let Some(dh) = draft_handles.remove(&id) {
+                    ds.release(dh);
+                }
             }
             if let Some(srt) = runtimes.remove(&id) {
                 let total_s = srt.started.elapsed().as_secs_f64();

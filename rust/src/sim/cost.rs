@@ -56,6 +56,22 @@ impl KernelCost {
         (self.t_compute * batch as f64).max(self.batched_t_memory(batch)) + self.t_launch
     }
 
+    /// Roofline time for this kernel running the **speculative verify
+    /// pass**: the target scores all `k + 1` positions of `batch`
+    /// sequences in one launch (a `(k + 1)`-token prefill per sequence,
+    /// batched). Weights still stream once; per-sequence traffic (KV
+    /// reads, activations) and FLOPs scale with `batch × (k + 1)` —
+    /// position `pos + i` attends over nearly the same context as a
+    /// decode step, so each extra scored position costs one more
+    /// per-sequence share, never another weight pass. Structurally this
+    /// IS [`batched_total`](Self::batched_total) at `batch × (k + 1)`, so
+    /// `k = 0` is the plain decode round bit-exactly — the draft/verify
+    /// split degenerates to the non-speculative model instead of forking
+    /// it.
+    pub fn speculative_verify_total(&self, batch: usize, k: usize) -> f64 {
+        self.batched_total(batch.max(1) * (k + 1))
+    }
+
     /// Memory-limited time for a batch-`batch` launch: weight bytes once,
     /// per-sequence bytes × batch. The single source of the batched
     /// scaling rule — `batched_total` and the round simulator both use it.
@@ -303,6 +319,29 @@ mod tests {
             assert!(per_token < prev, "per-token cost must fall with batch (B={b})");
             prev = per_token;
         }
+    }
+
+    #[test]
+    fn speculative_verify_amortizes_weights_like_a_short_prefill() {
+        let dev = device("adreno_750").unwrap();
+        let (g, fc) = fc_graph(1, DType::I8);
+        let choice = select_kernel(&g.nodes[fc], &dev, Stage::Decode);
+        let c = kernel_cost(&g, &g.nodes[fc], &choice, &dev, Stage::Decode);
+        // k = 0 degenerates to the plain decode round, bit-exactly.
+        assert_eq!(c.speculative_verify_total(1, 0), c.batched_total(1));
+        assert_eq!(c.speculative_verify_total(4, 0), c.batched_total(4));
+        // Scoring k+1 positions costs far less than k+1 rounds for a
+        // weight-dominated kernel (the whole point of the verify pass)…
+        let k = 3;
+        let verify = c.speculative_verify_total(1, k);
+        assert!(
+            verify < 0.5 * (k + 1) as f64 * c.total(),
+            "verify {verify} vs {} sequential rounds",
+            (k + 1) as f64 * c.total()
+        );
+        // … but is monotone in k (each position still pays its
+        // per-sequence traffic).
+        assert!(c.speculative_verify_total(1, 2) > c.speculative_verify_total(1, 1));
     }
 
     #[test]

@@ -227,6 +227,79 @@ pub fn paged_gather_overhead_s(dev: &DeviceProfile, blocks_touched: usize) -> f6
         / (dev.effective_bandwidth().max(1e-9) * 1e9)
 }
 
+/// Expected draft tokens accepted per speculative round under a
+/// per-token draft/target agreement probability `acceptance` ∈ [0, 1]:
+/// proposal `i` survives only if all before it did, so
+/// `E[a] = Σ_{i=1..k} acceptance^i` (the greedy-decode special case of
+/// Leviathan et al.'s acceptance analysis). `k` at `acceptance = 1`,
+/// `0` at `acceptance = 0`.
+pub fn expected_accepted_tokens(k: usize, acceptance: f64) -> f64 {
+    let a = acceptance.clamp(0.0, 1.0);
+    let mut term = 1.0;
+    let mut sum = 0.0;
+    for _ in 0..k {
+        term *= a;
+        sum += term;
+    }
+    sum
+}
+
+/// Expected draft decode rounds per speculative round: the `k` proposal
+/// steps plus the **catch-up** step that follows a fully-accepted round
+/// — the draft never consumed the last accepted proposal
+/// ([`crate::runtime::speculative_step_greedy`] leaves it one row
+/// behind), and full acceptance happens with probability
+/// `acceptance^k`. `k = 0` means no speculation at all: zero draft
+/// work, not a catch-up.
+pub fn expected_draft_steps(k: usize, acceptance: f64) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    k as f64 + acceptance.clamp(0.0, 1.0).powi(k as i32)
+}
+
+/// Time for the proposal phase of one speculative round: `k` sequential
+/// draft decode rounds at batch `batch` (each proposal feeds the next,
+/// so the draft cannot batch across its own k — only across sequences).
+/// Callers pricing whole rounds should scale one draft round by
+/// [`expected_draft_steps`] instead, so the catch-up step after
+/// fully-accepted rounds is billed too.
+pub fn draft_time_s(draft_plan: &ExecutionPlan, batch: usize, k: usize) -> f64 {
+    k as f64 * simulate_batched(draft_plan, batch).total_s
+}
+
+/// Time for the verify phase: the target scores all `k + 1` positions of
+/// every sequence in **one** pass — priced per kernel by
+/// [`KernelCost::speculative_verify_total`] (weights stream once, like a
+/// `(k + 1)`-token prefill per sequence batched over the round). `k = 0`
+/// equals the plain decode round exactly.
+pub fn verify_time_s(target_decode_plan: &ExecutionPlan, batch: usize, k: usize) -> f64 {
+    target_decode_plan
+        .kernels
+        .iter()
+        .map(|kn| kn.cost.speculative_verify_total(batch, k))
+        .sum()
+}
+
+/// One whole speculative round at per-token acceptance `acceptance`:
+/// the expected draft steps (k proposals + the probability-`α^k`
+/// catch-up) then the k-wide verify. The serving simulator and the
+/// bench's breakeven sweep both price rounds with this split, so "where
+/// does draft-k pay?" is answerable from the cost model before real
+/// hardware:
+/// `speedup(α, k) = (1 + E[a]) · T / ((k + αᵏ)·D + V)` with `T` the
+/// plain round, `D` a draft round, `V` the verify pass.
+pub fn speculative_round_time_s(
+    draft_plan: &ExecutionPlan,
+    target_decode_plan: &ExecutionPlan,
+    batch: usize,
+    k: usize,
+    acceptance: f64,
+) -> f64 {
+    expected_draft_steps(k, acceptance) * simulate_batched(draft_plan, batch).total_s
+        + verify_time_s(target_decode_plan, batch, k)
+}
+
 /// Convenience: plan + simulate.
 pub fn simulate_graph(
     g: &Graph,
@@ -355,6 +428,48 @@ mod tests {
         // must stay far below one decode round (~tens of ms): the
         // indirection cannot eat the paging win.
         assert!(paged_gather_overhead_s(&dev, 26 * 8 * 8) < 1e-4);
+    }
+
+    #[test]
+    fn expected_accepted_is_the_geometric_partial_sum() {
+        assert_eq!(expected_accepted_tokens(4, 0.0), 0.0);
+        assert_eq!(expected_accepted_tokens(4, 1.0), 4.0);
+        assert!((expected_accepted_tokens(2, 0.5) - 0.75).abs() < 1e-12);
+        assert!((expected_accepted_tokens(3, 0.7) - (0.7 + 0.49 + 0.343)).abs() < 1e-12);
+        // Out-of-range inputs clamp instead of exploding the series.
+        assert_eq!(expected_accepted_tokens(3, 1.5), 3.0);
+        assert_eq!(expected_accepted_tokens(3, -0.2), 0.0);
+    }
+
+    #[test]
+    fn verify_pass_prices_like_a_short_prefill_not_k_rounds() {
+        let dev = device("adreno_750").unwrap();
+        let g = mlp(1, DType::I4);
+        let plan = build_plan(&g, &dev, Stage::Decode, Strategy::GreedyBySize).unwrap();
+        let t = simulate(&plan).total_s;
+        // k = 0 is the plain round bit-exactly (no model fork).
+        assert_eq!(verify_time_s(&plan, 1, 0), t);
+        // The k-wide verify streams weights once: far below k+1 rounds,
+        // strictly above one round.
+        let k = 3;
+        let v = verify_time_s(&plan, 1, k);
+        assert!(v > t);
+        assert!(v < 0.5 * (k + 1) as f64 * t, "verify {v} vs {} rounds", (k + 1) as f64 * t);
+        // Draft phase is k sequential rounds of the draft plan — plus the
+        // catch-up round that follows a fully-accepted round.
+        assert_eq!(draft_time_s(&plan, 1, k), k as f64 * t);
+        assert_eq!(expected_draft_steps(0, 0.9), 0.0, "k = 0: no draft, no catch-up");
+        assert_eq!(expected_draft_steps(k, 0.0), k as f64);
+        assert_eq!(expected_draft_steps(k, 1.0), (k + 1) as f64);
+        assert_eq!(
+            speculative_round_time_s(&plan, &plan, 1, k, 0.0),
+            draft_time_s(&plan, 1, k) + v
+        );
+        assert_eq!(
+            speculative_round_time_s(&plan, &plan, 1, k, 1.0),
+            (k + 1) as f64 * t + v,
+            "full acceptance bills the catch-up draft step"
+        );
     }
 
     #[test]

@@ -23,10 +23,11 @@ pub mod serving;
 
 pub use cost::{kernel_cost, KernelCost};
 pub use exec::{
-    paged_gather_overhead_s, simulate_batched, simulate_graph, ExecutionPlan, PlannedKernel,
-    SimReport,
+    draft_time_s, expected_accepted_tokens, expected_draft_steps, paged_gather_overhead_s,
+    simulate_batched, simulate_graph, speculative_round_time_s, verify_time_s, ExecutionPlan,
+    PlannedKernel, SimReport,
 };
 pub use serving::{
-    simulate_serving, GenLenEstimator, KvReservation, ServingSimConfig, ServingSimReport,
-    SimRequest,
+    simulate_serving, simulate_serving_spec, GenLenEstimator, KvReservation, ServingSimConfig,
+    ServingSimReport, SimRequest, SpecSim,
 };

@@ -27,7 +27,10 @@ use crate::kv::{KvArena, KvArenaConfig, KvSeqHandle};
 use crate::serving::request::{InferenceRequest, RequestId};
 use crate::serving::scheduler::{Scheduler, SchedulerConfig};
 use crate::serving::{blended_mean_gen, AdmissionPolicy};
-use crate::sim::exec::{paged_gather_overhead_s, prefill_time_s, simulate_batched, ExecutionPlan};
+use crate::sim::exec::{
+    expected_accepted_tokens, expected_draft_steps, paged_gather_overhead_s, prefill_time_s,
+    simulate_batched, verify_time_s, ExecutionPlan,
+};
 use crate::util::div_ceil;
 
 /// One simulated request: what the client *asks for* vs what the model
@@ -62,6 +65,20 @@ pub enum GenLenEstimator {
     /// ([`blended_mean_gen`]) — the engine's behaviour.
     #[default]
     Blended,
+}
+
+/// Speculative-decode parameters for an acceptance-rate-parameterized
+/// simulation ([`simulate_serving_spec`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SpecSim {
+    /// Draft proposals per sequence per round.
+    pub k: usize,
+    /// Per-token draft/target agreement probability α ∈ [0, 1]; a round
+    /// accepts `E[a] = Σ_{i=1..k} α^i` proposals in expectation
+    /// ([`expected_accepted_tokens`]), tracked per sequence with a
+    /// fractional-credit accumulator so long-run token counts match the
+    /// expectation exactly without a noise source.
+    pub acceptance: f64,
 }
 
 /// Serving-simulation tuning.
@@ -110,6 +127,13 @@ pub struct ServingSimReport {
     pub peak_device_bytes: usize,
     /// Worst internal fragmentation snapshot across the run.
     pub peak_fragmentation_bytes: usize,
+    /// Speculative decode: draft-phase seconds (subset of `decode_s`).
+    pub draft_s: f64,
+    /// Speculative decode: proposals offered across all rounds.
+    pub spec_proposed_tokens: usize,
+    /// Speculative decode: proposals accepted (emitted beyond the one
+    /// pending token per member per round).
+    pub spec_accepted_tokens: usize,
 }
 
 impl ServingSimReport {
@@ -131,6 +155,39 @@ impl ServingSimReport {
 pub fn simulate_serving(
     decode_plan: &ExecutionPlan,
     prefill_plan: &ExecutionPlan,
+    cfg: &ServingSimConfig,
+    workload: &[SimRequest],
+) -> ServingSimReport {
+    simulate_serving_impl(decode_plan, prefill_plan, None, cfg, workload)
+}
+
+/// [`simulate_serving`] with greedy draft-k **speculative decoding**: the
+/// same scheduler/arena/admission loop, but each decode round proposes
+/// `spec.k` tokens per member with `draft_plan`, verifies all `k + 1`
+/// positions with the target in one priced pass
+/// ([`verify_time_s`]), and emits `1 + a` tokens per member with `a`
+/// driven by `spec.acceptance` — so the draft-k amortization claim is
+/// checkable across acceptance rates before real hardware. KV rows are
+/// ensured at `k + 1` per member (the provisional scatter) and appended
+/// at `1 + a` (the accepted prefix), mirroring the engine's rollback
+/// seam; pricing uses the configured `k` even when a member's remaining
+/// budget clamps its width (conservative — the batch waits for the
+/// widest member anyway).
+pub fn simulate_serving_spec(
+    decode_plan: &ExecutionPlan,
+    prefill_plan: &ExecutionPlan,
+    draft_plan: &ExecutionPlan,
+    spec: SpecSim,
+    cfg: &ServingSimConfig,
+    workload: &[SimRequest],
+) -> ServingSimReport {
+    simulate_serving_impl(decode_plan, prefill_plan, Some((draft_plan, spec)), cfg, workload)
+}
+
+fn simulate_serving_impl(
+    decode_plan: &ExecutionPlan,
+    prefill_plan: &ExecutionPlan,
+    spec: Option<(&ExecutionPlan, SpecSim)>,
     cfg: &ServingSimConfig,
     workload: &[SimRequest],
 ) -> ServingSimReport {
@@ -157,7 +214,11 @@ pub fn simulate_serving(
     };
     // Cache the per-round/per-context prices that repeat within a run.
     let mut round_cost: HashMap<usize, f64> = HashMap::new();
+    let mut draft_cost: HashMap<usize, f64> = HashMap::new();
     let mut prefill_cost: HashMap<usize, f64> = HashMap::new();
+    // Speculative acceptance: per-sequence fractional credit so integer
+    // emissions match the expected acceptance over the run.
+    let mut credit: HashMap<RequestId, f64> = HashMap::new();
     // Device profile for the paged gather pricing; unknown devices (plans
     // built against a test profile) just skip the overhead.
     let gather_dev = crate::device::registry::device(decode_plan.device_name);
@@ -199,35 +260,86 @@ pub fn simulate_serving(
         // the engine runs ([`Scheduler::ensure_round_capacity`]), so the
         // simulator can never diverge from the serving policy. (One row
         // per emission here, final tokens included — see module docs.)
+        // Speculative members need `k_eff + 1` rows (the provisional
+        // draft/verify scatter), plain members one.
+        let mut spec_width: HashMap<RequestId, usize> = HashMap::new();
+        let needs: Vec<(RequestId, usize)> = round
+            .decode_batch
+            .iter()
+            .map(|&id| {
+                let k_eff = match spec {
+                    Some((_, s)) => {
+                        let seq = sched.seq(id).expect("scheduled seq exists");
+                        let remaining = seq
+                            .request
+                            .max_new_tokens
+                            .saturating_sub(seq.generated.len() + 1);
+                        s.k.min(remaining)
+                    }
+                    None => 0,
+                };
+                spec_width.insert(id, k_eff);
+                (id, k_eff + 1)
+            })
+            .collect();
         let held_out: HashSet<RequestId> = sched.ensure_round_capacity(
             &mut arena,
             &mut handles,
-            &round.decode_batch,
+            &needs,
             |_victim, bill, _bytes_freed| {
                 rep.preemptions += 1;
                 rep.reprefill_tokens += bill;
             },
         );
 
-        // Decode: one token per surviving member, priced as one batched
-        // round (weights stream once; KV/activations scale with B). Under
-        // the paged layout each member's attention also walks its block
-        // table — that indirection is billed per layer per block touched.
+        // Decode: each surviving member emits its pending token plus any
+        // accepted proposals, priced as one batched round (weights stream
+        // once; KV/activations scale with B — and with the k+1 scored
+        // positions under speculation). Under the paged layout each
+        // member's attention also walks its block table per scored
+        // position — that indirection is billed per layer per block
+        // touched.
         let mut executed = 0usize;
         let mut gather_blocks = 0usize;
         for &id in &round.decode_batch {
             if held_out.contains(&id) {
                 continue;
             }
+            let k_eff = spec_width.get(&id).copied().unwrap_or(0);
             // Blocks this member's gather touches: its context so far
-            // (written rows), per attention layer.
-            gather_blocks +=
-                div_ceil(arena.len(handles[&id]).max(1), cfg.arena.block_tokens) * cfg.arena.layers;
-            arena.append(handles[&id], 1).expect("capacity ensured above");
+            // (written rows), per attention layer, per scored position.
+            gather_blocks += div_ceil(arena.len(handles[&id]).max(1), cfg.arena.block_tokens)
+                * cfg.arena.layers
+                * (k_eff + 1);
             let seq = sched.seq_mut(id).expect("scheduled seq exists");
-            seq.generated.push(0);
-            seq.pos += 1;
-            rep.generated_tokens += 1;
+            let gen0 = seq.generated.len();
+            // Acceptance: expected value accumulated as per-sequence
+            // credit, capped by the draft width and by EOS (the target
+            // emits EOS and stops — nothing is accepted past it).
+            let accepted = if k_eff > 0 {
+                let (_, s) = spec.expect("spec width implies spec mode");
+                let c = credit.entry(id).or_insert(0.0);
+                *c += expected_accepted_tokens(k_eff, s.acceptance);
+                let a = (c.floor() as usize)
+                    .min(k_eff)
+                    .min(actual[&id].saturating_sub(gen0 + 1));
+                *c -= a as f64;
+                if *c > s.k as f64 {
+                    *c = s.k as f64; // EOS-capped credit must not bank up
+                }
+                a
+            } else {
+                0
+            };
+            let emit = 1 + accepted;
+            arena.append(handles[&id], emit).expect("capacity ensured above");
+            for _ in 0..emit {
+                seq.generated.push(0);
+            }
+            seq.pos += emit;
+            rep.generated_tokens += emit;
+            rep.spec_proposed_tokens += k_eff;
+            rep.spec_accepted_tokens += accepted;
             executed += 1;
             // EOS: the model stops early; the scheduler (which only knows
             // the budget) sees the request finish at its actual length.
@@ -236,9 +348,26 @@ pub fn simulate_serving(
             }
         }
         if executed > 0 {
-            let t = *round_cost
-                .entry(executed)
-                .or_insert_with(|| simulate_batched(decode_plan, executed).total_s);
+            let t = match spec {
+                Some((draft_plan, s)) => {
+                    // One draft round at this occupancy, scaled by the
+                    // expected steps (k proposals + the αᵏ catch-up that
+                    // follows a fully-accepted round) so high-acceptance
+                    // rounds are not under-billed.
+                    let d1 = *draft_cost
+                        .entry(executed)
+                        .or_insert_with(|| simulate_batched(draft_plan, executed).total_s);
+                    let dt = expected_draft_steps(s.k, s.acceptance) * d1;
+                    let vt = *round_cost
+                        .entry(executed)
+                        .or_insert_with(|| verify_time_s(decode_plan, executed, s.k));
+                    rep.draft_s += dt;
+                    dt + vt
+                }
+                None => *round_cost
+                    .entry(executed)
+                    .or_insert_with(|| simulate_batched(decode_plan, executed).total_s),
+            };
             rep.decode_s += t + cfg.sync_s;
             if paged {
                 if let Some(dev) = &gather_dev {
@@ -486,6 +615,170 @@ mod tests {
             p.gather_s,
             l.total_s
         );
+    }
+
+    /// Plans for the speculative sweep: target Llama-3.1-8B on M4 Pro at
+    /// a short interactive context (the draft-k sweet spot — the verify
+    /// pass multiplies per-position KV reads, which a short context keeps
+    /// small next to the ~4.5 GB weight stream), draft TinyLM on the same
+    /// device. Returns (target decode, target prefill, draft decode).
+    fn spec_plans() -> (ExecutionPlan, ExecutionPlan, ExecutionPlan) {
+        let dev = device("m4_pro").unwrap();
+        let opts = CompileOptions::default();
+        let t = simulate_llm(
+            &llm_config("llama3.1_8b").unwrap(),
+            &dev,
+            QuantScheme::Mixed844,
+            256,
+            64,
+            &opts,
+        )
+        .unwrap();
+        let d = simulate_llm(&llm_config("tinylm").unwrap(), &dev, QuantScheme::Q8, 256, 64, &opts)
+            .unwrap();
+        (t.decode.plan.clone(), t.prefill.plan.clone(), d.decode.plan.clone())
+    }
+
+    fn spec_cfg(num_blocks: usize, max_active: usize) -> ServingSimConfig {
+        ServingSimConfig {
+            sched: SchedulerConfig {
+                max_active,
+                max_prefills_per_round: 2,
+                ..Default::default()
+            },
+            arena: KvArenaConfig {
+                layers: 32,
+                heads_kv: 8,
+                head_dim: 128,
+                block_tokens: 16,
+                num_blocks,
+            },
+            reservation: KvReservation::Lifetime,
+            sync_s: 150e-6,
+            prefill_plan_tokens: 256,
+            estimator: GenLenEstimator::Blended,
+        }
+    }
+
+    #[test]
+    fn spec_decode_amortizes_at_high_acceptance_and_bounds_overhead_at_zero() {
+        // The ISSUE's acceptance bars, at the simulator level: with a
+        // TinyLM draft against an 8B target, spec decode must buy ≥ 1.5×
+        // tokens/s at acceptance 0.7 and cost ≤ 10% at acceptance 0 (a
+        // draft that is always wrong) — the verify pass streams weights
+        // once, so its overhead is the k extra per-position shares, not
+        // k extra rounds.
+        let (decode, prefill, draft) = spec_plans();
+        let cfg = spec_cfg(2 * 8 + 2, 2);
+        let workload = vec![
+            SimRequest { prompt_tokens: 64, max_new_tokens: 64, actual_new_tokens: 64 };
+            8
+        ];
+        let plain = simulate_serving(&decode, &prefill, &cfg, &workload);
+        assert_eq!(plain.completed, 8, "plain run must drain");
+        assert_eq!(plain.spec_proposed_tokens, 0, "plain mode never proposes");
+
+        let hi = simulate_serving_spec(
+            &decode,
+            &prefill,
+            &draft,
+            SpecSim { k: 2, acceptance: 0.7 },
+            &cfg,
+            &workload,
+        );
+        assert_eq!(hi.completed, 8, "spec run must drain");
+        assert_eq!(
+            hi.generated_tokens, plain.generated_tokens,
+            "speculation changes rounds, never the tokens delivered"
+        );
+        assert!(hi.rounds < plain.rounds, "acceptance must collapse rounds");
+        assert!(hi.draft_s > 0.0 && hi.draft_s < hi.decode_s, "draft split billed: {hi:?}");
+        assert!(
+            hi.tokens_per_s() >= 1.5 * plain.tokens_per_s(),
+            "spec @ α=0.7 must be ≥ 1.5×: {:.1} vs {:.1} tok/s",
+            hi.tokens_per_s(),
+            plain.tokens_per_s()
+        );
+
+        let zero = simulate_serving_spec(
+            &decode,
+            &prefill,
+            &draft,
+            SpecSim { k: 2, acceptance: 0.0 },
+            &cfg,
+            &workload,
+        );
+        assert_eq!(zero.completed, 8);
+        assert_eq!(zero.spec_accepted_tokens, 0, "α = 0 accepts nothing");
+        assert!(zero.spec_proposed_tokens > 0, "…but still pays for proposing");
+        assert_eq!(zero.rounds, plain.rounds, "α = 0 degenerates to one token/round");
+        assert!(
+            zero.tokens_per_s() >= 0.9 * plain.tokens_per_s(),
+            "verify overhead must stay bounded at α = 0: {:.1} vs {:.1} tok/s",
+            zero.tokens_per_s(),
+            plain.tokens_per_s()
+        );
+    }
+
+    #[test]
+    fn full_acceptance_emits_k_plus_one_tokens_per_member_round() {
+        // α = 1 (draft ≡ target): every round emits exactly k + 1 tokens
+        // per member — the deterministic ceiling the engine's
+        // draft-= -target e2e reproduces with real PJRT.
+        let (decode, prefill, draft) = spec_plans();
+        let cfg = spec_cfg(2 * 8 + 2, 2);
+        let workload = vec![
+            SimRequest { prompt_tokens: 64, max_new_tokens: 64, actual_new_tokens: 64 };
+            8
+        ];
+        let rep = simulate_serving_spec(
+            &decode,
+            &prefill,
+            &draft,
+            SpecSim { k: 3, acceptance: 1.0 },
+            &cfg,
+            &workload,
+        );
+        assert_eq!(rep.completed, 8);
+        assert_eq!(rep.generated_tokens, 8 * 64);
+        // 64 = 16 rounds × (1 pending + 3 accepted) per sequence.
+        assert_eq!(rep.spec_accepted_tokens, 8 * 48, "exactly k accepted per round");
+        let plain = simulate_serving(&decode, &prefill, &cfg, &workload);
+        assert!(
+            rep.tokens_per_s() > 2.5 * plain.tokens_per_s(),
+            "full acceptance must approach the (k+1)× ceiling: {:.1} vs {:.1}",
+            rep.tokens_per_s(),
+            plain.tokens_per_s()
+        );
+    }
+
+    #[test]
+    fn spec_decode_survives_preemption_and_loses_no_tokens() {
+        // Spec rounds reserve k + 1 provisional rows, so exhaustion can
+        // strike mid-speculation — the shared growth/preemption loop must
+        // degrade it to eviction + re-prefill exactly like plain decode:
+        // every request completes with its full token count.
+        let (decode, prefill, draft) = spec_plans();
+        let mut cfg = spec_cfg(8, 4);
+        cfg.reservation = KvReservation::Paged {
+            policy: AdmissionPolicy::Expected { safety_margin: 1.0 },
+        };
+        let workload = vec![
+            SimRequest { prompt_tokens: 32, max_new_tokens: 64, actual_new_tokens: 64 };
+            3
+        ];
+        let rep = simulate_serving_spec(
+            &decode,
+            &prefill,
+            &draft,
+            SpecSim { k: 2, acceptance: 0.7 },
+            &cfg,
+            &workload,
+        );
+        assert_eq!(rep.completed, 3, "exhaustion must degrade to queuing, not failure");
+        assert_eq!(rep.generated_tokens, 3 * 64, "no tokens lost to eviction");
+        assert!(rep.preemptions >= 1, "this workload must evict: {rep:?}");
+        assert!(rep.reprefill_tokens > 0);
     }
 
     #[test]
