@@ -1,6 +1,6 @@
 # ML Drift reproduction — top-level targets.
 
-.PHONY: tier1 build test fmt lint artifacts bench bench-batched bench-check
+.PHONY: tier1 build test fmt lint artifacts bench bench-batched bench-check bench-ttft
 
 # The tier-1 gate CI runs on every push.
 tier1:
@@ -31,6 +31,12 @@ bench: bench-batched
 
 bench-batched:
 	cd rust && cargo bench --bench bench_batched_serving
+
+# Fast local iteration on the prefill-packing work: run ONLY the TTFT
+# burst sweep (part 5) with its hard gates. Skips parts 1-4 and does not
+# touch BENCH_batched.json.
+bench-ttft:
+	cd rust && cargo bench --bench bench_batched_serving -- --only-ttft
 
 # Bench-regression gate, reusable locally: validates the freshly written
 # BENCH_batched.json against its schema and fails if any tokens_per_s

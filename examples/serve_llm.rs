@@ -29,6 +29,13 @@ fn main() -> mldrift::Result<()> {
     let engine = ServingEngine::start(
         &artifacts,
         // 8 KV reservations so the whole burst batches into one round.
+        // Prefill chunking (`prefill_chunk_tokens`) stays OFF here: on
+        // the real B=1 CPU artifact a partial chunk executes as
+        // per-position steps — correct, but slower than the compiled
+        // prefill-bucket GEMM this example's prompts fit in one shot.
+        // The packed-GEMM latency win is what the simulator prices and
+        // `make bench-ttft` sweeps; turning chunking on for real
+        // hardware wants the compiled packed-prefill artifact (ROADMAP).
         SchedulerConfig { max_active: 8, max_prefills_per_round: 2, ..Default::default() },
     )?;
 

@@ -36,6 +36,12 @@ const SECTIONS: &[(&str, &[&str], Option<&str>)] = &[
     ("device_memory_sweep_adreno_750", &["arena_blocks", "policy"], None),
     ("speculative_sweep", &["model", "device", "k", "acceptance"], Some("tokens_per_s")),
     ("speculative_serving_m4_pro", &["mode", "k", "acceptance"], Some("tokens_per_s")),
+    // TTFT-burst sweep (chunked + packed prefill vs sequential). The
+    // gated metric stays tokens_per_s — TTFT improvements land as the
+    // bench's own hard gate (`sequential` vs `chunked` p95 bars), while
+    // this guards the "at equal or better tokens/s" half against later
+    // regressions.
+    ("prefill_packing_m4_pro", &["mode"], Some("tokens_per_s")),
 ];
 
 /// Outcome of a trajectory check.
@@ -176,6 +182,10 @@ mod tests {
               ],
               "speculative_serving_m4_pro": [
                 {{"mode": "plain", "k": 0, "acceptance": 0.0, "tokens_per_s": 60.0}}
+              ],
+              "prefill_packing_m4_pro": [
+                {{"mode": "sequential", "tokens_per_s": 80.0, "ttft_p95_s": 0.4}},
+                {{"mode": "chunked", "tokens_per_s": 85.0, "ttft_p95_s": 0.2}}
               ]
             }}"#,
             if note { r#""note": "seed estimates","# } else { "" }
@@ -189,7 +199,10 @@ mod tests {
         let cur = doc(49.0, 101.0, false); // 2% dip is inside tolerance
         let r = check_trajectory(&cur, &base).unwrap();
         assert!(!r.baseline_is_estimate);
-        assert_eq!(r.compared, 4, "model + fixed-memory + both speculative series");
+        assert_eq!(
+            r.compared, 6,
+            "model + fixed-memory + both speculative + both prefill-packing series"
+        );
         assert!(r.regressions.is_empty(), "{:?}", r.regressions);
     }
 
@@ -226,7 +239,7 @@ mod tests {
         let old_base = Json::parse(&text).unwrap();
         let cur = doc(50.0, 100.0, false);
         let r = check_trajectory(&cur, &old_base).unwrap();
-        assert_eq!(r.compared, 3, "spec sweep skipped against the old baseline");
+        assert_eq!(r.compared, 5, "spec sweep skipped against the old baseline");
         assert!(r.regressions.is_empty());
     }
 }

@@ -28,6 +28,7 @@ pub mod tinylm;
 
 pub use client::{LoadedModel, Runtime};
 pub use tinylm::{
-    speculative_step_greedy, GenerationResult, KvState, PagedRoundStep, PagedStepModel,
-    RoundStepOutcome, SpecStepArgs, SpecStepOutcome, TinyLmManifest, TinyLmRuntime,
+    packed_prefill_round, speculative_step_greedy, GenerationResult, KvState,
+    PackedPrefillChunk, PagedRoundStep, PagedStepModel, PrefillChunkOutcome, RoundStepOutcome,
+    SpecStepArgs, SpecStepOutcome, TinyLmManifest, TinyLmRuntime,
 };

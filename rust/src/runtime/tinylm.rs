@@ -311,6 +311,62 @@ impl TinyLmRuntime {
         Ok(logits)
     }
 
+    /// Execute one round's **packed prefill**: chunks from multiple
+    /// sequences, one outcome per chunk in pack order.
+    ///
+    /// Conceptually the pack is one flattened `(Σ tokens, d_model)` GEMM
+    /// with each sequence's rows scattered into its own paged block
+    /// table; on the B=1 PJRT CPU artifact the chunks execute as a loop
+    /// (numerics stay exactly the single-stream ones — the bit-identity
+    /// guarantee below depends on it), and the one-launch-per-round
+    /// latency is what the cost model prices
+    /// ([`crate::sim::exec::packed_prefill_time_s`]).
+    ///
+    /// Per chunk:
+    /// * a **whole-context** chunk (`start == 0 && last`) runs the
+    ///   compiled prefill-bucket GEMM — byte-for-byte the unchunked
+    ///   path, so enabling packing without splitting changes nothing;
+    /// * a **partial** chunk streams its tokens through the provisional
+    ///   per-position seam ([`PagedStepModel::paged_step`], the same one
+    ///   speculative decode scatters through), committing the chunk's
+    ///   rows only once the whole chunk succeeded — a failure scrubs the
+    ///   half-written tail ([`PagedKvStore::scrub_uncommitted`]), so a
+    ///   mid-prefill preemption or error rolls back to the last
+    ///   committed chunk boundary.
+    ///
+    /// Only a `last` chunk returns logits (the sequence's first token
+    /// exists only after them — per-chunk TTFT attribution). A failed
+    /// chunk fails only its own sequence, never the pack.
+    pub fn prefill_pack(
+        &self,
+        store: &mut PagedKvStore,
+        chunks: &[PackedPrefillChunk],
+    ) -> Vec<Result<PrefillChunkOutcome>> {
+        chunks
+            .iter()
+            .map(|c| {
+                let t = Instant::now();
+                let r = if c.start == 0 && c.last {
+                    self.prefill_paged(&c.tokens, store, c.h).and_then(|logits| {
+                        store.append(c.h, c.tokens.len())?;
+                        Ok(Some(logits))
+                    })
+                } else {
+                    prefill_chunk_steps(self, store, c)
+                };
+                if r.is_err() {
+                    // Both branches uphold the all-or-nothing contract: a
+                    // failed whole-context chunk may have half-scattered
+                    // the bucket's dense output before erroring, and a
+                    // retry on the same handle must gather zeros there,
+                    // not stale rows.
+                    let _ = store.scrub_uncommitted(c.h);
+                }
+                r.map(|logits| PrefillChunkOutcome { logits, step_s: t.elapsed().as_secs_f64() })
+            })
+            .collect()
+    }
+
     /// Execute one batched decode round over the paged store: one decode
     /// step per member sequence, returning per-sequence outcomes in input
     /// order.
@@ -577,6 +633,96 @@ pub fn speculative_step_greedy(
 
     proposals.truncate(accepted);
     Ok(SpecStepOutcome { accepted_tokens: proposals, proposed: k, next_token })
+}
+
+/// One sequence's slice of a packed prefill round
+/// ([`TinyLmRuntime::prefill_pack`] / [`packed_prefill_round`]): `tokens`
+/// covering context positions `[start, start + tokens.len())` of the
+/// sequence behind handle `h`.
+#[derive(Clone, Debug)]
+pub struct PackedPrefillChunk {
+    /// Target-store handle (the chunk's rows scatter through its block
+    /// table — never another sequence's).
+    pub h: KvSeqHandle,
+    /// First context position this chunk covers; must equal the
+    /// sequence's committed KV length (chunks are contiguous).
+    pub start: usize,
+    /// The context tokens themselves.
+    pub tokens: Vec<i32>,
+    /// Final chunk of this sequence's prefill: its last-position logits
+    /// produce the first token.
+    pub last: bool,
+}
+
+/// Per-chunk outcome of a packed prefill round.
+pub struct PrefillChunkOutcome {
+    /// Last-position logits — `Some` only for a `last` chunk (the first
+    /// token exists only after the final chunk; earlier chunks only
+    /// deposit KV rows).
+    pub logits: Option<Vec<f32>>,
+    /// This chunk's wall clock (includes the per-chunk host sync on the
+    /// CPU artifact).
+    pub step_s: f64,
+}
+
+/// Stream one prefill chunk through the provisional per-position seam:
+/// each token runs a [`PagedStepModel::paged_step`] at its position
+/// (gathering through the chunk's own earlier provisional rows, exactly
+/// like the speculative verify pass), and the chunk's rows are committed
+/// all-or-nothing with a single `append` once every position succeeded.
+/// The caller scrubs on error ([`PagedKvStore::scrub_uncommitted`]), so
+/// a failed chunk leaves the store at the last committed chunk boundary.
+fn prefill_chunk_steps(
+    model: &impl PagedStepModel,
+    store: &mut PagedKvStore,
+    c: &PackedPrefillChunk,
+) -> Result<Option<Vec<f32>>> {
+    if store.len(c.h) != c.start {
+        return Err(DriftError::Serving(format!(
+            "prefill chunk at {} disagrees with {} committed KV rows",
+            c.start,
+            store.len(c.h)
+        )));
+    }
+    if c.tokens.is_empty() {
+        return Err(DriftError::Serving("empty prefill chunk".into()));
+    }
+    // Admission claims the whole context up front, so this is a no-op in
+    // the engine; it makes the chunk self-sufficient for callers (and
+    // tests) that claimed less.
+    store.ensure(c.h, c.tokens.len())?;
+    let mut last_logits = None;
+    for (i, &tok) in c.tokens.iter().enumerate() {
+        last_logits = Some(model.paged_step(tok, c.start + i, store, c.h)?);
+    }
+    store.append(c.h, c.tokens.len())?;
+    Ok(if c.last { last_logits } else { None })
+}
+
+/// Model-generic packed prefill round: every chunk goes through the
+/// per-position provisional seam (no compiled-bucket shortcut), one
+/// outcome per chunk in pack order, a failed chunk scrubbed and failing
+/// only its own sequence. [`TinyLmRuntime::prefill_pack`] is the
+/// artifact-aware form (whole-context chunks take the compiled bucket
+/// GEMM); this one exists so the pack's no-aliasing and
+/// chunked-equals-unchunked guarantees are provable without PJRT, with
+/// the same deterministic fake models the speculative tests use.
+pub fn packed_prefill_round(
+    model: &impl PagedStepModel,
+    store: &mut PagedKvStore,
+    chunks: &[PackedPrefillChunk],
+) -> Vec<Result<PrefillChunkOutcome>> {
+    chunks
+        .iter()
+        .map(|c| {
+            let t = Instant::now();
+            let r = prefill_chunk_steps(model, store, c);
+            if r.is_err() {
+                let _ = store.scrub_uncommitted(c.h);
+            }
+            r.map(|logits| PrefillChunkOutcome { logits, step_s: t.elapsed().as_secs_f64() })
+        })
+        .collect()
 }
 
 /// Scatter one step's new K/V rows (`(L, h_kv, d_h)` each) into dense
@@ -926,6 +1072,261 @@ mod tests {
         assert_eq!(k_spec, k_ref, "rollback must leave exactly the committed-path state");
         s.verify().unwrap();
         ds.verify().unwrap();
+    }
+
+    /// Run a whole prefill as one pack of `chunk_lens`-sized chunks per
+    /// round (one chunk per sequence per round here — the multi-sequence
+    /// packing is exercised by the property test below); returns the
+    /// final chunk's logits.
+    fn drive_chunked_prefill(
+        model: &impl PagedStepModel,
+        s: &mut PagedKvStore,
+        h: KvSeqHandle,
+        prompt: &[i32],
+        chunk: usize,
+    ) -> Vec<f32> {
+        let mut start = 0;
+        let mut logits = None;
+        while start < prompt.len() {
+            let len = chunk.min(prompt.len() - start);
+            let c = PackedPrefillChunk {
+                h,
+                start,
+                tokens: prompt[start..start + len].to_vec(),
+                last: start + len == prompt.len(),
+            };
+            let out = packed_prefill_round(model, s, &[c]);
+            let out = out.into_iter().next().unwrap().unwrap();
+            if let Some(l) = out.logits {
+                logits = Some(l);
+            }
+            start += len;
+        }
+        logits.expect("final chunk produced logits")
+    }
+
+    /// Greedy continuation over a prefilled store: `n` committed decode
+    /// steps from `logits`, returning the emitted tokens.
+    fn continue_greedy(
+        model: &impl PagedStepModel,
+        s: &mut PagedKvStore,
+        h: KvSeqHandle,
+        logits: &[f32],
+        n: usize,
+    ) -> Vec<i32> {
+        let mut pending = argmax(logits) as i32;
+        let mut pos = s.len(h);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(pending);
+            s.ensure(h, 1).unwrap();
+            let l = model.paged_step(pending, pos, s, h).unwrap();
+            s.append(h, 1).unwrap();
+            pending = argmax(&l) as i32;
+            pos += 1;
+        }
+        out
+    }
+
+    #[test]
+    fn chunked_prefill_is_bitwise_identical_to_unchunked() {
+        // The B=1 acceptance bar, provable without PJRT: splitting a
+        // prompt into chunks (each streamed through the provisional
+        // per-position seam across separate rounds) must leave the KV
+        // store bit-identical to the one-chunk path, produce bitwise
+        // equal first-token logits, and continue into an identical
+        // greedy token stream.
+        let m = tiny_manifest();
+        let model = FakeLm { m: m.clone() };
+        let prompt = vec![5, 3, 8, 1, 9, 2, 7, 4, 6, 0, 11];
+        let cap = m.cache_capacity;
+
+        let (mut s_ref, h_ref) = spec_store(&m);
+        let logits_ref = drive_chunked_prefill(&model, &mut s_ref, h_ref, &prompt, prompt.len());
+        let (k_ref, v_ref) = {
+            let (k, v) = s_ref.gather_dense_scratch(h_ref, cap).unwrap();
+            (k.to_vec(), v.to_vec())
+        };
+        let stream_ref = continue_greedy(&model, &mut s_ref, h_ref, &logits_ref, 5);
+
+        for chunk in [1usize, 3, 4, 7] {
+            let (mut s, h) = spec_store(&m);
+            let logits = drive_chunked_prefill(&model, &mut s, h, &prompt, chunk);
+            assert_eq!(logits, logits_ref, "chunk {chunk}: first-token logits diverged");
+            assert_eq!(s.len(h), prompt.len());
+            let (k, v) = s.gather_dense_scratch(h, cap).unwrap();
+            assert_eq!(k, &k_ref[..], "chunk {chunk}: K state diverged");
+            assert_eq!(v, &v_ref[..], "chunk {chunk}: V state diverged");
+            // And the greedy continuation cannot tell the difference.
+            let stream = continue_greedy(&model, &mut s, h, &logits, 5);
+            assert_eq!(stream, stream_ref, "chunk {chunk}: token stream diverged");
+        }
+    }
+
+    #[test]
+    fn property_packed_prefill_never_mixes_rows_across_sequences() {
+        // Satellite invariant: a packed round carrying chunks from
+        // several sequences scatters every row through its own block
+        // table — each member's final KV state and first-token logits
+        // are bitwise what a solo run of that sequence produces, under
+        // fuzzed prompt lengths, chunk sizes, and pack interleavings.
+        use crate::util::propcheck::{check, Config};
+        let m = tiny_manifest();
+        check("packed prefill does not alias sequences", Config::cases(32), |rng| {
+            let model = FakeLm { m: m.clone() };
+            let n = 2 + rng.gen_range(3) as usize; // 2..=4 sequences
+            let prompts: Vec<Vec<i32>> = (0..n)
+                .map(|i| {
+                    let len = 1 + rng.gen_range(10) as usize;
+                    (0..len).map(|j| (i * 53 + j * 7) as i32 % 31).collect()
+                })
+                .collect();
+
+            // Solo references.
+            let mut refs = Vec::new();
+            for p in &prompts {
+                let mut s = PagedKvStore::new(KvArenaConfig {
+                    layers: m.layers,
+                    heads_kv: m.heads_kv,
+                    head_dim: m.head_dim,
+                    block_tokens: 4,
+                    num_blocks: 10,
+                });
+                let h = s.claim(p.len()).map_err(|e| e.to_string())?;
+                let logits = drive_chunked_prefill(&model, &mut s, h, p, p.len());
+                let cap = m.cache_capacity;
+                let (k, v) = s.gather_dense_scratch(h, cap).map_err(|e| e.to_string())?;
+                refs.push((logits, k.to_vec(), v.to_vec()));
+            }
+
+            // Shared store, chunked + packed rounds.
+            let mut s = PagedKvStore::new(KvArenaConfig {
+                layers: m.layers,
+                heads_kv: m.heads_kv,
+                head_dim: m.head_dim,
+                block_tokens: 4,
+                num_blocks: 10 * n,
+            });
+            let handles: Vec<KvSeqHandle> = prompts
+                .iter()
+                .map(|p| s.claim(p.len()))
+                .collect::<Result<_>>()
+                .map_err(|e| e.to_string())?;
+            let mut progress = vec![0usize; n];
+            let mut logits_out: Vec<Option<Vec<f32>>> = vec![None; n];
+            let mut rounds = 0;
+            while progress.iter().zip(&prompts).any(|(&pr, p)| pr < p.len()) {
+                // Fuzzed pack: each pending sequence contributes a chunk
+                // of random size with probability 3/4.
+                let mut pack = Vec::new();
+                let mut members = Vec::new();
+                for i in 0..n {
+                    let remaining = prompts[i].len() - progress[i];
+                    if remaining == 0 || rng.gen_range(4) == 0 {
+                        continue;
+                    }
+                    let len = (1 + rng.gen_range(4) as usize).min(remaining);
+                    pack.push(PackedPrefillChunk {
+                        h: handles[i],
+                        start: progress[i],
+                        tokens: prompts[i][progress[i]..progress[i] + len].to_vec(),
+                        last: progress[i] + len == prompts[i].len(),
+                    });
+                    members.push(i);
+                }
+                let outs = packed_prefill_round(&model, &mut s, &pack);
+                for (idx, (out, &i)) in outs.into_iter().zip(&members).enumerate() {
+                    let out = out.map_err(|e| e.to_string())?;
+                    progress[i] += pack[idx].tokens.len();
+                    if let Some(l) = out.logits {
+                        logits_out[i] = Some(l);
+                    }
+                }
+                rounds += 1;
+                if rounds > 1000 {
+                    return Err("packed prefill did not converge".into());
+                }
+            }
+            for i in 0..n {
+                let cap = m.cache_capacity;
+                let (k, v) = s.gather_dense_scratch(handles[i], cap).map_err(|e| e.to_string())?;
+                if k != &refs[i].1[..] || v != &refs[i].2[..] {
+                    return Err(format!("sequence {i}: packed KV state diverged from solo run"));
+                }
+                match &logits_out[i] {
+                    Some(l) if *l == refs[i].0 => {}
+                    other => {
+                        return Err(format!(
+                            "sequence {i}: final-chunk logits diverged (got {:?} elements)",
+                            other.as_ref().map(|l| l.len())
+                        ))
+                    }
+                }
+            }
+            s.verify().map_err(|e| e.to_string())?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn failed_prefill_chunk_rolls_back_to_committed_boundary() {
+        // A chunk that errors mid-stream must leave the store exactly at
+        // the last committed chunk boundary: no half-written provisional
+        // rows survive (they are scrubbed), and the committed prefix is
+        // untouched — the contract a mid-prefill preemption relies on.
+        let m = tiny_manifest();
+        let model = FakeLm { m: m.clone() };
+        let (mut s, h) = spec_store(&m);
+        let prompt = vec![4, 8, 15, 16, 23, 42];
+        let c1 = PackedPrefillChunk { h, start: 0, tokens: prompt[..3].to_vec(), last: false };
+        packed_prefill_round(&model, &mut s, &[c1]).remove(0).unwrap();
+        assert_eq!(s.len(h), 3);
+
+        // Wrong start ⇒ the whole chunk fails before any write.
+        let bad = PackedPrefillChunk { h, start: 5, tokens: vec![1], last: true };
+        assert!(packed_prefill_round(&model, &mut s, &[bad]).remove(0).is_err());
+        assert_eq!(s.len(h), 3, "failed chunk must not advance the committed length");
+
+        // Empty chunks are rejected, not silently "completed".
+        let empty = PackedPrefillChunk { h, start: 3, tokens: vec![], last: true };
+        assert!(packed_prefill_round(&model, &mut s, &[empty]).remove(0).is_err());
+
+        // A failing model mid-chunk: rows written before the failure are
+        // really scrubbed (gather past the committed length sees zeros).
+        struct FailAt {
+            inner: FakeLm,
+            at: usize,
+        }
+        impl PagedStepModel for FailAt {
+            fn paged_step(
+                &self,
+                token: i32,
+                pos: usize,
+                store: &mut PagedKvStore,
+                h: KvSeqHandle,
+            ) -> Result<Vec<f32>> {
+                if pos == self.at {
+                    return Err(crate::error::DriftError::Serving("injected".into()));
+                }
+                self.inner.paged_step(token, pos, store, h)
+            }
+        }
+        let failing = FailAt { inner: FakeLm { m: m.clone() }, at: 5 };
+        let c2 = PackedPrefillChunk { h, start: 3, tokens: prompt[3..].to_vec(), last: true };
+        assert!(packed_prefill_round(&failing, &mut s, &[c2]).remove(0).is_err());
+        assert_eq!(s.len(h), 3);
+        let hi = s.block_table(h).unwrap().len() * s.config().block_tokens;
+        let (k, _v) = s.gather_dense_scratch_upto(h, hi, m.cache_capacity).unwrap();
+        let dh = m.head_dim;
+        for p in 3..hi {
+            assert_eq!(k[p * dh], 0.0, "provisional row {p} must be scrubbed");
+        }
+        // The committed prefix survives and the prefill can resume.
+        let c3 = PackedPrefillChunk { h, start: 3, tokens: prompt[3..].to_vec(), last: true };
+        let out = packed_prefill_round(&model, &mut s, &[c3]).remove(0).unwrap();
+        assert!(out.logits.is_some());
+        assert_eq!(s.len(h), 6);
+        s.verify().unwrap();
     }
 
     #[test]

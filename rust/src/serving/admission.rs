@@ -10,6 +10,16 @@
 //! Only the context is actually claimed; decode grows block-by-block,
 //! and a wrong guess degrades to preemption (queueing latency), never to
 //! a failed request.
+//!
+//! **Chunked prefill** changes nothing here by design: admission claims
+//! the whole context up front even though prefill now deposits it chunk
+//! by chunk ([`crate::serving::PrefillChunk`]) — the blocks must exist
+//! before any chunk's provisional scatter, and claiming per chunk would
+//! let a half-prefilled sequence deadlock against its own later chunks.
+//! The *partial-prefill footprint* shows up on the eviction side
+//! instead: a sequence evicted between chunks bills exactly its
+//! committed [`crate::serving::SeqState::prefill_progress`] positions as
+//! re-prefill recompute, not its whole context.
 
 use crate::kv::{KvPool, KvSeqHandle};
 use crate::serving::request::InferenceRequest;

@@ -37,6 +37,15 @@ pub struct Metrics {
     /// nonzero iff eviction actually lowered the device watermark, which
     /// is exactly what the paged-KV e2e test asserts.
     pub kv_bytes_freed_by_preemption: AtomicU64,
+    /// Prefill chunks executed (chunked + packed prefill). With chunking
+    /// off this equals the number of prefill executions; with it on, the
+    /// ratio to `prefill_chunk_tokens` shows the pack granularity the
+    /// engine actually ran at.
+    pub prefill_chunks: AtomicU64,
+    /// Context positions deposited by prefill chunks (initial prefills
+    /// and re-prefills alike — compare with `reprefill_tokens` for the
+    /// recompute share).
+    pub prefill_chunk_tokens: AtomicU64,
     /// Speculative decode: draft tokens proposed across all rounds.
     pub spec_proposed_tokens: AtomicU64,
     /// Speculative decode: draft tokens accepted by the verify pass. The
@@ -70,6 +79,8 @@ impl Default for Metrics {
             kv_device_bytes_in_use: AtomicU64::new(0),
             kv_device_bytes_peak: AtomicU64::new(0),
             kv_bytes_freed_by_preemption: AtomicU64::new(0),
+            prefill_chunks: AtomicU64::new(0),
+            prefill_chunk_tokens: AtomicU64::new(0),
             spec_proposed_tokens: AtomicU64::new(0),
             spec_accepted_tokens: AtomicU64::new(0),
             // 100 µs .. ~100 s exponential buckets.
@@ -137,6 +148,13 @@ impl Metrics {
             self.inflight_seqs.load(Ordering::Relaxed),
             self.inflight_gen_tokens.load(Ordering::Relaxed),
         )
+    }
+
+    /// Record one executed prefill chunk and the context positions it
+    /// deposited.
+    pub fn record_prefill_chunk(&self, tokens: usize) {
+        self.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+        self.prefill_chunk_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
     }
 
     /// Record one speculative draft/verify step: proposals offered and
@@ -208,6 +226,7 @@ impl Metrics {
             "requests: {} submitted, {} completed | tokens: {} prefill, {} generated\n\
              ttft p50 {:.1} ms, p95 {:.1} ms | decode step p50 {:.2} ms, p95 {:.2} ms | e2e mean {:.1} ms\n\
              rounds: {} | batch occupancy mean {:.2}, p50 {:.0}, max {:.0} | tokens/round mean {:.2}\n\
+             prefill chunks: {} ({} tokens) | \
              speculative: {} proposed, {} accepted ({}) | \
              preemptions: {} | re-prefill tokens: {} | kv device bytes: {} in use, {} peak, \
              {} freed by preemption",
@@ -225,6 +244,8 @@ impl Metrics {
             occ_p50,
             occ_max,
             self.tokens_per_round_mean(),
+            self.prefill_chunks.load(Ordering::Relaxed),
+            self.prefill_chunk_tokens.load(Ordering::Relaxed),
             self.spec_proposed_tokens.load(Ordering::Relaxed),
             self.spec_accepted_tokens.load(Ordering::Relaxed),
             match self.spec_acceptance() {
@@ -323,6 +344,17 @@ mod tests {
             (m.tokens_per_round_mean() - 2.0).abs() < 1e-9,
             "completion totals must not leak into the per-round histogram"
         );
+    }
+
+    #[test]
+    fn prefill_chunk_counters_accumulate() {
+        let m = Metrics::default();
+        m.record_prefill_chunk(64);
+        m.record_prefill_chunk(64);
+        m.record_prefill_chunk(16); // a short final chunk
+        assert_eq!(m.prefill_chunks.load(Ordering::Relaxed), 3);
+        assert_eq!(m.prefill_chunk_tokens.load(Ordering::Relaxed), 144);
+        assert!(m.report().contains("prefill chunks: 3 (144 tokens)"));
     }
 
     #[test]

@@ -5,8 +5,14 @@
 //! every call to [`Scheduler::next_round`] plans one **round**: *all*
 //! runnable decodes packed into one batch (so weight streaming is paid
 //! once per round, the §3.7 bandwidth argument applied across users)
-//! plus up to `max_prefills_per_round` prefills (guarding inter-token
-//! latency against prefill bursts).
+//! plus a **prefill-chunk pack** of up to `max_prefills_per_round`
+//! chunk quanta (guarding inter-token latency against prefill bursts).
+//! With [`SchedulerConfig::prefill_chunk_tokens`] set, pending prefills
+//! are split into fixed-token chunks dealt round-robin across
+//! sequences, so one round's pack carries chunks from *multiple*
+//! prompts — executed as one flattened GEMM — and a long prompt cannot
+//! head-of-line-block later arrivals' TTFT; with it unset (0) each
+//! sequence's whole context is a single chunk, the classic behaviour.
 //!
 //! Invariants (enforced + property-tested):
 //! * a request is either waiting, preempted, active, or finished — never
@@ -44,10 +50,22 @@ use crate::serving::request::{InferenceRequest, RequestId};
 pub struct SchedulerConfig {
     /// Max concurrently active sequences (KV reservations).
     pub max_active: usize,
-    /// Admit at most this many prefills per scheduling round (guards
-    /// decode latency against prefill bursts — the serving-level analogue
-    /// of §3.7's stage split).
+    /// Admit at most this many prefill **chunks** per scheduling round
+    /// (guards decode latency against prefill bursts — the serving-level
+    /// analogue of §3.7's stage split). With chunking off each sequence's
+    /// whole context is one chunk, so this is the classic
+    /// prefills-per-round cap; with chunking on it is the round's pack
+    /// budget in chunk quanta (`max_prefills_per_round ×
+    /// prefill_chunk_tokens` pack tokens per round).
     pub max_prefills_per_round: usize,
+    /// Prefill chunk granule, in tokens. `0` disables chunking: every
+    /// sequence prefills its whole context in one chunk, exactly the
+    /// pre-chunking behaviour (and the bit-identical compiled-bucket
+    /// path in the engine). A positive granule splits each pending
+    /// prefill into fixed-token chunks so one round can pack chunks from
+    /// *multiple* sequences — a long prompt then no longer
+    /// head-of-line-blocks every later arrival's TTFT.
+    pub prefill_chunk_tokens: usize,
     /// Evictions a sequence may suffer before it is pinned (never again
     /// selected by [`Scheduler::choose_victim`]) — the starvation bound
     /// for paged-KV preemption. 0 pins everything, disabling *policy*
@@ -71,6 +89,7 @@ impl Default for SchedulerConfig {
         SchedulerConfig {
             max_active: 4,
             max_prefills_per_round: 1,
+            prefill_chunk_tokens: 0,
             max_evictions_per_seq: 3,
             kv_arena_blocks: None,
         }
@@ -85,6 +104,12 @@ pub struct SeqState {
     /// Next position to decode at (prompt length + generated so far).
     pub pos: usize,
     pub prefill_done: bool,
+    /// Context positions whose KV chunked prefill has already committed
+    /// (`0 ≤ prefill_progress ≤ context_len()`). The next chunk starts
+    /// here; eviction resets it to 0 — a preempted sequence re-prefills
+    /// from token 0, and the positions billed as re-prefill recompute are
+    /// exactly what this counter had reached.
+    pub prefill_progress: usize,
     /// Times this sequence has been evicted (paged-KV preemption).
     pub evictions: u32,
 }
@@ -104,13 +129,49 @@ impl SeqState {
     }
 }
 
-/// One scheduling round: the prefills to run and the decode batch to
-/// execute as a single batched step. Decode runs *first* when the engine
-/// executes the round (decode-first latency protection).
+/// One sequence's slice of a round's **prefill pack**: `len` context
+/// positions starting at `start`, for request `id`. The executor runs
+/// the whole pack as one flattened `(Σ len, d_model)` GEMM
+/// ([`crate::runtime::packed_prefill_round`]); each chunk's rows scatter
+/// into its own sequence's paged block table, and only the **final**
+/// chunk (`last`) produces logits — the sequence's first token exists
+/// only after it, which is what per-chunk TTFT attribution keys on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefillChunk {
+    pub id: RequestId,
+    /// First context position this chunk covers
+    /// (== the sequence's committed `prefill_progress`).
+    pub start: usize,
+    /// Context positions in this chunk (≥ 1, except the degenerate
+    /// empty-context chunk, which exists only so the executor can
+    /// resolve an empty prefill instead of stranding it).
+    pub len: usize,
+    /// Final chunk: `start + len == context_len()`; its last-position
+    /// logits produce the sequence's first token.
+    pub last: bool,
+}
+
+impl PrefillChunk {
+    /// Context length after this chunk executes.
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// One scheduling round: the prefill-chunk pack to run and the decode
+/// batch to execute as a single batched step. Decode runs *first* when
+/// the engine executes the round (decode-first latency protection).
+///
+/// With chunking off ([`SchedulerConfig::prefill_chunk_tokens`] = 0)
+/// every entry of `prefills` covers its sequence's whole context in one
+/// `last` chunk — the classic one-prefill-per-sequence round. A round
+/// never carries two chunks for the same sequence (contiguous quanta
+/// merge), so the no-request-named-twice invariant is unchanged.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Round {
-    /// Requests to prefill this round (≤ `max_prefills_per_round`).
-    pub prefills: Vec<RequestId>,
+    /// Prefill chunks to run this round (≤ `max_prefills_per_round`
+    /// chunk quanta in total), at most one chunk per sequence.
+    pub prefills: Vec<PrefillChunk>,
     /// Every active, prefilled, unfinished sequence: one decode step each,
     /// batched so the weights stream once.
     pub decode_batch: Vec<RequestId>,
@@ -130,6 +191,17 @@ impl Round {
     /// Total work items planned.
     pub fn work_items(&self) -> usize {
         self.prefills.len() + self.decode_batch.len()
+    }
+
+    /// Sequences named by the prefill pack, in pack order.
+    pub fn prefill_ids(&self) -> Vec<RequestId> {
+        self.prefills.iter().map(|c| c.id).collect()
+    }
+
+    /// Context positions the prefill pack covers (the packed GEMM's
+    /// flattened row count).
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefills.iter().map(|c| c.len).sum()
     }
 }
 
@@ -216,6 +288,7 @@ impl Scheduler {
                 generated: Vec::new(),
                 pos,
                 prefill_done: false,
+                prefill_progress: 0,
                 evictions: 0,
             });
         }
@@ -226,14 +299,19 @@ impl Scheduler {
     /// scheduler marks it un-prefilled so re-admission re-prefills its
     /// whole context ([`SeqState::context_len`]) — recompute semantics,
     /// no state is lost. Returns the re-prefill bill: the token positions
-    /// whose KV must be *recomputed* (the context length for a prefilled
-    /// sequence, 0 for one evicted before its prefill ever ran — nothing
-    /// is wasted then). `None` if `id` isn't active.
+    /// whose KV must be *recomputed* — the context length for a prefilled
+    /// sequence, the chunks already committed
+    /// ([`SeqState::prefill_progress`]) for one evicted mid-prefill, and
+    /// 0 for one evicted before any chunk ran (nothing is wasted then).
+    /// A chunked sequence re-prefills **from token 0** on re-admission
+    /// (its blocks were scrubbed and released with the handle), so the
+    /// progress counter resets here. `None` if `id` isn't active.
     pub fn preempt(&mut self, id: RequestId) -> Option<usize> {
         let i = self.active.iter().position(|s| s.request.id == id)?;
         let mut s = self.active.remove(i);
-        let bill = if s.prefill_done { s.context_len() } else { 0 };
+        let bill = if s.prefill_done { s.context_len() } else { s.prefill_progress };
         s.prefill_done = false;
+        s.prefill_progress = 0;
         s.evictions += 1;
         self.preempted.push_back(s);
         Some(bill)
@@ -371,23 +449,95 @@ impl Scheduler {
         (seqs, tokens)
     }
 
+    /// Per-sequence generated-so-far counts across active **and**
+    /// preempted sequences — the sample form of
+    /// [`inflight_gen`](Self::inflight_gen), for quantile-based
+    /// admission estimators
+    /// ([`crate::sim::GenLenEstimator::P90`]) that need the
+    /// distribution, not just the pooled mean.
+    pub fn inflight_gen_lens(&self) -> Vec<usize> {
+        self.active
+            .iter()
+            .chain(self.preempted.iter())
+            .map(|s| s.generated.len())
+            .collect()
+    }
+
     /// Plan the next round: every decodable sequence joins the decode
-    /// batch; up to `max_prefills_per_round` admitted-but-unprefilled
-    /// sequences get their prefill (in admission order, so prefill order
-    /// follows FIFO and nobody is starved).
+    /// batch, and up to `max_prefills_per_round` prefill-chunk quanta are
+    /// packed from the admitted-but-unprefilled sequences.
+    ///
+    /// **Unchunked** (`prefill_chunk_tokens == 0`): each of the first
+    /// `max_prefills_per_round` unprefilled sequences (admission order,
+    /// so prefill order follows FIFO and nobody is starved) gets one
+    /// whole-context chunk — the classic behaviour.
+    ///
+    /// **Chunked**: chunk quanta are dealt **round-robin** in admission
+    /// order — one `prefill_chunk_tokens` quantum per pending sequence
+    /// per pass, repeating while budget remains — so a long prompt
+    /// cannot head-of-line-block later arrivals' TTFT, yet a lone long
+    /// prompt still absorbs the whole budget (no throughput lost to
+    /// fairness when there is nobody to be fair to). A sequence's quanta
+    /// within one round are contiguous and merge into a single chunk.
     pub fn next_round(&self) -> Round {
         // A cap of 0 would strand admitted sequences forever (admitted but
         // never prefilled ⇒ never decodable ⇒ livelock): always allow at
-        // least one prefill per round.
+        // least one prefill quantum per round.
         let prefill_cap = self.cfg.max_prefills_per_round.max(1);
+        let chunk = self.cfg.prefill_chunk_tokens;
         let mut round = Round::default();
+        let mut pending: Vec<(RequestId, usize, usize)> = Vec::new(); // (id, progress, ctx)
         for s in &self.active {
             if !s.prefill_done {
-                if round.prefills.len() < prefill_cap {
-                    round.prefills.push(s.request.id);
-                }
+                pending.push((s.request.id, s.prefill_progress, s.context_len()));
             } else if !s.finished() {
                 round.decode_batch.push(s.request.id);
+            }
+        }
+        if chunk == 0 {
+            // Whole-context chunks, capped per round.
+            for &(id, progress, ctx) in pending.iter().take(prefill_cap) {
+                round
+                    .prefills
+                    .push(PrefillChunk { id, start: progress, len: ctx - progress, last: true });
+            }
+            return round;
+        }
+        // Round-robin quanta; `granted[i]` accumulates tokens for
+        // pending[i] this round.
+        let mut granted = vec![0usize; pending.len()];
+        let mut budget = prefill_cap;
+        while budget > 0 {
+            let mut dealt = false;
+            for (i, &(_, progress, ctx)) in pending.iter().enumerate() {
+                if budget == 0 {
+                    break;
+                }
+                let remaining = ctx - progress - granted[i];
+                if remaining == 0 {
+                    continue;
+                }
+                granted[i] += remaining.min(chunk);
+                budget -= 1;
+                dealt = true;
+            }
+            if !dealt {
+                break; // every pending sequence fully covered this round
+            }
+        }
+        for (i, &(id, progress, ctx)) in pending.iter().enumerate() {
+            // `progress == ctx` is the degenerate empty-context case: no
+            // quantum is ever granted, so emit an explicit zero-length
+            // final chunk instead of stranding the sequence unprefilled
+            // forever (the executor resolves it exactly like the legacy
+            // empty-prefill path did).
+            if granted[i] > 0 || progress == ctx {
+                round.prefills.push(PrefillChunk {
+                    id,
+                    start: progress,
+                    len: granted[i],
+                    last: progress + granted[i] == ctx,
+                });
             }
         }
         round
@@ -423,7 +573,7 @@ mod tests {
     }
 
     /// Execute one planned round against the scheduler state, the way the
-    /// engine does: decode batch first, then prefills.
+    /// engine does: decode batch first, then the prefill-chunk pack.
     fn execute_round(s: &mut Scheduler, round: &Round) {
         for &id in &round.decode_batch {
             let seq = s.seq_mut(id).unwrap();
@@ -434,8 +584,18 @@ mod tests {
             seq.generated.push(0);
             seq.pos += 1;
         }
-        for &id in &round.prefills {
-            s.seq_mut(id).unwrap().prefill_done = true;
+        for c in &round.prefills {
+            let seq = s.seq_mut(c.id).unwrap();
+            assert_eq!(
+                c.start, seq.prefill_progress,
+                "chunk must resume at the committed progress: {c:?}"
+            );
+            seq.prefill_progress += c.len;
+            assert!(seq.prefill_progress <= seq.context_len(), "{c:?}");
+            if c.last {
+                assert_eq!(seq.prefill_progress, seq.context_len(), "{c:?}");
+                seq.prefill_done = true;
+            }
         }
     }
 
@@ -460,7 +620,8 @@ mod tests {
         s.submit(req(1, 16, 2));
         s.admit();
         let r = s.next_round();
-        assert_eq!(r.prefills, vec![1]);
+        assert_eq!(r.prefill_ids(), vec![1]);
+        assert_eq!(r.prefills, vec![PrefillChunk { id: 1, start: 0, len: 16, last: true }]);
         assert!(r.decode_batch.is_empty(), "no decode before prefill: {r:?}");
         execute_round(&mut s, &r);
         let r = s.next_round();
@@ -541,7 +702,7 @@ mod tests {
         s.submit(req(1, 8, 1));
         s.admit();
         let r = s.next_round();
-        assert_eq!(r.prefills, vec![1], "at least one prefill per round: {r:?}");
+        assert_eq!(r.prefill_ids(), vec![1], "at least one prefill per round: {r:?}");
         execute_round(&mut s, &r);
         let r = s.next_round();
         execute_round(&mut s, &r);
@@ -651,10 +812,131 @@ mod tests {
         assert_eq!(seq1.evictions, 1);
         // It shows up as a prefill, then rejoins the decode batch.
         let r = s.next_round();
-        assert!(r.prefills.contains(&1), "{r:?}");
+        assert!(r.prefill_ids().contains(&1), "{r:?}");
         execute_round(&mut s, &r);
         let r = s.next_round();
         assert!(r.decode_batch.contains(&1), "{r:?}");
+    }
+
+    #[test]
+    fn chunked_prefill_packs_chunks_from_multiple_sequences() {
+        // Round-robin quanta: a 64-token prompt and a 16-token prompt
+        // share one round's pack — the short one *completes* its prefill
+        // in the same round the long one makes partial progress, which is
+        // the whole TTFT point of chunking.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_active: 4,
+            max_prefills_per_round: 4,
+            prefill_chunk_tokens: 16,
+            ..Default::default()
+        });
+        s.submit(req(0, 64, 4));
+        s.submit(req(1, 16, 4));
+        s.admit();
+        let r = s.next_round();
+        assert_eq!(r.prefill_tokens(), 4 * 16, "budget = cap × chunk quanta");
+        assert_eq!(
+            r.prefills,
+            vec![
+                // Pass 1 gives each sequence one quantum; passes 2–3 give
+                // the long prompt two more (merged into one chunk).
+                PrefillChunk { id: 0, start: 0, len: 48, last: false },
+                PrefillChunk { id: 1, start: 0, len: 16, last: true },
+            ]
+        );
+        execute_round(&mut s, &r);
+        assert!(s.seq(1).unwrap().prefill_done, "short prompt done in round 1");
+        assert_eq!(s.seq(0).unwrap().prefill_progress, 48);
+        // Next round: the long prompt's final chunk, and the short one
+        // decodes alongside it.
+        let r = s.next_round();
+        assert_eq!(
+            r.prefills,
+            vec![PrefillChunk { id: 0, start: 48, len: 16, last: true }]
+        );
+        assert_eq!(r.decode_batch, vec![1]);
+        execute_round(&mut s, &r);
+        assert!(s.seq(0).unwrap().prefill_done);
+    }
+
+    #[test]
+    fn chunked_prefill_does_not_let_a_long_prompt_block_later_arrivals() {
+        // The HOL shape: a long prompt at the FIFO head, short prompts
+        // behind it. Unchunked with cap 1, the shorts wait one full
+        // prefill round each behind the long; chunked, every short
+        // completes its prefill within the first rounds while the long
+        // streams its chunks alongside.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_active: 4,
+            max_prefills_per_round: 3,
+            prefill_chunk_tokens: 16,
+            ..Default::default()
+        });
+        s.submit(req(0, 128, 4)); // the blocker
+        s.submit(req(1, 16, 4));
+        s.submit(req(2, 16, 4));
+        s.admit();
+        let r = s.next_round();
+        // One quantum each: both shorts finish in round 1.
+        assert_eq!(
+            r.prefills,
+            vec![
+                PrefillChunk { id: 0, start: 0, len: 16, last: false },
+                PrefillChunk { id: 1, start: 0, len: 16, last: true },
+                PrefillChunk { id: 2, start: 0, len: 16, last: true },
+            ]
+        );
+        execute_round(&mut s, &r);
+        assert!(s.seq(1).unwrap().prefill_done && s.seq(2).unwrap().prefill_done);
+        // The long prompt now absorbs the whole budget per round.
+        let r = s.next_round();
+        assert_eq!(
+            r.prefills,
+            vec![PrefillChunk { id: 0, start: 16, len: 48, last: false }]
+        );
+        assert_eq!(r.decode_batch, vec![1, 2], "shorts decode while the long prefills");
+    }
+
+    #[test]
+    fn chunk_preemption_bills_committed_progress_and_restarts_from_zero() {
+        // A sequence evicted *between chunks* has committed KV for
+        // exactly `prefill_progress` positions — that is the re-prefill
+        // bill — and its next chunk after re-admission starts at token 0
+        // (the blocks were scrubbed with the handle).
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_active: 2,
+            max_prefills_per_round: 2,
+            prefill_chunk_tokens: 16,
+            ..Default::default()
+        });
+        s.submit(req(0, 64, 4));
+        s.admit();
+        let r = s.next_round();
+        assert_eq!(
+            r.prefills,
+            vec![PrefillChunk { id: 0, start: 0, len: 32, last: false }]
+        );
+        execute_round(&mut s, &r);
+        assert_eq!(s.seq(0).unwrap().prefill_progress, 32);
+        let bill = s.preempt(0).expect("active sequence evicts");
+        assert_eq!(bill, 32, "mid-prefill eviction bills the committed chunks only");
+        s.admit(); // re-admit from the preempted queue
+        let seq = s.seq(0).unwrap();
+        assert!(!seq.prefill_done);
+        assert_eq!(seq.prefill_progress, 0, "re-prefill restarts from token 0");
+        let r = s.next_round();
+        assert_eq!(
+            r.prefills,
+            vec![PrefillChunk { id: 0, start: 0, len: 32, last: false }]
+        );
+        // An eviction before ANY chunk ran still bills nothing.
+        let mut s2 = Scheduler::new(SchedulerConfig {
+            prefill_chunk_tokens: 16,
+            ..Default::default()
+        });
+        s2.submit(req(7, 64, 4));
+        s2.admit();
+        assert_eq!(s2.preempt(7), Some(0), "no committed chunks, no recompute bill");
     }
 
     #[test]
@@ -724,7 +1006,7 @@ mod tests {
             Err(_) => false,
         });
         let r = s.next_round();
-        assert_eq!(r.prefills, vec![0]);
+        assert_eq!(r.prefill_ids(), vec![0]);
         execute_round(&mut s, &r);
         arena.append(handles[&0], 16).unwrap(); // prefill wrote the prompt
 
@@ -743,7 +1025,7 @@ mod tests {
         // prefill — but seq 0's growth can only succeed by evicting 1.
         let round = s.next_round();
         assert_eq!(round.decode_batch, vec![0]);
-        assert_eq!(round.prefills, vec![1]);
+        assert_eq!(round.prefill_ids(), vec![1]);
         let needs: Vec<(RequestId, usize)> =
             round.decode_batch.iter().map(|&id| (id, 1)).collect();
         let mut evicted = Vec::new();
@@ -913,9 +1195,9 @@ mod tests {
                 if round.work_items() > max_active {
                     return Err(format!("round exceeds max_active: {round:?}"));
                 }
-                let mut ids: Vec<_> =
-                    round.prefills.iter().chain(&round.decode_batch).collect();
-                ids.sort();
+                let mut ids: Vec<RequestId> = round.prefill_ids();
+                ids.extend(&round.decode_batch);
+                ids.sort_unstable();
                 ids.dedup();
                 if ids.len() != round.work_items() {
                     return Err(format!("request appears twice in a round: {round:?}"));
@@ -931,8 +1213,12 @@ mod tests {
                     seq.generated.push(0);
                     seq.pos += 1;
                 }
-                for &id in &round.prefills {
-                    s.seq_mut(id).unwrap().prefill_done = true;
+                for c in &round.prefills {
+                    let seq = s.seq_mut(c.id).unwrap();
+                    seq.prefill_progress += c.len;
+                    if c.last {
+                        seq.prefill_done = true;
+                    }
                 }
                 finished += s.reap_finished().len();
                 if s.is_idle() {
@@ -1001,11 +1287,13 @@ mod tests {
                     seq.generated.push(0);
                     seq.pos += 1;
                 }
-                for &id in &round.prefills {
-                    let seq = s.seq_mut(id).unwrap();
-                    let n = seq.request.prompt.len();
-                    seq.prefill_done = true;
-                    arena.append(handles[&id], n).map_err(|e| e.to_string())?;
+                for c in &round.prefills {
+                    let seq = s.seq_mut(c.id).unwrap();
+                    seq.prefill_progress += c.len;
+                    if c.last {
+                        seq.prefill_done = true;
+                    }
+                    arena.append(handles[&c.id], c.len).map_err(|e| e.to_string())?;
                 }
                 arena.verify().map_err(|e| e.to_string())?;
                 for done in s.reap_finished() {

@@ -4,8 +4,15 @@
 //!
 //! Each iteration of the worker loop executes one scheduling **round**:
 //! the decode batch first (one step for every active sequence — weights
-//! stream once per round on the simulated GPU), then up to
-//! `max_prefills_per_round` prefills.
+//! stream once per round on the simulated GPU), then the round's
+//! **prefill pack** — up to `max_prefills_per_round` chunk quanta, from
+//! multiple sequences when [`SchedulerConfig::prefill_chunk_tokens`]
+//! enables chunking, executed as one flattened GEMM
+//! ([`TinyLmRuntime::prefill_pack`]). Partial chunks deposit KV rows
+//! through the provisional-scatter seam and commit at chunk boundaries;
+//! only the final chunk's logits produce the sequence's first token, so
+//! TTFT attributes to the round that ran it — and a long prompt no
+//! longer head-of-line-blocks every later arrival's first token.
 //!
 //! KV is **paged and device-resident**: every sequence's K/V rows live
 //! in one shared contiguous block region ([`PagedKvStore`]) addressed
@@ -47,7 +54,9 @@ use std::time::Instant;
 
 use crate::error::{DriftError, Result};
 use crate::kv::{KvArenaConfig, KvSeqHandle, PagedKvStore};
-use crate::runtime::tinylm::{PagedRoundStep, SpecStepArgs, TinyLmRuntime};
+use crate::runtime::tinylm::{
+    PackedPrefillChunk, PagedRoundStep, SpecStepArgs, TinyLmRuntime,
+};
 use crate::runtime::Runtime;
 use crate::serving::admission::AdmissionPolicy;
 use crate::serving::metrics::Metrics;
@@ -666,45 +675,102 @@ fn worker_loop(
             metrics.record_round(inputs.len(), round_tokens);
         }
 
-        // ---- prefills ---------------------------------------------------
-        for &id in &round.prefills {
-            if held_out.contains(&id) {
-                // Evicted this round before its prefill ran (a fresh,
+        // ---- prefills (chunked + packed) --------------------------------
+        // The round's prefill pack: chunks from multiple sequences,
+        // executed by the runtime as one flattened GEMM
+        // ([`TinyLmRuntime::prefill_pack`]; the B=1 CPU artifact loops
+        // the chunks — numerics stay exactly single-stream — while the
+        // packed one-launch latency is what the cost model prices). A
+        // partial chunk deposits KV rows through the provisional-scatter
+        // seam and commits at the chunk boundary; only the FINAL chunk
+        // returns logits, so the first token — and TTFT — attributes to
+        // the round that ran it. Re-prefill after a preemption restarts
+        // at token 0 over prompt + generated: recompute rebuilds the
+        // evicted rows, and the final chunk's logits reproduce the
+        // pending next token exactly.
+        let mut pack: Vec<PackedPrefillChunk> = Vec::new();
+        let mut pack_ids: Vec<RequestId> = Vec::new();
+        for c in &round.prefills {
+            if held_out.contains(&c.id) {
+                // Evicted this round before its chunk ran (a fresh,
                 // zero-progress admission is the preferred victim): it is
                 // back in the preempted queue, not active — skip it.
                 continue;
             }
-            let seq = sched.seq_mut(id).expect("scheduled seq exists");
-            let queue_s = seq.request.arrival.elapsed().as_secs_f64();
-            // Re-prefill after a preemption covers prompt + generated:
-            // recompute rebuilds the evicted KV rows, and the logits over
-            // this context reproduce the pending next token exactly.
-            let ctx: Vec<i32> =
-                seq.request.prompt.iter().chain(seq.generated.iter()).copied().collect();
-            let t = Instant::now();
-            // Paged prefill: the dense K/V the artifact returns is
-            // scattered straight into the sequence's region blocks
-            // (admission claimed exactly this context) and dropped.
-            match model.prefill_paged(&ctx, &mut store, handles[&id]) {
-                Ok(logits) => {
-                    let prefill_s = t.elapsed().as_secs_f64();
+            let seq = sched.seq(c.id).expect("scheduled seq exists");
+            debug_assert_eq!(c.start, seq.prefill_progress, "chunk off its progress: {c:?}");
+            // The queue clock stops when the FIRST chunk starts running.
+            if c.start == 0 {
+                if let Some(pending) = replies.get_mut(&c.id) {
+                    pending
+                        .queue_s
+                        .get_or_insert_with(|| seq.request.arrival.elapsed().as_secs_f64());
+                }
+            }
+            let tokens: Vec<i32> = seq
+                .request
+                .prompt
+                .iter()
+                .chain(seq.generated.iter())
+                .copied()
+                .skip(c.start)
+                .take(c.len)
+                .collect();
+            pack.push(PackedPrefillChunk {
+                h: handles[&c.id],
+                start: c.start,
+                tokens,
+                last: c.last,
+            });
+            pack_ids.push(c.id);
+        }
+        let outcomes = model.prefill_pack(&mut store, &pack);
+        for ((id, chunk), outcome) in pack_ids.into_iter().zip(&pack).zip(outcomes) {
+            match outcome {
+                Ok(out) => {
+                    metrics.record_prefill_chunk(chunk.tokens.len());
+                    let seq = sched.seq_mut(id).expect("scheduled seq exists");
+                    seq.prefill_progress += chunk.tokens.len();
+                    if !chunk.last {
+                        // Mid-prefill chunk: KV deposited, no token yet —
+                        // fold the time into the parked reply and keep
+                        // waiting for the final chunk.
+                        let pending = replies.get_mut(&id).expect("pending reply");
+                        pending.prefill_s += out.step_s;
+                        continue;
+                    }
                     seq.prefill_done = true;
+                    let logits = out.logits.expect("final chunk returns logits");
                     let next = argmax(&logits) as i32;
                     let pending = replies.remove(&id).expect("pending reply");
-                    if let Err(e) = store.append(handles[&id], ctx.len()) {
-                        crate::log_error!("kv store append for request {id}: {e}");
-                    }
                     let arrival = seq.request.arrival;
-                    runtimes.insert(id, pending.resume(next, prefill_s, arrival, queue_s));
+                    // `pending.queue_s` was stamped when the FIRST chunk
+                    // ran (every first chunk has `start == 0` and a
+                    // parked reply), so `resume`'s elapsed-now fallback
+                    // below is provably never taken — it cannot become
+                    // the recorded queue wait.
+                    runtimes.insert(
+                        id,
+                        pending.resume(next, out.step_s, arrival, arrival.elapsed().as_secs_f64()),
+                    );
                     // Speculative decode: (re-)prefill the draft over the
-                    // same context so draft and target KV agree. A draft
-                    // prefill failure downgrades this sequence to plain
-                    // decode — speculation is an optimization, never a
-                    // new way to fail a request.
+                    // whole context so draft and target KV agree —
+                    // executed once, at the final chunk. A draft prefill
+                    // failure downgrades this sequence to plain decode —
+                    // speculation is an optimization, never a new way to
+                    // fail a request.
                     if let (Some(draft_m), Some(ds)) =
                         (draft_rt.as_ref(), draft_store.as_mut())
                     {
                         if let Some(&dh) = draft_handles.get(&id) {
+                            let seq = sched.seq(id).expect("scheduled seq exists");
+                            let ctx: Vec<i32> = seq
+                                .request
+                                .prompt
+                                .iter()
+                                .chain(seq.generated.iter())
+                                .copied()
+                                .collect();
                             match draft_m.prefill_paged(&ctx, ds, dh) {
                                 Ok(_) => {
                                     if let Err(e) = ds.append(dh, ctx.len()) {
@@ -731,8 +797,10 @@ fn worker_loop(
                     // but a re-prefill failure after preemption must not
                     // discard the tokens generated before eviction (the
                     // reap fallback below replies with `done.generated`
-                    // plus the parked timings and this error).
-                    crate::log_error!("prefill failed for request {id}: {e}");
+                    // plus the parked timings and this error). The failed
+                    // chunk's provisional rows were scrubbed by the pack.
+                    crate::log_error!("prefill chunk failed for request {id}: {e}");
+                    let seq = sched.seq_mut(id).expect("scheduled seq exists");
                     seq.prefill_done = true;
                     seq.request.max_new_tokens = seq.generated.len(); // finish now
                     if let Some(pending) = replies.get_mut(&id) {
@@ -754,9 +822,7 @@ fn worker_loop(
             }
             if let Some(srt) = runtimes.remove(&id) {
                 let total_s = srt.started.elapsed().as_secs_f64();
-                // No decode step ever ran (max_new_tokens ≤ 1): the first
-                // token came straight from prefill, so TTFT ≈ completion.
-                let ttft_s = srt.ttft_s.unwrap_or(srt.queue_s + srt.prefill_s);
+                let ttft_s = fallback_ttft(srt.ttft_s, total_s);
                 metrics.record_completion(
                     done.request.prompt.len(),
                     done.generated.len(),
@@ -846,4 +912,88 @@ fn argmax(xs: &[f32]) -> usize {
         }
     }
     best
+}
+
+/// TTFT for a sequence that never stamped one during a decode round —
+/// its first token came straight out of the final prefill chunk's logits
+/// at completion (`max_new_tokens ≤ 1`, or a generation truncated before
+/// its first decode emission): the full arrival→completion wall clock.
+///
+/// The pre-fix fallback was `queue_s + prefill_s`, which **undercounts
+/// after an eviction/re-admission cycle**: `queue_s` stops at the first
+/// prefill and `prefill_s` sums only the seconds spent inside prefill
+/// executions, so the parked wait between eviction and re-admission (and
+/// every round-scheduling gap) appeared in neither term. The elapsed
+/// wall clock contains them all by construction, and for the no-eviction
+/// case it is what the old sum approximated anyway.
+fn fallback_ttft(stamped: Option<f64>, total_s: f64) -> f64 {
+    stamped.unwrap_or(total_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn ttft_fallback_covers_requeue_wait_after_eviction() {
+        // Regression (ISSUE 5 satellite): a sequence whose first token
+        // comes straight out of prefill AFTER an eviction/re-admission
+        // cycle. Timeline: 10 ms queue → 20 ms first prefill → evicted →
+        // 300 ms parked in the re-admission queue → 25 ms re-prefill →
+        // reaped with the first token from the re-prefill logits. The
+        // old `queue_s + prefill_s` fallback reported 55 ms — the 300 ms
+        // re-queue wait appeared in neither term — while the elapsed
+        // wall clock (355 ms) is the time the caller actually waited for
+        // the first token.
+        let (tx, _rx) = channel();
+        let mut parked = PendingReply::new(tx);
+        parked.queue_s = Some(0.010); // stopped at the FIRST prefill
+        parked.prefill_s = 0.020; // first prefill, before the eviction
+        // Re-admission: resume after the re-prefill. `queue_now` (the
+        // arrival→now elapsed at re-prefill time) must NOT replace the
+        // carried first-prefill queue wait.
+        let srt = parked.resume(7, 0.025, Instant::now(), 0.330);
+        assert_eq!(srt.queue_s, 0.010, "first-prefill queue wait survives re-admission");
+        assert!((srt.prefill_s - 0.045).abs() < 1e-12, "prefill seconds accumulate");
+        assert_eq!(srt.ttft_s, None, "no decode emission ever stamped a TTFT");
+
+        let total_s = 0.355; // arrival → reap wall clock
+        let fixed = fallback_ttft(srt.ttft_s, total_s);
+        assert_eq!(fixed, total_s, "fallback must be the full elapsed wait");
+        let old = srt.queue_s + srt.prefill_s;
+        assert!(
+            fixed - old > 0.29,
+            "the pre-fix fallback hid the ~300 ms re-queue wait: {old} vs {fixed}"
+        );
+        // A stamped TTFT (first token emitted in a decode round) is
+        // always preferred over the fallback.
+        assert_eq!(fallback_ttft(Some(0.042), total_s), 0.042);
+    }
+
+    #[test]
+    fn park_resume_roundtrip_carries_every_timing_field() {
+        // `SeqRuntime::park` and `PendingReply::resume` are inverses; a
+        // field added to one but not the other silently zeroes across an
+        // eviction. Drive a full park → resume cycle and check each
+        // carried field.
+        let (tx, _rx) = channel();
+        let mut p = PendingReply::new(tx);
+        p.queue_s = Some(0.2);
+        p.prefill_s = 0.3;
+        p.error = Some("boom".into());
+        let mut srt = p.resume(5, 0.1, Instant::now(), 9.9);
+        srt.decode_s = 0.7;
+        srt.ttft_s = Some(0.55);
+        let parked = srt.park();
+        assert_eq!(parked.queue_s, Some(0.2));
+        assert!((parked.prefill_s - 0.4).abs() < 1e-12);
+        assert_eq!(parked.decode_s, 0.7);
+        assert_eq!(parked.ttft_s, Some(0.55));
+        assert_eq!(parked.error.as_deref(), Some("boom"));
+        let back = parked.resume(6, 0.05, Instant::now(), 9.9);
+        assert_eq!(back.queue_s, 0.2);
+        assert!((back.prefill_s - 0.45).abs() < 1e-12);
+        assert_eq!(back.ttft_s, Some(0.55));
+    }
 }

@@ -72,6 +72,42 @@ impl KernelCost {
         self.batched_total(batch.max(1) * (k + 1))
     }
 
+    /// Roofline time for this kernel executing a **packed prefill**: one
+    /// launch covers several sequences' chunks, each contributing a
+    /// per-sequence work share in `scales` (its chunk's fraction of the
+    /// work the kernel was compiled for — linear token share for the
+    /// GEMM/norm/RoPE family, the quadratic attention share for the
+    /// weightless score/softmax kernels; the split is the caller's,
+    /// [`crate::sim::exec::packed_prefill_time_s`]).
+    ///
+    /// * compute scales with the **summed** share (the flattened
+    ///   `(Σ tokens, d_model)` GEMM does every sequence's MACs);
+    /// * weight bytes stream **once** for the whole pack — the §3.7
+    ///   bandwidth argument applied to concurrent prompts — while
+    ///   per-sequence bytes (activations, KV writes) scale with the sum;
+    /// * launch overhead is paid once per pack, not once per prompt —
+    ///   the term that dominates short-chunk packs on phone-class
+    ///   profiles.
+    ///
+    /// `packed_prefill_total(&[1.0])` equals [`total`](Self::total)
+    /// exactly (one full-plan sequence degenerates to the plain kernel),
+    /// and shares summing to 1 across chunks reproduce the one-shot
+    /// kernel body, so chunking redistributes work without inventing or
+    /// losing any. An empty/zero pack costs nothing.
+    pub fn packed_prefill_total(&self, scales: &[f64]) -> f64 {
+        let s: f64 = scales.iter().sum();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        let mem = if self.bytes <= 0.0 {
+            0.0
+        } else {
+            self.t_memory * (self.weight_bytes + s * (self.bytes - self.weight_bytes))
+                / self.bytes
+        };
+        (self.t_compute * s).max(mem) + self.t_launch
+    }
+
     /// Memory-limited time for a batch-`batch` launch: weight bytes once,
     /// per-sequence bytes × batch. The single source of the batched
     /// scaling rule — `batched_total` and the round simulator both use it.
@@ -342,6 +378,35 @@ mod tests {
         // … but is monotone in k (each position still pays its
         // per-sequence traffic).
         assert!(c.speculative_verify_total(1, 2) > c.speculative_verify_total(1, 1));
+    }
+
+    #[test]
+    fn packed_prefill_amortizes_weights_and_launch() {
+        let dev = device("adreno_750").unwrap();
+        let (g, fc) = fc_graph(128, DType::I8);
+        let choice = select_kernel(&g.nodes[fc], &dev, Stage::Prefill);
+        let c = kernel_cost(&g, &g.nodes[fc], &choice, &dev, Stage::Prefill);
+        // A single full-share pack degenerates to the plain kernel.
+        assert_eq!(c.packed_prefill_total(&[1.0]), c.total());
+        // Shares are additive: splitting one sequence's work across
+        // chunk entries of the same pack changes nothing.
+        assert_eq!(
+            c.packed_prefill_total(&[0.25, 0.5, 0.25]),
+            c.packed_prefill_total(&[1.0])
+        );
+        // Packing N short chunks beats N separate launches: the pack
+        // pays one launch (and streams weights once) for the same work.
+        let n = 4;
+        let shares = vec![0.25; n];
+        let packed = c.packed_prefill_total(&shares);
+        let sequential: f64 = (0..n).map(|_| c.packed_prefill_total(&[0.25])).sum();
+        assert!(
+            packed < sequential,
+            "pack {packed} must undercut {n} separate launches {sequential}"
+        );
+        // Degenerate packs cost nothing.
+        assert_eq!(c.packed_prefill_total(&[]), 0.0);
+        assert_eq!(c.packed_prefill_total(&[0.0, 0.0]), 0.0);
     }
 
     #[test]

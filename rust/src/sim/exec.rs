@@ -181,27 +181,97 @@ pub fn simulate_batched(plan: &ExecutionPlan, batch: usize) -> SimReport {
 /// the old linear extrapolation that under-billed it. At `r = 1` this is
 /// exactly `simulate(plan).total_s`.
 ///
-/// This is what the serving simulator charges **preemption re-prefills**
-/// with (an evicted sequence recomputes its whole context on
-/// re-admission; pricing that recompute honestly is what keeps the
-/// simulator truthful about thrashing).
+/// **Model scope:** this prices an *idealized right-sized* execution —
+/// launch overhead and weight streaming scale with `r` too, as if a
+/// plan compiled at exactly `tokens` existed. Running the one compiled
+/// plan on a shorter context actually pays its full launch set and
+/// weight stream; that as-executed form is
+/// [`packed_prefill_time_s`] with a single chunk, which is what the
+/// serving simulator bills every prefill (and re-prefill) with — the
+/// two share the [`attention_quadratic`] kernel split and agree exactly
+/// at `r = 1`.
 pub fn prefill_time_s(plan: &ExecutionPlan, plan_tokens: usize, tokens: usize) -> f64 {
     let r = tokens as f64 / plan_tokens.max(1) as f64;
     let mut linear = 0.0;
     let mut quad = 0.0;
     for k in &plan.kernels {
         let t = k.cost.total();
-        let attention_quadratic = matches!(
-            k.choice.variant,
-            KernelVariant::MatMulTiled | KernelVariant::Softmax
-        ) && k.cost.weight_bytes == 0.0;
-        if attention_quadratic {
+        if attention_quadratic(k) {
             quad += t;
         } else {
             linear += t;
         }
     }
     linear * r + quad * r * r
+}
+
+/// Does this planned kernel scale **quadratically** with sequence
+/// length? Structurally: the weightless attention score/context matmuls
+/// ([`KernelVariant::MatMulTiled`] reading per-sequence K/V, not shared
+/// weights) and the softmax over the `S × S` score matrix; everything
+/// else (FC/conv GEMMs, norms, RoPE, embedding) is linear. The single
+/// classification both prefill pricers share — [`prefill_time_s`] and
+/// [`packed_prefill_time_s`] may bill launches differently (see below)
+/// but must never disagree about which kernels are quadratic.
+fn attention_quadratic(k: &PlannedKernel) -> bool {
+    matches!(k.choice.variant, KernelVariant::MatMulTiled | KernelVariant::Softmax)
+        && k.cost.weight_bytes == 0.0
+}
+
+/// One sequence's chunk in a packed prefill round, for pricing
+/// ([`packed_prefill_time_s`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PackedChunkCost {
+    /// Context positions this chunk processes.
+    pub tokens: usize,
+    /// Context length once the chunk has run (`start + tokens`): every
+    /// chunk position attends over *all* earlier positions, so the
+    /// chunk's quadratic attention share is `end² − start²`, not
+    /// `tokens²` — chunking a prompt never discounts its attention bill.
+    pub context_end: usize,
+}
+
+/// Time for one round's **packed prefill**: chunks from several
+/// sequences executed as one flattened `(Σ tokens, d_model)` GEMM per
+/// kernel — one launch per kernel per round however many prompts are
+/// packed, weight bytes streamed once for the pack
+/// ([`KernelCost::packed_prefill_total`]).
+///
+/// Per-sequence shares follow the same linear/quadratic split as
+/// [`prefill_time_s`]: the FC/conv GEMMs, norms, RoPE and embedding
+/// scale with the chunk's token count; the weightless attention
+/// score/softmax kernels scale with `end² − start²` (the chunk's rows
+/// attend over the whole context so far). Summed over a prompt's
+/// chunks the shares telescope to exactly the one-shot prompt's —
+/// chunking moves *when* prefill work happens (and how many launches it
+/// takes), never how much compute it is.
+///
+/// A pack holding one full-plan chunk (`tokens == context_end ==
+/// plan_tokens`) reproduces `simulate(plan).total_s` exactly.
+pub fn packed_prefill_time_s(
+    plan: &ExecutionPlan,
+    plan_tokens: usize,
+    chunks: &[PackedChunkCost],
+) -> f64 {
+    if chunks.is_empty() {
+        return 0.0;
+    }
+    let pt = plan_tokens.max(1) as f64;
+    let mut linear = Vec::with_capacity(chunks.len());
+    let mut quad = Vec::with_capacity(chunks.len());
+    for c in chunks {
+        debug_assert!(c.tokens <= c.context_end, "chunk longer than its context: {c:?}");
+        let end = c.context_end as f64 / pt;
+        let start = c.context_end.saturating_sub(c.tokens) as f64 / pt;
+        linear.push(c.tokens as f64 / pt);
+        quad.push(end * end - start * start);
+    }
+    plan.kernels
+        .iter()
+        .map(|k| {
+            k.cost.packed_prefill_total(if attention_quadratic(k) { &quad } else { &linear })
+        })
+        .sum()
 }
 
 /// Extra time a **paged-KV** decode round pays over the dense layout for
@@ -414,6 +484,59 @@ mod tests {
             );
             prev = t;
         }
+    }
+
+    #[test]
+    fn packed_prefill_pricing_is_consistent_and_amortizes_launches() {
+        let cfg = crate::models::llm_config("gemma2_2b").unwrap();
+        let dev = device("adreno_750").unwrap();
+        let p = crate::engine::llm::simulate_llm(
+            &cfg,
+            &dev,
+            crate::quant::QuantScheme::Mixed844,
+            1024,
+            256,
+            &crate::engine::compile::CompileOptions::default(),
+        )
+        .unwrap();
+        let plan = &p.prefill.plan;
+        // Anchor: one full-plan chunk reproduces the straight simulation.
+        let full = PackedChunkCost { tokens: 1024, context_end: 1024 };
+        let t_full = packed_prefill_time_s(plan, 1024, &[full]);
+        let t_sim = simulate(plan).total_s;
+        assert!((t_full - t_sim).abs() < 1e-9 * t_sim, "{t_full} vs {t_sim}");
+        // Splitting one prompt across chunk entries of the SAME pack is
+        // free: the linear shares sum and the quadratic shares telescope
+        // (end² − start²), so the bill is identical to the one chunk.
+        let halves = [
+            PackedChunkCost { tokens: 512, context_end: 512 },
+            PackedChunkCost { tokens: 512, context_end: 1024 },
+        ];
+        let t_halves = packed_prefill_time_s(plan, 1024, &halves);
+        assert!((t_halves - t_full).abs() < 1e-9 * t_full, "{t_halves} vs {t_full}");
+        // Splitting across ROUNDS pays one extra launch set per round —
+        // more than the one-shot, but far less than twice it.
+        let t_rounds = packed_prefill_time_s(plan, 1024, &halves[..1])
+            + packed_prefill_time_s(plan, 1024, &halves[1..]);
+        assert!(t_rounds > t_full, "per-round launches must be billed");
+        assert!(t_rounds < 1.5 * t_full, "chunking must not double the bill");
+        // Packing four prompts' chunks into one round beats running the
+        // same four chunks as four sequential prefill rounds — by at
+        // least the three launch sets the pack does not pay (weight
+        // streams shared across the pack widen the gap further).
+        let four: Vec<PackedChunkCost> =
+            (0..4).map(|_| PackedChunkCost { tokens: 64, context_end: 64 }).collect();
+        let packed = packed_prefill_time_s(plan, 1024, &four);
+        let sequential: f64 =
+            four.iter().map(|c| packed_prefill_time_s(plan, 1024, &[*c])).sum();
+        let launch_set: f64 = plan.kernels.iter().map(|k| k.cost.t_launch).sum();
+        assert!(
+            sequential - packed >= 3.0 * launch_set * (1.0 - 1e-9),
+            "short-chunk packs must amortize launches: {packed} vs {sequential} \
+             (launch set {launch_set})"
+        );
+        // Empty pack: no work, no launch.
+        assert_eq!(packed_prefill_time_s(plan, 1024, &[]), 0.0);
     }
 
     #[test]

@@ -14,12 +14,21 @@
 //!   ([`crate::serving::AdmissionPolicy`]). Occupancy tracks actual
 //!   footprints; mid-round exhaustion preempts (evict → requeue →
 //!   re-prefill), and the simulator charges that re-prefill via
-//!   [`crate::sim::exec::prefill_time_s`] so thrashing is priced, not
-//!   hidden.
+//!   [`crate::sim::exec::packed_prefill_time_s`] (quadratic attention
+//!   share included) so thrashing is priced, not hidden.
 //!
 //! Per-token KV accounting is one row per emitted token (the
 //! final-emission row the engine skips is ≤ one block per sequence and
 //! identical across disciplines, so comparisons are unaffected).
+//!
+//! **Chunked + packed prefill**
+//! ([`SchedulerConfig::prefill_chunk_tokens`] > 0): each round's prefill
+//! pack — chunks from multiple sequences — is billed as one flattened
+//! GEMM with one launch set and one host sync
+//! ([`packed_prefill_time_s`]), and per-request TTFT is stamped at the
+//! round whose pack carried the request's *final* chunk. With chunking
+//! off, prefills bill per prompt (launch + sync each) — the sequential
+//! baseline the TTFT-burst sweep compares against.
 
 use std::collections::{HashMap, HashSet};
 
@@ -28,10 +37,11 @@ use crate::serving::request::{InferenceRequest, RequestId};
 use crate::serving::scheduler::{Scheduler, SchedulerConfig};
 use crate::serving::{blended_mean_gen, AdmissionPolicy};
 use crate::sim::exec::{
-    expected_accepted_tokens, expected_draft_steps, paged_gather_overhead_s, prefill_time_s,
-    simulate_batched, verify_time_s, ExecutionPlan,
+    expected_accepted_tokens, expected_draft_steps, packed_prefill_time_s,
+    paged_gather_overhead_s, simulate_batched, verify_time_s, ExecutionPlan, PackedChunkCost,
 };
 use crate::util::div_ceil;
+use crate::util::stats::Summary;
 
 /// One simulated request: what the client *asks for* vs what the model
 /// *actually generates* (the gap lifetime reservation pays for).
@@ -65,6 +75,15 @@ pub enum GenLenEstimator {
     /// ([`blended_mean_gen`]) — the engine's behaviour.
     #[default]
     Blended,
+    /// 90th percentile of the pooled generation-length samples
+    /// (completed lengths ∪ in-flight generated-so-far lower bounds),
+    /// floored at the blended mean so it can only be *more* conservative.
+    /// On bimodal workloads the mean splits the modes and still
+    /// over-admits the long mode; the p90 tracks the long mode itself,
+    /// cutting warm-up preemptions further at the cost of admitting
+    /// fewer speculative shorts. Cold start (no completions) stays
+    /// worst-case, like the other estimators.
+    P90,
 }
 
 /// Speculative-decode parameters for an acceptance-rate-parameterized
@@ -89,8 +108,9 @@ pub struct ServingSimConfig {
     pub reservation: KvReservation,
     /// Host/GPU sync per executed round (s).
     pub sync_s: f64,
-    /// Sequence length the prefill plan was compiled at ([`prefill_time_s`]
-    /// scales its linear and quadratic parts from it).
+    /// Sequence length the prefill plan was compiled at
+    /// ([`packed_prefill_time_s`] scales the per-chunk linear and
+    /// quadratic work shares from it).
     pub prefill_plan_tokens: usize,
     /// Mean-generation estimator admission is fed.
     pub estimator: GenLenEstimator,
@@ -134,6 +154,20 @@ pub struct ServingSimReport {
     /// Speculative decode: proposals accepted (emitted beyond the one
     /// pending token per member per round).
     pub spec_accepted_tokens: usize,
+    /// Median time-to-first-token across completed prefills. A request's
+    /// first token exists only after its **final** prefill chunk's
+    /// logits — partial chunks deposit KV rows, not tokens — so this is
+    /// the simulated clock at the end of the round whose pack carried
+    /// that final chunk (all requests arrive at t = 0).
+    pub ttft_p50_s: f64,
+    /// p95 of the same distribution.
+    pub ttft_p95_s: f64,
+    /// TTFT p95 over the arrivals **behind the FIFO head** (every
+    /// request but the first-submitted). This is the cohort a long
+    /// head-of-line prompt delays under sequential prefill — the head's
+    /// own TTFT is bounded below by its prompt length in *any*
+    /// discipline, so the packing win shows up here.
+    pub ttft_behind_head_p95_s: f64,
 }
 
 impl ServingSimReport {
@@ -205,6 +239,11 @@ fn simulate_serving_impl(
     let mut occupancy_sum = 0usize;
     let mut decode_rounds = 0usize;
     let mut completed_gen = 0usize;
+    let mut completed_lens: Vec<usize> = Vec::new();
+    // First-token timestamp per request (set once, at the first round
+    // whose pack carried the request's final prefill chunk).
+    let mut ttft_by_id: HashMap<RequestId, f64> = HashMap::new();
+    let chunked = cfg.sched.prefill_chunk_tokens > 0;
     // The reservation discipline maps onto the shared admission policy:
     // lifetime IS worst-case admission (gate + claim the whole
     // footprint), paged gates on the expectation and claims the context.
@@ -242,6 +281,21 @@ fn simulate_serving_impl(
                     inflight,
                     inflight_tokens,
                 )
+            }
+            GenLenEstimator::P90 => {
+                let (inflight, inflight_tokens) = sched.inflight_gen();
+                blended_mean_gen(
+                    rep.completed as u64,
+                    completed_gen as u64,
+                    inflight,
+                    inflight_tokens,
+                )
+                .map(|blended| {
+                    let mut pool: Vec<f64> =
+                        completed_lens.iter().map(|&l| l as f64).collect();
+                    pool.extend(sched.inflight_gen_lens().iter().map(|&l| l as f64));
+                    Summary::from_samples(pool).percentile(90.0).max(blended)
+                })
             }
         };
         sched.admit_where(|req, ctx_tokens| {
@@ -379,28 +433,85 @@ fn simulate_serving_impl(
             rep.peak_occupancy = rep.peak_occupancy.max(executed);
         }
 
-        // Prefills (initial and re-prefills alike: an evicted sequence
-        // re-enters here with its whole context, and pays for it — at the
-        // plan priced for its *actual* context length, quadratic
-        // attention term included).
-        for &id in &round.prefills {
-            if held_out.contains(&id) {
-                continue; // evicted this round before its prefill ran
+        // Prefills: one chunk pack per round, initial and re-prefills
+        // alike (an evicted sequence restarts its chunks at token 0 and
+        // pays for its whole context again — quadratic attention term
+        // included, so thrashing is priced, not hidden). With chunking
+        // off every chunk covers its whole context and is billed as its
+        // own prompt-sized launch + sync — exactly the sequential path;
+        // with chunking on the pack is one flattened GEMM: one launch
+        // set and one host sync per round however many prompts
+        // contribute chunks ([`packed_prefill_time_s`]).
+        let prefill_base = rep.decode_s + rep.prefill_s + rep.gather_s;
+        let mut pack: Vec<PackedChunkCost> = Vec::new();
+        let mut finished_prefill: Vec<RequestId> = Vec::new();
+        let mut sequential_prefill_s = 0.0;
+        for c in &round.prefills {
+            if held_out.contains(&c.id) {
+                continue; // evicted this round before its chunk ran
             }
-            let seq = sched.seq_mut(id).expect("scheduled seq exists");
-            let ctx = seq.context_len();
-            seq.prefill_done = true;
-            let t = *prefill_cost
-                .entry(ctx)
-                .or_insert_with(|| prefill_time_s(prefill_plan, cfg.prefill_plan_tokens, ctx));
-            rep.prefill_s += t + cfg.sync_s;
-            rep.prefill_tokens += ctx;
-            // Immediate EOS (actual 0): finish straight out of prefill,
-            // before the decode loop could over-generate a token.
-            if seq.generated.len() >= actual[&id] {
-                seq.request.max_new_tokens = seq.generated.len();
+            let seq = sched.seq_mut(c.id).expect("scheduled seq exists");
+            debug_assert_eq!(c.start, seq.prefill_progress, "chunk off its progress: {c:?}");
+            seq.prefill_progress += c.len;
+            if c.last {
+                seq.prefill_done = true;
+                // Immediate EOS (actual 0): finish straight out of
+                // prefill, before the decode loop could over-generate.
+                if seq.generated.len() >= actual[&c.id] {
+                    seq.request.max_new_tokens = seq.generated.len();
+                }
             }
-            arena.append(handles[&id], ctx).expect("admission claimed the context");
+            rep.prefill_tokens += c.len;
+            arena.append(handles[&c.id], c.len).expect("admission claimed the context");
+            pack.push(PackedChunkCost { tokens: c.len, context_end: c.end() });
+            if !chunked {
+                // One prompt-sized pack per prompt: the SAME cost model
+                // as the chunked path (full launch set + weight stream
+                // per execution — running a compiled plan on a shorter
+                // context shrinks its work, never its kernel count), so
+                // chunked-vs-sequential comparisons differ only in
+                // scheduling and launch amortization, never in pricing
+                // rules.
+                let ctx = c.end();
+                sequential_prefill_s += *prefill_cost.entry(ctx).or_insert_with(|| {
+                    packed_prefill_time_s(
+                        prefill_plan,
+                        cfg.prefill_plan_tokens,
+                        &[PackedChunkCost { tokens: c.len, context_end: ctx }],
+                    )
+                }) + cfg.sync_s;
+                // Sequential prompts run back-to-back, so each one's
+                // logits — and first token — land at the end of its OWN
+                // prefill, not the round's (a shared end-of-round stamp
+                // would inflate the sequential baseline's TTFT whenever
+                // the cap packs several prompts into one round).
+                if c.last {
+                    ttft_by_id.entry(c.id).or_insert(prefill_base + sequential_prefill_s);
+                }
+            } else if c.last {
+                finished_prefill.push(c.id);
+            }
+        }
+        if !pack.is_empty() {
+            rep.prefill_s += if chunked {
+                packed_prefill_time_s(prefill_plan, cfg.prefill_plan_tokens, &pack)
+                    + cfg.sync_s
+            } else {
+                sequential_prefill_s
+            };
+        }
+        // Packed first-token timestamps: the first token exists only
+        // after the FINAL chunk's logits (partial chunks deposit KV
+        // rows, not tokens), and the pack is ONE flattened GEMM — every
+        // final chunk's logits land together at the end of the round's
+        // pack. All requests arrive at t = 0; a re-prefill after
+        // eviction keeps the original stamp (its first token was
+        // already delivered).
+        if !finished_prefill.is_empty() {
+            let now = rep.decode_s + rep.prefill_s + rep.gather_s;
+            for id in finished_prefill {
+                ttft_by_id.entry(id).or_insert(now);
+            }
         }
 
         let stats = arena.stats();
@@ -415,6 +526,7 @@ fn simulate_serving_impl(
             }
             rep.completed += 1;
             completed_gen += done.generated.len();
+            completed_lens.push(done.generated.len());
         }
 
         rep.rounds += 1;
@@ -428,6 +540,20 @@ fn simulate_serving_impl(
     rep.total_s = rep.decode_s + rep.prefill_s + rep.gather_s;
     if decode_rounds > 0 {
         rep.mean_occupancy = occupancy_sum as f64 / decode_rounds as f64;
+    }
+    let all = Summary::from_samples(ttft_by_id.values().copied().collect());
+    if !all.is_empty() {
+        rep.ttft_p50_s = all.percentile(50.0);
+        rep.ttft_p95_s = all.percentile(95.0);
+    }
+    // Request id 0 is the first submitted (the FIFO head): everyone else
+    // is an arrival *behind* it — the cohort a head-of-line prompt can
+    // delay.
+    let behind = Summary::from_samples(
+        ttft_by_id.iter().filter(|&(&id, _)| id != 0).map(|(_, &t)| t).collect(),
+    );
+    if !behind.is_empty() {
+        rep.ttft_behind_head_p95_s = behind.percentile(95.0);
     }
     rep
 }
@@ -779,6 +905,143 @@ mod tests {
         assert_eq!(rep.generated_tokens, 3 * 64, "no tokens lost to eviction");
         assert!(rep.preemptions >= 1, "this workload must evict: {rep:?}");
         assert!(rep.reprefill_tokens > 0);
+    }
+
+    #[test]
+    fn chunked_prefill_conserves_work_and_tokens() {
+        // Chunking moves *when* prefill work happens, never how much:
+        // same workload, same arena, chunked vs sequential must deliver
+        // identical token counts and identical total prefilled positions
+        // (the quadratic attention shares telescope across chunks), and
+        // every request's TTFT must be recorded.
+        let (decode, prefill, _) = plans();
+        let workload = vec![
+            SimRequest { prompt_tokens: 96, max_new_tokens: 16, actual_new_tokens: 16 };
+            6
+        ];
+        let run = |chunk: usize| {
+            let mut cfg = sim_cfg(KvReservation::Lifetime, 96, 8);
+            cfg.sched.prefill_chunk_tokens = chunk;
+            cfg.sched.max_prefills_per_round = if chunk == 0 { 2 } else { 4 };
+            simulate_serving(&decode, &prefill, &cfg, &workload)
+        };
+        let seq = run(0);
+        let chunked = run(32);
+        assert_eq!(seq.completed, 6);
+        assert_eq!(chunked.completed, 6);
+        assert_eq!(chunked.generated_tokens, seq.generated_tokens);
+        assert_eq!(
+            chunked.prefill_tokens, seq.prefill_tokens,
+            "chunks must cover each context exactly once"
+        );
+        assert_eq!(chunked.preemptions, 0);
+        assert!(chunked.ttft_p95_s > 0.0 && seq.ttft_p95_s > 0.0, "TTFT must be sampled");
+        assert!(chunked.ttft_p50_s <= chunked.ttft_p95_s);
+    }
+
+    #[test]
+    fn packed_prefill_cuts_ttft_behind_a_long_prompt() {
+        // The HOL shape the bench's burst sweep gates: one long prompt
+        // at the FIFO head, short prompts behind it. Sequential prefill
+        // makes every short wait out the long's whole GEMM (plus each
+        // other's); chunked + packed prefill completes the shorts within
+        // the first round-robin rounds. Directional here (tier-1 must
+        // stay robust); the ≥ 1.5× bar is gated in
+        // `bench_batched_serving` on the M4 Pro profile.
+        let (decode, prefill, _) = plans();
+        let mut workload =
+            vec![SimRequest { prompt_tokens: 768, max_new_tokens: 16, actual_new_tokens: 16 }];
+        workload.extend(vec![
+            SimRequest { prompt_tokens: 32, max_new_tokens: 16, actual_new_tokens: 16 };
+            7
+        ]);
+        let run = |chunk: usize, cap: usize| {
+            let mut cfg = sim_cfg(KvReservation::Lifetime, 120, 8);
+            cfg.sched.prefill_chunk_tokens = chunk;
+            cfg.sched.max_prefills_per_round = cap;
+            simulate_serving(&decode, &prefill, &cfg, &workload)
+        };
+        let seq = run(0, 1);
+        let packed = run(64, 4);
+        assert_eq!(seq.completed, 8);
+        assert_eq!(packed.completed, 8);
+        assert!(
+            packed.ttft_behind_head_p95_s < seq.ttft_behind_head_p95_s,
+            "packing must cut the blocked cohort's TTFT p95: {:.3}s vs {:.3}s",
+            packed.ttft_behind_head_p95_s,
+            seq.ttft_behind_head_p95_s
+        );
+        assert!(
+            packed.ttft_p50_s < seq.ttft_p50_s,
+            "median TTFT must improve too: {:.3}s vs {:.3}s",
+            packed.ttft_p50_s,
+            seq.ttft_p50_s
+        );
+        assert!(
+            packed.tokens_per_s() >= 0.95 * seq.tokens_per_s(),
+            "packing must not tax throughput: {:.1} vs {:.1} tok/s",
+            packed.tokens_per_s(),
+            seq.tokens_per_s()
+        );
+    }
+
+    #[test]
+    fn p90_estimator_cuts_preemptions_below_blended_on_bimodal_workload() {
+        // ROADMAP "smarter expected-footprint estimators": the blended
+        // mean still splits a bimodal workload's modes — admission keeps
+        // over-admitting the long mode against an estimate the short
+        // mode drags down. The p90 of the pooled length samples tracks
+        // the long mode itself, so the same workload on the same arena
+        // preempts less (and never bills more recompute).
+        let (decode, prefill, _) = plans();
+        let mut workload = vec![
+            SimRequest { prompt_tokens: 16, max_new_tokens: 96, actual_new_tokens: 1 };
+            8
+        ];
+        workload.extend(vec![
+            SimRequest { prompt_tokens: 16, max_new_tokens: 96, actual_new_tokens: 96 };
+            8
+        ]);
+        let run = |estimator: GenLenEstimator| {
+            let cfg = ServingSimConfig {
+                sched: SchedulerConfig {
+                    max_active: 8,
+                    max_prefills_per_round: 2,
+                    ..Default::default()
+                },
+                arena: arena(30), // 480 tokens: ~4 fully-grown longs
+                reservation: KvReservation::Paged {
+                    policy: AdmissionPolicy::Expected { safety_margin: 1.0 },
+                },
+                sync_s: 150e-6,
+                prefill_plan_tokens: 1024,
+                estimator,
+            };
+            simulate_serving(&decode, &prefill, &cfg, &workload)
+        };
+        let blended = run(GenLenEstimator::Blended);
+        let p90 = run(GenLenEstimator::P90);
+        assert_eq!(blended.completed, 16, "blended run must drain");
+        assert_eq!(p90.completed, 16, "p90 run must drain");
+        assert!(
+            blended.preemptions > 0,
+            "the bimodal workload must stress blended admission: {blended:?}"
+        );
+        assert!(
+            p90.preemptions < blended.preemptions,
+            "p90 admission must preempt less: {} vs blended {}",
+            p90.preemptions,
+            blended.preemptions
+        );
+        assert!(p90.reprefill_tokens <= blended.reprefill_tokens);
+        // Conservatism must not collapse concurrency: the arena still
+        // fits the same steady-state population of fully-grown longs.
+        assert!(
+            p90.mean_occupancy >= 0.7 * blended.mean_occupancy,
+            "p90 occupancy {:.2} collapsed vs blended {:.2}",
+            p90.mean_occupancy,
+            blended.mean_occupancy
+        );
     }
 
     #[test]

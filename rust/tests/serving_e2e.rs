@@ -129,6 +129,81 @@ fn speculative_engine_with_self_draft_is_token_identical_to_plain_greedy() {
 }
 
 #[test]
+fn chunked_prefill_is_token_identical_to_unchunked_b1() {
+    // The ISSUE-5 B=1 acceptance bar through real PJRT: the same single
+    // prompt served with prefill chunking on (4-token chunks streamed
+    // through the provisional-scatter seam across rounds) must deliver
+    // exactly the unchunked engine's token stream — chunking moves when
+    // prefill work happens, never what gets generated. (The bitwise KV
+    // half of the bar is proven PJRT-free in
+    // `runtime::tinylm::tests::chunked_prefill_is_bitwise_identical_to_unchunked`.)
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt: Vec<i32> = (1..=16).collect();
+    let gen = 8usize;
+
+    let plain = ServingEngine::start(&dir, SchedulerConfig::default()).unwrap();
+    let reference = plain.infer(InferenceRequest::new(1, prompt.clone(), gen)).unwrap();
+    assert!(reference.error.is_none());
+    drop(plain);
+
+    let chunked = ServingEngine::start(
+        &dir,
+        SchedulerConfig {
+            prefill_chunk_tokens: 4,
+            max_prefills_per_round: 1, // one 4-token chunk per round
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let resp = chunked.infer(InferenceRequest::new(1, prompt.clone(), gen)).unwrap();
+    assert!(resp.error.is_none(), "chunked prefill must not fail: {:?}", resp.error);
+    assert_eq!(resp.tokens, reference.tokens, "chunked output must match unchunked");
+    let metrics = std::sync::Arc::clone(&chunked.metrics);
+    drop(chunked);
+    let chunks = metrics.prefill_chunks.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(chunks, 4, "16-token prompt at 4-token chunks = 4 chunk executions");
+    assert_eq!(
+        metrics.prefill_chunk_tokens.load(std::sync::atomic::Ordering::Relaxed),
+        16,
+        "chunks must cover the context exactly once"
+    );
+}
+
+#[test]
+fn chunked_prefill_burst_serves_every_request() {
+    // A mixed burst through the chunked engine: a longer prompt heading
+    // short ones. Every request completes with its full deterministic
+    // generation while rounds pack chunks from several sequences.
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = ServingEngine::start(
+        &dir,
+        SchedulerConfig {
+            max_active: 4,
+            max_prefills_per_round: 4,
+            prefill_chunk_tokens: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let long: Vec<i32> = (1..=32).collect();
+    let short: Vec<i32> = (1..=16).collect();
+    let rxs: Vec<_> = std::iter::once(long)
+        .chain(std::iter::repeat(short).take(3))
+        .enumerate()
+        .map(|(i, p)| engine.submit(InferenceRequest::new(i as u64, p, 4)).unwrap())
+        .collect();
+    let outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    for o in &outs {
+        assert!(o.error.is_none(), "chunked burst must not fail requests: {:?}", o.error);
+        assert_eq!(o.tokens.len(), 4);
+    }
+    // The three identical short prompts must still agree token-for-token
+    // (KV isolation across the packed chunks).
+    assert_eq!(outs[1].tokens, outs[2].tokens);
+    assert_eq!(outs[2].tokens, outs[3].tokens);
+}
+
+#[test]
 fn preemption_under_tiny_arena_loses_no_tokens() {
     // Shrink the KV arena below the burst's total footprint (3 blocks =
     // 48 tokens vs 3 sequences × 32): growth exhausts the arena, the
