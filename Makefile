@@ -1,6 +1,7 @@
 # ML Drift reproduction — top-level targets.
 
-.PHONY: tier1 build test fmt lint artifacts bench bench-batched bench-check bench-ttft
+.PHONY: tier1 build test fmt lint artifacts bench bench-batched bench-check bench-ttft \
+	bench-prefix
 
 # The tier-1 gate CI runs on every push.
 tier1:
@@ -24,9 +25,9 @@ artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../artifacts
 
 # Batched-serving decode-throughput + fixed-memory and device-memory KV
-# sweeps (simulated). Writes BENCH_batched.json at the repo root (the
-# trajectory file the harness tracks across PRs) and mirrors it to the
-# legacy rust/BENCH_batched.json path.
+# sweeps (simulated). Writes BENCH_batched.json at the repo root — the
+# trajectory file the harness tracks across PRs (the legacy
+# rust/BENCH_batched.json mirror is gone).
 bench: bench-batched
 
 bench-batched:
@@ -37,6 +38,13 @@ bench-batched:
 # touch BENCH_batched.json.
 bench-ttft:
 	cd rust && cargo bench --bench bench_batched_serving -- --only-ttft
+
+# Fast local iteration on the prefix-sharing work: run ONLY the
+# prefix-sharing sweep (part 6) with its hard gates (≥3× shared, ≥2×
+# int8 admitted concurrency at fixed arena bytes). Skips parts 1-5 and
+# does not touch BENCH_batched.json.
+bench-prefix:
+	cd rust && cargo bench --bench bench_batched_serving -- --only-prefix
 
 # Bench-regression gate, reusable locally: validates the freshly written
 # BENCH_batched.json against its schema and fails if any tokens_per_s

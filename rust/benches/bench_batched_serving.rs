@@ -36,13 +36,20 @@
 //! (arrivals behind the head) improves ≥ 1.5× at equal-or-better
 //! tokens/s.
 //!
-//! Writes every number to `BENCH_batched.json` at the **repo root** (the
-//! trajectory file the harness tracks across PRs) and mirrors it to the
-//! legacy `rust/BENCH_batched.json` path.
+//! Part 6 — prefix-sharing sweep. 24 requests carrying one identical
+//! 256-token prompt (the system-prompt shape) on M4 Pro at fixed arena
+//! bytes: unshared baseline vs content-addressed shared blocks vs
+//! shared **int8** KV blocks (per-row scales, dequant billed in the
+//! gathers). Gates: sharing multiplies admitted concurrency ≥ 3×, and
+//! at the same byte budget int8 blocks buy ≥ 2× over fp blocks.
+//!
+//! Writes every number to `BENCH_batched.json` at the **repo root**
+//! (the trajectory file the harness tracks across PRs).
 //!
 //! ```sh
 //! make bench        # = cargo bench --bench bench_batched_serving
 //! make bench-ttft   # part 5 only (fast local iteration; no JSON write)
+//! make bench-prefix # part 6 only (fast local iteration; no JSON write)
 //! ```
 
 use mldrift::bench::Table;
@@ -54,17 +61,18 @@ use mldrift::engine::llm::{
 use mldrift::kv::KvArenaConfig;
 use mldrift::models::llm_config;
 use mldrift::quant::QuantScheme;
-use mldrift::serving::{AdmissionPolicy, SchedulerConfig};
+use mldrift::serving::{default_prefill_chunk_tokens, AdmissionPolicy, SchedulerConfig};
 use mldrift::sim::{
-    simulate_serving, simulate_serving_spec, GenLenEstimator, KvReservation, ServingSimConfig,
-    SimRequest, SpecSim,
+    simulate_serving, simulate_serving_shared, simulate_serving_spec, GenLenEstimator,
+    KvReservation, PrefixSimRequest, ServingSimConfig, SimRequest, SpecSim,
 };
 use mldrift::util::json::Json;
 
 const BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
 /// The repo-root trajectory file (cargo runs benches from `rust/`, so
-/// `..` is the repo root) plus the legacy in-crate mirror.
-const OUT_PATHS: [&str; 2] = ["../BENCH_batched.json", "BENCH_batched.json"];
+/// `..` is the repo root). The legacy in-crate mirror is gone: one
+/// artifact, one path, nothing for the two copies to disagree about.
+const OUT_PATH: &str = "../BENCH_batched.json";
 
 /// The part-5 gate numbers, checked *after* the trajectory file is
 /// written so a gate failure still leaves the failing numbers in the
@@ -113,10 +121,13 @@ fn ttft_burst_sweep(opts: &CompileOptions) -> (Vec<Json>, TtftGates) {
     const BURST_LONG: usize = 768; // the head-of-line blocker
     const BURST_SHORT: usize = 32; // seven arrivals stuck behind it
     const BURST_GEN: usize = 64;
-    const CHUNK: usize = 32;
     const CHUNK_CAP: usize = 8; // 8 × 32 = 256 pack tokens per round
     let cfg = llm_config("gemma2_2b").unwrap();
     let dev = device("m4_pro").unwrap();
+    // The chunk granule comes from the profile (DESIGN.md's launch-set
+    // formula: 32 on desktop-class M4 Pro, 64–128 on phones), not a
+    // hand-picked constant.
+    let chunk_tokens = default_prefill_chunk_tokens(&dev);
     let p = simulate_llm(&cfg, &dev, QuantScheme::Mixed844, 1024, 256, opts).unwrap();
     let mut workload = vec![SimRequest {
         prompt_tokens: BURST_LONG,
@@ -156,7 +167,7 @@ fn ttft_burst_sweep(opts: &CompileOptions) -> (Vec<Json>, TtftGates) {
         simulate_serving(&p.decode.plan, &p.prefill.plan, &sim_cfg, &workload)
     };
     let seq = run(0, 1);
-    let chunked = run(CHUNK, CHUNK_CAP);
+    let chunked = run(chunk_tokens, CHUNK_CAP);
     assert_eq!(seq.completed, 8, "sequential burst must drain");
     assert_eq!(chunked.completed, 8, "chunked burst must drain");
     assert_eq!(
@@ -171,7 +182,7 @@ fn ttft_burst_sweep(opts: &CompileOptions) -> (Vec<Json>, TtftGates) {
     );
     let mut out = Vec::new();
     for (mode, rep, chunk, cap) in
-        [("sequential", &seq, 0usize, 1usize), ("chunked", &chunked, CHUNK, CHUNK_CAP)]
+        [("sequential", &seq, 0usize, 1usize), ("chunked", &chunked, chunk_tokens, CHUNK_CAP)]
     {
         t.row(&[
             mode.to_string(),
@@ -204,6 +215,205 @@ fn ttft_burst_sweep(opts: &CompileOptions) -> (Vec<Json>, TtftGates) {
     (out, gates)
 }
 
+/// The part-6 gate numbers, checked *after* the trajectory write for
+/// the same reason as [`TtftGates`]: a regression fails the job while
+/// the uploaded artifact still carries the numbers that tripped it.
+struct PrefixGates {
+    baseline_occ: f64,
+    shared_occ: f64,
+    fp_tight_occ: f64,
+    int8_occ: f64,
+    int8_dequant_s: f64,
+    int8_peak_bytes: usize,
+    byte_budget: usize,
+}
+
+impl PrefixGates {
+    /// The tentpole's acceptance bars, hard-gated. Concurrency is read
+    /// as mean batch occupancy — what the admission policy actually
+    /// holds resident per round at the fixed byte budget.
+    fn check(&self) {
+        let ratio = self.shared_occ / self.baseline_occ.max(1e-12);
+        assert!(
+            ratio >= 3.0,
+            "prefix sharing must multiply admitted concurrency ≥ 3× at fixed arena bytes: \
+             {:.2} vs {:.2} ({ratio:.2}×)",
+            self.shared_occ,
+            self.baseline_occ
+        );
+        let qratio = self.int8_occ / self.fp_tight_occ.max(1e-12);
+        assert!(
+            qratio >= 2.0,
+            "int8 KV blocks must buy ≥ 2× admitted concurrency at the same byte budget: \
+             {:.2} vs {:.2} ({qratio:.2}×)",
+            self.int8_occ,
+            self.fp_tight_occ
+        );
+        assert!(
+            self.int8_dequant_s > 0.0,
+            "the int8 run must be billed its f32 re-materialization — the multiplier is \
+             priced, never free"
+        );
+        assert!(
+            self.int8_peak_bytes <= self.byte_budget,
+            "the int8 watermark must stay inside the byte budget: {} vs {}",
+            self.int8_peak_bytes,
+            self.byte_budget
+        );
+        println!(
+            "OK: content-addressed prefix sharing holds {ratio:.2}× admitted concurrency \
+             (≥ 3× gate) and int8 KV blocks {qratio:.2}× (≥ 2× gate, dequant billed) at \
+             fixed arena bytes on M4 Pro"
+        );
+    }
+}
+
+/// Part 6 — prefix-sharing sweep: identical 256-token prompts on a
+/// gemma2-2b-class arena on M4 Pro. Four runs:
+///
+/// * `baseline` — unshared fp blocks, 60-block arena;
+/// * `shared` — content-addressed shared blocks, same 60 blocks (the
+///   ≥ 3× concurrency gate reads these two);
+/// * `shared_fp_tight` — shared fp blocks on a tight 40-block budget;
+/// * `shared_int8` — shared **int8** blocks holding the *same bytes*
+///   as those 40 fp blocks (~2× the block count; the ≥ 2× gate reads
+///   this pair, with the dequant traffic billed).
+///
+/// Returns the trajectory entries for `prefix_sharing_m4_pro` plus the
+/// gate numbers (asserted by the caller after the trajectory write).
+fn prefix_sharing_sweep(opts: &CompileOptions) -> (Vec<Json>, PrefixGates) {
+    const PROMPT: usize = 256;
+    const GEN: usize = 32;
+    const REQS: usize = 24;
+    const SHARED_BLOCKS: usize = 60; // the ≥ 3× comparison's fixed budget
+    const TIGHT_BLOCKS: usize = 40; // the fp side of the int8 comparison
+    let cfg = llm_config("gemma2_2b").unwrap();
+    let dev = device("m4_pro").unwrap();
+    let p = simulate_llm(&cfg, &dev, QuantScheme::Mixed844, 1024, 256, opts).unwrap();
+    let arena = |num_blocks: usize| KvArenaConfig {
+        layers: cfg.layers,
+        heads_kv: cfg.heads_kv,
+        head_dim: cfg.head_dim,
+        block_tokens: 16,
+        num_blocks,
+    };
+    let sim_cfg = |num_blocks: usize| ServingSimConfig {
+        sched: SchedulerConfig {
+            max_active: REQS,
+            max_prefills_per_round: 2,
+            ..Default::default()
+        },
+        arena: arena(num_blocks),
+        reservation: KvReservation::Paged {
+            policy: AdmissionPolicy::Expected { safety_margin: 1.0 },
+        },
+        sync_s: 150e-6,
+        prefill_plan_tokens: 1024,
+        estimator: GenLenEstimator::Blended,
+    };
+    let shared_workload = vec![
+        PrefixSimRequest {
+            prompt_tokens: PROMPT,
+            max_new_tokens: GEN,
+            actual_new_tokens: GEN,
+            prefix_group: 7,
+            shared_prefix_tokens: PROMPT,
+        };
+        REQS
+    ];
+    let plain_workload = vec![
+        SimRequest { prompt_tokens: PROMPT, max_new_tokens: GEN, actual_new_tokens: GEN };
+        REQS
+    ];
+    // The int8 arena holds the same bytes as TIGHT_BLOCKS fp blocks.
+    let byte_budget = TIGHT_BLOCKS * arena(TIGHT_BLOCKS).block_bytes();
+    let int8_blocks = byte_budget / arena(TIGHT_BLOCKS).quantized_block_bytes();
+
+    let baseline =
+        simulate_serving(&p.decode.plan, &p.prefill.plan, &sim_cfg(SHARED_BLOCKS), &plain_workload);
+    let shared = simulate_serving_shared(
+        &p.decode.plan,
+        &p.prefill.plan,
+        &sim_cfg(SHARED_BLOCKS),
+        &shared_workload,
+        false,
+    );
+    let fp_tight = simulate_serving_shared(
+        &p.decode.plan,
+        &p.prefill.plan,
+        &sim_cfg(TIGHT_BLOCKS),
+        &shared_workload,
+        false,
+    );
+    let int8 = simulate_serving_shared(
+        &p.decode.plan,
+        &p.prefill.plan,
+        &sim_cfg(int8_blocks),
+        &shared_workload,
+        true,
+    );
+    for (mode, rep) in
+        [("baseline", &baseline), ("shared", &shared), ("fp_tight", &fp_tight), ("int8", &int8)]
+    {
+        assert_eq!(rep.completed, REQS, "{mode} run must drain every request");
+        assert_eq!(
+            rep.generated_tokens, baseline.generated_tokens,
+            "{mode}: sharing and block format change capacity, never the tokens delivered"
+        );
+    }
+
+    let mut t = Table::new(
+        "gemma2_2b on M4 Pro — prefix sharing at fixed arena bytes (24 reqs, one identical \
+         256-token prompt, gen 32)",
+        &["mode", "blocks", "occ mean", "tok/s", "attached tok", "cow", "dequant ms",
+          "peak MB"],
+    );
+    let mut out = Vec::new();
+    for (mode, blocks, rep) in [
+        ("baseline", SHARED_BLOCKS, &baseline),
+        ("shared", SHARED_BLOCKS, &shared),
+        ("shared_fp_tight", TIGHT_BLOCKS, &fp_tight),
+        ("shared_int8", int8_blocks, &int8),
+    ] {
+        t.row(&[
+            mode.to_string(),
+            blocks.to_string(),
+            format!("{:.2}", rep.mean_occupancy),
+            format!("{:.1}", rep.tokens_per_s()),
+            rep.prefix_shared_tokens.to_string(),
+            rep.cow_copies.to_string(),
+            format!("{:.2}", rep.dequant_s * 1e3),
+            format!("{:.2}", rep.peak_device_bytes as f64 / 1e6),
+        ]);
+        out.push(Json::obj(vec![
+            ("mode", mode.into()),
+            ("arena_blocks", blocks.into()),
+            ("mean_occupancy", rep.mean_occupancy.into()),
+            ("tokens_per_s", rep.tokens_per_s().into()),
+            ("prefix_shared_tokens", rep.prefix_shared_tokens.into()),
+            ("cow_copies", rep.cow_copies.into()),
+            ("peak_shared_blocks", rep.peak_shared_blocks.into()),
+            ("dequant_s", rep.dequant_s.into()),
+            ("peak_device_bytes", rep.peak_device_bytes.into()),
+            ("preemptions", rep.preemptions.into()),
+            ("rounds", rep.rounds.into()),
+        ]));
+    }
+    t.print();
+    println!();
+
+    let gates = PrefixGates {
+        baseline_occ: baseline.mean_occupancy,
+        shared_occ: shared.mean_occupancy,
+        fp_tight_occ: fp_tight.mean_occupancy,
+        int8_occ: int8.mean_occupancy,
+        int8_dequant_s: int8.dequant_s,
+        int8_peak_bytes: int8.peak_device_bytes,
+        byte_budget,
+    };
+    (out, gates)
+}
+
 fn main() {
     let opts = CompileOptions::default();
     // `make bench-ttft` / `cargo bench --bench bench_batched_serving --
@@ -213,7 +423,16 @@ fn main() {
     if std::env::args().any(|a| a == "--only-ttft") {
         let (_, gates) = ttft_burst_sweep(&opts);
         gates.check();
-        println!("(--only-ttft: skipped parts 1–4 and the BENCH_batched.json write)");
+        println!("(--only-ttft: skipped parts 1–4, 6 and the BENCH_batched.json write)");
+        return;
+    }
+    // `make bench-prefix` / `-- --only-prefix`: run only the
+    // prefix-sharing sweep (with its gates) — same fast-iteration shape
+    // as `--only-ttft`.
+    if std::env::args().any(|a| a == "--only-prefix") {
+        let (_, gates) = prefix_sharing_sweep(&opts);
+        gates.check();
+        println!("(--only-prefix: skipped parts 1–5 and the BENCH_batched.json write)");
         return;
     }
     let mut json_batch = Vec::new();
@@ -595,6 +814,9 @@ fn main() {
     // ---- Part 5: TTFT burst sweep (chunked + packed prefill) -------------
     let (json_prefill_packing, ttft_gates) = ttft_burst_sweep(&opts);
 
+    // ---- Part 6: prefix-sharing sweep (shared + quantized KV blocks) -----
+    let (json_prefix_sharing, prefix_gates) = prefix_sharing_sweep(&opts);
+
     let doc = Json::obj(vec![
         ("model_sweep", Json::Arr(json_batch)),
         ("fixed_memory_adreno_750", Json::Arr(json_fixed)),
@@ -602,16 +824,16 @@ fn main() {
         ("speculative_sweep", Json::Arr(json_spec)),
         ("speculative_serving_m4_pro", Json::Arr(json_spec_serving)),
         ("prefill_packing_m4_pro", Json::Arr(json_prefill_packing)),
+        ("prefix_sharing_m4_pro", Json::Arr(json_prefix_sharing)),
     ]);
     let text = doc.pretty() + "\n";
-    for path in OUT_PATHS {
-        match std::fs::write(path, &text) {
-            Ok(()) => println!("wrote {path}"),
-            Err(e) => eprintln!("WARN: could not write {path}: {e}"),
-        }
+    match std::fs::write(OUT_PATH, &text) {
+        Ok(()) => println!("wrote {OUT_PATH}"),
+        Err(e) => eprintln!("WARN: could not write {OUT_PATH}: {e}"),
     }
 
     // Gate AFTER the trajectory write: a regression fails the job while
     // the uploaded artifact still carries the numbers that tripped it.
     ttft_gates.check();
+    prefix_gates.check();
 }

@@ -33,9 +33,31 @@
 //! bit-identical) and **scatters** the step's new row back into the
 //! tail block. The simulator prices this indirection
 //! ([`crate::sim::exec::paged_gather_overhead_s`]).
+//!
+//! **PR 6 — sharing and quantization.** Two extensions ride on the same
+//! block structure:
+//!
+//! * *Prefix sharing / copy-on-write*: the arena's refcounted content
+//!   index lets several sequences list the same committed block. The
+//!   store commits a shared block once, copies it only when a writer
+//!   diverges ([`PagedKvStore::ensure_detailed`] →
+//!   [`KvRegion::copy_block_rows`]), and decommits it only when the
+//!   *last* reference drops — so the device-bytes watermark stays
+//!   truthful under sharing.
+//! * *int8 quantized blocks* ([`PagedKvStore::new_quantized`]): each
+//!   written position stores its K and V rows as int8 with one f32
+//!   absmax scale per row (the [`crate::quant`] `quantize_i8` scheme),
+//!   dequantized inside the dense gather. A position whose rows are not
+//!   finite falls back to fp32 storage (and poisons its sequence to
+//!   fp32 for subsequent writes) — graceful degradation, never an
+//!   error. Device accounting then uses
+//!   [`KvArenaConfig::quantized_block_bytes`] (≈2× blocks per byte vs
+//!   the fp16 accounting, ≈4× vs fp32).
+
+use std::collections::HashSet;
 
 use crate::error::{DriftError, Result};
-use crate::kv::{KvArena, KvArenaConfig, KvPool, KvSeqHandle};
+use crate::kv::{EnsureOutcome, KvArena, KvArenaConfig, KvPool, KvSeqHandle, PrefixKey};
 
 /// One contiguous device region carved into arena blocks, with real
 /// storage behind every committed block and a device-bytes watermark.
@@ -43,25 +65,69 @@ use crate::kv::{KvArena, KvArenaConfig, KvPool, KvSeqHandle};
 pub struct KvRegion {
     cfg: KvArenaConfig,
     /// The contiguous backing store: `num_blocks × block_floats` f32.
+    /// In quantized mode this doubles as the fp32 fallback storage for
+    /// positions whose rows do not quantize (non-finite values).
     data: Vec<f32>,
     committed: Vec<bool>,
     bytes_in_use: usize,
     peak_bytes_in_use: usize,
+    /// int8 mode: rows are stored quantized and dequantized in-gather.
+    quantized: bool,
+    /// int8 payload, `num_blocks × block_tokens × 2 × row` (K row then
+    /// V row per position). Empty when not quantized.
+    qdata: Vec<i8>,
+    /// Per-position absmax scales, `num_blocks × block_tokens × 2`
+    /// (K scale, V scale). Empty when not quantized.
+    qscales: Vec<f32>,
+    /// Per-position: is this position's payload in `qdata` (true) or in
+    /// the fp32 fallback `data` (false)? Makes mixed reads exact.
+    q_valid: Vec<bool>,
 }
 
 impl KvRegion {
     pub fn new(cfg: KvArenaConfig) -> Self {
+        Self::build(cfg, false)
+    }
+
+    /// A region that stores K/V rows int8-quantized (per-row absmax
+    /// scales, the [`crate::quant`] `quantize_i8` scheme) and accounts
+    /// device bytes at [`KvArenaConfig::quantized_block_bytes`].
+    pub fn new_quantized(cfg: KvArenaConfig) -> Self {
+        Self::build(cfg, true)
+    }
+
+    fn build(cfg: KvArenaConfig, quantized: bool) -> Self {
+        let positions = cfg.num_blocks * cfg.block_tokens;
+        let row = cfg.layers * cfg.heads_kv * cfg.head_dim;
         KvRegion {
             data: vec![0.0; cfg.num_blocks * cfg.block_floats()],
             committed: vec![false; cfg.num_blocks],
             bytes_in_use: 0,
             peak_bytes_in_use: 0,
+            quantized,
+            qdata: if quantized { vec![0; positions * 2 * row] } else { Vec::new() },
+            qscales: if quantized { vec![0.0; positions * 2] } else { Vec::new() },
+            q_valid: if quantized { vec![false; positions] } else { Vec::new() },
             cfg,
         }
     }
 
     pub fn config(&self) -> &KvArenaConfig {
         &self.cfg
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        self.quantized
+    }
+
+    /// Device bytes one committed block accounts for in this region's
+    /// storage mode.
+    pub fn block_device_bytes(&self) -> usize {
+        if self.quantized {
+            self.cfg.quantized_block_bytes()
+        } else {
+            self.cfg.block_bytes()
+        }
     }
 
     /// Device bytes currently committed to live sequences (block-granular,
@@ -80,15 +146,28 @@ impl KvRegion {
         self.cfg.total_bytes()
     }
 
+    /// Zero every representation of a block's positions (fp32 data and,
+    /// in quantized mode, payload + scales + validity bits).
+    fn scrub_block_storage(&mut self, b: usize) {
+        let f = self.cfg.block_floats();
+        self.data[b * f..(b + 1) * f].fill(0.0);
+        if self.quantized {
+            let bt = self.cfg.block_tokens;
+            let row = self.cfg.layers * self.cfg.heads_kv * self.cfg.head_dim;
+            self.qdata[b * bt * 2 * row..(b + 1) * bt * 2 * row].fill(0);
+            self.qscales[b * bt * 2..(b + 1) * bt * 2].fill(0.0);
+            self.q_valid[b * bt..(b + 1) * bt].fill(false);
+        }
+    }
+
     /// Commit one block to a live sequence: raises the watermark. The
     /// block's storage is zeroed so a fresh claimant can never observe a
     /// previous occupant's rows.
     pub fn commit_block(&mut self, b: usize) {
         debug_assert!(!self.committed[b], "block {b} committed twice");
         self.committed[b] = true;
-        let f = self.cfg.block_floats();
-        self.data[b * f..(b + 1) * f].fill(0.0);
-        self.bytes_in_use += self.cfg.block_bytes();
+        self.scrub_block_storage(b);
+        self.bytes_in_use += self.block_device_bytes();
         self.peak_bytes_in_use = self.peak_bytes_in_use.max(self.bytes_in_use);
     }
 
@@ -97,9 +176,31 @@ impl KvRegion {
     pub fn release_block(&mut self, b: usize) {
         debug_assert!(self.committed[b], "block {b} released while uncommitted");
         self.committed[b] = false;
+        self.scrub_block_storage(b);
+        self.bytes_in_use -= self.block_device_bytes();
+    }
+
+    /// Copy the first `rows` positions of block `src` into block `dst`
+    /// (both committed) — the data half of a copy-on-write split. Rows
+    /// past `rows` in `dst` keep their committed-zero state, preserving
+    /// the "positions past the written length read zero" contract.
+    pub fn copy_block_rows(&mut self, src: usize, dst: usize, rows: usize) {
+        debug_assert!(self.committed[src], "CoW copy from uncommitted block {src}");
+        debug_assert!(self.committed[dst], "CoW copy into uncommitted block {dst}");
+        debug_assert!(rows <= self.cfg.block_tokens);
+        let fpt = self.cfg.floats_per_token();
         let f = self.cfg.block_floats();
-        self.data[b * f..(b + 1) * f].fill(0.0);
-        self.bytes_in_use -= self.cfg.block_bytes();
+        self.data.copy_within(src * f..src * f + rows * fpt, dst * f);
+        if self.quantized {
+            let bt = self.cfg.block_tokens;
+            let row2 = 2 * self.cfg.layers * self.cfg.heads_kv * self.cfg.head_dim;
+            self.qdata.copy_within(
+                src * bt * row2..(src * bt + rows) * row2,
+                dst * bt * row2,
+            );
+            self.qscales.copy_within(src * bt * 2..(src * bt + rows) * 2, dst * bt * 2);
+            self.q_valid.copy_within(src * bt..src * bt + rows, dst * bt);
+        }
     }
 
     /// Base offset (in f32 elements) of token position `pos` inside the
@@ -111,6 +212,26 @@ impl KvRegion {
         block * self.cfg.block_floats() + (pos % bt) * self.cfg.floats_per_token()
     }
 
+    /// Absolute position slot (`block × block_tokens + intra-block
+    /// offset`) of `pos` — the index into the per-position quantized
+    /// arrays.
+    fn qpos(&self, table: &[usize], pos: usize) -> usize {
+        let bt = self.cfg.block_tokens;
+        table[pos / bt] * bt + pos % bt
+    }
+
+    /// Quantize one row in-place into `dst` with the [`crate::quant`]
+    /// `quantize_i8` scheme (per-row absmax scale, `scale = 1.0` for an
+    /// all-zero row). Returns the scale.
+    fn quantize_row_into(dst: &mut [i8], vals: &[f32]) -> f32 {
+        let absmax = vals.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = if absmax == 0.0 { 1.0 } else { absmax / 127.0 };
+        for (d, &x) in dst.iter_mut().zip(vals) {
+            *d = (x / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+        scale
+    }
+
     /// Write one token position's K/V rows (`layers × heads_kv × head_dim`
     /// f32 each — the decode artifact's per-step delta) at `pos`.
     pub fn write_token(
@@ -120,6 +241,23 @@ impl KvRegion {
         k_rows: &[f32],
         v_rows: &[f32],
     ) -> Result<()> {
+        self.write_token_q(table, pos, k_rows, v_rows, false).map(|_| ())
+    }
+
+    /// [`write_token`](Self::write_token) with quantization control: in a
+    /// quantized region the rows are stored int8 with per-row absmax
+    /// scales unless `force_fp32` is set or any value is non-finite, in
+    /// which case the position falls back to exact fp32 storage (the
+    /// graceful-degradation path — never an error). Returns whether the
+    /// position was stored quantized (always `false` in an fp32 region).
+    pub fn write_token_q(
+        &mut self,
+        table: &[usize],
+        pos: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+        force_fp32: bool,
+    ) -> Result<bool> {
         let row = self.cfg.layers * self.cfg.heads_kv * self.cfg.head_dim;
         if k_rows.len() != row || v_rows.len() != row {
             return Err(DriftError::Memory(format!(
@@ -135,9 +273,33 @@ impl KvRegion {
             )));
         }
         let base = self.token_base(table, pos);
-        self.data[base..base + row].copy_from_slice(k_rows);
-        self.data[base + row..base + 2 * row].copy_from_slice(v_rows);
-        Ok(())
+        if !self.quantized {
+            self.data[base..base + row].copy_from_slice(k_rows);
+            self.data[base + row..base + 2 * row].copy_from_slice(v_rows);
+            return Ok(false);
+        }
+        let qp = self.qpos(table, pos);
+        let finite = k_rows.iter().chain(v_rows.iter()).all(|x| x.is_finite());
+        if force_fp32 || !finite {
+            // fp32 fallback: the payload lives in `data`; clear any stale
+            // quantized state so the position has exactly one truth.
+            self.data[base..base + row].copy_from_slice(k_rows);
+            self.data[base + row..base + 2 * row].copy_from_slice(v_rows);
+            self.qdata[qp * 2 * row..(qp + 1) * 2 * row].fill(0);
+            self.qscales[qp * 2..qp * 2 + 2].fill(0.0);
+            self.q_valid[qp] = false;
+            return Ok(false);
+        }
+        let qb = qp * 2 * row;
+        let ks = Self::quantize_row_into(&mut self.qdata[qb..qb + row], k_rows);
+        let vs = Self::quantize_row_into(&mut self.qdata[qb + row..qb + 2 * row], v_rows);
+        self.qscales[qp * 2] = ks;
+        self.qscales[qp * 2 + 1] = vs;
+        self.q_valid[qp] = true;
+        // Zero the fp32 mirror: a previous fallback write at this
+        // position must not shadow the quantized payload.
+        self.data[base..base + 2 * row].fill(0.0);
+        Ok(true)
     }
 
     /// Zero the K/V rows of token positions `[from, to)` resolved through
@@ -156,6 +318,12 @@ impl KvRegion {
         for p in from..to {
             let base = self.token_base(table, p);
             self.data[base..base + fpt].fill(0.0);
+            if self.quantized {
+                let qp = self.qpos(table, p);
+                self.qdata[qp * fpt..(qp + 1) * fpt].fill(0);
+                self.qscales[qp * 2..qp * 2 + 2].fill(0.0);
+                self.q_valid[qp] = false;
+            }
         }
         Ok(())
     }
@@ -194,15 +362,34 @@ impl KvRegion {
         let row = l_n * h_n * dh;
         for p in 0..len {
             let base = self.token_base(table, p);
+            // Quantized positions dequantize in-gather (`x = q × scale`);
+            // fallback positions read their exact fp32 rows from `data`.
+            let qp = self.qpos(table, p);
+            let dq = self.quantized && self.q_valid[qp];
+            let (qb, ks, vs) = if dq {
+                (qp * 2 * row, self.qscales[qp * 2], self.qscales[qp * 2 + 1])
+            } else {
+                (0, 0.0, 0.0)
+            };
             for l in 0..l_n {
                 for h in 0..h_n {
-                    let r = base + (l * h_n + h) * dh; // K row at this position
+                    let off = (l * h_n + h) * dh;
                     let kbase = ((l * h_n + h) * capacity + p) * dh;
-                    k_out[kbase..kbase + dh].copy_from_slice(&self.data[r..r + dh]);
-                    let rv = base + row + (l * h_n + h) * dh; // V row
+                    if dq {
+                        for j in 0..dh {
+                            k_out[kbase + j] = self.qdata[qb + off + j] as f32 * ks;
+                        }
+                    } else {
+                        let r = base + off; // K row at this position
+                        k_out[kbase..kbase + dh].copy_from_slice(&self.data[r..r + dh]);
+                    }
                     let vbase = (l * h_n + h) * dh * capacity + p;
                     for j in 0..dh {
-                        v_out[vbase + j * capacity] = self.data[rv + j];
+                        v_out[vbase + j * capacity] = if dq {
+                            self.qdata[qb + row + off + j] as f32 * vs
+                        } else {
+                            self.data[base + row + off + j] // V row
+                        };
                     }
                 }
             }
@@ -221,6 +408,23 @@ impl KvRegion {
         k: &[f32],
         v: &[f32],
     ) -> Result<()> {
+        self.scatter_dense_q(table, len, capacity, k, v, false).map(|_| ())
+    }
+
+    /// [`scatter_dense`](Self::scatter_dense) with quantization control:
+    /// in a quantized region every position is stored through the
+    /// [`write_token_q`](Self::write_token_q) path. Returns whether *all*
+    /// scattered positions were stored quantized (always `false` in an
+    /// fp32 region, where the plain dense loop runs).
+    pub fn scatter_dense_q(
+        &mut self,
+        table: &[usize],
+        len: usize,
+        capacity: usize,
+        k: &[f32],
+        v: &[f32],
+        force_fp32: bool,
+    ) -> Result<bool> {
         let (l_n, h_n, dh) = (self.cfg.layers, self.cfg.heads_kv, self.cfg.head_dim);
         let need = l_n * h_n * capacity * dh;
         if k.len() != need || v.len() != need {
@@ -238,6 +442,28 @@ impl KvRegion {
             )));
         }
         let row = l_n * h_n * dh;
+        if self.quantized {
+            // Row-extract each position from the dense layouts and feed
+            // it through the quantizing single-token writer.
+            let mut krow = vec![0.0f32; row];
+            let mut vrow = vec![0.0f32; row];
+            let mut all_q = true;
+            for p in 0..len {
+                for l in 0..l_n {
+                    for h in 0..h_n {
+                        let off = (l * h_n + h) * dh;
+                        let kbase = ((l * h_n + h) * capacity + p) * dh;
+                        krow[off..off + dh].copy_from_slice(&k[kbase..kbase + dh]);
+                        let vbase = (l * h_n + h) * dh * capacity + p;
+                        for j in 0..dh {
+                            vrow[off + j] = v[vbase + j * capacity];
+                        }
+                    }
+                }
+                all_q &= self.write_token_q(table, p, &krow, &vrow, force_fp32)?;
+            }
+            return Ok(all_q);
+        }
         for p in 0..len {
             let base = self.token_base(table, p);
             for l in 0..l_n {
@@ -253,7 +479,7 @@ impl KvRegion {
                 }
             }
         }
-        Ok(())
+        Ok(false)
     }
 }
 
@@ -267,6 +493,11 @@ impl KvRegion {
 pub struct PagedKvStore {
     arena: KvArena,
     region: KvRegion,
+    /// Sequences poisoned to fp32 storage in quantized mode: once a
+    /// write carried non-finite rows the sequence's later writes stay
+    /// fp32 — graceful degradation per sequence, never an error. Always
+    /// empty in fp32 mode.
+    fp32_fallback: HashSet<KvSeqHandle>,
     /// Dense gather scratch reused across decode steps (shared by all
     /// sequences — the only dense-shaped K/V buffers in the engine, and
     /// there is exactly one pair of them, not one per sequence).
@@ -276,12 +507,36 @@ pub struct PagedKvStore {
 
 impl PagedKvStore {
     pub fn new(cfg: KvArenaConfig) -> Self {
+        Self::with_region(KvArena::new(cfg), KvRegion::new(cfg))
+    }
+
+    /// A store whose region holds K/V rows int8-quantized and accounts
+    /// device bytes at [`KvArenaConfig::quantized_block_bytes`] — the
+    /// arena should be sized with
+    /// [`KvArenaConfig::quantized_capacity_multiplier`] more blocks for
+    /// the same device budget.
+    pub fn new_quantized(cfg: KvArenaConfig) -> Self {
+        Self::with_region(KvArena::new(cfg), KvRegion::new_quantized(cfg))
+    }
+
+    fn with_region(arena: KvArena, region: KvRegion) -> Self {
         PagedKvStore {
-            arena: KvArena::new(cfg),
-            region: KvRegion::new(cfg),
+            arena,
+            region,
+            fp32_fallback: HashSet::new(),
             scratch_k: Vec::new(),
             scratch_v: Vec::new(),
         }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        self.region.is_quantized()
+    }
+
+    /// Device bytes one committed block accounts for in this store's
+    /// storage mode — the unit every watermark delta below is in.
+    pub fn block_device_bytes(&self) -> usize {
+        self.region.block_device_bytes()
     }
 
     pub fn arena(&self) -> &KvArena {
@@ -347,6 +602,29 @@ impl PagedKvStore {
         Ok(h)
     }
 
+    pub fn can_claim_prefixed(&self, tokens: usize, prefix: &[PrefixKey]) -> bool {
+        self.arena.can_claim_prefixed(tokens, prefix)
+    }
+
+    /// [`claim`](Self::claim) with prefix attachment: index-matched
+    /// leading blocks join the sequence's table already committed (the
+    /// publisher committed them — sharing commits a block **once**), so
+    /// only the fresh tail raises the watermark. The claimant's length
+    /// starts at the shared token count: its prefill resumes there.
+    pub fn claim_prefixed(&mut self, tokens: usize, prefix: &[PrefixKey]) -> Result<KvSeqHandle> {
+        let (h, matched) = self.arena.claim_prefixed_detailed(tokens, prefix)?;
+        let n = self.arena.block_table(h).map_or(0, |t| t.len());
+        self.commit_tail(h, n - matched);
+        Ok(h)
+    }
+
+    /// Publish a sequence's committed prefix blocks into the arena's
+    /// content index so later admissions can attach them. Returns the
+    /// number of keys newly published.
+    pub fn publish_prefix(&mut self, h: KvSeqHandle, keys: &[PrefixKey]) -> Result<usize> {
+        self.arena.publish_prefix(h, keys)
+    }
+
     pub fn grow(&mut self, h: KvSeqHandle, additional_tokens: usize) -> Result<usize> {
         let n = self.arena.grow(h, additional_tokens)?;
         self.commit_tail(h, n);
@@ -354,21 +632,41 @@ impl PagedKvStore {
     }
 
     pub fn ensure(&mut self, h: KvSeqHandle, n: usize) -> Result<usize> {
-        let added = self.arena.ensure(h, n)?;
-        self.commit_tail(h, added);
-        Ok(added)
+        self.ensure_detailed(h, n).map(|o| o.grown + o.cow.len())
     }
 
-    /// Release a sequence: scrub + decommit its region blocks *and* free
-    /// its arena reservation. Stale handles are a no-op (and free 0
-    /// bytes). Returns the device bytes released — the watermark drop.
-    pub fn release(&mut self, h: KvSeqHandle) -> usize {
-        if let Ok(table) = self.arena.block_table(h) {
-            for &b in table {
-                self.region.release_block(b);
-            }
+    /// Reserve `n` rows past the committed length **and privatize the
+    /// write window**: any shared block the coming rows land in is
+    /// copy-on-write split here — the arena swaps in a fresh block, the
+    /// region commits it and copies the committed rows over (rows past
+    /// the length keep committed-zero, preserving the reads-zero
+    /// contract). All-or-nothing like the arena call: on `Err(Memory)`
+    /// nothing changed and the caller's preemption loop takes over.
+    pub fn ensure_detailed(&mut self, h: KvSeqHandle, n: usize) -> Result<EnsureOutcome> {
+        let len = self.arena.len(h);
+        let out = self.arena.ensure_detailed(h, n)?;
+        self.commit_tail(h, out.grown);
+        let bt = self.config().block_tokens;
+        for &(old, new, idx) in &out.cow {
+            self.region.commit_block(new);
+            let rows = len.saturating_sub(idx * bt).min(bt);
+            self.region.copy_block_rows(old, new, rows);
         }
-        self.arena.release(h)
+        Ok(out)
+    }
+
+    /// Release a sequence: free its arena reservation, and scrub +
+    /// decommit only the region blocks whose **last** reference dropped
+    /// — shared blocks survive for their other holders, so the returned
+    /// watermark drop is per refcount, not per table entry. Stale
+    /// handles are a no-op (and free 0 bytes).
+    pub fn release(&mut self, h: KvSeqHandle) -> usize {
+        self.fp32_fallback.remove(&h);
+        let freed = self.arena.release_blocks(h);
+        for &b in &freed {
+            self.region.release_block(b);
+        }
+        freed.len() * self.region.block_device_bytes()
     }
 
     /// Commit the accepted prefix of a **provisional speculative
@@ -412,26 +710,60 @@ impl PagedKvStore {
     pub fn scrub_uncommitted(&mut self, h: KvSeqHandle) -> Result<()> {
         let len = self.arena.len(h);
         let bt = self.arena.config().block_tokens;
-        let table = self.arena.block_table(h)?;
-        let hi = table.len() * bt;
-        self.region.scrub_rows(table, len, hi)
+        let table = self.arena.block_table(h)?.to_vec();
+        for (i, &b) in table.iter().enumerate() {
+            if self.arena.block_refcount(b) > 1 {
+                // Shared block: this sequence never wrote past `len` into
+                // it (writes privatize first), and scrubbing would
+                // destroy the other holders' rows.
+                continue;
+            }
+            let lo = len.max(i * bt);
+            let hi = (i + 1) * bt;
+            if lo < hi {
+                self.region.scrub_rows(&table, lo, hi)?;
+            }
+        }
+        Ok(())
     }
 
     /// Give back the reservation slack past `tokens` (clamped to the
-    /// committed length): releases *and decommits* whole tail blocks —
-    /// the arena's [`KvArena::truncate_reservation`] mirrored into real
-    /// region storage. Returns the device bytes freed.
+    /// committed length): releases whole tail blocks and decommits the
+    /// ones whose last reference dropped — the arena's
+    /// [`KvArena::truncate_reservation`] mirrored into real region
+    /// storage. Returns the device bytes freed.
     pub fn truncate_reservation(&mut self, h: KvSeqHandle, tokens: usize) -> Result<usize> {
-        let bb = self.config().block_bytes();
-        let popped = self.arena.truncate_reservation(h, tokens)?;
-        for &b in &popped {
+        let freed = self.arena.truncate_reservation(h, tokens)?;
+        for &b in &freed {
             self.region.release_block(b);
         }
-        Ok(popped.len() * bb)
+        Ok(freed.len() * self.region.block_device_bytes())
+    }
+
+    /// Copy-on-write safety net under every region write: if the block
+    /// `pos` lands in is shared (or published), split or unindex it
+    /// first so no other sequence can ever observe this sequence's
+    /// writes. [`ensure_detailed`](Self::ensure_detailed) privatizes the
+    /// whole window up front, so this is a no-op on the hot path.
+    fn privatize_for_write(&mut self, h: KvSeqHandle, pos: usize) -> Result<()> {
+        let bt = self.config().block_tokens;
+        let idx = pos / bt;
+        if idx >= self.arena.block_table(h)?.len() {
+            return Ok(()); // out of table: the region write reports it
+        }
+        if let Some((old, new)) = self.arena.make_private(h, idx)? {
+            let rows = self.arena.len(h).saturating_sub(idx * bt).min(bt);
+            self.region.commit_block(new);
+            self.region.copy_block_rows(old, new, rows);
+        }
+        Ok(())
     }
 
     /// Write one decoded token's K/V rows at `pos` through the block
-    /// table. Stale handles are rejected by the table lookup.
+    /// table. Stale handles are rejected by the table lookup. Shared
+    /// blocks are copy-on-write split before the write lands; in
+    /// quantized mode a non-finite row poisons the sequence to fp32
+    /// storage instead of erroring.
     pub fn write_token(
         &mut self,
         h: KvSeqHandle,
@@ -439,8 +771,14 @@ impl PagedKvStore {
         k_rows: &[f32],
         v_rows: &[f32],
     ) -> Result<()> {
+        self.privatize_for_write(h, pos)?;
+        let force = self.fp32_fallback.contains(&h);
         let table = self.arena.block_table(h)?;
-        self.region.write_token(table, pos, k_rows, v_rows)
+        let stored_q = self.region.write_token_q(table, pos, k_rows, v_rows, force)?;
+        if self.region.is_quantized() && !stored_q {
+            self.fp32_fallback.insert(h);
+        }
+        Ok(())
     }
 
     /// Scatter a prefill's dense K/V output (first `len` positions) into
@@ -453,8 +791,17 @@ impl PagedKvStore {
         k: &[f32],
         v: &[f32],
     ) -> Result<()> {
+        let bt = self.config().block_tokens;
+        for idx in 0..crate::util::div_ceil(len, bt) {
+            self.privatize_for_write(h, idx * bt)?;
+        }
+        let force = self.fp32_fallback.contains(&h);
         let table = self.arena.block_table(h)?;
-        self.region.scatter_dense(table, len, capacity, k, v)
+        let all_q = self.region.scatter_dense_q(table, len, capacity, k, v, force)?;
+        if self.region.is_quantized() && !all_q {
+            self.fp32_fallback.insert(h);
+        }
+        Ok(())
     }
 
     /// Gather a sequence's written positions into the shared dense
@@ -504,7 +851,7 @@ impl PagedKvStore {
     /// committed bytes agree with the arena's block accounting.
     pub fn verify(&self) -> Result<()> {
         self.arena.verify()?;
-        let expect = self.arena.blocks_in_use() * self.config().block_bytes();
+        let expect = self.arena.blocks_in_use() * self.region.block_device_bytes();
         if expect != self.region.device_bytes_in_use() {
             return Err(DriftError::Memory(format!(
                 "region watermark {} disagrees with arena accounting {expect}",
@@ -530,6 +877,14 @@ impl KvPool for PagedKvStore {
 
     fn release(&mut self, h: KvSeqHandle) -> usize {
         PagedKvStore::release(self, h)
+    }
+
+    fn can_claim_prefixed(&self, tokens: usize, prefix: &[PrefixKey]) -> bool {
+        PagedKvStore::can_claim_prefixed(self, tokens, prefix)
+    }
+
+    fn claim_prefixed(&mut self, tokens: usize, prefix: &[PrefixKey]) -> Result<KvSeqHandle> {
+        PagedKvStore::claim_prefixed(self, tokens, prefix)
     }
 }
 
@@ -830,5 +1185,141 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prefix_share_commits_once_and_cow_isolates_divergence() {
+        let mut s = PagedKvStore::new(cfg(8));
+        let bb = s.config().block_bytes();
+        let row = s.config().layers * s.config().heads_kv * s.config().head_dim;
+        let dh = s.config().head_dim;
+        let cap = 16;
+        let prompt: Vec<i32> = (500..512).collect(); // 12 tokens = 3 blocks, cover 11
+        let keys = crate::kv::shareable_prefix_keys(&prompt, s.config().block_tokens);
+        assert_eq!(keys.len(), 3);
+
+        let h1 = s.claim(12).unwrap();
+        for p in 0..12 {
+            s.write_token(h1, p, &row_vals(p, 1, row), &row_vals(p, 2, row)).unwrap();
+        }
+        s.append(h1, 12).unwrap();
+        assert_eq!(s.publish_prefix(h1, &keys).unwrap(), 3);
+        assert_eq!(s.device_bytes_in_use(), 3 * bb);
+
+        // Attach: all three blocks shared, zero fresh commits, prefill
+        // resumes at the 11 covered positions.
+        let h2 = s.claim_prefixed(12, &keys).unwrap();
+        assert_eq!(s.len(h2), 11);
+        assert_eq!(s.device_bytes_in_use(), 3 * bb, "sharing commits a block once");
+        s.verify().unwrap();
+        {
+            let (k, _v) = s.gather_dense_scratch(h2, cap).unwrap();
+            for p in 0..11 {
+                assert_eq!(k[p * dh], row_vals(p, 1, row)[0], "shared rows readable");
+            }
+        }
+
+        // Divergence: h2 writes its own row 11 → CoW splits block 2.
+        s.write_token(h2, 11, &row_vals(11, 7, row), &row_vals(11, 8, row)).unwrap();
+        s.append(h2, 1).unwrap();
+        assert_eq!(s.device_bytes_in_use(), 4 * bb, "CoW committed one private copy");
+        s.verify().unwrap();
+        {
+            let (k, _v) = s.gather_dense_scratch(h1, cap).unwrap();
+            assert_eq!(k[11 * dh], row_vals(11, 1, row)[0], "publisher row untouched");
+        }
+        let (k, _v) = s.gather_dense_scratch(h2, cap).unwrap();
+        assert_eq!(k[11 * dh], row_vals(11, 7, row)[0], "sharer sees its own row");
+        for p in 8..11 {
+            assert_eq!(k[p * dh], row_vals(p, 1, row)[0], "CoW copied committed rows");
+        }
+
+        // Release is per refcount: the publisher's exit frees only its
+        // now-private boundary block; the shared pair survives for h2.
+        assert_eq!(s.release(h1), bb);
+        assert_eq!(s.device_bytes_in_use(), 3 * bb);
+        {
+            let (k, _v) = s.gather_dense_scratch(h2, cap).unwrap();
+            assert_eq!(k[5 * dh], row_vals(5, 1, row)[0], "survivor keeps shared rows");
+        }
+        assert_eq!(s.release(h2), 3 * bb, "last reference frees the shared blocks");
+        assert_eq!(s.device_bytes_in_use(), 0);
+        s.verify().unwrap();
+    }
+
+    #[test]
+    fn quantized_store_roundtrip_within_bound_and_accounts_quantized_bytes() {
+        let c = cfg(4);
+        let mut s = PagedKvStore::new_quantized(c);
+        assert!(s.is_quantized());
+        let qbb = c.quantized_block_bytes();
+        assert!(qbb < c.block_bytes(), "quantized blocks must be smaller");
+        assert_eq!(s.block_device_bytes(), qbb);
+        let (l_n, h_n, dh) = (c.layers, c.heads_kv, c.head_dim);
+        let row = l_n * h_n * dh;
+        let cap = 8;
+        let h = s.claim(4).unwrap();
+        assert_eq!(s.device_bytes_in_use(), qbb, "watermark in quantized bytes");
+        let mut k_ref = Vec::new();
+        for p in 0..4 {
+            let kr = row_vals(p, 1, row);
+            s.write_token(h, p, &kr, &row_vals(p, 2, row)).unwrap();
+            k_ref.push(kr);
+        }
+        s.append(h, 4).unwrap();
+        s.verify().unwrap();
+        let (k, _v) = s.gather_dense_scratch(h, cap).unwrap();
+        let mut any_inexact = false;
+        for (p, kr) in k_ref.iter().enumerate() {
+            // Reassemble the position's full K row from the (L, h_kv, C,
+            // d_h) gather layout so the error is relative to the same
+            // absmax the per-row scale came from.
+            let mut got = vec![0.0f32; row];
+            for l in 0..l_n {
+                for hh in 0..h_n {
+                    for j in 0..dh {
+                        got[(l * h_n + hh) * dh + j] = k[((l * h_n + hh) * cap + p) * dh + j];
+                    }
+                }
+            }
+            let err = crate::quant::pack::roundtrip_rel_error(kr, &got);
+            assert!(err <= 1.0 / 200.0, "row {p} roundtrip error {err} beyond quant bound");
+            any_inexact |= got != *kr;
+        }
+        assert!(any_inexact, "rows must actually be stored int8, not fp32");
+        assert_eq!(s.release(h), qbb);
+        assert_eq!(s.device_bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn quantized_store_falls_back_to_fp32_per_sequence_on_non_finite() {
+        let c = cfg(4);
+        let mut s = PagedKvStore::new_quantized(c);
+        let row = c.layers * c.heads_kv * c.head_dim;
+        let dh = c.head_dim;
+        let cap = 8;
+        let h = s.claim(4).unwrap();
+        let mut k0 = row_vals(0, 1, row);
+        k0[3] = f32::INFINITY;
+        s.write_token(h, 0, &k0, &row_vals(0, 2, row)).unwrap(); // degrade, don't error
+        let k1 = row_vals(1, 1, row);
+        s.write_token(h, 1, &k1, &row_vals(1, 2, row)).unwrap(); // poisoned → fp32 too
+        s.append(h, 2).unwrap();
+        let (k, _v) = s.gather_dense_scratch(h, cap).unwrap();
+        assert_eq!(k[3], f32::INFINITY, "non-finite row stored exactly via fallback");
+        for j in 0..dh {
+            assert_eq!(k[dh + j], k1[j], "poisoned sequence stays bit-exact fp32");
+        }
+        // An independent sequence in the same store still quantizes.
+        let h2 = s.claim(4).unwrap();
+        let kq = row_vals(2, 5, row);
+        s.write_token(h2, 0, &kq, &row_vals(2, 6, row)).unwrap();
+        s.append(h2, 1).unwrap();
+        let (k, _v) = s.gather_dense_scratch(h2, cap).unwrap();
+        assert!((0..dh).any(|j| k[j] != kq[j]), "unpoisoned sequence stores int8");
+        s.release(h);
+        s.release(h2);
+        assert_eq!(s.device_bytes_in_use(), 0);
+        s.verify().unwrap();
     }
 }

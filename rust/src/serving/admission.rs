@@ -134,15 +134,33 @@ impl AdmissionPolicy {
         context_tokens: usize,
         mean_gen: Option<f64>,
     ) -> Option<KvSeqHandle> {
+        self.admit_prefixed(pool, req, context_tokens, mean_gen, &[])
+    }
+
+    /// [`admit`](Self::admit) with prefix attachment: the gate asks the
+    /// pool whether the expected footprint fits **counting only unique
+    /// blocks** — index-matched prefix blocks are free capacity
+    /// ([`KvPool::can_claim_prefixed`]), which is exactly how sharing
+    /// multiplies admitted concurrency at fixed arena bytes. Pools
+    /// without content addressing fall back to the plain gate, so the
+    /// policy stays one code path across engine and simulator.
+    pub fn admit_prefixed<K: KvPool>(
+        &self,
+        pool: &mut K,
+        req: &InferenceRequest,
+        context_tokens: usize,
+        mean_gen: Option<f64>,
+        prefix: &[crate::kv::PrefixKey],
+    ) -> Option<KvSeqHandle> {
         let expected = self.footprint(req, context_tokens, mean_gen);
-        if !pool.can_claim(expected) {
+        if !pool.can_claim_prefixed(expected, prefix) {
             return None;
         }
         let claim_tokens = match self {
             AdmissionPolicy::WorstCase => expected,
             AdmissionPolicy::Expected { .. } => context_tokens,
         };
-        pool.claim(claim_tokens).ok()
+        pool.claim_prefixed(claim_tokens, prefix).ok()
     }
 }
 
@@ -237,6 +255,40 @@ mod tests {
         let mut tiny = KvArena::new(KvArenaConfig { num_blocks: 2, ..arena_cfg });
         assert!(p.admit(&mut tiny, &r, 16, None).is_none(), "cold start gates worst-case");
         assert!(p.admit(&mut tiny, &r, 16, Some(8.0)).is_some(), "expectation fits");
+    }
+
+    #[test]
+    fn admit_prefixed_counts_only_unique_blocks() {
+        use crate::kv::{shareable_prefix_keys, KvArena, KvArenaConfig};
+        let cfg = KvArenaConfig {
+            layers: 1,
+            heads_kv: 1,
+            head_dim: 64,
+            block_tokens: 16,
+            num_blocks: 5,
+        };
+        let mut arena = KvArena::new(cfg);
+        let p = AdmissionPolicy::Expected { safety_margin: 1.0 };
+        let prompt: Vec<i32> = (0..64).collect();
+        let keys = shareable_prefix_keys(&prompt, 16);
+        let r = InferenceRequest::new(1, prompt.clone(), 4);
+        // First holder admits cold (nothing published yet) and publishes
+        // its committed prefix: 4 blocks in use, 1 free.
+        let h = p.admit_prefixed(&mut arena, &r, 64, Some(1.0), &keys).unwrap();
+        arena.append(h, 64).unwrap();
+        assert_eq!(arena.publish_prefix(h, &keys).unwrap(), 4);
+        assert_eq!(arena.blocks_in_use(), 4);
+
+        // A second identical request needs 5 unique blocks — the plain
+        // gate defers (1 free), but the prefix-aware gate sees 4 of the
+        // 5 already resident and admits with zero fresh claims.
+        let r2 = InferenceRequest::new(2, prompt, 4);
+        assert!(p.admit(&mut arena, &r2, 64, Some(1.0)).is_none(), "plain gate defers");
+        let h2 = p.admit_prefixed(&mut arena, &r2, 64, Some(1.0), &keys).unwrap();
+        assert_eq!(arena.blocks_in_use(), 4, "attached blocks cost nothing");
+        assert_eq!(arena.shared_blocks(), 4);
+        assert_eq!(arena.len(h2), 63, "prefill resumes past the covered prefix");
+        arena.verify().unwrap();
     }
 
     #[test]

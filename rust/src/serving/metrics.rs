@@ -46,6 +46,17 @@ pub struct Metrics {
     /// and re-prefills alike — compare with `reprefill_tokens` for the
     /// recompute share).
     pub prefill_chunk_tokens: AtomicU64,
+    /// Prefix sharing: prompt positions admission *attached* from
+    /// published KV blocks instead of prefilling — each one is prefill
+    /// compute the device never ran (compare with `prefill_chunk_tokens`
+    /// for the dedup share).
+    pub kv_prefix_shared_tokens: AtomicU64,
+    /// Gauge: extra references currently held onto shared KV blocks
+    /// (Σ `refcount − 1` — the blocks the arena does *not* hold twice).
+    pub kv_blocks_shared: AtomicU64,
+    /// Gauge: cumulative copy-on-write block copies the store has
+    /// performed (a sequence wrote into a block it shared).
+    pub kv_cow_copies: AtomicU64,
     /// Speculative decode: draft tokens proposed across all rounds.
     pub spec_proposed_tokens: AtomicU64,
     /// Speculative decode: draft tokens accepted by the verify pass. The
@@ -81,6 +92,9 @@ impl Default for Metrics {
             kv_bytes_freed_by_preemption: AtomicU64::new(0),
             prefill_chunks: AtomicU64::new(0),
             prefill_chunk_tokens: AtomicU64::new(0),
+            kv_prefix_shared_tokens: AtomicU64::new(0),
+            kv_blocks_shared: AtomicU64::new(0),
+            kv_cow_copies: AtomicU64::new(0),
             spec_proposed_tokens: AtomicU64::new(0),
             spec_accepted_tokens: AtomicU64::new(0),
             // 100 µs .. ~100 s exponential buckets.
@@ -148,6 +162,21 @@ impl Metrics {
             self.inflight_seqs.load(Ordering::Relaxed),
             self.inflight_gen_tokens.load(Ordering::Relaxed),
         )
+    }
+
+    /// Record one admission that attached published prefix blocks:
+    /// `tokens` committed positions joined the sequence without any
+    /// prefill compute.
+    pub fn record_prefix_attach(&self, tokens: usize) {
+        self.kv_prefix_shared_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    /// Update the prefix-sharing gauges (engine: once per round, from
+    /// the store's arena — `blocks_shared` is Σ `refcount − 1`,
+    /// `cow_copies` the arena's cumulative copy-on-write count).
+    pub fn set_kv_sharing(&self, blocks_shared: u64, cow_copies: u64) {
+        self.kv_blocks_shared.store(blocks_shared, Ordering::Relaxed);
+        self.kv_cow_copies.store(cow_copies, Ordering::Relaxed);
     }
 
     /// Record one executed prefill chunk and the context positions it
@@ -229,7 +258,8 @@ impl Metrics {
              prefill chunks: {} ({} tokens) | \
              speculative: {} proposed, {} accepted ({}) | \
              preemptions: {} | re-prefill tokens: {} | kv device bytes: {} in use, {} peak, \
-             {} freed by preemption",
+             {} freed by preemption\n\
+             prefix sharing: {} tokens attached | {} blocks shared | {} cow copies",
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.prefill_tokens.load(Ordering::Relaxed),
@@ -257,6 +287,9 @@ impl Metrics {
             self.kv_device_bytes_in_use.load(Ordering::Relaxed),
             self.kv_device_bytes_peak.load(Ordering::Relaxed),
             self.kv_bytes_freed_by_preemption.load(Ordering::Relaxed),
+            self.kv_prefix_shared_tokens.load(Ordering::Relaxed),
+            self.kv_blocks_shared.load(Ordering::Relaxed),
+            self.kv_cow_copies.load(Ordering::Relaxed),
         )
     }
 }
@@ -326,6 +359,21 @@ mod tests {
         assert_eq!(m.kv_device_bytes_in_use.load(Ordering::Relaxed), 1 << 20);
         assert_eq!(m.kv_device_bytes_peak.load(Ordering::Relaxed), 2 << 20);
         assert!(m.report().contains("kv device bytes"));
+    }
+
+    #[test]
+    fn prefix_sharing_counters_and_gauges_tracked() {
+        let m = Metrics::default();
+        assert!(m.report().contains("prefix sharing: 0 tokens attached"));
+        m.record_prefix_attach(240);
+        m.record_prefix_attach(255);
+        m.set_kv_sharing(30, 4);
+        assert_eq!(m.kv_prefix_shared_tokens.load(Ordering::Relaxed), 495);
+        assert_eq!(m.kv_blocks_shared.load(Ordering::Relaxed), 30);
+        assert_eq!(m.kv_cow_copies.load(Ordering::Relaxed), 4);
+        assert!(m.report().contains("prefix sharing: 495 tokens attached"));
+        assert!(m.report().contains("30 blocks shared"));
+        assert!(m.report().contains("4 cow copies"));
     }
 
     #[test]

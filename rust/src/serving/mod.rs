@@ -30,6 +30,8 @@ pub mod metrics;
 
 pub use admission::{blended_mean_gen, AdmissionPolicy};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
-pub use scheduler::{PrefillChunk, Round, Scheduler, SchedulerConfig, SeqState};
+pub use scheduler::{
+    default_prefill_chunk_tokens, PrefillChunk, Round, Scheduler, SchedulerConfig, SeqState,
+};
 pub use server::{ServerStats, ServingEngine, SpecConfig};
 pub use metrics::Metrics;

@@ -82,6 +82,11 @@ pub struct SchedulerConfig {
     /// the fixed arena are rejected at submission (so deferral cannot
     /// wedge).
     pub kv_arena_blocks: Option<usize>,
+    /// Content-address committed prefill blocks and attach identical
+    /// prefixes across sequences (refcounted, copy-on-write on
+    /// divergence). On by default: with it off the engine claims every
+    /// block privately — bitwise the pre-sharing behaviour.
+    pub share_prefix_kv: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -92,7 +97,33 @@ impl Default for SchedulerConfig {
             prefill_chunk_tokens: 0,
             max_evictions_per_seq: 3,
             kv_arena_blocks: None,
+            share_prefix_kv: true,
         }
+    }
+}
+
+/// Profile-aware default for [`SchedulerConfig::prefill_chunk_tokens`]
+/// (DESIGN.md "Chunk sizing vs. launch overhead"): the granule must keep
+/// per-chunk launch overhead amortized — `t(chunk) ≫ launch_set` — while
+/// staying small enough that a long prompt cannot head-of-line-block a
+/// round. Desktop-class parts dispatch cheaply (sub-µs effective launch
+/// cost at the bucket sizes we compile), so 32 tokens already puts
+/// overhead below 1% of chunk time; phone-class parts carry 10–100× the
+/// launch cost and need 64–128-token granules to bury it. Returns the
+/// granule in tokens; callers keep `0 = chunking off` semantics by only
+/// consulting this when they opt into chunking.
+pub fn default_prefill_chunk_tokens(profile: &crate::device::DeviceProfile) -> usize {
+    match profile.class {
+        crate::device::DeviceClass::Mobile => {
+            // The slowest dispatchers need the largest granule to keep
+            // launch overhead amortized.
+            if profile.launch_overhead_us >= 100.0 {
+                128
+            } else {
+                64
+            }
+        }
+        crate::device::DeviceClass::Laptop | crate::device::DeviceClass::Desktop => 32,
     }
 }
 
@@ -1319,5 +1350,23 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn profile_aware_prefill_chunk_granule() {
+        use crate::device::device;
+        // Phone-class dispatch costs 10–20µs: a 64-token granule keeps
+        // launch overhead well under the chunk's compute time.
+        assert_eq!(default_prefill_chunk_tokens(&device("adreno_750").unwrap()), 64);
+        assert_eq!(default_prefill_chunk_tokens(&device("mali_g715").unwrap()), 64);
+        // Laptop/desktop dispatch is cheap: 32 tokens already puts
+        // overhead below 1% (DESIGN.md chunk-sizing numbers).
+        assert_eq!(default_prefill_chunk_tokens(&device("m4_pro").unwrap()), 32);
+        assert_eq!(default_prefill_chunk_tokens(&device("rtx_4090").unwrap()), 32);
+        // Pathologically slow dispatchers (e.g. WebGPU-wrapped phones
+        // past 100µs) double the granule to keep the ratio.
+        let mut slow = device("mali_g715").unwrap();
+        slow.launch_overhead_us = 120.0;
+        assert_eq!(default_prefill_chunk_tokens(&slow), 128);
     }
 }

@@ -53,7 +53,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::error::{DriftError, Result};
-use crate::kv::{KvArenaConfig, KvSeqHandle, PagedKvStore};
+use crate::kv::{shareable_prefix_keys, KvArenaConfig, KvSeqHandle, PagedKvStore, PrefixKey};
 use crate::runtime::tinylm::{
     PackedPrefillChunk, PagedRoundStep, SpecStepArgs, TinyLmRuntime,
 };
@@ -365,6 +365,12 @@ fn worker_loop(
     let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
     let mut handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
     let mut replies: HashMap<RequestId, PendingReply> = HashMap::new();
+    // Content-addressed prefix keys per in-flight request, hashed once
+    // at enqueue (block granularity; target store only — the draft
+    // store never shares). Empty when `share_prefix_kv` is off:
+    // admission then sees no keys and claims every block privately —
+    // bitwise the pre-sharing behaviour.
+    let mut prefix_keys: HashMap<RequestId, Vec<PrefixKey>> = HashMap::new();
     let mut shutdown = false;
 
     while !shutdown || !sched.is_idle() {
@@ -413,6 +419,10 @@ fn worker_loop(
                         let _ = reply.send(rejection(&req, msg));
                         continue;
                     }
+                    if sched_cfg.share_prefix_kv {
+                        prefix_keys
+                            .insert(req.id, shareable_prefix_keys(&req.prompt, KV_BLOCK_TOKENS));
+                    }
                     replies.insert(req.id, PendingReply::new(reply));
                     sched.submit(req);
                 }
@@ -435,8 +445,14 @@ fn worker_loop(
         let (inflight_seqs, inflight_tokens) = sched.inflight_gen();
         metrics.set_inflight_gen(inflight_seqs, inflight_tokens);
         let mean_gen = metrics.mean_gen_tokens();
+        let mut newly_admitted: Vec<RequestId> = Vec::new();
         sched.admit_where(|req, ctx_tokens| {
-            match policy.admit(&mut store, req, ctx_tokens, mean_gen) {
+            // Prefix sharing: gate and claim count only the blocks NOT
+            // already published by an identical committed prefix — the
+            // attach is what multiplies admitted concurrency at fixed
+            // arena bytes. With no keys this is exactly the plain gate.
+            let keys: &[PrefixKey] = prefix_keys.get(&req.id).map_or(&[], |k| k.as_slice());
+            match policy.admit_prefixed(&mut store, req, ctx_tokens, mean_gen, keys) {
                 Some(h) => {
                     // Speculative decode: attach the draft when the
                     // request fits its capacity, claiming the same
@@ -458,11 +474,23 @@ fn worker_loop(
                         }
                     }
                     handles.insert(req.id, h);
+                    newly_admitted.push(req.id);
                     true
                 }
                 None => false,
             }
         });
+        // Attached prefix blocks arrive *committed*: prefill resumes
+        // after them, so the skipped positions' compute never runs at
+        // all. (The draft store, when speculation is on, still prefills
+        // its whole context at the final chunk — it never shares.)
+        for id in newly_admitted {
+            let skip = store.len(handles[&id]);
+            if skip > 0 {
+                metrics.record_prefix_attach(skip);
+                sched.seq_mut(id).expect("admitted above").prefill_progress = skip;
+            }
+        }
         // (Deferral can never wedge: enqueue rejects anything over the
         // per-sequence capacity — `cache_capacity` capped to the arena —
         // so every queued request's worst-case footprint fits an empty
@@ -503,6 +531,13 @@ fn worker_loop(
                 Some((id, k_eff + 1))
             })
             .collect();
+        // Prefill chunks reserve through the same loop: a no-op when
+        // the admission claim already covers their rows, but a chunk
+        // whose write window opens inside a *shared* block needs a
+        // copy-on-write block up front — and exhaustion there must
+        // preempt a victim, never fail the pack.
+        let mut needs_rows = needs_rows;
+        needs_rows.extend(round.prefills.iter().filter(|c| c.len > 0).map(|c| (c.id, c.len)));
         let held_out: HashSet<RequestId> = sched.ensure_round_capacity(
             &mut store,
             &mut handles,
@@ -699,13 +734,15 @@ fn worker_loop(
             }
             let seq = sched.seq(c.id).expect("scheduled seq exists");
             debug_assert_eq!(c.start, seq.prefill_progress, "chunk off its progress: {c:?}");
-            // The queue clock stops when the FIRST chunk starts running.
-            if c.start == 0 {
-                if let Some(pending) = replies.get_mut(&c.id) {
-                    pending
-                        .queue_s
-                        .get_or_insert_with(|| seq.request.arrival.elapsed().as_secs_f64());
-                }
+            // The queue clock stops when the sequence's FIRST chunk
+            // starts running (idempotent — later chunks find it
+            // stamped). Under prefix sharing the first chunk can start
+            // past 0 (attached positions are skipped), so this must not
+            // key on `start == 0`.
+            if let Some(pending) = replies.get_mut(&c.id) {
+                pending
+                    .queue_s
+                    .get_or_insert_with(|| seq.request.arrival.elapsed().as_secs_f64());
             }
             let tokens: Vec<i32> = seq
                 .request
@@ -731,6 +768,15 @@ fn worker_loop(
                     metrics.record_prefill_chunk(chunk.tokens.len());
                     let seq = sched.seq_mut(id).expect("scheduled seq exists");
                     seq.prefill_progress += chunk.tokens.len();
+                    // Blocks this chunk fully committed become shareable:
+                    // later identical prompts attach instead of recomputing.
+                    // Publishing is best-effort — a failure only forfeits
+                    // future sharing, never this sequence's own KV.
+                    if let Some(keys) = prefix_keys.get(&id) {
+                        if let Err(e) = store.publish_prefix(handles[&id], keys) {
+                            crate::log_error!("publish prefix for request {id}: {e}");
+                        }
+                    }
                     if !chunk.last {
                         // Mid-prefill chunk: KV deposited, no token yet —
                         // fold the time into the parked reply and keep
@@ -744,11 +790,12 @@ fn worker_loop(
                     let next = argmax(&logits) as i32;
                     let pending = replies.remove(&id).expect("pending reply");
                     let arrival = seq.request.arrival;
-                    // `pending.queue_s` was stamped when the FIRST chunk
-                    // ran (every first chunk has `start == 0` and a
-                    // parked reply), so `resume`'s elapsed-now fallback
-                    // below is provably never taken — it cannot become
-                    // the recorded queue wait.
+                    // `pending.queue_s` was stamped when this sequence's
+                    // first chunk ran (the stamp above is unconditional
+                    // and idempotent, and every parked reply reaches at
+                    // least one chunk), so `resume`'s elapsed-now
+                    // fallback below is provably never taken — it cannot
+                    // become the recorded queue wait.
                     runtimes.insert(
                         id,
                         pending.resume(next, out.step_s, arrival, arrival.elapsed().as_secs_f64()),
@@ -815,6 +862,7 @@ fn worker_loop(
             if let Some(h) = handles.remove(&id) {
                 store.release(h);
             }
+            prefix_keys.remove(&id);
             if let Some(ds) = draft_store.as_mut() {
                 if let Some(dh) = draft_handles.remove(&id) {
                     ds.release(dh);
@@ -882,6 +930,7 @@ fn worker_loop(
             store.device_bytes_in_use() as u64,
             store.peak_device_bytes_in_use() as u64,
         );
+        metrics.set_kv_sharing(store.arena().shared_blocks() as u64, store.arena().cow_copies());
     }
 }
 

@@ -204,6 +204,20 @@ pub fn node_bytes(g: &Graph, n: &Node, choice: &KernelChoice) -> f64 {
     bytes
 }
 
+/// Bytes one token position moves through the **KV-dequant loop** when
+/// blocks are stored int8 ([`crate::kv::PagedKvStore::new_quantized`]):
+/// the gather reads the int8 K+V payload plus its two f32 scales
+/// (`quantized_bytes_per_token`, the
+/// [`crate::kv::KvArenaConfig::quantized_bytes_per_token`] value) and
+/// writes the dequantized f32 rows into the dense scratch — a 4× widen
+/// of the payload on the way out. This is the byte model
+/// [`crate::sim::exec::kv_dequant_overhead_s`] prices by bandwidth;
+/// keeping it here keeps every traffic formula in the cost module.
+pub fn kv_dequant_bytes_per_position(quantized_bytes_per_token: usize) -> f64 {
+    let payload = quantized_bytes_per_token.saturating_sub(2 * 4) as f64;
+    quantized_bytes_per_token as f64 + 4.0 * payload
+}
+
 fn choice_boost(choice: &KernelChoice) -> f64 {
     // Boost applies to texture-friendly access patterns; stored on the
     // choice as a constant factor (device-level boost is applied by the

@@ -297,6 +297,31 @@ pub fn paged_gather_overhead_s(dev: &DeviceProfile, blocks_touched: usize) -> f6
         / (dev.effective_bandwidth().max(1e-9) * 1e9)
 }
 
+/// Extra time a decode round pays when KV blocks are stored **int8
+/// quantized** ([`crate::kv::PagedKvStore::new_quantized`]): the gather
+/// dequantizes every position it touches — per K/V row it reads the int8
+/// payload plus its f32 scale and writes the f32 row into the dense
+/// scratch, so the billed traffic is the int8 read + the f32 write
+/// (5 bytes moved per element against the fp16 baseline's 2 + 2). Priced
+/// from effective bandwidth like
+/// [`paged_gather_overhead_s`](paged_gather_overhead_s), and billed only
+/// in quantized mode — the fp32/fp16 path pays exactly zero here, which
+/// the lifetime-vs-paged exactness test relies on.
+///
+/// `positions_touched` is summed over the round's sequences (each
+/// contributes its context length) and `row_bytes` is the per-position
+/// K+V int8 payload ([`crate::kv::KvArenaConfig::quantized_bytes_per_token`]
+/// minus the two f32 scales — pass the config value directly; the 8
+/// scale bytes are part of the read).
+pub fn kv_dequant_overhead_s(
+    dev: &DeviceProfile,
+    positions_touched: usize,
+    quantized_bytes_per_token: usize,
+) -> f64 {
+    let bytes_per_pos = crate::sim::cost::kv_dequant_bytes_per_position(quantized_bytes_per_token);
+    positions_touched as f64 * bytes_per_pos / (dev.effective_bandwidth().max(1e-9) * 1e9)
+}
+
 /// Expected draft tokens accepted per speculative round under a
 /// per-token draft/target agreement probability `acceptance` ∈ [0, 1]:
 /// proposal `i` survives only if all before it did, so
@@ -551,6 +576,23 @@ mod tests {
         // must stay far below one decode round (~tens of ms): the
         // indirection cannot eat the paging win.
         assert!(paged_gather_overhead_s(&dev, 26 * 8 * 8) < 1e-4);
+    }
+
+    #[test]
+    fn kv_dequant_overhead_is_linear_and_stays_below_a_round() {
+        let dev = device("adreno_750").unwrap();
+        // gemma2-2b-class per-token int8 KV payload.
+        let qbpt = 2 * 26 * 4 * 256 + 8;
+        assert_eq!(kv_dequant_overhead_s(&dev, 0, qbpt), 0.0);
+        let one = kv_dequant_overhead_s(&dev, 1, qbpt);
+        assert!(one > 0.0);
+        let many = kv_dequant_overhead_s(&dev, 512, qbpt);
+        assert!((many - 512.0 * one).abs() < 1e-15, "linear in positions");
+        // A batch of 8 sequences at 512-token contexts re-materializes
+        // ~1 GB of f32 scratch: tens of ms — a real, visible cost (the
+        // sweep reports it), but bounded and linear, not runaway.
+        let batch = kv_dequant_overhead_s(&dev, 8 * 512, qbpt);
+        assert!(batch > 1e-3 && batch < 1e-1, "dequant bill out of range: {batch}");
     }
 
     #[test]

@@ -21,6 +21,20 @@
 //! final-emission row the engine skips is ≤ one block per sequence and
 //! identical across disciplines, so comparisons are unaffected).
 //!
+//! **Shared-prefix workloads** ([`simulate_serving_shared`]): requests
+//! carry synthetic prompts with a common per-group prefix; admission
+//! attaches published prefix blocks
+//! ([`AdmissionPolicy::admit_prefixed`]) so only *unique* blocks gate
+//! capacity, prefill skips the attached positions, committed chunks
+//! publish their blocks for later arrivals, and growth into a shared
+//! block is a priced copy-on-write (an extra block, preemption on
+//! exhaustion — the same `ensure` seam as plain growth). With the
+//! `quantized` flag the arena is accounted at int8 block bytes and
+//! every decode round is billed the f32 re-materialization of the
+//! positions its gather touches
+//! ([`crate::sim::exec::kv_dequant_overhead_s`]) — the capacity
+//! multiplier is never free.
+//!
 //! **Chunked + packed prefill**
 //! ([`SchedulerConfig::prefill_chunk_tokens`] > 0): each round's prefill
 //! pack — chunks from multiple sequences — is billed as one flattened
@@ -32,13 +46,14 @@
 
 use std::collections::{HashMap, HashSet};
 
-use crate::kv::{KvArena, KvArenaConfig, KvSeqHandle};
+use crate::kv::{shareable_prefix_keys, KvArena, KvArenaConfig, KvSeqHandle, PrefixKey};
 use crate::serving::request::{InferenceRequest, RequestId};
 use crate::serving::scheduler::{Scheduler, SchedulerConfig};
 use crate::serving::{blended_mean_gen, AdmissionPolicy};
 use crate::sim::exec::{
-    expected_accepted_tokens, expected_draft_steps, packed_prefill_time_s,
-    paged_gather_overhead_s, simulate_batched, verify_time_s, ExecutionPlan, PackedChunkCost,
+    expected_accepted_tokens, expected_draft_steps, kv_dequant_overhead_s,
+    packed_prefill_time_s, paged_gather_overhead_s, simulate_batched, verify_time_s,
+    ExecutionPlan, PackedChunkCost,
 };
 use crate::util::div_ceil;
 use crate::util::stats::Summary;
@@ -52,6 +67,34 @@ pub struct SimRequest {
     pub max_new_tokens: usize,
     /// Tokens actually generated before EOS (≤ `max_new_tokens`).
     pub actual_new_tokens: usize,
+}
+
+/// One request of a **shared-prefix workload** ([`simulate_serving_shared`]):
+/// a [`SimRequest`] whose prompt starts with a prefix common to every
+/// request in the same `prefix_group` — the system-prompt / few-shot
+/// template shape prefix sharing multiplies concurrency on.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefixSimRequest {
+    pub prompt_tokens: usize,
+    pub max_new_tokens: usize,
+    pub actual_new_tokens: usize,
+    /// Requests with equal group ids share their prefix tokens exactly.
+    pub prefix_group: u64,
+    /// Leading prompt positions drawn from the group (clamped to the
+    /// prompt length); the rest of the prompt is unique per request.
+    pub shared_prefix_tokens: usize,
+}
+
+/// Deterministic synthetic token stream (splitmix-style finalizer): the
+/// simulator needs prompts whose *equality structure* is controlled —
+/// same `(seed, pos)` ⇒ same token, different seeds ⇒ tokens that never
+/// align for a whole hash block — without a randomness source.
+fn synth_token(seed: u64, pos: usize) -> i32 {
+    let mut x = seed ^ (pos as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    (x & 0x7fff_ffff) as i32
 }
 
 /// KV reservation discipline under test.
@@ -168,6 +211,22 @@ pub struct ServingSimReport {
     /// own TTFT is bounded below by its prompt length in *any*
     /// discipline, so the packing win shows up here.
     pub ttft_behind_head_p95_s: f64,
+    /// Prompt positions *skipped* at admission because published prefix
+    /// blocks were attached instead of re-prefilled (0 unless the run
+    /// models a shared-prefix workload). Counts re-admissions too: each
+    /// attach is prefill compute the device never ran.
+    pub prefix_shared_tokens: usize,
+    /// Copy-on-write block copies performed when a sequence grew into a
+    /// block it shared (0 unless sharing).
+    pub cow_copies: u64,
+    /// Peak extra references held onto shared blocks across the run
+    /// (Σ `refcount − 1`) — the blocks the arena did *not* have to hold
+    /// twice.
+    pub peak_shared_blocks: usize,
+    /// f32 re-materialization billed for int8 KV block reads
+    /// ([`crate::sim::exec::kv_dequant_overhead_s`]); exactly 0 unless
+    /// the run models quantized KV blocks.
+    pub dequant_s: f64,
 }
 
 impl ServingSimReport {
@@ -192,7 +251,52 @@ pub fn simulate_serving(
     cfg: &ServingSimConfig,
     workload: &[SimRequest],
 ) -> ServingSimReport {
-    simulate_serving_impl(decode_plan, prefill_plan, None, cfg, workload)
+    simulate_serving_impl(decode_plan, prefill_plan, None, cfg, workload, None, false)
+}
+
+/// [`simulate_serving`] over a **shared-prefix workload**. Prompts are
+/// synthesized from each request's `(prefix_group, shared_prefix_tokens)`
+/// so identical prefixes hash to identical block keys; admission runs
+/// [`AdmissionPolicy::admit_prefixed`] (only unique blocks gate
+/// capacity), newly admitted sequences start prefill *after* their
+/// attached positions, and every committed chunk publishes its blocks
+/// for later arrivals. `quantized` switches the arena accounting to
+/// int8 block bytes ([`KvArenaConfig::quantized_block_bytes`]) and
+/// bills each decode round the f32 re-materialization of the positions
+/// its gather touches — size the arena's `num_blocks` from the same
+/// byte budget on both sides to compare at fixed memory.
+pub fn simulate_serving_shared(
+    decode_plan: &ExecutionPlan,
+    prefill_plan: &ExecutionPlan,
+    cfg: &ServingSimConfig,
+    workload: &[PrefixSimRequest],
+    quantized: bool,
+) -> ServingSimReport {
+    let base: Vec<SimRequest> = workload
+        .iter()
+        .map(|r| SimRequest {
+            prompt_tokens: r.prompt_tokens,
+            max_new_tokens: r.max_new_tokens,
+            actual_new_tokens: r.actual_new_tokens,
+        })
+        .collect();
+    let prompts: Vec<Vec<i32>> = workload
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let shared = r.shared_prefix_tokens.min(r.prompt_tokens);
+            (0..r.prompt_tokens)
+                .map(|p| {
+                    if p < shared {
+                        synth_token(0xA5A5_0000 ^ r.prefix_group, p)
+                    } else {
+                        synth_token(0x5151_0000_0000 ^ (i as u64 + 1), p)
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    simulate_serving_impl(decode_plan, prefill_plan, None, cfg, &base, Some(&prompts), quantized)
 }
 
 /// [`simulate_serving`] with greedy draft-k **speculative decoding**: the
@@ -215,24 +319,46 @@ pub fn simulate_serving_spec(
     cfg: &ServingSimConfig,
     workload: &[SimRequest],
 ) -> ServingSimReport {
-    simulate_serving_impl(decode_plan, prefill_plan, Some((draft_plan, spec)), cfg, workload)
+    simulate_serving_impl(
+        decode_plan,
+        prefill_plan,
+        Some((draft_plan, spec)),
+        cfg,
+        workload,
+        None,
+        false,
+    )
 }
 
+#[allow(clippy::too_many_arguments)]
 fn simulate_serving_impl(
     decode_plan: &ExecutionPlan,
     prefill_plan: &ExecutionPlan,
     spec: Option<(&ExecutionPlan, SpecSim)>,
     cfg: &ServingSimConfig,
     workload: &[SimRequest],
+    prompts: Option<&[Vec<i32>]>,
+    quantized: bool,
 ) -> ServingSimReport {
     let mut sched = Scheduler::new(cfg.sched);
     let mut arena = KvArena::new(cfg.arena);
     let mut handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
     let mut actual: HashMap<RequestId, usize> = HashMap::new();
+    // Prefix keys per request, computed once from the prompt (empty map
+    // on the plain path — `admit_prefixed` with no keys is bit-for-bit
+    // the plain gate, so the two paths share one admission call).
+    let mut keys_by_id: HashMap<RequestId, Vec<PrefixKey>> = HashMap::new();
     for (i, r) in workload.iter().enumerate() {
         let id = i as u64;
         actual.insert(id, r.actual_new_tokens.min(r.max_new_tokens));
-        sched.submit(InferenceRequest::new(id, vec![0; r.prompt_tokens], r.max_new_tokens));
+        let prompt = match prompts {
+            Some(ps) => ps[i].clone(),
+            None => vec![0; r.prompt_tokens],
+        };
+        if prompts.is_some() {
+            keys_by_id.insert(id, shareable_prefix_keys(&prompt, cfg.arena.block_tokens));
+        }
+        sched.submit(InferenceRequest::new(id, prompt, r.max_new_tokens));
     }
 
     let mut rep = ServingSimReport::default();
@@ -298,15 +424,30 @@ fn simulate_serving_impl(
                 })
             }
         };
+        let mut newly_admitted: Vec<RequestId> = Vec::new();
         sched.admit_where(|req, ctx_tokens| {
-            match policy.admit(&mut arena, req, ctx_tokens, mean_gen) {
+            let keys: &[PrefixKey] =
+                keys_by_id.get(&req.id).map_or(&[], |k| k.as_slice());
+            match policy.admit_prefixed(&mut arena, req, ctx_tokens, mean_gen, keys) {
                 Some(h) => {
                     handles.insert(req.id, h);
+                    newly_admitted.push(req.id);
                     true
                 }
                 None => false,
             }
         });
+        // A claim that attached published prefix blocks starts life with
+        // committed positions — prefill resumes *after* them (the
+        // chunks the attach made redundant are never planned, so their
+        // compute is never billed; re-admissions re-attach too).
+        for id in newly_admitted {
+            let skip = arena.len(handles[&id]);
+            if skip > 0 {
+                rep.prefix_shared_tokens += skip;
+                sched.seq_mut(id).expect("admitted above").prefill_progress = skip;
+            }
+        }
 
         let round = sched.next_round();
 
@@ -336,6 +477,13 @@ fn simulate_serving_impl(
                 (id, k_eff + 1)
             })
             .collect();
+        // Prefill chunks go through the same loop: their rows were
+        // reserved at admission, so this is a no-op — *except* when the
+        // chunk's write window opens inside a shared block, where
+        // `ensure` must take a copy-on-write block and exhaustion must
+        // preempt exactly like a failed grow.
+        let mut needs = needs;
+        needs.extend(round.prefills.iter().filter(|c| c.len > 0).map(|c| (c.id, c.len)));
         let held_out: HashSet<RequestId> = sched.ensure_round_capacity(
             &mut arena,
             &mut handles,
@@ -355,6 +503,7 @@ fn simulate_serving_impl(
         // touched.
         let mut executed = 0usize;
         let mut gather_blocks = 0usize;
+        let mut dequant_positions = 0usize;
         for &id in &round.decode_batch {
             if held_out.contains(&id) {
                 continue;
@@ -365,6 +514,9 @@ fn simulate_serving_impl(
             gather_blocks += div_ceil(arena.len(handles[&id]).max(1), cfg.arena.block_tokens)
                 * cfg.arena.layers
                 * (k_eff + 1);
+            // Quantized KV: every context position the gather reads is
+            // re-materialized to f32 per scored position.
+            dequant_positions += arena.len(handles[&id]).max(1) * (k_eff + 1);
             let seq = sched.seq_mut(id).expect("scheduled seq exists");
             let gen0 = seq.generated.len();
             // Acceptance: expected value accumulated as per-sequence
@@ -428,6 +580,15 @@ fn simulate_serving_impl(
                     rep.gather_s += paged_gather_overhead_s(dev, gather_blocks);
                 }
             }
+            if quantized {
+                if let Some(dev) = &gather_dev {
+                    rep.dequant_s += kv_dequant_overhead_s(
+                        dev,
+                        dequant_positions,
+                        cfg.arena.quantized_bytes_per_token(),
+                    );
+                }
+            }
             occupancy_sum += executed;
             decode_rounds += 1;
             rep.peak_occupancy = rep.peak_occupancy.max(executed);
@@ -462,7 +623,16 @@ fn simulate_serving_impl(
                 }
             }
             rep.prefill_tokens += c.len;
-            arena.append(handles[&c.id], c.len).expect("admission claimed the context");
+            arena.append(handles[&c.id], c.len).expect("capacity ensured above");
+            // Publish the freshly committed blocks so later arrivals
+            // with the same prefix attach instead of re-prefilling
+            // (no-op when the keys are already indexed or the tail
+            // block is still partial).
+            if let Some(keys) = keys_by_id.get(&c.id) {
+                arena
+                    .publish_prefix(handles[&c.id], keys)
+                    .expect("handle is live within the round");
+            }
             pack.push(PackedChunkCost { tokens: c.len, context_end: c.end() });
             if !chunked {
                 // One prompt-sized pack per prompt: the SAME cost model
@@ -517,6 +687,7 @@ fn simulate_serving_impl(
         let stats = arena.stats();
         rep.peak_blocks_in_use = rep.peak_blocks_in_use.max(stats.blocks_in_use);
         rep.peak_seqs = rep.peak_seqs.max(stats.sequences);
+        rep.peak_shared_blocks = rep.peak_shared_blocks.max(arena.shared_blocks());
         rep.peak_fragmentation_bytes =
             rep.peak_fragmentation_bytes.max(stats.internal_fragmentation_bytes);
 
@@ -536,8 +707,16 @@ fn simulate_serving_impl(
     }
 
     arena.verify().expect("arena invariants after drain");
-    rep.peak_device_bytes = rep.peak_blocks_in_use * cfg.arena.block_bytes();
-    rep.total_s = rep.decode_s + rep.prefill_s + rep.gather_s;
+    rep.cow_copies = arena.cow_copies();
+    // Quantized runs hold real device bytes at the int8 block size —
+    // the watermark the engine's quantized region reports.
+    let device_block_bytes = if quantized {
+        cfg.arena.quantized_block_bytes()
+    } else {
+        cfg.arena.block_bytes()
+    };
+    rep.peak_device_bytes = rep.peak_blocks_in_use * device_block_bytes;
+    rep.total_s = rep.decode_s + rep.prefill_s + rep.gather_s + rep.dequant_s;
     if decode_rounds > 0 {
         rep.mean_occupancy = occupancy_sum as f64 / decode_rounds as f64;
     }
@@ -1097,5 +1276,186 @@ mod tests {
         );
         // Fewer evictions ⇒ less recompute billed.
         assert!(blended.reprefill_tokens <= biased.reprefill_tokens);
+    }
+
+    #[test]
+    fn prefix_sharing_multiplies_admitted_concurrency_at_fixed_arena_bytes() {
+        // The tentpole's acceptance bar at the simulator level: 24
+        // requests with one identical 256-token prompt (the
+        // system-prompt shape) on a gemma2-2b-class arena. Without
+        // sharing every sequence owns its whole 16-block context plus
+        // growth; with content-addressed blocks each follower attaches
+        // the published prefix and pays only its divergence — one
+        // copy-on-write block at the boundary plus generated tokens —
+        // so the same 60 blocks hold several times the concurrency.
+        let (decode, prefill, _) = plans();
+        let shared_workload = vec![
+            PrefixSimRequest {
+                prompt_tokens: 256,
+                max_new_tokens: 32,
+                actual_new_tokens: 32,
+                prefix_group: 7,
+                shared_prefix_tokens: 256,
+            };
+            24
+        ];
+        let plain_workload = vec![
+            SimRequest { prompt_tokens: 256, max_new_tokens: 32, actual_new_tokens: 32 };
+            24
+        ];
+        let cfg = sim_cfg(
+            KvReservation::Paged { policy: AdmissionPolicy::Expected { safety_margin: 1.0 } },
+            60,
+            24,
+        );
+        let plain = simulate_serving(&decode, &prefill, &cfg, &plain_workload);
+        let shared = simulate_serving_shared(&decode, &prefill, &cfg, &shared_workload, false);
+        assert_eq!(plain.completed, 24, "plain run must drain");
+        assert_eq!(shared.completed, 24, "shared run must drain");
+        assert_eq!(
+            shared.generated_tokens, plain.generated_tokens,
+            "sharing changes capacity, never the tokens delivered"
+        );
+        assert!(
+            shared.prefix_shared_tokens > 0,
+            "followers must attach published prefixes: {shared:?}"
+        );
+        assert!(
+            shared.prefill_tokens < plain.prefill_tokens,
+            "attached positions are prefill compute never run: {} vs {}",
+            shared.prefill_tokens,
+            plain.prefill_tokens
+        );
+        assert!(
+            shared.cow_copies > 0,
+            "divergence inside the shared boundary block must copy-on-write: {shared:?}"
+        );
+        assert!(shared.peak_shared_blocks > 0, "blocks must actually be held shared");
+        assert!(
+            shared.mean_occupancy >= 3.0 * plain.mean_occupancy,
+            "sharing must multiply admitted concurrency ≥ 3× at fixed arena bytes: \
+             {:.2} vs {:.2}",
+            shared.mean_occupancy,
+            plain.mean_occupancy
+        );
+        assert!(
+            shared.tokens_per_s() > plain.tokens_per_s(),
+            "the extra concurrency must buy throughput: {:.1} vs {:.1} tok/s",
+            shared.tokens_per_s(),
+            plain.tokens_per_s()
+        );
+    }
+
+    #[test]
+    fn quantized_kv_blocks_double_admitted_concurrency_at_fixed_arena_bytes() {
+        // Same byte budget, two block formats: fp16-accounted blocks vs
+        // int8 blocks with per-row scales (~2× smaller, ~4× vs fp32).
+        // The quantized run must hold ≥ 2× the concurrency on the same
+        // shared-prefix workload — and must be billed the f32
+        // re-materialization its gathers perform, so the multiplier is
+        // priced, never free.
+        let (decode, prefill, _) = plans();
+        let workload = vec![
+            PrefixSimRequest {
+                prompt_tokens: 256,
+                max_new_tokens: 32,
+                actual_new_tokens: 32,
+                prefix_group: 3,
+                shared_prefix_tokens: 256,
+            };
+            24
+        ];
+        let fp_blocks = 40;
+        let acfg = arena(fp_blocks);
+        let budget = fp_blocks * acfg.block_bytes();
+        let q_blocks = budget / acfg.quantized_block_bytes();
+        assert!(
+            q_blocks as f64 >= 1.9 * fp_blocks as f64,
+            "int8 blocks must ~double block capacity at fixed bytes: {q_blocks} vs {fp_blocks}"
+        );
+        let reservation =
+            KvReservation::Paged { policy: AdmissionPolicy::Expected { safety_margin: 1.0 } };
+        let fp = simulate_serving_shared(
+            &decode,
+            &prefill,
+            &sim_cfg(reservation, fp_blocks, 24),
+            &workload,
+            false,
+        );
+        let q = simulate_serving_shared(
+            &decode,
+            &prefill,
+            &sim_cfg(reservation, q_blocks, 24),
+            &workload,
+            true,
+        );
+        assert_eq!(fp.completed, 24, "fp run must drain");
+        assert_eq!(q.completed, 24, "quantized run must drain");
+        assert_eq!(q.generated_tokens, fp.generated_tokens, "format never changes tokens");
+        assert_eq!(fp.dequant_s, 0.0, "the fp path must pay exactly zero dequant");
+        assert!(
+            q.dequant_s > 0.0,
+            "int8 KV reads must be billed their f32 re-materialization: {q:?}"
+        );
+        assert!(
+            q.peak_device_bytes <= budget,
+            "quantized watermark must stay inside the same byte budget: {} vs {}",
+            q.peak_device_bytes,
+            budget
+        );
+        assert!(
+            q.mean_occupancy >= 2.0 * fp.mean_occupancy,
+            "quantized blocks must buy ≥ 2× admitted concurrency at fixed bytes: \
+             {:.2} vs {:.2}",
+            q.mean_occupancy,
+            fp.mean_occupancy
+        );
+    }
+
+    #[test]
+    fn unshared_prompts_through_the_sharing_path_match_plain_sim_exactly() {
+        // Bit-exactness guard for the unshared path: unique prompts
+        // (shared_prefix_tokens = 0) driven through
+        // `simulate_serving_shared` must reproduce `simulate_serving`
+        // *exactly* — zero-match `admit_prefixed` IS the plain gate,
+        // publishing unique keys attaches nothing, and no CoW or
+        // dequant term may fire — so enabling the sharing machinery on
+        // a workload with nothing to share costs nothing.
+        let (decode, prefill, _) = plans();
+        let shared_workload = vec![
+            PrefixSimRequest {
+                prompt_tokens: 64,
+                max_new_tokens: 32,
+                actual_new_tokens: 32,
+                prefix_group: 0,
+                shared_prefix_tokens: 0,
+            };
+            6
+        ];
+        let plain_workload = vec![
+            SimRequest { prompt_tokens: 64, max_new_tokens: 32, actual_new_tokens: 32 };
+            6
+        ];
+        let cfg = sim_cfg(
+            KvReservation::Paged { policy: AdmissionPolicy::Expected { safety_margin: 1.0 } },
+            48,
+            8,
+        );
+        let plain = simulate_serving(&decode, &prefill, &cfg, &plain_workload);
+        let shared = simulate_serving_shared(&decode, &prefill, &cfg, &shared_workload, false);
+        assert_eq!(plain.completed, 6);
+        assert_eq!(shared.completed, 6);
+        assert_eq!(shared.prefix_shared_tokens, 0, "nothing to attach");
+        assert_eq!(shared.cow_copies, 0, "nothing shared, nothing copied");
+        assert_eq!(shared.rounds, plain.rounds, "identical schedules");
+        assert_eq!(shared.preemptions, plain.preemptions);
+        assert_eq!(shared.prefill_tokens, plain.prefill_tokens);
+        assert_eq!(shared.generated_tokens, plain.generated_tokens);
+        assert!(
+            shared.total_s == plain.total_s,
+            "identical float sequences must price identically: {} vs {}",
+            shared.total_s,
+            plain.total_s
+        );
     }
 }

@@ -204,6 +204,84 @@ fn chunked_prefill_burst_serves_every_request() {
 }
 
 #[test]
+fn prefix_sharing_serves_identical_tokens_and_attaches_published_blocks() {
+    // The tentpole's e2e bar through real PJRT: identical prompts with
+    // content-addressed sharing ON must deliver exactly the tokens the
+    // sharing-OFF engine (pre-sharing behaviour) delivers, while
+    // followers actually attach published prefix blocks (skipping that
+    // prefill compute) and copy-on-write at the divergence block.
+    use std::sync::atomic::Ordering;
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt: Vec<i32> = (1..=32).collect(); // 2 blocks; 31 tokens shareable
+    let gen = 8usize;
+
+    // Reference: sharing disabled — bitwise the pre-sharing engine.
+    let off = ServingEngine::start(
+        &dir,
+        SchedulerConfig {
+            max_active: 4,
+            max_prefills_per_round: 2,
+            share_prefix_kv: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let reference = off.infer(InferenceRequest::new(1, prompt.clone(), gen)).unwrap();
+    assert!(reference.error.is_none());
+    assert_eq!(reference.tokens.len(), gen);
+    let m_off = std::sync::Arc::clone(&off.metrics);
+    drop(off);
+    assert_eq!(
+        m_off.kv_prefix_shared_tokens.load(Ordering::Relaxed),
+        0,
+        "sharing off must attach nothing"
+    );
+
+    let on = ServingEngine::start(
+        &dir,
+        SchedulerConfig { max_active: 4, max_prefills_per_round: 2, ..Default::default() },
+    )
+    .unwrap();
+    // Head request: a longer generation keeps it live (its published
+    // blocks referenced, hence indexed) while the followers arrive.
+    let head_rx = on.submit(InferenceRequest::new(0, prompt.clone(), 24)).unwrap();
+    // Wait until the head's prefill ran — publication happens on the
+    // engine thread in the same round, strictly before any later
+    // admission — so the followers are guaranteed to find the index hot.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while on.metrics.prefill_chunk_tokens.load(Ordering::Relaxed) < prompt.len() as u64 {
+        assert!(std::time::Instant::now() < deadline, "head prefill never ran");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let rxs: Vec<_> = (1..=3)
+        .map(|i| on.submit(InferenceRequest::new(i, prompt.clone(), gen)).unwrap())
+        .collect();
+    let head = head_rx.recv().unwrap();
+    assert!(head.error.is_none(), "head must not fail: {:?}", head.error);
+    assert_eq!(head.tokens[..gen], reference.tokens[..], "greedy head matches reference");
+    let outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let m_on = std::sync::Arc::clone(&on.metrics);
+    drop(on); // join the worker so the final round's gauges are flushed
+
+    for o in &outs {
+        assert!(o.error.is_none(), "sharing must not fail requests: {:?}", o.error);
+        assert_eq!(
+            o.tokens, reference.tokens,
+            "sharing multiplies capacity, never changes tokens"
+        );
+    }
+    let attached = m_on.kv_prefix_shared_tokens.load(Ordering::Relaxed);
+    assert!(
+        attached >= 31,
+        "at least one follower must attach the 31 shareable positions (got {attached})"
+    );
+    assert!(
+        m_on.kv_cow_copies.load(Ordering::Relaxed) > 0,
+        "a follower's first divergent write lands in a shared block and must copy-on-write"
+    );
+}
+
+#[test]
 fn preemption_under_tiny_arena_loses_no_tokens() {
     // Shrink the KV arena below the burst's total footprint (3 blocks =
     // 48 tokens vs 3 sequences × 32): growth exhausts the arena, the
