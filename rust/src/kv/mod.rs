@@ -46,8 +46,27 @@
 //! frees only orphaned blocks, and admission counts only *unique*
 //! blocks in the expected footprint — which is what multiplies admitted
 //! concurrency at fixed arena bytes on shared-prefix traffic.
+//!
+//! **PR 7 — pipeline reservation windows + prefix retention.** Two
+//! further extensions for the pipelined round executor:
+//!
+//! * *Reservation windows* ([`KvArena::pin_window`]): while a planned
+//!   round is in flight on the device, every block its gathers read
+//!   through is pinned. A pinned block whose last sequence reference
+//!   drops mid-flight (preemption, completion, rollback) is
+//!   **deferred** — unindexed immediately, but returned to the free
+//!   list only when the last window pinning it closes — so planning
+//!   round N+1 (admission, growth, copy-on-write) can never recycle
+//!   storage round N still reads.
+//! * *Prefix-cache retention* ([`KvArena::set_prefix_retention`]): up
+//!   to a configurable number of refcount-zero *indexed* blocks stay
+//!   resident in LRU order instead of freeing, so published prefixes
+//!   survive gaps between request waves and the next identical wave
+//!   still attaches. Retained blocks are evicted oldest-first, only
+//!   under arena pressure (an allocation that would otherwise fail) or
+//!   cap overflow. Off by default (`cap = 0`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::error::{DriftError, Result};
 use crate::memory::plan::ALIGN;
@@ -355,6 +374,8 @@ pub struct KvArenaStats {
     pub shared_blocks: usize,
     /// Copy-on-write block copies performed over the arena's lifetime.
     pub cow_copies: u64,
+    /// Refcount-zero indexed blocks held warm by prefix retention.
+    pub retained_blocks: usize,
 }
 
 impl KvArenaStats {
@@ -365,6 +386,15 @@ impl KvArenaStats {
         }
         self.tokens_used as f64 / self.tokens_reserved as f64
     }
+}
+
+/// Opaque token for one open pipeline-slot **reservation window**
+/// (see [`KvArena::pin_window`]). Deliberately neither `Copy` nor
+/// `Clone`: closing a window consumes the token, so a window can never
+/// be closed twice.
+#[derive(Debug)]
+pub struct KvSlotWindow {
+    id: u64,
 }
 
 /// Shared KV arena: block-granular slot allocation over one contiguous
@@ -395,6 +425,24 @@ pub struct KvArena {
     peak_blocks_in_use: usize,
     /// Monotone count of copy-on-write block copies performed.
     cow_copies: u64,
+    /// Per-block pin count from open reservation windows. A pinned
+    /// block whose refcount hits zero defers its free (see `deferred`).
+    pinned: Vec<u32>,
+    /// Open windows: id → the (multiset of) blocks each one pinned.
+    windows: HashMap<u64, Vec<usize>>,
+    next_window_id: u64,
+    /// Refcount-zero blocks whose free is deferred behind ≥1 open
+    /// window. Unindexed, not allocatable, freed at window close.
+    deferred: Vec<usize>,
+    /// Refcount-zero *indexed* blocks held warm by prefix retention,
+    /// oldest at the front (the LRU eviction order).
+    retained: VecDeque<usize>,
+    /// Retention capacity; 0 disables retention.
+    retain_cap: usize,
+    /// Blocks retention evicted since the last
+    /// [`take_retention_evictions`](Self::take_retention_evictions)
+    /// drain — a device-backed store decommits exactly these.
+    retention_evictions: Vec<usize>,
 }
 
 /// What [`KvArena::ensure_detailed`] did to satisfy a write window:
@@ -421,6 +469,13 @@ impl KvArena {
             gens: Vec::new(),
             peak_blocks_in_use: 0,
             cow_copies: 0,
+            pinned: vec![0; cfg.num_blocks],
+            windows: HashMap::new(),
+            next_window_id: 0,
+            deferred: Vec::new(),
+            retained: VecDeque::new(),
+            retain_cap: 0,
+            retention_evictions: Vec::new(),
             cfg,
         }
     }
@@ -433,12 +488,171 @@ impl KvArena {
         div_ceil(tokens, self.cfg.block_tokens)
     }
 
+    /// Blocks an allocation can draw on right now: the free list plus
+    /// the retained pool (retention never reduces admission capacity —
+    /// warm blocks are evicted the moment an allocation needs them).
+    fn blocks_available(&self) -> usize {
+        self.free.len() + self.retained.len()
+    }
+
+    /// Evict one retained block *right now*: unindex it, return it to
+    /// the free list, and record it in the eviction buffer so a
+    /// device-backed store can decommit it before the block is ever
+    /// re-committed. The caller has already removed `b` from `retained`.
+    fn evict_retained_block(&mut self, b: usize) {
+        debug_assert_eq!(self.refcount[b], 0, "evicting a live block");
+        if let Some(k) = self.block_key[b].take() {
+            self.index.remove(&k);
+        }
+        self.free.push(b);
+        self.retention_evictions.push(b);
+    }
+
+    /// Make sure at least `need` blocks sit on the free list, evicting
+    /// oldest retained blocks to cover a shortfall. `false` (and no
+    /// state change) when free + retained cannot cover `need` — the
+    /// caller's backpressure error path.
+    fn reclaim_retained(&mut self, need: usize) -> bool {
+        if need <= self.free.len() {
+            return true;
+        }
+        let shortfall = need - self.free.len();
+        if shortfall > self.retained.len() {
+            return false;
+        }
+        for _ in 0..shortfall {
+            let b = self.retained.pop_front().expect("shortfall bounded above");
+            self.evict_retained_block(b);
+        }
+        true
+    }
+
+    /// Route a block whose last reference just dropped to its
+    /// refcount-zero home. Returns `true` when the block went straight
+    /// to the free list (its device bytes are reclaimable *now*);
+    /// `false` when the free is deferred behind an open pipeline-slot
+    /// window or the block is retained warm for prefix re-attachment.
+    fn drop_last_ref(&mut self, b: usize) -> bool {
+        debug_assert_eq!(self.refcount[b], 0, "block {b} still referenced");
+        if self.pinned[b] > 0 {
+            // An in-flight slot still gathers through this block.
+            // Unindex it (the content dies with the release) and free
+            // it only when the last window closes.
+            if let Some(k) = self.block_key[b].take() {
+                self.index.remove(&k);
+            }
+            self.deferred.push(b);
+            return false;
+        }
+        if self.retain_cap > 0 && self.block_key[b].is_some() {
+            // Published prefix content: keep it warm for the next wave.
+            self.retained.push_back(b);
+            if self.retained.len() > self.retain_cap {
+                let old = self.retained.pop_front().expect("cap overflow implies nonempty");
+                self.evict_retained_block(old);
+            }
+            return false;
+        }
+        if let Some(k) = self.block_key[b].take() {
+            self.index.remove(&k);
+        }
+        self.free.push(b);
+        true
+    }
+
+    /// Open a reservation window over `blocks` for an in-flight
+    /// pipeline slot: every listed block is pinned (multiply, when
+    /// several member sequences list it). A pinned block whose last
+    /// sequence reference drops is **deferred** — unindexed at once,
+    /// freed only when the last window pinning it closes — so planning
+    /// round N+1 (admission, growth, copy-on-write) can never recycle
+    /// a block round N's device call still reads through.
+    pub fn pin_window(&mut self, blocks: &[usize]) -> KvSlotWindow {
+        for &b in blocks {
+            debug_assert!(b < self.cfg.num_blocks, "pinned block {b} out of range");
+            self.pinned[b] += 1;
+        }
+        let id = self.next_window_id;
+        self.next_window_id += 1;
+        self.windows.insert(id, blocks.to_vec());
+        KvSlotWindow { id }
+    }
+
+    /// Close a reservation window: unpin its blocks and complete every
+    /// deferred free whose last pin just dropped. Returns the block ids
+    /// freed *now*, so a device-backed store can decommit exactly
+    /// those.
+    pub fn unpin_window(&mut self, w: KvSlotWindow) -> Vec<usize> {
+        let blocks = self.windows.remove(&w.id).expect("slot window closed twice");
+        for &b in &blocks {
+            debug_assert!(self.pinned[b] > 0, "unpinning block {b} with no pins");
+            self.pinned[b] -= 1;
+        }
+        let mut freed = Vec::new();
+        let mut still_deferred = Vec::new();
+        for b in std::mem::take(&mut self.deferred) {
+            if self.pinned[b] == 0 {
+                self.free.push(b);
+                freed.push(b);
+            } else {
+                still_deferred.push(b);
+            }
+        }
+        self.deferred = still_deferred;
+        freed
+    }
+
+    /// Open reservation windows (in-flight pipeline slots).
+    pub fn open_windows(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// Blocks whose free is currently deferred behind an open window.
+    pub fn deferred_blocks(&self) -> usize {
+        self.deferred.len()
+    }
+
+    /// Enable (or resize) **prefix-cache retention**: up to `cap`
+    /// refcount-zero *indexed* blocks stay resident in LRU order
+    /// instead of freeing, so published prefixes survive gaps between
+    /// request waves and the next identical wave still attaches.
+    /// Retained blocks are evicted oldest-first under arena pressure
+    /// (an allocation that would otherwise fail) or when the cap
+    /// shrinks. `0` — the default — disables retention. Device-backed
+    /// callers must drain
+    /// [`take_retention_evictions`](Self::take_retention_evictions)
+    /// after any call that may evict.
+    pub fn set_prefix_retention(&mut self, cap: usize) {
+        self.retain_cap = cap;
+        while self.retained.len() > self.retain_cap {
+            let b = self.retained.pop_front().expect("length checked above");
+            self.evict_retained_block(b);
+        }
+    }
+
+    /// Refcount-zero indexed blocks currently held warm by retention.
+    pub fn retained_blocks(&self) -> usize {
+        self.retained.len()
+    }
+
+    /// Drain the blocks retention evicted (cap overflow, allocation
+    /// pressure, cap shrink) since the last drain. A device-backed
+    /// store must decommit exactly these — *before* committing any
+    /// block the same operation may have just re-allocated from the
+    /// free list.
+    pub fn take_retention_evictions(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.retention_evictions)
+    }
+
     /// Would a reservation of `tokens` positions succeed right now?
     /// Admission control asks this *before* popping a request off the
     /// waiting queue; `false` means "defer", never "fail". `tokens == 0`
     /// always fits (it reserves no blocks — see [`claim`](Self::claim)).
+    /// Retained blocks count as allocatable (retention yields to
+    /// pressure); deferred blocks do not (in-flight slots still read
+    /// them).
     pub fn can_claim(&self, tokens: usize) -> bool {
-        self.blocks_for(tokens) <= self.free.len()
+        self.blocks_for(tokens) <= self.blocks_available()
     }
 
     /// Reserve capacity for a sequence of up to `tokens` positions.
@@ -456,10 +670,10 @@ impl KvArena {
     /// [`grow`](Self::grow) during decode.
     pub fn claim(&mut self, tokens: usize) -> Result<KvSeqHandle> {
         let need = self.blocks_for(tokens);
-        if need > self.free.len() {
+        if !self.reclaim_retained(need) {
             return Err(DriftError::Memory(format!(
                 "kv arena exhausted: need {need} blocks for {tokens} tokens, {} free of {}",
-                self.free.len(),
+                self.blocks_available(),
                 self.cfg.num_blocks
             )));
         }
@@ -500,12 +714,22 @@ impl KvArena {
         n
     }
 
+    /// Retained (refcount-zero) blocks among the first `matched` keys
+    /// of `prefix` — attaching these *revives* them rather than
+    /// allocating, so they must not double-count as evictable capacity.
+    fn retained_matches(&self, prefix: &[PrefixKey], matched: usize) -> usize {
+        prefix[..matched].iter().filter(|pk| self.refcount[self.index[&pk.key]] == 0).count()
+    }
+
     /// Would [`claim_prefixed`](Self::claim_prefixed) succeed right now?
-    /// Counts only the *unique* (fresh) blocks against the free list —
-    /// this is the dedup-aware admission gate.
+    /// Counts only the *unique* (fresh) blocks against the free list
+    /// (plus whatever retention could yield without evicting the
+    /// matched blocks themselves) — this is the dedup-aware admission
+    /// gate.
     pub fn can_claim_prefixed(&self, tokens: usize, prefix: &[PrefixKey]) -> bool {
         let matched = self.index_matches(prefix).min(self.blocks_for(tokens));
-        self.blocks_for(tokens) - matched <= self.free.len()
+        let revived = self.retained_matches(prefix, matched);
+        self.blocks_for(tokens) - matched <= self.blocks_available() - revived
     }
 
     /// [`claim`](Self::claim) with prefix attachment: walks `prefix`
@@ -522,11 +746,12 @@ impl KvArena {
     ) -> Result<(KvSeqHandle, usize)> {
         let matched = self.index_matches(prefix).min(self.blocks_for(tokens));
         let fresh = self.blocks_for(tokens) - matched;
-        if fresh > self.free.len() {
+        let revived = self.retained_matches(prefix, matched);
+        if fresh > self.blocks_available() - revived {
             return Err(DriftError::Memory(format!(
                 "kv arena exhausted: need {fresh} fresh blocks for {tokens} tokens \
                  ({matched} shared), {} free of {}",
-                self.free.len(),
+                self.blocks_available() - revived,
                 self.cfg.num_blocks
             )));
         }
@@ -542,11 +767,26 @@ impl KvArena {
         let mut shared_tokens = 0;
         for pk in &prefix[..matched] {
             let b = self.index[&pk.key];
-            debug_assert!(self.refcount[b] > 0, "indexed block {b} must be live");
+            if self.refcount[b] == 0 {
+                // Revive a retained block: it leaves the LRU and is
+                // live again with its committed content intact — the
+                // attach skips its prefill even though no live
+                // sequence held the prefix across the wave gap.
+                let pos = self
+                    .retained
+                    .iter()
+                    .position(|&x| x == b)
+                    .expect("refcount-zero indexed block must be retained");
+                let _ = self.retained.remove(pos);
+            }
             self.refcount[b] += 1;
             shared_tokens += pk.tokens;
             blocks.push(b);
         }
+        // Matched retained blocks just left the LRU, so eviction for
+        // the fresh remainder can no longer touch them.
+        let reclaimed = self.reclaim_retained(fresh);
+        debug_assert!(reclaimed, "fresh-block availability checked above");
         for _ in 0..fresh {
             let b = self.free.pop().expect("free count checked above");
             debug_assert_eq!(self.refcount[b], 0, "block {b} double-claimed");
@@ -625,18 +865,24 @@ impl KvArena {
                 h.slot, h.gen
             )));
         }
-        let e = self
-            .seqs
-            .get_mut(h.slot)
-            .and_then(|s| s.as_mut())
-            .ok_or_else(|| DriftError::Serving(format!("kv arena slot {} not claimed", h.slot)))?;
-        let new_reserved = e.reserved_tokens + additional_tokens;
-        let need = div_ceil(new_reserved, self.cfg.block_tokens).saturating_sub(e.blocks.len());
-        if need > self.free.len() {
+        let (need, new_reserved) = {
+            let e = self
+                .seqs
+                .get(h.slot)
+                .and_then(|s| s.as_ref())
+                .ok_or_else(|| {
+                    DriftError::Serving(format!("kv arena slot {} not claimed", h.slot))
+                })?;
+            let new_reserved = e.reserved_tokens + additional_tokens;
+            let need =
+                div_ceil(new_reserved, self.cfg.block_tokens).saturating_sub(e.blocks.len());
+            (need, new_reserved)
+        };
+        if !self.reclaim_retained(need) {
             return Err(DriftError::Memory(format!(
                 "kv arena exhausted on grow: need {need} more blocks for \
                  +{additional_tokens} tokens, {} free of {}",
-                self.free.len(),
+                self.blocks_available(),
                 self.cfg.num_blocks
             )));
         }
@@ -644,8 +890,9 @@ impl KvArena {
             let b = self.free.pop().expect("free count checked above");
             debug_assert_eq!(self.refcount[b], 0, "block {b} double-claimed");
             self.refcount[b] = 1;
-            e.blocks.push(b);
+            self.seqs[h.slot].as_mut().expect("checked above").blocks.push(b);
         }
+        let e = self.seqs[h.slot].as_mut().expect("checked above");
         e.reserved_tokens = new_reserved;
         let in_use = self.cfg.num_blocks - self.free.len();
         self.peak_blocks_in_use = self.peak_blocks_in_use.max(in_use);
@@ -692,12 +939,13 @@ impl KvArena {
             }
             return Ok(None);
         }
-        let Some(new) = self.free.pop() else {
+        if !self.reclaim_retained(1) {
             return Err(DriftError::Memory(format!(
                 "kv arena exhausted on copy-on-write: block {old} shared {} ways, 0 free",
                 self.refcount[old]
             )));
-        };
+        }
+        let new = self.free.pop().expect("free block reclaimed above");
         debug_assert_eq!(self.refcount[new], 0, "block {new} double-claimed");
         self.refcount[old] -= 1;
         self.refcount[new] = 1;
@@ -721,7 +969,7 @@ impl KvArena {
         };
         let need = div_ceil(e.reserved_tokens + additional_tokens, self.cfg.block_tokens)
             .saturating_sub(e.blocks.len());
-        need <= self.free.len()
+        need <= self.blocks_available()
     }
 
     /// Make sure the next `n` appends will fit **and are writable**:
@@ -768,11 +1016,11 @@ impl KvArena {
             div_ceil(e.reserved_tokens + shortfall, self.cfg.block_tokens)
                 .saturating_sub(e.blocks.len())
         };
-        if blocks_short + cow_need > self.free.len() {
+        if blocks_short + cow_need > self.blocks_available() {
             return Err(DriftError::Memory(format!(
                 "kv arena exhausted on ensure: need {blocks_short} grown + {cow_need} \
                  copy-on-write blocks, {} free of {}",
-                self.free.len(),
+                self.blocks_available(),
                 self.cfg.num_blocks
             )));
         }
@@ -851,11 +1099,7 @@ impl KvArena {
         for b in popped {
             debug_assert!(self.refcount[b] > 0, "block {b} freed while unreferenced");
             self.refcount[b] -= 1;
-            if self.refcount[b] == 0 {
-                if let Some(k) = self.block_key[b].take() {
-                    self.index.remove(&k);
-                }
-                self.free.push(b);
+            if self.refcount[b] == 0 && self.drop_last_ref(b) {
                 freed.push(b);
             }
         }
@@ -906,9 +1150,11 @@ impl KvArena {
 
     /// Release a sequence: drop one reference on each of its blocks and
     /// free exactly those that hit refcount zero (unindexing them — the
-    /// content index never holds dead blocks). Stale or unknown handles
-    /// free nothing. Returns the freed block ids so a device-backed
-    /// store can decommit the same blocks and no others.
+    /// content index never holds dead blocks unless retention holds
+    /// them warm). Stale or unknown handles free nothing. Returns the
+    /// freed block ids so a device-backed store can decommit the same
+    /// blocks and no others — blocks parked in retention or deferred
+    /// behind an open window stay committed and are not listed.
     pub fn release_blocks(&mut self, h: KvSeqHandle) -> Vec<usize> {
         if self.gens.get(h.slot) != Some(&h.gen) {
             return Vec::new(); // stale handle: the slot belongs to someone else
@@ -920,11 +1166,7 @@ impl KvArena {
             for b in e.blocks {
                 debug_assert!(self.refcount[b] > 0, "block {b} released while unreferenced");
                 self.refcount[b] -= 1;
-                if self.refcount[b] == 0 {
-                    if let Some(k) = self.block_key[b].take() {
-                        self.index.remove(&k);
-                    }
-                    self.free.push(b);
+                if self.refcount[b] == 0 && self.drop_last_ref(b) {
                     freed.push(b);
                 }
             }
@@ -961,6 +1203,10 @@ impl KvArena {
         self.cow_copies
     }
 
+    /// Blocks not on the free list. Retained and deferred blocks count
+    /// as in use: their storage is still committed (a device-backed
+    /// store's watermark covers them), even though no live sequence
+    /// references them.
     pub fn blocks_in_use(&self) -> usize {
         self.cfg.num_blocks - self.free.len()
     }
@@ -995,27 +1241,101 @@ impl KvArena {
                 + self.blocks_in_use() * block_padding,
             shared_blocks: self.shared_blocks(),
             cow_copies: self.cow_copies,
+            retained_blocks: self.retained.len(),
         }
     }
 
     /// Structural invariant check for the property tests: refcounts
-    /// agree exactly with live block-table references, the free list is
-    /// exactly the refcount-zero blocks, no sequence lists a block
-    /// twice, and the content index is a consistent bijection with
-    /// `block_key` over live blocks — so
-    /// `free + distinct live == num_blocks` (block conservation) holds.
+    /// agree exactly with live block-table references, every
+    /// refcount-zero block sits in exactly one of {free, deferred,
+    /// retained}, no sequence lists a block twice, window pin counts
+    /// agree with the open windows (and no pinned block is allocatable),
+    /// and the content index is a consistent bijection with `block_key`
+    /// over live-or-retained blocks — so `free + deferred + retained +
+    /// distinct live == num_blocks` (block conservation) holds.
     pub fn verify(&self) -> Result<()> {
-        let mut in_free = vec![false; self.cfg.num_blocks];
+        // Refcount-zero homes: 0 = none (live), 1 = free, 2 = deferred,
+        // 3 = retained.
+        let mut home = vec![0u8; self.cfg.num_blocks];
         for &b in &self.free {
             if b >= self.cfg.num_blocks {
                 return Err(DriftError::Memory(format!("free list block {b} out of range")));
             }
-            if in_free[b] {
+            if home[b] != 0 {
                 return Err(DriftError::Memory(format!("block {b} twice in free list")));
             }
-            in_free[b] = true;
+            home[b] = 1;
             if self.refcount[b] != 0 {
                 return Err(DriftError::Memory(format!("free block {b} has references")));
+            }
+            if self.pinned[b] > 0 {
+                return Err(DriftError::Memory(format!("pinned block {b} on the free list")));
+            }
+        }
+        for &b in &self.deferred {
+            if b >= self.cfg.num_blocks {
+                return Err(DriftError::Memory(format!("deferred block {b} out of range")));
+            }
+            if home[b] != 0 {
+                return Err(DriftError::Memory(format!(
+                    "block {b} in two refcount-zero homes"
+                )));
+            }
+            home[b] = 2;
+            if self.refcount[b] != 0 {
+                return Err(DriftError::Memory(format!("deferred block {b} has references")));
+            }
+            if self.pinned[b] == 0 {
+                return Err(DriftError::Memory(format!(
+                    "deferred block {b} pinned by no open window"
+                )));
+            }
+            if self.block_key[b].is_some() {
+                return Err(DriftError::Memory(format!("deferred block {b} still indexed")));
+            }
+        }
+        for &b in &self.retained {
+            if b >= self.cfg.num_blocks {
+                return Err(DriftError::Memory(format!("retained block {b} out of range")));
+            }
+            if home[b] != 0 {
+                return Err(DriftError::Memory(format!(
+                    "block {b} in two refcount-zero homes"
+                )));
+            }
+            home[b] = 3;
+            if self.refcount[b] != 0 {
+                return Err(DriftError::Memory(format!("retained block {b} has references")));
+            }
+            if self.pinned[b] > 0 {
+                return Err(DriftError::Memory(format!("pinned block {b} in the retention LRU")));
+            }
+            if self.block_key[b].is_none() {
+                return Err(DriftError::Memory(format!("retained block {b} not indexed")));
+            }
+        }
+        if self.retained.len() > self.retain_cap {
+            return Err(DriftError::Memory(format!(
+                "retention holds {} blocks over its cap {}",
+                self.retained.len(),
+                self.retain_cap
+            )));
+        }
+        let mut pins = vec![0u32; self.cfg.num_blocks];
+        for blocks in self.windows.values() {
+            for &b in blocks {
+                if b >= self.cfg.num_blocks {
+                    return Err(DriftError::Memory(format!("window block {b} out of range")));
+                }
+                pins[b] += 1;
+            }
+        }
+        for b in 0..self.cfg.num_blocks {
+            if pins[b] != self.pinned[b] {
+                return Err(DriftError::Memory(format!(
+                    "block {b}: pin count {} vs {} open-window references",
+                    self.pinned[b], pins[b]
+                )));
             }
         }
         let mut live_refs = vec![0u32; self.cfg.num_blocks];
@@ -1058,14 +1378,14 @@ impl KvArena {
                     self.refcount[b], live_refs[b]
                 )));
             }
-            if in_free[b] != (self.refcount[b] == 0) {
+            if (home[b] != 0) != (self.refcount[b] == 0) {
                 return Err(DriftError::Memory(format!(
-                    "block {b}: free-list membership disagrees with refcount {}",
+                    "block {b}: refcount-zero home disagrees with refcount {}",
                     self.refcount[b]
                 )));
             }
             if let Some(k) = self.block_key[b] {
-                if self.refcount[b] == 0 {
+                if self.refcount[b] == 0 && home[b] != 3 {
                     return Err(DriftError::Memory(format!("dead block {b} still indexed")));
                 }
                 if self.index.get(&k) != Some(&b) {
@@ -1761,6 +2081,297 @@ mod tests {
         let freed = a.release(h);
         assert_eq!(freed, 3 * a.config().block_bytes());
         assert_eq!(a.release(h), 0, "stale release frees nothing");
+    }
+
+    #[test]
+    fn retention_keeps_published_prefix_across_waves_until_pressure() {
+        // The PR-7 satellite contract: with retention on, a published
+        // prefix survives the gap between request waves (refcount 0,
+        // nobody live) and the second identical wave still attaches.
+        let mut a = small_arena(6);
+        a.set_prefix_retention(4);
+        let prompt: Vec<i32> = (0..48).collect(); // 3 blocks, cover 47
+        let keys = shareable_prefix_keys(&prompt, 16);
+        let h1 = a.claim(48).unwrap();
+        a.append(h1, 48).unwrap();
+        assert_eq!(a.publish_prefix(h1, &keys).unwrap(), 3);
+
+        // Wave 1 drains: the indexed blocks park in the LRU instead of
+        // freeing — no device bytes are reclaimable yet.
+        assert_eq!(a.release(h1), 0, "retained blocks free no device bytes");
+        assert_eq!(a.retained_blocks(), 3);
+        assert_eq!(a.blocks_in_use(), 3, "retained blocks stay committed");
+        a.verify().unwrap();
+
+        // Wave 2, identical prompt, arrives after the gap: it attaches
+        // all three blocks (revived out of the LRU) and skips their
+        // prefill entirely.
+        assert!(a.can_claim_prefixed(48, &keys));
+        let (h2, matched) = a.claim_prefixed_detailed(48, &keys).unwrap();
+        assert_eq!(matched, 3);
+        assert_eq!(a.len(h2), 47, "second wave still skips its prefill");
+        assert_eq!(a.retained_blocks(), 0, "revived blocks left the LRU");
+        a.verify().unwrap();
+        a.release(h2);
+        assert_eq!(a.retained_blocks(), 3, "warm again after the wave");
+
+        // Pressure: an allocation bigger than the free list evicts the
+        // oldest retained blocks — retention never blocks admission.
+        assert!(a.can_claim(96), "6 blocks = 3 free + 3 retained");
+        let h3 = a.claim(96).unwrap();
+        assert_eq!(a.retained_blocks(), 0, "pressure evicted the warm blocks");
+        assert_eq!(a.take_retention_evictions().len(), 3);
+        a.verify().unwrap();
+        a.release(h3);
+        // Evicted content is really gone: the next wave matches nothing.
+        let (h4, m4) = a.claim_prefixed_detailed(48, &keys).unwrap();
+        assert_eq!(m4, 0, "evicted content no longer attaches");
+        assert_eq!(a.len(h4), 0);
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn retention_lru_evicts_oldest_and_cap_shrink_drains() {
+        let mut a = small_arena(8);
+        a.set_prefix_retention(1);
+        // Two distinct one-block prefixes (17 tokens → cover 16).
+        let pa: Vec<i32> = (0..17).collect();
+        let pb: Vec<i32> = (100..117).collect();
+        let (ka, kb) = (shareable_prefix_keys(&pa, 16), shareable_prefix_keys(&pb, 16));
+        let ha = a.claim(17).unwrap();
+        a.append(ha, 17).unwrap();
+        a.publish_prefix(ha, &ka).unwrap();
+        let hb = a.claim(17).unwrap();
+        a.append(hb, 17).unwrap();
+        a.publish_prefix(hb, &kb).unwrap();
+        a.release(ha);
+        assert_eq!(a.retained_blocks(), 1);
+        // B's release overflows the cap of 1: A (oldest) is evicted.
+        a.release(hb);
+        assert_eq!(a.retained_blocks(), 1);
+        assert_eq!(a.take_retention_evictions().len(), 1);
+        let (h, m) = a.claim_prefixed_detailed(17, &ka).unwrap();
+        assert_eq!(m, 0, "oldest prefix was evicted");
+        a.release(h);
+        let (h, m) = a.claim_prefixed_detailed(17, &kb).unwrap();
+        assert_eq!(m, 1, "newest prefix survived");
+        a.verify().unwrap();
+        a.release(h);
+        // Shrinking the cap to 0 (retention off) drains the LRU.
+        assert_eq!(a.retained_blocks(), 1);
+        a.set_prefix_retention(0);
+        assert_eq!(a.retained_blocks(), 0);
+        assert_eq!(a.take_retention_evictions().len(), 1);
+        assert_eq!(a.blocks_in_use(), 0);
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn slot_window_defers_frees_and_new_claims_never_alias_pinned_blocks() {
+        let mut a = small_arena(4);
+        let h = a.claim(32).unwrap(); // 2 blocks
+        let table = a.block_table(h).unwrap().to_vec();
+        let w = a.pin_window(&table);
+        assert_eq!(a.open_windows(), 1);
+        // Preemption lands while the slot is in flight: the blocks drop
+        // their last reference but must not be recycled yet.
+        let freed_now = a.release_blocks(h);
+        assert!(freed_now.is_empty(), "pinned blocks defer their free");
+        assert_eq!(a.deferred_blocks(), 2);
+        assert!(!a.can_claim(64), "deferred blocks are not allocatable");
+        // Planning the next slot draws only on genuinely free blocks.
+        let h2 = a.claim(32).unwrap();
+        for &b in a.block_table(h2).unwrap() {
+            assert!(!table.contains(&b), "planned slot aliased an in-flight block");
+        }
+        a.verify().unwrap();
+        // Reap: closing the window completes the deferred frees.
+        let freed = a.unpin_window(w);
+        assert_eq!(freed.len(), 2, "window close frees the deferred blocks");
+        assert_eq!((a.deferred_blocks(), a.open_windows()), (0, 0));
+        assert!(a.can_claim(32));
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn overlapping_windows_free_only_after_the_last_unpin() {
+        let mut a = small_arena(2);
+        let h = a.claim(16).unwrap();
+        let t = a.block_table(h).unwrap().to_vec();
+        let w1 = a.pin_window(&t);
+        let w2 = a.pin_window(&t);
+        a.release(h);
+        assert_eq!(a.deferred_blocks(), 1);
+        assert!(a.unpin_window(w1).is_empty(), "second window still pins");
+        assert_eq!(a.deferred_blocks(), 1);
+        a.verify().unwrap();
+        assert_eq!(a.unpin_window(w2), vec![t[0]]);
+        assert_eq!(a.deferred_blocks(), 0);
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn pinned_block_skips_retention_and_frees_at_window_close() {
+        // Pin beats retention: a published block released under an open
+        // window is unindexed and deferred (the content dies with the
+        // release), never parked in the LRU — and the window close
+        // frees it for real.
+        let mut a = small_arena(4);
+        a.set_prefix_retention(4);
+        let prompt: Vec<i32> = (0..17).collect();
+        let keys = shareable_prefix_keys(&prompt, 16);
+        let h = a.claim(17).unwrap();
+        a.append(h, 17).unwrap();
+        a.publish_prefix(h, &keys).unwrap();
+        let table = a.block_table(h).unwrap().to_vec();
+        let w = a.pin_window(&table);
+        a.release(h);
+        assert_eq!(a.retained_blocks(), 0, "pinned blocks never retain");
+        assert_eq!(a.deferred_blocks(), 2);
+        a.verify().unwrap();
+        let freed = a.unpin_window(w);
+        assert_eq!(freed.len(), 2);
+        let (h2, m) = a.claim_prefixed_detailed(17, &keys).unwrap();
+        assert_eq!(m, 0, "deferred content was unindexed at release");
+        assert_eq!(a.len(h2), 0);
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn property_pipelined_windows_never_alias_and_conserve_blocks() {
+        // The PR-7 reconciliation invariant the pipelined executor
+        // rests on: while a planned slot is in flight (its gather
+        // blocks pinned under a reservation window), any interleaving
+        // of accept progress (ensure/append + rollback truncate),
+        // preemption/completion (release), retention churn, and
+        // new-slot planning must (1) never hand a pinned refcount-zero
+        // block to a new owner, and (2) conserve blocks:
+        // free + deferred + retained + distinct-live == num_blocks.
+        check("pipelined slot windows stay exclusive", Config::cases(48), |rng| {
+            let total = 8 + rng.gen_range(24) as usize;
+            let mut a = small_arena(total);
+            if rng.gen_bool(0.5) {
+                a.set_prefix_retention(1 + rng.gen_range(6) as usize);
+            }
+            let bt = a.config().block_tokens;
+            let mut live: Vec<(KvSeqHandle, Vec<PrefixKey>)> = Vec::new();
+            let mut windows: Vec<KvSlotWindow> = Vec::new();
+            for _ in 0..140 {
+                // Blocks that are dead (refcount 0) but pinned by an
+                // in-flight slot — the set no new owner may receive.
+                let pinned_dead: std::collections::HashSet<usize> = (0..total)
+                    .filter(|&b| a.block_refcount(b) == 0 && a.deferred.contains(&b))
+                    .collect();
+                match rng.gen_range(6) {
+                    0 => {
+                        // Admit, sometimes sharing a group prefix.
+                        let group = rng.gen_range(3) as i32;
+                        let plen = 8 * (1 + rng.gen_range(5) as usize);
+                        let prompt: Vec<i32> =
+                            (0..plen as i32).map(|p| group * 10_000 + p).collect();
+                        let keys = shareable_prefix_keys(&prompt, bt);
+                        if a.can_claim_prefixed(plen, &keys) {
+                            let h =
+                                a.claim_prefixed(plen, &keys).map_err(|e| e.to_string())?;
+                            for &b in a.block_table(h).map_err(|e| e.to_string())? {
+                                if pinned_dead.contains(&b) {
+                                    return Err(format!(
+                                        "claim handed out in-flight block {b}"
+                                    ));
+                                }
+                            }
+                            live.push((h, keys));
+                        }
+                    }
+                    1 => {
+                        // Execute: open a slot window over a subset of
+                        // the live sequences' gather tables.
+                        if windows.len() < 2 && !live.is_empty() {
+                            let mut blocks = Vec::new();
+                            for (h, _) in &live {
+                                if rng.gen_bool(0.7) {
+                                    blocks.extend_from_slice(
+                                        a.block_table(*h).map_err(|e| e.to_string())?,
+                                    );
+                                }
+                            }
+                            windows.push(a.pin_window(&blocks));
+                        }
+                    }
+                    2 => {
+                        // Reap: close the oldest window.
+                        if !windows.is_empty() {
+                            a.unpin_window(windows.remove(0));
+                        }
+                    }
+                    3 => {
+                        // Decode/spec progress, sometimes rolling the
+                        // reservation slack back (the rollback seam).
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            let (h, keys) = (live[i].0, live[i].1.clone());
+                            let n = 1 + rng.gen_range(6) as usize;
+                            if a.ensure(h, n).is_ok() {
+                                for &b in a.block_table(h).map_err(|e| e.to_string())? {
+                                    if pinned_dead.contains(&b) {
+                                        return Err(format!(
+                                            "ensure handed out in-flight block {b}"
+                                        ));
+                                    }
+                                }
+                                a.append(h, n).map_err(|e| e.to_string())?;
+                                a.publish_prefix(h, &keys).map_err(|e| e.to_string())?;
+                                if rng.gen_bool(0.3) {
+                                    let l = a.len(h);
+                                    let _ = a.truncate_reservation(h, l);
+                                }
+                            }
+                        }
+                    }
+                    4 => {
+                        // Preemption/completion landing mid-flight.
+                        if !live.is_empty() {
+                            let i = rng.gen_range(live.len() as u64) as usize;
+                            a.release(live.swap_remove(i).0);
+                        }
+                    }
+                    _ => {
+                        // Retention churn (resize under load).
+                        if rng.gen_bool(0.5) {
+                            a.set_prefix_retention(rng.gen_range(6) as usize);
+                        }
+                    }
+                }
+                let live_distinct = (0..total).filter(|&b| a.block_refcount(b) > 0).count();
+                let sum = a.blocks_free()
+                    + a.deferred_blocks()
+                    + a.retained_blocks()
+                    + live_distinct;
+                if sum != total {
+                    return Err(format!(
+                        "conservation broke: {} free + {} deferred + {} retained + \
+                         {live_distinct} live != {total}",
+                        a.blocks_free(),
+                        a.deferred_blocks(),
+                        a.retained_blocks()
+                    ));
+                }
+                a.verify().map_err(|e| e.to_string())?;
+            }
+            for w in windows {
+                a.unpin_window(w);
+            }
+            for (h, _) in live {
+                a.release(h);
+            }
+            a.set_prefix_retention(0);
+            let _ = a.take_retention_evictions();
+            if a.blocks_in_use() != 0 {
+                return Err("drained arena still holds blocks".into());
+            }
+            a.verify().map_err(|e| e.to_string())?;
+            Ok(())
+        });
     }
 
     #[test]

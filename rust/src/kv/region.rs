@@ -53,11 +53,38 @@
 //!   error. Device accounting then uses
 //!   [`KvArenaConfig::quantized_block_bytes`] (≈2× blocks per byte vs
 //!   the fp16 accounting, ≈4× vs fp32).
+//!
+//! **PR 7 — pipeline slot windows + prefix retention, device-side.**
+//! Two arena extensions are mirrored into real storage here:
+//!
+//! * *Slot reservation windows*
+//!   ([`PagedKvStore::begin_slot_window`] /
+//!   [`PagedKvStore::end_slot_window`]): while a pipelined round is in
+//!   flight, the blocks its gather tables reference stay pinned — a
+//!   preemption or completion landing mid-flight defers the free, so
+//!   the storage is decommitted only when the slot is reaped. Planning
+//!   the next slot therefore cannot commit over bytes the in-flight
+//!   slot is still reading.
+//! * *Prefix retention*: refcount-zero retained blocks keep their
+//!   storage committed (the watermark honestly includes the warm
+//!   cache). The arena records which retained blocks it evicts under
+//!   pressure; every store operation that can trigger an eviction
+//!   drains [`KvArena::take_retention_evictions`] and decommits those
+//!   blocks *before* committing any block the same operation may have
+//!   re-allocated — keeping the commit/release pairing exact.
+//!
+//! The dense gather scratch is also double-buffered
+//! ([`PagedKvStore::select_scratch_slot`]): pipeline slot `N + 1`'s
+//! gathers land in the other buffer pair, so they can never alias the
+//! views slot `N`'s execution is still consuming. Depth-1 callers never
+//! select and keep buffer 0 — bit-identical to the single-scratch path.
 
 use std::collections::HashSet;
 
 use crate::error::{DriftError, Result};
-use crate::kv::{EnsureOutcome, KvArena, KvArenaConfig, KvPool, KvSeqHandle, PrefixKey};
+use crate::kv::{
+    EnsureOutcome, KvArena, KvArenaConfig, KvPool, KvSeqHandle, KvSlotWindow, PrefixKey,
+};
 
 /// One contiguous device region carved into arena blocks, with real
 /// storage behind every committed block and a device-bytes watermark.
@@ -82,6 +109,11 @@ pub struct KvRegion {
     /// Per-position: is this position's payload in `qdata` (true) or in
     /// the fp32 fallback `data` (false)? Makes mixed reads exact.
     q_valid: Vec<bool>,
+    /// Cumulative K/V rows dequantized by dense gathers (2 per quantized
+    /// position read — one K row, one V row; always 0 in an fp32
+    /// region). A `Cell` because gathers take `&self`; the region lives
+    /// on one engine thread.
+    dequant_rows: std::cell::Cell<u64>,
 }
 
 impl KvRegion {
@@ -108,6 +140,7 @@ impl KvRegion {
             qdata: if quantized { vec![0; positions * 2 * row] } else { Vec::new() },
             qscales: if quantized { vec![0.0; positions * 2] } else { Vec::new() },
             q_valid: if quantized { vec![false; positions] } else { Vec::new() },
+            dequant_rows: std::cell::Cell::new(0),
             cfg,
         }
     }
@@ -118,6 +151,12 @@ impl KvRegion {
 
     pub fn is_quantized(&self) -> bool {
         self.quantized
+    }
+
+    /// Cumulative K/V rows dense gathers have dequantized (0 in an fp32
+    /// region) — the engine's `kv_dequant_rows` gauge.
+    pub fn dequantized_rows(&self) -> u64 {
+        self.dequant_rows.get()
     }
 
     /// Device bytes one committed block accounts for in this region's
@@ -367,6 +406,7 @@ impl KvRegion {
             let qp = self.qpos(table, p);
             let dq = self.quantized && self.q_valid[qp];
             let (qb, ks, vs) = if dq {
+                self.dequant_rows.set(self.dequant_rows.get() + 2);
                 (qp * 2 * row, self.qscales[qp * 2], self.qscales[qp * 2 + 1])
             } else {
                 (0, 0.0, 0.0)
@@ -499,10 +539,15 @@ pub struct PagedKvStore {
     /// empty in fp32 mode.
     fp32_fallback: HashSet<KvSeqHandle>,
     /// Dense gather scratch reused across decode steps (shared by all
-    /// sequences — the only dense-shaped K/V buffers in the engine, and
-    /// there is exactly one pair of them, not one per sequence).
-    scratch_k: Vec<f32>,
-    scratch_v: Vec<f32>,
+    /// sequences — the only dense-shaped K/V buffers in the engine).
+    /// Double-buffered for the pipelined executor: slot `N + 1`'s
+    /// gathers use the other pair so they never alias the views slot
+    /// `N` is still consuming. Depth-1 callers stay on pair 0.
+    scratch_k: [Vec<f32>; 2],
+    scratch_v: [Vec<f32>; 2],
+    /// Which scratch pair the next gather writes (0 or 1); selected per
+    /// pipeline slot via [`select_scratch_slot`](Self::select_scratch_slot).
+    scratch_sel: usize,
 }
 
 impl PagedKvStore {
@@ -524,13 +569,20 @@ impl PagedKvStore {
             arena,
             region,
             fp32_fallback: HashSet::new(),
-            scratch_k: Vec::new(),
-            scratch_v: Vec::new(),
+            scratch_k: [Vec::new(), Vec::new()],
+            scratch_v: [Vec::new(), Vec::new()],
+            scratch_sel: 0,
         }
     }
 
     pub fn is_quantized(&self) -> bool {
         self.region.is_quantized()
+    }
+
+    /// Cumulative K/V rows dense gathers have dequantized (0 in an fp32
+    /// store) — the engine's `kv_dequant_rows` gauge.
+    pub fn dequantized_rows(&self) -> u64 {
+        self.region.dequantized_rows()
     }
 
     /// Device bytes one committed block accounts for in this store's
@@ -575,6 +627,12 @@ impl PagedKvStore {
         self.arena.stats()
     }
 
+    /// Refcount-zero published blocks held warm (and committed) by
+    /// prefix retention.
+    pub fn retained_blocks(&self) -> usize {
+        self.arena.retained_blocks()
+    }
+
     pub fn can_claim(&self, tokens: usize) -> bool {
         self.arena.can_claim(tokens)
     }
@@ -595,8 +653,22 @@ impl PagedKvStore {
         }
     }
 
+    /// Decommit every retained block the arena just evicted under
+    /// pressure. Must run after any arena call that can evict and
+    /// **before** this operation commits new blocks: an evicted block
+    /// can be re-allocated by the same operation, and the region insists
+    /// on strict release-then-commit pairing. Returns the count.
+    fn decommit_evicted(&mut self) -> usize {
+        let evicted = self.arena.take_retention_evictions();
+        for &b in &evicted {
+            self.region.release_block(b);
+        }
+        evicted.len()
+    }
+
     pub fn claim(&mut self, tokens: usize) -> Result<KvSeqHandle> {
         let h = self.arena.claim(tokens)?;
+        self.decommit_evicted();
         let n = self.arena.block_table(h).map_or(0, |t| t.len());
         self.commit_tail(h, n);
         Ok(h)
@@ -613,6 +685,7 @@ impl PagedKvStore {
     /// starts at the shared token count: its prefill resumes there.
     pub fn claim_prefixed(&mut self, tokens: usize, prefix: &[PrefixKey]) -> Result<KvSeqHandle> {
         let (h, matched) = self.arena.claim_prefixed_detailed(tokens, prefix)?;
+        self.decommit_evicted();
         let n = self.arena.block_table(h).map_or(0, |t| t.len());
         self.commit_tail(h, n - matched);
         Ok(h)
@@ -627,6 +700,7 @@ impl PagedKvStore {
 
     pub fn grow(&mut self, h: KvSeqHandle, additional_tokens: usize) -> Result<usize> {
         let n = self.arena.grow(h, additional_tokens)?;
+        self.decommit_evicted();
         self.commit_tail(h, n);
         Ok(n)
     }
@@ -645,6 +719,7 @@ impl PagedKvStore {
     pub fn ensure_detailed(&mut self, h: KvSeqHandle, n: usize) -> Result<EnsureOutcome> {
         let len = self.arena.len(h);
         let out = self.arena.ensure_detailed(h, n)?;
+        self.decommit_evicted();
         self.commit_tail(h, out.grown);
         let bt = self.config().block_tokens;
         for &(old, new, idx) in &out.cow {
@@ -659,10 +734,47 @@ impl PagedKvStore {
     /// decommit only the region blocks whose **last** reference dropped
     /// — shared blocks survive for their other holders, so the returned
     /// watermark drop is per refcount, not per table entry. Stale
-    /// handles are a no-op (and free 0 bytes).
+    /// handles are a no-op (and free 0 bytes). Blocks parked in the
+    /// retention LRU or deferred behind an open slot window stay
+    /// committed (they free later, under pressure or at window close) —
+    /// but a retained block this release pushed *out* of the LRU does
+    /// decommit here and counts toward the returned bytes.
     pub fn release(&mut self, h: KvSeqHandle) -> usize {
         self.fp32_fallback.remove(&h);
         let freed = self.arena.release_blocks(h);
+        for &b in &freed {
+            self.region.release_block(b);
+        }
+        let evicted = self.decommit_evicted();
+        (freed.len() + evicted) * self.region.block_device_bytes()
+    }
+
+    /// Keep up to `cap` refcount-zero published blocks warm in the
+    /// arena's retention LRU (see [`KvArena::set_prefix_retention`]);
+    /// shrinking the cap decommits whatever falls out.
+    pub fn set_prefix_retention(&mut self, cap: usize) {
+        self.arena.set_prefix_retention(cap);
+        self.decommit_evicted();
+    }
+
+    /// Open a reservation window over every block the given sequences'
+    /// tables currently reference — the store-side pin for one in-flight
+    /// pipeline slot. Until the window closes, those blocks cannot be
+    /// freed, recycled, or re-committed: a preemption landing mid-flight
+    /// defers its decommit to [`end_slot_window`](Self::end_slot_window).
+    pub fn begin_slot_window(&mut self, handles: &[KvSeqHandle]) -> Result<KvSlotWindow> {
+        let mut blocks = Vec::new();
+        for &h in handles {
+            blocks.extend_from_slice(self.arena.block_table(h)?);
+        }
+        Ok(self.arena.pin_window(&blocks))
+    }
+
+    /// Close a slot's reservation window (the reap step) and decommit
+    /// every block whose free was deferred behind it. Returns the device
+    /// bytes freed now.
+    pub fn end_slot_window(&mut self, w: KvSlotWindow) -> usize {
+        let freed = self.arena.unpin_window(w);
         for &b in &freed {
             self.region.release_block(b);
         }
@@ -737,7 +849,8 @@ impl PagedKvStore {
         for &b in &freed {
             self.region.release_block(b);
         }
-        Ok(freed.len() * self.region.block_device_bytes())
+        let evicted = self.decommit_evicted();
+        Ok((freed.len() + evicted) * self.region.block_device_bytes())
     }
 
     /// Copy-on-write safety net under every region write: if the block
@@ -753,6 +866,7 @@ impl PagedKvStore {
         }
         if let Some((old, new)) = self.arena.make_private(h, idx)? {
             let rows = self.arena.len(h).saturating_sub(idx * bt).min(bt);
+            self.decommit_evicted();
             self.region.commit_block(new);
             self.region.copy_block_rows(old, new, rows);
         }
@@ -832,19 +946,28 @@ impl PagedKvStore {
     ) -> Result<(&[f32], &[f32])> {
         let cfg = *self.arena.config();
         let need = cfg.layers * cfg.heads_kv * capacity * cfg.head_dim;
-        if self.scratch_k.len() != need {
-            self.scratch_k = vec![0.0; need];
-            self.scratch_v = vec![0.0; need];
+        let sel = self.scratch_sel;
+        if self.scratch_k[sel].len() != need {
+            self.scratch_k[sel] = vec![0.0; need];
+            self.scratch_v[sel] = vec![0.0; need];
         }
         let table = self.arena.block_table(h)?;
         self.region.gather_dense(
             table,
             written,
             capacity,
-            &mut self.scratch_k,
-            &mut self.scratch_v,
+            &mut self.scratch_k[sel],
+            &mut self.scratch_v[sel],
         )?;
-        Ok((&self.scratch_k, &self.scratch_v))
+        Ok((&self.scratch_k[sel], &self.scratch_v[sel]))
+    }
+
+    /// Route subsequent gathers to scratch pair `parity & 1` — one pair
+    /// per in-flight pipeline slot, so slot `N + 1`'s gathers never
+    /// overwrite the dense views slot `N` is still consuming. The
+    /// depth-1 loop never calls this and stays on pair 0.
+    pub fn select_scratch_slot(&mut self, parity: usize) {
+        self.scratch_sel = parity & 1;
     }
 
     /// Structural check for tests: arena invariants hold and the region's
@@ -1245,6 +1368,143 @@ mod tests {
         assert_eq!(s.release(h2), 3 * bb, "last reference frees the shared blocks");
         assert_eq!(s.device_bytes_in_use(), 0);
         s.verify().unwrap();
+    }
+
+    #[test]
+    fn retention_keeps_rows_committed_and_pressure_decommits_them() {
+        // Store-side satellite contract: a retained prefix keeps its
+        // *storage* (watermark honest, rows intact for the next wave);
+        // pressure eviction decommits and scrubs for real.
+        let mut s = PagedKvStore::new(cfg(4));
+        s.set_prefix_retention(2);
+        let bb = s.config().block_bytes();
+        let row = s.config().layers * s.config().heads_kv * s.config().head_dim;
+        let dh = s.config().head_dim;
+        let cap = 16;
+        let prompt: Vec<i32> = (0..8).collect(); // 2 blocks, cover 7
+        let keys = crate::kv::shareable_prefix_keys(&prompt, s.config().block_tokens);
+        let h1 = s.claim(8).unwrap();
+        for p in 0..8 {
+            s.write_token(h1, p, &row_vals(p, 1, row), &row_vals(p, 2, row)).unwrap();
+        }
+        s.append(h1, 8).unwrap();
+        s.publish_prefix(h1, &keys).unwrap();
+        assert_eq!(s.release(h1), 0, "retained blocks keep their storage");
+        assert_eq!(s.device_bytes_in_use(), 2 * bb, "watermark includes the warm cache");
+        s.verify().unwrap();
+
+        // Second wave: attaches the retained blocks and reads the
+        // publisher's rows back — no re-prefill of the covered positions.
+        let h2 = s.claim_prefixed(8, &keys).unwrap();
+        assert_eq!(s.len(h2), 7);
+        assert_eq!(s.device_bytes_in_use(), 2 * bb, "revival commits nothing new");
+        {
+            let (k, _v) = s.gather_dense_scratch(h2, cap).unwrap();
+            for p in 0..7 {
+                assert_eq!(k[p * dh], row_vals(p, 1, row)[0], "warm rows survived the gap");
+            }
+        }
+        s.release(h2);
+        assert_eq!(s.device_bytes_in_use(), 2 * bb, "warm again after the wave");
+
+        // Pressure: a 4-block claim needs the retained pair; the store
+        // decommits exactly the evicted blocks before recommitting them,
+        // and the new claimant starts from scrubbed storage.
+        let h3 = s.claim(16).unwrap();
+        assert_eq!(s.retained_blocks(), 0);
+        assert_eq!(s.device_bytes_in_use(), 4 * bb);
+        {
+            let (k, v) = s.gather_dense_scratch_upto(h3, 16, cap).unwrap();
+            assert!(k.iter().all(|&x| x == 0.0), "evicted K rows scrubbed");
+            assert!(v.iter().all(|&x| x == 0.0), "evicted V rows scrubbed");
+        }
+        s.verify().unwrap();
+        assert_eq!(s.release(h3), 4 * bb, "nothing published: no retention");
+        assert_eq!(s.device_bytes_in_use(), 0);
+
+        // Retention off decommits whatever is still warm.
+        s.set_prefix_retention(0);
+        assert_eq!(s.device_bytes_in_use(), 0);
+        s.verify().unwrap();
+    }
+
+    #[test]
+    fn slot_window_defers_decommit_until_reap() {
+        // The pipelined executor's no-alias guarantee at the storage
+        // level: blocks a slot window pins stay committed (and readable)
+        // through a mid-flight release, the next slot's claims commit
+        // elsewhere, and the reap decommits exactly the deferred bytes.
+        let mut s = PagedKvStore::new(cfg(4));
+        let bb = s.config().block_bytes();
+        let row = s.config().layers * s.config().heads_kv * s.config().head_dim;
+        let dh = s.config().head_dim;
+        let cap = 16;
+        let h = s.claim(8).unwrap(); // 2 blocks
+        for p in 0..8 {
+            s.write_token(h, p, &row_vals(p, 1, row), &row_vals(p, 2, row)).unwrap();
+        }
+        s.append(h, 8).unwrap();
+        let table = s.block_table(h).unwrap().to_vec();
+        let w = s.begin_slot_window(&[h]).unwrap();
+
+        // Completion lands while the slot is in flight: zero bytes free
+        // now, the watermark holds, and the pinned rows stay readable
+        // through the raw table (exactly what the in-flight gather does).
+        assert_eq!(s.release(h), 0, "pinned blocks defer their decommit");
+        assert_eq!(s.device_bytes_in_use(), 2 * bb);
+        s.verify().unwrap();
+        let need = s.config().layers * s.config().heads_kv * cap * dh;
+        let mut k = vec![0.0; need];
+        let mut v = vec![0.0; need];
+        s.region.gather_dense(&table, 8, cap, &mut k, &mut v).unwrap();
+        assert_eq!(k[3 * dh], row_vals(3, 1, row)[0], "in-flight rows still intact");
+
+        // The next slot's planning allocates around the pinned blocks.
+        let h2 = s.claim(8).unwrap();
+        for &b in s.block_table(h2).unwrap() {
+            assert!(!table.contains(&b), "planned slot committed over an in-flight block");
+        }
+        assert_eq!(s.device_bytes_in_use(), 4 * bb);
+        s.verify().unwrap();
+
+        // Reap: the window close frees the deferred bytes and scrubs.
+        assert_eq!(s.end_slot_window(w), 2 * bb);
+        assert_eq!(s.device_bytes_in_use(), 2 * bb);
+        s.verify().unwrap();
+        s.release(h2);
+        assert_eq!(s.device_bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn double_buffered_scratch_isolates_pipeline_slots() {
+        // Slot N+1's gather must not clobber the dense views slot N is
+        // still consuming: with distinct scratch parities the first
+        // slot's rows survive the second slot's gather verbatim.
+        let mut s = PagedKvStore::new(cfg(4));
+        let row = s.config().layers * s.config().heads_kv * s.config().head_dim;
+        let dh = s.config().head_dim;
+        let cap = 8;
+        let ha = s.claim(2).unwrap();
+        s.write_token(ha, 0, &row_vals(0, 1, row), &row_vals(0, 2, row)).unwrap();
+        s.append(ha, 1).unwrap();
+        let hb = s.claim(2).unwrap();
+        s.write_token(hb, 0, &row_vals(0, 7, row), &row_vals(0, 8, row)).unwrap();
+        s.append(hb, 1).unwrap();
+
+        s.select_scratch_slot(0);
+        let ka0 = {
+            let (k, _v) = s.gather_dense_scratch(ha, cap).unwrap();
+            k.to_vec()
+        };
+        s.select_scratch_slot(1);
+        let _ = s.gather_dense_scratch(hb, cap).unwrap();
+        // Re-read pair 0 without re-gathering: untouched by slot 1.
+        s.select_scratch_slot(0);
+        assert_eq!(&s.scratch_k[0], &ka0, "slot 1's gather aliased slot 0's scratch");
+        assert_eq!(ka0[0], row_vals(0, 1, row)[0]);
+        // And the same parity does get overwritten (it is a scratch).
+        let (k, _v) = s.gather_dense_scratch(hb, cap).unwrap();
+        assert_eq!(k[0], row_vals(0, 7, row)[0]);
     }
 
     #[test]

@@ -57,6 +57,18 @@ pub struct Metrics {
     /// Gauge: cumulative copy-on-write block copies the store has
     /// performed (a sequence wrote into a block it shared).
     pub kv_cow_copies: AtomicU64,
+    /// Gauge: rows the quantized KV region dequantized in-gather
+    /// (int8 serving; stays 0 for an fp32 store) — the live signal the
+    /// quantized-serving e2e asserts alongside the sharing gauges.
+    pub kv_dequant_rows: AtomicU64,
+    /// Gauge: configured pipeline depth (1 = the serial round loop).
+    pub pipeline_depth: AtomicU64,
+    /// Pipeline slots whose *plan* stage ran while the previous slot was
+    /// still in flight — the overlap the pipelined executor exists to
+    /// create. Structurally 0 at depth 1 (the serial loop never plans
+    /// ahead), so a nonzero value is proof the staged path actually
+    /// overlapped rather than degenerating to serial.
+    pub pipeline_planned_ahead_slots: AtomicU64,
     /// Speculative decode: draft tokens proposed across all rounds.
     pub spec_proposed_tokens: AtomicU64,
     /// Speculative decode: draft tokens accepted by the verify pass. The
@@ -95,6 +107,9 @@ impl Default for Metrics {
             kv_prefix_shared_tokens: AtomicU64::new(0),
             kv_blocks_shared: AtomicU64::new(0),
             kv_cow_copies: AtomicU64::new(0),
+            kv_dequant_rows: AtomicU64::new(0),
+            pipeline_depth: AtomicU64::new(1),
+            pipeline_planned_ahead_slots: AtomicU64::new(0),
             spec_proposed_tokens: AtomicU64::new(0),
             spec_accepted_tokens: AtomicU64::new(0),
             // 100 µs .. ~100 s exponential buckets.
@@ -186,6 +201,23 @@ impl Metrics {
         self.prefill_chunk_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
     }
 
+    /// Update the in-gather dequantization gauge (engine: once per
+    /// round, from [`crate::kv::PagedKvStore::dequantized_rows`]).
+    pub fn set_kv_dequant(&self, rows: u64) {
+        self.kv_dequant_rows.store(rows, Ordering::Relaxed);
+    }
+
+    /// Record the configured pipeline depth (engine: once at startup).
+    pub fn set_pipeline_depth(&self, depth: u64) {
+        self.pipeline_depth.store(depth, Ordering::Relaxed);
+    }
+
+    /// Record one plan stage that ran ahead of an in-flight slot. The
+    /// serial loop never calls this: at depth 1 the counter stays 0.
+    pub fn record_planned_ahead(&self) {
+        self.pipeline_planned_ahead_slots.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one speculative draft/verify step: proposals offered and
     /// proposals the verify pass accepted.
     pub fn record_spec(&self, proposed: u64, accepted: u64) {
@@ -259,7 +291,8 @@ impl Metrics {
              speculative: {} proposed, {} accepted ({}) | \
              preemptions: {} | re-prefill tokens: {} | kv device bytes: {} in use, {} peak, \
              {} freed by preemption\n\
-             prefix sharing: {} tokens attached | {} blocks shared | {} cow copies",
+             prefix sharing: {} tokens attached | {} blocks shared | {} cow copies\n\
+             pipeline: depth {}, {} slots planned ahead | kv dequant rows: {}",
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.prefill_tokens.load(Ordering::Relaxed),
@@ -290,6 +323,9 @@ impl Metrics {
             self.kv_prefix_shared_tokens.load(Ordering::Relaxed),
             self.kv_blocks_shared.load(Ordering::Relaxed),
             self.kv_cow_copies.load(Ordering::Relaxed),
+            self.pipeline_depth.load(Ordering::Relaxed),
+            self.pipeline_planned_ahead_slots.load(Ordering::Relaxed),
+            self.kv_dequant_rows.load(Ordering::Relaxed),
         )
     }
 }
@@ -416,6 +452,27 @@ mod tests {
         assert_eq!(m.spec_accepted_tokens.load(Ordering::Relaxed), 4);
         assert_eq!(m.spec_acceptance(), Some(0.5));
         assert!(m.report().contains("speculative: 8 proposed, 4 accepted (50%)"));
+    }
+
+    #[test]
+    fn pipeline_and_dequant_gauges_tracked() {
+        let m = Metrics::default();
+        // Defaults: the serial loop (depth 1), nothing planned ahead, no
+        // quantized gathers — the state every pre-pipeline engine run
+        // reports, so existing metric expectations are untouched.
+        assert_eq!(m.pipeline_depth.load(Ordering::Relaxed), 1);
+        assert_eq!(m.pipeline_planned_ahead_slots.load(Ordering::Relaxed), 0);
+        assert_eq!(m.kv_dequant_rows.load(Ordering::Relaxed), 0);
+        assert!(m.report().contains("pipeline: depth 1, 0 slots planned ahead"));
+        m.set_pipeline_depth(2);
+        m.record_planned_ahead();
+        m.record_planned_ahead();
+        m.record_planned_ahead();
+        m.set_kv_dequant(4096);
+        assert_eq!(m.pipeline_depth.load(Ordering::Relaxed), 2);
+        assert_eq!(m.pipeline_planned_ahead_slots.load(Ordering::Relaxed), 3);
+        assert!(m.report().contains("pipeline: depth 2, 3 slots planned ahead"));
+        assert!(m.report().contains("kv dequant rows: 4096"));
     }
 
     #[test]

@@ -33,5 +33,5 @@ pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use scheduler::{
     default_prefill_chunk_tokens, PrefillChunk, Round, Scheduler, SchedulerConfig, SeqState,
 };
-pub use server::{ServerStats, ServingEngine, SpecConfig};
+pub use server::{EngineConfig, ServerStats, ServingEngine, SpecConfig};
 pub use metrics::Metrics;

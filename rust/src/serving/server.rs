@@ -53,9 +53,12 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::error::{DriftError, Result};
-use crate::kv::{shareable_prefix_keys, KvArenaConfig, KvSeqHandle, PagedKvStore, PrefixKey};
+use crate::kv::{
+    shareable_prefix_keys, KvArenaConfig, KvSeqHandle, KvSlotWindow, PagedKvStore, PrefixKey,
+};
 use crate::runtime::tinylm::{
-    PackedPrefillChunk, PagedRoundStep, SpecStepArgs, TinyLmRuntime,
+    PackedPrefillChunk, PagedRoundStep, PrefillChunkOutcome, RoundStepOutcome, SpecStepArgs,
+    SpecStepOutcome, TinyLmManifest, TinyLmRuntime,
 };
 use crate::runtime::Runtime;
 use crate::serving::admission::AdmissionPolicy;
@@ -95,6 +98,51 @@ pub struct SpecConfig {
     pub draft_artifacts_dir: String,
     /// Draft proposals per sequence per round (clamped to ≥ 1).
     pub draft_k: usize,
+}
+
+/// Full engine configuration: the scheduler policy knobs plus the
+/// engine-level toggles PR 7 plumbs through one front door. The legacy
+/// constructors ([`ServingEngine::start`] and friends) build a depth-1,
+/// fp32, no-retention config — byte-identical to the engine they
+/// replaced — while [`ServingEngine::start_with_config`] exposes the
+/// pipelined executor, int8 KV blocks, and prefix-cache retention.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub sched: SchedulerConfig,
+    pub policy: AdmissionPolicy,
+    pub spec: Option<SpecConfig>,
+    /// Pipeline slots. `1` runs the classic serial round loop (token
+    /// streams and metrics bit-identical to every prior PR). `≥ 2` runs
+    /// the staged executor: while slot N's round is in flight, the
+    /// scheduler plans slot N+1 — admission, preemption, and KV growth
+    /// run ahead against *projected* state and are reconciled when slot
+    /// N's outcomes land. Depths above 2 behave exactly like 2: decode
+    /// is token-serial (slot N+1's inputs are slot N's argmaxes), so at
+    /// most one slot can ever be in flight ahead of the plan.
+    pub pipeline_depth: usize,
+    /// Store K/V rows int8-quantized (per-row absmax scales,
+    /// [`PagedKvStore::new_quantized`]): ≈2× the sequences per device
+    /// byte, rows dequantized in-gather.
+    pub quantized_kv: bool,
+    /// Keep up to this many refcount-0 *published* prefix blocks
+    /// committed (LRU, evicted only under arena pressure) so identical
+    /// prompt waves re-attach after the first wave fully completes.
+    /// `0` — the default — frees them immediately, the pre-PR-7 behavior.
+    pub prefix_retain_blocks: usize,
+}
+
+impl EngineConfig {
+    /// Pipelined defaults: depth 2, fp32 KV, no retention.
+    pub fn new(sched: SchedulerConfig) -> Self {
+        EngineConfig {
+            sched,
+            policy: AdmissionPolicy::default(),
+            spec: None,
+            pipeline_depth: 2,
+            quantized_kv: false,
+            prefix_retain_blocks: 0,
+        }
+    }
 }
 
 /// Per-sequence runtime state the scheduler doesn't own: the pending
@@ -234,6 +282,22 @@ impl ServingEngine {
         policy: AdmissionPolicy,
         spec: Option<SpecConfig>,
     ) -> Result<ServingEngine> {
+        // The legacy entry points predate the pipelined executor: they
+        // run depth 1 — the serial loop, untouched — so every caller
+        // that existed before `EngineConfig` keeps bit-identical
+        // behavior without opting into anything.
+        let mut cfg = EngineConfig::new(sched_cfg);
+        cfg.policy = policy;
+        cfg.spec = spec;
+        cfg.pipeline_depth = 1;
+        Self::start_with_config(artifacts_dir, cfg)
+    }
+
+    /// Start the engine from a full [`EngineConfig`] — the one front
+    /// door for the pipelined executor (`pipeline_depth ≥ 2`), int8 KV
+    /// blocks (`quantized_kv`), and prefix-cache retention
+    /// (`prefix_retain_blocks`).
+    pub fn start_with_config(artifacts_dir: &str, cfg: EngineConfig) -> Result<ServingEngine> {
         let metrics = Arc::new(Metrics::default());
         let m2 = Arc::clone(&metrics);
         let (tx, rx) = channel();
@@ -246,7 +310,7 @@ impl ServingEngine {
                 // the whole runtime — target and draft alike.
                 let loaded = Runtime::cpu().and_then(|rt| {
                     let target = TinyLmRuntime::load(&rt, &dir)?;
-                    let draft = match &spec {
+                    let draft = match &cfg.spec {
                         Some(s) => Some((
                             TinyLmRuntime::load(&rt, &s.draft_artifacts_dir)?,
                             s.draft_k.max(1),
@@ -265,7 +329,7 @@ impl ServingEngine {
                         return;
                     }
                 };
-                worker_loop(model, draft, sched_cfg, policy, rx, m2)
+                worker_loop(model, draft, cfg, rx, m2)
             })
             .map_err(|e| DriftError::Serving(format!("spawn worker: {e}")))?;
         ready_rx
@@ -311,38 +375,71 @@ impl Drop for ServingEngine {
     }
 }
 
+/// Target-store construction shared by both worker loops.
+///
+/// Default arena: `max_active` full-capacity sequences (per-sequence
+/// reservations are block-rounded, so size in blocks, not tokens) —
+/// generous, so even worst-case growth (every sequence hitting its
+/// `cache_capacity` ceiling) stays preemption-free and the arena is a
+/// safety net. `kv_arena_blocks` fixes the budget instead: KV becomes
+/// the contended resource and the preemption path takes over. The store
+/// backs every block with real storage in one contiguous region —
+/// claims commit bytes, evictions scrub and release them. The PR-7
+/// engine knobs land here: `quantized_kv` swaps in the int8 region and
+/// `prefix_retain_blocks` arms the published-prefix LRU.
+fn build_target_store(m: &TinyLmManifest, cfg: &EngineConfig) -> PagedKvStore {
+    let arena = KvArenaConfig {
+        layers: m.layers,
+        heads_kv: m.heads_kv,
+        head_dim: m.head_dim,
+        block_tokens: KV_BLOCK_TOKENS,
+        num_blocks: cfg.sched.kv_arena_blocks.unwrap_or_else(|| {
+            cfg.sched.max_active.max(1)
+                * crate::util::div_ceil(m.cache_capacity.max(1), KV_BLOCK_TOKENS)
+        }),
+    };
+    let mut store = if cfg.quantized_kv {
+        PagedKvStore::new_quantized(arena)
+    } else {
+        PagedKvStore::new(arena)
+    };
+    if cfg.prefix_retain_blocks > 0 {
+        store.set_prefix_retention(cfg.prefix_retain_blocks);
+    }
+    store
+}
+
 fn worker_loop(
     model: TinyLmRuntime,
     draft: Option<(TinyLmRuntime, usize)>,
-    sched_cfg: SchedulerConfig,
-    policy: AdmissionPolicy,
+    cfg: EngineConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
 ) {
+    metrics.set_pipeline_depth(cfg.pipeline_depth.max(1) as u64);
+    if cfg.pipeline_depth >= 2 {
+        worker_loop_pipelined(model, draft, cfg, rx, metrics)
+    } else {
+        worker_loop_serial(model, draft, cfg, rx, metrics)
+    }
+}
+
+fn worker_loop_serial(
+    model: TinyLmRuntime,
+    draft: Option<(TinyLmRuntime, usize)>,
+    cfg: EngineConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) {
+    let sched_cfg = cfg.sched;
+    let policy = cfg.policy;
     let mut sched = Scheduler::new(sched_cfg);
     let (draft_rt, draft_k) = match draft {
         Some((d, k)) => (Some(d), k),
         None => (None, 0),
     };
-    // Default arena: `max_active` full-capacity sequences (per-sequence
-    // reservations are block-rounded, so size in blocks, not tokens) —
-    // generous, so even worst-case growth (every sequence hitting its
-    // `cache_capacity` ceiling) stays preemption-free and the arena is a
-    // safety net. `kv_arena_blocks` fixes the budget instead: KV becomes
-    // the contended resource and the preemption path below takes over.
-    // The store backs every block with real storage in one contiguous
-    // region — claims commit bytes, evictions scrub and release them.
     let m = &model.manifest;
-    let mut store = PagedKvStore::new(KvArenaConfig {
-        layers: m.layers,
-        heads_kv: m.heads_kv,
-        head_dim: m.head_dim,
-        block_tokens: KV_BLOCK_TOKENS,
-        num_blocks: sched_cfg.kv_arena_blocks.unwrap_or_else(|| {
-            sched_cfg.max_active.max(1)
-                * crate::util::div_ceil(m.cache_capacity.max(1), KV_BLOCK_TOKENS)
-        }),
-    });
+    let mut store = build_target_store(m, &cfg);
     // Draft KV store (speculative decoding): worst-case sized for
     // `max_active` full-capacity draft sequences, so draft growth can
     // never be the thing that preempts — the *target* store is the
@@ -931,6 +1028,668 @@ fn worker_loop(
             store.peak_device_bytes_in_use() as u64,
         );
         metrics.set_kv_sharing(store.arena().shared_blocks() as u64, store.arena().cow_copies());
+        metrics.set_kv_dequant(store.dequantized_rows());
+    }
+}
+
+/// One in-flight pipeline slot: the outcomes of a dispatched round,
+/// parked until the next iteration's reap stage applies them. Holding
+/// the outcomes (instead of applying them at dispatch) is what lets the
+/// plan stage run a full admission/preemption/growth pass for slot N+1
+/// before slot N's results touch scheduler state — the explicit
+/// promise-queue form of plan/execute overlap. `window` pins every
+/// block the slot's steps gather through
+/// ([`PagedKvStore::begin_slot_window`]): a plan-stage eviction or
+/// release of a member defers the actual free until the reap closes the
+/// window, so slot N+1's claims can never alias storage slot N still
+/// addresses.
+struct InflightSlot {
+    window: Option<KvSlotWindow>,
+    /// Executed kernel batch (plain decode steps + speculative steps).
+    batch: usize,
+    /// Tokens emitted when the slot was bound (pending-token emissions);
+    /// speculative acceptance lands at reap and is added there.
+    emitted: usize,
+    decode: Vec<(RequestId, Result<RoundStepOutcome>)>,
+    spec: Vec<(RequestId, Result<(SpecStepOutcome, f64)>)>,
+    prefill: Vec<(RequestId, PackedPrefillChunk, Result<PrefillChunkOutcome>)>,
+}
+
+/// CI thread-stress knob: a deterministic per-stage delay (microseconds,
+/// parsed once from `MLDRIFT_SLOT_JITTER_US`) inserted between the
+/// pipelined loop's plan/reap/bind stages, widening the window in which
+/// cross-thread request arrivals interleave with in-flight slots.
+fn slot_jitter_us() -> u64 {
+    std::env::var("MLDRIFT_SLOT_JITTER_US").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// The pipelined (depth ≥ 2) worker loop: a staged slot queue over the
+/// same policy code the serial loop runs.
+///
+/// Each iteration runs three stages against at most one in-flight slot:
+///
+/// 1. **Plan** slot N+1 while slot N is in flight: admission, the
+///    projected round, and `ensure_round_capacity` (growth + preemption)
+///    all run against *speculated* state — slot N's accepted tokens and
+///    prefill progress have not landed yet, so the plan reserves a
+///    conservative superset of what the bind will need.
+/// 2. **Reap** slot N: apply its outcomes. Every application is
+///    if-let-guarded, because the plan stage may have preempted a slot
+///    member after its round was dispatched — the victim's runtime and
+///    handle are gone, its outcome is dropped, and re-prefill recomputes
+///    the lost pending token (recompute semantics, the same contract as
+///    serial eviction). Closing the slot's reservation window here
+///    releases the frees the window deferred.
+/// 3. **Bind + execute** slot N+1: recompute the round from the now
+///    authoritative scheduler state (the reconciliation step — the plan
+///    was speculative, the bind is truth), re-run the capacity pass with
+///    actual speculative widths, advance emission state exactly like the
+///    serial loop, flip the double-buffered gather scratch
+///    ([`PagedKvStore::select_scratch_slot`]) so this slot's dense
+///    inputs never alias the previous slot's, open the reservation
+///    window, and dispatch the runtime calls.
+///
+/// Decode is token-serial — slot N+1's decode inputs are slot N's
+/// argmaxes — so at most one slot can be in flight ahead of the plan:
+/// depths above 2 are structurally identical to depth 2 (see
+/// DESIGN.md §pipelined executor and the matching sim sweep).
+fn worker_loop_pipelined(
+    model: TinyLmRuntime,
+    draft: Option<(TinyLmRuntime, usize)>,
+    cfg: EngineConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+) {
+    let sched_cfg = cfg.sched;
+    let policy = cfg.policy;
+    let jitter_us = slot_jitter_us();
+    let jitter = |_stage: &str| {
+        if jitter_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(jitter_us));
+        }
+    };
+    let mut sched = Scheduler::new(sched_cfg);
+    let (draft_rt, draft_k) = match draft {
+        Some((d, k)) => (Some(d), k),
+        None => (None, 0),
+    };
+    let m = &model.manifest;
+    let mut store = build_target_store(m, &cfg);
+    let mut draft_store: Option<PagedKvStore> = draft_rt.as_ref().map(|d| {
+        let dm = &d.manifest;
+        PagedKvStore::new(KvArenaConfig {
+            layers: dm.layers,
+            heads_kv: dm.heads_kv,
+            head_dim: dm.head_dim,
+            block_tokens: KV_BLOCK_TOKENS,
+            num_blocks: sched_cfg.max_active.max(1)
+                * crate::util::div_ceil(dm.cache_capacity.max(1), KV_BLOCK_TOKENS),
+        })
+    });
+    let draft_seq_cap = draft_rt.as_ref().map_or(0, |d| d.manifest.cache_capacity);
+    let mut draft_handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
+    let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
+    let mut handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
+    let mut replies: HashMap<RequestId, PendingReply> = HashMap::new();
+    let mut prefix_keys: HashMap<RequestId, Vec<PrefixKey>> = HashMap::new();
+    let mut shutdown = false;
+    let mut inflight: Option<InflightSlot> = None;
+    let mut slot_parity: usize = 0;
+
+    while !shutdown || !sched.is_idle() || inflight.is_some() {
+        // ---- drain incoming requests ------------------------------------
+        // Identical to the serial loop, except the engine only blocks
+        // when there is also no slot in flight (a parked slot's outcomes
+        // must be reaped even if the queue is empty).
+        loop {
+            let msg = if sched.is_idle() && inflight.is_none() && !shutdown {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            };
+            match msg {
+                Msg::Request(req, reply) => {
+                    let tokens = req.prompt.len() + req.max_new_tokens;
+                    let cap = model.manifest.cache_capacity.min(store.config().total_tokens());
+                    if tokens > cap {
+                        let msg = format!(
+                            "prompt + max_new_tokens = {tokens} exceeds per-sequence capacity {cap}"
+                        );
+                        crate::log_error!("request {} rejected: {msg}", req.id);
+                        let _ = reply.send(rejection(&req, msg));
+                        continue;
+                    }
+                    if replies.contains_key(&req.id) || handles.contains_key(&req.id) {
+                        let msg = format!("request id {} is already in flight", req.id);
+                        crate::log_error!("request rejected: {msg}");
+                        let _ = reply.send(rejection(&req, msg));
+                        continue;
+                    }
+                    if sched_cfg.share_prefix_kv {
+                        prefix_keys
+                            .insert(req.id, shareable_prefix_keys(&req.prompt, KV_BLOCK_TOKENS));
+                    }
+                    replies.insert(req.id, PendingReply::new(reply));
+                    sched.submit(req);
+                }
+                Msg::Shutdown => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        if sched.is_idle() && inflight.is_none() {
+            continue;
+        }
+
+        // ---- PLAN slot N+1 (ahead of slot N's reap) ---------------------
+        // Admission and the capacity/preemption pass run now, against
+        // scheduler state as of slot N's *bind* — its spec acceptance
+        // and prefill progress are still in flight, so the projection
+        // over-estimates remaining budgets and re-plans unfinished
+        // chunks. Both errors are conservative (extra reserved rows,
+        // never missing ones); the bind stage reconciles.
+        let (inflight_seqs, inflight_tokens) = sched.inflight_gen();
+        metrics.set_inflight_gen(inflight_seqs, inflight_tokens);
+        let mean_gen = metrics.mean_gen_tokens();
+        let mut newly_admitted: Vec<RequestId> = Vec::new();
+        sched.admit_where(|req, ctx_tokens| {
+            let keys: &[PrefixKey] = prefix_keys.get(&req.id).map_or(&[], |k| k.as_slice());
+            match policy.admit_prefixed(&mut store, req, ctx_tokens, mean_gen, keys) {
+                Some(h) => {
+                    if let Some(ds) = draft_store.as_mut() {
+                        if req.prompt.len() + req.max_new_tokens <= draft_seq_cap {
+                            match ds.claim(ctx_tokens) {
+                                Ok(dh) => {
+                                    draft_handles.insert(req.id, dh);
+                                }
+                                Err(_) => {
+                                    store.release(h);
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                    handles.insert(req.id, h);
+                    newly_admitted.push(req.id);
+                    true
+                }
+                None => false,
+            }
+        });
+        for id in newly_admitted {
+            let skip = store.len(handles[&id]);
+            if skip > 0 {
+                metrics.record_prefix_attach(skip);
+                sched.seq_mut(id).expect("admitted above").prefill_progress = skip;
+            }
+        }
+        let projected = sched.next_round();
+        let mut proj_needs: Vec<(RequestId, usize)> = projected
+            .decode_batch
+            .iter()
+            .copied()
+            .filter_map(|id| {
+                let seq = sched.seq(id).expect("scheduled seq exists");
+                let remaining =
+                    seq.request.max_new_tokens.saturating_sub(seq.generated.len() + 1);
+                if remaining == 0 {
+                    return None;
+                }
+                let k_eff = if draft_rt.is_some() && draft_handles.contains_key(&id) {
+                    draft_k.min(remaining)
+                } else {
+                    0
+                };
+                Some((id, k_eff + 1))
+            })
+            .collect();
+        proj_needs.extend(projected.prefills.iter().filter(|c| c.len > 0).map(|c| (c.id, c.len)));
+        // Preemption runs *ahead*: a victim chosen here may be a member
+        // of the in-flight slot. Its blocks stay pinned by the slot
+        // window (deferred free — no aliasing), its outcome is dropped
+        // at reap, and re-prefill recomputes everything it loses.
+        let _ = sched.ensure_round_capacity(
+            &mut store,
+            &mut handles,
+            &proj_needs,
+            |victim, bill, bytes_freed| {
+                if let Some(srt) = runtimes.remove(&victim) {
+                    replies.insert(victim, srt.park());
+                }
+                let mut draft_freed = 0;
+                if let Some(ds) = draft_store.as_mut() {
+                    if let Some(dh) = draft_handles.remove(&victim) {
+                        draft_freed = ds.release(dh);
+                    }
+                }
+                metrics.record_preemption(bill, bytes_freed);
+                crate::log_warn!(
+                    "kv region exhausted: preempted request {victim} (re-prefill {bill} tokens, \
+                     {bytes_freed} device bytes released, {draft_freed} draft bytes)"
+                );
+            },
+        );
+        if inflight.is_some() {
+            metrics.record_planned_ahead();
+        }
+        jitter("plan");
+
+        // ---- REAP slot N ------------------------------------------------
+        if let Some(slot) = inflight.take() {
+            let mut round_tokens = slot.emitted;
+            for (id, outcome) in slot.decode {
+                match outcome {
+                    Ok(out) => {
+                        // A member the plan stage preempted after this
+                        // round was dispatched has no runtime (parked)
+                        // and no live handle — drop its outcome;
+                        // re-prefill reproduces the pending token.
+                        if let Some(srt) = runtimes.get_mut(&id) {
+                            srt.decode_s += out.step_s;
+                            metrics.record_decode_step(out.step_s);
+                            srt.next_token = argmax(&out.logits) as i32;
+                            if let Some(&h) = handles.get(&id) {
+                                if let Err(e) = store.append(h, 1) {
+                                    crate::log_error!("kv store append for request {id}: {e}");
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        crate::log_error!("decode failed for request {id}: {e}");
+                        if let Some(srt) = runtimes.get_mut(&id) {
+                            srt.error.get_or_insert(format!("decode failed mid-generation: {e}"));
+                        }
+                        if let Some(seq) = sched.seq_mut(id) {
+                            seq.request.max_new_tokens = seq.generated.len();
+                        }
+                    }
+                }
+            }
+            for (id, outcome) in slot.spec {
+                match outcome {
+                    Ok((out, step_s)) => {
+                        if let Some(srt) = runtimes.get_mut(&id) {
+                            srt.decode_s += step_s;
+                            metrics.record_decode_step(step_s);
+                            metrics.record_spec(
+                                out.proposed as u64,
+                                out.accepted_tokens.len() as u64,
+                            );
+                            srt.next_token = out.next_token;
+                            if let Some(seq) = sched.seq_mut(id) {
+                                for &tok in &out.accepted_tokens {
+                                    seq.generated.push(tok);
+                                    seq.pos += 1;
+                                }
+                                round_tokens += out.accepted_tokens.len();
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        crate::log_error!("speculative decode failed for request {id}: {e}");
+                        if let Some(srt) = runtimes.get_mut(&id) {
+                            srt.error.get_or_insert(format!("decode failed mid-generation: {e}"));
+                        }
+                        if let Some(seq) = sched.seq_mut(id) {
+                            seq.request.max_new_tokens = seq.generated.len();
+                        }
+                    }
+                }
+            }
+            for (id, chunk, outcome) in slot.prefill {
+                match outcome {
+                    Ok(out) => {
+                        metrics.record_prefill_chunk(chunk.tokens.len());
+                        let arrival = match sched.seq_mut(id) {
+                            Some(seq) => {
+                                debug_assert_eq!(
+                                    chunk.start, seq.prefill_progress,
+                                    "chunk off its progress"
+                                );
+                                seq.prefill_progress += chunk.tokens.len();
+                                if chunk.last {
+                                    seq.prefill_done = true;
+                                }
+                                seq.request.arrival
+                            }
+                            // Preempted while its chunk was in flight:
+                            // the deposited rows went with the released
+                            // blocks; re-admission restarts the prefill.
+                            None => continue,
+                        };
+                        if let Some(keys) = prefix_keys.get(&id) {
+                            if let Some(&h) = handles.get(&id) {
+                                if let Err(e) = store.publish_prefix(h, keys) {
+                                    crate::log_error!("publish prefix for request {id}: {e}");
+                                }
+                            }
+                        }
+                        if !chunk.last {
+                            if let Some(pending) = replies.get_mut(&id) {
+                                pending.prefill_s += out.step_s;
+                            }
+                            continue;
+                        }
+                        let logits = out.logits.expect("final chunk returns logits");
+                        let next = argmax(&logits) as i32;
+                        let Some(pending) = replies.remove(&id) else { continue };
+                        runtimes.insert(
+                            id,
+                            pending.resume(
+                                next,
+                                out.step_s,
+                                arrival,
+                                arrival.elapsed().as_secs_f64(),
+                            ),
+                        );
+                        if let (Some(draft_m), Some(ds)) =
+                            (draft_rt.as_ref(), draft_store.as_mut())
+                        {
+                            if let Some(&dh) = draft_handles.get(&id) {
+                                if let Some(seq) = sched.seq(id) {
+                                    let ctx: Vec<i32> = seq
+                                        .request
+                                        .prompt
+                                        .iter()
+                                        .chain(seq.generated.iter())
+                                        .copied()
+                                        .collect();
+                                    match draft_m.prefill_paged(&ctx, ds, dh) {
+                                        Ok(_) => {
+                                            if let Err(e) = ds.append(dh, ctx.len()) {
+                                                crate::log_error!(
+                                                    "draft kv append for request {id}: {e}"
+                                                );
+                                            }
+                                        }
+                                        Err(e) => {
+                                            crate::log_warn!(
+                                                "draft prefill failed for request {id} \
+                                                 (plain decode fallback): {e}"
+                                            );
+                                            ds.release(dh);
+                                            draft_handles.remove(&id);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        crate::log_error!("prefill chunk failed for request {id}: {e}");
+                        if let Some(seq) = sched.seq_mut(id) {
+                            seq.prefill_done = true;
+                            seq.request.max_new_tokens = seq.generated.len();
+                        }
+                        if let Some(pending) = replies.get_mut(&id) {
+                            pending.error.get_or_insert(format!("prefill failed: {e}"));
+                        }
+                    }
+                }
+            }
+            metrics.record_round(slot.batch, round_tokens);
+            // Close the reservation window before reaping completions so
+            // deferred frees (and completed sequences' blocks) release
+            // in the same stage the device work retired.
+            if let Some(w) = slot.window {
+                store.end_slot_window(w);
+            }
+            for done in sched.reap_finished() {
+                let id = done.request.id;
+                if let Some(h) = handles.remove(&id) {
+                    store.release(h);
+                }
+                prefix_keys.remove(&id);
+                if let Some(ds) = draft_store.as_mut() {
+                    if let Some(dh) = draft_handles.remove(&id) {
+                        ds.release(dh);
+                    }
+                }
+                if let Some(srt) = runtimes.remove(&id) {
+                    let total_s = srt.started.elapsed().as_secs_f64();
+                    let ttft_s = fallback_ttft(srt.ttft_s, total_s);
+                    metrics.record_completion(
+                        done.request.prompt.len(),
+                        done.generated.len(),
+                        ttft_s,
+                        total_s,
+                    );
+                    let _ = srt.reply.send(InferenceResponse {
+                        id,
+                        tokens: done.generated,
+                        queue_s: srt.queue_s,
+                        prefill_s: srt.prefill_s,
+                        decode_s: srt.decode_s,
+                        ttft_s,
+                        total_s,
+                        error: srt.error,
+                    });
+                } else if let Some(pending) = replies.remove(&id) {
+                    let waited = done.request.arrival.elapsed().as_secs_f64();
+                    if pending.error.is_none() {
+                        let ttft = pending.ttft_s.unwrap_or(waited);
+                        metrics.record_completion(
+                            done.request.prompt.len(),
+                            done.generated.len(),
+                            ttft,
+                            waited,
+                        );
+                    }
+                    let _ = pending.reply.send(InferenceResponse {
+                        id,
+                        tokens: done.generated,
+                        queue_s: pending.queue_s.unwrap_or(waited),
+                        prefill_s: pending.prefill_s,
+                        decode_s: pending.decode_s,
+                        ttft_s: pending.ttft_s.unwrap_or(waited),
+                        total_s: waited,
+                        error: pending.error,
+                    });
+                }
+            }
+            metrics.set_kv_device_bytes(
+                store.device_bytes_in_use() as u64,
+                store.peak_device_bytes_in_use() as u64,
+            );
+            metrics
+                .set_kv_sharing(store.arena().shared_blocks() as u64, store.arena().cow_copies());
+            metrics.set_kv_dequant(store.dequantized_rows());
+        }
+        jitter("reap");
+
+        // ---- BIND + EXECUTE slot N+1 ------------------------------------
+        // Reconciliation: the plan was speculative; recompute the round
+        // and the capacity pass from the now-authoritative scheduler
+        // state (slot N's acceptance, prefill progress, and completions
+        // have all landed). The plan already reserved a superset, so
+        // this pass is normally claim-free.
+        if sched.is_idle() {
+            continue;
+        }
+        let round = sched.next_round();
+        if round.is_idle() {
+            continue;
+        }
+        let mut spec_width: HashMap<RequestId, usize> = HashMap::new();
+        let mut needs_rows: Vec<(RequestId, usize)> = round
+            .decode_batch
+            .iter()
+            .copied()
+            .filter_map(|id| {
+                let seq = sched.seq(id).expect("scheduled seq exists");
+                let remaining =
+                    seq.request.max_new_tokens.saturating_sub(seq.generated.len() + 1);
+                if remaining == 0 {
+                    return None;
+                }
+                let k_eff = if draft_rt.is_some() && draft_handles.contains_key(&id) {
+                    draft_k.min(remaining)
+                } else {
+                    0
+                };
+                spec_width.insert(id, k_eff);
+                Some((id, k_eff + 1))
+            })
+            .collect();
+        needs_rows.extend(round.prefills.iter().filter(|c| c.len > 0).map(|c| (c.id, c.len)));
+        let held_out: HashSet<RequestId> = sched.ensure_round_capacity(
+            &mut store,
+            &mut handles,
+            &needs_rows,
+            |victim, bill, bytes_freed| {
+                if let Some(srt) = runtimes.remove(&victim) {
+                    replies.insert(victim, srt.park());
+                }
+                let mut draft_freed = 0;
+                if let Some(ds) = draft_store.as_mut() {
+                    if let Some(dh) = draft_handles.remove(&victim) {
+                        draft_freed = ds.release(dh);
+                    }
+                }
+                metrics.record_preemption(bill, bytes_freed);
+                crate::log_warn!(
+                    "kv region exhausted: preempted request {victim} (re-prefill {bill} tokens, \
+                     {bytes_freed} device bytes released, {draft_freed} draft bytes)"
+                );
+            },
+        );
+
+        // Emission + step construction: identical to the serial loop
+        // (state advances at bind, so the next plan's projections see
+        // this slot's emissions immediately).
+        let mut round_tokens = 0usize;
+        let mut inputs: HashMap<RequestId, (i32, usize)> = HashMap::new();
+        for &id in &round.decode_batch {
+            if held_out.contains(&id) {
+                continue;
+            }
+            if let Some(srt) = runtimes.get_mut(&id) {
+                let token = srt.next_token;
+                let seq = sched.seq_mut(id).expect("scheduled seq exists");
+                seq.generated.push(token);
+                if srt.ttft_s.is_none() {
+                    srt.ttft_s = Some(srt.started.elapsed().as_secs_f64());
+                }
+                let pos = seq.pos;
+                seq.pos += 1;
+                round_tokens += 1;
+                if seq.generated.len() < seq.request.max_new_tokens {
+                    inputs.insert(id, (token, pos));
+                }
+            }
+        }
+        let mut step_ids = Vec::with_capacity(inputs.len());
+        let mut steps = Vec::with_capacity(inputs.len());
+        let mut spec_ids = Vec::new();
+        let mut spec_steps: Vec<(SpecStepArgs, Vec<i32>)> = Vec::new();
+        for &id in &round.decode_batch {
+            if let Some(&(token, pos)) = inputs.get(&id) {
+                let k_eff = spec_width.get(&id).copied().unwrap_or(0);
+                if k_eff > 0 {
+                    let ds = draft_store.as_ref().expect("spec width implies a draft store");
+                    let dh = draft_handles[&id];
+                    let seq = sched.seq(id).expect("scheduled seq exists");
+                    let plen = seq.request.prompt.len();
+                    let catchup: Vec<i32> = (ds.len(dh)..pos)
+                        .map(|p| {
+                            if p < plen { seq.request.prompt[p] } else { seq.generated[p - plen] }
+                        })
+                        .collect();
+                    spec_ids.push(id);
+                    spec_steps.push((
+                        SpecStepArgs { token, pos, k: k_eff, h: handles[&id], draft_h: dh },
+                        catchup,
+                    ));
+                } else {
+                    step_ids.push(id);
+                    steps.push(PagedRoundStep { token, pos, handle: handles[&id] });
+                }
+            }
+        }
+        let mut pack: Vec<PackedPrefillChunk> = Vec::new();
+        let mut pack_ids: Vec<RequestId> = Vec::new();
+        for c in &round.prefills {
+            if held_out.contains(&c.id) {
+                continue;
+            }
+            let seq = sched.seq(c.id).expect("scheduled seq exists");
+            debug_assert_eq!(c.start, seq.prefill_progress, "chunk off its progress: {c:?}");
+            if let Some(pending) = replies.get_mut(&c.id) {
+                pending
+                    .queue_s
+                    .get_or_insert_with(|| seq.request.arrival.elapsed().as_secs_f64());
+            }
+            let tokens: Vec<i32> = seq
+                .request
+                .prompt
+                .iter()
+                .chain(seq.generated.iter())
+                .copied()
+                .skip(c.start)
+                .take(c.len)
+                .collect();
+            pack.push(PackedPrefillChunk {
+                h: handles[&c.id],
+                start: c.start,
+                tokens,
+                last: c.last,
+            });
+            pack_ids.push(c.id);
+        }
+
+        // Dispatch: flip the double-buffered gather scratch (slot N+1's
+        // dense inputs must never alias slot N's), pin the slot's block
+        // tables, run the round, and park the outcomes until the next
+        // iteration's reap.
+        store.select_scratch_slot(slot_parity);
+        slot_parity ^= 1;
+        let mut member_handles: Vec<KvSeqHandle> = steps.iter().map(|s| s.handle).collect();
+        member_handles.extend(spec_steps.iter().map(|(a, _)| a.h));
+        member_handles.extend(pack.iter().map(|c| c.h));
+        let window = match store.begin_slot_window(&member_handles) {
+            Ok(w) => Some(w),
+            Err(e) => {
+                crate::log_error!("slot reservation window: {e}");
+                None
+            }
+        };
+        let decode_outcomes = model.decode_round_paged(&mut store, &steps);
+        let decode: Vec<(RequestId, Result<RoundStepOutcome>)> =
+            step_ids.into_iter().zip(decode_outcomes).collect();
+        let spec: Vec<(RequestId, Result<(SpecStepOutcome, f64)>)> =
+            if let (Some(draft_m), Some(ds)) = (draft_rt.as_ref(), draft_store.as_mut()) {
+                let spec_outcomes = model.spec_round_paged(draft_m, &mut store, ds, &spec_steps);
+                spec_ids.into_iter().zip(spec_outcomes).collect()
+            } else {
+                Vec::new()
+            };
+        let pack_outcomes = model.prefill_pack(&mut store, &pack);
+        let prefill: Vec<(RequestId, PackedPrefillChunk, Result<PrefillChunkOutcome>)> = pack_ids
+            .into_iter()
+            .zip(pack)
+            .zip(pack_outcomes)
+            .map(|((id, chunk), out)| (id, chunk, out))
+            .collect();
+        inflight = Some(InflightSlot {
+            window,
+            batch: inputs.len(),
+            emitted: round_tokens,
+            decode,
+            spec,
+            prefill,
+        });
+        jitter("bind");
     }
 }
 

@@ -108,6 +108,33 @@ impl KernelCost {
         (self.t_compute * s).max(mem) + self.t_launch
     }
 
+    /// Wall-clock for one serving round under a bounded-depth pipelined
+    /// executor. `device_exec_s` is the round's device time (the kernel
+    /// launches), `host_plan_s` the host-side work attached to the round
+    /// — planning the *next* round (admission, capacity reservation,
+    /// prefill-pack assembly) plus the submit/sync overhead.
+    ///
+    /// * `depth <= 1` is the unpipelined loop: host work serializes with
+    ///   the device, so the round costs `device_exec_s + host_plan_s`
+    ///   exactly (bitwise — this is the depth-1 identity the engine's
+    ///   gate relies on).
+    /// * `depth >= 2` overlaps the host plan of round N+1 with round N's
+    ///   device execution, so the visible host overhead collapses to
+    ///   `max(0, host_plan_s − device_exec_s)` — zero whenever planning
+    ///   hides entirely under the device.
+    ///
+    /// Depth beyond 2 changes nothing: there is one device and one host,
+    /// so a single planned-ahead slot already keeps both busy — extra
+    /// slots only add reconciliation state, which is why the engine
+    /// defaults to 2 and the sweep shows 3 flat.
+    pub fn pipelined_round_time_s(device_exec_s: f64, host_plan_s: f64, depth: usize) -> f64 {
+        if depth <= 1 {
+            device_exec_s + host_plan_s
+        } else {
+            device_exec_s + (host_plan_s - device_exec_s).max(0.0)
+        }
+    }
+
     /// Memory-limited time for a batch-`batch` launch: weight bytes once,
     /// per-sequence bytes × batch. The single source of the batched
     /// scaling rule — `batched_total` and the round simulator both use it.

@@ -395,6 +395,18 @@ pub fn speculative_round_time_s(
         + verify_time_s(target_decode_plan, batch, k)
 }
 
+/// One serving round under the bounded-depth pipelined executor —
+/// [`KernelCost::pipelined_round_time_s`] exposed next to the other
+/// round-time models. `depth <= 1` is the unpipelined loop
+/// (`device + host`, bitwise); `depth >= 2` overlaps round N+1's host
+/// planning with round N's device execution, so the visible host
+/// overhead is `max(0, host_plan_s − device_exec_s)` instead of
+/// additive. Depth beyond 2 is identical to depth 2: one device and one
+/// host are both already busy with a single planned-ahead slot.
+pub fn pipelined_round_time_s(device_exec_s: f64, host_plan_s: f64, depth: usize) -> f64 {
+    KernelCost::pipelined_round_time_s(device_exec_s, host_plan_s, depth)
+}
+
 /// Convenience: plan + simulate.
 pub fn simulate_graph(
     g: &Graph,
@@ -643,5 +655,35 @@ mod tests {
         let g = mlp(1, DType::I4);
         let (_, rep) = simulate_graph(&g, &dev, Stage::Decode, Strategy::GreedyBySize).unwrap();
         assert!(rep.compute_bound_frac < 0.2, "decode should be memory-bound: {rep:?}");
+    }
+
+    #[test]
+    fn pipelined_round_time_overlaps_host_plan_past_depth_1() {
+        let (dev, host) = (4e-3, 1.5e-3);
+        // Depth 1 is the unpipelined loop, bitwise additive.
+        assert_eq!(pipelined_round_time_s(dev, host, 1), dev + host);
+        assert_eq!(pipelined_round_time_s(dev, host, 0), dev + host);
+        // Depth 2: host planning hides under the device entirely when it
+        // is shorter than the round.
+        assert_eq!(pipelined_round_time_s(dev, host, 2), dev);
+        // A host-bound round degenerates to max(dev, host).
+        assert_eq!(pipelined_round_time_s(dev, 9e-3, 2), 9e-3);
+        // Depth beyond 2 adds nothing — one device, one host.
+        for depth in 3..6 {
+            assert_eq!(
+                pipelined_round_time_s(dev, host, depth),
+                pipelined_round_time_s(dev, host, 2)
+            );
+            assert_eq!(
+                pipelined_round_time_s(dev, 9e-3, depth),
+                pipelined_round_time_s(dev, 9e-3, 2)
+            );
+        }
+        // Overhead never goes negative and never exceeds the additive
+        // model.
+        for host in [0.0, 1e-4, 4e-3, 8e-3] {
+            let t2 = pipelined_round_time_s(dev, host, 2);
+            assert!(t2 >= dev && t2 <= dev + host);
+        }
     }
 }

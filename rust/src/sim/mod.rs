@@ -29,6 +29,7 @@ pub use exec::{
     SimReport,
 };
 pub use serving::{
-    simulate_serving, simulate_serving_shared, simulate_serving_spec, GenLenEstimator,
-    KvReservation, PrefixSimRequest, ServingSimConfig, ServingSimReport, SimRequest, SpecSim,
+    simulate_serving, simulate_serving_pipelined, simulate_serving_shared, simulate_serving_spec,
+    GenLenEstimator, KvReservation, PipelineSimConfig, PrefixSimRequest, ServingSimConfig,
+    ServingSimReport, SimRequest, SpecSim,
 };

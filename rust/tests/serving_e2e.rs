@@ -1,7 +1,7 @@
 //! Serving-layer integration: the thread-based engine over real PJRT.
 
 use mldrift::serving::{
-    AdmissionPolicy, InferenceRequest, SchedulerConfig, ServingEngine, SpecConfig,
+    AdmissionPolicy, EngineConfig, InferenceRequest, SchedulerConfig, ServingEngine, SpecConfig,
 };
 
 fn artifacts_dir() -> Option<String> {
@@ -278,6 +278,173 @@ fn prefix_sharing_serves_identical_tokens_and_attaches_published_blocks() {
     assert!(
         m_on.kv_cow_copies.load(Ordering::Relaxed) > 0,
         "a follower's first divergent write lands in a shared block and must copy-on-write"
+    );
+}
+
+#[test]
+fn pipelined_depth2_is_token_identical_to_depth1() {
+    // The PR-7 tentpole's acceptance bar through real PJRT: the staged
+    // executor (plan round N+1 while slot N is in flight, speculative
+    // plan reconciled at bind) must deliver EXACTLY the serial loop's
+    // token streams — pipelining moves when scheduling work happens,
+    // never what gets generated. Run a mixed burst (chunked prefills +
+    // concurrent decode) so plan-ahead actually has in-flight slots to
+    // overlap with.
+    use std::sync::atomic::Ordering;
+    let Some(dir) = artifacts_dir() else { return };
+    let sched = SchedulerConfig {
+        max_active: 3,
+        max_prefills_per_round: 2,
+        prefill_chunk_tokens: 8,
+        ..Default::default()
+    };
+    let prompts: Vec<Vec<i32>> = vec![
+        (1..=32).collect(),
+        (1..=16).collect(),
+        (5..=20).collect(),
+        (1..=16).collect(),
+    ];
+    let gen = 6usize;
+
+    // Reference: the legacy constructor — depth 1, the serial loop.
+    let serial = ServingEngine::start(&dir, sched).unwrap();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| serial.submit(InferenceRequest::new(i as u64, p.clone(), gen)).unwrap())
+        .collect();
+    let mut reference: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    reference.sort_by_key(|r| r.id);
+    for r in &reference {
+        assert!(r.error.is_none(), "serial burst must not fail: {:?}", r.error);
+        assert_eq!(r.tokens.len(), gen);
+    }
+    let m_serial = std::sync::Arc::clone(&serial.metrics);
+    drop(serial);
+    assert_eq!(m_serial.pipeline_depth.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        m_serial.pipeline_planned_ahead_slots.load(Ordering::Relaxed),
+        0,
+        "the serial loop never plans ahead"
+    );
+
+    let piped = ServingEngine::start_with_config(&dir, EngineConfig::new(sched)).unwrap();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| piped.submit(InferenceRequest::new(i as u64, p.clone(), gen)).unwrap())
+        .collect();
+    let mut outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    outs.sort_by_key(|r| r.id);
+    let m_piped = std::sync::Arc::clone(&piped.metrics);
+    drop(piped); // join the worker so all slot bookkeeping is flushed
+
+    for (o, r) in outs.iter().zip(&reference) {
+        assert!(o.error.is_none(), "pipelined burst must not fail: {:?}", o.error);
+        assert_eq!(o.id, r.id);
+        assert_eq!(
+            o.tokens, r.tokens,
+            "depth 2 must be token-identical to depth 1 (request {})",
+            o.id
+        );
+    }
+    assert_eq!(m_piped.pipeline_depth.load(Ordering::Relaxed), 2);
+    assert!(
+        m_piped.pipeline_planned_ahead_slots.load(Ordering::Relaxed) > 0,
+        "a multi-round burst at depth 2 must actually plan ahead of in-flight slots"
+    );
+    assert_eq!(
+        m_piped.kv_device_bytes_in_use.load(Ordering::Relaxed),
+        0,
+        "drained pipeline must release every block (windows all closed)"
+    );
+}
+
+#[test]
+fn quantized_kv_serving_completes_and_records_dequant_gauges() {
+    // PR-7 satellite: the int8-KV engine knob (`EngineConfig::quantized_kv`)
+    // end to end — a concurrent burst over quantized blocks must complete
+    // every request (int8 changes numerics, so no fp32 token comparison),
+    // stay deterministic across identical prompts, and drive the dequant
+    // and sharing gauges the quantized store exists to feed.
+    use std::sync::atomic::Ordering;
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(SchedulerConfig {
+        max_active: 3,
+        max_prefills_per_round: 2,
+        ..Default::default()
+    });
+    cfg.quantized_kv = true;
+    let engine = ServingEngine::start_with_config(&dir, cfg).unwrap();
+    let prompt: Vec<i32> = (1..=32).collect();
+    let rxs: Vec<_> = (0..3)
+        .map(|i| engine.submit(InferenceRequest::new(i, prompt.clone(), 6)).unwrap())
+        .collect();
+    let outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let metrics = std::sync::Arc::clone(&engine.metrics);
+    drop(engine);
+
+    for o in &outs {
+        assert!(o.error.is_none(), "int8 serving must not fail requests: {:?}", o.error);
+        assert_eq!(o.tokens.len(), 6, "int8 serving must complete full generations");
+    }
+    for o in &outs[1..] {
+        assert_eq!(o.tokens, outs[0].tokens, "int8 decode is deterministic per prompt");
+    }
+    assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), 3);
+    assert!(
+        metrics.kv_dequant_rows.load(Ordering::Relaxed) > 0,
+        "every decode gather over int8 blocks must dequantize rows"
+    );
+    assert!(
+        metrics.kv_prefix_shared_tokens.load(Ordering::Relaxed) > 0
+            || metrics.kv_blocks_shared.load(Ordering::Relaxed) == 0,
+        "sharing gauges must be recorded (attach counter moves when followers attach)"
+    );
+    assert_eq!(
+        metrics.kv_device_bytes_in_use.load(Ordering::Relaxed),
+        0,
+        "drained quantized engine must release every block"
+    );
+}
+
+#[test]
+fn prefix_retention_lets_a_second_wave_attach_after_full_drain() {
+    // PR-7 satellite: without retention, a published prefix dies with
+    // its last reference — a second identical wave arriving after the
+    // first fully completed re-prefills everything. With
+    // `prefix_retain_blocks` set, the engine keeps refcount-0 published
+    // blocks warm (LRU, evicted only under pressure), so the second
+    // wave attaches even though the stores were drained in between.
+    use std::sync::atomic::Ordering;
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::new(SchedulerConfig {
+        max_active: 2,
+        max_prefills_per_round: 2,
+        ..Default::default()
+    });
+    cfg.prefix_retain_blocks = 8;
+    let engine = ServingEngine::start_with_config(&dir, cfg).unwrap();
+    let prompt: Vec<i32> = (1..=32).collect(); // 31 shareable positions
+
+    // Wave 1: a single request, run to completion — its blocks drop to
+    // refcount 0 and (being published) park in the retention LRU.
+    let first = engine.infer(InferenceRequest::new(1, prompt.clone(), 6)).unwrap();
+    assert!(first.error.is_none(), "wave 1 must not fail: {:?}", first.error);
+    let attached_wave1 = engine.metrics.kv_prefix_shared_tokens.load(Ordering::Relaxed);
+    assert_eq!(attached_wave1, 0, "nothing published before wave 1 ran");
+
+    // Wave 2: the identical prompt, strictly after wave 1 drained.
+    let second = engine.infer(InferenceRequest::new(2, prompt.clone(), 6)).unwrap();
+    let metrics = std::sync::Arc::clone(&engine.metrics);
+    drop(engine);
+
+    assert!(second.error.is_none(), "wave 2 must not fail: {:?}", second.error);
+    assert_eq!(second.tokens, first.tokens, "retention never changes tokens");
+    let attached = metrics.kv_prefix_shared_tokens.load(Ordering::Relaxed);
+    assert!(
+        attached >= 16,
+        "wave 2 must attach retained published blocks despite the drain (got {attached})"
     );
 }
 
