@@ -1,11 +1,30 @@
 # ML Drift reproduction — top-level targets.
 
-.PHONY: tier1 build test fmt lint artifacts bench bench-batched bench-check bench-ttft \
+.PHONY: tier1 build test fmt lint check artifacts bench bench-batched bench-check bench-ttft \
 	bench-prefix bench-pipeline
 
 # The tier-1 gate CI runs on every push.
 tier1:
 	cd rust && cargo build --release && cargo test -q
+	$(MAKE) check
+
+# Static + dynamic invariant gate (runs in tier-1): the repo linter
+# (five cross-layer rules — sim wall-clock ban, KvPool seam discipline,
+# bench gate order, documented window/provisional invariants, unsafe
+# pin) plus the bounded interleaving explorer over the contended
+# scenario with the depth-projection check (P2), plus a mutation gate
+# proving the explorer actually catches an injected free-inside-window
+# fault. Budgets are sized to finish well under two minutes; a
+# violation prints the exact schedule, replayable with
+# `mldrift drift-check --replay <schedule>`.
+check:
+	cd rust && cargo run --release --quiet -- lint --root ..
+	cd rust && cargo run --release --quiet -- drift-check --config contended --projection
+	@echo "mutation gate: the injected free-inside-window fault must be caught"
+	@cd rust && if cargo run --release --quiet -- drift-check --config contended \
+	  --fault free-inside-window >/dev/null 2>&1; then \
+	  echo "FAIL: explorer missed the injected free-inside-window fault"; exit 1; \
+	  else echo "mutation gate OK: explorer exits nonzero under the injected fault"; fi
 
 build:
 	cd rust && cargo build --release

@@ -1,0 +1,573 @@
+//! Bounded interleaving explorer: DFS over [`World`] schedules with a
+//! CHESS-style context-switch bound and DPOR-lite pruning of commuting
+//! steps. Deterministic by construction — no randomness, no clocks —
+//! so every run over the same config and budget visits the same
+//! schedules in the same order, and any [`Violation`] carries the exact
+//! [`Schedule`] that [`replay`] reproduces step for step.
+//!
+//! **Switch bound.** A context switch is charged only when the schedule
+//! moves to a different [`Actor`] *while the previous actor still had
+//! enabled steps* — i.e. a preemption. Handing off from a blocked actor
+//! is free, so the engine worker's normal plan→bind→reap round-robin
+//! (one actor) and waiting on the device cost nothing; the bound limits
+//! how adversarially arrivals and device completions may preempt the
+//! worker. Empirically (CHESS) almost all concurrency bugs need very
+//! few preemptions; the default bound of 8 is generous for this model.
+//!
+//! **DPOR-lite (sleep sets).** The only independent step pair is an
+//! `Exec` against a co-enabled step of another actor: device completion
+//! flips its own slot's stage flag and touches nothing any co-enabled
+//! step reads (arena state changes only at plan/bind/reap). Two
+//! schedules differing only in adjacent swaps of such pairs are the
+//! same Mazurkiewicz trace, so after a branch is explored its first
+//! step goes to *sleep* for the later sibling branches: a sleeping step
+//! is pruned wherever it reappears, and the sleep set survives a step
+//! only if the two commute (a dependent step wakes everything it
+//! conflicts with). This keeps genuinely new orderings — e.g.
+//! `exec·reap·plan`, where the reap *depends* on the exec — while
+//! collapsing the exponential shuffle of where independent completions
+//! land. Nothing else commutes: arrivals reorder the FIFO admission
+//! queue and every worker stage touches the arena.
+
+use super::model::{Actor, CheckConfig, Fault, Step, TraceEvent, World};
+
+/// A replayable schedule: at step `k`, the index picked from the
+/// `enabled_steps()` vector of the state reached after `k` steps.
+/// Displayed (and parsed) as dot-separated indices, e.g. `0.0.2.1`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Schedule(pub Vec<u16>);
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0.is_empty() {
+            return write!(f, "(empty)");
+        }
+        for (i, c) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ".")?;
+            }
+            write!(f, "{c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "(empty)" {
+            return Ok(Schedule(Vec::new()));
+        }
+        let mut choices = Vec::new();
+        for part in s.split('.') {
+            choices.push(
+                part.trim()
+                    .parse::<u16>()
+                    .map_err(|_| format!("schedule: bad choice {part:?} in {s:?}"))?,
+            );
+        }
+        Ok(Schedule(choices))
+    }
+}
+
+/// An invariant (or model) violation, with everything needed to
+/// reproduce it deterministically.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// The schedule up to and including the offending step.
+    pub schedule: Schedule,
+    /// Index of the offending step within the schedule.
+    pub step_index: usize,
+    /// The step that was applied (None for setup/terminal failures).
+    pub step: Option<Step>,
+    /// Which invariant broke, from the catalog in DESIGN.md §6.
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.step {
+            Some(s) => writeln!(
+                f,
+                "drift-check violation at step {} ({s}): {}",
+                self.step_index, self.message
+            )?,
+            None => writeln!(f, "drift-check violation: {}", self.message)?,
+        }
+        writeln!(f, "  schedule: {}", self.schedule)?;
+        write!(
+            f,
+            "  replay:   mldrift drift-check --replay {} (same --config/--fault flags)",
+            self.schedule
+        )
+    }
+}
+
+impl std::error::Error for Violation {}
+
+/// Exploration limits. All three are hard caps; hitting `max_schedules`
+/// sets [`ExploreReport::truncated`] rather than failing.
+#[derive(Clone, Copy, Debug)]
+pub struct ExploreBudget {
+    /// Maximum complete schedules (DFS leaves) to visit.
+    pub max_schedules: u64,
+    /// Maximum steps per schedule (guards preemption-churn livelock —
+    /// schedules that exceed it are counted in `bounded_out`, not
+    /// treated as violations, because readmission ping-pong is a real
+    /// unbounded execution, not a safety bug).
+    pub max_steps: usize,
+    /// Maximum preemptive context switches per schedule.
+    pub switch_bound: usize,
+}
+
+impl Default for ExploreBudget {
+    fn default() -> Self {
+        ExploreBudget { max_schedules: 20_000, max_steps: 96, switch_bound: 8 }
+    }
+}
+
+/// What an exploration covered — printed by `mldrift drift-check`.
+#[derive(Clone, Debug, Default)]
+pub struct ExploreReport {
+    /// Complete schedules visited (DFS leaves reaching terminal).
+    pub schedules_explored: u64,
+    /// States visited (including interior nodes).
+    pub nodes: u64,
+    /// Choices pruned as commuting with an earlier explored choice.
+    pub pruned_commuting: u64,
+    /// Choices skipped by the context-switch bound.
+    pub switch_bound_skips: u64,
+    /// Schedules cut at `max_steps` before reaching terminal.
+    pub bounded_out: u64,
+    /// Longest schedule seen.
+    pub max_depth: usize,
+    /// Schedules in which at least one preemption happened.
+    pub preempting_schedules: u64,
+    /// Schedules in which at least one free was deferred behind a window.
+    pub deferring_schedules: u64,
+    /// Schedules in which a copy-on-write privatization happened.
+    pub cow_schedules: u64,
+    /// Budget exhausted before the DFS finished.
+    pub truncated: bool,
+    /// The explored schedule with the most contention events
+    /// (preemptions and deferred frees) — the one worth pinning as a
+    /// regression, plus its score.
+    pub trickiest: Option<(Schedule, u32)>,
+}
+
+impl std::fmt::Display for ExploreReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "schedules {} (nodes {}, max depth {}, truncated {})",
+            self.schedules_explored, self.nodes, self.max_depth, self.truncated
+        )?;
+        writeln!(
+            f,
+            "pruned: {} commuting, {} switch-bounded, {} step-bounded",
+            self.pruned_commuting, self.switch_bound_skips, self.bounded_out
+        )?;
+        writeln!(
+            f,
+            "coverage: {} preempting, {} deferring, {} cow schedules",
+            self.preempting_schedules, self.deferring_schedules, self.cow_schedules
+        )?;
+        match &self.trickiest {
+            Some((s, score)) => write!(f, "trickiest schedule (score {score}): {s}"),
+            None => write!(f, "trickiest schedule: none"),
+        }
+    }
+}
+
+/// True when the two steps are independent — reordering them reaches
+/// the same state, and applying one neither disables the other nor
+/// changes what it does. Only `Exec` qualifies (see module docs). The
+/// dependent same-slot pairs (`Bind(i)`/`Exec(i)`, `Exec(i)`/`Reap(i)`)
+/// never reach this predicate together: they are mutually exclusive in
+/// any enabled set, and a sleeping `Exec(i)` keeps its slot in the
+/// Bound stage, which keeps its `Reap(i)`/`Bind(i)` disabled.
+fn commutes(a: Step, b: Step) -> bool {
+    matches!(a, Step::Exec(_)) || matches!(b, Step::Exec(_))
+}
+
+struct Dfs<'a, F: FnMut(&World, &Schedule) -> Result<(), String>> {
+    budget: &'a ExploreBudget,
+    report: ExploreReport,
+    path: Vec<u16>,
+    on_terminal: F,
+}
+
+impl<F: FnMut(&World, &Schedule) -> Result<(), String>> Dfs<'_, F> {
+    fn violation(&self, step: Option<Step>, message: String) -> Box<Violation> {
+        Box::new(Violation {
+            schedule: Schedule(self.path.clone()),
+            step_index: self.path.len().saturating_sub(1),
+            step,
+            message,
+        })
+    }
+
+    fn go(
+        &mut self,
+        world: &World,
+        switches: usize,
+        last: Option<Actor>,
+        sleep: Vec<Step>,
+    ) -> Result<(), Box<Violation>> {
+        self.report.nodes += 1;
+        if world.is_terminal() {
+            self.report.schedules_explored += 1;
+            self.report.max_depth = self.report.max_depth.max(self.path.len());
+            if world.preemptions > 0 {
+                self.report.preempting_schedules += 1;
+            }
+            if world.deferred_frees > 0 {
+                self.report.deferring_schedules += 1;
+            }
+            if world.cow_seen() {
+                self.report.cow_schedules += 1;
+            }
+            let score =
+                world.preemptions * 3 + world.deferred_frees * 2 + u32::from(world.cow_seen());
+            let better = match &self.report.trickiest {
+                None => true,
+                Some((_, best)) => score > *best,
+            };
+            if better {
+                self.report.trickiest = Some((Schedule(self.path.clone()), score));
+            }
+            let sched = Schedule(self.path.clone());
+            if let Err(msg) = (self.on_terminal)(world, &sched) {
+                return Err(self.violation(None, msg));
+            }
+            return Ok(());
+        }
+        if self.path.len() >= self.budget.max_steps {
+            self.report.bounded_out += 1;
+            return Ok(());
+        }
+        let enabled = world.enabled_steps();
+        if enabled.is_empty() {
+            return Err(self.violation(
+                None,
+                "P3 deadlock: non-terminal state with no enabled step".to_string(),
+            ));
+        }
+        // A choice is a preemptive switch when it changes actor while
+        // the previous actor still has enabled steps.
+        let prev_live =
+            |l: Option<Actor>| l.is_some_and(|a| enabled.iter().any(|s| s.actor() == a));
+        let mut sleep_now = sleep;
+        for (j, &st) in enabled.iter().enumerate() {
+            if self.report.schedules_explored >= self.budget.max_schedules {
+                self.report.truncated = true;
+                return Ok(());
+            }
+            // Sleep-set pruning: a sleeping step was already explored
+            // first from an equivalent state (every step since then
+            // commuted with it), so branches starting with it here are
+            // redundant.
+            if sleep_now.contains(&st) {
+                self.report.pruned_commuting += 1;
+                continue;
+            }
+            let is_switch = prev_live(last) && last != Some(st.actor());
+            if is_switch && switches >= self.budget.switch_bound {
+                self.report.switch_bound_skips += 1;
+                continue;
+            }
+            // The chosen step wakes every sleeper it conflicts with;
+            // only sleepers that commute with it stay asleep in the
+            // child (their pruned orderings remain equivalent).
+            let child_sleep: Vec<Step> =
+                sleep_now.iter().copied().filter(|&s| commutes(s, st)).collect();
+            let mut child = world.clone();
+            self.path.push(j as u16);
+            if let Err(msg) = child.apply_step(st).and_then(|()| child.check_invariants()) {
+                return Err(self.violation(Some(st), msg));
+            }
+            self.go(&child, switches + usize::from(is_switch), Some(st.actor()), child_sleep)?;
+            self.path.pop();
+            // Explored: later sibling branches need not start with it.
+            sleep_now.push(st);
+        }
+        Ok(())
+    }
+}
+
+/// Explore every schedule of `cfg` within `budget`, checking the
+/// invariant catalog after every step. `Err` carries the replayable
+/// schedule of the first violation found (DFS order — deterministic).
+pub fn explore(cfg: &CheckConfig, budget: &ExploreBudget) -> Result<ExploreReport, Box<Violation>> {
+    explore_with(cfg, budget, |_, _| Ok(()))
+}
+
+/// [`explore`] with a per-terminal-state check (used by the projection
+/// invariant; an `Err` from the callback becomes a violation carrying
+/// that schedule).
+pub fn explore_with<F>(
+    cfg: &CheckConfig,
+    budget: &ExploreBudget,
+    on_terminal: F,
+) -> Result<ExploreReport, Box<Violation>>
+where
+    F: FnMut(&World, &Schedule) -> Result<(), String>,
+{
+    let root = World::new(cfg).map_err(|e| {
+        Box::new(Violation {
+            schedule: Schedule(Vec::new()),
+            step_index: 0,
+            step: None,
+            message: e,
+        })
+    })?;
+    let mut dfs = Dfs { budget, report: ExploreReport::default(), path: Vec::new(), on_terminal };
+    dfs.go(&root, 0, None, Vec::new())?;
+    Ok(dfs.report)
+}
+
+/// Deterministically re-run one schedule, checking invariants after
+/// every step. Returns the final world (for inspecting its trace and
+/// counters) or the violation it reproduces.
+pub fn replay(cfg: &CheckConfig, schedule: &Schedule) -> Result<World, Box<Violation>> {
+    let mut world = World::new(cfg).map_err(|e| {
+        Box::new(Violation {
+            schedule: schedule.clone(),
+            step_index: 0,
+            step: None,
+            message: e,
+        })
+    })?;
+    for (k, &choice) in schedule.0.iter().enumerate() {
+        let prefix = || Schedule(schedule.0[..=k].to_vec());
+        let enabled = world.enabled_steps();
+        if enabled.is_empty() {
+            return Err(Box::new(Violation {
+                schedule: prefix(),
+                step_index: k,
+                step: None,
+                message: if world.is_terminal() {
+                    "schedule continues past the terminal state".to_string()
+                } else {
+                    "P3 deadlock: non-terminal state with no enabled step".to_string()
+                },
+            }));
+        }
+        let st = match enabled.get(choice as usize) {
+            Some(&s) => s,
+            None => {
+                return Err(Box::new(Violation {
+                    schedule: prefix(),
+                    step_index: k,
+                    step: None,
+                    message: format!(
+                        "schedule choice {choice} out of range: {} steps enabled ({})",
+                        enabled.len(),
+                        enabled.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ")
+                    ),
+                }));
+            }
+        };
+        if let Err(msg) = world.apply_step(st).and_then(|()| world.check_invariants()) {
+            return Err(Box::new(Violation {
+                schedule: prefix(),
+                step_index: k,
+                step: Some(st),
+                message: msg,
+            }));
+        }
+    }
+    Ok(world)
+}
+
+/// Per-sequence projection of a trace — the unit P2 compares.
+fn project(trace: &[TraceEvent], seqs: usize) -> Vec<Vec<TraceEvent>> {
+    let mut out = vec![Vec::new(); seqs];
+    for e in trace {
+        out[e.seq()].push(e.clone());
+    }
+    out
+}
+
+/// P2 — depth projection: on a preemption-free configuration, every
+/// schedule of the pipelined (depth ≥ 2) world must produce, for every
+/// sequence, exactly the event trace of the serial depth-1 world. This
+/// is the model analogue of the engine's
+/// `pipelined_depth2_is_token_identical_to_depth1` e2e gate: planning
+/// ahead may only *reserve* ahead, never change what gets committed.
+///
+/// The caller's config must be preemption-free (e.g.
+/// [`CheckConfig::overlap`]): under memory pressure the pipelined world
+/// legitimately preempts differently than the serial one (speculative
+/// plans hold reservations longer), so projection equality is only an
+/// invariant where no preemption is reachable — the check enforces this
+/// precondition by failing on any preemption it sees.
+pub fn depth_projection_check(
+    cfg: &CheckConfig,
+    budget: &ExploreBudget,
+) -> Result<ExploreReport, Box<Violation>> {
+    let mut base = cfg.clone();
+    // Arrival order is scenario input, not schedule nondeterminism we
+    // may vary while comparing traces across schedules.
+    base.arrivals_upfront = true;
+    base.fault = Fault::None;
+    let mut d1 = base.clone();
+    d1.depth = 1;
+    let setup_violation = |message: String| {
+        Box::new(Violation { schedule: Schedule(Vec::new()), step_index: 0, step: None, message })
+    };
+    let mut w = World::new(&d1).map_err(&setup_violation)?;
+    let mut guard = 0usize;
+    while !w.is_terminal() {
+        let enabled = w.enabled_steps();
+        if enabled.is_empty() {
+            return Err(setup_violation(
+                "P3 deadlock in the depth-1 canonical run".to_string(),
+            ));
+        }
+        if let Err(msg) = w.apply_step(enabled[0]).and_then(|()| w.check_invariants()) {
+            return Err(setup_violation(format!("depth-1 canonical run: {msg}")));
+        }
+        guard += 1;
+        if guard > 100_000 {
+            return Err(setup_violation(
+                "depth-1 canonical run did not terminate".to_string(),
+            ));
+        }
+    }
+    if w.preemptions > 0 {
+        return Err(setup_violation(format!(
+            "P2 precondition: config must be preemption-free, depth-1 run preempted {} times",
+            w.preemptions
+        )));
+    }
+    let nseqs = base.seqs;
+    let depth = base.depth;
+    let canon = project(&w.trace, nseqs);
+    explore_with(&base, budget, move |world, _| {
+        if world.preemptions > 0 {
+            return Err(format!(
+                "P2 precondition: config must be preemption-free, depth-{depth} schedule \
+                 preempted {} times",
+                world.preemptions
+            ));
+        }
+        let p = project(&world.trace, nseqs);
+        for (i, (a, b)) in canon.iter().zip(p.iter()).enumerate() {
+            if a != b {
+                return Err(format!(
+                    "P2 depth-projection mismatch for seq {i}: depth-1 trace {a:?} vs \
+                     depth-{depth} trace {b:?}"
+                ));
+            }
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_budget() -> ExploreBudget {
+        ExploreBudget { max_schedules: 3_000, max_steps: 96, switch_bound: 4 }
+    }
+
+    #[test]
+    fn schedule_roundtrips_through_display() {
+        let s: Schedule = "0.3.1.2".parse().expect("parses");
+        assert_eq!(s.0, vec![0, 3, 1, 2]);
+        assert_eq!(s.to_string(), "0.3.1.2");
+        let empty: Schedule = "".parse().expect("empty parses");
+        assert_eq!(empty.0, Vec::<u16>::new());
+        assert!("0.x.1".parse::<Schedule>().is_err());
+    }
+
+    #[test]
+    fn contended_exploration_is_invariant_clean_and_reaches_contention() {
+        let report = explore(&CheckConfig::contended(), &small_budget())
+            .expect("no invariant violation on HEAD");
+        assert!(report.schedules_explored > 10, "explored {report}");
+        assert!(
+            report.preempting_schedules > 0,
+            "exploration must reach preemption: {report}"
+        );
+        assert!(
+            report.deferring_schedules > 0,
+            "exploration must reach deferred frees: {report}"
+        );
+        assert!(report.trickiest.is_some());
+    }
+
+    #[test]
+    fn exploration_is_deterministic() {
+        let a = explore(&CheckConfig::contended(), &small_budget()).expect("clean");
+        let b = explore(&CheckConfig::contended(), &small_budget()).expect("clean");
+        assert_eq!(a.schedules_explored, b.schedules_explored);
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(
+            a.trickiest.as_ref().map(|(s, sc)| (s.to_string(), *sc)),
+            b.trickiest.as_ref().map(|(s, sc)| (s.to_string(), *sc))
+        );
+    }
+
+    #[test]
+    fn trickiest_schedule_replays_to_the_same_world() {
+        let report = explore(&CheckConfig::contended(), &small_budget()).expect("clean");
+        let (sched, score) = report.trickiest.expect("contention reached");
+        let w = replay(&CheckConfig::contended(), &sched).expect("replay is clean");
+        assert_eq!(
+            w.preemptions * 3 + w.deferred_frees * 2 + u32::from(w.cow_seen()),
+            score,
+            "replay reproduces the explored world exactly"
+        );
+    }
+
+    #[test]
+    fn injected_free_inside_window_is_caught_with_a_replayable_schedule() {
+        // Mutation test for the checker itself: reintroduce the
+        // deferred-free bug the reservation windows exist to prevent
+        // (frees completing while a window still pins the blocks) and
+        // require the explorer to (a) catch it and (b) hand back a
+        // schedule that deterministically reproduces it.
+        let mut cfg = CheckConfig::contended();
+        cfg.fault = Fault::FreeInsideWindow;
+        let viol = match explore(&cfg, &small_budget()) {
+            Err(v) => v,
+            Ok(report) => panic!("fault injection must be caught, got clean report: {report}"),
+        };
+        assert!(
+            viol.message.contains("K3")
+                || viol.message.contains("free")
+                || viol.message.contains("pinned"),
+            "violation names the broken invariant: {}",
+            viol.message
+        );
+        // And the schedule replays to the same violation.
+        let replayed = match replay(&cfg, &viol.schedule) {
+            Err(v) => v,
+            Ok(_) => panic!("violating schedule must also fail under replay"),
+        };
+        assert_eq!(replayed.message, viol.message, "replay reproduces the violation");
+        // The same schedule is clean without the fault: the bug is the
+        // mutation, not the schedule.
+        let clean_cfg = CheckConfig::contended();
+        replay(&clean_cfg, &viol.schedule).expect("schedule is clean without the fault");
+    }
+
+    #[test]
+    fn overlap_depth_projection_holds() {
+        let report = depth_projection_check(&CheckConfig::overlap(), &small_budget())
+            .expect("P2: depth-2 schedules project onto the depth-1 trace");
+        assert!(report.schedules_explored > 0);
+    }
+
+    #[test]
+    fn replay_rejects_out_of_range_choices() {
+        let sched: Schedule = "40".parse().expect("parses");
+        let err = replay(&CheckConfig::contended(), &sched).expect_err("choice 40 is invalid");
+        assert!(err.message.contains("out of range"), "{}", err.message);
+    }
+}

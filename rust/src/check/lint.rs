@@ -1,0 +1,674 @@
+//! Repo invariant linter (`mldrift lint`): text/token-level enforcement
+//! of the cross-layer contracts every PR so far has maintained by hand.
+//! Zero dependencies — files are read with `std::fs`, comments and
+//! string literals are stripped by a small character state machine so
+//! rules match *code* tokens only, and every rule is scoped by path so
+//! the layer that owns a privileged API keeps using it.
+//!
+//! Rules (each with a violating + clean fixture test below):
+//!
+//! | rule | scope | contract |
+//! |------|-------|----------|
+//! | `sim-wall-clock` | `src/sim/` | the simulator runs on virtual time only — `Instant`/`SystemTime` reads are banned |
+//! | `kv-pool-discipline` | everywhere except `src/kv/`, `src/check/` | allocation/eviction policy goes through the [`crate::kv::KvPool`] seam; privileged arena mutators are kv-internal |
+//! | `bench-gate-order` | `benches/` | a bench gate `.check()` runs only after the trajectory write (or in a marked `--only-` early-exit block that skips the write entirely) |
+//! | `undocumented-invariant` | `src/kv/`, `src/serving/` | every `pub` item whose declaration mentions `window`/`provisional`/`unsafe` carries a doc comment that states its invariant |
+//! | `unsafe-pin` | whole crate | the `unsafe` token count stays pinned at zero and `lib.rs` keeps `#![forbid(unsafe_code)]` |
+
+use std::fmt;
+use std::path::Path;
+
+/// One finding. Ordering is (file, line) within the sorted file list,
+/// so output is deterministic and diffable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LintDiagnostic {
+    /// Stable rule slug (see module table).
+    pub rule: &'static str,
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for LintDiagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Process exit code for a lint run: 0 clean, 1 when anything fired
+/// (the CLI maps this through `main`'s `Result`).
+pub fn exit_code(diags: &[LintDiagnostic]) -> i32 {
+    i32::from(!diags.is_empty())
+}
+
+/// Strip comments and string/char-literal *contents* from Rust source,
+/// preserving every newline and the column of every surviving token
+/// (stripped characters become spaces), so diagnostics computed on the
+/// output carry real line numbers. Handles line comments, nested block
+/// comments, string/byte-string escapes, raw strings with `#` fences,
+/// and the lifetime-vs-char-literal ambiguity.
+pub fn strip_code(src: &str) -> String {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    // Emit a stripped placeholder: newlines survive, all else blanks.
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut prev_ident = false;
+    while i < n {
+        let c = chars[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            while i < n && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            prev_ident = false;
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(blank(chars[i]));
+                    i += 1;
+                }
+            }
+            prev_ident = false;
+            continue;
+        }
+        // Raw (byte) string: r"…", r#"…"#, br#"…"#… — only when the
+        // `r`/`b` starts a token (not the tail of an identifier).
+        if (c == 'r' || c == 'b') && !prev_ident {
+            let mut j = i;
+            if chars[j] == 'b' && j + 1 < n && chars[j + 1] == 'r' {
+                j += 1;
+            }
+            if chars[j] == 'r' {
+                let mut k = j + 1;
+                while k < n && chars[k] == '#' {
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    let hashes = k - (j + 1);
+                    for _ in i..=k {
+                        out.push(' ');
+                    }
+                    i = k + 1;
+                    // Scan for `"` followed by `hashes` `#`s.
+                    'raw: while i < n {
+                        if chars[i] == '"' {
+                            let mut h = 0;
+                            while h < hashes && i + 1 + h < n && chars[i + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                for _ in 0..=hashes {
+                                    out.push(' ');
+                                }
+                                i += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        out.push(blank(chars[i]));
+                        i += 1;
+                    }
+                    prev_ident = false;
+                    continue;
+                }
+            }
+        }
+        // Plain (byte) string.
+        if c == '"' || (c == 'b' && !prev_ident && i + 1 < n && chars[i + 1] == '"') {
+            if c == 'b' {
+                out.push(' ');
+                i += 1;
+            }
+            out.push(' ');
+            i += 1; // past the opening quote
+            while i < n {
+                if chars[i] == '\\' && i + 1 < n {
+                    out.push(' ');
+                    out.push(blank(chars[i + 1]));
+                    i += 2;
+                } else if chars[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                } else {
+                    out.push(blank(chars[i]));
+                    i += 1;
+                }
+            }
+            prev_ident = false;
+            continue;
+        }
+        // Char literal vs lifetime: `'x'` / `'\n'` are literals,
+        // `'static` / `'a` in `&'a` are lifetimes (kept as code).
+        if c == '\'' {
+            let is_char_literal = if i + 1 < n && chars[i + 1] == '\\' {
+                true
+            } else {
+                i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\''
+            };
+            if is_char_literal {
+                out.push(' ');
+                i += 1;
+                if i < n && chars[i] == '\\' {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(' ');
+                    i += 1;
+                }
+                if i < n && chars[i] == '\'' {
+                    out.push(' ');
+                    i += 1;
+                }
+                prev_ident = false;
+                continue;
+            }
+        }
+        out.push(c);
+        prev_ident = is_ident(c);
+        i += 1;
+    }
+    out
+}
+
+/// Find word-boundary occurrences of `word` in `line`, returning byte
+/// offsets (an occurrence flanked by identifier characters is part of a
+/// longer token and does not count).
+fn word_positions(line: &str, word: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut hits = Vec::new();
+    let mut from = 0;
+    while let Some(p) = line[from..].find(word) {
+        let at = from + p;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            hits.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    hits
+}
+
+const WALL_CLOCK_TOKENS: [&str; 2] = ["Instant", "SystemTime"];
+
+/// Privileged [`crate::kv::KvArena`] mutators: growth, copy-on-write
+/// privatization, window pinning, retention internals, and the checker
+/// fault seam. Everything an admission/eviction policy legitimately
+/// needs is on the `KvPool` trait (`can_claim`, `claim`, `ensure`,
+/// `release`, `can_claim_prefixed`, `claim_prefixed`) or the arena's
+/// read-only/commit surface (`len`, `append`, `publish_prefix`,
+/// `stats`, `verify`, …) — those stay callable anywhere.
+const PRIVILEGED_KV_CALLS: [&str; 10] = [
+    ".grow(",
+    ".ensure_detailed(",
+    ".make_private(",
+    ".claim_prefixed_detailed(",
+    ".truncate_reservation(",
+    ".pin_window(",
+    ".unpin_window(",
+    ".unpin_window_raw(",
+    ".take_retention_evictions(",
+    ".fault_free_deferred_ignoring_pins(",
+];
+
+const DECL_NEEDLES: [&str; 3] = ["window", "provisional", "unsafe"];
+const DECL_PREFIXES: [&str; 6] =
+    ["pub fn ", "pub struct ", "pub enum ", "pub trait ", "pub type ", "pub const "];
+const INVARIANT_KEYWORDS: [&str; 10] = [
+    "invariant", "never", "must", "cannot", "defer", "pin", "in-flight", "only", "contract",
+    "exactly",
+];
+
+fn in_dir(file: &str, dir: &str) -> bool {
+    file.contains(dir)
+}
+
+/// R1: simulated time only — `src/sim/` may not read wall clocks; the
+/// virtual clock comes from the roofline model, and a single
+/// `Instant::now` makes every simulated latency nondeterministic.
+fn rule_sim_wall_clock(file: &str, stripped: &str, diags: &mut Vec<LintDiagnostic>) {
+    if !in_dir(file, "src/sim/") {
+        return;
+    }
+    for (ln, line) in stripped.lines().enumerate() {
+        for tok in WALL_CLOCK_TOKENS {
+            if !word_positions(line, tok).is_empty() {
+                diags.push(LintDiagnostic {
+                    rule: "sim-wall-clock",
+                    file: file.to_string(),
+                    line: ln + 1,
+                    message: format!(
+                        "wall-clock type `{tok}` in sim code: the simulator runs on virtual \
+                         time only"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// R2: KV allocation policy goes through the `KvPool` trait seam.
+/// Privileged arena mutators called outside `src/kv/` would let the
+/// engine and the simulator drift onto different policy code — the
+/// whole point of the seam (PR 5) is that both sides share it.
+/// `src/check/` is exempt: the model checker deliberately drives the
+/// raw transition system.
+fn rule_kv_pool_discipline(file: &str, stripped: &str, diags: &mut Vec<LintDiagnostic>) {
+    if in_dir(file, "src/kv/") || in_dir(file, "src/check/") {
+        return;
+    }
+    for (ln, line) in stripped.lines().enumerate() {
+        for call in PRIVILEGED_KV_CALLS {
+            if line.contains(call) {
+                let name = &call[1..call.len() - 1];
+                diags.push(LintDiagnostic {
+                    rule: "kv-pool-discipline",
+                    file: file.to_string(),
+                    line: ln + 1,
+                    message: format!(
+                        "privileged KvArena call `{name}` outside src/kv/: allocation policy \
+                         must go through the KvPool trait"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// How many original lines above a `.check()` call to scan for an
+/// `--only-` marker (the flag test plus its comment block).
+const ONLY_MARKER_WINDOW: usize = 6;
+
+/// R3: bench gates assert only after their trajectory write. A gate
+/// that panics before `fs::write` lands takes the whole trajectory with
+/// it — CI then has gate failures *and* no artifact to diff, and
+/// `bench-check` regression tracking silently loses a data point. The
+/// one sanctioned exception: `--only-…` early-exit blocks, which run a
+/// single part's gates and deliberately skip the write (marker must
+/// appear within the preceding few lines).
+fn rule_bench_gate_order(
+    file: &str,
+    original: &str,
+    stripped: &str,
+    diags: &mut Vec<LintDiagnostic>,
+) {
+    if !in_dir(file, "benches/") {
+        return;
+    }
+    let orig_lines: Vec<&str> = original.lines().collect();
+    let mut write_seen = false;
+    for (ln, line) in stripped.lines().enumerate() {
+        if line.contains("fs::write(") {
+            write_seen = true;
+        }
+        if line.contains(".check()") && !write_seen {
+            let lo = ln.saturating_sub(ONLY_MARKER_WINDOW);
+            let marked = orig_lines[lo..=ln.min(orig_lines.len().saturating_sub(1))]
+                .iter()
+                .any(|l| l.contains("--only-"));
+            if !marked {
+                diags.push(LintDiagnostic {
+                    rule: "bench-gate-order",
+                    file: file.to_string(),
+                    line: ln + 1,
+                    message: "bench gate `.check()` before the trajectory write: assert gates \
+                              after `fs::write`, or mark an `--only-` early-exit block"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// R4: every `pub` item in `src/kv/` and `src/serving/` whose
+/// declaration mentions a dangerous concept (`window`, `provisional`,
+/// `unsafe`) must carry a doc comment that actually states its
+/// invariant — one of [`INVARIANT_KEYWORDS`]. The reservation-window
+/// and provisional-scatter APIs are exactly the ones whose misuse is a
+/// memory-safety bug at the device layer; their contracts live in doc
+/// comments, and this rule keeps those contracts from silently rotting
+/// into "TODO".
+fn rule_undocumented_invariant(file: &str, original: &str, diags: &mut Vec<LintDiagnostic>) {
+    if !(in_dir(file, "src/kv/") || in_dir(file, "src/serving/")) {
+        return;
+    }
+    let lines: Vec<&str> = original.lines().collect();
+    for (ln, raw) in lines.iter().enumerate() {
+        let line = raw.trim_start();
+        if !DECL_PREFIXES.iter().any(|p| line.starts_with(p)) {
+            continue;
+        }
+        let lower = line.to_lowercase();
+        let Some(needle) = DECL_NEEDLES.iter().find(|n| lower.contains(**n)) else {
+            continue;
+        };
+        // Walk upward: skip attributes, then collect the contiguous
+        // `///` block.
+        let mut k = ln;
+        let mut doc = String::new();
+        while k > 0 {
+            k -= 1;
+            let above = lines[k].trim_start();
+            if above.starts_with("#[") || above.starts_with("#!") {
+                continue;
+            }
+            if above.starts_with("///") {
+                doc.push_str(&above.to_lowercase());
+                doc.push('\n');
+            } else {
+                break;
+            }
+        }
+        let documented = !doc.is_empty()
+            && INVARIANT_KEYWORDS.iter().any(|kw| doc.contains(kw));
+        if !documented {
+            let name = line
+                .split_whitespace()
+                .nth(2)
+                .unwrap_or("<unnamed>")
+                .trim_end_matches(|c: char| !c.is_alphanumeric() && c != '_')
+                .split(['(', '<', ':'])
+                .next()
+                .unwrap_or("<unnamed>");
+            diags.push(LintDiagnostic {
+                rule: "undocumented-invariant",
+                file: file.to_string(),
+                line: ln + 1,
+                message: format!(
+                    "pub item `{name}` mentions `{needle}` but its doc comment states no \
+                     invariant (expected one of: {})",
+                    INVARIANT_KEYWORDS.join(", ")
+                ),
+            });
+        }
+    }
+}
+
+/// R5: the crate's `unsafe` count is pinned at zero. Every cross-thread
+/// seam is built on std's safe primitives; an `unsafe` block would be a
+/// latent race surface exactly where the pipelined executor can least
+/// afford one. `lib.rs` must also keep the crate-level
+/// `#![forbid(unsafe_code)]` so the compiler enforces what this rule
+/// reports.
+fn rule_unsafe_pin(file: &str, stripped: &str, diags: &mut Vec<LintDiagnostic>) {
+    for (ln, line) in stripped.lines().enumerate() {
+        for at in word_positions(line, "unsafe") {
+            // `unsafe_code` inside the forbid attribute is the pin
+            // itself, not a use — word boundaries already exclude it,
+            // so any surviving hit is a real token.
+            let _ = at;
+            diags.push(LintDiagnostic {
+                rule: "unsafe-pin",
+                file: file.to_string(),
+                line: ln + 1,
+                message: "`unsafe` token: this crate pins its unsafe count at zero \
+                          (#![forbid(unsafe_code)])"
+                    .to_string(),
+            });
+        }
+    }
+    if file.ends_with("src/lib.rs") && !stripped.contains("#![forbid(unsafe_code)]") {
+        diags.push(LintDiagnostic {
+            rule: "unsafe-pin",
+            file: file.to_string(),
+            line: 1,
+            message: "missing `#![forbid(unsafe_code)]`: lib.rs must keep the crate-level \
+                      forbid that backs the unsafe-pin rule"
+                .to_string(),
+        });
+    }
+}
+
+/// Lint in-memory files (`(path, content)` pairs). Paths are matched
+/// textually against rule scopes (`src/sim/`, `src/kv/`, `benches/`,
+/// …), so callers should pass repo-relative paths with forward slashes.
+/// Diagnostics come back sorted by (file, line, rule).
+pub fn lint_files(files: &[(String, String)]) -> Vec<LintDiagnostic> {
+    let mut diags = Vec::new();
+    let mut sorted: Vec<&(String, String)> = files.iter().collect();
+    sorted.sort_by(|a, b| a.0.cmp(&b.0));
+    for (path, content) in sorted {
+        let stripped = strip_code(content);
+        rule_sim_wall_clock(path, &stripped, &mut diags);
+        rule_kv_pool_discipline(path, &stripped, &mut diags);
+        rule_bench_gate_order(path, content, &stripped, &mut diags);
+        rule_undocumented_invariant(path, content, &mut diags);
+        rule_unsafe_pin(path, &stripped, &mut diags);
+    }
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    diags
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("lint: cannot read {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("lint: walk error under {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the repository at `root` (the directory containing `rust/`):
+/// walks `rust/src`, `rust/benches`, and `rust/tests`, and returns the
+/// diagnostics. `Err` is an I/O problem, not a lint finding.
+pub fn lint_repo(root: &Path) -> Result<Vec<LintDiagnostic>, String> {
+    let rust = root.join("rust");
+    let mut paths = Vec::new();
+    for sub in ["src", "benches", "tests"] {
+        let dir = rust.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut paths)?;
+        }
+    }
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let content = std::fs::read_to_string(&p)
+            .map_err(|e| format!("lint: cannot read {}: {e}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push((rel, content));
+    }
+    Ok(lint_files(&files))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(path: &str, content: &str) -> Vec<LintDiagnostic> {
+        lint_files(&[(path.to_string(), content.to_string())])
+    }
+
+    #[test]
+    fn stripper_removes_comments_strings_and_keeps_lines() {
+        let src = "let a = 1; // Instant::now()\nlet s = \"unsafe .pin_window(\"; /* multi\nline SystemTime */ let b = 2;\n";
+        let out = strip_code(src);
+        assert_eq!(out.lines().count(), src.lines().count());
+        assert!(!out.contains("Instant"));
+        assert!(!out.contains("unsafe"));
+        assert!(!out.contains("pin_window"));
+        assert!(out.contains("let a = 1;"));
+        assert!(out.contains("let b = 2;"));
+    }
+
+    #[test]
+    fn stripper_handles_raw_strings_nesting_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) -> char { let r = r#\"unsafe \"quoted\" \"#; /* a /* nested */ unsafe */ let c = 'u'; 'x' }";
+        let out = strip_code(src);
+        assert!(!out.contains("unsafe"), "stripped: {out}");
+        assert!(out.contains("<'a>"), "lifetimes survive: {out}");
+        assert!(out.contains("fn f"));
+    }
+
+    #[test]
+    fn sim_wall_clock_fires_in_sim_only() {
+        let bad = "use std::time::Instant;\nfn t() { let s = Instant::now(); }\n";
+        let d = lint_one("rust/src/sim/timing.rs", bad);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert_eq!(d[0].rule, "sim-wall-clock");
+        assert_eq!(d[0].line, 1);
+        assert_eq!(
+            d[0].message,
+            "wall-clock type `Instant` in sim code: the simulator runs on virtual time only"
+        );
+        // Same content outside sim/ is fine.
+        assert!(lint_one("rust/src/serving/request.rs", bad).is_empty());
+        // Comments mentioning Instant are fine even in sim/.
+        assert!(lint_one("rust/src/sim/timing.rs", "// Instant::now() is banned here\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn kv_pool_discipline_bans_privileged_calls_outside_kv() {
+        let bad = "fn f(a: &mut KvArena, h: KvSeqHandle) { a.pin_window(&[1]); a.grow(h, 4).unwrap(); }\n";
+        let d = lint_one("rust/src/serving/scheduler.rs", bad);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().all(|x| x.rule == "kv-pool-discipline"));
+        // Same line, two calls: diagnostics follow the banned-list
+        // order, so `grow` is reported first.
+        assert_eq!(
+            d[0].message,
+            "privileged KvArena call `grow` outside src/kv/: allocation policy must go \
+             through the KvPool trait"
+        );
+        assert!(d[1].message.contains("`pin_window`"), "{}", d[1].message);
+        // The same calls inside kv/ and check/ are the implementation.
+        assert!(lint_one("rust/src/kv/region.rs", bad).is_empty());
+        assert!(lint_one("rust/src/check/model.rs", bad).is_empty());
+        // Trait-surface calls are fine anywhere.
+        let clean = "fn f(p: &mut dyn KvPool, h: KvSeqHandle) { p.ensure(h, 1).unwrap(); p.release(h); }\n";
+        assert!(lint_one("rust/src/serving/scheduler.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn bench_gate_order_requires_write_before_check() {
+        let bad = "fn main() {\n    gates.check();\n    std::fs::write(OUT, text).unwrap();\n}\n";
+        let d = lint_one("rust/benches/bench_x.rs", bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "bench-gate-order");
+        assert_eq!(d[0].line, 2);
+        let clean = "fn main() {\n    std::fs::write(OUT, text).unwrap();\n    gates.check();\n}\n";
+        assert!(lint_one("rust/benches/bench_x.rs", clean).is_empty());
+        // `--only-` early-exit blocks are the sanctioned exception.
+        let only = "fn main() {\n    if std::env::args().any(|a| a == \"--only-ttft\") {\n        gates.check();\n        return;\n    }\n    std::fs::write(OUT, text).unwrap();\n    gates.check();\n}\n";
+        assert!(lint_one("rust/benches/bench_x.rs", only).is_empty(), "{:?}", lint_one("rust/benches/bench_x.rs", only));
+        // Outside benches/ the rule does not apply.
+        assert!(lint_one("rust/src/bench/gates.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn undocumented_invariant_requires_contract_doc() {
+        let bad = "/// Opens a thing.\npub fn begin_window(&mut self) {}\n";
+        let d = lint_one("rust/src/kv/region.rs", bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "undocumented-invariant");
+        assert_eq!(d[0].line, 2);
+        assert!(d[0].message.starts_with("pub item `begin_window` mentions `window`"));
+        // Undocumented entirely is also a violation.
+        let bare = "pub struct SlotWindow { id: u64 }\n";
+        assert_eq!(lint_one("rust/src/kv/mod.rs", bare).len(), 1);
+        // A doc comment stating the invariant passes (attributes between
+        // doc and decl are fine).
+        let clean = "/// Blocks pinned here can never be freed while the\n/// window is open.\n#[doc(hidden)]\npub fn begin_window(&mut self) {}\n";
+        assert!(lint_one("rust/src/kv/region.rs", clean).is_empty());
+        // Non-pub and needle-free items are out of scope.
+        assert!(lint_one("rust/src/kv/region.rs", "fn begin_window() {}\npub fn append() {}\n")
+            .is_empty());
+        // Outside kv/ and serving/ the rule does not apply.
+        assert!(lint_one("rust/src/sim/serving.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn unsafe_pin_counts_tokens_and_requires_forbid() {
+        let bad = "pub fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let d = lint_one("rust/src/vgpu/pool.rs", bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "unsafe-pin");
+        assert_eq!(d[0].line, 1);
+        // lib.rs without the forbid attribute is itself a violation…
+        let d = lint_one("rust/src/lib.rs", "pub mod kv;\n");
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("#![forbid(unsafe_code)]"));
+        // …and with it, clean: the attribute's `unsafe_code` is not an
+        // `unsafe` token (word boundary).
+        let d = lint_one("rust/src/lib.rs", "#![forbid(unsafe_code)]\npub mod kv;\n");
+        assert!(d.is_empty(), "{d:?}");
+        // Mentions in comments and strings don't count.
+        assert!(lint_one("rust/src/vgpu/pool.rs", "// unsafe is banned\nlet s = \"unsafe\";\n")
+            .is_empty());
+    }
+
+    #[test]
+    fn diagnostics_are_sorted_and_displayed_stably() {
+        let files = vec![
+            (
+                "rust/src/sim/b.rs".to_string(),
+                "fn f() { let t = Instant::now(); }\n".to_string(),
+            ),
+            (
+                "rust/src/sim/a.rs".to_string(),
+                "fn g() { let t = SystemTime::now(); }\n".to_string(),
+            ),
+        ];
+        let d = lint_files(&files);
+        assert_eq!(d.len(), 2);
+        assert!(d[0].file.ends_with("a.rs"));
+        assert_eq!(
+            d[0].to_string(),
+            "rust/src/sim/a.rs:1: [sim-wall-clock] wall-clock type `SystemTime` in sim code: \
+             the simulator runs on virtual time only"
+        );
+        assert_eq!(exit_code(&d), 1);
+        assert_eq!(exit_code(&[]), 0);
+    }
+
+    /// The linter's own acceptance bar: the repo at HEAD is clean. This
+    /// runs in tier-1 (`cargo test`), so a PR that violates a contract
+    /// fails CI even if it forgets to run `make check`.
+    #[test]
+    fn linter_is_clean_on_head() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf();
+        let diags = lint_repo(&root).expect("lint walk succeeds");
+        assert!(
+            diags.is_empty(),
+            "repo must be lint-clean, got {} diagnostics:\n{}",
+            diags.len(),
+            diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -1,0 +1,51 @@
+//! # drift-check — deterministic analysis for the pipelined KV engine
+//!
+//! PR 7's pipelined slot queue and PR 6's refcounted copy-on-write
+//! prefix blocks put real concurrency *structure* into the serving
+//! stack: a plan stage that runs admission, growth, and preemption
+//! against speculated state while a dispatched round is still in
+//! flight, reservation windows that defer frees under in-flight
+//! gathers, and a reap stage that applies parked outcomes through
+//! eviction-tolerant guards. Until this module, the only probe of that
+//! race surface was the jittered `thread-stress` CI job — a
+//! probabilistic smoke test. Before a second thread (the truly-async
+//! device queue, multi-queue heterogeneous rounds — see ROADMAP) makes
+//! every latent plan/reap/bind race real, the seams need a *systematic*
+//! checker. This module holds two zero-dependency engines:
+//!
+//! * [`model`] + [`explore`] — a **bounded interleaving explorer**
+//!   (loom-style, homegrown): the per-slot stage machine
+//!   (PLAN → BIND → EXEC → REAP) and the KV arena's transition system
+//!   (claim / grow / publish / attach / CoW-privatize / window-pin /
+//!   deferred-free / release) modeled as explicit atomic steps driven
+//!   by a replayable [`explore::Schedule`]. The state under test is the
+//!   **real** [`crate::kv::KvArena`] — the model only supplies stage
+//!   ordering and independent shadow bookkeeping. A DFS enumerates
+//!   stage orderings up to a context-switch bound with DPOR-lite
+//!   pruning of commuting steps, asserting the invariant catalog
+//!   (DESIGN.md §6) after every step. A failure prints the exact
+//!   schedule; [`explore::replay`] reproduces it deterministically.
+//!
+//! * [`lint`] — a **repo invariant linter** (`mldrift lint`,
+//!   text/token-level, zero deps) for the cross-layer rules every PR
+//!   has hand-maintained so far: sim code never reads wall clocks,
+//!   KV allocation policy is only reached through the [`crate::kv::KvPool`]
+//!   seam, bench gates assert only after their trajectory write, every
+//!   `pub` window/provisional item in `kv/` and `serving/` documents
+//!   its invariant, and the crate-wide `unsafe` count stays pinned at
+//!   zero (`#![forbid(unsafe_code)]`).
+//!
+//! Both engines run in tier-1 via `make check` (and the explorer's
+//! regression schedules via `cargo test`). The linter walks the repo
+//! with plain `std::fs`; the explorer needs nothing but the crate
+//! itself.
+
+pub mod explore;
+pub mod lint;
+pub mod model;
+
+pub use explore::{
+    depth_projection_check, explore, replay, ExploreBudget, ExploreReport, Schedule, Violation,
+};
+pub use lint::{lint_files, lint_repo, LintDiagnostic};
+pub use model::{CheckConfig, Fault, Step, TraceEvent, World};

@@ -1,0 +1,939 @@
+//! World model for the bounded interleaving explorer: the pipelined
+//! executor's per-slot stage machine and the KV arena's transition
+//! system as one deterministic step-transition system.
+//!
+//! The state under test is the **real** [`KvArena`] — not a
+//! re-implementation. The model contributes three things the arena
+//! cannot check about itself:
+//!
+//! 1. **Stage ordering.** Each pipeline slot cycles
+//!    PLAN → BIND → EXEC → REAP with exactly the happens-before edges
+//!    the engine worker has (`serving/server.rs::worker_loop_pipelined`):
+//!    round `r + 1` is planned only after round `r` is bound (dispatch),
+//!    and bound only after round `r` is reaped — but *execution
+//!    completion* (the device) and *request arrivals* (other threads)
+//!    interleave freely with planning and reaping. Those free
+//!    interleavings are the race surface; the explorer enumerates them.
+//! 2. **Shadow bookkeeping.** Independent per-sequence committed
+//!    lengths, per-window pin sets, and refcount recounts derived from
+//!    live block tables — so a drifting arena is caught by
+//!    disagreement, not by its own (possibly equally wrong) counters.
+//! 3. **The invariant catalog** (DESIGN.md §6), asserted by
+//!    [`World::check_invariants`] after every step.
+//!
+//! Every stage is one *atomic* step because the engine worker today is
+//! a single thread whose stages never interleave internally; what can
+//! reorder against a stage is device completion and arrivals, which is
+//! exactly the alphabet the model exposes. When the truly-async device
+//! queue lands (ROADMAP), splitting EXEC into finer steps is a local
+//! change here.
+
+use crate::error::DriftError;
+use crate::kv::{shareable_prefix_keys, KvArena, KvArenaConfig, KvSeqHandle, PrefixKey};
+use crate::util::div_ceil;
+
+/// Deliberate bug injection for mutation-testing the explorer itself:
+/// the acceptance bar is that the checker *catches* a reintroduced
+/// free-inside-window with a replayable schedule, proving the invariant
+/// catalog has teeth (see `explore::tests`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// No fault: the model drives the arena exactly as the engine does.
+    None,
+    /// At the end of every PLAN stage, complete all deferred frees
+    /// immediately — ignoring the reservation-window pins that exist to
+    /// defer them ([`KvArena::fault_free_deferred_ignoring_pins`]).
+    /// This only *does* anything on schedules where a plan-stage
+    /// preemption or completion hit a member of an in-flight round, so
+    /// catching it requires actually exploring interleavings.
+    FreeInsideWindow,
+}
+
+/// One scenario for the explorer: arena geometry, workload shape, and
+/// the pipeline depth. Small numbers are the point — the explorer
+/// enumerates interleavings exhaustively within its budget, so the
+/// scenario must be the smallest world that still reaches the
+/// transitions under test (attach, CoW, growth, preemption, deferred
+/// free, retention revival).
+#[derive(Clone, Debug)]
+pub struct CheckConfig {
+    /// Pipeline depth (concurrently in-flight rounds; the engine's
+    /// `EngineConfig::pipeline_depth`). 1 = the serial loop.
+    pub depth: usize,
+    /// Number of requests.
+    pub seqs: usize,
+    /// Prompt tokens per request.
+    pub prompt_tokens: usize,
+    /// Decode tokens per request.
+    pub new_tokens: usize,
+    /// Prefill chunk quantum (tokens advanced per prefill round).
+    pub chunk_tokens: usize,
+    /// Arena blocks.
+    pub blocks: usize,
+    /// Tokens per arena block.
+    pub block_tokens: usize,
+    /// Max round members.
+    pub max_batch: usize,
+    /// Identical prompts — exercises publish/attach/CoW. The prompts
+    /// are sized so the shared coverage ends mid-block, so the first
+    /// divergent write *must* copy-on-write the boundary block.
+    pub shared_prefix: bool,
+    /// Prefix-retention LRU capacity (0 = off).
+    pub retain_blocks: usize,
+    /// All requests arrive before the first step (removes arrival
+    /// nondeterminism — required by the depth-projection check, which
+    /// compares traces across schedules).
+    pub arrivals_upfront: bool,
+    /// Injected bug, if any.
+    pub fault: Fault,
+}
+
+impl CheckConfig {
+    /// The contention scenario `make check` explores: a tight arena
+    /// where decode growth must preempt, preemption mid-flight defers
+    /// frees behind the open reservation window, shared prompts attach
+    /// and copy-on-write at the boundary block, and one retained block
+    /// survives between waves. Arrivals are free steps, so admission
+    /// interleaves with every stage. `max_batch` is deliberately one
+    /// below `seqs`: a full-batch world has no active non-member left
+    /// to evict, and the preemption/deferred-free transitions — the
+    /// whole point of the scenario — would be unreachable.
+    pub fn contended() -> Self {
+        CheckConfig {
+            depth: 2,
+            seqs: 3,
+            prompt_tokens: 4,
+            new_tokens: 2,
+            chunk_tokens: 2,
+            blocks: 6,
+            block_tokens: 2,
+            max_batch: 2,
+            shared_prefix: true,
+            retain_blocks: 1,
+            arrivals_upfront: false,
+            fault: Fault::None,
+        }
+    }
+
+    /// The overlap scenario for the depth-projection invariant (P2): a
+    /// roomy arena (no preemption reachable) with upfront arrivals, so
+    /// every depth-2 interleaving must produce exactly the depth-1
+    /// trace per sequence — the model analogue of the engine's
+    /// `pipelined_depth2_is_token_identical_to_depth1` e2e gate.
+    pub fn overlap() -> Self {
+        CheckConfig {
+            depth: 2,
+            seqs: 3,
+            prompt_tokens: 4,
+            new_tokens: 2,
+            chunk_tokens: 2,
+            blocks: 12,
+            block_tokens: 2,
+            max_batch: 3,
+            shared_prefix: true,
+            retain_blocks: 0,
+            arrivals_upfront: true,
+            fault: Fault::None,
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.depth == 0 || self.seqs == 0 || self.chunk_tokens == 0 || self.block_tokens == 0
+        {
+            return Err("check config: depth, seqs, chunk_tokens, block_tokens must be ≥ 1"
+                .to_string());
+        }
+        if self.prompt_tokens == 0 || self.new_tokens == 0 || self.max_batch == 0 {
+            return Err(
+                "check config: prompt_tokens, new_tokens, max_batch must be ≥ 1".to_string()
+            );
+        }
+        // Every sequence must be able to finish alone, else the model
+        // deadlocks by construction rather than by bug.
+        let need = div_ceil(self.prompt_tokens + self.new_tokens, self.block_tokens);
+        if need > self.blocks {
+            return Err(format!(
+                "check config: one sequence needs {need} blocks but the arena has {}",
+                self.blocks
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One atomic transition of the world. `Arrive` models another thread
+/// submitting a request; the four stage steps model the engine worker
+/// and the device. The schedule (see [`crate::check::explore`]) picks
+/// which enabled step fires next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    Arrive(usize),
+    Plan(usize),
+    Bind(usize),
+    Exec(usize),
+    Reap(usize),
+}
+
+/// Who performs a step — the unit the context-switch bound counts.
+/// Mirrors the engine's real thread structure: one worker thread runs
+/// every plan/bind/reap for every slot (so pipeline round-robin is
+/// *not* a context switch), while device completions and request
+/// arrivals are the asynchronous actors that preempt it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Actor {
+    /// The outside world (request arrivals: client threads).
+    Env,
+    /// The single engine worker thread (plan, bind, reap — all slots).
+    Worker,
+    /// The device completing slot `i`'s dispatched round.
+    Device(usize),
+}
+
+impl Step {
+    pub fn actor(&self) -> Actor {
+        match *self {
+            Step::Arrive(_) => Actor::Env,
+            Step::Plan(_) | Step::Bind(_) | Step::Reap(_) => Actor::Worker,
+            Step::Exec(s) => Actor::Device(s),
+        }
+    }
+}
+
+impl std::fmt::Display for Step {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Step::Arrive(i) => write!(f, "arrive({i})"),
+            Step::Plan(s) => write!(f, "plan({s})"),
+            Step::Bind(s) => write!(f, "bind({s})"),
+            Step::Exec(s) => write!(f, "exec({s})"),
+            Step::Reap(s) => write!(f, "reap({s})"),
+        }
+    }
+}
+
+/// Observable event stream — what the depth-projection check compares.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    Admit { seq: usize, attached_tokens: usize },
+    Commit { seq: usize, committed: usize },
+    Preempt { seq: usize },
+    Complete { seq: usize },
+}
+
+impl TraceEvent {
+    pub fn seq(&self) -> usize {
+        match *self {
+            TraceEvent::Admit { seq, .. }
+            | TraceEvent::Commit { seq, .. }
+            | TraceEvent::Preempt { seq }
+            | TraceEvent::Complete { seq } => seq,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SeqPhase {
+    Unarrived,
+    Waiting,
+    Active,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct SeqModel {
+    prompt: Vec<i32>,
+    keys: Vec<PrefixKey>,
+    /// prompt + new tokens: committed positions at completion.
+    target: usize,
+    phase: SeqPhase,
+    handle: Option<KvSeqHandle>,
+    /// Shadow committed length — must mirror `arena.len(handle)` (K6).
+    committed: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SlotStage {
+    Idle,
+    Planned,
+    Bound,
+    Executed,
+}
+
+/// A round member: fixed at plan (projected) and at bind (reconciled).
+/// The handle is captured so a preempt-then-readmit between stages can
+/// never be mistaken for the original membership (the engine's
+/// generation-tag guard, mirrored).
+#[derive(Clone, Copy, Debug)]
+struct Member {
+    seq: usize,
+    /// Rows this round will commit for the sequence (P1 compares the
+    /// plan's projection against the bind's reconciliation).
+    rows: usize,
+    /// Rows of reservation the capacity pass must secure — at plan this
+    /// is in-flight rows *plus* `rows` (speculative: the plan reserves
+    /// through the projected state), at bind just `rows`.
+    need: usize,
+    handle: KvSeqHandle,
+}
+
+#[derive(Clone, Debug)]
+struct SlotModel {
+    stage: SlotStage,
+    round: usize,
+    planned: Vec<Member>,
+    bound: Vec<Member>,
+    /// Open reservation window id (`KvSlotWindow::window_id`) — the
+    /// token itself is deliberately `!Clone`, and DFS worlds clone.
+    window: Option<u64>,
+    /// Shadow pin set: every block the window pinned at bind. The K3
+    /// check asserts none of these is ever on the free list while the
+    /// window is open — independent of the arena's own pin counters.
+    window_blocks: Vec<usize>,
+}
+
+impl SlotModel {
+    fn idle() -> Self {
+        SlotModel {
+            stage: SlotStage::Idle,
+            round: 0,
+            planned: Vec::new(),
+            bound: Vec::new(),
+            window: None,
+            window_blocks: Vec::new(),
+        }
+    }
+}
+
+/// The whole explorable state: real arena + model shadow. `Clone` is
+/// what makes DFS branching cheap — the scenario keeps every Vec tiny.
+#[derive(Clone, Debug)]
+pub struct World {
+    cfg: CheckConfig,
+    arena: KvArena,
+    seqs: Vec<SeqModel>,
+    slots: Vec<SlotModel>,
+    planned_rounds: usize,
+    bound_rounds: usize,
+    reaped_rounds: usize,
+    /// Observable events, in order.
+    pub trace: Vec<TraceEvent>,
+    /// Preemptions performed (plan- or bind-stage capacity fights).
+    pub preemptions: u32,
+    /// Releases whose frees were deferred behind an open window.
+    pub deferred_frees: u32,
+}
+
+impl World {
+    pub fn new(cfg: &CheckConfig) -> Result<World, String> {
+        cfg.validate()?;
+        let mut arena = KvArena::new(KvArenaConfig {
+            layers: 1,
+            heads_kv: 1,
+            head_dim: 2,
+            block_tokens: cfg.block_tokens,
+            num_blocks: cfg.blocks,
+        });
+        arena.set_prefix_retention(cfg.retain_blocks);
+        let mut seqs = Vec::with_capacity(cfg.seqs);
+        for i in 0..cfg.seqs {
+            let prompt: Vec<i32> = if cfg.shared_prefix {
+                vec![7; cfg.prompt_tokens]
+            } else {
+                (0..cfg.prompt_tokens).map(|j| (i * 31 + j) as i32 + 1).collect()
+            };
+            let keys = shareable_prefix_keys(&prompt, cfg.block_tokens);
+            seqs.push(SeqModel {
+                target: prompt.len() + cfg.new_tokens,
+                prompt,
+                keys,
+                phase: if cfg.arrivals_upfront { SeqPhase::Waiting } else { SeqPhase::Unarrived },
+                handle: None,
+                committed: 0,
+            });
+        }
+        Ok(World {
+            cfg: cfg.clone(),
+            arena,
+            seqs,
+            slots: (0..cfg.depth).map(|_| SlotModel::idle()).collect(),
+            planned_rounds: 0,
+            bound_rounds: 0,
+            reaped_rounds: 0,
+            trace: Vec::new(),
+            preemptions: 0,
+            deferred_frees: 0,
+        })
+    }
+
+    /// All requests served, no slot mid-round.
+    pub fn is_terminal(&self) -> bool {
+        self.seqs.iter().all(|s| s.phase == SeqPhase::Done)
+            && self.slots.iter().all(|s| s.stage == SlotStage::Idle)
+    }
+
+    pub fn arena(&self) -> &KvArena {
+        &self.arena
+    }
+
+    pub fn done_seqs(&self) -> usize {
+        self.seqs.iter().filter(|s| s.phase == SeqPhase::Done).count()
+    }
+
+    /// Whether any copy-on-write privatization happened (divergent
+    /// write into an attached shared block) — read off the arena's own
+    /// cumulative counter, which starts at zero per world.
+    pub fn cow_seen(&self) -> bool {
+        self.arena.cow_copies() > 0
+    }
+
+    /// Next prefill chunk (or one decode row) for a sequence at a given
+    /// committed length — the plan's projection and the bind's
+    /// reconciliation share this one formula, which is what makes P1
+    /// (plan never under-reserves) hold: a surviving member's committed
+    /// length at bind equals exactly the plan's projection (the
+    /// in-flight outcome either landed in full or the handle changed
+    /// and the member was dropped), so the reconciled rows equal the
+    /// projected rows.
+    fn rows_at(&self, i: usize, committed: usize) -> usize {
+        let s = &self.seqs[i];
+        if committed < s.prompt.len() {
+            self.cfg.chunk_tokens.min(s.prompt.len() - committed)
+        } else {
+            1
+        }
+    }
+
+    /// Would a PLAN step make progress right now? Guards against
+    /// planning empty rounds forever: there must be an active sequence
+    /// with work left, or an admissible waiting head (admission is
+    /// FIFO — a blocked head defers everyone behind it, exactly like
+    /// the engine's deferred admission).
+    fn plan_would_progress(&self) -> bool {
+        if self
+            .seqs
+            .iter()
+            .any(|s| s.phase == SeqPhase::Active && s.committed < s.target)
+        {
+            return true;
+        }
+        for s in &self.seqs {
+            if s.phase == SeqPhase::Waiting {
+                let keys: &[PrefixKey] =
+                    if self.cfg.shared_prefix { &s.keys } else { &[] };
+                return self.arena.can_claim_prefixed(s.prompt.len(), keys);
+            }
+        }
+        false
+    }
+
+    /// The steps the schedule may choose from in this state. Encodes
+    /// the engine's happens-before edges: plan(r+1) after bind(r),
+    /// bind(r+1) after reap(r), reap(r) after exec(r); exec (device
+    /// completion) and arrivals interleave freely.
+    pub fn enabled_steps(&self) -> Vec<Step> {
+        let mut steps = Vec::new();
+        for (i, s) in self.seqs.iter().enumerate() {
+            if s.phase == SeqPhase::Unarrived {
+                steps.push(Step::Arrive(i));
+            }
+        }
+        if self.planned_rounds == self.bound_rounds
+            && self.planned_rounds - self.reaped_rounds < self.cfg.depth
+            && self.plan_would_progress()
+        {
+            let s = self.planned_rounds % self.cfg.depth;
+            if self.slots[s].stage == SlotStage::Idle {
+                steps.push(Step::Plan(s));
+            }
+        }
+        for (si, slot) in self.slots.iter().enumerate() {
+            match slot.stage {
+                SlotStage::Planned => {
+                    if self.reaped_rounds >= slot.round {
+                        steps.push(Step::Bind(si));
+                    }
+                }
+                SlotStage::Bound => steps.push(Step::Exec(si)),
+                SlotStage::Executed => {
+                    if self.reaped_rounds == slot.round {
+                        steps.push(Step::Reap(si));
+                    }
+                }
+                SlotStage::Idle => {}
+            }
+        }
+        steps
+    }
+
+    /// Apply one step. `Err` is a model-detected violation (P1, a
+    /// reservation the arena rejected after its gate passed, an
+    /// un-enabled step in a replayed schedule, …) — the explorer turns
+    /// it into a [`crate::check::Violation`] with the schedule attached.
+    pub fn apply_step(&mut self, step: Step) -> Result<(), String> {
+        match step {
+            Step::Arrive(i) => {
+                if self.seqs[i].phase != SeqPhase::Unarrived {
+                    return Err(format!("arrive({i}) applied twice"));
+                }
+                self.seqs[i].phase = SeqPhase::Waiting;
+                Ok(())
+            }
+            Step::Plan(s) => self.plan(s),
+            Step::Bind(s) => self.bind(s),
+            Step::Exec(s) => {
+                if self.slots[s].stage != SlotStage::Bound {
+                    return Err(format!("exec({s}) on a slot that is not bound"));
+                }
+                // Device completion: the kernel's writes land in rows
+                // the bind reserved and the window pins — nothing
+                // arena-visible changes until the reap applies them.
+                self.slots[s].stage = SlotStage::Executed;
+                Ok(())
+            }
+            Step::Reap(s) => self.reap(s),
+        }
+    }
+
+    /// Lowest-progress-youngest victim among active sequences (the
+    /// scheduler's `choose_victim` shape, minus FIFO-head pinning —
+    /// starvation policy is out of scope here, memory safety is not).
+    /// `exclude` are sequences that must keep their reservations (the
+    /// member being grown, or the round being bound).
+    fn choose_victim(&self, exclude: &[usize]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.seqs.len() {
+            if exclude.contains(&i) || self.seqs[i].phase != SeqPhase::Active {
+                continue;
+            }
+            best = match best {
+                None => Some(i),
+                Some(b) => {
+                    let (cb, ci) = (self.seqs[b].committed, self.seqs[i].committed);
+                    if ci < cb || (ci == cb && i > b) {
+                        Some(i)
+                    } else {
+                        Some(b)
+                    }
+                }
+            };
+        }
+        best
+    }
+
+    /// Preempt `v`: release its blocks (deferred when an open window
+    /// pins them — the transition under test), park it for
+    /// re-admission, reset progress (recompute semantics: re-prefill
+    /// reproduces everything it lost, same contract as the engine).
+    fn preempt(&mut self, v: usize) {
+        let h = self.seqs[v].handle.take().expect("victim must hold a handle");
+        let before = self.arena.deferred_blocks();
+        let _ = self.arena.release_blocks(h);
+        if self.arena.deferred_blocks() > before {
+            self.deferred_frees += 1;
+        }
+        let s = &mut self.seqs[v];
+        s.phase = SeqPhase::Waiting;
+        s.committed = 0;
+        self.preemptions += 1;
+        self.trace.push(TraceEvent::Preempt { seq: v });
+    }
+
+    /// Reserve `rows` for every member, preempting victims on
+    /// exhaustion — the shared capacity loop both PLAN (projected
+    /// needs) and BIND (reconciled needs) run, exactly like the
+    /// engine's `ensure_round_capacity` is one function called from
+    /// both stages. A member with no victim left is dropped from the
+    /// round (deferred, not failed). Restarts from the front after any
+    /// preemption: `ensure` is idempotent for already-reserved rows,
+    /// and each restart has strictly fewer active sequences, so the
+    /// loop terminates.
+    fn ensure_members(&mut self, members: &mut Vec<Member>) -> Result<(), String> {
+        let mut idx = 0;
+        while idx < members.len() {
+            let m = members[idx];
+            if self.seqs[m.seq].handle != Some(m.handle) {
+                members.remove(idx);
+                continue;
+            }
+            match self.arena.ensure(m.handle, m.need) {
+                Ok(_) => idx += 1,
+                Err(DriftError::Memory(_)) => {
+                    let keep: Vec<usize> = members.iter().map(|p| p.seq).collect();
+                    match self.choose_victim(&keep) {
+                        Some(v) => {
+                            self.preempt(v);
+                            idx = 0;
+                        }
+                        None => {
+                            members.remove(idx);
+                        }
+                    }
+                }
+                Err(e) => {
+                    return Err(format!(
+                        "ensure(seq {}, {} rows): unexpected error: {e}",
+                        m.seq, m.need
+                    ))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// PLAN: admission (FIFO, prefix-attaching, dedup-aware gate),
+    /// projected membership, and the plan-stage capacity pass — all
+    /// against state that may still have a round in flight, so a victim
+    /// may be an in-flight member (its outcome is dropped at reap, its
+    /// blocks stay pinned until the window closes).
+    fn plan(&mut self, si: usize) -> Result<(), String> {
+        if self.slots[si].stage != SlotStage::Idle {
+            return Err(format!("plan({si}) on a busy slot"));
+        }
+        // Admission: paged shape — gate and claim the *context* only,
+        // decode grows block-by-block (that growth is where preemption
+        // lives). Attached prefix blocks skip their prefill: committed
+        // starts at the attach coverage.
+        for i in 0..self.seqs.len() {
+            if self.seqs[i].phase != SeqPhase::Waiting {
+                continue;
+            }
+            let claim_tokens = self.seqs[i].prompt.len();
+            let keys: Vec<PrefixKey> = if self.cfg.shared_prefix {
+                self.seqs[i].keys.clone()
+            } else {
+                Vec::new()
+            };
+            if !self.arena.can_claim_prefixed(claim_tokens, &keys) {
+                break; // FIFO: a blocked head defers everyone behind it
+            }
+            let (h, _attached_blocks) = self
+                .arena
+                .claim_prefixed_detailed(claim_tokens, &keys)
+                .map_err(|e| format!("admission claim for seq {i} failed after its gate passed: {e}"))?;
+            let attached_tokens = self.arena.len(h);
+            let s = &mut self.seqs[i];
+            s.handle = Some(h);
+            s.committed = attached_tokens;
+            s.phase = SeqPhase::Active;
+            self.trace.push(TraceEvent::Admit { seq: i, attached_tokens });
+        }
+        // Speculative projection (PR 7's plan-ahead): the plan assumes
+        // the in-flight round lands, so each sequence is projected
+        // forward by its in-flight rows and the plan-stage ensure
+        // reserves *through* the projected round. This is precisely
+        // where growth — and therefore preemption, and therefore
+        // deferred frees — can happen while the in-flight round's
+        // reservation window is still open.
+        let mut inflight: Vec<usize> = vec![0; self.seqs.len()];
+        for slot in &self.slots {
+            if matches!(slot.stage, SlotStage::Bound | SlotStage::Executed) {
+                for m in &slot.bound {
+                    if self.seqs[m.seq].handle == Some(m.handle) {
+                        inflight[m.seq] += m.rows;
+                    }
+                }
+            }
+        }
+        // Membership rotates with the round (the scheduler's fairness
+        // rotation): without rotation the same sequences are members
+        // forever and a pinned in-flight member could never become a
+        // preemption victim.
+        let n = self.seqs.len();
+        let mut planned: Vec<Member> = Vec::new();
+        for k in 0..n {
+            if planned.len() >= self.cfg.max_batch {
+                break;
+            }
+            let i = (self.planned_rounds + k) % n;
+            let s = &self.seqs[i];
+            if s.phase != SeqPhase::Active {
+                continue;
+            }
+            let projected = s.committed + inflight[i];
+            if projected >= s.target {
+                continue; // projected to complete at the in-flight reap
+            }
+            let rows = self.rows_at(i, projected);
+            planned.push(Member {
+                seq: i,
+                rows,
+                need: inflight[i] + rows,
+                handle: s.handle.expect("active sequence holds a handle"),
+            });
+        }
+        self.ensure_members(&mut planned)?;
+        if self.cfg.fault == Fault::FreeInsideWindow && self.arena.deferred_blocks() > 0 {
+            self.arena.fault_free_deferred_ignoring_pins();
+        }
+        let slot = &mut self.slots[si];
+        slot.stage = SlotStage::Planned;
+        slot.round = self.planned_rounds;
+        slot.planned = planned;
+        self.planned_rounds += 1;
+        Ok(())
+    }
+
+    /// BIND: reconcile the projected round against now-authoritative
+    /// state (the previous round has been reaped), assert P1, re-run
+    /// the capacity pass for rows the reap consumed, and open the
+    /// reservation window over every surviving member's block table.
+    fn bind(&mut self, si: usize) -> Result<(), String> {
+        if self.slots[si].stage != SlotStage::Planned {
+            return Err(format!("bind({si}) on a slot that is not planned"));
+        }
+        let planned = self.slots[si].planned.clone();
+        let mut bound: Vec<Member> = Vec::new();
+        for m in &planned {
+            let s = &self.seqs[m.seq];
+            if s.handle != Some(m.handle) || s.phase != SeqPhase::Active {
+                continue; // preempted at plan: dropped from the round
+            }
+            if s.committed >= s.target {
+                continue; // completed at the previous reap
+            }
+            let rows = self.rows_at(m.seq, s.committed);
+            if rows > m.rows {
+                return Err(format!(
+                    "P1 plan under-reserved: seq {} planned {} rows, bind needs {rows}",
+                    m.seq, m.rows
+                ));
+            }
+            bound.push(Member { seq: m.seq, rows, need: rows, handle: m.handle });
+        }
+        self.ensure_members(&mut bound)?;
+        let mut blocks: Vec<usize> = Vec::new();
+        for m in &bound {
+            let t = self
+                .arena
+                .block_table(m.handle)
+                .map_err(|e| format!("bind block_table(seq {}): {e}", m.seq))?;
+            blocks.extend_from_slice(t);
+        }
+        let token = self.arena.pin_window(&blocks);
+        let slot = &mut self.slots[si];
+        slot.window = Some(token.window_id());
+        slot.window_blocks = blocks;
+        slot.bound = bound;
+        slot.stage = SlotStage::Bound;
+        self.bound_rounds += 1;
+        Ok(())
+    }
+
+    /// REAP: apply the round's outcomes through the same
+    /// eviction-tolerant guard as the engine (a member whose handle
+    /// changed since bind was preempted mid-flight — its outcome is
+    /// dropped), publish newly committed prefix slices, release
+    /// completed sequences (deferred behind the still-open window),
+    /// then close the window, completing every deferred free whose
+    /// last pin dropped.
+    fn reap(&mut self, si: usize) -> Result<(), String> {
+        if self.slots[si].stage != SlotStage::Executed {
+            return Err(format!("reap({si}) on a slot that has not executed"));
+        }
+        let bound = std::mem::take(&mut self.slots[si].bound);
+        for m in &bound {
+            if self.seqs[m.seq].handle != Some(m.handle) {
+                continue; // dropped outcome; re-prefill recomputes it
+            }
+            self.arena.append(m.handle, m.rows).map_err(|e| {
+                format!(
+                    "reap append(seq {}, {} rows) failed though bind reserved them: {e}",
+                    m.seq, m.rows
+                )
+            })?;
+            self.seqs[m.seq].committed += m.rows;
+            self.trace.push(TraceEvent::Commit {
+                seq: m.seq,
+                committed: self.seqs[m.seq].committed,
+            });
+            if self.cfg.shared_prefix {
+                let keys = self.seqs[m.seq].keys.clone();
+                self.arena
+                    .publish_prefix(m.handle, &keys)
+                    .map_err(|e| format!("reap publish(seq {}): {e}", m.seq))?;
+            }
+            if self.seqs[m.seq].committed == self.seqs[m.seq].target {
+                let h = self.seqs[m.seq].handle.take().expect("guarded above");
+                let before = self.arena.deferred_blocks();
+                let _ = self.arena.release_blocks(h);
+                if self.arena.deferred_blocks() > before {
+                    self.deferred_frees += 1;
+                }
+                self.seqs[m.seq].phase = SeqPhase::Done;
+                self.trace.push(TraceEvent::Complete { seq: m.seq });
+            }
+        }
+        let id = self
+            .slots[si]
+            .window
+            .take()
+            .ok_or_else(|| format!("reap({si}): no open reservation window"))?;
+        if self.arena.unpin_window_raw(id).is_none() {
+            return Err(format!("reap({si}): window {id} was already closed"));
+        }
+        let slot = &mut self.slots[si];
+        slot.window_blocks.clear();
+        slot.planned.clear();
+        slot.stage = SlotStage::Idle;
+        self.reaped_rounds += 1;
+        Ok(())
+    }
+
+    /// The invariant catalog (DESIGN.md §6), asserted after every step.
+    /// K1/K5 delegate to the arena's own structural `verify`; K2, K3
+    /// and K6 are *shadow* checks computed from model state, so arena
+    /// bookkeeping bugs are caught by disagreement.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.arena
+            .verify()
+            .map_err(|e| format!("K1/K5 arena structural verify: {e}"))?;
+        // K2: refcounts agree exactly with live block-table references.
+        let nb = self.arena.config().num_blocks;
+        let mut counts = vec![0u32; nb];
+        for (i, s) in self.seqs.iter().enumerate() {
+            if let Some(h) = s.handle {
+                let table = self
+                    .arena
+                    .block_table(h)
+                    .map_err(|e| format!("K4 live handle of seq {i} rejected: {e}"))?;
+                for &b in table {
+                    counts[b] += 1;
+                }
+            }
+        }
+        for (b, &c) in counts.iter().enumerate() {
+            let rc = self.arena.block_refcount(b);
+            if c != rc {
+                return Err(format!(
+                    "K2 refcount drift on block {b}: {c} live table references vs arena refcount {rc}"
+                ));
+            }
+        }
+        // K3: no free inside an open reservation window.
+        for (si, slot) in self.slots.iter().enumerate() {
+            if slot.window.is_some() {
+                for &b in &slot.window_blocks {
+                    if self.arena.is_block_free(b) {
+                        return Err(format!(
+                            "K3 block {b} freed inside slot {si}'s open reservation window"
+                        ));
+                    }
+                }
+            }
+        }
+        // K6: shadow committed lengths mirror the arena exactly.
+        for (i, s) in self.seqs.iter().enumerate() {
+            if let Some(h) = s.handle {
+                let l = self.arena.len(h);
+                if l != s.committed {
+                    return Err(format!(
+                        "K6 committed-length drift on seq {i}: model {} vs arena {l}",
+                        s.committed
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Greedy serial run: always apply the first enabled step.
+    fn run_serial(cfg: &CheckConfig) -> World {
+        let mut w = World::new(cfg).expect("valid config");
+        let mut steps = 0;
+        while !w.is_terminal() {
+            let enabled = w.enabled_steps();
+            assert!(!enabled.is_empty(), "P3 deadlock: no enabled step in a non-terminal state");
+            w.apply_step(enabled[0]).expect("serial step applies");
+            w.check_invariants().expect("invariants after serial step");
+            steps += 1;
+            assert!(steps < 10_000, "serial run did not terminate");
+        }
+        w
+    }
+
+    #[test]
+    fn contended_serial_run_drains_and_stays_invariant_clean() {
+        let w = run_serial(&CheckConfig::contended());
+        assert_eq!(w.done_seqs(), 3);
+        assert_eq!(w.arena().seq_count(), 0, "drained arena holds no sequences");
+        // The scenario is sized so even the first-choice schedule hits
+        // the transitions under test: decode growth exhausts the arena
+        // (→ preemption of the non-member sequence), and completions
+        // release while their own round's window is still open
+        // (→ deferred frees).
+        assert!(w.preemptions >= 1, "contended scenario must preempt, got {}", w.preemptions);
+        assert!(
+            w.deferred_frees >= 1,
+            "completion under an open window must defer frees, got {}",
+            w.deferred_frees
+        );
+    }
+
+    #[test]
+    fn overlap_serial_run_is_preemption_free() {
+        let w = run_serial(&CheckConfig::overlap());
+        assert_eq!(w.done_seqs(), 3);
+        assert_eq!(w.preemptions, 0, "roomy arena must never preempt");
+    }
+
+    #[test]
+    fn depth1_config_has_singleton_schedules() {
+        let mut cfg = CheckConfig::overlap();
+        cfg.depth = 1;
+        let mut w = World::new(&cfg).expect("valid config");
+        while !w.is_terminal() {
+            let enabled = w.enabled_steps();
+            assert_eq!(
+                enabled.len(),
+                1,
+                "depth-1 + upfront arrivals must be fully deterministic, got {enabled:?}"
+            );
+            w.apply_step(enabled[0]).expect("step applies");
+            w.check_invariants().expect("invariants hold");
+        }
+    }
+
+    #[test]
+    fn shared_prefix_attaches_on_second_wave() {
+        // Serial contended run: the prompts are identical, so once the
+        // first sequence publishes its prefix the later admissions must
+        // attach a nonzero coverage.
+        let w = run_serial(&CheckConfig::contended());
+        let attached: Vec<usize> = w
+            .trace
+            .iter()
+            .filter_map(|e| match *e {
+                TraceEvent::Admit { attached_tokens, .. } => Some(attached_tokens),
+                _ => None,
+            })
+            .collect();
+        assert!(attached.len() >= 3, "every sequence admits at least once");
+        assert!(
+            attached.iter().any(|&a| a > 0),
+            "identical prompts must attach published prefix blocks at least once: {attached:?}"
+        );
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let mut cfg = CheckConfig::contended();
+        cfg.blocks = 1; // one sequence alone cannot fit
+        assert!(World::new(&cfg).is_err());
+        let mut cfg = CheckConfig::contended();
+        cfg.chunk_tokens = 0;
+        assert!(World::new(&cfg).is_err());
+    }
+
+    #[test]
+    fn un_enabled_steps_are_rejected_not_applied() {
+        let mut w = World::new(&CheckConfig::contended()).expect("valid config");
+        // Nothing has been planned: binding slot 0 is a model error.
+        assert!(w.apply_step(Step::Bind(0)).is_err());
+        assert!(w.apply_step(Step::Reap(0)).is_err());
+    }
+}

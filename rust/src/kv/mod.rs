@@ -397,6 +397,21 @@ pub struct KvSlotWindow {
     id: u64,
 }
 
+impl KvSlotWindow {
+    /// Raw id of this window token — a checker seam, not an escape
+    /// hatch. The drift-check explorer ([`crate::check`]) must snapshot
+    /// whole worlds (its DFS clones the arena at every branch point),
+    /// and a `!Clone` token cannot live inside a cloned world, so the
+    /// model records ids and closes windows through
+    /// [`KvArena::unpin_window_raw`]. Production code must keep holding
+    /// the token itself: only the token, never the id, proves a window
+    /// is still open exactly once.
+    #[doc(hidden)]
+    pub fn window_id(&self) -> u64 {
+        self.id
+    }
+}
+
 /// Shared KV arena: block-granular slot allocation over one contiguous
 /// region, with per-sequence length bookkeeping and an explicit
 /// overflow→backpressure contract ([`KvArena::can_claim`] +
@@ -602,9 +617,51 @@ impl KvArena {
         freed
     }
 
+    /// Close an open reservation window by raw id — the checker-only
+    /// twin of [`unpin_window`](Self::unpin_window), used by the
+    /// drift-check explorer whose cloned worlds cannot hold the `!Clone`
+    /// token (see [`KvSlotWindow::window_id`]). Returns `None` when no
+    /// window with that id is open, so a model-level double close is
+    /// surfaced as a violation instead of a panic. The same deferred
+    /// frees complete here as through the token path — the two must
+    /// never diverge.
+    #[doc(hidden)]
+    pub fn unpin_window_raw(&mut self, id: u64) -> Option<Vec<usize>> {
+        if !self.windows.contains_key(&id) {
+            return None;
+        }
+        Some(self.unpin_window(KvSlotWindow { id }))
+    }
+
     /// Open reservation windows (in-flight pipeline slots).
     pub fn open_windows(&self) -> usize {
         self.windows.len()
+    }
+
+    /// Is block `b` on the free list right now? Checker accessor: the
+    /// no-free-inside-window invariant (K3 in DESIGN.md §6) must
+    /// distinguish *free* (allocatable) from the other refcount-zero
+    /// homes (deferred, retained), which `block_refcount` alone cannot.
+    pub fn is_block_free(&self, b: usize) -> bool {
+        self.free.contains(&b)
+    }
+
+    /// FAULT-INJECTION SEAM — drift-check mutation testing only. Moves
+    /// every deferred block straight to the free list even though open
+    /// windows still pin it, deliberately reintroducing the
+    /// free-inside-window bug class that deferred frees exist to
+    /// prevent: an in-flight round's gathers can now race a re-claim of
+    /// the same storage. The bounded interleaving explorer must catch
+    /// this within its budget and print a replayable schedule
+    /// (`check::explore` pins that in a test); nothing outside
+    /// `check::` may call it, which `mldrift lint` enforces.
+    #[doc(hidden)]
+    pub fn fault_free_deferred_ignoring_pins(&mut self) -> usize {
+        let n = self.deferred.len();
+        for b in std::mem::take(&mut self.deferred) {
+            self.free.push(b);
+        }
+        n
     }
 
     /// Blocks whose free is currently deferred behind an open window.

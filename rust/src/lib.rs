@@ -35,6 +35,16 @@
 // Everything else in clippy's default set stays a hard error.
 #![allow(clippy::module_inception)]
 #![allow(clippy::needless_range_loop)]
+// The crate is 100% safe Rust and stays that way: every cross-thread
+// seam (the engine worker, reply channels, the metrics registry) is
+// built on std's safe primitives, so `unsafe` would only ever appear as
+// an optimization shortcut — exactly the kind of latent race surface
+// the pipelined executor cannot afford. `mldrift lint` (rule
+// `unsafe-pin`) pins the count of `unsafe` tokens at zero; if a future
+// PR has a genuine need, downgrade this to `#![deny(unsafe_code)]`,
+// document the invariant at each `#[allow]` site, and re-pin the count
+// there.
+#![forbid(unsafe_code)]
 
 pub mod error;
 pub mod util;
@@ -56,5 +66,6 @@ pub mod runtime;
 pub mod serving;
 pub mod baselines;
 pub mod bench;
+pub mod check;
 
 pub use error::{DriftError, Result};

@@ -89,6 +89,48 @@ fn cli() -> Cli {
                 positionals: vec![],
             },
             CommandSpec {
+                name: "lint",
+                about: "repo invariant linter: sim wall-clock ban, KvPool seam discipline, \
+                        bench gate order, documented window/provisional invariants, and the \
+                        crate-wide unsafe pin (`make check`)",
+                args: vec![opt(
+                    "root",
+                    "..",
+                    "repository root — the directory containing rust/ (default assumes the \
+                     binary runs from rust/)",
+                )],
+                positionals: vec![],
+            },
+            CommandSpec {
+                name: "drift-check",
+                about: "bounded interleaving explorer for the pipelined KV engine: enumerate \
+                        plan/bind/exec/reap schedules and assert the DESIGN.md §6 invariant \
+                        catalog after every step (`make check`)",
+                args: vec![
+                    opt("config", "contended", "scenario: contended | overlap"),
+                    opt("max-schedules", "20000", "DFS leaf budget"),
+                    opt("max-steps", "96", "per-schedule step cap"),
+                    opt("switch-bound", "8", "preemptive context-switch bound"),
+                    opt(
+                        "replay",
+                        "",
+                        "replay one dot-separated schedule (as printed by a violation, e.g. \
+                         0.0.1.2) instead of exploring",
+                    ),
+                    opt(
+                        "fault",
+                        "none",
+                        "inject a fault the explorer must catch: none | free-inside-window",
+                    ),
+                    flag(
+                        "projection",
+                        "also check the depth-projection invariant P2 (pipelining must not \
+                         change per-sequence event traces; runs the overlap scenario)",
+                    ),
+                ],
+                positionals: vec![],
+            },
+            CommandSpec {
                 name: "bench-check",
                 about: "validate BENCH_batched.json's schema and gate tokens/s regressions \
                         (>10%) against a committed baseline (`make bench-check`)",
@@ -254,6 +296,93 @@ fn main() -> mldrift::Result<()> {
                 }
             }
             println!("\n{}", engine.stats().report);
+        }
+        "lint" => {
+            use mldrift::check::lint_repo;
+            let root = m.req("root");
+            let diags = lint_repo(std::path::Path::new(root)).map_err(DriftError::Config)?;
+            if diags.is_empty() {
+                println!(
+                    "lint OK: repo invariants hold (sim-wall-clock, kv-pool-discipline, \
+                     bench-gate-order, undocumented-invariant, unsafe-pin)"
+                );
+            } else {
+                for d in &diags {
+                    eprintln!("{d}");
+                }
+                return Err(DriftError::Config(format!(
+                    "lint failed: {} violation(s)",
+                    diags.len()
+                )));
+            }
+        }
+        "drift-check" => {
+            use mldrift::check::{
+                depth_projection_check, explore, replay, CheckConfig, ExploreBudget, Fault,
+                Schedule,
+            };
+            let mut cfg = match m.req("config") {
+                "contended" => CheckConfig::contended(),
+                "overlap" => CheckConfig::overlap(),
+                other => {
+                    return Err(DriftError::Config(format!(
+                        "unknown --config {other:?} (expected contended | overlap)"
+                    )))
+                }
+            };
+            cfg.fault = match m.req("fault") {
+                "none" => Fault::None,
+                "free-inside-window" => Fault::FreeInsideWindow,
+                other => {
+                    return Err(DriftError::Config(format!(
+                        "unknown --fault {other:?} (expected none | free-inside-window)"
+                    )))
+                }
+            };
+            let budget = ExploreBudget {
+                max_schedules: m.parse("max-schedules")?,
+                max_steps: m.parse("max-steps")?,
+                switch_bound: m.parse("switch-bound")?,
+            };
+            let replay_arg = m.req("replay");
+            if !replay_arg.is_empty() {
+                let schedule: Schedule = replay_arg.parse().map_err(DriftError::Config)?;
+                let world = replay(&cfg, &schedule).map_err(|v| {
+                    eprintln!("{v}");
+                    DriftError::Config("drift-check replay reproduced the violation".into())
+                })?;
+                println!(
+                    "replay OK: {} steps, {} seqs done, {} preemptions, {} deferred frees, \
+                     invariants clean",
+                    schedule.0.len(),
+                    world.done_seqs(),
+                    world.preemptions,
+                    world.deferred_frees
+                );
+            } else {
+                println!(
+                    "drift-check: exploring scenario `{}` (fault: {})",
+                    m.req("config"),
+                    m.req("fault")
+                );
+                let report = explore(&cfg, &budget).map_err(|v| {
+                    eprintln!("{v}");
+                    DriftError::Config("drift-check found an invariant violation".into())
+                })?;
+                print!("{report}");
+                if m.flag("projection") {
+                    let r = depth_projection_check(&CheckConfig::overlap(), &budget)
+                        .map_err(|v| {
+                            eprintln!("{v}");
+                            DriftError::Config("depth-projection check (P2) failed".into())
+                        })?;
+                    println!(
+                        "projection OK: every depth-2 per-seq trace matches the depth-1 \
+                         canonical run ({} schedules compared)",
+                        r.schedules_explored
+                    );
+                }
+            }
         }
         "bench-check" => {
             use mldrift::bench::check_trajectory;

@@ -1093,6 +1093,14 @@ fn slot_jitter_us() -> u64 {
 /// argmaxes — so at most one slot can be in flight ahead of the plan:
 /// depths above 2 are structurally identical to depth 2 (see
 /// DESIGN.md §pipelined executor and the matching sim sweep).
+///
+/// This loop's stage machine is mirrored step-for-step by the
+/// drift-check interleaving explorer ([`crate::check::model`]), which
+/// exhaustively enumerates plan/bind/exec/reap orderings against the
+/// real `KvArena` and asserts the DESIGN.md §6 invariant catalog after
+/// every step — when changing the ordering contract here (e.g. for the
+/// truly-async device queue), change the model FIRST and let the
+/// explorer veto the design before the engine learns it.
 fn worker_loop_pipelined(
     model: TinyLmRuntime,
     draft: Option<(TinyLmRuntime, usize)>,

@@ -16,6 +16,13 @@
 //! decode is memory-bound (so weight quantization speeds decode by the
 //! byte ratio but barely moves prefill), int8 extensions move only
 //! prefill, and missing tensor-core access costs NVIDIA prefill 4–7×.
+//!
+//! Everything in this module runs on **virtual time only**: simulated
+//! seconds come from the roofline formula, never from the host clock,
+//! which is what makes every simulated latency bit-reproducible across
+//! machines and CI runs. `mldrift lint` (rule `sim-wall-clock`,
+//! [`crate::check::lint`]) enforces this — `Instant`/`SystemTime` are
+//! banned tokens anywhere under `src/sim/`.
 
 pub mod cost;
 pub mod exec;

@@ -505,3 +505,53 @@ fn preemption_under_tiny_arena_loses_no_tokens() {
          watermark must be back to zero (peak was {peak})"
     );
 }
+
+/// Pinned drift-check regression: the trickiest schedule the bounded
+/// interleaving explorer finds on the contended scenario — the
+/// non-commuting ordering where a speculative plan preempts a member of
+/// the still-in-flight round, so its blocks' frees are deferred behind
+/// an open reservation window. The explorer is deterministic, so the
+/// trickiest schedule is stable for a fixed (config, budget) seed; we
+/// re-derive it here rather than hardcoding step indices, then replay
+/// it and assert the contention shape it was pinned for. If a future PR
+/// changes plan/bind/reap semantics so that NO explored schedule
+/// preempts mid-flight anymore, this test fails — that shape is exactly
+/// the race surface PR 7 introduced, and losing it silently would mean
+/// the checker is probing air. Replay any failure by hand with
+/// `mldrift drift-check --config contended --replay <schedule>`.
+#[test]
+fn drift_check_pins_a_preempting_deferring_schedule() {
+    use mldrift::check::{explore, replay, CheckConfig, ExploreBudget};
+
+    let cfg = CheckConfig::contended();
+    // Same fixed budget every run: the DFS is deterministic, so this is
+    // the "seed" that pins one exact schedule.
+    let budget = ExploreBudget { max_schedules: 3_000, max_steps: 96, switch_bound: 4 };
+    let report = explore(&cfg, &budget).expect("contended exploration must be invariant-clean");
+    let (schedule, score) =
+        report.trickiest.expect("exploration must complete at least one schedule");
+    assert!(score > 0, "trickiest schedule must show contention (score {score})");
+
+    let world = replay(&cfg, &schedule)
+        .unwrap_or_else(|v| panic!("pinned schedule must replay clean, got: {v}"));
+    assert!(
+        world.preemptions > 0,
+        "pinned schedule {schedule} must preempt an active sequence (preemption_seen)"
+    );
+    assert!(
+        world.deferred_frees > 0,
+        "pinned schedule {schedule} must defer a free behind an open slot window \
+         (deferred_free_seen)"
+    );
+    assert_eq!(
+        world.done_seqs(),
+        cfg.seqs,
+        "pinned schedule {schedule} must still drain every sequence"
+    );
+    // Replay of a replay: byte-identical world counters, or the
+    // "deterministic" promise in the violation message is a lie.
+    let again = replay(&cfg, &schedule).expect("second replay clean");
+    assert_eq!(again.preemptions, world.preemptions);
+    assert_eq!(again.deferred_frees, world.deferred_frees);
+    assert_eq!(again.trace, world.trace, "replay must be event-for-event deterministic");
+}
