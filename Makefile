@@ -1,7 +1,7 @@
 # ML Drift reproduction — top-level targets.
 
 .PHONY: tier1 build test fmt lint check artifacts bench bench-batched bench-check bench-ttft \
-	bench-prefix bench-pipeline
+	bench-prefix bench-pipeline bench-fleet
 
 # The tier-1 gate CI runs on every push.
 tier1:
@@ -9,10 +9,12 @@ tier1:
 	$(MAKE) check
 
 # Static + dynamic invariant gate (runs in tier-1): the repo linter
-# (five cross-layer rules — sim wall-clock ban, KvPool seam discipline,
+# (six cross-layer rules — sim wall-clock ban, KvPool seam discipline,
 # bench gate order, documented window/provisional invariants, unsafe
-# pin) plus the bounded interleaving explorer over the contended
-# scenario with the depth-projection check (P2), plus a mutation gate
+# pin, spec commit/scrub confinement) plus the bounded interleaving
+# explorer over the contended scenario with the depth-projection check
+# (P2) and over the speculative scenario (multi-token decode commits
+# against the tight arena), plus a mutation gate
 # proving the explorer actually catches an injected free-inside-window
 # fault. Budgets are sized to finish well under two minutes; a
 # violation prints the exact schedule, replayable with
@@ -20,6 +22,7 @@ tier1:
 check:
 	cd rust && cargo run --release --quiet -- lint --root ..
 	cd rust && cargo run --release --quiet -- drift-check --config contended --projection
+	cd rust && cargo run --release --quiet -- drift-check --config speculative
 	@echo "mutation gate: the injected free-inside-window fault must be caught"
 	@cd rust && if cargo run --release --quiet -- drift-check --config contended \
 	  --fault free-inside-window >/dev/null 2>&1; then \
@@ -71,6 +74,13 @@ bench-prefix:
 # parts 1-6 and does not touch BENCH_batched.json.
 bench-pipeline:
 	cd rust && cargo bench --bench bench_batched_serving -- --only-pipeline
+
+# Fast local iteration on the fleet-serving work: run ONLY the
+# multi-model adaptive-draft-market sweep (part 8) with its hard gates
+# (adaptive ≥ 1.2× static-k tokens/s on mixed-α traffic, never losing
+# to plain). Skips parts 1-7 and does not touch BENCH_batched.json.
+bench-fleet:
+	cd rust && cargo bench --bench bench_batched_serving -- --only-fleet
 
 # Bench-regression gate, reusable locally: validates the freshly written
 # BENCH_batched.json against its schema and fails if any tokens_per_s

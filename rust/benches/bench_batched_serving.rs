@@ -53,6 +53,15 @@
 //! and depth 3 is **bitwise** depth 2 (one device, one host — a third
 //! slot has nobody to run it).
 //!
+//! Part 8 — fleet-serving sweep. The multi-model registry's adaptive
+//! draft market on M4 Pro and Adreno 750: mixed-acceptance decode
+//! traffic (a high-α cohort on a cheap TinyLM draft, a mid-α cohort on
+//! an uneconomic near-target-size Gemma-2B draft, an adversarial low-α
+//! cohort) against a gemma2-2b target under three k policies — plain,
+//! static-k, and the per-sequence EWMA market. Gates: adaptive buys
+//! ≥ 1.2× tokens/s over static-k, never loses to plain, and visibly
+//! cuts its aggregate bid (mean planned k).
+//!
 //! Writes every number to `BENCH_batched.json` at the **repo root**
 //! (the trajectory file the harness tracks across PRs).
 //!
@@ -61,6 +70,7 @@
 //! make bench-ttft     # part 5 only (fast local iteration; no JSON write)
 //! make bench-prefix   # part 6 only (fast local iteration; no JSON write)
 //! make bench-pipeline # part 7 only (fast local iteration; no JSON write)
+//! make bench-fleet    # part 8 only (fast local iteration; no JSON write)
 //! ```
 
 use mldrift::bench::Table;
@@ -74,9 +84,9 @@ use mldrift::models::llm_config;
 use mldrift::quant::QuantScheme;
 use mldrift::serving::{default_prefill_chunk_tokens, AdmissionPolicy, SchedulerConfig};
 use mldrift::sim::{
-    simulate_serving, simulate_serving_pipelined, simulate_serving_shared, simulate_serving_spec,
-    GenLenEstimator, KvReservation, PipelineSimConfig, PrefixSimRequest, ServingSimConfig,
-    SimRequest, SpecSim,
+    simulate_serving, simulate_serving_fleet, simulate_serving_pipelined, simulate_serving_shared,
+    simulate_serving_spec, FleetDraftSim, FleetKPolicy, FleetSimRequest, GenLenEstimator,
+    KvReservation, PipelineSimConfig, PrefixSimRequest, ServingSimConfig, SimRequest, SpecSim,
 };
 use mldrift::util::json::Json;
 
@@ -596,6 +606,149 @@ fn pipelined_serving_sweep(opts: &CompileOptions) -> (Vec<Json>, PipelineGates) 
     (out, PipelineGates { rows })
 }
 
+/// The part-8 gate numbers, checked *after* the trajectory write (same
+/// reason as [`TtftGates`]: the failing numbers still land in the
+/// uploaded artifact).
+struct FleetGates {
+    /// One row per device: `(device, tokens/s at plain/static_k/adaptive,
+    /// mean planned k at static_k vs adaptive)`.
+    rows: Vec<(&'static str, [f64; 3], [f64; 2])>,
+}
+
+impl FleetGates {
+    /// The ISSUE-9 acceptance bars, hard-gated. On mixed-α traffic the
+    /// adaptive market must buy ≥ 1.2× tokens/s over static-k (the
+    /// config it exists to replace), must never lose to all-plain (the
+    /// market can always bid 0), and must visibly cut its aggregate bid
+    /// — the mean planned k dropping below static's is the *mechanism*
+    /// check, so a market that wins by accident (e.g. a cost-model
+    /// change) still fails until it wins by pricing.
+    fn check(&self) {
+        for &(dev, tps, ks) in &self.rows {
+            let ratio = tps[2] / tps[1].max(1e-12);
+            assert!(
+                ratio >= 1.2,
+                "adaptive must beat static-k ≥ 1.2× on mixed α on {dev}: \
+                 {:.1} vs {:.1} tok/s ({ratio:.2}×)",
+                tps[2],
+                tps[1]
+            );
+            assert!(
+                tps[2] >= tps[0],
+                "the market can always bid 0 — it must never lose to plain on {dev}: \
+                 {:.1} vs {:.1} tok/s",
+                tps[2],
+                tps[0]
+            );
+            assert!(
+                ks[1] < ks[0],
+                "the market must cut its mean bid on {dev}: {:.2} vs static {:.2}",
+                ks[1],
+                ks[0]
+            );
+        }
+        let worst = self
+            .rows
+            .iter()
+            .map(|r| r.1[2] / r.1[1].max(1e-12))
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "OK: adaptive draft market buys ≥ {worst:.2}× tokens/s over static-k \
+             (≥ 1.2× gate) on mixed-α traffic, never losing to plain"
+        );
+    }
+}
+
+/// Part 8 — fleet-serving sweep: the multi-model registry's adaptive
+/// draft market priced through the fleet sim on M4 Pro and Adreno 750.
+/// 12 resident decode members with mixed acceptance — five high-α on a
+/// cheap TinyLM draft, three mid-α on an *uneconomic* near-target-size
+/// Gemma-2B draft (the market must price that model out, not just low
+/// α), four adversarial low-α — against a gemma2-2b target under the
+/// three k policies. Returns the trajectory entries for `fleet_serving`
+/// plus the gate numbers (asserted by the caller after the trajectory
+/// write).
+fn fleet_serving_sweep(opts: &CompileOptions) -> (Vec<Json>, FleetGates) {
+    const DEVICES: [&str; 2] = ["m4_pro", "adreno_750"];
+    const GEN: usize = 64;
+    const SYNC_S: f64 = 150e-6;
+    let target_cfg = llm_config("gemma2_2b").unwrap();
+    let tiny_cfg = llm_config("tinylm").unwrap();
+    let big_cfg = llm_config("gemma_2b").unwrap();
+    let mut workload = Vec::new();
+    for _ in 0..5 {
+        workload.push(FleetSimRequest { new_tokens: GEN, acceptance: 0.9, draft: Some(0) });
+    }
+    for _ in 0..3 {
+        workload.push(FleetSimRequest { new_tokens: GEN, acceptance: 0.65, draft: Some(1) });
+    }
+    for _ in 0..4 {
+        workload.push(FleetSimRequest { new_tokens: GEN, acceptance: 0.05, draft: Some(0) });
+    }
+
+    let mut t = Table::new(
+        "gemma2_2b target + {tinylm, gemma_2b} drafts — fleet serving (12 mixed-α decode \
+         members, gen 64): tokens/s by device × k policy",
+        &["device", "plain", "static_k", "adaptive", "adaptive gain", "mean k static→adaptive"],
+    );
+    let mut out = Vec::new();
+    let mut rows = Vec::new();
+    for dev_name in DEVICES {
+        let dev = device(dev_name).unwrap();
+        let target =
+            simulate_llm(&target_cfg, &dev, QuantScheme::Mixed844, 1024, 256, opts).unwrap();
+        let tiny = simulate_llm(&tiny_cfg, &dev, QuantScheme::Q8, 1024, 256, opts).unwrap();
+        let big = simulate_llm(&big_cfg, &dev, QuantScheme::Mixed844, 1024, 256, opts).unwrap();
+        let drafts = [
+            FleetDraftSim { plan: &tiny.decode.plan, k_max: 4 },
+            FleetDraftSim { plan: &big.decode.plan, k_max: 3 },
+        ];
+        let mut tps = [0.0f64; 3];
+        let mut ks = [0.0f64; 2];
+        let modes = [
+            ("plain", FleetKPolicy::Plain),
+            ("static_k", FleetKPolicy::StaticK),
+            ("adaptive", FleetKPolicy::Adaptive),
+        ];
+        for (i, (mode, policy)) in modes.into_iter().enumerate() {
+            let rep =
+                simulate_serving_fleet(&target.decode.plan, &drafts, policy, SYNC_S, &workload);
+            assert_eq!(
+                rep.generated_tokens,
+                GEN * workload.len(),
+                "{mode}@{dev_name}: closed loop must drain every budget"
+            );
+            tps[i] = rep.tokens_per_s();
+            match policy {
+                FleetKPolicy::StaticK => ks[0] = rep.mean_planned_k,
+                FleetKPolicy::Adaptive => ks[1] = rep.mean_planned_k,
+                FleetKPolicy::Plain => {}
+            }
+            out.push(Json::obj(vec![
+                ("device", dev_name.into()),
+                ("mode", mode.into()),
+                ("tokens_per_s", tps[i].into()),
+                ("mean_planned_k", rep.mean_planned_k.into()),
+                ("spec_proposed_tokens", rep.spec_proposed_tokens.into()),
+                ("spec_accepted_tokens", rep.spec_accepted_tokens.into()),
+            ]));
+        }
+        t.row(&[
+            dev_name.to_string(),
+            format!("{:.1}", tps[0]),
+            format!("{:.1}", tps[1]),
+            format!("{:.1}", tps[2]),
+            format!("{:.2}×", tps[2] / tps[1]),
+            format!("{:.2} → {:.2}", ks[0], ks[1]),
+        ]);
+        rows.push((dev_name, tps, ks));
+    }
+    t.print();
+    println!();
+
+    (out, FleetGates { rows })
+}
+
 fn main() {
     let opts = CompileOptions::default();
     // `make bench-ttft` / `cargo bench --bench bench_batched_serving --
@@ -605,7 +758,7 @@ fn main() {
     if std::env::args().any(|a| a == "--only-ttft") {
         let (_, gates) = ttft_burst_sweep(&opts);
         gates.check();
-        println!("(--only-ttft: skipped parts 1–4, 6–7 and the BENCH_batched.json write)");
+        println!("(--only-ttft: skipped parts 1–4, 6–8 and the BENCH_batched.json write)");
         return;
     }
     // `make bench-prefix` / `-- --only-prefix`: run only the
@@ -614,7 +767,7 @@ fn main() {
     if std::env::args().any(|a| a == "--only-prefix") {
         let (_, gates) = prefix_sharing_sweep(&opts);
         gates.check();
-        println!("(--only-prefix: skipped parts 1–5, 7 and the BENCH_batched.json write)");
+        println!("(--only-prefix: skipped parts 1–5, 7–8 and the BENCH_batched.json write)");
         return;
     }
     // `make bench-pipeline` / `-- --only-pipeline`: run only the
@@ -623,7 +776,16 @@ fn main() {
     if std::env::args().any(|a| a == "--only-pipeline") {
         let (_, gates) = pipelined_serving_sweep(&opts);
         gates.check();
-        println!("(--only-pipeline: skipped parts 1–6 and the BENCH_batched.json write)");
+        println!("(--only-pipeline: skipped parts 1–6, 8 and the BENCH_batched.json write)");
+        return;
+    }
+    // `make bench-fleet` / `-- --only-fleet`: run only the fleet-serving
+    // sweep (with its gates) — same fast-iteration shape as
+    // `--only-ttft`.
+    if std::env::args().any(|a| a == "--only-fleet") {
+        let (_, gates) = fleet_serving_sweep(&opts);
+        gates.check();
+        println!("(--only-fleet: skipped parts 1–7 and the BENCH_batched.json write)");
         return;
     }
     let mut json_batch = Vec::new();
@@ -1011,6 +1173,9 @@ fn main() {
     // ---- Part 7: pipelined-executor sweep (depth × host fraction) --------
     let (json_pipeline, pipeline_gates) = pipelined_serving_sweep(&opts);
 
+    // ---- Part 8: fleet-serving sweep (adaptive draft market) -------------
+    let (json_fleet, fleet_gates) = fleet_serving_sweep(&opts);
+
     let doc = Json::obj(vec![
         ("model_sweep", Json::Arr(json_batch)),
         ("fixed_memory_adreno_750", Json::Arr(json_fixed)),
@@ -1020,6 +1185,7 @@ fn main() {
         ("prefill_packing_m4_pro", Json::Arr(json_prefill_packing)),
         ("prefix_sharing_m4_pro", Json::Arr(json_prefix_sharing)),
         ("pipelined_serving_sweep", Json::Arr(json_pipeline)),
+        ("fleet_serving", Json::Arr(json_fleet)),
     ]);
     let text = doc.pretty() + "\n";
     match std::fs::write(OUT_PATH, &text) {
@@ -1032,4 +1198,5 @@ fn main() {
     ttft_gates.check();
     prefix_gates.check();
     pipeline_gates.check();
+    fleet_gates.check();
 }

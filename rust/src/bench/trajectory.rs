@@ -52,6 +52,11 @@ const SECTIONS: &[(&str, &[&str], Option<&str>)] = &[
     // as the bench's own hard gate; the gated metric here guards each
     // (depth, host_frac) cell's absolute throughput.
     ("pipelined_serving_sweep", &["depth", "host_frac"], Some("tokens_per_s")),
+    // Fleet-serving sweep (multi-model registry + adaptive draft
+    // market) over mixed high-/low-acceptance traffic. The adaptive ≥
+    // 1.2× static-k bar lands as the bench's own hard gate; the gated
+    // metric here guards each (device, mode) cell's throughput.
+    ("fleet_serving", &["device", "mode"], Some("tokens_per_s")),
 ];
 
 /// Outcome of a trajectory check.
@@ -204,6 +209,10 @@ mod tests {
               "pipelined_serving_sweep": [
                 {{"depth": 1, "host_frac": 0.3, "tokens_per_s": 60.0, "speedup_vs_depth1": 1.0}},
                 {{"depth": 2, "host_frac": 0.3, "tokens_per_s": 78.0, "speedup_vs_depth1": 1.3}}
+              ],
+              "fleet_serving": [
+                {{"device": "m4_pro", "mode": "static_k", "tokens_per_s": 50.0}},
+                {{"device": "m4_pro", "mode": "adaptive", "tokens_per_s": 65.0}}
               ]
             }}"#,
             if note { r#""note": "seed estimates","# } else { "" }
@@ -218,9 +227,9 @@ mod tests {
         let r = check_trajectory(&cur, &base).unwrap();
         assert!(!r.baseline_is_estimate);
         assert_eq!(
-            r.compared, 10,
+            r.compared, 12,
             "model + fixed-memory + both speculative + both prefill-packing + both \
-             prefix-sharing + both pipelined series"
+             prefix-sharing + both pipelined + both fleet series"
         );
         assert!(r.regressions.is_empty(), "{:?}", r.regressions);
     }
@@ -292,7 +301,7 @@ mod tests {
         let old_base = Json::parse(&text).unwrap();
         let cur = doc(50.0, 100.0, false);
         let r = check_trajectory(&cur, &old_base).unwrap();
-        assert_eq!(r.compared, 9, "spec sweep skipped against the old baseline");
+        assert_eq!(r.compared, 11, "spec sweep skipped against the old baseline");
         assert!(r.regressions.is_empty());
     }
 }

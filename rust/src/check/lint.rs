@@ -14,6 +14,7 @@
 //! | `bench-gate-order` | `benches/` | a bench gate `.check()` runs only after the trajectory write (or in a marked `--only-` early-exit block that skips the write entirely) |
 //! | `undocumented-invariant` | `src/kv/`, `src/serving/` | every `pub` item whose declaration mentions `window`/`provisional`/`unsafe` carries a doc comment that states its invariant |
 //! | `unsafe-pin` | whole crate | the `unsafe` token count stays pinned at zero and `lib.rs` keeps `#![forbid(unsafe_code)]` |
+//! | `spec-commit-discipline` | everywhere except `src/kv/`, `src/runtime/`, `src/check/` | the speculative KV commit/rollback seam (`commit_provisional`/`scrub_uncommitted`) is driven only by the runtime step functions — serving code sees committed state only |
 
 use std::fmt;
 use std::path::Path;
@@ -237,6 +238,15 @@ const PRIVILEGED_KV_CALLS: [&str; 10] = [
     ".fault_free_deferred_ignoring_pins(",
 ];
 
+/// The speculative commit/rollback seam: provisional rows become real
+/// only via `commit_provisional`, and a failed speculative step must
+/// `scrub_uncommitted` before anyone reads the store. Both transitions
+/// belong to the runtime step functions (`spec_round_paged*`) and the
+/// kv layer itself — a serving-layer caller would split the rollback
+/// contract across layers, exactly the drift the fleet engine's
+/// "committed state only" view is built on.
+const SPEC_COMMIT_CALLS: [&str; 2] = [".commit_provisional(", ".scrub_uncommitted("];
+
 const DECL_NEEDLES: [&str; 3] = ["window", "provisional", "unsafe"];
 const DECL_PREFIXES: [&str; 6] =
     ["pub fn ", "pub struct ", "pub enum ", "pub trait ", "pub type ", "pub const "];
@@ -445,6 +455,35 @@ fn rule_unsafe_pin(file: &str, stripped: &str, diags: &mut Vec<LintDiagnostic>) 
     }
 }
 
+/// R6: the speculative commit/rollback seam stays confined. Only the
+/// kv layer (implementation), the runtime step functions (the one
+/// legitimate driver — commit on accept, scrub on error), and the
+/// model checker (which explores the raw transitions) may call
+/// `commit_provisional`/`scrub_uncommitted`. Serving code operating the
+/// seam directly would mean a second, divergent copy of the rollback
+/// contract — the engine must only ever observe committed KV state.
+fn rule_spec_commit_discipline(file: &str, stripped: &str, diags: &mut Vec<LintDiagnostic>) {
+    if in_dir(file, "src/kv/") || in_dir(file, "src/runtime/") || in_dir(file, "src/check/") {
+        return;
+    }
+    for (ln, line) in stripped.lines().enumerate() {
+        for call in SPEC_COMMIT_CALLS {
+            if line.contains(call) {
+                let name = &call[1..call.len() - 1];
+                diags.push(LintDiagnostic {
+                    rule: "spec-commit-discipline",
+                    file: file.to_string(),
+                    line: ln + 1,
+                    message: format!(
+                        "speculative KV seam call `{name}` outside src/kv//src/runtime/: \
+                         commit/rollback is driven by the runtime step functions only"
+                    ),
+                });
+            }
+        }
+    }
+}
+
 /// Lint in-memory files (`(path, content)` pairs). Paths are matched
 /// textually against rule scopes (`src/sim/`, `src/kv/`, `benches/`,
 /// …), so callers should pass repo-relative paths with forward slashes.
@@ -460,6 +499,7 @@ pub fn lint_files(files: &[(String, String)]) -> Vec<LintDiagnostic> {
         rule_bench_gate_order(path, content, &stripped, &mut diags);
         rule_undocumented_invariant(path, content, &mut diags);
         rule_unsafe_pin(path, &stripped, &mut diags);
+        rule_spec_commit_discipline(path, &stripped, &mut diags);
     }
     diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
     diags
@@ -631,6 +671,24 @@ mod tests {
         // Mentions in comments and strings don't count.
         assert!(lint_one("rust/src/vgpu/pool.rs", "// unsafe is banned\nlet s = \"unsafe\";\n")
             .is_empty());
+    }
+
+    #[test]
+    fn spec_commit_discipline_confines_the_rollback_seam() {
+        let bad = "fn reap(store: &mut PagedKvStore, h: KvSeqHandle) {\n    store.scrub_uncommitted(h);\n    store.commit_provisional(h, 3);\n}\n";
+        let d = lint_one("rust/src/serving/server.rs", bad);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().all(|x| x.rule == "spec-commit-discipline"));
+        assert!(d[0].message.contains("`scrub_uncommitted`"), "{}", d[0].message);
+        assert!(d[1].message.contains("`commit_provisional`"), "{}", d[1].message);
+        // The seam's owners are exempt: kv implements it, the runtime
+        // step functions drive it, the checker explores it raw.
+        assert!(lint_one("rust/src/kv/region.rs", bad).is_empty());
+        assert!(lint_one("rust/src/runtime/tinylm.rs", bad).is_empty());
+        assert!(lint_one("rust/src/check/model.rs", bad).is_empty());
+        // Mentions in comments don't count.
+        let comment = "// the step scrub_uncommitted()s on error\nfn f() {}\n";
+        assert!(lint_one("rust/src/serving/server.rs", comment).is_empty());
     }
 
     #[test]

@@ -32,8 +32,10 @@
 //!   KV allocation policy is only reached through the [`crate::kv::KvPool`]
 //!   seam, bench gates assert only after their trajectory write, every
 //!   `pub` window/provisional item in `kv/` and `serving/` documents
-//!   its invariant, and the crate-wide `unsafe` count stays pinned at
-//!   zero (`#![forbid(unsafe_code)]`).
+//!   its invariant, the crate-wide `unsafe` count stays pinned at
+//!   zero (`#![forbid(unsafe_code)]`), and the speculative KV
+//!   commit/rollback seam is driven only by the runtime step functions
+//!   (serving code sees committed state only).
 //!
 //! Both engines run in tier-1 via `make check` (and the explorer's
 //! regression schedules via `cargo test`). The linter walks the repo

@@ -84,6 +84,11 @@ pub struct CheckConfig {
     /// nondeterminism — required by the depth-projection check, which
     /// compares traces across schedules).
     pub arrivals_upfront: bool,
+    /// Tokens committed per decode round (≥ 1). 1 = plain decode; > 1
+    /// models a speculative round's accepted run landing as one append
+    /// — the fleet engine's KV shape, where a single decode step can
+    /// demand multi-block growth mid-flight.
+    pub spec_tokens_per_round: usize,
     /// Injected bug, if any.
     pub fault: Fault,
 }
@@ -111,6 +116,7 @@ impl CheckConfig {
             shared_prefix: true,
             retain_blocks: 1,
             arrivals_upfront: false,
+            spec_tokens_per_round: 1,
             fault: Fault::None,
         }
     }
@@ -133,6 +139,31 @@ impl CheckConfig {
             shared_prefix: true,
             retain_blocks: 0,
             arrivals_upfront: true,
+            spec_tokens_per_round: 1,
+            fault: Fault::None,
+        }
+    }
+
+    /// The speculative scenario: decode rounds commit up to 3 accepted
+    /// tokens as one append against the same tight arena as
+    /// [`contended`](Self::contended), so a single decode step can
+    /// demand multi-block growth while the in-flight round's window is
+    /// open — the fleet engine's KV shape, where the window/deferred-
+    /// free discipline must absorb k-token jumps, not single rows.
+    pub fn speculative() -> Self {
+        CheckConfig {
+            depth: 2,
+            seqs: 3,
+            prompt_tokens: 4,
+            new_tokens: 4,
+            chunk_tokens: 2,
+            blocks: 6,
+            block_tokens: 2,
+            max_batch: 2,
+            shared_prefix: true,
+            retain_blocks: 1,
+            arrivals_upfront: false,
+            spec_tokens_per_round: 3,
             fault: Fault::None,
         }
     }
@@ -142,6 +173,9 @@ impl CheckConfig {
         {
             return Err("check config: depth, seqs, chunk_tokens, block_tokens must be ≥ 1"
                 .to_string());
+        }
+        if self.spec_tokens_per_round == 0 {
+            return Err("check config: spec_tokens_per_round must be ≥ 1".to_string());
         }
         if self.prompt_tokens == 0 || self.new_tokens == 0 || self.max_batch == 0 {
             return Err(
@@ -399,7 +433,10 @@ impl World {
         if committed < s.prompt.len() {
             self.cfg.chunk_tokens.min(s.prompt.len() - committed)
         } else {
-            1
+            // Decode: one round commits the accepted run as a single
+            // append (spec_tokens_per_round = 1 is plain decode),
+            // clamped so no token is ever committed past the target.
+            self.cfg.spec_tokens_per_round.min(s.target - committed)
         }
     }
 
@@ -872,6 +909,30 @@ mod tests {
             "completion under an open window must defer frees, got {}",
             w.deferred_frees
         );
+    }
+
+    #[test]
+    fn speculative_serial_run_commits_multi_token_rounds() {
+        let w = run_serial(&CheckConfig::speculative());
+        assert_eq!(w.done_seqs(), 3);
+        assert_eq!(w.arena().seq_count(), 0, "drained arena holds no sequences");
+        // The point of the scenario: at least one decode commit jumps
+        // by more than one token (an accepted speculative run landing
+        // as a single append), and no commit ever overshoots a target.
+        let mut last: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+        let mut multi = false;
+        for ev in &w.trace {
+            if let TraceEvent::Commit { seq, committed } = *ev {
+                let prev = last.insert(seq, committed).unwrap_or(0);
+                if committed > 4 && committed - prev.max(4) > 1 {
+                    multi = true;
+                }
+                assert!(committed <= 4 + 4, "seq {seq} committed past its target");
+            }
+        }
+        assert!(multi, "speculative scenario must commit a multi-token decode round");
+        // The tight arena still preempts under multi-token growth.
+        assert!(w.preemptions >= 1, "speculative scenario must preempt, got {}", w.preemptions);
     }
 
     #[test]

@@ -91,8 +91,9 @@ fn cli() -> Cli {
             CommandSpec {
                 name: "lint",
                 about: "repo invariant linter: sim wall-clock ban, KvPool seam discipline, \
-                        bench gate order, documented window/provisional invariants, and the \
-                        crate-wide unsafe pin (`make check`)",
+                        bench gate order, documented window/provisional invariants, the \
+                        crate-wide unsafe pin, and the speculative commit/scrub confinement \
+                        (`make check`)",
                 args: vec![opt(
                     "root",
                     "..",
@@ -107,7 +108,7 @@ fn cli() -> Cli {
                         plan/bind/exec/reap schedules and assert the DESIGN.md §6 invariant \
                         catalog after every step (`make check`)",
                 args: vec![
-                    opt("config", "contended", "scenario: contended | overlap"),
+                    opt("config", "contended", "scenario: contended | overlap | speculative"),
                     opt("max-schedules", "20000", "DFS leaf budget"),
                     opt("max-steps", "96", "per-schedule step cap"),
                     opt("switch-bound", "8", "preemptive context-switch bound"),
@@ -304,7 +305,8 @@ fn main() -> mldrift::Result<()> {
             if diags.is_empty() {
                 println!(
                     "lint OK: repo invariants hold (sim-wall-clock, kv-pool-discipline, \
-                     bench-gate-order, undocumented-invariant, unsafe-pin)"
+                     bench-gate-order, undocumented-invariant, unsafe-pin, \
+                     spec-commit-discipline)"
                 );
             } else {
                 for d in &diags {
@@ -324,9 +326,10 @@ fn main() -> mldrift::Result<()> {
             let mut cfg = match m.req("config") {
                 "contended" => CheckConfig::contended(),
                 "overlap" => CheckConfig::overlap(),
+                "speculative" => CheckConfig::speculative(),
                 other => {
                     return Err(DriftError::Config(format!(
-                        "unknown --config {other:?} (expected contended | overlap)"
+                        "unknown --config {other:?} (expected contended | overlap | speculative)"
                     )))
                 }
             };

@@ -28,7 +28,8 @@ pub mod tinylm;
 
 pub use client::{LoadedModel, Runtime};
 pub use tinylm::{
-    packed_prefill_round, speculative_step_greedy, GenerationResult, KvState,
+    packed_prefill_round, rejection_accept, sample_index, softmax_with_temperature,
+    speculative_step_greedy, speculative_step_sampled, GenerationResult, KvState,
     PackedPrefillChunk, PagedRoundStep, PagedStepModel, PrefillChunkOutcome, RoundStepOutcome,
     SpecStepArgs, SpecStepOutcome, TinyLmManifest, TinyLmRuntime,
 };

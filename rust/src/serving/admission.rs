@@ -162,6 +162,37 @@ impl AdmissionPolicy {
         };
         pool.claim_prefixed(claim_tokens, prefix).ok()
     }
+
+    /// [`admit_prefixed`](Self::admit_prefixed) plus a **companion
+    /// claim** — the fleet-serving admission step. The target pool gates
+    /// and claims as usual; the sequence's bound draft pool (if any)
+    /// then claims the same context. A companion miss releases the
+    /// target claim and defers the whole admission — backpressure, so
+    /// the two pools can never disagree about who is admitted.
+    /// `companion: None` (no draft bound) is exactly `admit_prefixed`.
+    /// The companion claims plainly (never prefixed): draft stores do
+    /// not share prefixes.
+    pub fn admit_with_companion<K: KvPool, D: KvPool>(
+        &self,
+        pool: &mut K,
+        companion: Option<&mut D>,
+        req: &InferenceRequest,
+        context_tokens: usize,
+        mean_gen: Option<f64>,
+        prefix: &[crate::kv::PrefixKey],
+    ) -> Option<(KvSeqHandle, Option<KvSeqHandle>)> {
+        let h = self.admit_prefixed(pool, req, context_tokens, mean_gen, prefix)?;
+        match companion {
+            None => Some((h, None)),
+            Some(c) => match c.claim(context_tokens) {
+                Ok(dh) => Some((h, Some(dh))),
+                Err(_) => {
+                    pool.release(h);
+                    None
+                }
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -289,6 +320,47 @@ mod tests {
         assert_eq!(arena.shared_blocks(), 4);
         assert_eq!(arena.len(h2), 63, "prefill resumes past the covered prefix");
         arena.verify().unwrap();
+    }
+
+    #[test]
+    fn companion_admission_is_atomic_across_pools() {
+        use crate::kv::{KvArena, KvArenaConfig};
+        let cfg = KvArenaConfig {
+            layers: 1,
+            heads_kv: 1,
+            head_dim: 64,
+            block_tokens: 16,
+            num_blocks: 8,
+        };
+        let r = req(16, 48); // worst case = 64 tokens = 4 blocks
+        let p = AdmissionPolicy::WorstCase;
+
+        // No companion bound: exactly admit_prefixed.
+        let mut target = KvArena::new(cfg);
+        let (h, dh) = p
+            .admit_with_companion::<_, KvArena>(&mut target, None, &r, 16, None, &[])
+            .unwrap();
+        assert!(dh.is_none());
+        assert_eq!(target.blocks_in_use(), 4);
+        target.release(h);
+
+        // Companion with room: both pools claim.
+        let mut draft = KvArena::new(cfg);
+        let (h, dh) = p
+            .admit_with_companion(&mut target, Some(&mut draft), &r, 16, None, &[])
+            .unwrap();
+        assert_eq!(target.blocks_in_use(), 4);
+        assert_eq!(draft.blocks_in_use(), 1, "companion claims only the context");
+        target.release(h);
+        draft.release(dh.unwrap());
+
+        // Companion full: the target claim is rolled back and the whole
+        // admission defers — neither pool leaks a half-admitted sequence.
+        let mut full = KvArena::new(KvArenaConfig { num_blocks: 0, ..cfg });
+        assert!(p
+            .admit_with_companion(&mut target, Some(&mut full), &r, 16, None, &[])
+            .is_none());
+        assert_eq!(target.blocks_in_use(), 0, "target claim rolled back");
     }
 
     #[test]

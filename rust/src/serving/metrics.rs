@@ -75,6 +75,16 @@ pub struct Metrics {
     /// ratio to `spec_proposed_tokens` is the live acceptance rate — the
     /// signal the draft-k breakeven math keys on.
     pub spec_accepted_tokens: AtomicU64,
+    /// Draft market: speculative steps *planned* (sequence-rounds whose
+    /// chosen width was > 0). With the adaptive market on, comparing
+    /// against executed decode rounds shows how much traffic the
+    /// controller sent down the plain path instead.
+    pub spec_planned_rounds: AtomicU64,
+    /// Draft market: Σ of the planned widths. `spec_k_sum /
+    /// spec_planned_rounds` is the mean k the market actually chose —
+    /// pinned at the static config's k when the market is off, sliding
+    /// toward 0 on low-α traffic when it is on.
+    pub spec_k_sum: AtomicU64,
     ttft: Mutex<Histogram>,
     decode_step: Mutex<Histogram>,
     e2e: Mutex<Histogram>,
@@ -112,6 +122,8 @@ impl Default for Metrics {
             pipeline_planned_ahead_slots: AtomicU64::new(0),
             spec_proposed_tokens: AtomicU64::new(0),
             spec_accepted_tokens: AtomicU64::new(0),
+            spec_planned_rounds: AtomicU64::new(0),
+            spec_k_sum: AtomicU64::new(0),
             // 100 µs .. ~100 s exponential buckets.
             ttft: Mutex::new(Histogram::exponential(1e-4, 1.6, 32)),
             decode_step: Mutex::new(Histogram::exponential(1e-5, 1.6, 32)),
@@ -225,6 +237,24 @@ impl Metrics {
         self.spec_accepted_tokens.fetch_add(accepted, Ordering::Relaxed);
     }
 
+    /// Record one *planned* speculative step of width `k` (the draft
+    /// market chose k > 0 for a sequence-round — called at step
+    /// construction, whatever the verify later accepts).
+    pub fn record_spec_plan(&self, k: u64) {
+        self.spec_planned_rounds.fetch_add(1, Ordering::Relaxed);
+        self.spec_k_sum.fetch_add(k, Ordering::Relaxed);
+    }
+
+    /// Mean planned draft width across speculative sequence-rounds;
+    /// `None` until the first one is planned.
+    pub fn mean_planned_k(&self) -> Option<f64> {
+        let rounds = self.spec_planned_rounds.load(Ordering::Relaxed);
+        if rounds == 0 {
+            return None;
+        }
+        Some(self.spec_k_sum.load(Ordering::Relaxed) as f64 / rounds as f64)
+    }
+
     /// Live draft-acceptance rate (accepted / proposed); `None` until the
     /// first speculative round runs.
     pub fn spec_acceptance(&self) -> Option<f64> {
@@ -292,7 +322,8 @@ impl Metrics {
              preemptions: {} | re-prefill tokens: {} | kv device bytes: {} in use, {} peak, \
              {} freed by preemption\n\
              prefix sharing: {} tokens attached | {} blocks shared | {} cow copies\n\
-             pipeline: depth {}, {} slots planned ahead | kv dequant rows: {}",
+             pipeline: depth {}, {} slots planned ahead | kv dequant rows: {}\n\
+             draft market: {} spec steps planned, mean k {}",
             self.requests_submitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.prefill_tokens.load(Ordering::Relaxed),
@@ -326,6 +357,11 @@ impl Metrics {
             self.pipeline_depth.load(Ordering::Relaxed),
             self.pipeline_planned_ahead_slots.load(Ordering::Relaxed),
             self.kv_dequant_rows.load(Ordering::Relaxed),
+            self.spec_planned_rounds.load(Ordering::Relaxed),
+            match self.mean_planned_k() {
+                Some(k) => format!("{k:.2}"),
+                None => "-".to_string(),
+            },
         )
     }
 }
@@ -452,6 +488,22 @@ mod tests {
         assert_eq!(m.spec_accepted_tokens.load(Ordering::Relaxed), 4);
         assert_eq!(m.spec_acceptance(), Some(0.5));
         assert!(m.report().contains("speculative: 8 proposed, 4 accepted (50%)"));
+    }
+
+    #[test]
+    fn spec_plan_counters_and_mean_k() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_planned_k(), None, "no speculative steps planned yet");
+        assert!(m.report().contains("draft market: 0 spec steps planned, mean k -"));
+        m.record_spec_plan(4);
+        m.record_spec_plan(2);
+        m.record_spec_plan(3);
+        assert_eq!(m.spec_planned_rounds.load(Ordering::Relaxed), 3);
+        assert_eq!(m.spec_k_sum.load(Ordering::Relaxed), 9);
+        assert_eq!(m.mean_planned_k(), Some(3.0));
+        assert!(m.report().contains("draft market: 3 spec steps planned, mean k 3.00"));
+        // The pinned legacy substrings survive the appended segment.
+        assert!(m.report().contains("speculative: 0 proposed, 0 accepted (off)"));
     }
 
     #[test]

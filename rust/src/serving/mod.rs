@@ -19,6 +19,11 @@
 //!   claims, on-demand block growth, preemption on exhaustion) with
 //!   backpressure-gated admission, and serves a channel of requests (no
 //!   Python, no async runtime).
+//! * [`registry`] — the multi-model fleet: a registry owning the target
+//!   plus zero-or-more draft models (each with its own worst-case-sized
+//!   paged store), and the **adaptive draft market** — a per-sequence
+//!   EWMA acceptance estimate bid against the speculative-round
+//!   breakeven to pick draft/k per round (k = 0 ⇒ plain decode).
 //! * [`metrics`] — TTFT / latency / throughput / batch-occupancy
 //!   accounting.
 
@@ -26,6 +31,7 @@ pub mod admission;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod registry;
 pub mod metrics;
 
 pub use admission::{blended_mean_gen, AdmissionPolicy};
@@ -33,5 +39,11 @@ pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use scheduler::{
     default_prefill_chunk_tokens, PrefillChunk, Round, Scheduler, SchedulerConfig, SeqState,
 };
-pub use server::{EngineConfig, ServerStats, ServingEngine, SpecConfig};
+pub use server::{
+    DraftModelConfig, EngineConfig, FleetConfig, SampledSpecConfig, ServerStats, ServingEngine,
+    SpecConfig,
+};
+pub use registry::{
+    AcceptanceEwma, DraftController, ModelDims, ModelRegistry, SpecRoundCost,
+};
 pub use metrics::Metrics;

@@ -1,0 +1,475 @@
+//! Model registry + adaptive draft market.
+//!
+//! The engine stops assuming "one target, at most one draft" here: a
+//! [`ModelRegistry`] owns N loaded models — the target plus zero or more
+//! draft models, each with its own worst-case-sized paged KV store — and
+//! the per-round planning layers on top of it decide, **per sequence and
+//! per round**, which draft (if any) proposes and how many tokens it may
+//! propose.
+//!
+//! The market mechanism is Leviathan et al.'s acceptance analysis run
+//! against *live* acceptance instead of a static config:
+//!
+//! * [`AcceptanceEwma`] — a per-sequence exponentially weighted estimate
+//!   of the draft/target agreement rate α, fed by every speculative
+//!   round's `accepted / proposed` ratio (the same counters
+//!   [`crate::serving::Metrics::record_spec`] aggregates engine-wide).
+//! * [`SpecRoundCost`] — the three prices the breakeven needs: one draft
+//!   decode step, the verify pass at `k = 0` (which IS the plain decode
+//!   round, [`crate::sim::exec::verify_time_s`]), and the marginal cost
+//!   of each extra verified row. Only *ratios* matter to the decision
+//!   (goodput argmax is scale-invariant), so the engine can feed
+//!   configured relative costs while the simulator feeds exact
+//!   plan-derived ones ([`SpecRoundCost::from_plans`]).
+//! * [`DraftController`] — `choose_k` maximizes expected decode goodput
+//!   `(1 + E[a](k, α)) / (E[steps](k, α)·D + V(k))` over `k ∈ 0..=k_max`
+//!   ([`crate::sim::exec::expected_accepted_tokens`] /
+//!   [`expected_draft_steps`]). `k = 0` is plain decode: low-α traffic
+//!   stops paying draft overhead entirely — the behaviour the
+//!   phone-class (Adreno) profiles need to gate, where a draft round is
+//!   a large fraction of a target round.
+//!
+//! Weight-streaming cost is shared only **within one model's batch**: a
+//! round's speculative members are grouped by draft index and each group
+//! dispatches as one batch against its model; the target's verify pass
+//! covers every group plus the plain-decode members. The registry only
+//! owns models and draft stores — the target's store stays with the
+//! engine loop, because it carries engine-level policy (quantized
+//! blocks, prefix retention) the drafts never use.
+
+use crate::kv::{KvArenaConfig, KvSeqHandle, PagedKvStore};
+use crate::runtime::tinylm::TinyLmManifest;
+use crate::sim::exec::{
+    expected_accepted_tokens, expected_draft_steps, simulate_batched, verify_time_s, ExecutionPlan,
+};
+use crate::util::div_ceil;
+
+/// The KV-relevant dimensions of a registered model — what store sizing
+/// and per-sequence capacity checks need, decoupled from the runtime
+/// type so the registry (and its tests) work without PJRT.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    pub layers: usize,
+    pub heads_kv: usize,
+    pub head_dim: usize,
+    /// Longest context (prompt + generated) a sequence may reach on this
+    /// model — the per-sequence admission ceiling and the worst-case
+    /// store-sizing input.
+    pub cache_capacity: usize,
+}
+
+impl ModelDims {
+    /// Dimensions of a loaded TinyLM artifact set.
+    pub fn of(m: &TinyLmManifest) -> ModelDims {
+        ModelDims {
+            layers: m.layers,
+            heads_kv: m.heads_kv,
+            head_dim: m.head_dim,
+            cache_capacity: m.cache_capacity,
+        }
+    }
+}
+
+/// Exponentially weighted estimate of the per-token draft/target
+/// agreement rate α for **one sequence**, fed one observation per
+/// speculative round.
+///
+/// The observation is the round's `accepted / proposed` ratio. For a
+/// longest-prefix accept with `k` proposals that ratio's expectation is
+/// `E[a](k, α) / k ≤ α`, so the estimate is a *downward-biased* α — the
+/// controller therefore errs toward smaller `k`, which is the safe
+/// direction (under-speculating costs rounds, over-speculating costs
+/// wasted draft and verify work on phone-class profiles).
+#[derive(Clone, Copy, Debug)]
+pub struct AcceptanceEwma {
+    weight: f64,
+    value: Option<f64>,
+}
+
+impl AcceptanceEwma {
+    /// `weight` ∈ (0, 1]: how much one round moves the estimate
+    /// (1.0 = last round only).
+    pub fn new(weight: f64) -> AcceptanceEwma {
+        AcceptanceEwma { weight: weight.clamp(1e-3, 1.0), value: None }
+    }
+
+    /// Fold in one speculative round's outcome. Rounds that proposed
+    /// nothing carry no acceptance information and are ignored.
+    pub fn observe(&mut self, proposed: usize, accepted: usize) {
+        if proposed == 0 {
+            return;
+        }
+        let obs = (accepted.min(proposed)) as f64 / proposed as f64;
+        self.value = Some(match self.value {
+            Some(v) => self.weight * obs + (1.0 - self.weight) * v,
+            None => obs,
+        });
+    }
+
+    /// Current α estimate; `None` until the first observed round (the
+    /// controller then falls back to its configured prior).
+    pub fn estimate(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// The three prices the draft-k breakeven is computed from. All the
+/// controller consumes are *ratios*, so any consistent unit works:
+/// the simulator builds exact roofline seconds from the plans
+/// ([`SpecRoundCost::from_plans`]); the engine, which cannot decompose a
+/// measured speculative step into draft/verify shares, feeds configured
+/// relative costs ([`SpecRoundCost::relative`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SpecRoundCost {
+    /// One draft decode step (at the round's draft-batch width).
+    pub draft_step_s: f64,
+    /// The verify pass at `k = 0` — exactly the plain decode round
+    /// ([`crate::sim::cost::KernelCost::speculative_verify_total`]).
+    pub verify_base_s: f64,
+    /// Marginal cost of each extra verified row beyond the base.
+    pub verify_row_s: f64,
+}
+
+impl SpecRoundCost {
+    /// Relative costs for the engine side: the plain round is the unit,
+    /// each extra verified row costs `verify_row` of it, and a draft
+    /// step costs `draft_step` of it. The B=1 CPU artifact scores verify
+    /// positions sequentially, so `verify_row = 1.0` is its honest
+    /// setting; roofline GPU profiles sit far below 1.
+    pub fn relative(draft_step: f64, verify_row: f64) -> SpecRoundCost {
+        SpecRoundCost {
+            draft_step_s: draft_step.max(0.0),
+            verify_base_s: 1.0,
+            verify_row_s: verify_row.max(0.0),
+        }
+    }
+
+    /// Exact roofline prices at batch width `batch`: one draft round,
+    /// the `k = 0` verify pass, and the secant slope of the verify cost
+    /// over `k ∈ [0, k_max]` (the verify curve is concave in `k` —
+    /// weights stream once — so the secant under-prices small `k`
+    /// slightly, again the conservative direction).
+    pub fn from_plans(
+        draft_plan: &ExecutionPlan,
+        target_decode_plan: &ExecutionPlan,
+        batch: usize,
+        k_max: usize,
+    ) -> SpecRoundCost {
+        let base = verify_time_s(target_decode_plan, batch, 0);
+        let k = k_max.max(1);
+        let slope = (verify_time_s(target_decode_plan, batch, k) - base) / k as f64;
+        SpecRoundCost {
+            draft_step_s: simulate_batched(draft_plan, batch).total_s,
+            verify_base_s: base,
+            verify_row_s: slope.max(0.0),
+        }
+    }
+
+    /// Verify-pass price at draft width `k`.
+    pub fn verify_s(&self, k: usize) -> f64 {
+        self.verify_base_s + k as f64 * self.verify_row_s
+    }
+
+    /// Expected whole-round price at width `k`, acceptance `alpha`:
+    /// `E[steps](k, α) · D + V(k)` — the same split as
+    /// [`crate::sim::exec::speculative_round_time_s`]. `k = 0` is the
+    /// plain round exactly.
+    pub fn round_s(&self, k: usize, alpha: f64) -> f64 {
+        expected_draft_steps(k, alpha) * self.draft_step_s + self.verify_s(k)
+    }
+
+    /// Expected emitted tokens per second of round time at width `k`:
+    /// `(1 + E[a](k, α)) / round_s(k, α)`.
+    pub fn goodput(&self, k: usize, alpha: f64) -> f64 {
+        let t = self.round_s(k, alpha);
+        if t <= 0.0 {
+            return 0.0;
+        }
+        (1.0 + expected_accepted_tokens(k, alpha)) / t
+    }
+}
+
+/// Per-sequence draft-width controller: the pure breakeven math shared
+/// by the engine loops and the fleet serving simulator, so the two can
+/// never disagree about when speculation pays.
+#[derive(Clone, Copy, Debug)]
+pub struct DraftController {
+    /// Largest width the draft's config allows.
+    pub k_max: usize,
+    /// α assumed before the first observed round (optimism here buys the
+    /// signal: a sequence must speculate at least once for the EWMA to
+    /// learn anything).
+    pub prior_alpha: f64,
+    /// A speculative width must beat plain decode's goodput by this
+    /// factor to be chosen (> 1 adds hysteresis so borderline traffic
+    /// does not flap between `k = 0` and `k = 1` on EWMA noise).
+    pub hysteresis: f64,
+}
+
+impl Default for DraftController {
+    fn default() -> Self {
+        DraftController { k_max: 4, prior_alpha: 0.6, hysteresis: 1.05 }
+    }
+}
+
+impl DraftController {
+    /// Pick the width maximizing expected goodput at the live α
+    /// estimate; `0` means this round decodes plainly. Ties and
+    /// within-hysteresis wins go to the *smaller* k.
+    pub fn choose_k(&self, alpha: Option<f64>, cost: &SpecRoundCost) -> usize {
+        let a = alpha.unwrap_or(self.prior_alpha).clamp(0.0, 1.0);
+        let plain = cost.goodput(0, a);
+        let mut best_k = 0;
+        let mut best = plain * self.hysteresis.max(1.0);
+        for k in 1..=self.k_max {
+            let g = cost.goodput(k, a);
+            if g > best {
+                best = g;
+                best_k = k;
+            }
+        }
+        best_k
+    }
+}
+
+/// One registered draft: the loaded model, its KV dimensions, its own
+/// paged store, and the market parameters the controller prices it with.
+pub struct DraftSlot<M> {
+    pub model: M,
+    pub dims: ModelDims,
+    /// Width ceiling for this draft.
+    pub k_max: usize,
+    /// Relative (or plan-derived) round prices for this draft.
+    pub cost: SpecRoundCost,
+    /// The draft's own paged KV store, worst-case sized at registration
+    /// (`max_active` full-capacity sequences) so draft growth can never
+    /// be the thing that preempts — the target store stays the contended
+    /// resource.
+    pub store: PagedKvStore,
+}
+
+/// Owner of the N loaded models a fleet-serving engine runs: the target
+/// plus zero or more drafts (each with its own store). Generic over the
+/// model type so the policy layer is unit-testable without PJRT.
+pub struct ModelRegistry<M> {
+    target: M,
+    target_dims: ModelDims,
+    drafts: Vec<DraftSlot<M>>,
+}
+
+impl<M> ModelRegistry<M> {
+    pub fn new(target: M, target_dims: ModelDims) -> ModelRegistry<M> {
+        ModelRegistry { target, target_dims, drafts: Vec::new() }
+    }
+
+    /// Register a draft and build its worst-case-sized paged store
+    /// (`max_active × ceil(cache_capacity / block_tokens)` blocks — the
+    /// same sizing rule the single-draft engine used). Registration
+    /// order is assignment priority ([`assign_draft`](Self::assign_draft)).
+    /// Returns the draft's index.
+    pub fn add_draft(
+        &mut self,
+        model: M,
+        dims: ModelDims,
+        k_max: usize,
+        cost: SpecRoundCost,
+        max_active: usize,
+        block_tokens: usize,
+    ) -> usize {
+        let store = PagedKvStore::new(KvArenaConfig {
+            layers: dims.layers,
+            heads_kv: dims.heads_kv,
+            head_dim: dims.head_dim,
+            block_tokens,
+            num_blocks: max_active.max(1) * div_ceil(dims.cache_capacity.max(1), block_tokens),
+        });
+        self.drafts.push(DraftSlot { model, dims, k_max: k_max.max(1), cost, store });
+        self.drafts.len() - 1
+    }
+
+    pub fn target(&self) -> &M {
+        &self.target
+    }
+
+    pub fn target_dims(&self) -> ModelDims {
+        self.target_dims
+    }
+
+    pub fn num_drafts(&self) -> usize {
+        self.drafts.len()
+    }
+
+    pub fn draft_dims(&self, i: usize) -> ModelDims {
+        self.drafts[i].dims
+    }
+
+    pub fn draft_k_max(&self, i: usize) -> usize {
+        self.drafts[i].k_max
+    }
+
+    /// Assign a draft for a sequence whose context may reach
+    /// `total_tokens`: the first registered draft whose capacity covers
+    /// it (registration order is priority — callers list preferred
+    /// drafts first). `None` → the sequence decodes plainly for life.
+    pub fn assign_draft(&self, total_tokens: usize) -> Option<usize> {
+        self.drafts.iter().position(|d| total_tokens <= d.dims.cache_capacity)
+    }
+
+    /// Width for one sequence's next round on draft `i`: static `k_max`
+    /// when the market is off, otherwise the controller's breakeven
+    /// argmax at the sequence's live α estimate.
+    pub fn plan_k(&self, i: usize, alpha: Option<f64>, adaptive: bool) -> usize {
+        let d = &self.drafts[i];
+        if !adaptive {
+            return d.k_max;
+        }
+        DraftController { k_max: d.k_max, ..DraftController::default() }
+            .choose_k(alpha, &d.cost)
+    }
+
+    pub fn draft_store(&self, i: usize) -> &PagedKvStore {
+        &self.drafts[i].store
+    }
+
+    pub fn draft_store_mut(&mut self, i: usize) -> &mut PagedKvStore {
+        &mut self.drafts[i].store
+    }
+
+    /// Split borrows for one draft group's dispatch: the target model,
+    /// draft `i`'s model, and draft `i`'s store, all at once (the
+    /// target's own store lives with the caller).
+    pub fn spec_parts_mut(&mut self, i: usize) -> (&M, &M, &mut PagedKvStore) {
+        let d = &mut self.drafts[i];
+        (&self.target, &d.model, &mut d.store)
+    }
+
+    /// Release a sequence's blocks in draft `i`'s store; returns freed
+    /// device bytes.
+    pub fn release_draft(&mut self, i: usize, h: KvSeqHandle) -> usize {
+        self.drafts[i].store.release(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims(cap: usize) -> ModelDims {
+        ModelDims { layers: 2, heads_kv: 2, head_dim: 8, cache_capacity: cap }
+    }
+
+    /// A registry of unit models: the policy under test never touches
+    /// the model values.
+    fn registry(caps: &[usize]) -> ModelRegistry<()> {
+        let mut reg = ModelRegistry::new((), dims(256));
+        for &c in caps {
+            reg.add_draft((), dims(c), 4, SpecRoundCost::relative(0.2, 0.3), 4, 16);
+        }
+        reg
+    }
+
+    #[test]
+    fn ewma_tracks_acceptance_and_starts_empty() {
+        let mut e = AcceptanceEwma::new(0.5);
+        assert_eq!(e.estimate(), None);
+        e.observe(4, 0); // a fully-rejected round IS information: α ≈ 0
+        assert_eq!(e.estimate(), Some(0.0));
+        e.observe(4, 4);
+        assert_eq!(e.estimate(), Some(0.5));
+        e.observe(4, 4);
+        assert_eq!(e.estimate(), Some(0.75));
+        // Zero-proposal rounds carry no information.
+        e.observe(0, 0);
+        assert_eq!(e.estimate(), Some(0.75));
+        // Converges to a steady observed rate.
+        let mut c = AcceptanceEwma::new(0.3);
+        for _ in 0..64 {
+            c.observe(4, 3);
+        }
+        assert!((c.estimate().unwrap() - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn controller_speculates_on_high_alpha_and_drops_to_plain_on_low() {
+        // A cheap draft (20% of a round per step, 30% per verify row).
+        let cost = SpecRoundCost::relative(0.2, 0.3);
+        let ctl = DraftController { k_max: 4, prior_alpha: 0.6, hysteresis: 1.05 };
+        let hi = ctl.choose_k(Some(0.9), &cost);
+        assert!(hi >= 2, "high acceptance should buy width, got {hi}");
+        assert_eq!(ctl.choose_k(Some(0.05), &cost), 0, "low-α traffic decodes plainly");
+        assert_eq!(ctl.choose_k(Some(0.0), &cost), 0);
+        // Monotone-ish: width never shrinks when acceptance rises.
+        let mut prev = 0;
+        for a in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let k = ctl.choose_k(Some(a), &cost);
+            assert!(k >= prev, "k({a}) = {k} < k(prev) = {prev}");
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn controller_refuses_an_expensive_draft_even_at_decent_alpha() {
+        // Phone-class shape: a draft step costs 90% of a target round
+        // and every verify row is a full sequential step. Speculation
+        // cannot pay at moderate acceptance — the market must sit out.
+        let cost = SpecRoundCost::relative(0.9, 1.0);
+        let ctl = DraftController { k_max: 4, prior_alpha: 0.6, hysteresis: 1.05 };
+        assert_eq!(ctl.choose_k(Some(0.6), &cost), 0);
+        // Near-perfect acceptance still wins: (1 + E[a]) grows while the
+        // catch-up term stays bounded.
+        assert!(ctl.choose_k(Some(0.99), &cost) >= 1);
+    }
+
+    #[test]
+    fn goodput_at_k0_is_the_plain_round_exactly() {
+        let cost = SpecRoundCost::relative(0.25, 0.4);
+        assert!((cost.round_s(0, 0.7) - cost.verify_base_s).abs() < 1e-12);
+        assert!((cost.goodput(0, 0.7) - 1.0 / cost.verify_base_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prior_alpha_drives_the_cold_start() {
+        let cost = SpecRoundCost::relative(0.2, 0.3);
+        let optimist = DraftController { k_max: 4, prior_alpha: 0.9, hysteresis: 1.0 };
+        let pessimist = DraftController { k_max: 4, prior_alpha: 0.0, hysteresis: 1.0 };
+        assert!(optimist.choose_k(None, &cost) >= 1, "optimistic prior buys the signal");
+        assert_eq!(pessimist.choose_k(None, &cost), 0);
+    }
+
+    #[test]
+    fn assign_draft_is_first_fit_in_registration_order() {
+        let reg = registry(&[64, 256]);
+        assert_eq!(reg.assign_draft(32), Some(0), "first draft fits: preferred");
+        assert_eq!(reg.assign_draft(128), Some(1), "too long for draft 0, fits draft 1");
+        assert_eq!(reg.assign_draft(1024), None, "nobody fits: plain decode for life");
+        assert_eq!(registry(&[]).assign_draft(1), None, "no drafts registered");
+    }
+
+    #[test]
+    fn draft_stores_are_worst_case_sized_per_draft() {
+        let reg = registry(&[64, 250]);
+        // max_active (4) × ceil(cap / block_tokens (16)) blocks each.
+        assert_eq!(reg.draft_store(0).config().num_blocks, 4 * 4);
+        assert_eq!(reg.draft_store(1).config().num_blocks, 4 * 16);
+    }
+
+    #[test]
+    fn spec_parts_mut_yields_disjoint_borrows_and_claims_work() {
+        let mut reg = registry(&[64]);
+        let h = reg.draft_store_mut(0).claim(32).unwrap();
+        let (_target, _draft, store) = reg.spec_parts_mut(0);
+        store.append(h, 16).unwrap();
+        assert_eq!(reg.draft_store(0).len(h), 16);
+        let freed = reg.release_draft(0, h);
+        assert!(freed > 0, "releasing a claimed sequence frees device bytes");
+    }
+
+    #[test]
+    fn plan_k_static_vs_adaptive() {
+        let mut reg = ModelRegistry::new((), dims(256));
+        reg.add_draft((), dims(256), 4, SpecRoundCost::relative(0.2, 0.3), 4, 16);
+        assert_eq!(reg.plan_k(0, Some(0.01), false), 4, "market off: static k_max");
+        assert_eq!(reg.plan_k(0, Some(0.01), true), 0, "market on: low α sits out");
+        assert!(reg.plan_k(0, Some(0.95), true) >= 2);
+    }
+}

@@ -234,6 +234,30 @@ impl Round {
     pub fn prefill_tokens(&self) -> usize {
         self.prefills.iter().map(|c| c.len).sum()
     }
+
+    /// Per-round model selection for a fleet round: partition the decode
+    /// batch by the model that serves each sequence. Sequences bound to
+    /// draft `i` (and bidding k > 0 this round) batch together — the
+    /// draft's weights stream once for the whole group — while everything
+    /// else (no draft bound, or the market bid k = 0) decodes plainly on
+    /// the target. `num_drafts` fixes the group count so indices stay
+    /// aligned with the registry; an assignment outside that range falls
+    /// back to the plain batch rather than panicking mid-round.
+    pub fn partition_by_model(
+        &self,
+        num_drafts: usize,
+        assign: impl Fn(RequestId) -> Option<usize>,
+    ) -> (Vec<RequestId>, Vec<Vec<RequestId>>) {
+        let mut plain = Vec::new();
+        let mut groups: Vec<Vec<RequestId>> = vec![Vec::new(); num_drafts];
+        for &id in &self.decode_batch {
+            match assign(id) {
+                Some(i) if i < num_drafts => groups[i].push(id),
+                _ => plain.push(id),
+            }
+        }
+        (plain, groups)
+    }
 }
 
 /// The scheduler: owns waiting queue + preempted queue + active set.
@@ -601,6 +625,29 @@ mod tests {
 
     fn req(id: u64, prompt_len: usize, gen: usize) -> InferenceRequest {
         InferenceRequest::new(id, vec![1; prompt_len], gen)
+    }
+
+    #[test]
+    fn partition_by_model_covers_batch_exactly_once() {
+        let round = Round {
+            prefills: Vec::new(),
+            decode_batch: vec![1, 2, 3, 4, 5],
+        };
+        // 1, 4 → draft 0; 3 → draft 1; 2 unbound; 5 assigned out of range.
+        let (plain, groups) = round.partition_by_model(2, |id| match id {
+            1 | 4 => Some(0),
+            3 => Some(1),
+            5 => Some(7),
+            _ => None,
+        });
+        assert_eq!(plain, vec![2, 5]);
+        assert_eq!(groups, vec![vec![1, 4], vec![3]]);
+        let total: usize = plain.len() + groups.iter().map(Vec::len).sum::<usize>();
+        assert_eq!(total, round.batch_size(), "every sequence lands in exactly one group");
+        // Zero drafts degrades to the single-model round.
+        let (plain, groups) = round.partition_by_model(0, |_| Some(0));
+        assert_eq!(plain, vec![1, 2, 3, 4, 5]);
+        assert!(groups.is_empty());
     }
 
     /// Execute one planned round against the scheduler state, the way the

@@ -45,6 +45,23 @@
 //! draft context alongside target context; eviction and reap release
 //! both. Output is token-identical to plain greedy decode by
 //! construction — see [`crate::runtime::speculative_step_greedy`].
+//!
+//! **Fleet serving** ([`FleetConfig`]): the engine generalizes from
+//! "one target, at most one draft" to a [`ModelRegistry`] owning the
+//! target plus zero-or-more drafts, each with its own worst-case-sized
+//! paged store. A sequence binds to at most one draft for its lifetime
+//! (first registered draft whose capacity covers it); the per-round
+//! width comes from the **adaptive draft market** — a per-sequence
+//! [`AcceptanceEwma`] over live `accepted/proposed` bid against the
+//! draft's [`SpecRoundCost`] breakeven, so low-α traffic drops to plain
+//! decode (`k = 0`) instead of paying draft overhead. Speculative
+//! members are grouped by draft index and each group dispatches as one
+//! batch against its model — weight-streaming cost is shared only
+//! within a model's batch. With [`FleetConfig::sampled`] set, verify
+//! runs the sampling-correct rejection rule (`min(1, p_t/p_d)` +
+//! residual resampling, [`crate::runtime::speculative_step_sampled`])
+//! so temperature traffic is served speculatively too; greedy traffic
+//! (`sampled: None`) stays bit-identical to plain decode.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -63,8 +80,10 @@ use crate::runtime::tinylm::{
 use crate::runtime::Runtime;
 use crate::serving::admission::AdmissionPolicy;
 use crate::serving::metrics::Metrics;
+use crate::serving::registry::{AcceptanceEwma, ModelDims, ModelRegistry, SpecRoundCost};
 use crate::serving::request::{InferenceRequest, InferenceResponse, RequestId};
 use crate::serving::scheduler::{Scheduler, SchedulerConfig};
+use crate::util::rng::Pcg32;
 
 /// KV-arena allocation granule (token positions per block). 16 divides
 /// every prefill bucket and keeps worst-case internal fragmentation to
@@ -100,6 +119,63 @@ pub struct SpecConfig {
     pub draft_k: usize,
 }
 
+/// One draft model in a fleet: its artifacts, its width ceiling, and
+/// the relative round prices the adaptive controller bids with.
+#[derive(Clone, Debug)]
+pub struct DraftModelConfig {
+    /// Artifacts directory of this draft model.
+    pub artifacts_dir: String,
+    /// Width ceiling for this draft (clamped to ≥ 1).
+    pub k_max: usize,
+    /// Round prices for the draft/k breakeven. The engine cannot
+    /// decompose a measured speculative step into draft/verify shares,
+    /// so it feeds configured *relative* costs
+    /// ([`SpecRoundCost::relative`]; the B=1 CPU artifact scores verify
+    /// rows sequentially — `relative(d, 1.0)` is its honest setting).
+    pub cost: SpecRoundCost,
+}
+
+/// Sampling-correct speculative verification: draft proposals are
+/// sampled at `temperature`, and verify accepts each with probability
+/// `min(1, p_target/p_draft)` (residual resampling on rejection —
+/// [`crate::runtime::speculative_step_sampled`]), so the emitted stream
+/// is distributed exactly as target-only sampling. `temperature ≈ 0`
+/// degenerates to bitwise greedy.
+#[derive(Clone, Copy, Debug)]
+pub struct SampledSpecConfig {
+    pub temperature: f64,
+    /// Seed for the engine's deterministic sampling RNG.
+    pub seed: u64,
+}
+
+/// Multi-model fleet configuration: the draft models registered next to
+/// the target and the market/sampling toggles. Supersedes [`SpecConfig`]
+/// (which maps onto a one-draft static greedy fleet internally).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Draft models in assignment-priority order: a sequence binds to
+    /// the FIRST draft whose capacity covers its lifetime context.
+    pub drafts: Vec<DraftModelConfig>,
+    /// `true` — the adaptive draft market: per-sequence k from the live
+    /// acceptance EWMA vs the breakeven (k = 0 ⇒ plain decode).
+    /// `false` — static `k_max` per draft, the legacy behavior.
+    pub adaptive_k: bool,
+    /// EWMA weight for the per-sequence acceptance estimates
+    /// ([`AcceptanceEwma::new`]).
+    pub ewma_weight: f64,
+    /// `Some` — serve temperature traffic speculatively with the
+    /// rejection rule; `None` — greedy draft/verify, token-identical to
+    /// plain decode.
+    pub sampled: Option<SampledSpecConfig>,
+}
+
+impl FleetConfig {
+    /// Adaptive greedy fleet with the default EWMA weight.
+    pub fn new(drafts: Vec<DraftModelConfig>) -> FleetConfig {
+        FleetConfig { drafts, adaptive_k: true, ewma_weight: 0.3, sampled: None }
+    }
+}
+
 /// Full engine configuration: the scheduler policy knobs plus the
 /// engine-level toggles PR 7 plumbs through one front door. The legacy
 /// constructors ([`ServingEngine::start`] and friends) build a depth-1,
@@ -110,7 +186,12 @@ pub struct SpecConfig {
 pub struct EngineConfig {
     pub sched: SchedulerConfig,
     pub policy: AdmissionPolicy,
+    /// Legacy single-draft speculative decoding; internally mapped to a
+    /// one-draft static greedy [`FleetConfig`] (ignored when `fleet` is
+    /// set).
     pub spec: Option<SpecConfig>,
+    /// Multi-model fleet serving: N drafts + the adaptive draft market.
+    pub fleet: Option<FleetConfig>,
     /// Pipeline slots. `1` runs the classic serial round loop (token
     /// streams and metrics bit-identical to every prior PR). `≥ 2` runs
     /// the staged executor: while slot N's round is in flight, the
@@ -138,6 +219,7 @@ impl EngineConfig {
             sched,
             policy: AdmissionPolicy::default(),
             spec: None,
+            fleet: None,
             pipeline_depth: 2,
             quantized_kv: false,
             prefix_retain_blocks: 0,
@@ -276,6 +358,24 @@ impl ServingEngine {
         Self::start_inner(artifacts_dir, sched_cfg, policy, Some(spec))
     }
 
+    /// Start a multi-model **fleet** engine: the target plus the
+    /// configured draft models, a per-round draft/k chosen by the
+    /// adaptive market (when `fleet.adaptive_k`), and optionally
+    /// sampling-correct verification for temperature traffic
+    /// (`fleet.sampled`). Runs the pipelined executor at the
+    /// [`EngineConfig::new`] defaults.
+    pub fn start_fleet(
+        artifacts_dir: &str,
+        sched_cfg: SchedulerConfig,
+        policy: AdmissionPolicy,
+        fleet: FleetConfig,
+    ) -> Result<ServingEngine> {
+        let mut cfg = EngineConfig::new(sched_cfg);
+        cfg.policy = policy;
+        cfg.fleet = Some(fleet);
+        Self::start_with_config(artifacts_dir, cfg)
+    }
+
     fn start_inner(
         artifacts_dir: &str,
         sched_cfg: SchedulerConfig,
@@ -307,19 +407,50 @@ impl ServingEngine {
             .name("mldrift-serving".into())
             .spawn(move || {
                 // PJRT handles are not `Send`, so the worker thread owns
-                // the whole runtime — target and draft alike.
+                // the whole runtime — target and every draft alike. The
+                // legacy single-draft `spec` maps onto a one-draft
+                // STATIC GREEDY fleet (same k every round, same store
+                // sizing, greedy verify), so every pre-fleet caller
+                // keeps bit-identical token streams.
+                let fleet_cfg = match (&cfg.fleet, &cfg.spec) {
+                    (Some(f), _) => Some(f.clone()),
+                    (None, Some(s)) => Some(FleetConfig {
+                        drafts: vec![DraftModelConfig {
+                            artifacts_dir: s.draft_artifacts_dir.clone(),
+                            k_max: s.draft_k.max(1),
+                            cost: SpecRoundCost::relative(1.0, 1.0),
+                        }],
+                        adaptive_k: false,
+                        ewma_weight: 0.3,
+                        sampled: None,
+                    }),
+                    (None, None) => None,
+                };
                 let loaded = Runtime::cpu().and_then(|rt| {
                     let target = TinyLmRuntime::load(&rt, &dir)?;
-                    let draft = match &cfg.spec {
-                        Some(s) => Some((
-                            TinyLmRuntime::load(&rt, &s.draft_artifacts_dir)?,
-                            s.draft_k.max(1),
-                        )),
-                        None => None,
+                    let dims = ModelDims::of(&target.manifest);
+                    let mut reg = ModelRegistry::new(target, dims);
+                    let (adaptive_k, ewma_weight, sampled) = match &fleet_cfg {
+                        Some(f) => {
+                            for d in &f.drafts {
+                                let m = TinyLmRuntime::load(&rt, &d.artifacts_dir)?;
+                                let dm = ModelDims::of(&m.manifest);
+                                reg.add_draft(
+                                    m,
+                                    dm,
+                                    d.k_max.max(1),
+                                    d.cost,
+                                    cfg.sched.max_active,
+                                    KV_BLOCK_TOKENS,
+                                );
+                            }
+                            (f.adaptive_k, f.ewma_weight, f.sampled)
+                        }
+                        None => (false, 0.3, None),
                     };
-                    Ok((target, draft))
+                    Ok(FleetRuntime { reg, adaptive_k, ewma_weight, sampled })
                 });
-                let (model, draft) = match loaded {
+                let fleet = match loaded {
                     Ok(x) => {
                         let _ = ready_tx.send(Ok(()));
                         x
@@ -329,7 +460,7 @@ impl ServingEngine {
                         return;
                     }
                 };
-                worker_loop(model, draft, cfg, rx, m2)
+                worker_loop(fleet, cfg, rx, m2)
             })
             .map_err(|e| DriftError::Serving(format!("spawn worker: {e}")))?;
         ready_rx
@@ -409,24 +540,30 @@ fn build_target_store(m: &TinyLmManifest, cfg: &EngineConfig) -> PagedKvStore {
     store
 }
 
-fn worker_loop(
-    model: TinyLmRuntime,
-    draft: Option<(TinyLmRuntime, usize)>,
-    cfg: EngineConfig,
-    rx: Receiver<Msg>,
-    metrics: Arc<Metrics>,
-) {
+/// Resolved fleet state the worker loops consume: the registry (target
+/// + loaded drafts, each with its own worst-case-sized paged store —
+/// draft growth can never be the thing that preempts, the *target*
+/// store stays the contended resource) plus the market and sampling
+/// toggles. A sequence whose lifetime context fits no draft's capacity
+/// never gets a draft binding and decodes plainly.
+struct FleetRuntime {
+    reg: ModelRegistry<TinyLmRuntime>,
+    adaptive_k: bool,
+    ewma_weight: f64,
+    sampled: Option<SampledSpecConfig>,
+}
+
+fn worker_loop(fleet: FleetRuntime, cfg: EngineConfig, rx: Receiver<Msg>, metrics: Arc<Metrics>) {
     metrics.set_pipeline_depth(cfg.pipeline_depth.max(1) as u64);
     if cfg.pipeline_depth >= 2 {
-        worker_loop_pipelined(model, draft, cfg, rx, metrics)
+        worker_loop_pipelined(fleet, cfg, rx, metrics)
     } else {
-        worker_loop_serial(model, draft, cfg, rx, metrics)
+        worker_loop_serial(fleet, cfg, rx, metrics)
     }
 }
 
 fn worker_loop_serial(
-    model: TinyLmRuntime,
-    draft: Option<(TinyLmRuntime, usize)>,
+    fleet: FleetRuntime,
     cfg: EngineConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
@@ -434,31 +571,17 @@ fn worker_loop_serial(
     let sched_cfg = cfg.sched;
     let policy = cfg.policy;
     let mut sched = Scheduler::new(sched_cfg);
-    let (draft_rt, draft_k) = match draft {
-        Some((d, k)) => (Some(d), k),
-        None => (None, 0),
-    };
-    let m = &model.manifest;
-    let mut store = build_target_store(m, &cfg);
-    // Draft KV store (speculative decoding): worst-case sized for
-    // `max_active` full-capacity draft sequences, so draft growth can
-    // never be the thing that preempts — the *target* store is the
-    // contended resource, the draft rides along. A sequence whose budget
-    // exceeds the draft's capacity simply never gets a draft handle and
-    // decodes plainly.
-    let mut draft_store: Option<PagedKvStore> = draft_rt.as_ref().map(|d| {
-        let dm = &d.manifest;
-        PagedKvStore::new(KvArenaConfig {
-            layers: dm.layers,
-            heads_kv: dm.heads_kv,
-            head_dim: dm.head_dim,
-            block_tokens: KV_BLOCK_TOKENS,
-            num_blocks: sched_cfg.max_active.max(1)
-                * crate::util::div_ceil(dm.cache_capacity.max(1), KV_BLOCK_TOKENS),
-        })
-    });
-    let draft_seq_cap = draft_rt.as_ref().map_or(0, |d| d.manifest.cache_capacity);
-    let mut draft_handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
+    let FleetRuntime { mut reg, adaptive_k, ewma_weight, sampled } = fleet;
+    let mut spec_rng = sampled.map(|s| Pcg32::seeded(s.seed));
+    let target_cap = reg.target_dims().cache_capacity;
+    let mut store = build_target_store(&reg.target().manifest, &cfg);
+    // Draft binding: `(draft index, handle in that draft's store)` — a
+    // sequence binds to at most one draft for its lifetime.
+    let mut draft_handles: HashMap<RequestId, (usize, KvSeqHandle)> = HashMap::new();
+    // Per-sequence live acceptance for the draft market. Survives
+    // preemption (the estimate describes the *traffic*, not KV state —
+    // re-admission should not forget what it learned); dropped at reap.
+    let mut acceptance: HashMap<RequestId, AcceptanceEwma> = HashMap::new();
     let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
     let mut handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
     let mut replies: HashMap<RequestId, PendingReply> = HashMap::new();
@@ -497,7 +620,7 @@ fn worker_loop_serial(
                     // backpressure, so a request that could NEVER fit
                     // must fail here or it would wedge the queue).
                     let tokens = req.prompt.len() + req.max_new_tokens;
-                    let cap = model.manifest.cache_capacity.min(store.config().total_tokens());
+                    let cap = target_cap.min(store.config().total_tokens());
                     if tokens > cap {
                         let msg = format!(
                             "prompt + max_new_tokens = {tokens} exceeds per-sequence capacity {cap}"
@@ -549,26 +672,22 @@ fn worker_loop_serial(
             // attach is what multiplies admitted concurrency at fixed
             // arena bytes. With no keys this is exactly the plain gate.
             let keys: &[PrefixKey] = prefix_keys.get(&req.id).map_or(&[], |k| k.as_slice());
-            match policy.admit_prefixed(&mut store, req, ctx_tokens, mean_gen, keys) {
-                Some(h) => {
-                    // Speculative decode: attach the draft when the
-                    // request fits its capacity, claiming the same
-                    // context in the draft store. A draft-claim miss
-                    // releases the target claim and defers the admission
-                    // — backpressure, so the two stores can never
-                    // disagree about who is admitted.
-                    if let Some(ds) = draft_store.as_mut() {
-                        if req.prompt.len() + req.max_new_tokens <= draft_seq_cap {
-                            match ds.claim(ctx_tokens) {
-                                Ok(dh) => {
-                                    draft_handles.insert(req.id, dh);
-                                }
-                                Err(_) => {
-                                    store.release(h);
-                                    return false;
-                                }
-                            }
-                        }
+            // Fleet draft binding: the first registered draft whose
+            // capacity covers the request's lifetime context claims the
+            // same context in its own store, atomically with the target
+            // claim (a companion miss rolls the target claim back and
+            // defers — backpressure, so no store pair can ever disagree
+            // about who is admitted).
+            let di = reg.assign_draft(req.prompt.len() + req.max_new_tokens);
+            let companion = di.map(|i| reg.draft_store_mut(i));
+            match policy.admit_with_companion(&mut store, companion, req, ctx_tokens, mean_gen, keys)
+            {
+                Some((h, dh)) => {
+                    if let (Some(i), Some(dh)) = (di, dh) {
+                        draft_handles.insert(req.id, (i, dh));
+                        acceptance
+                            .entry(req.id)
+                            .or_insert_with(|| AcceptanceEwma::new(ewma_weight));
                     }
                     handles.insert(req.id, h);
                     newly_admitted.push(req.id);
@@ -619,10 +738,16 @@ fn worker_loop_serial(
                 if remaining == 0 {
                     return None;
                 }
-                let k_eff = if draft_rt.is_some() && draft_handles.contains_key(&id) {
-                    draft_k.min(remaining)
-                } else {
-                    0
+                // The draft market: this sequence's width for the
+                // round — static `k_max` when the market is off,
+                // otherwise the breakeven argmax at the live α
+                // estimate (`k = 0` ⇒ plain decode).
+                let k_eff = match draft_handles.get(&id) {
+                    Some(&(di, _)) => {
+                        let alpha = acceptance.get(&id).and_then(|e| e.estimate());
+                        reg.plan_k(di, alpha, adaptive_k).min(remaining)
+                    }
+                    None => 0,
                 };
                 spec_width.insert(id, k_eff);
                 Some((id, k_eff + 1))
@@ -649,10 +774,8 @@ fn worker_loop_serial(
                 // `kv_device_bytes_*` watermark, which gauges the target
                 // store alone.
                 let mut draft_freed = 0;
-                if let Some(ds) = draft_store.as_mut() {
-                    if let Some(dh) = draft_handles.remove(&victim) {
-                        draft_freed = ds.release(dh);
-                    }
+                if let Some((di, dh)) = draft_handles.remove(&victim) {
+                    draft_freed = reg.release_draft(di, dh);
                 }
                 metrics.record_preemption(bill, bytes_freed);
                 crate::log_warn!(
@@ -702,8 +825,11 @@ fn worker_loop_serial(
         // `sim::exec::paged_gather_overhead_s`.
         let mut step_ids = Vec::with_capacity(inputs.len());
         let mut steps = Vec::with_capacity(inputs.len());
-        let mut spec_ids = Vec::new();
-        let mut spec_steps: Vec<(SpecStepArgs, Vec<i32>)> = Vec::new();
+        // Speculative members grouped by draft index: weight-streaming
+        // cost is shared only within one model's batch, so each group
+        // dispatches as one batch against its own draft model.
+        let mut spec_groups: Vec<(Vec<RequestId>, Vec<(SpecStepArgs, Vec<i32>)>)> =
+            (0..reg.num_drafts()).map(|_| (Vec::new(), Vec::new())).collect();
         for &id in &round.decode_batch {
             if let Some(&(token, pos)) = inputs.get(&id) {
                 let k_eff = spec_width.get(&id).copied().unwrap_or(0);
@@ -712,17 +838,17 @@ fn worker_loop_serial(
                     // has not consumed yet (lag ≤ 1 after a
                     // fully-accepted round; the whole context after a
                     // re-prefill failure would have dropped the handle).
-                    let ds = draft_store.as_ref().expect("spec width implies a draft store");
-                    let dh = draft_handles[&id];
+                    let &(di, dh) = draft_handles.get(&id).expect("spec width implies a draft");
                     let seq = sched.seq(id).expect("scheduled seq exists");
                     let plen = seq.request.prompt.len();
-                    let catchup: Vec<i32> = (ds.len(dh)..pos)
+                    let catchup: Vec<i32> = (reg.draft_store(di).len(dh)..pos)
                         .map(|p| {
                             if p < plen { seq.request.prompt[p] } else { seq.generated[p - plen] }
                         })
                         .collect();
-                    spec_ids.push(id);
-                    spec_steps.push((
+                    metrics.record_spec_plan(k_eff as u64);
+                    spec_groups[di].0.push(id);
+                    spec_groups[di].1.push((
                         SpecStepArgs { token, pos, k: k_eff, h: handles[&id], draft_h: dh },
                         catchup,
                     ));
@@ -732,7 +858,7 @@ fn worker_loop_serial(
                 }
             }
         }
-        let outcomes = model.decode_round_paged(&mut store, &steps);
+        let outcomes = reg.target().decode_round_paged(&mut store, &steps);
         for (id, outcome) in step_ids.into_iter().zip(outcomes) {
             match outcome {
                 Ok(out) => {
@@ -764,9 +890,23 @@ fn worker_loop_serial(
         // scrubs on failure), and hands back the accepted tokens to emit
         // *this* round. Output is token-identical to plain greedy decode
         // whatever the draft proposed.
-        if let (Some(draft_m), Some(ds)) = (draft_rt.as_ref(), draft_store.as_mut()) {
-            let spec_outcomes = model.spec_round_paged(draft_m, &mut store, ds, &spec_steps);
-            for (id, outcome) in spec_ids.into_iter().zip(spec_outcomes) {
+        for (di, (ids, group)) in spec_groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let (target_m, draft_m, ds) = reg.spec_parts_mut(di);
+            let spec_outcomes = match (sampled, spec_rng.as_mut()) {
+                (Some(sc), Some(rng)) => target_m.spec_round_paged_sampled(
+                    draft_m,
+                    &mut store,
+                    ds,
+                    &group,
+                    sc.temperature,
+                    rng,
+                ),
+                _ => target_m.spec_round_paged(draft_m, &mut store, ds, &group),
+            };
+            for (id, outcome) in ids.into_iter().zip(spec_outcomes) {
                 match outcome {
                     Ok((out, step_s)) => {
                         let srt = runtimes.get_mut(&id).expect("member collected above");
@@ -774,6 +914,11 @@ fn worker_loop_serial(
                         metrics.record_decode_step(step_s);
                         metrics
                             .record_spec(out.proposed as u64, out.accepted_tokens.len() as u64);
+                        // Feed the market: the EWMA this sequence's
+                        // next round's width is planned from.
+                        if let Some(est) = acceptance.get_mut(&id) {
+                            est.observe(out.proposed, out.accepted_tokens.len());
+                        }
                         srt.next_token = out.next_token;
                         // Accepted tokens join the emission stream now —
                         // this is what lets tokens/round exceed batch
@@ -858,7 +1003,7 @@ fn worker_loop_serial(
             });
             pack_ids.push(c.id);
         }
-        let outcomes = model.prefill_pack(&mut store, &pack);
+        let outcomes = reg.target().prefill_pack(&mut store, &pack);
         for ((id, chunk), outcome) in pack_ids.into_iter().zip(&pack).zip(outcomes) {
             match outcome {
                 Ok(out) => {
@@ -903,34 +1048,29 @@ fn worker_loop_serial(
                     // failure downgrades this sequence to plain decode —
                     // speculation is an optimization, never a new way to
                     // fail a request.
-                    if let (Some(draft_m), Some(ds)) =
-                        (draft_rt.as_ref(), draft_store.as_mut())
-                    {
-                        if let Some(&dh) = draft_handles.get(&id) {
-                            let seq = sched.seq(id).expect("scheduled seq exists");
-                            let ctx: Vec<i32> = seq
-                                .request
-                                .prompt
-                                .iter()
-                                .chain(seq.generated.iter())
-                                .copied()
-                                .collect();
-                            match draft_m.prefill_paged(&ctx, ds, dh) {
-                                Ok(_) => {
-                                    if let Err(e) = ds.append(dh, ctx.len()) {
-                                        crate::log_error!(
-                                            "draft kv append for request {id}: {e}"
-                                        );
-                                    }
+                    if let Some(&(di, dh)) = draft_handles.get(&id) {
+                        let seq = sched.seq(id).expect("scheduled seq exists");
+                        let ctx: Vec<i32> = seq
+                            .request
+                            .prompt
+                            .iter()
+                            .chain(seq.generated.iter())
+                            .copied()
+                            .collect();
+                        let (_, draft_m, ds) = reg.spec_parts_mut(di);
+                        match draft_m.prefill_paged(&ctx, ds, dh) {
+                            Ok(_) => {
+                                if let Err(e) = ds.append(dh, ctx.len()) {
+                                    crate::log_error!("draft kv append for request {id}: {e}");
                                 }
-                                Err(e) => {
-                                    crate::log_warn!(
-                                        "draft prefill failed for request {id} \
-                                         (plain decode fallback): {e}"
-                                    );
-                                    ds.release(dh);
-                                    draft_handles.remove(&id);
-                                }
+                            }
+                            Err(e) => {
+                                crate::log_warn!(
+                                    "draft prefill failed for request {id} \
+                                     (plain decode fallback): {e}"
+                                );
+                                ds.release(dh);
+                                draft_handles.remove(&id);
                             }
                         }
                     }
@@ -960,11 +1100,10 @@ fn worker_loop_serial(
                 store.release(h);
             }
             prefix_keys.remove(&id);
-            if let Some(ds) = draft_store.as_mut() {
-                if let Some(dh) = draft_handles.remove(&id) {
-                    ds.release(dh);
-                }
+            if let Some((di, dh)) = draft_handles.remove(&id) {
+                reg.release_draft(di, dh);
             }
+            acceptance.remove(&id);
             if let Some(srt) = runtimes.remove(&id) {
                 let total_s = srt.started.elapsed().as_secs_f64();
                 let ttft_s = fallback_ttft(srt.ttft_s, total_s);
@@ -1102,8 +1241,7 @@ fn slot_jitter_us() -> u64 {
 /// truly-async device queue), change the model FIRST and let the
 /// explorer veto the design before the engine learns it.
 fn worker_loop_pipelined(
-    model: TinyLmRuntime,
-    draft: Option<(TinyLmRuntime, usize)>,
+    fleet: FleetRuntime,
     cfg: EngineConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
@@ -1117,25 +1255,12 @@ fn worker_loop_pipelined(
         }
     };
     let mut sched = Scheduler::new(sched_cfg);
-    let (draft_rt, draft_k) = match draft {
-        Some((d, k)) => (Some(d), k),
-        None => (None, 0),
-    };
-    let m = &model.manifest;
-    let mut store = build_target_store(m, &cfg);
-    let mut draft_store: Option<PagedKvStore> = draft_rt.as_ref().map(|d| {
-        let dm = &d.manifest;
-        PagedKvStore::new(KvArenaConfig {
-            layers: dm.layers,
-            heads_kv: dm.heads_kv,
-            head_dim: dm.head_dim,
-            block_tokens: KV_BLOCK_TOKENS,
-            num_blocks: sched_cfg.max_active.max(1)
-                * crate::util::div_ceil(dm.cache_capacity.max(1), KV_BLOCK_TOKENS),
-        })
-    });
-    let draft_seq_cap = draft_rt.as_ref().map_or(0, |d| d.manifest.cache_capacity);
-    let mut draft_handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
+    let FleetRuntime { mut reg, adaptive_k, ewma_weight, sampled } = fleet;
+    let mut spec_rng = sampled.map(|s| Pcg32::seeded(s.seed));
+    let target_cap = reg.target_dims().cache_capacity;
+    let mut store = build_target_store(&reg.target().manifest, &cfg);
+    let mut draft_handles: HashMap<RequestId, (usize, KvSeqHandle)> = HashMap::new();
+    let mut acceptance: HashMap<RequestId, AcceptanceEwma> = HashMap::new();
     let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
     let mut handles: HashMap<RequestId, KvSeqHandle> = HashMap::new();
     let mut replies: HashMap<RequestId, PendingReply> = HashMap::new();
@@ -1167,7 +1292,7 @@ fn worker_loop_pipelined(
             match msg {
                 Msg::Request(req, reply) => {
                     let tokens = req.prompt.len() + req.max_new_tokens;
-                    let cap = model.manifest.cache_capacity.min(store.config().total_tokens());
+                    let cap = target_cap.min(store.config().total_tokens());
                     if tokens > cap {
                         let msg = format!(
                             "prompt + max_new_tokens = {tokens} exceeds per-sequence capacity {cap}"
@@ -1212,20 +1337,16 @@ fn worker_loop_pipelined(
         let mut newly_admitted: Vec<RequestId> = Vec::new();
         sched.admit_where(|req, ctx_tokens| {
             let keys: &[PrefixKey] = prefix_keys.get(&req.id).map_or(&[], |k| k.as_slice());
-            match policy.admit_prefixed(&mut store, req, ctx_tokens, mean_gen, keys) {
-                Some(h) => {
-                    if let Some(ds) = draft_store.as_mut() {
-                        if req.prompt.len() + req.max_new_tokens <= draft_seq_cap {
-                            match ds.claim(ctx_tokens) {
-                                Ok(dh) => {
-                                    draft_handles.insert(req.id, dh);
-                                }
-                                Err(_) => {
-                                    store.release(h);
-                                    return false;
-                                }
-                            }
-                        }
+            let di = reg.assign_draft(req.prompt.len() + req.max_new_tokens);
+            let companion = di.map(|i| reg.draft_store_mut(i));
+            match policy.admit_with_companion(&mut store, companion, req, ctx_tokens, mean_gen, keys)
+            {
+                Some((h, dh)) => {
+                    if let (Some(i), Some(dh)) = (di, dh) {
+                        draft_handles.insert(req.id, (i, dh));
+                        acceptance
+                            .entry(req.id)
+                            .or_insert_with(|| AcceptanceEwma::new(ewma_weight));
                     }
                     handles.insert(req.id, h);
                     newly_admitted.push(req.id);
@@ -1253,10 +1374,12 @@ fn worker_loop_pipelined(
                 if remaining == 0 {
                     return None;
                 }
-                let k_eff = if draft_rt.is_some() && draft_handles.contains_key(&id) {
-                    draft_k.min(remaining)
-                } else {
-                    0
+                let k_eff = match draft_handles.get(&id) {
+                    Some(&(di, _)) => {
+                        let alpha = acceptance.get(&id).and_then(|e| e.estimate());
+                        reg.plan_k(di, alpha, adaptive_k).min(remaining)
+                    }
+                    None => 0,
                 };
                 Some((id, k_eff + 1))
             })
@@ -1275,10 +1398,8 @@ fn worker_loop_pipelined(
                     replies.insert(victim, srt.park());
                 }
                 let mut draft_freed = 0;
-                if let Some(ds) = draft_store.as_mut() {
-                    if let Some(dh) = draft_handles.remove(&victim) {
-                        draft_freed = ds.release(dh);
-                    }
+                if let Some((di, dh)) = draft_handles.remove(&victim) {
+                    draft_freed = reg.release_draft(di, dh);
                 }
                 metrics.record_preemption(bill, bytes_freed);
                 crate::log_warn!(
@@ -1334,6 +1455,9 @@ fn worker_loop_pipelined(
                                 out.proposed as u64,
                                 out.accepted_tokens.len() as u64,
                             );
+                            if let Some(est) = acceptance.get_mut(&id) {
+                                est.observe(out.proposed, out.accepted_tokens.len());
+                            }
                             srt.next_token = out.next_token;
                             if let Some(seq) = sched.seq_mut(id) {
                                 for &tok in &out.accepted_tokens {
@@ -1401,34 +1525,31 @@ fn worker_loop_pipelined(
                                 arrival.elapsed().as_secs_f64(),
                             ),
                         );
-                        if let (Some(draft_m), Some(ds)) =
-                            (draft_rt.as_ref(), draft_store.as_mut())
-                        {
-                            if let Some(&dh) = draft_handles.get(&id) {
-                                if let Some(seq) = sched.seq(id) {
-                                    let ctx: Vec<i32> = seq
-                                        .request
-                                        .prompt
-                                        .iter()
-                                        .chain(seq.generated.iter())
-                                        .copied()
-                                        .collect();
-                                    match draft_m.prefill_paged(&ctx, ds, dh) {
-                                        Ok(_) => {
-                                            if let Err(e) = ds.append(dh, ctx.len()) {
-                                                crate::log_error!(
-                                                    "draft kv append for request {id}: {e}"
-                                                );
-                                            }
-                                        }
-                                        Err(e) => {
-                                            crate::log_warn!(
-                                                "draft prefill failed for request {id} \
-                                                 (plain decode fallback): {e}"
+                        if let Some(&(di, dh)) = draft_handles.get(&id) {
+                            if let Some(seq) = sched.seq(id) {
+                                let ctx: Vec<i32> = seq
+                                    .request
+                                    .prompt
+                                    .iter()
+                                    .chain(seq.generated.iter())
+                                    .copied()
+                                    .collect();
+                                let (_, draft_m, ds) = reg.spec_parts_mut(di);
+                                match draft_m.prefill_paged(&ctx, ds, dh) {
+                                    Ok(_) => {
+                                        if let Err(e) = ds.append(dh, ctx.len()) {
+                                            crate::log_error!(
+                                                "draft kv append for request {id}: {e}"
                                             );
-                                            ds.release(dh);
-                                            draft_handles.remove(&id);
                                         }
+                                    }
+                                    Err(e) => {
+                                        crate::log_warn!(
+                                            "draft prefill failed for request {id} \
+                                             (plain decode fallback): {e}"
+                                        );
+                                        ds.release(dh);
+                                        draft_handles.remove(&id);
                                     }
                                 }
                             }
@@ -1459,11 +1580,10 @@ fn worker_loop_pipelined(
                     store.release(h);
                 }
                 prefix_keys.remove(&id);
-                if let Some(ds) = draft_store.as_mut() {
-                    if let Some(dh) = draft_handles.remove(&id) {
-                        ds.release(dh);
-                    }
+                if let Some((di, dh)) = draft_handles.remove(&id) {
+                    reg.release_draft(di, dh);
                 }
+                acceptance.remove(&id);
                 if let Some(srt) = runtimes.remove(&id) {
                     let total_s = srt.started.elapsed().as_secs_f64();
                     let ttft_s = fallback_ttft(srt.ttft_s, total_s);
@@ -1541,10 +1661,16 @@ fn worker_loop_pipelined(
                 if remaining == 0 {
                     return None;
                 }
-                let k_eff = if draft_rt.is_some() && draft_handles.contains_key(&id) {
-                    draft_k.min(remaining)
-                } else {
-                    0
+                // The draft market: this sequence's width for the
+                // round — static `k_max` when the market is off,
+                // otherwise the breakeven argmax at the live α
+                // estimate (`k = 0` ⇒ plain decode).
+                let k_eff = match draft_handles.get(&id) {
+                    Some(&(di, _)) => {
+                        let alpha = acceptance.get(&id).and_then(|e| e.estimate());
+                        reg.plan_k(di, alpha, adaptive_k).min(remaining)
+                    }
+                    None => 0,
                 };
                 spec_width.insert(id, k_eff);
                 Some((id, k_eff + 1))
@@ -1560,10 +1686,8 @@ fn worker_loop_pipelined(
                     replies.insert(victim, srt.park());
                 }
                 let mut draft_freed = 0;
-                if let Some(ds) = draft_store.as_mut() {
-                    if let Some(dh) = draft_handles.remove(&victim) {
-                        draft_freed = ds.release(dh);
-                    }
+                if let Some((di, dh)) = draft_handles.remove(&victim) {
+                    draft_freed = reg.release_draft(di, dh);
                 }
                 metrics.record_preemption(bill, bytes_freed);
                 crate::log_warn!(
@@ -1599,23 +1723,26 @@ fn worker_loop_pipelined(
         }
         let mut step_ids = Vec::with_capacity(inputs.len());
         let mut steps = Vec::with_capacity(inputs.len());
-        let mut spec_ids = Vec::new();
-        let mut spec_steps: Vec<(SpecStepArgs, Vec<i32>)> = Vec::new();
+        // Speculative members grouped by draft index: weight-streaming
+        // cost is shared only within one model's batch, so each group
+        // dispatches as one batch against its own draft model.
+        let mut spec_groups: Vec<(Vec<RequestId>, Vec<(SpecStepArgs, Vec<i32>)>)> =
+            (0..reg.num_drafts()).map(|_| (Vec::new(), Vec::new())).collect();
         for &id in &round.decode_batch {
             if let Some(&(token, pos)) = inputs.get(&id) {
                 let k_eff = spec_width.get(&id).copied().unwrap_or(0);
                 if k_eff > 0 {
-                    let ds = draft_store.as_ref().expect("spec width implies a draft store");
-                    let dh = draft_handles[&id];
+                    let &(di, dh) = draft_handles.get(&id).expect("spec width implies a draft");
                     let seq = sched.seq(id).expect("scheduled seq exists");
                     let plen = seq.request.prompt.len();
-                    let catchup: Vec<i32> = (ds.len(dh)..pos)
+                    let catchup: Vec<i32> = (reg.draft_store(di).len(dh)..pos)
                         .map(|p| {
                             if p < plen { seq.request.prompt[p] } else { seq.generated[p - plen] }
                         })
                         .collect();
-                    spec_ids.push(id);
-                    spec_steps.push((
+                    metrics.record_spec_plan(k_eff as u64);
+                    spec_groups[di].0.push(id);
+                    spec_groups[di].1.push((
                         SpecStepArgs { token, pos, k: k_eff, h: handles[&id], draft_h: dh },
                         catchup,
                     ));
@@ -1663,7 +1790,9 @@ fn worker_loop_pipelined(
         store.select_scratch_slot(slot_parity);
         slot_parity ^= 1;
         let mut member_handles: Vec<KvSeqHandle> = steps.iter().map(|s| s.handle).collect();
-        member_handles.extend(spec_steps.iter().map(|(a, _)| a.h));
+        for (_, group) in &spec_groups {
+            member_handles.extend(group.iter().map(|(a, _)| a.h));
+        }
         member_handles.extend(pack.iter().map(|c| c.h));
         let window = match store.begin_slot_window(&member_handles) {
             Ok(w) => Some(w),
@@ -1672,17 +1801,32 @@ fn worker_loop_pipelined(
                 None
             }
         };
-        let decode_outcomes = model.decode_round_paged(&mut store, &steps);
+        let decode_outcomes = reg.target().decode_round_paged(&mut store, &steps);
         let decode: Vec<(RequestId, Result<RoundStepOutcome>)> =
             step_ids.into_iter().zip(decode_outcomes).collect();
-        let spec: Vec<(RequestId, Result<(SpecStepOutcome, f64)>)> =
-            if let (Some(draft_m), Some(ds)) = (draft_rt.as_ref(), draft_store.as_mut()) {
-                let spec_outcomes = model.spec_round_paged(draft_m, &mut store, ds, &spec_steps);
-                spec_ids.into_iter().zip(spec_outcomes).collect()
-            } else {
-                Vec::new()
+        // One batched dispatch per draft group (weight streaming shared
+        // within a model's batch); the slot parks the outcomes flat —
+        // the grouping only matters at dispatch.
+        let mut spec: Vec<(RequestId, Result<(SpecStepOutcome, f64)>)> = Vec::new();
+        for (di, (ids, group)) in spec_groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let (target_m, draft_m, ds) = reg.spec_parts_mut(di);
+            let spec_outcomes = match (sampled, spec_rng.as_mut()) {
+                (Some(sc), Some(rng)) => target_m.spec_round_paged_sampled(
+                    draft_m,
+                    &mut store,
+                    ds,
+                    &group,
+                    sc.temperature,
+                    rng,
+                ),
+                _ => target_m.spec_round_paged(draft_m, &mut store, ds, &group),
             };
-        let pack_outcomes = model.prefill_pack(&mut store, &pack);
+            spec.extend(ids.into_iter().zip(spec_outcomes));
+        }
+        let pack_outcomes = reg.target().prefill_pack(&mut store, &pack);
         let prefill: Vec<(RequestId, PackedPrefillChunk, Result<PrefillChunkOutcome>)> = pack_ids
             .into_iter()
             .zip(pack)

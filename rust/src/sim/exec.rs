@@ -376,6 +376,24 @@ pub fn verify_time_s(target_decode_plan: &ExecutionPlan, batch: usize, k: usize)
         .sum()
 }
 
+/// Verify pass for a **mixed-width** round: sequence `i` contributes
+/// `widths[i]` scored positions (`k_i + 1` for a draft-k member, `1`
+/// for a plain-decode member). The fleet controller assigns k per
+/// sequence, so a single target pass carries unequal widths — and
+/// because [`KernelCost::speculative_verify_total`] prices `(batch, k)`
+/// as one pass over `batch·(k+1)` rows, the mixed round collapses to a
+/// plain batched round at `Σ widths` rows: weights stream once for the
+/// whole mixed batch, exactly the within-model sharing the registry's
+/// round grouping exists to preserve. An empty/zero-width round is
+/// free.
+pub fn mixed_verify_time_s(target_decode_plan: &ExecutionPlan, widths: &[usize]) -> f64 {
+    let rows: usize = widths.iter().sum();
+    if rows == 0 {
+        return 0.0;
+    }
+    simulate_batched(target_decode_plan, rows).total_s
+}
+
 /// One whole speculative round at per-token acceptance `acceptance`:
 /// the expected draft steps (k proposals + the probability-`α^k`
 /// catch-up) then the k-wide verify. The serving simulator and the
@@ -647,6 +665,34 @@ mod tests {
             (k + 1) as f64 * t + v,
             "full acceptance bills the catch-up draft step"
         );
+    }
+
+    #[test]
+    fn mixed_verify_collapses_to_uniform_when_widths_agree() {
+        let dev = device("adreno_750").unwrap();
+        let g = mlp(1, DType::I4);
+        let plan = build_plan(&g, &dev, Stage::Decode, Strategy::GreedyBySize).unwrap();
+        // Uniform widths reproduce the (batch, k) verify bit-exactly:
+        // both are one pass over batch·(k+1) rows.
+        for (batch, k) in [(1usize, 0usize), (4, 0), (4, 3), (8, 2)] {
+            let widths = vec![k + 1; batch];
+            assert_eq!(
+                mixed_verify_time_s(&plan, &widths),
+                verify_time_s(&plan, batch, k),
+                "batch {batch} k {k}"
+            );
+        }
+        // A genuinely mixed round (half plain, half draft-3) costs the
+        // same as any uniform round with the same total row count —
+        // row-permutation invariance of the one-pass pricing.
+        let mixed = [1usize, 4, 1, 4, 1, 4];
+        assert_eq!(
+            mixed_verify_time_s(&plan, &mixed),
+            simulate_batched(&plan, 15).total_s
+        );
+        // Degenerate rounds are free.
+        assert_eq!(mixed_verify_time_s(&plan, &[]), 0.0);
+        assert_eq!(mixed_verify_time_s(&plan, &[0, 0]), 0.0);
     }
 
     #[test]

@@ -50,10 +50,11 @@ use crate::kv::{shareable_prefix_keys, KvArena, KvArenaConfig, KvSeqHandle, Pref
 use crate::serving::request::{InferenceRequest, RequestId};
 use crate::serving::scheduler::{Scheduler, SchedulerConfig};
 use crate::serving::{blended_mean_gen, AdmissionPolicy};
+use crate::serving::registry::{AcceptanceEwma, DraftController, SpecRoundCost};
 use crate::sim::exec::{
     expected_accepted_tokens, expected_draft_steps, kv_dequant_overhead_s,
-    packed_prefill_time_s, paged_gather_overhead_s, pipelined_round_time_s, simulate_batched,
-    verify_time_s, ExecutionPlan, PackedChunkCost,
+    mixed_verify_time_s, packed_prefill_time_s, paged_gather_overhead_s,
+    pipelined_round_time_s, simulate_batched, verify_time_s, ExecutionPlan, PackedChunkCost,
 };
 use crate::util::div_ceil;
 use crate::util::stats::Summary;
@@ -805,6 +806,212 @@ fn simulate_serving_impl(
     );
     if !behind.is_empty() {
         rep.ttft_behind_head_p95_s = behind.percentile(95.0);
+    }
+    rep
+}
+
+/// One draft model in a fleet simulation: its decode plan and the
+/// widest k the market may bid.
+#[derive(Clone, Copy)]
+pub struct FleetDraftSim<'a> {
+    pub plan: &'a ExecutionPlan,
+    pub k_max: usize,
+}
+
+/// How the fleet sim picks a draft width per sequence per round — the
+/// three modes the `fleet_serving_sweep` compares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetKPolicy {
+    /// No speculation anywhere: every member decodes plainly.
+    Plain,
+    /// Every drafted member runs its draft's `k_max`, every round — the
+    /// static config the adaptive market must beat.
+    StaticK,
+    /// The registry's per-sequence controller: EWMA acceptance against
+    /// the [`SpecRoundCost`] breakeven
+    /// ([`DraftController::choose_k`]), so low-α members drop to plain
+    /// decode instead of paying draft overhead.
+    Adaptive,
+}
+
+/// One sequence of a fleet workload: decode-only (all members resident
+/// from t = 0 — prefill is identical across the three policies, so it
+/// cancels out of the comparison the gate is about).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetSimRequest {
+    /// Tokens to generate before this member leaves the batch.
+    pub new_tokens: usize,
+    /// True per-token draft/target agreement α ∈ [0, 1] — what the
+    /// controller's EWMA estimates from observed rounds.
+    pub acceptance: f64,
+    /// Index into the draft fleet serving this member (`None` = no
+    /// draft fits; always plain).
+    pub draft: Option<usize>,
+}
+
+/// What a fleet run produced.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetSimReport {
+    pub rounds: usize,
+    pub total_s: f64,
+    /// Draft-phase seconds (subset of `total_s`).
+    pub draft_s: f64,
+    /// Target verify/decode seconds (subset of `total_s`).
+    pub verify_s: f64,
+    pub generated_tokens: usize,
+    pub spec_proposed_tokens: usize,
+    pub spec_accepted_tokens: usize,
+    /// Mean planned k over member-rounds (0-width plain members
+    /// included) — the market's aggregate bid, reported so "adaptive
+    /// stopped paying for the low-α cohort" is visible, not inferred.
+    pub mean_planned_k: f64,
+}
+
+impl FleetSimReport {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.total_s <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.total_s
+    }
+}
+
+/// Closed-loop fleet serving simulation: a resident batch of mixed-α
+/// sequences decoded against one target with zero or more draft models,
+/// under one of the three k policies. Per round:
+///
+/// * each member bids a width (`k = 0` ⇒ plain decode member);
+/// * each draft's group runs its proposal steps at **shrinking width**
+///   (`B_j` = members still drafting at step `j` — a member with a
+///   small k leaves the draft batch early), plus the probability-`αᵏ`
+///   catch-up step billed fractionally at the group's width;
+/// * the target scores everyone — plain members and all draft groups —
+///   in ONE mixed-width pass ([`mixed_verify_time_s`]: `k_i + 1` rows
+///   per drafted member, 1 per plain member), so target weights stream
+///   once per round for the whole batch, never per model group;
+/// * emissions use the per-member fractional-credit accumulator over
+///   `E[a] = Σ αⁱ` ([`expected_accepted_tokens`]), the same mechanism
+///   as [`simulate_serving_spec`], and the controller's EWMA observes
+///   the realized (proposed, accepted) exactly as the engine's does.
+///
+/// Adaptive mode prices bids with [`SpecRoundCost::from_plans`] at the
+/// initial batch width — the same secant the engine feeds its
+/// controller — so sim and engine run identical market policy.
+pub fn simulate_serving_fleet(
+    target_decode_plan: &ExecutionPlan,
+    drafts: &[FleetDraftSim],
+    policy: FleetKPolicy,
+    sync_s: f64,
+    workload: &[FleetSimRequest],
+) -> FleetSimReport {
+    struct Member {
+        remaining: usize,
+        alpha: f64,
+        draft: Option<usize>,
+        ewma: AcceptanceEwma,
+        credit: f64,
+    }
+    let mut live: Vec<Member> = workload
+        .iter()
+        .filter(|r| r.new_tokens > 0)
+        .map(|r| Member {
+            remaining: r.new_tokens,
+            alpha: r.acceptance.clamp(0.0, 1.0),
+            draft: r.draft.filter(|&d| d < drafts.len() && drafts[d].k_max > 0),
+            ewma: AcceptanceEwma::new(0.3),
+            credit: 0.0,
+        })
+        .collect();
+    let costs: Vec<SpecRoundCost> = drafts
+        .iter()
+        .map(|d| {
+            SpecRoundCost::from_plans(
+                d.plan,
+                target_decode_plan,
+                workload.len().max(1),
+                d.k_max.max(1),
+            )
+        })
+        .collect();
+
+    let mut rep = FleetSimReport::default();
+    let mut planned_k_sum = 0usize;
+    let mut member_rounds = 0usize;
+    while !live.is_empty() {
+        // Bid: one width per member. The +1 pending emission always
+        // happens, so k never needs to exceed remaining − 1.
+        let ks: Vec<usize> = live
+            .iter()
+            .map(|m| {
+                let d = match m.draft {
+                    Some(d) => d,
+                    None => return 0,
+                };
+                let k_max = drafts[d].k_max;
+                let k = match policy {
+                    FleetKPolicy::Plain => 0,
+                    FleetKPolicy::StaticK => k_max,
+                    FleetKPolicy::Adaptive => DraftController { k_max, ..Default::default() }
+                        .choose_k(m.ewma.estimate(), &costs[d]),
+                };
+                k.min(m.remaining.saturating_sub(1))
+            })
+            .collect();
+        planned_k_sum += ks.iter().sum::<usize>();
+        member_rounds += live.len();
+
+        // Draft phase: per-model groups at shrinking width.
+        for (di, d) in drafts.iter().enumerate() {
+            let group: Vec<usize> = (0..live.len())
+                .filter(|&i| live[i].draft == Some(di) && ks[i] > 0)
+                .collect();
+            if group.is_empty() {
+                continue;
+            }
+            let k_top = group.iter().map(|&i| ks[i]).max().unwrap_or(0);
+            for j in 0..k_top {
+                let width = group.iter().filter(|&&i| ks[i] > j).count();
+                rep.draft_s += simulate_batched(d.plan, width).total_s;
+            }
+            // Catch-up after a fully-accepted round (probability αᵏ per
+            // member), billed as that fraction of one group-wide step.
+            let catchup: f64 =
+                group.iter().map(|&i| live[i].alpha.powi(ks[i] as i32)).sum::<f64>()
+                    / group.len() as f64;
+            rep.draft_s += catchup * simulate_batched(d.plan, group.len()).total_s;
+        }
+
+        // Verify: one mixed-width target pass over the whole batch.
+        let widths: Vec<usize> = ks.iter().map(|&k| k + 1).collect();
+        rep.verify_s += mixed_verify_time_s(target_decode_plan, &widths);
+        rep.total_s += sync_s;
+
+        // Emission + acceptance observation.
+        for (i, m) in live.iter_mut().enumerate() {
+            let k = ks[i];
+            let mut emitted = 1usize; // the pending token
+            if k > 0 {
+                m.credit += expected_accepted_tokens(k, m.alpha);
+                let accepted = (m.credit.floor() as usize).min(k).min(m.remaining - 1);
+                m.credit -= accepted as f64;
+                emitted += accepted;
+                rep.spec_proposed_tokens += k;
+                rep.spec_accepted_tokens += accepted;
+                m.ewma.observe(k, accepted);
+            }
+            m.remaining -= emitted.min(m.remaining);
+            rep.generated_tokens += emitted;
+        }
+        live.retain(|m| m.remaining > 0);
+
+        rep.rounds += 1;
+        if rep.rounds > 100_000 {
+            break; // misconfigured workload: report what completed
+        }
+    }
+    rep.total_s += rep.draft_s + rep.verify_s;
+    if member_rounds > 0 {
+        rep.mean_planned_k = planned_k_sum as f64 / member_rounds as f64;
     }
     rep
 }
@@ -1638,5 +1845,158 @@ mod tests {
             &workload,
         );
         assert!(heavy.total_s > d2.total_s, "host-bound rounds must still bill the residual");
+    }
+
+    /// Fleet plans: gemma2-2b target + TinyLM draft on the Adreno 750
+    /// profile — the phone-class pairing the fleet gate names.
+    fn fleet_plans() -> (ExecutionPlan, ExecutionPlan) {
+        let dev = device("adreno_750").unwrap();
+        let opts = CompileOptions::default();
+        let t = simulate_llm(
+            &llm_config("gemma2_2b").unwrap(),
+            &dev,
+            QuantScheme::Mixed844,
+            1024,
+            256,
+            &opts,
+        )
+        .unwrap();
+        let d =
+            simulate_llm(&llm_config("tinylm").unwrap(), &dev, QuantScheme::Q8, 1024, 256, &opts)
+                .unwrap();
+        (t.decode.plan.clone(), d.decode.plan.clone())
+    }
+
+    #[test]
+    fn fleet_plain_mode_prices_exactly_like_plain_batched_rounds() {
+        // Identity anchor: with every member plain, the fleet sim is a
+        // closed-loop batched decode — n rounds at width B, each billed
+        // one mixed-width pass of all-1 widths (= simulate_batched(B))
+        // plus the sync. No draft seconds, no proposals.
+        let (target, draft) = fleet_plans();
+        let n = 32usize;
+        let b = 6usize;
+        let workload =
+            vec![FleetSimRequest { new_tokens: n, acceptance: 0.9, draft: None }; b];
+        let sync = 150e-6;
+        let rep = simulate_serving_fleet(
+            &target,
+            &[FleetDraftSim { plan: &draft, k_max: 4 }],
+            FleetKPolicy::StaticK, // draft: None ⇒ plain regardless of policy
+            sync,
+            &workload,
+        );
+        assert_eq!(rep.rounds, n);
+        assert_eq!(rep.generated_tokens, n * b);
+        assert_eq!(rep.spec_proposed_tokens, 0, "draft-less members never propose");
+        assert_eq!(rep.draft_s, 0.0);
+        assert_eq!(rep.mean_planned_k, 0.0);
+        let round = simulate_batched(&target, b).total_s + sync;
+        assert!(
+            (rep.total_s - n as f64 * round).abs() < 1e-9 * rep.total_s,
+            "{} vs {}",
+            rep.total_s,
+            n as f64 * round
+        );
+        // Explicit Plain policy prices identically even with drafts
+        // assigned — the policy, not the assignment, decides.
+        let assigned =
+            vec![FleetSimRequest { new_tokens: n, acceptance: 0.9, draft: Some(0) }; b];
+        let plain = simulate_serving_fleet(
+            &target,
+            &[FleetDraftSim { plan: &draft, k_max: 4 }],
+            FleetKPolicy::Plain,
+            sync,
+            &assigned,
+        );
+        assert_eq!(plain.total_s, rep.total_s);
+    }
+
+    #[test]
+    fn fleet_static_uniform_round_matches_the_speculative_round_model() {
+        // Pricing anchor: a uniform static-k batch must reproduce
+        // speculative_round_time_s per round — the fleet decomposition
+        // (shrinking-width draft steps + fractional catch-up + one
+        // mixed-width verify) collapses to the closed form when every
+        // member bids the same k at the same α.
+        let (target, draft) = fleet_plans();
+        let (n, b, k, alpha) = (200usize, 8usize, 4usize, 0.7f64);
+        let sync = 150e-6;
+        let workload =
+            vec![FleetSimRequest { new_tokens: n, acceptance: alpha, draft: Some(0) }; b];
+        let rep = simulate_serving_fleet(
+            &target,
+            &[FleetDraftSim { plan: &draft, k_max: k }],
+            FleetKPolicy::StaticK,
+            sync,
+            &workload,
+        );
+        assert_eq!(rep.generated_tokens, n * b, "closed loop drains every budget");
+        // Identical members run in lockstep, so every round but the
+        // budget-clamped tail is a full-width, full-k speculative round.
+        // The aggregate rate must therefore match the closed form
+        // `(1 + E[a])·B / (round + sync)` to within the tail's O(1/rounds)
+        // share.
+        let spec_round =
+            crate::sim::exec::speculative_round_time_s(&draft, &target, b, k, alpha);
+        let modeled_rate =
+            (1.0 + expected_accepted_tokens(k, alpha)) * b as f64 / (spec_round + sync);
+        let rate = rep.tokens_per_s();
+        assert!(
+            (rate - modeled_rate).abs() < 0.05 * modeled_rate,
+            "uniform fleet rounds must price as speculative rounds: {rate:.1} vs {modeled_rate:.1} tok/s"
+        );
+        // Every member proposed ~k per round (tail clamps excepted).
+        assert!(rep.spec_proposed_tokens > (rep.rounds - 2) * b * k);
+        assert!(rep.spec_accepted_tokens > 0 && rep.spec_accepted_tokens < rep.spec_proposed_tokens);
+        assert!(rep.draft_s > 0.0 && rep.verify_s > 0.0);
+    }
+
+    #[test]
+    fn fleet_adaptive_market_beats_static_k_on_mixed_alpha_traffic() {
+        // The fleet gate's bar, at the simulator level: mixed traffic —
+        // half high-α (a draft that mostly agrees), half essentially
+        // adversarial (α = 0.05) — on one cheap draft. Static-k pays
+        // draft + wide-verify overhead for the low-α cohort and loses;
+        // the adaptive market reads the EWMA, drops those members to
+        // plain decode, and must buy ≥ 1.2× aggregate tokens/s. It must
+        // also never lose to all-plain (the market can always bid 0).
+        let (target, draft) = fleet_plans();
+        let sync = 150e-6;
+        let mut workload = Vec::new();
+        for _ in 0..6 {
+            workload.push(FleetSimRequest { new_tokens: 64, acceptance: 0.9, draft: Some(0) });
+        }
+        for _ in 0..6 {
+            workload.push(FleetSimRequest { new_tokens: 64, acceptance: 0.05, draft: Some(0) });
+        }
+        let fleet = [FleetDraftSim { plan: &draft, k_max: 4 }];
+        let run = |policy| simulate_serving_fleet(&target, &fleet, policy, sync, &workload);
+        let (plain, stat, adap) = (
+            run(FleetKPolicy::Plain),
+            run(FleetKPolicy::StaticK),
+            run(FleetKPolicy::Adaptive),
+        );
+        assert_eq!(plain.generated_tokens, 64 * 12);
+        assert_eq!(stat.generated_tokens, 64 * 12);
+        assert_eq!(adap.generated_tokens, 64 * 12);
+        assert!(
+            adap.tokens_per_s() >= 1.2 * stat.tokens_per_s(),
+            "adaptive must beat static-k by ≥ 1.2× on mixed α: {:.1} vs {:.1} tok/s",
+            adap.tokens_per_s(),
+            stat.tokens_per_s()
+        );
+        assert!(
+            adap.tokens_per_s() >= plain.tokens_per_s(),
+            "the market can always bid 0 — it must never lose to plain: {:.1} vs {:.1}",
+            adap.tokens_per_s(),
+            plain.tokens_per_s()
+        );
+        // The mechanism, not just the outcome: adaptive stops paying for
+        // the low-α cohort (fewer proposals, smaller mean bid) while
+        // still speculating on the high-α one.
+        assert!(adap.spec_proposed_tokens < stat.spec_proposed_tokens);
+        assert!(adap.mean_planned_k < stat.mean_planned_k);
+        assert!(adap.spec_accepted_tokens > 0, "high-α members must still speculate");
     }
 }

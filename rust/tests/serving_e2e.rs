@@ -1,7 +1,8 @@
 //! Serving-layer integration: the thread-based engine over real PJRT.
 
 use mldrift::serving::{
-    AdmissionPolicy, EngineConfig, InferenceRequest, SchedulerConfig, ServingEngine, SpecConfig,
+    AdmissionPolicy, DraftModelConfig, EngineConfig, FleetConfig, InferenceRequest,
+    SampledSpecConfig, SchedulerConfig, ServingEngine, SpecConfig, SpecRoundCost,
 };
 
 fn artifacts_dir() -> Option<String> {
@@ -126,6 +127,119 @@ fn speculative_engine_with_self_draft_is_token_identical_to_plain_greedy() {
         metrics.tokens_per_round_mean() > 1.0,
         "accepted tokens must push tokens/round past one per sequence"
     );
+}
+
+#[test]
+fn fleet_engine_with_adaptive_market_stays_greedy_identical() {
+    // The fleet tentpole's identity bar through real PJRT: the
+    // multi-model registry path — per-sequence draft binding, the
+    // acceptance-EWMA/breakeven k controller, grouped draft rounds —
+    // must deliver exactly the plain engine's greedy tokens. The
+    // adaptive market changes WHEN speculation runs, never what greedy
+    // decode generates.
+    use std::sync::atomic::Ordering;
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt: Vec<i32> = (1..=16).collect();
+    let gen = 12usize;
+
+    let plain = ServingEngine::start(
+        &dir,
+        SchedulerConfig { max_active: 2, max_prefills_per_round: 2, ..Default::default() },
+    )
+    .unwrap();
+    let reference = plain.infer(InferenceRequest::new(1, prompt.clone(), gen)).unwrap();
+    assert!(reference.error.is_none());
+    drop(plain);
+
+    let fleet = ServingEngine::start_fleet(
+        &dir,
+        SchedulerConfig { max_active: 2, max_prefills_per_round: 2, ..Default::default() },
+        AdmissionPolicy::default(),
+        // Roofline-like prices (cheap draft, sub-linear verify rows):
+        // the controller's prior α = 0.6 clears the breakeven, so the
+        // market bootstraps — a sequence speculates at least once, the
+        // perfect-acceptance EWMA takes over from there. (The honest
+        // sequential-verify price `relative(d, 1.0)` would price ALL
+        // speculation out on this CPU artifact, which is the market
+        // working, not a serving bug — but it would leave this test
+        // nothing to observe.)
+        FleetConfig::new(vec![DraftModelConfig {
+            artifacts_dir: dir.clone(),
+            k_max: 3,
+            cost: SpecRoundCost::relative(0.2, 0.25),
+        }]),
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..2)
+        .map(|i| fleet.submit(InferenceRequest::new(i, prompt.clone(), gen)).unwrap())
+        .collect();
+    let outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let metrics = std::sync::Arc::clone(&fleet.metrics);
+    drop(fleet); // join the worker so round bookkeeping is flushed
+
+    for o in &outs {
+        assert!(o.error.is_none(), "fleet serving must not fail requests: {:?}", o.error);
+        assert_eq!(
+            o.tokens, reference.tokens,
+            "adaptive fleet output must be token-identical to plain greedy"
+        );
+    }
+    // Self-draft acceptance is perfect, so the controller's EWMA can
+    // only rise above the breakeven — speculative rounds must have run.
+    let proposed = metrics.spec_proposed_tokens.load(Ordering::Relaxed);
+    let accepted = metrics.spec_accepted_tokens.load(Ordering::Relaxed);
+    assert!(proposed > 0, "adaptive market with a perfect draft must speculate");
+    assert_eq!(accepted, proposed, "draft = target ⇒ greedy acceptance = k, every round");
+}
+
+#[test]
+fn sampled_speculative_serving_is_seed_deterministic_and_accepts() {
+    // The sampled-verify e2e bar: temperature traffic served
+    // speculatively through the rejection rule (accept with
+    // min(1, p_target/p_draft), resample the residual on rejection).
+    // Correctness of the output DISTRIBUTION is proven PJRT-free by the
+    // runtime's rejection-sampling distribution tests; here we pin the
+    // serving-layer contract — sampled speculative requests complete,
+    // drive the acceptance counters, and are bit-reproducible for a
+    // fixed engine seed.
+    use std::sync::atomic::Ordering;
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt: Vec<i32> = (1..=16).collect();
+    let gen = 12usize;
+
+    let run = |seed: u64| {
+        // Same roofline-like prices as the greedy fleet test: the
+        // prior must clear the breakeven or the market (correctly)
+        // serves everything plain and there is no sampled path to pin.
+        let mut fleet = FleetConfig::new(vec![DraftModelConfig {
+            artifacts_dir: dir.clone(),
+            k_max: 3,
+            cost: SpecRoundCost::relative(0.2, 0.25),
+        }]);
+        fleet.sampled = Some(SampledSpecConfig { temperature: 0.8, seed });
+        let engine = ServingEngine::start_fleet(
+            &dir,
+            SchedulerConfig { max_active: 2, max_prefills_per_round: 2, ..Default::default() },
+            AdmissionPolicy::default(),
+            fleet,
+        )
+        .unwrap();
+        let resp = engine.infer(InferenceRequest::new(1, prompt.clone(), gen)).unwrap();
+        assert!(resp.error.is_none(), "sampled serving must not fail: {:?}", resp.error);
+        assert_eq!(resp.tokens.len(), gen);
+        let metrics = std::sync::Arc::clone(&engine.metrics);
+        drop(engine);
+        let proposed = metrics.spec_proposed_tokens.load(Ordering::Relaxed);
+        let accepted = metrics.spec_accepted_tokens.load(Ordering::Relaxed);
+        assert!(proposed > 0, "temperature traffic must still be served speculatively");
+        assert!(accepted > 0, "a self-draft at T=0.8 must get proposals accepted");
+        assert!(accepted <= proposed, "acceptance cannot exceed proposals");
+        resp.tokens
+    };
+
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(a, b, "same engine seed ⇒ bit-identical sampled stream");
 }
 
 #[test]
