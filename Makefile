@@ -1,7 +1,7 @@
 # ML Drift reproduction — top-level targets.
 
 .PHONY: tier1 build test fmt lint check artifacts bench bench-batched bench-check bench-ttft \
-	bench-prefix bench-pipeline bench-fleet
+	bench-prefix bench-pipeline bench-fleet bench-async
 
 # The tier-1 gate CI runs on every push.
 tier1:
@@ -9,24 +9,33 @@ tier1:
 	$(MAKE) check
 
 # Static + dynamic invariant gate (runs in tier-1): the repo linter
-# (six cross-layer rules — sim wall-clock ban, KvPool seam discipline,
+# (seven cross-layer rules — sim wall-clock ban, KvPool seam discipline,
 # bench gate order, documented window/provisional invariants, unsafe
-# pin, spec commit/scrub confinement) plus the bounded interleaving
-# explorer over the contended scenario with the depth-projection check
-# (P2) and over the speculative scenario (multi-token decode commits
-# against the tight arena), plus a mutation gate
-# proving the explorer actually catches an injected free-inside-window
-# fault. Budgets are sized to finish well under two minutes; a
-# violation prints the exact schedule, replayable with
-# `mldrift drift-check --replay <schedule>`.
+# pin, spec commit/scrub confinement, device-thread runtime
+# confinement) plus the bounded interleaving explorer over the
+# contended scenario with the depth-projection check (P2), over the
+# speculative scenario (multi-token decode commits against the tight
+# arena), and over the cow-window scenario (copy-on-write privatization
+# while a round is bound, in the submission channel, or executing —
+# K7), plus two mutation gates proving the explorer actually catches an
+# injected free-inside-window fault and an injected forgotten
+# privatization-time window extension. Budgets are sized to finish well
+# under two minutes; a violation prints the exact schedule, replayable
+# with `mldrift drift-check --replay <schedule>`.
 check:
 	cd rust && cargo run --release --quiet -- lint --root ..
 	cd rust && cargo run --release --quiet -- drift-check --config contended --projection
 	cd rust && cargo run --release --quiet -- drift-check --config speculative
+	cd rust && cargo run --release --quiet -- drift-check --config cow-window
 	@echo "mutation gate: the injected free-inside-window fault must be caught"
 	@cd rust && if cargo run --release --quiet -- drift-check --config contended \
 	  --fault free-inside-window >/dev/null 2>&1; then \
 	  echo "FAIL: explorer missed the injected free-inside-window fault"; exit 1; \
+	  else echo "mutation gate OK: explorer exits nonzero under the injected fault"; fi
+	@echo "mutation gate: the injected forgotten CoW window extension must be caught"
+	@cd rust && if cargo run --release --quiet -- drift-check --config cow-window \
+	  --fault privatize-without-extension >/dev/null 2>&1; then \
+	  echo "FAIL: explorer missed the injected forgotten CoW window extension"; exit 1; \
 	  else echo "mutation gate OK: explorer exits nonzero under the injected fault"; fi
 
 build:
@@ -81,6 +90,15 @@ bench-pipeline:
 # to plain). Skips parts 1-7 and does not touch BENCH_batched.json.
 bench-fleet:
 	cd rust && cargo bench --bench bench_batched_serving -- --only-fleet
+
+# Fast local iteration on the async device queue: run ONLY the
+# realized-overlap measurement (part 9) with its hard gate (measured
+# depth-2 wall-clock speedup on the fake-model path ≥ 0.8× of the cost
+# model's prediction; depth-1 async bit-identical to the serial loop is
+# covered by the e2e tests). Skips parts 1-8 and does not touch
+# BENCH_batched.json.
+bench-async:
+	cd rust && cargo bench --bench bench_batched_serving -- --only-async
 
 # Bench-regression gate, reusable locally: validates the freshly written
 # BENCH_batched.json against its schema and fails if any tokens_per_s

@@ -62,6 +62,17 @@
 //! ≥ 1.2× tokens/s over static-k, never loses to plain, and visibly
 //! cuts its aggregate bid (mean planned k).
 //!
+//! Part 9 — async-overlap measurement. Unlike parts 1–8 this one runs
+//! the **real engine**, not the simulator: the deterministic fake
+//! backend models device time as a spin (`decode_round_s` per decode
+//! round) while `synthetic_host_work_us` spins real host planning cost
+//! in the policy thread, so serial depth-1 vs two-actor depth-2 is a
+//! *wall-clock* comparison of the same token streams. Gates: the
+//! realized saving (serial − async seconds) must be ≥ 0.8× of the cost
+//! model's predicted saving (`pipelined_round_time_s` at depth 2 from
+//! the measured per-round host/device split), with the async run
+//! token-identical to the serial loop.
+//!
 //! Writes every number to `BENCH_batched.json` at the **repo root**
 //! (the trajectory file the harness tracks across PRs).
 //!
@@ -71,6 +82,7 @@
 //! make bench-prefix   # part 6 only (fast local iteration; no JSON write)
 //! make bench-pipeline # part 7 only (fast local iteration; no JSON write)
 //! make bench-fleet    # part 8 only (fast local iteration; no JSON write)
+//! make bench-async    # part 9 only (fast local iteration; no JSON write)
 //! ```
 
 use mldrift::bench::Table;
@@ -82,11 +94,16 @@ use mldrift::engine::llm::{
 use mldrift::kv::KvArenaConfig;
 use mldrift::models::llm_config;
 use mldrift::quant::QuantScheme;
-use mldrift::serving::{default_prefill_chunk_tokens, AdmissionPolicy, SchedulerConfig};
+use mldrift::runtime::FakeLmConfig;
+use mldrift::serving::{
+    default_prefill_chunk_tokens, AdmissionPolicy, EngineConfig, InferenceRequest,
+    SchedulerConfig, ServingEngine,
+};
 use mldrift::sim::{
-    simulate_serving, simulate_serving_fleet, simulate_serving_pipelined, simulate_serving_shared,
-    simulate_serving_spec, FleetDraftSim, FleetKPolicy, FleetSimRequest, GenLenEstimator,
-    KvReservation, PipelineSimConfig, PrefixSimRequest, ServingSimConfig, SimRequest, SpecSim,
+    pipelined_round_time_s, simulate_serving, simulate_serving_fleet, simulate_serving_pipelined,
+    simulate_serving_shared, simulate_serving_spec, FleetDraftSim, FleetKPolicy, FleetSimRequest,
+    GenLenEstimator, KvReservation, PipelineSimConfig, PrefixSimRequest, ServingSimConfig,
+    SimRequest, SpecSim,
 };
 use mldrift::util::json::Json;
 
@@ -749,6 +766,177 @@ fn fleet_serving_sweep(opts: &CompileOptions) -> (Vec<Json>, FleetGates) {
     (out, FleetGates { rows })
 }
 
+/// The part-9 gate numbers, checked *after* the trajectory write (same
+/// reason as [`TtftGates`]: the failing numbers still land in the
+/// uploaded artifact).
+struct AsyncOverlapGates {
+    serial_s: f64,
+    async_s: f64,
+    predicted_async_s: f64,
+}
+
+impl AsyncOverlapGates {
+    /// The ISSUE-10 acceptance bar, hard-gated: the wall-clock saving
+    /// the two-actor executor *realizes* must be ≥ 0.8× of what the
+    /// cost model *predicts* depth 2 buys from the measured per-round
+    /// host/device split. This is the number PR 7 could not produce —
+    /// its overlap was billed in the simulator, never timed on a
+    /// thread — and anything that re-serializes the actors (a lock
+    /// held across the model call, a blocking submit) collapses it.
+    fn check(&self) {
+        let realized = self.serial_s - self.async_s;
+        let predicted = self.serial_s - self.predicted_async_s;
+        assert!(
+            predicted > 0.0,
+            "the workload must leave room to overlap: serial {:.1} ms vs predicted {:.1} ms",
+            self.serial_s * 1e3,
+            self.predicted_async_s * 1e3
+        );
+        let eff = realized / predicted;
+        assert!(
+            eff >= 0.8,
+            "realized overlap must be ≥ 0.8× the cost-model prediction: saved {:.1} ms of \
+             the predicted {:.1} ms ({eff:.2}×)",
+            realized * 1e3,
+            predicted * 1e3
+        );
+        println!(
+            "OK: two-actor executor realizes {eff:.2}× of the predicted depth-2 overlap \
+             (≥ 0.8× gate): {:.1} ms serial → {:.1} ms async, {:.1} ms predicted",
+            self.serial_s * 1e3,
+            self.async_s * 1e3,
+            self.predicted_async_s * 1e3
+        );
+    }
+}
+
+/// Part 9 — async-overlap measurement on the **real engine** over the
+/// deterministic fake backend: 4 requests, short prompts, long
+/// generations, device time modeled as a 2 ms spin per decode round on
+/// the device thread, host planning a 1 ms spin in the policy thread.
+/// Serial depth 1 bills them additively (~3 ms/round); the two-actor
+/// depth 2 overlaps them (~2 ms/round). Both modes run `ITERS` times
+/// (minimum wall clock taken — standard noise rejection), must produce
+/// identical token streams and identical round counts, and the
+/// prediction comes from [`pipelined_round_time_s`] at the *measured*
+/// serial per-round split. Returns the `async_device_queue` trajectory
+/// entries plus the gate numbers (asserted by the caller after the
+/// trajectory write).
+fn async_overlap_bench() -> (Vec<Json>, AsyncOverlapGates) {
+    const REQS: usize = 4;
+    const PROMPT: usize = 8;
+    const GEN: usize = 64;
+    const DEVICE_ROUND_S: f64 = 2e-3;
+    const HOST_WORK_US: u64 = 1000;
+    const ITERS: usize = 3;
+    let fake = FakeLmConfig { decode_round_s: DEVICE_ROUND_S, ..FakeLmConfig::default() };
+    let sched = SchedulerConfig {
+        max_active: REQS,
+        max_prefills_per_round: REQS,
+        ..Default::default()
+    };
+    // One timed run: submit the burst, drain every response, return the
+    // wall clock, the per-request token streams, and the round count.
+    let run = |depth: usize| -> (f64, Vec<Vec<i32>>, u64) {
+        let mut cfg = EngineConfig::new(sched);
+        cfg.pipeline_depth = depth;
+        cfg.synthetic_host_work_us = HOST_WORK_US;
+        let engine = ServingEngine::start_fake(fake, cfg).expect("fake engine starts");
+        let start = std::time::Instant::now();
+        let rxs: Vec<_> = (0..REQS)
+            .map(|i| {
+                let prompt: Vec<i32> =
+                    (0..PROMPT).map(|t| ((i * 17 + t) % fake.vocab) as i32).collect();
+                engine
+                    .submit(InferenceRequest::new(i as u64, prompt, GEN))
+                    .expect("engine accepts the burst")
+            })
+            .collect();
+        let mut tokens = Vec::new();
+        for rx in rxs {
+            let resp = rx.recv().expect("engine answers every request");
+            assert!(resp.error.is_none(), "request failed: {:?}", resp.error);
+            assert_eq!(resp.tokens.len(), GEN, "full generation budget");
+            tokens.push(resp.tokens);
+        }
+        let wall = start.elapsed().as_secs_f64();
+        let rounds =
+            engine.metrics.rounds_executed.load(std::sync::atomic::Ordering::Relaxed);
+        (wall, tokens, rounds)
+    };
+    let measure = |depth: usize| -> (f64, Vec<Vec<i32>>, u64) {
+        let mut best: Option<(f64, Vec<Vec<i32>>, u64)> = None;
+        for _ in 0..ITERS {
+            let (wall, tokens, rounds) = run(depth);
+            if let Some((w, t, r)) = &best {
+                assert_eq!(*t, tokens, "repeat runs must be deterministic");
+                assert_eq!(*r, rounds, "repeat runs must schedule identically");
+                if wall < *w {
+                    best = Some((wall, tokens, rounds));
+                }
+            } else {
+                best = Some((wall, tokens, rounds));
+            }
+        }
+        best.expect("ITERS ≥ 1")
+    };
+
+    let (serial_s, serial_tokens, serial_rounds) = measure(1);
+    let (async_s, async_tokens, async_rounds) = measure(2);
+    assert_eq!(
+        async_tokens, serial_tokens,
+        "the two-actor executor changes when rounds run, never the tokens delivered"
+    );
+    assert_eq!(async_rounds, serial_rounds, "identical schedules ⇒ identical round counts");
+
+    // The prediction from the measured serial split: the device side of
+    // a round is the configured spin (realized on the device thread
+    // verbatim); everything else the serial loop billed per round —
+    // synthetic plan spin, real scheduler/admission work, channel and
+    // reap overhead — is host time depth 2 may overlap.
+    let rounds = serial_rounds.max(1) as f64;
+    let host_s = (serial_s / rounds - DEVICE_ROUND_S).max(0.0);
+    let predicted_async_s = rounds * pipelined_round_time_s(DEVICE_ROUND_S, host_s, 2);
+
+    let mut t = Table::new(
+        "fake backend — async device queue, measured wall clock (4 reqs, prompt 8, gen 64, \
+         2 ms modeled device round, 1 ms host plan spin)",
+        &["mode", "wall ms", "ms/round", "rounds"],
+    );
+    let mut out = Vec::new();
+    for (mode, wall) in [
+        ("serial_depth1", serial_s),
+        ("async_depth2", async_s),
+        ("predicted_depth2", predicted_async_s),
+    ] {
+        t.row(&[
+            mode.to_string(),
+            format!("{:.1}", wall * 1e3),
+            format!("{:.2}", wall / rounds * 1e3),
+            serial_rounds.to_string(),
+        ]);
+        out.push(Json::obj(vec![
+            ("mode", mode.into()),
+            ("wall_s", wall.into()),
+            ("rounds", serial_rounds.into()),
+            ("device_round_s", DEVICE_ROUND_S.into()),
+            ("host_work_us", HOST_WORK_US.into()),
+            (
+                "overlap_efficiency",
+                if mode == "async_depth2" {
+                    ((serial_s - async_s) / (serial_s - predicted_async_s).max(1e-12)).into()
+                } else {
+                    1.0f64.into()
+                },
+            ),
+        ]));
+    }
+    t.print();
+    println!();
+
+    (out, AsyncOverlapGates { serial_s, async_s, predicted_async_s })
+}
+
 fn main() {
     let opts = CompileOptions::default();
     // `make bench-ttft` / `cargo bench --bench bench_batched_serving --
@@ -758,7 +946,7 @@ fn main() {
     if std::env::args().any(|a| a == "--only-ttft") {
         let (_, gates) = ttft_burst_sweep(&opts);
         gates.check();
-        println!("(--only-ttft: skipped parts 1–4, 6–8 and the BENCH_batched.json write)");
+        println!("(--only-ttft: skipped parts 1–4, 6–9 and the BENCH_batched.json write)");
         return;
     }
     // `make bench-prefix` / `-- --only-prefix`: run only the
@@ -767,7 +955,7 @@ fn main() {
     if std::env::args().any(|a| a == "--only-prefix") {
         let (_, gates) = prefix_sharing_sweep(&opts);
         gates.check();
-        println!("(--only-prefix: skipped parts 1–5, 7–8 and the BENCH_batched.json write)");
+        println!("(--only-prefix: skipped parts 1–5, 7–9 and the BENCH_batched.json write)");
         return;
     }
     // `make bench-pipeline` / `-- --only-pipeline`: run only the
@@ -776,7 +964,7 @@ fn main() {
     if std::env::args().any(|a| a == "--only-pipeline") {
         let (_, gates) = pipelined_serving_sweep(&opts);
         gates.check();
-        println!("(--only-pipeline: skipped parts 1–6, 8 and the BENCH_batched.json write)");
+        println!("(--only-pipeline: skipped parts 1–6, 8–9 and the BENCH_batched.json write)");
         return;
     }
     // `make bench-fleet` / `-- --only-fleet`: run only the fleet-serving
@@ -785,7 +973,16 @@ fn main() {
     if std::env::args().any(|a| a == "--only-fleet") {
         let (_, gates) = fleet_serving_sweep(&opts);
         gates.check();
-        println!("(--only-fleet: skipped parts 1–7 and the BENCH_batched.json write)");
+        println!("(--only-fleet: skipped parts 1–7, 9 and the BENCH_batched.json write)");
+        return;
+    }
+    // `make bench-async` / `-- --only-async`: run only the measured
+    // async-overlap part (with its gate) — same fast-iteration shape as
+    // `--only-ttft`. The only part that runs the real engine.
+    if std::env::args().any(|a| a == "--only-async") {
+        let (_, gates) = async_overlap_bench();
+        gates.check();
+        println!("(--only-async: skipped parts 1–8 and the BENCH_batched.json write)");
         return;
     }
     let mut json_batch = Vec::new();
@@ -1176,6 +1373,9 @@ fn main() {
     // ---- Part 8: fleet-serving sweep (adaptive draft market) -------------
     let (json_fleet, fleet_gates) = fleet_serving_sweep(&opts);
 
+    // ---- Part 9: measured async-overlap (real engine, fake backend) ------
+    let (json_async, async_gates) = async_overlap_bench();
+
     let doc = Json::obj(vec![
         ("model_sweep", Json::Arr(json_batch)),
         ("fixed_memory_adreno_750", Json::Arr(json_fixed)),
@@ -1186,6 +1386,7 @@ fn main() {
         ("prefix_sharing_m4_pro", Json::Arr(json_prefix_sharing)),
         ("pipelined_serving_sweep", Json::Arr(json_pipeline)),
         ("fleet_serving", Json::Arr(json_fleet)),
+        ("async_device_queue", Json::Arr(json_async)),
     ]);
     let text = doc.pretty() + "\n";
     match std::fs::write(OUT_PATH, &text) {
@@ -1199,4 +1400,5 @@ fn main() {
     prefix_gates.check();
     pipeline_gates.check();
     fleet_gates.check();
+    async_gates.check();
 }

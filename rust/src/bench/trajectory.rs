@@ -57,6 +57,13 @@ const SECTIONS: &[(&str, &[&str], Option<&str>)] = &[
     // 1.2× static-k bar lands as the bench's own hard gate; the gated
     // metric here guards each (device, mode) cell's throughput.
     ("fleet_serving", &["device", "mode"], Some("tokens_per_s")),
+    // Measured async-overlap (the only part timing the REAL engine —
+    // two threads, fake backend): serial depth-1 vs two-actor depth-2
+    // wall clock plus the cost-model prediction. Not regression-gated
+    // here: wall-clock milliseconds on shared CI runners are too noisy
+    // for a ±10% series gate, and the bench already hard-gates the
+    // number that matters (realized ≥ 0.8× predicted overlap).
+    ("async_device_queue", &["mode"], None),
 ];
 
 /// Outcome of a trajectory check.
@@ -213,6 +220,11 @@ mod tests {
               "fleet_serving": [
                 {{"device": "m4_pro", "mode": "static_k", "tokens_per_s": 50.0}},
                 {{"device": "m4_pro", "mode": "adaptive", "tokens_per_s": 65.0}}
+              ],
+              "async_device_queue": [
+                {{"mode": "serial_depth1", "wall_s": 0.21, "rounds": 64}},
+                {{"mode": "async_depth2", "wall_s": 0.14, "rounds": 64,
+                  "overlap_efficiency": 0.95}}
               ]
             }}"#,
             if note { r#""note": "seed estimates","# } else { "" }

@@ -14,20 +14,22 @@
 //! worker. Empirically (CHESS) almost all concurrency bugs need very
 //! few preemptions; the default bound of 8 is generous for this model.
 //!
-//! **DPOR-lite (sleep sets).** The only independent step pair is an
-//! `Exec` against a co-enabled step of another actor: device completion
-//! flips its own slot's stage flag and touches nothing any co-enabled
-//! step reads (arena state changes only at plan/bind/reap). Two
-//! schedules differing only in adjacent swaps of such pairs are the
-//! same Mazurkiewicz trace, so after a branch is explored its first
-//! step goes to *sleep* for the later sibling branches: a sleeping step
-//! is pruned wherever it reappears, and the sleep set survives a step
+//! **DPOR-lite (sleep sets).** The only independent step pairs are the
+//! device thread's `Submit`/`Exec` against a co-enabled step of another
+//! actor: dequeue and completion each flip their own slot's stage flag
+//! (plus the device-queue FIFO counters, which no co-enabled step of
+//! another actor reads) and touch nothing any co-enabled step reads
+//! (arena state changes only at plan/bind/reap). Two schedules
+//! differing only in adjacent swaps of such pairs are the same
+//! Mazurkiewicz trace, so after a branch is explored its first step
+//! goes to *sleep* for the later sibling branches: a sleeping step is
+//! pruned wherever it reappears, and the sleep set survives a step
 //! only if the two commute (a dependent step wakes everything it
 //! conflicts with). This keeps genuinely new orderings — e.g.
 //! `exec·reap·plan`, where the reap *depends* on the exec — while
-//! collapsing the exponential shuffle of where independent completions
-//! land. Nothing else commutes: arrivals reorder the FIFO admission
-//! queue and every worker stage touches the arena.
+//! collapsing the exponential shuffle of where independent dequeues
+//! and completions land. Nothing else commutes: arrivals reorder the
+//! FIFO admission queue and every worker stage touches the arena.
 
 use super::model::{Actor, CheckConfig, Fault, Step, TraceEvent, World};
 
@@ -183,13 +185,17 @@ impl std::fmt::Display for ExploreReport {
 
 /// True when the two steps are independent — reordering them reaches
 /// the same state, and applying one neither disables the other nor
-/// changes what it does. Only `Exec` qualifies (see module docs). The
-/// dependent same-slot pairs (`Bind(i)`/`Exec(i)`, `Exec(i)`/`Reap(i)`)
+/// changes what it does. Only the device thread's `Submit` and `Exec`
+/// qualify (see module docs). The dependent same-slot chains
+/// (`Bind(i)`/`Submit(i)`, `Submit(i)`/`Exec(i)`, `Exec(i)`/`Reap(i)`)
 /// never reach this predicate together: they are mutually exclusive in
-/// any enabled set, and a sleeping `Exec(i)` keeps its slot in the
-/// Bound stage, which keeps its `Reap(i)`/`Bind(i)` disabled.
+/// any enabled set, and a sleeping `Submit(i)`/`Exec(i)` keeps its slot
+/// in the earlier stage, which keeps the later same-slot steps
+/// disabled. The FIFO device-queue counters make `Submit(i)`/`Exec(j)`
+/// and `Submit(i)`/`Submit(j)` mutually exclusive too, so the counter
+/// reads never break commutativity between co-enabled steps.
 fn commutes(a: Step, b: Step) -> bool {
-    matches!(a, Step::Exec(_)) || matches!(b, Step::Exec(_))
+    matches!(a, Step::Submit(_) | Step::Exec(_)) || matches!(b, Step::Submit(_) | Step::Exec(_))
 }
 
 struct Dfs<'a, F: FnMut(&World, &Schedule) -> Result<(), String>> {
@@ -555,6 +561,52 @@ mod tests {
         // mutation, not the schedule.
         let clean_cfg = CheckConfig::contended();
         replay(&clean_cfg, &viol.schedule).expect("schedule is clean without the fault");
+    }
+
+    #[test]
+    fn cow_window_exploration_reaches_privatization_under_a_window() {
+        // The K7 scenario must actually reach its transition under
+        // test: a copy-on-write privatization while a round's
+        // reservation window is open (every plan after a bind runs
+        // under the bound round's window, so any schedule admitting
+        // the second sequence after the first published shares —
+        // and then privatizes — the boundary block).
+        let budget = ExploreBudget { max_schedules: 6_000, max_steps: 96, switch_bound: 6 };
+        let report = explore(&CheckConfig::cow_window(), &budget)
+            .expect("no invariant violation on HEAD");
+        assert!(report.schedules_explored > 0, "explored {report}");
+        assert!(
+            report.cow_schedules > 0,
+            "exploration must reach copy-on-write under an open window: {report}"
+        );
+    }
+
+    #[test]
+    fn injected_forgotten_cow_extension_is_caught_with_a_replayable_schedule() {
+        // Mutation test for K7: undo the privatization-time window
+        // extension and require the explorer to (a) catch the
+        // disagreement between its shadow records and the arena's
+        // window membership, with a schedule that (b) replays to the
+        // same violation and (c) is clean without the fault.
+        let budget = ExploreBudget { max_schedules: 6_000, max_steps: 96, switch_bound: 6 };
+        let mut cfg = CheckConfig::cow_window();
+        cfg.fault = Fault::PrivatizeWithoutExtension;
+        let viol = match explore(&cfg, &budget) {
+            Err(v) => v,
+            Ok(report) => panic!("fault injection must be caught, got clean report: {report}"),
+        };
+        assert!(
+            viol.message.contains("K7"),
+            "violation names the broken invariant: {}",
+            viol.message
+        );
+        let replayed = match replay(&cfg, &viol.schedule) {
+            Err(v) => v,
+            Ok(_) => panic!("violating schedule must also fail under replay"),
+        };
+        assert_eq!(replayed.message, viol.message, "replay reproduces the violation");
+        replay(&CheckConfig::cow_window(), &viol.schedule)
+            .expect("schedule is clean without the fault");
     }
 
     #[test]

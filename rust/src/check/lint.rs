@@ -15,6 +15,7 @@
 //! | `undocumented-invariant` | `src/kv/`, `src/serving/` | every `pub` item whose declaration mentions `window`/`provisional`/`unsafe` carries a doc comment that states its invariant |
 //! | `unsafe-pin` | whole crate | the `unsafe` token count stays pinned at zero and `lib.rs` keeps `#![forbid(unsafe_code)]` |
 //! | `spec-commit-discipline` | everywhere except `src/kv/`, `src/runtime/`, `src/check/` | the speculative KV commit/rollback seam (`commit_provisional`/`scrub_uncommitted`) is driven only by the runtime step functions — serving code sees committed state only |
+//! | `device-actor-confinement` | `src/serving/` except `device.rs` | the concrete `TinyLmRuntime` (PJRT handles, not `Send`) is named only by the device actor — policy code dispatches through `LmBackend` and round descriptors |
 
 use std::fmt;
 use std::path::Path;
@@ -225,7 +226,7 @@ const WALL_CLOCK_TOKENS: [&str; 2] = ["Instant", "SystemTime"];
 /// `release`, `can_claim_prefixed`, `claim_prefixed`) or the arena's
 /// read-only/commit surface (`len`, `append`, `publish_prefix`,
 /// `stats`, `verify`, …) — those stay callable anywhere.
-const PRIVILEGED_KV_CALLS: [&str; 10] = [
+const PRIVILEGED_KV_CALLS: [&str; 11] = [
     ".grow(",
     ".ensure_detailed(",
     ".make_private(",
@@ -236,6 +237,7 @@ const PRIVILEGED_KV_CALLS: [&str; 10] = [
     ".unpin_window_raw(",
     ".take_retention_evictions(",
     ".fault_free_deferred_ignoring_pins(",
+    ".fault_forget_cow_extensions(",
 ];
 
 /// The speculative commit/rollback seam: provisional rows become real
@@ -484,6 +486,33 @@ fn rule_spec_commit_discipline(file: &str, stripped: &str, diags: &mut Vec<LintD
     }
 }
 
+/// R7: the device actor owns the model runtime. Within `src/serving/`
+/// the concrete `TinyLmRuntime` type — PJRT handles, not `Send`, born
+/// on and owned by the device thread — may be named only by
+/// `src/serving/device.rs`. Policy code (scheduler, admission, the
+/// server loops) dispatches through the `LmBackend` trait and
+/// fully-bound round descriptors; a policy-side `TinyLmRuntime` call
+/// would re-couple the two actors the async split exists to separate,
+/// and the compiler would not catch it until someone tried a `Send`
+/// bound.
+fn rule_device_actor_confinement(file: &str, stripped: &str, diags: &mut Vec<LintDiagnostic>) {
+    if !in_dir(file, "src/serving/") || file.ends_with("src/serving/device.rs") {
+        return;
+    }
+    for (ln, line) in stripped.lines().enumerate() {
+        if !word_positions(line, "TinyLmRuntime").is_empty() {
+            diags.push(LintDiagnostic {
+                rule: "device-actor-confinement",
+                file: file.to_string(),
+                line: ln + 1,
+                message: "`TinyLmRuntime` named outside src/serving/device.rs: the device \
+                          actor owns the runtime; policy code dispatches through LmBackend"
+                    .to_string(),
+            });
+        }
+    }
+}
+
 /// Lint in-memory files (`(path, content)` pairs). Paths are matched
 /// textually against rule scopes (`src/sim/`, `src/kv/`, `benches/`,
 /// …), so callers should pass repo-relative paths with forward slashes.
@@ -500,6 +529,7 @@ pub fn lint_files(files: &[(String, String)]) -> Vec<LintDiagnostic> {
         rule_undocumented_invariant(path, content, &mut diags);
         rule_unsafe_pin(path, &stripped, &mut diags);
         rule_spec_commit_discipline(path, &stripped, &mut diags);
+        rule_device_actor_confinement(path, &stripped, &mut diags);
     }
     diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
     diags
@@ -689,6 +719,34 @@ mod tests {
         // Mentions in comments don't count.
         let comment = "// the step scrub_uncommitted()s on error\nfn f() {}\n";
         assert!(lint_one("rust/src/serving/server.rs", comment).is_empty());
+    }
+
+    #[test]
+    fn device_actor_confinement_keeps_the_runtime_on_the_device_thread() {
+        let bad = "fn plan(rt: &mut TinyLmRuntime) {\n    let _ = TinyLmRuntime::load(rt, \"dir\");\n}\n";
+        let d = lint_one("rust/src/serving/server.rs", bad);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().all(|x| x.rule == "device-actor-confinement"));
+        assert_eq!(d[0].line, 1);
+        assert!(d[0].message.contains("device actor owns the runtime"), "{}", d[0].message);
+        // The device actor itself is the one legitimate home…
+        assert!(lint_one("rust/src/serving/device.rs", bad).is_empty());
+        // …and outside src/serving/ the rule does not apply (the runtime
+        // layer defines the type; tests drive it directly).
+        assert!(lint_one("rust/src/runtime/tinylm.rs", bad).is_empty());
+        assert!(lint_one("rust/tests/serving_e2e.rs", bad).is_empty());
+        // Doc comments naming the type are prose, not a coupling.
+        let comment = "//! [`TinyLmRuntime::prefill_pack`] packs chunks.\nfn f() {}\n";
+        assert!(lint_one("rust/src/serving/server.rs", comment).is_empty());
+        // Longer identifiers containing the name don't count (word
+        // boundary), but a generic parameter naming the type does.
+        assert!(lint_one("rust/src/serving/server.rs", "fn f(x: TinyLmRuntimeExt) {}\n")
+            .is_empty());
+        assert_eq!(
+            lint_one("rust/src/serving/registry.rs", "type R = FleetRuntime<TinyLmRuntime>;\n")
+                .len(),
+            1
+        );
     }
 
     #[test]

@@ -47,7 +47,8 @@ pub mod lint;
 pub mod model;
 
 pub use explore::{
-    depth_projection_check, explore, replay, ExploreBudget, ExploreReport, Schedule, Violation,
+    depth_projection_check, explore, explore_with, replay, ExploreBudget, ExploreReport, Schedule,
+    Violation,
 };
 pub use lint::{lint_files, lint_repo, LintDiagnostic};
 pub use model::{CheckConfig, Fault, Step, TraceEvent, World};

@@ -21,12 +21,19 @@
 //! 3. **The invariant catalog** (DESIGN.md §6), asserted by
 //!    [`World::check_invariants`] after every step.
 //!
-//! Every stage is one *atomic* step because the engine worker today is
-//! a single thread whose stages never interleave internally; what can
-//! reorder against a stage is device completion and arrivals, which is
-//! exactly the alphabet the model exposes. When the truly-async device
-//! queue lands (ROADMAP), splitting EXEC into finer steps is a local
-//! change here.
+//! Every stage is one *atomic* step because each engine actor is a
+//! single thread whose stages never interleave internally; what can
+//! reorder against a stage is the *other* actor's steps, which is
+//! exactly the alphabet the model exposes. With the truly-async device
+//! queue (PR 10) the model has **two** engine actors, mirroring
+//! `serving/server.rs`: the policy worker runs PLAN → BIND for every
+//! slot and REAP for completed rounds, while the device thread runs
+//! SUBMIT (dequeue the bound round descriptor from the bounded
+//! channel) → EXEC (complete it). Between BIND and SUBMIT the round
+//! sits *in the channel* — the policy worker keeps planning against
+//! it, so reservation windows must outlive cross-thread submission,
+//! not just slot reap; K7 (privatization-time window extension) is
+//! checked against exactly those interleavings.
 
 use crate::error::DriftError;
 use crate::kv::{shareable_prefix_keys, KvArena, KvArenaConfig, KvSeqHandle, PrefixKey};
@@ -47,6 +54,16 @@ pub enum Fault {
     /// preemption or completion hit a member of an in-flight round, so
     /// catching it requires actually exploring interleavings.
     FreeInsideWindow,
+    /// After every capacity pass, undo the privatization-time window
+    /// extensions the arena just recorded
+    /// ([`KvArena::fault_forget_cow_extensions`]): a copy-on-write
+    /// replacement block loses the pin that K7 says must protect it
+    /// until the in-flight round's window closes. This only *does*
+    /// anything on schedules where a plan- or bind-stage CoW hits a
+    /// block pinned by a round that is bound, in the submission
+    /// channel, or executing — the cross-thread race surface the
+    /// two-actor split opens.
+    PrivatizeWithoutExtension,
 }
 
 /// One scenario for the explorer: arena geometry, workload shape, and
@@ -144,6 +161,34 @@ impl CheckConfig {
         }
     }
 
+    /// The privatization-under-submission scenario for K7: two
+    /// sequences share a prefix whose coverage ends mid-block, and
+    /// `max_batch` 1 alternates round membership — so the explorer can
+    /// schedule sequence B's plan-stage copy-on-write of the shared
+    /// boundary block while sequence A's round (whose window pins that
+    /// block) is bound, sitting in the submission channel, or
+    /// executing. The window must extend to pin B's replacement block
+    /// for as long as the original. The arena is roomy on purpose:
+    /// preemption stays out of the picture, CoW-against-an-in-flight-
+    /// window is the only transition under test.
+    pub fn cow_window() -> Self {
+        CheckConfig {
+            depth: 2,
+            seqs: 2,
+            prompt_tokens: 4,
+            new_tokens: 2,
+            chunk_tokens: 2,
+            blocks: 8,
+            block_tokens: 2,
+            max_batch: 1,
+            shared_prefix: true,
+            retain_blocks: 0,
+            arrivals_upfront: false,
+            spec_tokens_per_round: 1,
+            fault: Fault::None,
+        }
+    }
+
     /// The speculative scenario: decode rounds commit up to 3 accepted
     /// tokens as one append against the same tight arena as
     /// [`contended`](Self::contended), so a single decode step can
@@ -204,22 +249,26 @@ pub enum Step {
     Arrive(usize),
     Plan(usize),
     Bind(usize),
+    /// The device thread dequeues slot `i`'s bound round descriptor
+    /// from the submission channel (the cross-thread handoff).
+    Submit(usize),
     Exec(usize),
     Reap(usize),
 }
 
 /// Who performs a step — the unit the context-switch bound counts.
-/// Mirrors the engine's real thread structure: one worker thread runs
-/// every plan/bind/reap for every slot (so pipeline round-robin is
-/// *not* a context switch), while device completions and request
-/// arrivals are the asynchronous actors that preempt it.
+/// Mirrors the engine's real thread structure: one policy worker
+/// thread runs every plan/bind/reap for every slot (so pipeline
+/// round-robin is *not* a context switch), while the device thread's
+/// dequeue/complete steps and request arrivals are the asynchronous
+/// actors that preempt it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Actor {
     /// The outside world (request arrivals: client threads).
     Env,
-    /// The single engine worker thread (plan, bind, reap — all slots).
+    /// The policy worker thread (plan, bind, reap — all slots).
     Worker,
-    /// The device completing slot `i`'s dispatched round.
+    /// The device thread dequeuing or completing slot `i`'s round.
     Device(usize),
 }
 
@@ -228,7 +277,7 @@ impl Step {
         match *self {
             Step::Arrive(_) => Actor::Env,
             Step::Plan(_) | Step::Bind(_) | Step::Reap(_) => Actor::Worker,
-            Step::Exec(s) => Actor::Device(s),
+            Step::Submit(s) | Step::Exec(s) => Actor::Device(s),
         }
     }
 }
@@ -239,6 +288,7 @@ impl std::fmt::Display for Step {
             Step::Arrive(i) => write!(f, "arrive({i})"),
             Step::Plan(s) => write!(f, "plan({s})"),
             Step::Bind(s) => write!(f, "bind({s})"),
+            Step::Submit(s) => write!(f, "submit({s})"),
             Step::Exec(s) => write!(f, "exec({s})"),
             Step::Reap(s) => write!(f, "reap({s})"),
         }
@@ -289,7 +339,11 @@ struct SeqModel {
 enum SlotStage {
     Idle,
     Planned,
+    /// Bound and *enqueued*: the round descriptor is in the bounded
+    /// submission channel, not yet dequeued by the device thread.
     Bound,
+    /// Dequeued by the device thread; executing.
+    Submitted,
     Executed,
 }
 
@@ -348,7 +402,20 @@ pub struct World {
     slots: Vec<SlotModel>,
     planned_rounds: usize,
     bound_rounds: usize,
+    /// Rounds the device thread has dequeued from the submission
+    /// channel — together with `executed_rounds` this encodes the
+    /// single FIFO device thread: it finishes executing round `r`
+    /// before it dequeues round `r + 1`.
+    submitted_rounds: usize,
+    executed_rounds: usize,
     reaped_rounds: usize,
+    /// K7 shadow: `(window_id, replacement_block)` for every
+    /// copy-on-write privatization that hit a block pinned by an open
+    /// window — derived independently from the `ensure_detailed`
+    /// outcome and the model's own `window_blocks`, then checked
+    /// against the arena's
+    /// window membership. Dropped when the window closes at reap.
+    cow_pins: Vec<(u64, usize)>,
     /// Observable events, in order.
     pub trace: Vec<TraceEvent>,
     /// Preemptions performed (plan- or bind-stage capacity fights).
@@ -392,7 +459,10 @@ impl World {
             slots: (0..cfg.depth).map(|_| SlotModel::idle()).collect(),
             planned_rounds: 0,
             bound_rounds: 0,
+            submitted_rounds: 0,
+            executed_rounds: 0,
             reaped_rounds: 0,
+            cow_pins: Vec::new(),
             trace: Vec::new(),
             preemptions: 0,
             deferred_frees: 0,
@@ -465,8 +535,10 @@ impl World {
 
     /// The steps the schedule may choose from in this state. Encodes
     /// the engine's happens-before edges: plan(r+1) after bind(r),
-    /// bind(r+1) after reap(r), reap(r) after exec(r); exec (device
-    /// completion) and arrivals interleave freely.
+    /// bind(r+1) after reap(r), submit(r) after bind(r) (the channel),
+    /// exec(r) after submit(r), reap(r) after exec(r); the device
+    /// thread's submit/exec and arrivals interleave freely with the
+    /// policy worker's plan/bind/reap.
     pub fn enabled_steps(&self) -> Vec<Step> {
         let mut steps = Vec::new();
         for (i, s) in self.seqs.iter().enumerate() {
@@ -490,7 +562,16 @@ impl World {
                         steps.push(Step::Bind(si));
                     }
                 }
-                SlotStage::Bound => steps.push(Step::Exec(si)),
+                SlotStage::Bound => {
+                    // The single device thread dequeues in submission
+                    // order and only after finishing the previous round.
+                    if slot.round == self.submitted_rounds
+                        && self.submitted_rounds == self.executed_rounds
+                    {
+                        steps.push(Step::Submit(si));
+                    }
+                }
+                SlotStage::Submitted => steps.push(Step::Exec(si)),
                 SlotStage::Executed => {
                     if self.reaped_rounds == slot.round {
                         steps.push(Step::Reap(si));
@@ -517,14 +598,32 @@ impl World {
             }
             Step::Plan(s) => self.plan(s),
             Step::Bind(s) => self.bind(s),
-            Step::Exec(s) => {
+            Step::Submit(s) => {
                 if self.slots[s].stage != SlotStage::Bound {
-                    return Err(format!("exec({s}) on a slot that is not bound"));
+                    return Err(format!("submit({s}) on a slot that is not bound"));
+                }
+                if self.slots[s].round != self.submitted_rounds
+                    || self.submitted_rounds != self.executed_rounds
+                {
+                    return Err(format!("submit({s}) out of FIFO device-queue order"));
+                }
+                // Device dequeue: the round descriptor leaves the
+                // bounded channel. Nothing arena-visible changes — the
+                // point is that the window opened at bind has been
+                // protecting the round across the cross-thread handoff.
+                self.slots[s].stage = SlotStage::Submitted;
+                self.submitted_rounds += 1;
+                Ok(())
+            }
+            Step::Exec(s) => {
+                if self.slots[s].stage != SlotStage::Submitted {
+                    return Err(format!("exec({s}) on a round the device has not dequeued"));
                 }
                 // Device completion: the kernel's writes land in rows
                 // the bind reserved and the window pins — nothing
                 // arena-visible changes until the reap applies them.
                 self.slots[s].stage = SlotStage::Executed;
+                self.executed_rounds += 1;
                 Ok(())
             }
             Step::Reap(s) => self.reap(s),
@@ -592,8 +691,25 @@ impl World {
                 members.remove(idx);
                 continue;
             }
-            match self.arena.ensure(m.handle, m.need) {
-                Ok(_) => idx += 1,
+            match self.arena.ensure_detailed(m.handle, m.need) {
+                Ok(outcome) => {
+                    // K7 shadow: every open window that pinned a
+                    // privatized block must now also pin its
+                    // replacement — record the expectation from the
+                    // model's own window sets, independent of the
+                    // arena's extension bookkeeping.
+                    for &(old, new, _) in &outcome.cow {
+                        for slot in self.slots.iter_mut() {
+                            if let Some(id) = slot.window {
+                                if slot.window_blocks.contains(&old) {
+                                    slot.window_blocks.push(new);
+                                    self.cow_pins.push((id, new));
+                                }
+                            }
+                        }
+                    }
+                    idx += 1;
+                }
                 Err(DriftError::Memory(_)) => {
                     let keep: Vec<usize> = members.iter().map(|p| p.seq).collect();
                     match self.choose_victim(&keep) {
@@ -613,6 +729,9 @@ impl World {
                     ))
                 }
             }
+        }
+        if self.cfg.fault == Fault::PrivatizeWithoutExtension {
+            self.arena.fault_forget_cow_extensions();
         }
         Ok(())
     }
@@ -663,7 +782,10 @@ impl World {
         // reservation window is still open.
         let mut inflight: Vec<usize> = vec![0; self.seqs.len()];
         for slot in &self.slots {
-            if matches!(slot.stage, SlotStage::Bound | SlotStage::Executed) {
+            if matches!(
+                slot.stage,
+                SlotStage::Bound | SlotStage::Submitted | SlotStage::Executed
+            ) {
                 for m in &slot.bound {
                     if self.seqs[m.seq].handle == Some(m.handle) {
                         inflight[m.seq] += m.rows;
@@ -808,6 +930,7 @@ impl World {
         if self.arena.unpin_window_raw(id).is_none() {
             return Err(format!("reap({si}): window {id} was already closed"));
         }
+        self.cow_pins.retain(|&(w, _)| w != id);
         let slot = &mut self.slots[si];
         slot.window_blocks.clear();
         slot.planned.clear();
@@ -856,6 +979,20 @@ impl World {
                         ));
                     }
                 }
+            }
+        }
+        // K7: privatization-time window extension — every copy-on-write
+        // replacement whose original was pinned by an open window must
+        // itself be pinned by that window until it closes. The records
+        // come from the model's shadow (ensure outcome × window sets);
+        // the membership is the arena's own, so a forgotten extension
+        // is caught by disagreement.
+        for &(id, b) in &self.cow_pins {
+            if !self.arena.window_pins_block(id, b) {
+                return Err(format!(
+                    "K7 copy-on-write replacement block {b} is not pinned by open window {id} \
+                     after privatization"
+                ));
             }
         }
         // K6: shadow committed lengths mirror the arena exactly.
@@ -981,6 +1118,53 @@ mod tests {
     }
 
     #[test]
+    fn cow_window_serial_run_drains_and_stays_invariant_clean() {
+        // The greedy schedule arrives both sequences before the first
+        // plan, so they admit unshared — the scenario's CoW transition
+        // needs the explorer to delay the second arrival past the
+        // first publish (covered in `explore::tests`). Here: the
+        // roomy-arena preset drains clean with no preemption.
+        let w = run_serial(&CheckConfig::cow_window());
+        assert_eq!(w.done_seqs(), 2);
+        assert_eq!(w.arena().seq_count(), 0, "drained arena holds no sequences");
+        assert_eq!(w.preemptions, 0, "roomy arena must never preempt");
+    }
+
+    #[test]
+    fn device_queue_is_fifo_and_submit_gates_exec() {
+        // Drive the overlap world to the first bound round, then
+        // check the two-actor alphabet: a bound round must be
+        // submitted (dequeued by the device thread) before it can
+        // execute, and stages advance Bound → Submitted → Executed.
+        let mut w = World::new(&CheckConfig::overlap()).expect("valid config");
+        loop {
+            let enabled = w.enabled_steps();
+            if let Some(&submit) = enabled.iter().find(|s| matches!(s, Step::Submit(_))) {
+                assert!(
+                    !enabled.iter().any(|s| matches!(s, Step::Exec(_))),
+                    "exec must not be enabled before the device dequeues: {enabled:?}"
+                );
+                let Step::Submit(si) = submit else { unreachable!() };
+                assert!(w.apply_step(Step::Exec(si)).is_err(), "exec before submit rejected");
+                w.apply_step(submit).expect("submit applies");
+                w.check_invariants().expect("invariants after submit");
+                let enabled = w.enabled_steps();
+                assert!(
+                    enabled.contains(&Step::Exec(si)),
+                    "dequeued round becomes executable: {enabled:?}"
+                );
+                assert!(
+                    !enabled.iter().any(|s| matches!(s, Step::Submit(_))),
+                    "FIFO device thread dequeues one round at a time: {enabled:?}"
+                );
+                return;
+            }
+            w.apply_step(enabled[0]).expect("step applies");
+            w.check_invariants().expect("invariants hold");
+        }
+    }
+
+    #[test]
     fn invalid_configs_are_rejected() {
         let mut cfg = CheckConfig::contended();
         cfg.blocks = 1; // one sequence alone cannot fit
@@ -995,6 +1179,8 @@ mod tests {
         let mut w = World::new(&CheckConfig::contended()).expect("valid config");
         // Nothing has been planned: binding slot 0 is a model error.
         assert!(w.apply_step(Step::Bind(0)).is_err());
+        assert!(w.apply_step(Step::Submit(0)).is_err());
+        assert!(w.apply_step(Step::Exec(0)).is_err());
         assert!(w.apply_step(Step::Reap(0)).is_err());
     }
 }

@@ -449,6 +449,13 @@ pub struct KvArena {
     /// Refcount-zero blocks whose free is deferred behind ≥1 open
     /// window. Unindexed, not allocatable, freed at window close.
     deferred: Vec<usize>,
+    /// Privatization-time window extensions: `(window_id, new_block)`
+    /// records for every open window that was automatically extended to
+    /// pin a copy-on-write replacement block (K7 — see
+    /// [`make_private`](Self::make_private)). Cleared per window at
+    /// close; exists so the drift-check model can assert the extension
+    /// happened and so the mutation-gate fault seam can undo it.
+    cow_window_extensions: Vec<(u64, usize)>,
     /// Refcount-zero *indexed* blocks held warm by prefix retention,
     /// oldest at the front (the LRU eviction order).
     retained: VecDeque<usize>,
@@ -488,6 +495,7 @@ impl KvArena {
             windows: HashMap::new(),
             next_window_id: 0,
             deferred: Vec::new(),
+            cow_window_extensions: Vec::new(),
             retained: VecDeque::new(),
             retain_cap: 0,
             retention_evictions: Vec::new(),
@@ -603,6 +611,7 @@ impl KvArena {
             debug_assert!(self.pinned[b] > 0, "unpinning block {b} with no pins");
             self.pinned[b] -= 1;
         }
+        self.cow_window_extensions.retain(|&(id, _)| id != w.id);
         let mut freed = Vec::new();
         let mut still_deferred = Vec::new();
         for b in std::mem::take(&mut self.deferred) {
@@ -667,6 +676,50 @@ impl KvArena {
     /// Blocks whose free is currently deferred behind an open window.
     pub fn deferred_blocks(&self) -> usize {
         self.deferred.len()
+    }
+
+    /// Does open window `id` pin block `b`? Checker accessor for the K7
+    /// invariant: after a copy-on-write privatization, every window that
+    /// pinned the old block **must** also pin its replacement until the
+    /// window closes — the in-flight round the window protects may write
+    /// through the rerouted table entry. `false` when no such window is
+    /// open.
+    pub fn window_pins_block(&self, id: u64, b: usize) -> bool {
+        self.windows.get(&id).is_some_and(|blocks| blocks.contains(&b))
+    }
+
+    /// Take (and clear) the privatization-time window-extension records
+    /// accumulated since the last call: `(window_id, new_block)` pairs
+    /// pushed by [`make_private`](Self::make_private). Checker accessor —
+    /// the drift-check model drains these after each `ensure` step to
+    /// shadow K7 without re-deriving CoW routing.
+    #[doc(hidden)]
+    pub fn take_cow_window_extensions(&mut self) -> Vec<(u64, usize)> {
+        std::mem::take(&mut self.cow_window_extensions)
+    }
+
+    /// FAULT-INJECTION SEAM — drift-check mutation testing only. Undoes
+    /// every privatization-time window extension recorded since the last
+    /// drain: removes the replacement block from the window's pin list
+    /// and drops its pin, deliberately reintroducing the bug class K7
+    /// exists to prevent (a copy-on-write replacement block outliving
+    /// its window's protection, so the in-flight round races whoever
+    /// recycles it). The bounded interleaving explorer must catch this
+    /// within its budget and print a replayable schedule; nothing
+    /// outside `check::` may call it, which `mldrift lint` enforces.
+    #[doc(hidden)]
+    pub fn fault_forget_cow_extensions(&mut self) -> usize {
+        let records = std::mem::take(&mut self.cow_window_extensions);
+        let n = records.len();
+        for (id, b) in records {
+            if let Some(blocks) = self.windows.get_mut(&id) {
+                if let Some(p) = blocks.iter().position(|&x| x == b) {
+                    blocks.remove(p);
+                    self.pinned[b] -= 1;
+                }
+            }
+        }
+        n
     }
 
     /// Enable (or resize) **prefix-cache retention**: up to `cap`
@@ -1010,6 +1063,20 @@ impl KvArena {
         let e = self.seqs[slot].as_mut().expect("checked above");
         e.blocks[block_idx] = new;
         self.cow_copies += 1;
+        // K7 — privatization-time window extension. Any open reservation
+        // window that pins `old` was opened over a block table that may
+        // now route writes to `new`: the in-flight round it protects can
+        // scatter into `new` before the window closes, so `new` must be
+        // pinned for exactly as long as `old` is. Extend every such
+        // window in place; the `(window_id, new)` record lets the
+        // drift-check model shadow this and the mutation gate undo it.
+        for (&id, blocks) in self.windows.iter_mut() {
+            if blocks.contains(&old) {
+                blocks.push(new);
+                self.pinned[new] += 1;
+                self.cow_window_extensions.push((id, new));
+            }
+        }
         let in_use = self.cfg.num_blocks - self.free.len();
         self.peak_blocks_in_use = self.peak_blocks_in_use.max(in_use);
         Ok(Some((old, new)))
@@ -2291,6 +2358,101 @@ mod tests {
         let (h2, m) = a.claim_prefixed_detailed(17, &keys).unwrap();
         assert_eq!(m, 0, "deferred content was unindexed at release");
         assert_eq!(a.len(h2), 0);
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn cow_privatization_extends_open_windows_until_close() {
+        // K7: a window pinned over a block table that copy-on-write
+        // reroutes must also pin the replacement block — the in-flight
+        // round it protects writes through the new table entry.
+        let mut a = small_arena(6);
+        let prompt: Vec<i32> = (0..32).collect(); // 2 blocks, cover 31
+        let keys = shareable_prefix_keys(&prompt, 16);
+        let h1 = a.claim(32).unwrap();
+        a.append(h1, 32).unwrap();
+        a.publish_prefix(h1, &keys).unwrap();
+        let (h2, matched) = a.claim_prefixed_detailed(32, &keys).unwrap();
+        assert_eq!(matched, 2, "both blocks attach shared");
+        // h2's table aliases h1's; a submitted round pins it in flight.
+        let table = a.block_table(h2).unwrap().to_vec();
+        let w = a.pin_window(&table);
+        let wid = w.window_id();
+        // The next append writes into the shared partial block: CoW.
+        let outcome = a.ensure_detailed(h2, 2).unwrap();
+        assert_eq!(outcome.cow.len(), 1, "partial block privatized");
+        let (old, new, _) = outcome.cow[0];
+        assert!(table.contains(&old));
+        assert!(
+            a.window_pins_block(wid, old) && a.window_pins_block(wid, new),
+            "window extended to pin the replacement alongside the original"
+        );
+        a.verify().unwrap();
+        // Drop the replacement's last reference while the window is
+        // open: it must defer, exactly like the originally pinned set.
+        a.append(h2, 2).unwrap();
+        a.release(h2);
+        assert!(a.deferred_blocks() > 0, "extended pin defers the free");
+        assert!(!a.is_block_free(new), "replacement not recycled in-window");
+        a.verify().unwrap();
+        let freed = a.unpin_window(w);
+        assert!(freed.contains(&new), "window close completes the free");
+        a.verify().unwrap();
+        a.release(h1);
+    }
+
+    #[test]
+    fn fault_forget_cow_extensions_reopens_the_k7_bug_class() {
+        // The mutation-gate seam: undoing the privatization-time
+        // extension leaves the arena internally consistent (verify
+        // recounts pins from the window lists, which were edited in
+        // step) but lets the replacement block free while the round
+        // that wrote it is still protected — the model's K7 shadow,
+        // not arena verify, is what must catch this.
+        let mut a = small_arena(6);
+        let prompt: Vec<i32> = (0..32).collect();
+        let keys = shareable_prefix_keys(&prompt, 16);
+        let h1 = a.claim(32).unwrap();
+        a.append(h1, 32).unwrap();
+        a.publish_prefix(h1, &keys).unwrap();
+        let (h2, _) = a.claim_prefixed_detailed(32, &keys).unwrap();
+        let table = a.block_table(h2).unwrap().to_vec();
+        let w = a.pin_window(&table);
+        let wid = w.window_id();
+        let outcome = a.ensure_detailed(h2, 2).unwrap();
+        let (_, new, _) = outcome.cow[0];
+        assert!(a.window_pins_block(wid, new));
+        assert_eq!(a.fault_forget_cow_extensions(), 1);
+        assert!(!a.window_pins_block(wid, new), "extension forgotten");
+        a.verify().unwrap(); // deliberately still green — see above
+        // Bug class realized: the replacement frees inside the window.
+        a.append(h2, 2).unwrap();
+        let freed = a.release_blocks(h2);
+        assert!(freed.contains(&new), "replacement freed while in flight");
+        a.unpin_window(w);
+        a.release(h1);
+        a.verify().unwrap();
+    }
+
+    #[test]
+    fn take_cow_window_extensions_drains_records_once() {
+        let mut a = small_arena(6);
+        let prompt: Vec<i32> = (0..32).collect();
+        let keys = shareable_prefix_keys(&prompt, 16);
+        let h1 = a.claim(32).unwrap();
+        a.append(h1, 32).unwrap();
+        a.publish_prefix(h1, &keys).unwrap();
+        let (h2, _) = a.claim_prefixed_detailed(32, &keys).unwrap();
+        let table = a.block_table(h2).unwrap().to_vec();
+        let w = a.pin_window(&table);
+        let outcome = a.ensure_detailed(h2, 2).unwrap();
+        let (_, new, _) = outcome.cow[0];
+        let recs = a.take_cow_window_extensions();
+        assert_eq!(recs, vec![(w.window_id(), new)]);
+        assert!(a.take_cow_window_extensions().is_empty(), "drained once");
+        a.unpin_window(w);
+        a.release(h2);
+        a.release(h1);
         a.verify().unwrap();
     }
 

@@ -92,8 +92,8 @@ fn cli() -> Cli {
                 name: "lint",
                 about: "repo invariant linter: sim wall-clock ban, KvPool seam discipline, \
                         bench gate order, documented window/provisional invariants, the \
-                        crate-wide unsafe pin, and the speculative commit/scrub confinement \
-                        (`make check`)",
+                        crate-wide unsafe pin, the speculative commit/scrub confinement, \
+                        and the device-thread runtime confinement (`make check`)",
                 args: vec![opt(
                     "root",
                     "..",
@@ -104,11 +104,15 @@ fn cli() -> Cli {
             },
             CommandSpec {
                 name: "drift-check",
-                about: "bounded interleaving explorer for the pipelined KV engine: enumerate \
-                        plan/bind/exec/reap schedules and assert the DESIGN.md §6 invariant \
-                        catalog after every step (`make check`)",
+                about: "bounded interleaving explorer for the two-actor pipelined KV engine: \
+                        enumerate plan/bind/submit/exec/reap schedules and assert the \
+                        DESIGN.md §6 invariant catalog after every step (`make check`)",
                 args: vec![
-                    opt("config", "contended", "scenario: contended | overlap | speculative"),
+                    opt(
+                        "config",
+                        "contended",
+                        "scenario: contended | overlap | speculative | cow-window",
+                    ),
                     opt("max-schedules", "20000", "DFS leaf budget"),
                     opt("max-steps", "96", "per-schedule step cap"),
                     opt("switch-bound", "8", "preemptive context-switch bound"),
@@ -121,7 +125,8 @@ fn cli() -> Cli {
                     opt(
                         "fault",
                         "none",
-                        "inject a fault the explorer must catch: none | free-inside-window",
+                        "inject a fault the explorer must catch: none | free-inside-window | \
+                         privatize-without-extension",
                     ),
                     flag(
                         "projection",
@@ -327,18 +332,22 @@ fn main() -> mldrift::Result<()> {
                 "contended" => CheckConfig::contended(),
                 "overlap" => CheckConfig::overlap(),
                 "speculative" => CheckConfig::speculative(),
+                "cow-window" => CheckConfig::cow_window(),
                 other => {
                     return Err(DriftError::Config(format!(
-                        "unknown --config {other:?} (expected contended | overlap | speculative)"
+                        "unknown --config {other:?} (expected contended | overlap | \
+                         speculative | cow-window)"
                     )))
                 }
             };
             cfg.fault = match m.req("fault") {
                 "none" => Fault::None,
                 "free-inside-window" => Fault::FreeInsideWindow,
+                "privatize-without-extension" => Fault::PrivatizeWithoutExtension,
                 other => {
                     return Err(DriftError::Config(format!(
-                        "unknown --fault {other:?} (expected none | free-inside-window)"
+                        "unknown --fault {other:?} (expected none | free-inside-window | \
+                         privatize-without-extension)"
                     )))
                 }
             };

@@ -1,0 +1,470 @@
+//! The model-execution seam the serving engine is generic over.
+//!
+//! [`LmBackend`] is the exact call surface the worker loops make against
+//! a loaded model — batched paged decode, speculative draft/verify,
+//! packed prefill — extracted as a trait so the engine splits cleanly
+//! into a *policy* side (scheduler, admission, reap) and a *device* side
+//! (whatever owns the model handles). Two implementations exist:
+//!
+//! * [`TinyLmRuntime`] — the real PJRT artifact set. Its handles are not
+//!   `Send`, which is the whole reason the async engine moves runtime
+//!   ownership wholesale onto a dedicated device thread
+//!   ([`crate::serving::device`]).
+//! * [`FakeLmBackend`] — a PJRT-free model with **deterministic,
+//!   content-free logits**: the argmax at `(token, pos)` is a hash of
+//!   the pair, so token streams are reproducible across engine modes and
+//!   unaffected by KV sharing (the backend never reads KV content — it
+//!   only keeps the store's length bookkeeping honest, exactly where the
+//!   real runtime would). Its *modeled* step seconds and its
+//!   [`simulated_device_busy`](LmBackend::simulated_device_busy) wall
+//!   clock give the async-overlap bench a device-cost dial that needs no
+//!   artifacts, so the measured-overlap gate runs everywhere CI does.
+//!
+//! The fake serves plain decode + prefill only: speculative rounds
+//! return errors (no fake engine registers drafts), which keeps the
+//! draft/verify numerics the exclusive property of the real runtime.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::error::{DriftError, Result};
+use crate::kv::{KvSeqHandle, PagedKvStore};
+use crate::runtime::tinylm::{
+    PackedPrefillChunk, PagedRoundStep, PrefillChunkOutcome, RoundStepOutcome, SpecStepArgs,
+    SpecStepOutcome, TinyLmManifest, TinyLmRuntime,
+};
+use crate::util::rng::Pcg32;
+
+/// Everything the serving engine asks of a loaded model. The methods
+/// mirror [`TinyLmRuntime`]'s paged entry points one-for-one; the store
+/// side-effects are part of the contract (prefill commits the chunk's
+/// rows via `append`, decode does **not** — the caller's reap stage
+/// appends the emitted row, exactly as the engine always has).
+pub trait LmBackend {
+    /// The model's manifest (store sizing + per-sequence capacity).
+    fn manifest(&self) -> &TinyLmManifest;
+
+    /// One batched decode round: one step per entry, outcomes in order.
+    fn decode_round_paged(
+        &self,
+        store: &mut PagedKvStore,
+        steps: &[PagedRoundStep],
+    ) -> Vec<Result<RoundStepOutcome>>;
+
+    /// One batched greedy draft/verify round against `draft`.
+    fn spec_round_paged(
+        &self,
+        draft: &Self,
+        store: &mut PagedKvStore,
+        draft_store: &mut PagedKvStore,
+        steps: &[(SpecStepArgs, Vec<i32>)],
+    ) -> Vec<Result<(SpecStepOutcome, f64)>>;
+
+    /// One batched sampling-correct draft/verify round against `draft`.
+    #[allow(clippy::too_many_arguments)]
+    fn spec_round_paged_sampled(
+        &self,
+        draft: &Self,
+        store: &mut PagedKvStore,
+        draft_store: &mut PagedKvStore,
+        steps: &[(SpecStepArgs, Vec<i32>)],
+        temperature: f64,
+        rng: &mut Pcg32,
+    ) -> Vec<Result<(SpecStepOutcome, f64)>>;
+
+    /// One round's packed prefill: one outcome per chunk in pack order;
+    /// each successful chunk's rows are committed (`append`ed) before
+    /// the outcome is returned.
+    fn prefill_pack(
+        &self,
+        store: &mut PagedKvStore,
+        chunks: &[PackedPrefillChunk],
+    ) -> Vec<Result<PrefillChunkOutcome>>;
+
+    /// Whole-context prefill into a paged store (the draft catch-up
+    /// path). Does NOT `append` — the caller commits.
+    fn prefill_paged(
+        &self,
+        tokens: &[i32],
+        store: &mut PagedKvStore,
+        h: KvSeqHandle,
+    ) -> Result<Vec<f32>>;
+
+    /// Wall-clock device busy time the engine should *spend* (spin,
+    /// outside any store lock) for a round with `decode_steps` decode
+    /// members and `prefill_tokens` packed prefill tokens. `None` — the
+    /// backend's calls already consume real device time (the PJRT path);
+    /// `Some(d)` — the backend models its device cost and the engine
+    /// realizes it as wall clock, which is what makes measured plan/exec
+    /// overlap observable without artifacts.
+    fn simulated_device_busy(&self, decode_steps: usize, prefill_tokens: usize)
+        -> Option<Duration>;
+}
+
+impl LmBackend for TinyLmRuntime {
+    fn manifest(&self) -> &TinyLmManifest {
+        &self.manifest
+    }
+
+    fn decode_round_paged(
+        &self,
+        store: &mut PagedKvStore,
+        steps: &[PagedRoundStep],
+    ) -> Vec<Result<RoundStepOutcome>> {
+        TinyLmRuntime::decode_round_paged(self, store, steps)
+    }
+
+    fn spec_round_paged(
+        &self,
+        draft: &Self,
+        store: &mut PagedKvStore,
+        draft_store: &mut PagedKvStore,
+        steps: &[(SpecStepArgs, Vec<i32>)],
+    ) -> Vec<Result<(SpecStepOutcome, f64)>> {
+        TinyLmRuntime::spec_round_paged(self, draft, store, draft_store, steps)
+    }
+
+    fn spec_round_paged_sampled(
+        &self,
+        draft: &Self,
+        store: &mut PagedKvStore,
+        draft_store: &mut PagedKvStore,
+        steps: &[(SpecStepArgs, Vec<i32>)],
+        temperature: f64,
+        rng: &mut Pcg32,
+    ) -> Vec<Result<(SpecStepOutcome, f64)>> {
+        TinyLmRuntime::spec_round_paged_sampled(
+            self,
+            draft,
+            store,
+            draft_store,
+            steps,
+            temperature,
+            rng,
+        )
+    }
+
+    fn prefill_pack(
+        &self,
+        store: &mut PagedKvStore,
+        chunks: &[PackedPrefillChunk],
+    ) -> Vec<Result<PrefillChunkOutcome>> {
+        TinyLmRuntime::prefill_pack(self, store, chunks)
+    }
+
+    fn prefill_paged(
+        &self,
+        tokens: &[i32],
+        store: &mut PagedKvStore,
+        h: KvSeqHandle,
+    ) -> Result<Vec<f32>> {
+        TinyLmRuntime::prefill_paged(self, tokens, store, h)
+    }
+
+    fn simulated_device_busy(&self, _decode_steps: usize, _prefill_tokens: usize)
+        -> Option<Duration> {
+        None
+    }
+}
+
+/// Configuration for [`FakeLmBackend`].
+#[derive(Clone, Copy, Debug)]
+pub struct FakeLmConfig {
+    /// Vocabulary size (logit vector length; argmaxes land in `0..vocab`).
+    pub vocab: usize,
+    /// Per-sequence context ceiling (drives store sizing exactly like a
+    /// real manifest's `cache_capacity`).
+    pub cache_capacity: usize,
+    /// KV dimensions — kept tiny; the fake never writes KV content, but
+    /// the store they size is real, so real block accounting applies.
+    pub layers: usize,
+    pub heads_kv: usize,
+    pub head_dim: usize,
+    /// Modeled device seconds for one decode round (weights stream once
+    /// per round, so this is per *round*, not per member).
+    pub decode_round_s: f64,
+    /// Modeled device seconds per packed prefill token.
+    pub prefill_token_s: f64,
+    /// Perturbs the logits hash so two fakes can disagree (a draft that
+    /// never matches, a different "model").
+    pub seed: u64,
+}
+
+impl Default for FakeLmConfig {
+    fn default() -> Self {
+        FakeLmConfig {
+            vocab: 64,
+            cache_capacity: 256,
+            layers: 2,
+            heads_kv: 2,
+            head_dim: 8,
+            decode_round_s: 0.0,
+            prefill_token_s: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// PJRT-free [`LmBackend`]: deterministic content-free logits plus
+/// modeled device time. See the module docs for what it is for.
+pub struct FakeLmBackend {
+    manifest: TinyLmManifest,
+    cfg: FakeLmConfig,
+}
+
+impl FakeLmBackend {
+    pub fn new(cfg: FakeLmConfig) -> FakeLmBackend {
+        let mut prefill = BTreeMap::new();
+        // One nominal bucket: nothing loads these paths — the manifest
+        // only feeds dimension lookups.
+        prefill.insert(cfg.cache_capacity.max(1), "fake".to_string());
+        FakeLmBackend {
+            manifest: TinyLmManifest {
+                layers: cfg.layers.max(1),
+                heads_kv: cfg.heads_kv.max(1),
+                head_dim: cfg.head_dim.max(1),
+                vocab: cfg.vocab.max(2),
+                cache_capacity: cfg.cache_capacity.max(1),
+                prefill,
+                decode: "fake".to_string(),
+            },
+            cfg,
+        }
+    }
+
+    /// The deterministic argmax at `(token, pos)` — a splitmix-style
+    /// hash, so streams look "language-like" (position-dependent, not
+    /// constant) while staying content-free: no KV read can change them,
+    /// which is what makes serial/async and shared/unshared token
+    /// streams comparable bit-for-bit.
+    fn next_index(&self, token: i32, pos: usize) -> usize {
+        let mut x = (token as u64)
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add((pos as u64).wrapping_mul(0xbf58_476d_1ce4_e5b9))
+            .wrapping_add(self.cfg.seed);
+        x ^= x >> 30;
+        x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x ^= x >> 27;
+        x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^= x >> 31;
+        (x % self.manifest.vocab as u64) as usize
+    }
+
+    fn logits_for(&self, token: i32, pos: usize) -> Vec<f32> {
+        let mut logits = vec![0.0f32; self.manifest.vocab];
+        logits[self.next_index(token, pos)] = 1.0;
+        logits
+    }
+
+    fn unsupported<T>(&self) -> Result<T> {
+        Err(DriftError::Runtime(
+            "fake backend serves plain decode and prefill only (no draft path)".into(),
+        ))
+    }
+}
+
+impl LmBackend for FakeLmBackend {
+    fn manifest(&self) -> &TinyLmManifest {
+        &self.manifest
+    }
+
+    fn decode_round_paged(
+        &self,
+        store: &mut PagedKvStore,
+        steps: &[PagedRoundStep],
+    ) -> Vec<Result<RoundStepOutcome>> {
+        // Amortize the modeled round over its members so per-step
+        // seconds sum back to the round price (the same shape the
+        // metrics aggregate from the real runtime).
+        let step_s =
+            if steps.is_empty() { 0.0 } else { self.cfg.decode_round_s / steps.len() as f64 };
+        steps
+            .iter()
+            .map(|s| {
+                // Touch the handle so a member preempted (and released)
+                // while this round was in flight errors here — the same
+                // stale-handle rejection the real paged runtime gives —
+                // instead of fabricating a token for a dead sequence.
+                store.block_table(s.handle)?;
+                Ok(RoundStepOutcome { logits: self.logits_for(s.token, s.pos), step_s })
+            })
+            .collect()
+    }
+
+    fn spec_round_paged(
+        &self,
+        _draft: &Self,
+        _store: &mut PagedKvStore,
+        _draft_store: &mut PagedKvStore,
+        steps: &[(SpecStepArgs, Vec<i32>)],
+    ) -> Vec<Result<(SpecStepOutcome, f64)>> {
+        steps.iter().map(|_| self.unsupported()).collect()
+    }
+
+    fn spec_round_paged_sampled(
+        &self,
+        _draft: &Self,
+        _store: &mut PagedKvStore,
+        _draft_store: &mut PagedKvStore,
+        steps: &[(SpecStepArgs, Vec<i32>)],
+        _temperature: f64,
+        _rng: &mut Pcg32,
+    ) -> Vec<Result<(SpecStepOutcome, f64)>> {
+        steps.iter().map(|_| self.unsupported()).collect()
+    }
+
+    fn prefill_pack(
+        &self,
+        store: &mut PagedKvStore,
+        chunks: &[PackedPrefillChunk],
+    ) -> Vec<Result<PrefillChunkOutcome>> {
+        chunks
+            .iter()
+            .map(|c| {
+                // Commit the chunk's positions — the length bookkeeping
+                // the engine's reap/publish stages read. No KV content
+                // is written: the logits below never consult it.
+                store.append(c.h, c.tokens.len())?;
+                let logits = if c.last {
+                    let last_tok = c.tokens.last().copied().ok_or_else(|| {
+                        DriftError::Runtime("empty final prefill chunk".into())
+                    })?;
+                    Some(self.logits_for(last_tok, c.start + c.tokens.len() - 1))
+                } else {
+                    None
+                };
+                Ok(PrefillChunkOutcome {
+                    logits,
+                    step_s: self.cfg.prefill_token_s * c.tokens.len() as f64,
+                })
+            })
+            .collect()
+    }
+
+    fn prefill_paged(
+        &self,
+        _tokens: &[i32],
+        _store: &mut PagedKvStore,
+        _h: KvSeqHandle,
+    ) -> Result<Vec<f32>> {
+        self.unsupported()
+    }
+
+    fn simulated_device_busy(&self, decode_steps: usize, prefill_tokens: usize)
+        -> Option<Duration> {
+        let round = if decode_steps > 0 { self.cfg.decode_round_s } else { 0.0 };
+        let s = round + prefill_tokens as f64 * self.cfg.prefill_token_s;
+        Some(Duration::from_secs_f64(s.max(0.0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::KvArenaConfig;
+
+    fn store() -> PagedKvStore {
+        PagedKvStore::new(KvArenaConfig {
+            layers: 2,
+            heads_kv: 2,
+            head_dim: 8,
+            block_tokens: 16,
+            num_blocks: 16,
+        })
+    }
+
+    #[test]
+    fn fake_logits_are_deterministic_and_position_dependent() {
+        let fake = FakeLmBackend::new(FakeLmConfig::default());
+        assert_eq!(fake.next_index(7, 3), fake.next_index(7, 3));
+        let stream_a: Vec<usize> = (0..16).map(|p| fake.next_index(7, p)).collect();
+        let stream_b: Vec<usize> = (0..16).map(|p| fake.next_index(7, p)).collect();
+        assert_eq!(stream_a, stream_b, "same (token, pos) → same argmax, always");
+        assert!(
+            stream_a.windows(2).any(|w| w[0] != w[1]),
+            "the stream must not be constant: {stream_a:?}"
+        );
+        assert!(stream_a.iter().all(|&i| i < 64), "argmaxes stay in vocab");
+        // A different seed is a different model.
+        let other = FakeLmBackend::new(FakeLmConfig { seed: 99, ..FakeLmConfig::default() });
+        assert_ne!(
+            (0..16).map(|p| other.next_index(7, p)).collect::<Vec<_>>(),
+            stream_a,
+            "seed perturbs the stream"
+        );
+    }
+
+    #[test]
+    fn fake_prefill_commits_lengths_and_final_chunk_yields_logits() {
+        let fake = FakeLmBackend::new(FakeLmConfig::default());
+        let mut s = store();
+        let h = s.claim(32).unwrap();
+        let chunks = vec![
+            PackedPrefillChunk { h, start: 0, tokens: (0..16).collect(), last: false },
+            PackedPrefillChunk { h, start: 16, tokens: (16..32).collect(), last: true },
+        ];
+        let outs = LmBackend::prefill_pack(&fake, &mut s, &chunks);
+        assert_eq!(s.len(h), 32, "both chunks committed their positions");
+        let first = outs[0].as_ref().unwrap();
+        assert!(first.logits.is_none(), "mid-prefill chunk yields no token");
+        let last = outs[1].as_ref().unwrap();
+        let logits = last.logits.as_ref().expect("final chunk yields logits");
+        let arg = logits.iter().position(|&v| v == 1.0).unwrap();
+        assert_eq!(arg, fake.next_index(31, 31), "first token = hash(last token, last pos)");
+    }
+
+    #[test]
+    fn fake_decode_rejects_released_handles_like_the_real_runtime() {
+        let fake = FakeLmBackend::new(FakeLmConfig::default());
+        let mut s = store();
+        let live = s.claim(16).unwrap();
+        let dead = s.claim(16).unwrap();
+        s.release(dead);
+        let steps = vec![
+            PagedRoundStep { token: 3, pos: 4, handle: live },
+            PagedRoundStep { token: 3, pos: 4, handle: dead },
+        ];
+        let outs = LmBackend::decode_round_paged(&fake, &mut s, &steps);
+        assert!(outs[0].is_ok(), "live member decodes");
+        assert!(outs[1].is_err(), "a preempted-and-released member must error, not emit");
+    }
+
+    #[test]
+    fn fake_models_device_busy_and_tinylm_does_not() {
+        let fake = FakeLmBackend::new(FakeLmConfig {
+            decode_round_s: 0.002,
+            prefill_token_s: 0.0001,
+            ..FakeLmConfig::default()
+        });
+        let busy = fake.simulated_device_busy(4, 10).unwrap();
+        assert!((busy.as_secs_f64() - 0.003).abs() < 1e-9, "round + 10 prefill tokens");
+        assert_eq!(
+            fake.simulated_device_busy(0, 0),
+            Some(Duration::ZERO),
+            "an idle round models zero busy (still Some: the fake always models)"
+        );
+        // Per-step modeled seconds sum back to the round price.
+        let mut s = store();
+        let h = s.claim(16).unwrap();
+        let steps: Vec<PagedRoundStep> =
+            (0..4).map(|i| PagedRoundStep { token: i, pos: 0, handle: h }).collect();
+        let outs = LmBackend::decode_round_paged(&fake, &mut s, &steps);
+        let total: f64 = outs.iter().map(|o| o.as_ref().unwrap().step_s).sum();
+        assert!((total - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fake_spec_and_draft_paths_error_instead_of_pretending() {
+        let fake = FakeLmBackend::new(FakeLmConfig::default());
+        let draft = FakeLmBackend::new(FakeLmConfig::default());
+        let mut s = store();
+        let mut ds = store();
+        let h = s.claim(16).unwrap();
+        let dh = ds.claim(16).unwrap();
+        let steps =
+            vec![(SpecStepArgs { token: 1, pos: 0, k: 2, h, draft_h: dh }, Vec::new())];
+        let outs = fake.spec_round_paged(&draft, &mut s, &mut ds, &steps);
+        assert!(outs[0].is_err());
+        assert!(LmBackend::prefill_paged(&fake, &[1, 2], &mut ds, dh).is_err());
+    }
+}

@@ -23,9 +23,11 @@ pub use ::xla;
 #[path = "xla_stub.rs"]
 pub mod xla;
 
+pub mod backend;
 pub mod client;
 pub mod tinylm;
 
+pub use backend::{FakeLmBackend, FakeLmConfig, LmBackend};
 pub use client::{LoadedModel, Runtime};
 pub use tinylm::{
     packed_prefill_round, rejection_accept, sample_index, softmax_with_temperature,

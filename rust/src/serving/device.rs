@@ -1,0 +1,352 @@
+//! The device actor of the truly-async engine.
+//!
+//! The async worker splits into two actors. The **policy thread** (the
+//! engine worker) keeps everything that decides: scheduler, admission,
+//! plan, reap. The **device thread** (spawned here) owns everything that
+//! executes: the loaded models — PJRT handles are not `Send`, so the
+//! runtime is *created on* this thread and never leaves it — plus the
+//! dispatch of each round against the shared paged stores.
+//!
+//! The two talk over a bounded pair of channels:
+//!
+//! * **submission** (`sync_channel(1)`): fully-bound [`RoundDescriptor`]s
+//!   — every token, position, handle, and draft catch-up already
+//!   resolved by the policy thread's bind stage. The bound of 1 encodes
+//!   the depth-2 structure: decode is token-serial, so at most one round
+//!   can ever be in flight ahead of the plan.
+//! * **completion**: [`RoundCompletion`]s drain back and are applied by
+//!   the policy thread's reap stage — the same if-let-guarded
+//!   application the synchronous pipelined loop used, because a plan may
+//!   preempt a member while its round sits in the channel or executes.
+//!
+//! Ordering contract (mirrored by `check::model`'s device actor — the
+//! model was extended and re-verified against K1–K6/P1–P3 + K7 before
+//! this code was written): the policy thread opens the slot's
+//! reservation window **before** the descriptor is submitted and closes
+//! it only after the completion is reaped, so every block a descriptor
+//! references stays pinned across the channel boundary — a window must
+//! outlive cross-thread submission, not just slot reap. A member
+//! preempted mid-flight keeps its blocks pinned (deferred free) while
+//! its *handle* is released, so the device's generational handle checks
+//! turn the stale work into per-member errors, never aliased writes.
+//!
+//! Store locking: the device locks a store for the duration of one model
+//! call (for the PJRT runtime a call spans the whole round — overlap on
+//! that path is bounded by lock contention, which DESIGN.md §8 is honest
+//! about); modeled device time ([`LmBackend::simulated_device_busy`], the
+//! fake-model path the overlap bench measures) is spun **outside** any
+//! lock, so plan-stage store work genuinely overlaps it. When a
+//! speculative dispatch needs both stores, the target store is locked
+//! first, then the draft store — the same order the policy thread uses,
+//! so the two actors cannot deadlock.
+
+use std::collections::HashSet;
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{DriftError, Result};
+use crate::kv::KvSeqHandle;
+use crate::runtime::backend::LmBackend;
+use crate::runtime::tinylm::{
+    PackedPrefillChunk, PagedRoundStep, PrefillChunkOutcome, RoundStepOutcome, SpecStepArgs,
+    SpecStepOutcome, TinyLmRuntime,
+};
+use crate::runtime::Runtime;
+use crate::serving::registry::{FleetPolicy, ModelDims, ModelRegistry, SharedKvStore};
+use crate::serving::request::RequestId;
+use crate::serving::server::{
+    build_target_store, slot_jitter_us, EngineConfig, FleetConfig, SampledSpecConfig,
+    KV_BLOCK_TOKENS,
+};
+use crate::util::rng::Pcg32;
+
+/// Resolved fleet state: the registry (target + loaded drafts, each with
+/// its own worst-case-sized shared paged store) plus the market and
+/// sampling toggles. In serial mode the worker thread owns this whole;
+/// in async mode it lives on the device thread and the policy thread
+/// gets the [`FleetPolicy`] projection.
+pub(crate) struct FleetRuntime<B> {
+    pub reg: ModelRegistry<B>,
+    pub adaptive_k: bool,
+    pub ewma_weight: f64,
+    pub sampled: Option<SampledSpecConfig>,
+}
+
+/// Load the TinyLM target (and the configured draft fleet) from
+/// artifacts. Must run on the thread that will own the result — PJRT
+/// handles are not `Send` — which is the worker thread in serial mode
+/// and the device thread in async mode.
+pub(crate) fn load_tinylm_fleet(
+    dir: &str,
+    fleet_cfg: Option<FleetConfig>,
+    max_active: usize,
+) -> Result<FleetRuntime<TinyLmRuntime>> {
+    let rt = Runtime::cpu()?;
+    let target = TinyLmRuntime::load(&rt, dir)?;
+    let dims = ModelDims::of(&target.manifest);
+    let mut reg = ModelRegistry::new(target, dims);
+    let (adaptive_k, ewma_weight, sampled) = match &fleet_cfg {
+        Some(f) => {
+            for d in &f.drafts {
+                let m = TinyLmRuntime::load(&rt, &d.artifacts_dir)?;
+                let dm = ModelDims::of(&m.manifest);
+                reg.add_draft(m, dm, d.k_max.max(1), d.cost, max_active, KV_BLOCK_TOKENS);
+            }
+            (f.adaptive_k, f.ewma_weight, f.sampled)
+        }
+        None => (false, 0.3, None),
+    };
+    Ok(FleetRuntime { reg, adaptive_k, ewma_weight, sampled })
+}
+
+/// One draft catch-up prefill the bind stage resolved: run it on the
+/// device iff the sequence's final prefill chunk (same round) succeeds.
+pub(crate) struct DraftPrefillJob {
+    pub id: RequestId,
+    pub di: usize,
+    pub dh: KvSeqHandle,
+    /// The whole context (prompt + generated as of bind) — frozen at
+    /// bind time, which is sound because a prefilling sequence decodes
+    /// nothing between its bind and its reap.
+    pub ctx: Vec<i32>,
+}
+
+/// A fully-bound round: everything the device needs to execute without
+/// consulting policy state. All handles it references are pinned by the
+/// slot window the policy opened before submitting — the descriptor
+/// must never be built before its window.
+pub(crate) struct RoundDescriptor {
+    /// Gather-scratch parity for this slot
+    /// ([`crate::kv::PagedKvStore::select_scratch_slot`]) — selected by
+    /// the device at execution start, NOT at bind, because the previous
+    /// round may still be gathering when this one is bound.
+    pub scratch_slot: usize,
+    /// Plain decode steps (ids parallel to `steps`).
+    pub step_ids: Vec<RequestId>,
+    pub steps: Vec<PagedRoundStep>,
+    /// Speculative members grouped by draft index, one batched dispatch
+    /// per group.
+    pub spec_groups: Vec<(Vec<RequestId>, Vec<(SpecStepArgs, Vec<i32>)>)>,
+    /// The round's packed prefill (ids parallel to `pack`).
+    pub pack_ids: Vec<RequestId>,
+    pub pack: Vec<PackedPrefillChunk>,
+    pub draft_prefills: Vec<DraftPrefillJob>,
+}
+
+/// The outcomes of one executed round, drained back to the policy
+/// thread's reap stage.
+pub(crate) struct RoundCompletion {
+    pub decode: Vec<(RequestId, Result<RoundStepOutcome>)>,
+    pub spec: Vec<(RequestId, Result<(SpecStepOutcome, f64)>)>,
+    pub prefill: Vec<(RequestId, PackedPrefillChunk, Result<PrefillChunkOutcome>)>,
+    /// Draft catch-up outcomes: `Ok(context_len)` committed that many
+    /// draft rows; `Err` means the policy must downgrade the sequence to
+    /// plain decode (release the draft handle) — unless it already
+    /// preempted the sequence while this round was in flight.
+    pub draft_prefill: Vec<(RequestId, usize, KvSeqHandle, Result<usize>)>,
+}
+
+/// What the device thread hands back once loading succeeds: the `Send`
+/// planning view plus the shared target store it built.
+pub(crate) struct DeviceReady {
+    pub fleet: FleetPolicy,
+    pub store: SharedKvStore,
+    pub adaptive_k: bool,
+    pub ewma_weight: f64,
+}
+
+/// The policy thread's handle to the device actor.
+pub(crate) struct DeviceQueue {
+    pub submit: SyncSender<RoundDescriptor>,
+    pub completions: Receiver<RoundCompletion>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl DeviceQueue {
+    /// Close the submission channel (ending the device loop) and join
+    /// the device thread. Call only after the last completion is reaped.
+    pub fn shutdown(self) {
+        let DeviceQueue { submit, completions, join } = self;
+        drop(submit);
+        drop(completions);
+        if let Some(j) = join {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Spawn the device thread: it runs `loader` (so model handles are born
+/// on the thread that owns them), builds the shared target store, hands
+/// back the policy view, then serves the submission channel until the
+/// policy side drops it.
+pub(crate) fn spawn_device<B, L>(loader: L, cfg: EngineConfig) -> Result<(DeviceQueue, DeviceReady)>
+where
+    B: LmBackend + 'static,
+    L: FnOnce() -> Result<FleetRuntime<B>> + Send + 'static,
+{
+    let (submit, rounds) = sync_channel::<RoundDescriptor>(1);
+    let (completion_tx, completions) = channel::<RoundCompletion>();
+    let (init_tx, init_rx) = channel::<Result<DeviceReady>>();
+    let join = std::thread::Builder::new()
+        .name("mldrift-device".into())
+        .spawn(move || {
+            let fleet = match loader() {
+                Ok(f) => f,
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            let store: SharedKvStore =
+                Arc::new(Mutex::new(build_target_store(fleet.reg.target().manifest(), &cfg)));
+            let ready = DeviceReady {
+                fleet: fleet.reg.policy_view(),
+                store: Arc::clone(&store),
+                adaptive_k: fleet.adaptive_k,
+                ewma_weight: fleet.ewma_weight,
+            };
+            let _ = init_tx.send(Ok(ready));
+            device_loop(fleet, store, rounds, completion_tx);
+        })
+        .map_err(|e| DriftError::Serving(format!("spawn device thread: {e}")))?;
+    match init_rx.recv() {
+        Ok(Ok(ready)) => Ok((DeviceQueue { submit, completions, join: Some(join) }, ready)),
+        Ok(Err(e)) => {
+            let _ = join.join();
+            Err(e)
+        }
+        Err(_) => {
+            let _ = join.join();
+            Err(DriftError::Serving("device thread died during startup".into()))
+        }
+    }
+}
+
+/// Busy-wait for `d` — the realization of modeled device seconds as wall
+/// clock. A spin (not a sleep) so the duration is accurate at the
+/// sub-millisecond scale the overlap bench measures.
+pub(crate) fn spin_wait(d: Duration) {
+    if d.is_zero() {
+        return;
+    }
+    let t = Instant::now();
+    while t.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+/// The device loop: dequeue one bound round, execute it against the
+/// shared stores (locking per model call; modeled busy time spun outside
+/// any lock), send the completion back. FIFO by construction — one
+/// thread, one channel — which is exactly the `submitted == executed`
+/// gating the drift-check model's `Submit`/`Exec` steps encode.
+fn device_loop<B: LmBackend>(
+    fleet: FleetRuntime<B>,
+    store: SharedKvStore,
+    rounds: Receiver<RoundDescriptor>,
+    completions: Sender<RoundCompletion>,
+) {
+    let FleetRuntime { reg, sampled, .. } = fleet;
+    let mut spec_rng = sampled.map(|s| Pcg32::seeded(s.seed));
+    let jitter_us = slot_jitter_us();
+    while let Ok(desc) = rounds.recv() {
+        if jitter_us > 0 {
+            std::thread::sleep(Duration::from_micros(jitter_us));
+        }
+        let RoundDescriptor {
+            scratch_slot,
+            step_ids,
+            steps,
+            spec_groups,
+            pack_ids,
+            pack,
+            draft_prefills,
+        } = desc;
+        let decode_members =
+            steps.len() + spec_groups.iter().map(|(ids, _)| ids.len()).sum::<usize>();
+        let prefill_tokens: usize = pack.iter().map(|c| c.tokens.len()).sum();
+
+        let decode: Vec<(RequestId, Result<RoundStepOutcome>)> = {
+            let mut st = store.lock().expect("target store lock poisoned");
+            st.select_scratch_slot(scratch_slot);
+            let outs = reg.target().decode_round_paged(&mut st, &steps);
+            step_ids.into_iter().zip(outs).collect()
+        };
+
+        let mut spec: Vec<(RequestId, Result<(SpecStepOutcome, f64)>)> = Vec::new();
+        for (di, (ids, group)) in spec_groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            // Lock order: target store, then draft store (matches the
+            // policy thread's bind stage — never invert).
+            let mut st = store.lock().expect("target store lock poisoned");
+            let (target_m, draft_m, mut ds) = reg.spec_parts(di);
+            let outs = match (sampled, spec_rng.as_mut()) {
+                (Some(sc), Some(rng)) => target_m.spec_round_paged_sampled(
+                    draft_m,
+                    &mut st,
+                    &mut ds,
+                    &group,
+                    sc.temperature,
+                    rng,
+                ),
+                _ => target_m.spec_round_paged(draft_m, &mut st, &mut ds, &group),
+            };
+            spec.extend(ids.into_iter().zip(outs));
+        }
+
+        let prefill_outs = {
+            let mut st = store.lock().expect("target store lock poisoned");
+            reg.target().prefill_pack(&mut st, &pack)
+        };
+        // Draft catch-up runs only for sequences whose final chunk (in
+        // this very round) succeeded — the same "once, at the final
+        // chunk" rule the serial loop applies.
+        let ok_last: HashSet<RequestId> = pack_ids
+            .iter()
+            .zip(&pack)
+            .zip(&prefill_outs)
+            .filter(|((_, c), o)| c.last && o.is_ok())
+            .map(|((id, _), _)| *id)
+            .collect();
+        let mut draft_prefill: Vec<(RequestId, usize, KvSeqHandle, Result<usize>)> = Vec::new();
+        for job in draft_prefills {
+            if !ok_last.contains(&job.id) {
+                continue;
+            }
+            let (_, draft_m, mut ds) = reg.spec_parts(job.di);
+            let res = match draft_m.prefill_paged(&job.ctx, &mut ds, job.dh) {
+                Ok(_) => {
+                    // An append failure leaves the binding usable: the
+                    // next round's catch-up covers the shortfall (same
+                    // tolerance as the serial loop).
+                    if let Err(e) = ds.append(job.dh, job.ctx.len()) {
+                        crate::log_error!("draft kv append for request {}: {e}", job.id);
+                    }
+                    Ok(job.ctx.len())
+                }
+                Err(e) => Err(e),
+            };
+            draft_prefill.push((job.id, job.di, job.dh, res));
+        }
+        let prefill: Vec<(RequestId, PackedPrefillChunk, Result<PrefillChunkOutcome>)> = pack_ids
+            .into_iter()
+            .zip(pack)
+            .zip(prefill_outs)
+            .map(|((id, c), o)| (id, c, o))
+            .collect();
+
+        // Modeled device time realizes OUTSIDE any store lock: the
+        // policy thread's plan for the next round runs against the
+        // stores while this spins — the overlap the bench measures.
+        if let Some(d) = reg.target().simulated_device_busy(decode_members, prefill_tokens) {
+            spin_wait(d);
+        }
+        if completions.send(RoundCompletion { decode, spec, prefill, draft_prefill }).is_err() {
+            break; // policy side gone; nothing left to report to
+        }
+    }
+}

@@ -14,11 +14,16 @@
 //!   stream once per round) plus a capped number of prefills,
 //!   decode-first to protect inter-token latency — mirroring §3.7's
 //!   prefill/decode split at the serving level.
-//! * [`server`] — a thread-based engine that owns the PJRT runtime, a
-//!   shared **paged** KV arena ([`crate::kv::KvArena`]: prompt-only
-//!   claims, on-demand block growth, preemption on exhaustion) with
+//! * [`server`] — the policy actor: a thread-based engine that runs
+//!   scheduling, admission, round planning, and reaping over a shared
+//!   **paged** KV arena ([`crate::kv::KvArena`]: prompt-only claims,
+//!   on-demand block growth, preemption on exhaustion) with
 //!   backpressure-gated admission, and serves a channel of requests (no
 //!   Python, no async runtime).
+//! * [`device`] — the device actor: at `pipeline_depth ≥ 2` the model
+//!   runtimes live on a dedicated thread fed fully-bound round
+//!   descriptors over a bounded channel, so round N+1's host-side plan
+//!   genuinely overlaps round N's execution in wall-clock time.
 //! * [`registry`] — the multi-model fleet: a registry owning the target
 //!   plus zero-or-more draft models (each with its own worst-case-sized
 //!   paged store), and the **adaptive draft market** — a per-sequence
@@ -28,6 +33,7 @@
 //!   accounting.
 
 pub mod admission;
+pub mod device;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -37,13 +43,15 @@ pub mod metrics;
 pub use admission::{blended_mean_gen, AdmissionPolicy};
 pub use request::{InferenceRequest, InferenceResponse, RequestId};
 pub use scheduler::{
-    default_prefill_chunk_tokens, PrefillChunk, Round, Scheduler, SchedulerConfig, SeqState,
+    default_prefill_chunk_tokens, ChunkAutotuner, PrefillChunk, Round, Scheduler, SchedulerConfig,
+    SeqState,
 };
 pub use server::{
     DraftModelConfig, EngineConfig, FleetConfig, SampledSpecConfig, ServerStats, ServingEngine,
     SpecConfig,
 };
 pub use registry::{
-    AcceptanceEwma, DraftController, ModelDims, ModelRegistry, SpecRoundCost,
+    AcceptanceEwma, DraftController, DraftPolicy, FleetPolicy, ModelDims, ModelRegistry,
+    SharedKvStore, SpecRoundCost,
 };
 pub use metrics::Metrics;

@@ -24,18 +24,34 @@
 //! * [`DraftController`] — `choose_k` maximizes expected decode goodput
 //!   `(1 + E[a](k, α)) / (E[steps](k, α)·D + V(k))` over `k ∈ 0..=k_max`
 //!   ([`crate::sim::exec::expected_accepted_tokens`] /
-//!   [`expected_draft_steps`]). `k = 0` is plain decode: low-α traffic
-//!   stops paying draft overhead entirely — the behaviour the
-//!   phone-class (Adreno) profiles need to gate, where a draft round is
-//!   a large fraction of a target round.
+//!   [`expected_draft_steps`]) for a round that must fund its own
+//!   weight stream; `choose_k_in_round` prices a member of a
+//!   **co-scheduled** round at its marginal cost instead (the stream is
+//!   already paid once for the whole round). `k = 0` is plain decode:
+//!   low-α traffic stops paying draft overhead entirely — the behaviour
+//!   the phone-class (Adreno) profiles need to gate, where a draft
+//!   round is a large fraction of a target round.
 //!
-//! Weight-streaming cost is shared only **within one model's batch**: a
+//! Weight-streaming cost is **billed once per co-scheduled round**: a
 //! round's speculative members are grouped by draft index and each group
-//! dispatches as one batch against its model; the target's verify pass
-//! covers every group plus the plain-decode members. The registry only
-//! owns models and draft stores — the target's store stays with the
-//! engine loop, because it carries engine-level policy (quantized
-//! blocks, prefix retention) the drafts never use.
+//! dispatches as one batch against its model, while the target's single
+//! mixed-width verify pass covers every group plus the plain-decode
+//! members ([`crate::sim::exec::mixed_verify_time_s`]) — so the market
+//! prices bids against that shared pass, never charging the stream per
+//! dispatch group. The registry only owns models and draft stores — the
+//! target's store stays with the engine loop, because it carries
+//! engine-level policy (quantized blocks, prefix retention) the drafts
+//! never use.
+//!
+//! **Two-actor split**: the async engine runs planning on a policy
+//! thread while the models live on a device thread (PJRT handles are
+//! not `Send`). Draft stores are therefore [`SharedKvStore`]s — the
+//! policy side claims/releases draft context through the mutex while
+//! the device side locks per model call — and [`FleetPolicy`] is the
+//! `Send` projection of the registry (dims, widths, prices, store
+//! handles, no models) the policy thread plans against.
+
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::kv::{KvArenaConfig, KvSeqHandle, PagedKvStore};
 use crate::runtime::tinylm::TinyLmManifest;
@@ -43,6 +59,13 @@ use crate::sim::exec::{
     expected_accepted_tokens, expected_draft_steps, simulate_batched, verify_time_s, ExecutionPlan,
 };
 use crate::util::div_ceil;
+
+/// A paged KV store shared across the policy/device thread boundary.
+/// Lock discipline: lock for the duration of one model call or one
+/// policy pass, never across a channel send/recv; when a speculative
+/// dispatch needs both stores, lock the **target store first**, then
+/// the draft store.
+pub type SharedKvStore = Arc<Mutex<PagedKvStore>>;
 
 /// The KV-relevant dimensions of a registered model — what store sizing
 /// and per-sequence capacity checks need, decoupled from the runtime
@@ -187,6 +210,24 @@ impl SpecRoundCost {
         }
         (1.0 + expected_accepted_tokens(k, alpha)) / t
     }
+
+    /// Verify cost of width `k` **beyond the round's base pass**: in a
+    /// co-scheduled round the target streams its weights once for the
+    /// whole mixed batch ([`crate::sim::exec::mixed_verify_time_s`]), so
+    /// a member's width only adds `k` marginal rows — the base pass is
+    /// the plain decode the member runs regardless of its bid.
+    pub fn verify_marginal_s(&self, k: usize) -> f64 {
+        k as f64 * self.verify_row_s
+    }
+
+    /// Marginal whole-round price of width `k` when the target's base
+    /// pass (its weight stream) is already billed to the co-scheduled
+    /// round: draft steps plus marginal verify rows only. `k = 0` is
+    /// free — the member rides the round it was going to decode in
+    /// anyway.
+    pub fn round_s_shared(&self, k: usize, alpha: f64) -> f64 {
+        expected_draft_steps(k, alpha) * self.draft_step_s + self.verify_marginal_s(k)
+    }
 }
 
 /// Per-sequence draft-width controller: the pure breakeven math shared
@@ -230,6 +271,50 @@ impl DraftController {
         }
         best_k
     }
+
+    /// Width choice for a member of a **co-scheduled round**. With
+    /// `target_stream_paid` the target's weight stream is already billed
+    /// once for the whole round — plain members and every draft group
+    /// share one mixed verify pass — so the member's bid is priced at
+    /// its *marginal* cost ([`SpecRoundCost::round_s_shared`]): width
+    /// `k` buys `E[a](k, α)` extra tokens for `E[steps]·D + k·rows`
+    /// extra seconds. The chosen width maximizes the net token yield at
+    /// the plain round's exchange rate (one token per `verify_base_s`),
+    /// under the same hysteresis margin; `k = 0` (net zero) wins unless
+    /// some width clears it. Without `target_stream_paid` — a dedicated
+    /// round that must fund its own weight stream — this is exactly
+    /// [`choose_k`](Self::choose_k).
+    ///
+    /// Every width [`choose_k`](Self::choose_k) accepts clears the
+    /// shared test too (the dedicated price includes the base the
+    /// shared price omits), so switching a round to shared pricing can
+    /// only move traffic *into* speculation, never out of it.
+    pub fn choose_k_in_round(
+        &self,
+        alpha: Option<f64>,
+        cost: &SpecRoundCost,
+        target_stream_paid: bool,
+    ) -> usize {
+        if !target_stream_paid {
+            return self.choose_k(alpha, cost);
+        }
+        let a = alpha.unwrap_or(self.prior_alpha).clamp(0.0, 1.0);
+        let base = cost.verify_s(0);
+        if base <= 0.0 {
+            return 0;
+        }
+        let h = self.hysteresis.max(1.0);
+        let mut best_k = 0;
+        let mut best = 0.0; // net gain of riding the round plainly
+        for k in 1..=self.k_max {
+            let gain = expected_accepted_tokens(k, a) - h * cost.round_s_shared(k, a) / base;
+            if gain > best {
+                best = gain;
+                best_k = k;
+            }
+        }
+        best_k
+    }
 }
 
 /// One registered draft: the loaded model, its KV dimensions, its own
@@ -244,8 +329,9 @@ pub struct DraftSlot<M> {
     /// The draft's own paged KV store, worst-case sized at registration
     /// (`max_active` full-capacity sequences) so draft growth can never
     /// be the thing that preempts — the target store stays the contended
-    /// resource.
-    pub store: PagedKvStore,
+    /// resource. Shared so the policy thread can claim/release draft
+    /// context while the device thread owns the model.
+    pub store: SharedKvStore,
 }
 
 /// Owner of the N loaded models a fleet-serving engine runs: the target
@@ -276,13 +362,13 @@ impl<M> ModelRegistry<M> {
         max_active: usize,
         block_tokens: usize,
     ) -> usize {
-        let store = PagedKvStore::new(KvArenaConfig {
+        let store = Arc::new(Mutex::new(PagedKvStore::new(KvArenaConfig {
             layers: dims.layers,
             heads_kv: dims.heads_kv,
             head_dim: dims.head_dim,
             block_tokens,
             num_blocks: max_active.max(1) * div_ceil(dims.cache_capacity.max(1), block_tokens),
-        });
+        })));
         self.drafts.push(DraftSlot { model, dims, k_max: k_max.max(1), cost, store });
         self.drafts.len() - 1
     }
@@ -317,36 +403,124 @@ impl<M> ModelRegistry<M> {
 
     /// Width for one sequence's next round on draft `i`: static `k_max`
     /// when the market is off, otherwise the controller's breakeven
-    /// argmax at the sequence's live α estimate.
+    /// argmax at the sequence's live α estimate. Engine rounds always
+    /// co-schedule the member with the round's base verify pass (the
+    /// pending token decodes this round whatever the bid), so the
+    /// market prices the bid at its marginal cost
+    /// ([`DraftController::choose_k_in_round`] with the target's weight
+    /// stream already paid) — never once per dispatch group.
     pub fn plan_k(&self, i: usize, alpha: Option<f64>, adaptive: bool) -> usize {
         let d = &self.drafts[i];
         if !adaptive {
             return d.k_max;
         }
         DraftController { k_max: d.k_max, ..DraftController::default() }
-            .choose_k(alpha, &d.cost)
+            .choose_k_in_round(alpha, &d.cost, true)
     }
 
-    pub fn draft_store(&self, i: usize) -> &PagedKvStore {
-        &self.drafts[i].store
+    /// Lock draft `i`'s store for one policy pass or model call. The
+    /// guard derefs to the store, so `reg.draft_store(i).len(h)` reads
+    /// as before; hold it only within one stage, never across a channel.
+    pub fn draft_store(&self, i: usize) -> MutexGuard<'_, PagedKvStore> {
+        self.drafts[i].store.lock().expect("draft store lock poisoned")
     }
 
-    pub fn draft_store_mut(&mut self, i: usize) -> &mut PagedKvStore {
-        &mut self.drafts[i].store
+    /// The shared handle to draft `i`'s store (for a policy view or a
+    /// cross-thread companion claim).
+    pub fn draft_store_arc(&self, i: usize) -> SharedKvStore {
+        Arc::clone(&self.drafts[i].store)
     }
 
-    /// Split borrows for one draft group's dispatch: the target model,
-    /// draft `i`'s model, and draft `i`'s store, all at once (the
-    /// target's own store lives with the caller).
-    pub fn spec_parts_mut(&mut self, i: usize) -> (&M, &M, &mut PagedKvStore) {
-        let d = &mut self.drafts[i];
-        (&self.target, &d.model, &mut d.store)
+    /// One draft group's dispatch parts: the target model, draft `i`'s
+    /// model, and the locked draft store (the target's own store lives
+    /// with the caller; lock it before calling this).
+    pub fn spec_parts(&self, i: usize) -> (&M, &M, MutexGuard<'_, PagedKvStore>) {
+        let d = &self.drafts[i];
+        (&self.target, &d.model, d.store.lock().expect("draft store lock poisoned"))
     }
 
     /// Release a sequence's blocks in draft `i`'s store; returns freed
     /// device bytes.
-    pub fn release_draft(&mut self, i: usize, h: KvSeqHandle) -> usize {
-        self.drafts[i].store.release(h)
+    pub fn release_draft(&self, i: usize, h: KvSeqHandle) -> usize {
+        self.draft_store(i).release(h)
+    }
+
+    /// The `Send` projection the async engine's policy thread plans
+    /// against: every per-draft decision input (dims, width ceiling,
+    /// round prices, the shared store) without the models.
+    pub fn policy_view(&self) -> FleetPolicy {
+        FleetPolicy {
+            target_dims: self.target_dims,
+            drafts: self
+                .drafts
+                .iter()
+                .map(|d| DraftPolicy {
+                    dims: d.dims,
+                    k_max: d.k_max,
+                    cost: d.cost,
+                    store: Arc::clone(&d.store),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Policy-side view of one registered draft: everything
+/// [`ModelRegistry`] knows about it except the model.
+#[derive(Clone)]
+pub struct DraftPolicy {
+    pub dims: ModelDims,
+    pub k_max: usize,
+    pub cost: SpecRoundCost,
+    pub store: SharedKvStore,
+}
+
+/// The `Send` half of a [`ModelRegistry`]: the async engine's policy
+/// thread holds this (assignment, width planning, draft-store claims
+/// and releases) while the device thread holds the registry itself —
+/// the models never cross the boundary, the store handles do.
+#[derive(Clone)]
+pub struct FleetPolicy {
+    target_dims: ModelDims,
+    drafts: Vec<DraftPolicy>,
+}
+
+impl FleetPolicy {
+    pub fn target_dims(&self) -> ModelDims {
+        self.target_dims
+    }
+
+    pub fn num_drafts(&self) -> usize {
+        self.drafts.len()
+    }
+
+    /// Same first-fit rule as [`ModelRegistry::assign_draft`].
+    pub fn assign_draft(&self, total_tokens: usize) -> Option<usize> {
+        self.drafts.iter().position(|d| total_tokens <= d.dims.cache_capacity)
+    }
+
+    /// Same market rule as [`ModelRegistry::plan_k`] (shared-round
+    /// pricing: the round's weight stream is billed once, not per
+    /// dispatch group).
+    pub fn plan_k(&self, i: usize, alpha: Option<f64>, adaptive: bool) -> usize {
+        let d = &self.drafts[i];
+        if !adaptive {
+            return d.k_max;
+        }
+        DraftController { k_max: d.k_max, ..DraftController::default() }
+            .choose_k_in_round(alpha, &d.cost, true)
+    }
+
+    pub fn draft_store(&self, i: usize) -> MutexGuard<'_, PagedKvStore> {
+        self.drafts[i].store.lock().expect("draft store lock poisoned")
+    }
+
+    pub fn draft_store_arc(&self, i: usize) -> SharedKvStore {
+        Arc::clone(&self.drafts[i].store)
+    }
+
+    pub fn release_draft(&self, i: usize, h: KvSeqHandle) -> usize {
+        self.draft_store(i).release(h)
     }
 }
 
@@ -428,6 +602,40 @@ mod tests {
     }
 
     #[test]
+    fn shared_round_pricing_flips_borderline_alpha_into_speculation() {
+        // A cheap draft at modest acceptance: a dedicated round cannot
+        // fund the target's weight stream, so `choose_k` sits out — but
+        // in a co-scheduled round the stream is already paid and the
+        // marginal price of one proposal row clears.
+        let cost = SpecRoundCost::relative(0.1, 0.1);
+        let ctl = DraftController { k_max: 4, prior_alpha: 0.6, hysteresis: 1.05 };
+        let a = Some(0.25);
+        assert_eq!(ctl.choose_k(a, &cost), 0, "dedicated pricing sits out");
+        assert_eq!(
+            ctl.choose_k_in_round(a, &cost, false),
+            0,
+            "unshared mode must match choose_k exactly"
+        );
+        assert_eq!(ctl.choose_k_in_round(a, &cost, true), 1, "marginal pricing bids width 1");
+        // One-way containment: any α the dedicated market speculates at,
+        // the shared market does too (its price omits the paid base).
+        for a in [0.05, 0.15, 0.25, 0.35, 0.5, 0.65, 0.8, 0.9, 0.99] {
+            let dedicated = ctl.choose_k(Some(a), &cost);
+            let shared = ctl.choose_k_in_round(Some(a), &cost, true);
+            assert!(
+                dedicated == 0 || shared >= 1,
+                "α = {a}: dedicated bid {dedicated} but shared sat out"
+            );
+        }
+        // k = 0 is free in a co-scheduled round; the marginal prices are
+        // exactly the row/draft terms.
+        assert_eq!(cost.round_s_shared(0, 0.7), 0.0);
+        assert!((cost.verify_marginal_s(3) - 0.3).abs() < 1e-12);
+        assert!((cost.round_s(2, 0.5) - cost.round_s_shared(2, 0.5) - cost.verify_base_s).abs()
+            < 1e-12);
+    }
+
+    #[test]
     fn prior_alpha_drives_the_cold_start() {
         let cost = SpecRoundCost::relative(0.2, 0.3);
         let optimist = DraftController { k_max: 4, prior_alpha: 0.9, hysteresis: 1.0 };
@@ -454,14 +662,38 @@ mod tests {
     }
 
     #[test]
-    fn spec_parts_mut_yields_disjoint_borrows_and_claims_work() {
-        let mut reg = registry(&[64]);
-        let h = reg.draft_store_mut(0).claim(32).unwrap();
-        let (_target, _draft, store) = reg.spec_parts_mut(0);
+    fn spec_parts_yields_models_plus_locked_store_and_claims_work() {
+        let reg = registry(&[64]);
+        let h = reg.draft_store(0).claim(32).unwrap();
+        let (_target, _draft, mut store) = reg.spec_parts(0);
         store.append(h, 16).unwrap();
+        drop(store); // non-reentrant lock: release before re-locking below
         assert_eq!(reg.draft_store(0).len(h), 16);
         let freed = reg.release_draft(0, h);
         assert!(freed > 0, "releasing a claimed sequence frees device bytes");
+    }
+
+    #[test]
+    fn policy_view_mirrors_the_registry_and_shares_its_stores() {
+        let reg = registry(&[64, 256]);
+        let view = reg.policy_view();
+        // The view is Send — the property the device split depends on.
+        fn assert_send<T: Send>(_: &T) {}
+        assert_send(&view);
+        assert_eq!(view.num_drafts(), 2);
+        assert_eq!(view.assign_draft(32), reg.assign_draft(32));
+        assert_eq!(view.assign_draft(128), reg.assign_draft(128));
+        assert_eq!(view.assign_draft(1024), None);
+        assert_eq!(view.plan_k(0, Some(0.95), true), reg.plan_k(0, Some(0.95), true));
+        assert_eq!(view.plan_k(0, Some(0.01), false), reg.plan_k(0, Some(0.01), false));
+        assert_eq!(view.target_dims(), reg.target_dims());
+        // Same store, not a copy: a claim through the view is visible
+        // through the registry.
+        let h = view.draft_store(0).claim(16).unwrap();
+        assert_eq!(reg.draft_store(0).len(h), 0);
+        view.draft_store(0).append(h, 8).unwrap();
+        assert_eq!(reg.draft_store(0).len(h), 8);
+        assert!(view.release_draft(0, h) > 0);
     }
 
     #[test]

@@ -87,6 +87,15 @@ pub struct SchedulerConfig {
     /// divergence). On by default: with it off the engine claims every
     /// block privately — bitwise the pre-sharing behaviour.
     pub share_prefix_kv: bool,
+    /// TTFT-adaptive chunk sizing: when set (and chunking is on), the
+    /// engine compares live TTFT p95 against this profile target each
+    /// round and shrinks the prefill granule below
+    /// [`default_prefill_chunk_tokens`] while the target is missed —
+    /// smaller chunks interleave more arrivals per round, trading pack
+    /// efficiency for first-token latency — then grows it back toward
+    /// the configured granule once p95 recovers ([`ChunkAutotuner`]).
+    /// `None` (default) keeps the granule fixed.
+    pub ttft_p95_target_s: Option<f64>,
 }
 
 impl Default for SchedulerConfig {
@@ -98,6 +107,7 @@ impl Default for SchedulerConfig {
             max_evictions_per_seq: 3,
             kv_arena_blocks: None,
             share_prefix_kv: true,
+            ttft_p95_target_s: None,
         }
     }
 }
@@ -124,6 +134,69 @@ pub fn default_prefill_chunk_tokens(profile: &crate::device::DeviceProfile) -> u
             }
         }
         crate::device::DeviceClass::Laptop | crate::device::DeviceClass::Desktop => 32,
+    }
+}
+
+/// TTFT-adaptive prefill-granule policy — pure arithmetic shared by the
+/// engine loops and the serving simulator so the two shrink identically.
+///
+/// The control problem: the profile-derived granule
+/// ([`default_prefill_chunk_tokens`]) amortizes launch overhead, but
+/// under an arrival burst even that granule lets each round's pack budget
+/// (`max_prefills_per_round` quanta) be monopolized by few sequences —
+/// later arrivals wait whole rounds for their first chunk and TTFT p95
+/// blows past the profile target. Shrinking the granule cuts per-chunk
+/// latency and spreads the same pack budget across more sequences.
+///
+/// The policy is a halving/doubling ladder with hysteresis:
+/// * observed p95 **above** target → halve the granule (floored at
+///   `min_chunk_tokens`, so launch overhead never exceeds the
+///   amortization bound the profile floor encodes);
+/// * observed p95 **under half** the target → double back toward the
+///   configured `base_chunk_tokens` (never beyond it);
+/// * in between → hold (the hysteresis band prevents flapping when p95
+///   sits near the target).
+///
+/// Stateless by design: `update` maps (current granule, observed p95) to
+/// the next granule, so callers own when to sample (the engine samples
+/// its live [`crate::serving::Metrics`] once per round; the simulator
+/// its modeled completions).
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkAutotuner {
+    /// The configured granule — the ladder's ceiling.
+    pub base_chunk_tokens: usize,
+    /// Profile TTFT p95 target, seconds.
+    pub target_p95_s: f64,
+    /// Smallest granule the ladder may reach (launch-overhead floor).
+    pub min_chunk_tokens: usize,
+}
+
+impl ChunkAutotuner {
+    /// Ladder over `base` with the floor at `base / 4` (clamped to ≥ 8
+    /// tokens): two halvings of headroom, never below a granule where
+    /// per-chunk launch overhead dominates on any profile we compile.
+    pub fn new(base_chunk_tokens: usize, target_p95_s: f64) -> ChunkAutotuner {
+        ChunkAutotuner {
+            base_chunk_tokens,
+            target_p95_s,
+            min_chunk_tokens: (base_chunk_tokens / 4).max(8).min(base_chunk_tokens.max(1)),
+        }
+    }
+
+    /// Next granule given the current one and the observed TTFT p95.
+    /// With chunking off (`base == 0`) the tuner is inert.
+    pub fn update(&self, current_chunk_tokens: usize, observed_p95_s: f64) -> usize {
+        if self.base_chunk_tokens == 0 || self.target_p95_s <= 0.0 {
+            return current_chunk_tokens;
+        }
+        let cur = current_chunk_tokens.clamp(self.min_chunk_tokens, self.base_chunk_tokens);
+        if observed_p95_s > self.target_p95_s {
+            (cur / 2).max(self.min_chunk_tokens)
+        } else if observed_p95_s < 0.5 * self.target_p95_s {
+            (cur * 2).min(self.base_chunk_tokens)
+        } else {
+            cur
+        }
     }
 }
 
@@ -278,6 +351,21 @@ impl Scheduler {
 
     pub fn submit(&mut self, req: InferenceRequest) {
         self.waiting.push_back(req);
+    }
+
+    /// Current prefill granule (0 = chunking off).
+    pub fn prefill_chunk_tokens(&self) -> usize {
+        self.cfg.prefill_chunk_tokens
+    }
+
+    /// Retune the prefill granule mid-stream ([`ChunkAutotuner`]). Safe
+    /// at any round boundary: chunk starts are derived from each
+    /// sequence's committed `prefill_progress`, not from a precomputed
+    /// chunk list, so in-flight sequences simply take differently-sized
+    /// next chunks — no invariant depends on the granule being constant
+    /// over a sequence's lifetime.
+    pub fn set_prefill_chunk_tokens(&mut self, tokens: usize) {
+        self.cfg.prefill_chunk_tokens = tokens;
     }
 
     pub fn waiting_len(&self) -> usize {
@@ -1415,5 +1503,58 @@ mod tests {
         let mut slow = device("mali_g715").unwrap();
         slow.launch_overhead_us = 120.0;
         assert_eq!(default_prefill_chunk_tokens(&slow), 128);
+    }
+
+    #[test]
+    fn chunk_autotuner_halves_on_missed_target_and_recovers_with_hysteresis() {
+        let t = ChunkAutotuner::new(64, 0.100);
+        assert_eq!(t.min_chunk_tokens, 16, "floor is base/4");
+        // Missed target: halve, floored.
+        assert_eq!(t.update(64, 0.150), 32);
+        assert_eq!(t.update(32, 0.150), 16);
+        assert_eq!(t.update(16, 0.500), 16, "never below the launch-overhead floor");
+        // Hysteresis band [target/2, target]: hold.
+        assert_eq!(t.update(32, 0.080), 32);
+        assert_eq!(t.update(32, 0.051), 32);
+        // Comfortably under: double back toward base, capped there.
+        assert_eq!(t.update(16, 0.020), 32);
+        assert_eq!(t.update(32, 0.020), 64);
+        assert_eq!(t.update(64, 0.020), 64, "never above the configured granule");
+        // Out-of-ladder current values clamp before stepping.
+        assert_eq!(t.update(1024, 0.150), 32);
+        assert_eq!(t.update(0, 0.020), 32);
+        // Inert configurations.
+        assert_eq!(ChunkAutotuner::new(0, 0.1).update(0, 9.0), 0, "chunking off stays off");
+        assert_eq!(ChunkAutotuner::new(64, 0.0).update(64, 9.0), 64, "no target: fixed");
+        // A tiny base keeps the floor at the base itself, not above it.
+        let tiny = ChunkAutotuner::new(4, 0.1);
+        assert_eq!(tiny.min_chunk_tokens, 4);
+        assert_eq!(tiny.update(4, 9.0), 4);
+    }
+
+    #[test]
+    fn retuning_the_granule_mid_stream_keeps_chunk_progress_consistent() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_active: 2,
+            max_prefills_per_round: 1,
+            prefill_chunk_tokens: 16,
+            ..Default::default()
+        });
+        s.submit(req(1, 40, 2));
+        s.admit();
+        assert_eq!(s.prefill_chunk_tokens(), 16);
+        let r = s.next_round();
+        assert_eq!(r.prefills, vec![PrefillChunk { id: 1, start: 0, len: 16, last: false }]);
+        execute_round(&mut s, &r);
+        // Shrink mid-prefill: the next chunk starts at the committed
+        // progress and simply takes the new granule.
+        s.set_prefill_chunk_tokens(8);
+        let r = s.next_round();
+        assert_eq!(r.prefills, vec![PrefillChunk { id: 1, start: 16, len: 8, last: false }]);
+        execute_round(&mut s, &r);
+        // Grow mid-prefill: a larger tail chunk, clamped at context end.
+        s.set_prefill_chunk_tokens(64);
+        let r = s.next_round();
+        assert_eq!(r.prefills, vec![PrefillChunk { id: 1, start: 24, len: 16, last: true }]);
     }
 }

@@ -62,33 +62,45 @@
 //! residual resampling, [`crate::runtime::speculative_step_sampled`])
 //! so temperature traffic is served speculatively too; greedy traffic
 //! (`sampled: None`) stays bit-identical to plain decode.
+//!
+//! **Truly-async execution** (`pipeline_depth ≥ 2`, or
+//! [`EngineConfig::force_async`]): the worker splits into two actors —
+//! this thread keeps scheduler/admission/plan/reap (the policy side of
+//! the `KvPool` seam) while a dedicated **device thread**
+//! ([`crate::serving::device`]) owns the loaded models and executes
+//! fully-bound round descriptors from a bounded submission channel, so
+//! plan for round N+1 genuinely overlaps execution of round N in wall
+//! clock. Depth 1 without `force_async` still routes to the untouched
+//! serial loop.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{DriftError, Result};
 use crate::kv::{
     shareable_prefix_keys, KvArenaConfig, KvSeqHandle, KvSlotWindow, PagedKvStore, PrefixKey,
 };
+use crate::runtime::backend::{FakeLmBackend, FakeLmConfig, LmBackend};
 use crate::runtime::tinylm::{
-    PackedPrefillChunk, PagedRoundStep, PrefillChunkOutcome, RoundStepOutcome, SpecStepArgs,
-    SpecStepOutcome, TinyLmManifest, TinyLmRuntime,
+    PackedPrefillChunk, PagedRoundStep, SpecStepArgs, TinyLmManifest,
 };
-use crate::runtime::Runtime;
 use crate::serving::admission::AdmissionPolicy;
+use crate::serving::device::{self, DraftPrefillJob, FleetRuntime, RoundDescriptor};
 use crate::serving::metrics::Metrics;
-use crate::serving::registry::{AcceptanceEwma, ModelDims, ModelRegistry, SpecRoundCost};
+use crate::serving::registry::{
+    AcceptanceEwma, ModelDims, ModelRegistry, SpecRoundCost,
+};
 use crate::serving::request::{InferenceRequest, InferenceResponse, RequestId};
-use crate::serving::scheduler::{Scheduler, SchedulerConfig};
+use crate::serving::scheduler::{ChunkAutotuner, Scheduler, SchedulerConfig};
 use crate::util::rng::Pcg32;
 
 /// KV-arena allocation granule (token positions per block). 16 divides
 /// every prefill bucket and keeps worst-case internal fragmentation to
 /// 15 positions per sequence.
-const KV_BLOCK_TOKENS: usize = 16;
+pub(crate) const KV_BLOCK_TOKENS: usize = 16;
 
 enum Msg {
     Request(InferenceRequest, Sender<InferenceResponse>),
@@ -210,6 +222,17 @@ pub struct EngineConfig {
     /// prompt waves re-attach after the first wave fully completes.
     /// `0` — the default — frees them immediately, the pre-PR-7 behavior.
     pub prefix_retain_blocks: usize,
+    /// Route depth 1 through the two-actor async executor anyway. The
+    /// async loop at depth 1 submits and immediately reaps — no overlap,
+    /// but the full channel/device-thread machinery runs, which is what
+    /// the token-identity e2e pins against the serial loop.
+    pub force_async: bool,
+    /// Bench dial: synthetic per-round host planning cost (spun in the
+    /// plan stage, outside any store lock). In the async loop it
+    /// overlaps modeled device time; in the serial loop it serializes —
+    /// the honest depth-1 baseline the overlap bench compares against.
+    /// `0` (the default) adds nothing.
+    pub synthetic_host_work_us: u64,
 }
 
 impl EngineConfig {
@@ -223,6 +246,8 @@ impl EngineConfig {
             pipeline_depth: 2,
             quantized_kv: false,
             prefix_retain_blocks: 0,
+            force_async: false,
+            synthetic_host_work_us: 0,
         }
     }
 }
@@ -398,70 +423,71 @@ impl ServingEngine {
     /// blocks (`quantized_kv`), and prefix-cache retention
     /// (`prefix_retain_blocks`).
     pub fn start_with_config(artifacts_dir: &str, cfg: EngineConfig) -> Result<ServingEngine> {
+        // The legacy single-draft `spec` maps onto a one-draft STATIC
+        // GREEDY fleet (same k every round, same store sizing, greedy
+        // verify), so every pre-fleet caller keeps bit-identical token
+        // streams.
+        let fleet_cfg = match (&cfg.fleet, &cfg.spec) {
+            (Some(f), _) => Some(f.clone()),
+            (None, Some(s)) => Some(FleetConfig {
+                drafts: vec![DraftModelConfig {
+                    artifacts_dir: s.draft_artifacts_dir.clone(),
+                    k_max: s.draft_k.max(1),
+                    cost: SpecRoundCost::relative(1.0, 1.0),
+                }],
+                adaptive_k: false,
+                ewma_weight: 0.3,
+                sampled: None,
+            }),
+            (None, None) => None,
+        };
+        let dir = artifacts_dir.to_string();
+        let max_active = cfg.sched.max_active;
+        // The loader runs ON the thread that ends up owning the models —
+        // the worker in serial mode, the device thread in async mode.
+        // PJRT handles are not `Send`, so they must be born where they
+        // will live.
+        Self::spawn_engine(move || device::load_tinylm_fleet(&dir, fleet_cfg, max_active), cfg)
+    }
+
+    /// Start a PJRT-free engine over the deterministic fake backend
+    /// ([`FakeLmBackend`]): plain decode + prefill only, argmax streams
+    /// fixed by a content hash, device time modeled by
+    /// [`crate::runtime::LmBackend::simulated_device_busy`]. The
+    /// async-overlap bench and the two-actor e2e tests use it to
+    /// exercise the executor itself — host plan time is real, device
+    /// time is the configured spin — without artifacts on disk.
+    pub fn start_fake(fake: FakeLmConfig, cfg: EngineConfig) -> Result<ServingEngine> {
+        Self::spawn_engine(
+            move || {
+                let backend = FakeLmBackend::new(fake);
+                let dims = ModelDims::of(backend.manifest());
+                Ok(FleetRuntime {
+                    reg: ModelRegistry::new(backend, dims),
+                    adaptive_k: false,
+                    ewma_weight: 0.3,
+                    sampled: None,
+                })
+            },
+            cfg,
+        )
+    }
+
+    /// Shared spawn scaffolding: worker thread, request channel, and the
+    /// blocking ready handshake (loading happens on the owning thread;
+    /// the constructor returns only once it succeeded or failed).
+    fn spawn_engine<B, L>(loader: L, cfg: EngineConfig) -> Result<ServingEngine>
+    where
+        B: LmBackend + 'static,
+        L: FnOnce() -> Result<FleetRuntime<B>> + Send + 'static,
+    {
         let metrics = Arc::new(Metrics::default());
         let m2 = Arc::clone(&metrics);
         let (tx, rx) = channel();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let dir = artifacts_dir.to_string();
         let worker = std::thread::Builder::new()
             .name("mldrift-serving".into())
-            .spawn(move || {
-                // PJRT handles are not `Send`, so the worker thread owns
-                // the whole runtime — target and every draft alike. The
-                // legacy single-draft `spec` maps onto a one-draft
-                // STATIC GREEDY fleet (same k every round, same store
-                // sizing, greedy verify), so every pre-fleet caller
-                // keeps bit-identical token streams.
-                let fleet_cfg = match (&cfg.fleet, &cfg.spec) {
-                    (Some(f), _) => Some(f.clone()),
-                    (None, Some(s)) => Some(FleetConfig {
-                        drafts: vec![DraftModelConfig {
-                            artifacts_dir: s.draft_artifacts_dir.clone(),
-                            k_max: s.draft_k.max(1),
-                            cost: SpecRoundCost::relative(1.0, 1.0),
-                        }],
-                        adaptive_k: false,
-                        ewma_weight: 0.3,
-                        sampled: None,
-                    }),
-                    (None, None) => None,
-                };
-                let loaded = Runtime::cpu().and_then(|rt| {
-                    let target = TinyLmRuntime::load(&rt, &dir)?;
-                    let dims = ModelDims::of(&target.manifest);
-                    let mut reg = ModelRegistry::new(target, dims);
-                    let (adaptive_k, ewma_weight, sampled) = match &fleet_cfg {
-                        Some(f) => {
-                            for d in &f.drafts {
-                                let m = TinyLmRuntime::load(&rt, &d.artifacts_dir)?;
-                                let dm = ModelDims::of(&m.manifest);
-                                reg.add_draft(
-                                    m,
-                                    dm,
-                                    d.k_max.max(1),
-                                    d.cost,
-                                    cfg.sched.max_active,
-                                    KV_BLOCK_TOKENS,
-                                );
-                            }
-                            (f.adaptive_k, f.ewma_weight, f.sampled)
-                        }
-                        None => (false, 0.3, None),
-                    };
-                    Ok(FleetRuntime { reg, adaptive_k, ewma_weight, sampled })
-                });
-                let fleet = match loaded {
-                    Ok(x) => {
-                        let _ = ready_tx.send(Ok(()));
-                        x
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                worker_loop(fleet, cfg, rx, m2)
-            })
+            .spawn(move || run_worker(loader, cfg, rx, m2, ready_tx))
             .map_err(|e| DriftError::Serving(format!("spawn worker: {e}")))?;
         ready_rx
             .recv()
@@ -518,7 +544,7 @@ impl Drop for ServingEngine {
 /// claims commit bytes, evictions scrub and release them. The PR-7
 /// engine knobs land here: `quantized_kv` swaps in the int8 region and
 /// `prefix_retain_blocks` arms the published-prefix LRU.
-fn build_target_store(m: &TinyLmManifest, cfg: &EngineConfig) -> PagedKvStore {
+pub(crate) fn build_target_store(m: &TinyLmManifest, cfg: &EngineConfig) -> PagedKvStore {
     let arena = KvArenaConfig {
         layers: m.layers,
         heads_kv: m.heads_kv,
@@ -540,30 +566,63 @@ fn build_target_store(m: &TinyLmManifest, cfg: &EngineConfig) -> PagedKvStore {
     store
 }
 
-/// Resolved fleet state the worker loops consume: the registry (target
-/// + loaded drafts, each with its own worst-case-sized paged store —
-/// draft growth can never be the thing that preempts, the *target*
-/// store stays the contended resource) plus the market and sampling
-/// toggles. A sequence whose lifetime context fits no draft's capacity
-/// never gets a draft binding and decodes plainly.
-struct FleetRuntime {
-    reg: ModelRegistry<TinyLmRuntime>,
-    adaptive_k: bool,
-    ewma_weight: f64,
-    sampled: Option<SampledSpecConfig>,
-}
-
-fn worker_loop(fleet: FleetRuntime, cfg: EngineConfig, rx: Receiver<Msg>, metrics: Arc<Metrics>) {
+/// Route to the executor the config selects, completing the ready
+/// handshake on whichever thread ends up loading the models: the serial
+/// loop loads here (worker owns the runtime, exactly the pre-async
+/// engine); the async loop hands the loader to the device thread.
+fn run_worker<B, L>(
+    loader: L,
+    cfg: EngineConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Metrics>,
+    ready_tx: Sender<Result<()>>,
+) where
+    B: LmBackend + 'static,
+    L: FnOnce() -> Result<FleetRuntime<B>> + Send + 'static,
+{
     metrics.set_pipeline_depth(cfg.pipeline_depth.max(1) as u64);
-    if cfg.pipeline_depth >= 2 {
-        worker_loop_pipelined(fleet, cfg, rx, metrics)
+    if cfg.pipeline_depth >= 2 || cfg.force_async {
+        worker_loop_async(loader, cfg, rx, metrics, ready_tx)
     } else {
+        let fleet = match loader() {
+            Ok(f) => {
+                let _ = ready_tx.send(Ok(()));
+                f
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+                return;
+            }
+        };
         worker_loop_serial(fleet, cfg, rx, metrics)
     }
 }
 
-fn worker_loop_serial(
-    fleet: FleetRuntime,
+/// One TTFT-autotuner step, shared by both worker loops: sample the
+/// live TTFT p95 (only once at least one request has completed — the
+/// histogram is empty before that) and walk the scheduler's prefill
+/// granule one rung along the [`ChunkAutotuner`] hysteresis ladder.
+/// No-op when the engine runs without a TTFT target.
+fn retune_prefill_chunk(
+    tuner: &Option<ChunkAutotuner>,
+    metrics: &Metrics,
+    sched: &mut Scheduler,
+) {
+    if let Some(tuner) = tuner {
+        if metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+            return;
+        }
+        let (_, p95) = metrics.ttft_p50_p95();
+        let cur = sched.prefill_chunk_tokens();
+        let next = tuner.update(cur, p95);
+        if next != cur {
+            sched.set_prefill_chunk_tokens(next);
+        }
+    }
+}
+
+fn worker_loop_serial<B: LmBackend>(
+    fleet: FleetRuntime<B>,
     cfg: EngineConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
@@ -571,10 +630,17 @@ fn worker_loop_serial(
     let sched_cfg = cfg.sched;
     let policy = cfg.policy;
     let mut sched = Scheduler::new(sched_cfg);
-    let FleetRuntime { mut reg, adaptive_k, ewma_weight, sampled } = fleet;
+    // TTFT-adaptive chunk sizing: with a p95 target configured, retune
+    // the prefill granule once per round against the live histogram —
+    // shrink below the profile default while the target is missed, grow
+    // back once latency recovers. `None` keeps the granule fixed.
+    let chunk_tuner = sched_cfg
+        .ttft_p95_target_s
+        .map(|t| ChunkAutotuner::new(sched_cfg.prefill_chunk_tokens, t));
+    let FleetRuntime { reg, adaptive_k, ewma_weight, sampled } = fleet;
     let mut spec_rng = sampled.map(|s| Pcg32::seeded(s.seed));
     let target_cap = reg.target_dims().cache_capacity;
-    let mut store = build_target_store(&reg.target().manifest, &cfg);
+    let mut store = build_target_store(reg.target().manifest(), &cfg);
     // Draft binding: `(draft index, handle in that draft's store)` — a
     // sequence binds to at most one draft for its lifetime.
     let mut draft_handles: HashMap<RequestId, (usize, KvSeqHandle)> = HashMap::new();
@@ -655,6 +721,13 @@ fn worker_loop_serial(
         if sched.is_idle() {
             continue;
         }
+        // Bench dial: the synthetic per-round host planning cost. In the
+        // serial loop it serializes with device time — the honest
+        // baseline the async executor's measured overlap is judged
+        // against.
+        if cfg.synthetic_host_work_us > 0 {
+            device::spin_wait(Duration::from_micros(cfg.synthetic_host_work_us));
+        }
 
         // Admission: gate on the *expected* footprint (blended mean
         // generation length with a safety margin; worst case until
@@ -679,9 +752,15 @@ fn worker_loop_serial(
             // defers — backpressure, so no store pair can ever disagree
             // about who is admitted).
             let di = reg.assign_draft(req.prompt.len() + req.max_new_tokens);
-            let companion = di.map(|i| reg.draft_store_mut(i));
-            match policy.admit_with_companion(&mut store, companion, req, ctx_tokens, mean_gen, keys)
-            {
+            let mut companion = di.map(|i| reg.draft_store(i));
+            match policy.admit_with_companion(
+                &mut store,
+                companion.as_mut().map(|g| &mut **g),
+                req,
+                ctx_tokens,
+                mean_gen,
+                keys,
+            ) {
                 Some((h, dh)) => {
                     if let (Some(i), Some(dh)) = (di, dh) {
                         draft_handles.insert(req.id, (i, dh));
@@ -894,17 +973,17 @@ fn worker_loop_serial(
             if group.is_empty() {
                 continue;
             }
-            let (target_m, draft_m, ds) = reg.spec_parts_mut(di);
+            let (target_m, draft_m, mut ds) = reg.spec_parts(di);
             let spec_outcomes = match (sampled, spec_rng.as_mut()) {
                 (Some(sc), Some(rng)) => target_m.spec_round_paged_sampled(
                     draft_m,
                     &mut store,
-                    ds,
+                    &mut ds,
                     &group,
                     sc.temperature,
                     rng,
                 ),
-                _ => target_m.spec_round_paged(draft_m, &mut store, ds, &group),
+                _ => target_m.spec_round_paged(draft_m, &mut store, &mut ds, &group),
             };
             for (id, outcome) in ids.into_iter().zip(spec_outcomes) {
                 match outcome {
@@ -1057,8 +1136,8 @@ fn worker_loop_serial(
                             .chain(seq.generated.iter())
                             .copied()
                             .collect();
-                        let (_, draft_m, ds) = reg.spec_parts_mut(di);
-                        match draft_m.prefill_paged(&ctx, ds, dh) {
+                        let (_, draft_m, mut ds) = reg.spec_parts(di);
+                        match draft_m.prefill_paged(&ctx, &mut ds, dh) {
                             Ok(_) => {
                                 if let Err(e) = ds.append(dh, ctx.len()) {
                                     crate::log_error!("draft kv append for request {id}: {e}");
@@ -1092,6 +1171,16 @@ fn worker_loop_serial(
                     }
                 }
             }
+        }
+
+        // Modeled device time (fake-backend path; `None` — a real PJRT
+        // round — already spent its wall clock inside the calls above):
+        // realize this round's device seconds as a spin so the serial
+        // loop prices rounds exactly like the async executor and the
+        // overlap bench compares like against like.
+        let busy_prefill: usize = pack.iter().map(|c| c.tokens.len()).sum();
+        if let Some(d) = reg.target().simulated_device_busy(inputs.len(), busy_prefill) {
+            device::spin_wait(d);
         }
 
         for done in sched.reap_finished() {
@@ -1168,20 +1257,21 @@ fn worker_loop_serial(
         );
         metrics.set_kv_sharing(store.arena().shared_blocks() as u64, store.arena().cow_copies());
         metrics.set_kv_dequant(store.dequantized_rows());
+        retune_prefill_chunk(&chunk_tuner, &metrics, &mut sched);
     }
 }
 
-/// One in-flight pipeline slot: the outcomes of a dispatched round,
-/// parked until the next iteration's reap stage applies them. Holding
-/// the outcomes (instead of applying them at dispatch) is what lets the
-/// plan stage run a full admission/preemption/growth pass for slot N+1
-/// before slot N's results touch scheduler state — the explicit
-/// promise-queue form of plan/execute overlap. `window` pins every
-/// block the slot's steps gather through
-/// ([`PagedKvStore::begin_slot_window`]): a plan-stage eviction or
-/// release of a member defers the actual free until the reap closes the
-/// window, so slot N+1's claims can never alias storage slot N still
-/// addresses.
+/// One submitted pipeline slot: what the policy thread remembers about
+/// the round it handed to the device thread, parked until the reap
+/// stage receives the matching [`RoundCompletion`]. The outcomes
+/// themselves live on the other side of the channel now — this is the
+/// policy-side stub the if-let-guarded reap reconciles against.
+/// `window` pins every block the slot's steps gather through
+/// ([`PagedKvStore::begin_slot_window`]), and it MUST be opened before
+/// the descriptor is submitted: a plan-stage eviction or release of a
+/// member while the round sits in the channel (or executes) defers the
+/// actual free until the reap closes the window, so no claim can ever
+/// alias storage the device still addresses.
 struct InflightSlot {
     window: Option<KvSlotWindow>,
     /// Executed kernel batch (plain decode steps + speculative steps).
@@ -1189,63 +1279,85 @@ struct InflightSlot {
     /// Tokens emitted when the slot was bound (pending-token emissions);
     /// speculative acceptance lands at reap and is added there.
     emitted: usize,
-    decode: Vec<(RequestId, Result<RoundStepOutcome>)>,
-    spec: Vec<(RequestId, Result<(SpecStepOutcome, f64)>)>,
-    prefill: Vec<(RequestId, PackedPrefillChunk, Result<PrefillChunkOutcome>)>,
 }
 
 /// CI thread-stress knob: a deterministic per-stage delay (microseconds,
 /// parsed once from `MLDRIFT_SLOT_JITTER_US`) inserted between the
-/// pipelined loop's plan/reap/bind stages, widening the window in which
-/// cross-thread request arrivals interleave with in-flight slots.
-fn slot_jitter_us() -> u64 {
+/// policy loop's plan/reap/bind stages — and, in the async executor,
+/// ahead of every device-thread round — widening the window in which
+/// cross-thread arrivals and submissions interleave with in-flight
+/// slots.
+pub(crate) fn slot_jitter_us() -> u64 {
     std::env::var("MLDRIFT_SLOT_JITTER_US").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
 }
 
-/// The pipelined (depth ≥ 2) worker loop: a staged slot queue over the
-/// same policy code the serial loop runs.
+/// The truly-async (depth ≥ 2, or `force_async`) policy loop: the same
+/// staged plan/reap/bind machine the synchronous pipelined executor
+/// ran, with execution moved onto the dedicated device thread
+/// ([`crate::serving::device`]) so the overlap is real wall-clock time,
+/// not just reordered bookkeeping.
 ///
 /// Each iteration runs three stages against at most one in-flight slot:
 ///
-/// 1. **Plan** slot N+1 while slot N is in flight: admission, the
-///    projected round, and `ensure_round_capacity` (growth + preemption)
-///    all run against *speculated* state — slot N's accepted tokens and
-///    prefill progress have not landed yet, so the plan reserves a
-///    conservative superset of what the bind will need.
-/// 2. **Reap** slot N: apply its outcomes. Every application is
+/// 1. **Plan** slot N+1 while slot N *executes on the device thread*:
+///    admission, the projected round, and `ensure_round_capacity`
+///    (growth + preemption) run against *speculated* state — slot N's
+///    accepted tokens and prefill progress have not landed yet, so the
+///    plan reserves a conservative superset of what the bind will need.
+///    Store work takes the shared-store lock briefly; the modeled
+///    device busy time spins outside it, so the two genuinely overlap.
+/// 2. **Reap** slot N: block on the completion channel (this is the
+///    synchronization point — decode is token-serial, the bind needs
+///    slot N's argmaxes), then apply the outcomes. Every application is
 ///    if-let-guarded, because the plan stage may have preempted a slot
-///    member after its round was dispatched — the victim's runtime and
-///    handle are gone, its outcome is dropped, and re-prefill recomputes
-///    the lost pending token (recompute semantics, the same contract as
-///    serial eviction). Closing the slot's reservation window here
-///    releases the frees the window deferred.
-/// 3. **Bind + execute** slot N+1: recompute the round from the now
+///    member while its round sat in the submission channel or executed
+///    — the victim's runtime and handle are gone, its outcome is
+///    dropped, and re-prefill recomputes the lost pending token
+///    (recompute semantics, the same contract as serial eviction).
+///    Closing the slot's reservation window here releases the frees the
+///    window deferred.
+/// 3. **Bind + submit** slot N+1: recompute the round from the now
 ///    authoritative scheduler state (the reconciliation step — the plan
 ///    was speculative, the bind is truth), re-run the capacity pass with
 ///    actual speculative widths, advance emission state exactly like the
-///    serial loop, flip the double-buffered gather scratch
-///    ([`PagedKvStore::select_scratch_slot`]) so this slot's dense
-///    inputs never alias the previous slot's, open the reservation
-///    window, and dispatch the runtime calls.
+///    serial loop, open the reservation window, and only then send the
+///    fully-bound descriptor — the window must outlive cross-thread
+///    submission, not just slot reap, or a plan-stage free could alias
+///    storage the device is about to gather.
 ///
 /// Decode is token-serial — slot N+1's decode inputs are slot N's
 /// argmaxes — so at most one slot can be in flight ahead of the plan:
-/// depths above 2 are structurally identical to depth 2 (see
+/// depths above 2 are structurally identical to depth 2 (and the
+/// submission channel's bound of 1 enforces it; see
 /// DESIGN.md §pipelined executor and the matching sim sweep).
 ///
-/// This loop's stage machine is mirrored step-for-step by the
+/// This loop's stage machine — including the second device actor and
+/// its FIFO submit/execute gating — is mirrored step-for-step by the
 /// drift-check interleaving explorer ([`crate::check::model`]), which
-/// exhaustively enumerates plan/bind/exec/reap orderings against the
-/// real `KvArena` and asserts the DESIGN.md §6 invariant catalog after
-/// every step — when changing the ordering contract here (e.g. for the
-/// truly-async device queue), change the model FIRST and let the
-/// explorer veto the design before the engine learns it.
-fn worker_loop_pipelined(
-    fleet: FleetRuntime,
+/// exhaustively enumerates plan/bind/submit/exec/reap orderings against
+/// the real `KvArena` and asserts the DESIGN.md §6 invariant catalog
+/// after every step — when changing the ordering contract here, change
+/// the model FIRST and let the explorer veto the design before the
+/// engine learns it.
+fn worker_loop_async<B, L>(
+    loader: L,
     cfg: EngineConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Metrics>,
-) {
+    ready_tx: Sender<Result<()>>,
+) where
+    B: LmBackend + 'static,
+    L: FnOnce() -> Result<FleetRuntime<B>> + Send + 'static,
+{
+    let (queue, ready) = match device::spawn_device(loader, cfg.clone()) {
+        Ok(x) => x,
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let _ = ready_tx.send(Ok(()));
+    let device::DeviceReady { fleet, store, adaptive_k, ewma_weight } = ready;
     let sched_cfg = cfg.sched;
     let policy = cfg.policy;
     let jitter_us = slot_jitter_us();
@@ -1255,10 +1367,19 @@ fn worker_loop_pipelined(
         }
     };
     let mut sched = Scheduler::new(sched_cfg);
-    let FleetRuntime { mut reg, adaptive_k, ewma_weight, sampled } = fleet;
-    let mut spec_rng = sampled.map(|s| Pcg32::seeded(s.seed));
-    let target_cap = reg.target_dims().cache_capacity;
-    let mut store = build_target_store(&reg.target().manifest, &cfg);
+    // TTFT-adaptive chunk sizing — same ladder as the serial loop,
+    // stepped once per reap. Retuning is policy-side state only; the
+    // device thread never sees the granule, so no channel traffic.
+    let chunk_tuner = sched_cfg
+        .ttft_p95_target_s
+        .map(|t| ChunkAutotuner::new(sched_cfg.prefill_chunk_tokens, t));
+    let target_cap = fleet.target_dims().cache_capacity;
+    // Arena geometry is fixed at construction — snapshot the token total
+    // once instead of taking the store lock per enqueued request.
+    let store_total_tokens = {
+        let st = store.lock().expect("target store lock poisoned");
+        st.config().total_tokens()
+    };
     let mut draft_handles: HashMap<RequestId, (usize, KvSeqHandle)> = HashMap::new();
     let mut acceptance: HashMap<RequestId, AcceptanceEwma> = HashMap::new();
     let mut runtimes: HashMap<RequestId, SeqRuntime> = HashMap::new();
@@ -1292,7 +1413,7 @@ fn worker_loop_pipelined(
             match msg {
                 Msg::Request(req, reply) => {
                     let tokens = req.prompt.len() + req.max_new_tokens;
-                    let cap = target_cap.min(store.config().total_tokens());
+                    let cap = target_cap.min(store_total_tokens);
                     if tokens > cap {
                         let msg = format!(
                             "prompt + max_new_tokens = {tokens} exceeds per-sequence capacity {cap}"
@@ -1335,12 +1456,26 @@ fn worker_loop_pipelined(
         metrics.set_inflight_gen(inflight_seqs, inflight_tokens);
         let mean_gen = metrics.mean_gen_tokens();
         let mut newly_admitted: Vec<RequestId> = Vec::new();
+        // Store work takes the shared-store lock for the span of this
+        // pass only. The device may be executing slot N right now, but
+        // its modeled busy time spins *unlocked*, so the plan genuinely
+        // runs concurrently with it (PJRT rounds hold the lock for the
+        // whole call — overlap there is bounded by contention, which
+        // DESIGN.md §8 is explicit about). Lock order everywhere:
+        // target store first, then a draft store — same as the device.
+        let mut st = store.lock().expect("target store lock poisoned");
         sched.admit_where(|req, ctx_tokens| {
             let keys: &[PrefixKey] = prefix_keys.get(&req.id).map_or(&[], |k| k.as_slice());
-            let di = reg.assign_draft(req.prompt.len() + req.max_new_tokens);
-            let companion = di.map(|i| reg.draft_store_mut(i));
-            match policy.admit_with_companion(&mut store, companion, req, ctx_tokens, mean_gen, keys)
-            {
+            let di = fleet.assign_draft(req.prompt.len() + req.max_new_tokens);
+            let mut companion = di.map(|i| fleet.draft_store(i));
+            match policy.admit_with_companion(
+                &mut *st,
+                companion.as_mut().map(|g| &mut **g),
+                req,
+                ctx_tokens,
+                mean_gen,
+                keys,
+            ) {
                 Some((h, dh)) => {
                     if let (Some(i), Some(dh)) = (di, dh) {
                         draft_handles.insert(req.id, (i, dh));
@@ -1356,7 +1491,7 @@ fn worker_loop_pipelined(
             }
         });
         for id in newly_admitted {
-            let skip = store.len(handles[&id]);
+            let skip = st.len(handles[&id]);
             if skip > 0 {
                 metrics.record_prefix_attach(skip);
                 sched.seq_mut(id).expect("admitted above").prefill_progress = skip;
@@ -1377,7 +1512,7 @@ fn worker_loop_pipelined(
                 let k_eff = match draft_handles.get(&id) {
                     Some(&(di, _)) => {
                         let alpha = acceptance.get(&id).and_then(|e| e.estimate());
-                        reg.plan_k(di, alpha, adaptive_k).min(remaining)
+                        fleet.plan_k(di, alpha, adaptive_k).min(remaining)
                     }
                     None => 0,
                 };
@@ -1386,11 +1521,13 @@ fn worker_loop_pipelined(
             .collect();
         proj_needs.extend(projected.prefills.iter().filter(|c| c.len > 0).map(|c| (c.id, c.len)));
         // Preemption runs *ahead*: a victim chosen here may be a member
-        // of the in-flight slot. Its blocks stay pinned by the slot
-        // window (deferred free — no aliasing), its outcome is dropped
-        // at reap, and re-prefill recomputes everything it loses.
+        // of the slot currently in the channel or on the device. Its
+        // blocks stay pinned by the slot window (deferred free — no
+        // aliasing), its handle's generation is retired (the device's
+        // store calls reject it cleanly), its outcome is dropped at
+        // reap, and re-prefill recomputes everything it loses.
         let _ = sched.ensure_round_capacity(
-            &mut store,
+            &mut *st,
             &mut handles,
             &proj_needs,
             |victim, bill, bytes_freed| {
@@ -1399,7 +1536,7 @@ fn worker_loop_pipelined(
                 }
                 let mut draft_freed = 0;
                 if let Some((di, dh)) = draft_handles.remove(&victim) {
-                    draft_freed = reg.release_draft(di, dh);
+                    draft_freed = fleet.release_draft(di, dh);
                 }
                 metrics.record_preemption(bill, bytes_freed);
                 crate::log_warn!(
@@ -1408,6 +1545,13 @@ fn worker_loop_pipelined(
                 );
             },
         );
+        drop(st);
+        // The synthetic host-work dial spins here — after the lock is
+        // released — so in this executor it overlaps the device's busy
+        // spin, where the serial loop pays it serially.
+        if cfg.synthetic_host_work_us > 0 {
+            device::spin_wait(Duration::from_micros(cfg.synthetic_host_work_us));
+        }
         if inflight.is_some() {
             metrics.record_planned_ahead();
         }
@@ -1415,8 +1559,19 @@ fn worker_loop_pipelined(
 
         // ---- REAP slot N ------------------------------------------------
         if let Some(slot) = inflight.take() {
+            // Block for the completion BEFORE taking the store lock: the
+            // device needs the lock to finish the round, so holding it
+            // across this recv would deadlock the two actors.
+            let comp = match queue.completions.recv() {
+                Ok(c) => c,
+                Err(_) => {
+                    crate::log_error!("device thread died mid-round; engine shutting down");
+                    break;
+                }
+            };
             let mut round_tokens = slot.emitted;
-            for (id, outcome) in slot.decode {
+            let mut st = store.lock().expect("target store lock poisoned");
+            for (id, outcome) in comp.decode {
                 match outcome {
                     Ok(out) => {
                         // A member the plan stage preempted after this
@@ -1428,7 +1583,7 @@ fn worker_loop_pipelined(
                             metrics.record_decode_step(out.step_s);
                             srt.next_token = argmax(&out.logits) as i32;
                             if let Some(&h) = handles.get(&id) {
-                                if let Err(e) = store.append(h, 1) {
+                                if let Err(e) = st.append(h, 1) {
                                     crate::log_error!("kv store append for request {id}: {e}");
                                 }
                             }
@@ -1445,7 +1600,7 @@ fn worker_loop_pipelined(
                     }
                 }
             }
-            for (id, outcome) in slot.spec {
+            for (id, outcome) in comp.spec {
                 match outcome {
                     Ok((out, step_s)) => {
                         if let Some(srt) = runtimes.get_mut(&id) {
@@ -1479,7 +1634,7 @@ fn worker_loop_pipelined(
                     }
                 }
             }
-            for (id, chunk, outcome) in slot.prefill {
+            for (id, chunk, outcome) in comp.prefill {
                 match outcome {
                     Ok(out) => {
                         metrics.record_prefill_chunk(chunk.tokens.len());
@@ -1502,7 +1657,7 @@ fn worker_loop_pipelined(
                         };
                         if let Some(keys) = prefix_keys.get(&id) {
                             if let Some(&h) = handles.get(&id) {
-                                if let Err(e) = store.publish_prefix(h, keys) {
+                                if let Err(e) = st.publish_prefix(h, keys) {
                                     crate::log_error!("publish prefix for request {id}: {e}");
                                 }
                             }
@@ -1525,35 +1680,10 @@ fn worker_loop_pipelined(
                                 arrival.elapsed().as_secs_f64(),
                             ),
                         );
-                        if let Some(&(di, dh)) = draft_handles.get(&id) {
-                            if let Some(seq) = sched.seq(id) {
-                                let ctx: Vec<i32> = seq
-                                    .request
-                                    .prompt
-                                    .iter()
-                                    .chain(seq.generated.iter())
-                                    .copied()
-                                    .collect();
-                                let (_, draft_m, ds) = reg.spec_parts_mut(di);
-                                match draft_m.prefill_paged(&ctx, ds, dh) {
-                                    Ok(_) => {
-                                        if let Err(e) = ds.append(dh, ctx.len()) {
-                                            crate::log_error!(
-                                                "draft kv append for request {id}: {e}"
-                                            );
-                                        }
-                                    }
-                                    Err(e) => {
-                                        crate::log_warn!(
-                                            "draft prefill failed for request {id} \
-                                             (plain decode fallback): {e}"
-                                        );
-                                        ds.release(dh);
-                                        draft_handles.remove(&id);
-                                    }
-                                }
-                            }
-                        }
+                        // Draft catch-up prefill ran on the DEVICE this
+                        // round (bound as a job next to the final
+                        // chunk); its outcome is reconciled below from
+                        // `comp.draft_prefill`.
                     }
                     Err(e) => {
                         crate::log_error!("prefill chunk failed for request {id}: {e}");
@@ -1567,21 +1697,39 @@ fn worker_loop_pipelined(
                     }
                 }
             }
+            // Draft catch-up outcomes: `Ok` already committed its rows
+            // on the device; `Err` downgrades the sequence to plain
+            // decode — but ONLY if the binding the job was built from is
+            // still the live one. A preemption while the round sat in
+            // the channel released (di, dh) and a re-admission may have
+            // bound a fresh draft handle; releasing by the stale pair
+            // would double-free another sequence's rows.
+            for (id, di, dh, res) in comp.draft_prefill {
+                if let Err(e) = res {
+                    crate::log_warn!(
+                        "draft prefill failed for request {id} (plain decode fallback): {e}"
+                    );
+                    if draft_handles.get(&id) == Some(&(di, dh)) {
+                        fleet.release_draft(di, dh);
+                        draft_handles.remove(&id);
+                    }
+                }
+            }
             metrics.record_round(slot.batch, round_tokens);
             // Close the reservation window before reaping completions so
             // deferred frees (and completed sequences' blocks) release
             // in the same stage the device work retired.
             if let Some(w) = slot.window {
-                store.end_slot_window(w);
+                st.end_slot_window(w);
             }
             for done in sched.reap_finished() {
                 let id = done.request.id;
                 if let Some(h) = handles.remove(&id) {
-                    store.release(h);
+                    st.release(h);
                 }
                 prefix_keys.remove(&id);
                 if let Some((di, dh)) = draft_handles.remove(&id) {
-                    reg.release_draft(di, dh);
+                    fleet.release_draft(di, dh);
                 }
                 acceptance.remove(&id);
                 if let Some(srt) = runtimes.remove(&id) {
@@ -1627,16 +1775,16 @@ fn worker_loop_pipelined(
                 }
             }
             metrics.set_kv_device_bytes(
-                store.device_bytes_in_use() as u64,
-                store.peak_device_bytes_in_use() as u64,
+                st.device_bytes_in_use() as u64,
+                st.peak_device_bytes_in_use() as u64,
             );
-            metrics
-                .set_kv_sharing(store.arena().shared_blocks() as u64, store.arena().cow_copies());
-            metrics.set_kv_dequant(store.dequantized_rows());
+            metrics.set_kv_sharing(st.arena().shared_blocks() as u64, st.arena().cow_copies());
+            metrics.set_kv_dequant(st.dequantized_rows());
         }
+        retune_prefill_chunk(&chunk_tuner, &metrics, &mut sched);
         jitter("reap");
 
-        // ---- BIND + EXECUTE slot N+1 ------------------------------------
+        // ---- BIND + SUBMIT slot N+1 -------------------------------------
         // Reconciliation: the plan was speculative; recompute the round
         // and the capacity pass from the now-authoritative scheduler
         // state (slot N's acceptance, prefill progress, and completions
@@ -1668,7 +1816,7 @@ fn worker_loop_pipelined(
                 let k_eff = match draft_handles.get(&id) {
                     Some(&(di, _)) => {
                         let alpha = acceptance.get(&id).and_then(|e| e.estimate());
-                        reg.plan_k(di, alpha, adaptive_k).min(remaining)
+                        fleet.plan_k(di, alpha, adaptive_k).min(remaining)
                     }
                     None => 0,
                 };
@@ -1677,8 +1825,13 @@ fn worker_loop_pipelined(
             })
             .collect();
         needs_rows.extend(round.prefills.iter().filter(|c| c.len > 0).map(|c| (c.id, c.len)));
+        // The bind holds the target-store lock from the capacity pass
+        // through window opening: the previous round has already been
+        // reaped (the recv above), so nothing contends but the idle
+        // device waiting for the next descriptor.
+        let mut st = store.lock().expect("target store lock poisoned");
         let held_out: HashSet<RequestId> = sched.ensure_round_capacity(
-            &mut store,
+            &mut *st,
             &mut handles,
             &needs_rows,
             |victim, bill, bytes_freed| {
@@ -1687,7 +1840,7 @@ fn worker_loop_pipelined(
                 }
                 let mut draft_freed = 0;
                 if let Some((di, dh)) = draft_handles.remove(&victim) {
-                    draft_freed = reg.release_draft(di, dh);
+                    draft_freed = fleet.release_draft(di, dh);
                 }
                 metrics.record_preemption(bill, bytes_freed);
                 crate::log_warn!(
@@ -1725,9 +1878,10 @@ fn worker_loop_pipelined(
         let mut steps = Vec::with_capacity(inputs.len());
         // Speculative members grouped by draft index: weight-streaming
         // cost is shared only within one model's batch, so each group
-        // dispatches as one batch against its own draft model.
+        // dispatches (on the device thread) as one batch against its
+        // own draft model.
         let mut spec_groups: Vec<(Vec<RequestId>, Vec<(SpecStepArgs, Vec<i32>)>)> =
-            (0..reg.num_drafts()).map(|_| (Vec::new(), Vec::new())).collect();
+            (0..fleet.num_drafts()).map(|_| (Vec::new(), Vec::new())).collect();
         for &id in &round.decode_batch {
             if let Some(&(token, pos)) = inputs.get(&id) {
                 let k_eff = spec_width.get(&id).copied().unwrap_or(0);
@@ -1735,7 +1889,10 @@ fn worker_loop_pipelined(
                     let &(di, dh) = draft_handles.get(&id).expect("spec width implies a draft");
                     let seq = sched.seq(id).expect("scheduled seq exists");
                     let plen = seq.request.prompt.len();
-                    let catchup: Vec<i32> = (reg.draft_store(di).len(dh)..pos)
+                    // Brief draft-store lock nested under the target
+                    // lock held across the bind — the same target→draft
+                    // order the device thread uses, so no cycle.
+                    let catchup: Vec<i32> = (fleet.draft_store(di).len(dh)..pos)
                         .map(|p| {
                             if p < plen { seq.request.prompt[p] } else { seq.generated[p - plen] }
                         })
@@ -1782,67 +1939,66 @@ fn worker_loop_pipelined(
             });
             pack_ids.push(c.id);
         }
+        // Draft catch-up prefills bind next to their final chunks. The
+        // context (prompt + generated) is frozen into the job here,
+        // which is sound because a still-prefilling sequence emits no
+        // tokens between this bind and its reap.
+        let mut draft_prefills: Vec<DraftPrefillJob> = Vec::new();
+        for (i, c) in pack.iter().enumerate() {
+            if !c.last {
+                continue;
+            }
+            let id = pack_ids[i];
+            if let Some(&(di, dh)) = draft_handles.get(&id) {
+                let seq = sched.seq(id).expect("scheduled seq exists");
+                let ctx: Vec<i32> =
+                    seq.request.prompt.iter().chain(seq.generated.iter()).copied().collect();
+                draft_prefills.push(DraftPrefillJob { id, di, dh, ctx });
+            }
+        }
 
-        // Dispatch: flip the double-buffered gather scratch (slot N+1's
-        // dense inputs must never alias slot N's), pin the slot's block
-        // tables, run the round, and park the outcomes until the next
-        // iteration's reap.
-        store.select_scratch_slot(slot_parity);
-        slot_parity ^= 1;
+        // SUBMIT: pin the slot's block tables FIRST — the reservation
+        // window must be open before the descriptor crosses the channel
+        // (K7: windows outlive cross-thread submission, not just slot
+        // reap; a plan-stage release while the round sits in the channel
+        // defers its blocks until this slot's reap). The gather-scratch
+        // parity rides in the descriptor and is selected by the device
+        // at execution start, so slot N+1's dense inputs can never
+        // alias the slot still executing when this one was bound.
         let mut member_handles: Vec<KvSeqHandle> = steps.iter().map(|s| s.handle).collect();
         for (_, group) in &spec_groups {
             member_handles.extend(group.iter().map(|(a, _)| a.h));
         }
         member_handles.extend(pack.iter().map(|c| c.h));
-        let window = match store.begin_slot_window(&member_handles) {
+        let window = match st.begin_slot_window(&member_handles) {
             Ok(w) => Some(w),
             Err(e) => {
                 crate::log_error!("slot reservation window: {e}");
                 None
             }
         };
-        let decode_outcomes = reg.target().decode_round_paged(&mut store, &steps);
-        let decode: Vec<(RequestId, Result<RoundStepOutcome>)> =
-            step_ids.into_iter().zip(decode_outcomes).collect();
-        // One batched dispatch per draft group (weight streaming shared
-        // within a model's batch); the slot parks the outcomes flat —
-        // the grouping only matters at dispatch.
-        let mut spec: Vec<(RequestId, Result<(SpecStepOutcome, f64)>)> = Vec::new();
-        for (di, (ids, group)) in spec_groups.into_iter().enumerate() {
-            if group.is_empty() {
-                continue;
-            }
-            let (target_m, draft_m, ds) = reg.spec_parts_mut(di);
-            let spec_outcomes = match (sampled, spec_rng.as_mut()) {
-                (Some(sc), Some(rng)) => target_m.spec_round_paged_sampled(
-                    draft_m,
-                    &mut store,
-                    ds,
-                    &group,
-                    sc.temperature,
-                    rng,
-                ),
-                _ => target_m.spec_round_paged(draft_m, &mut store, ds, &group),
-            };
-            spec.extend(ids.into_iter().zip(spec_outcomes));
+        drop(st);
+        let desc = RoundDescriptor {
+            scratch_slot: slot_parity,
+            step_ids,
+            steps,
+            spec_groups,
+            pack_ids,
+            pack,
+            draft_prefills,
+        };
+        slot_parity ^= 1;
+        inflight = Some(InflightSlot { window, batch: inputs.len(), emitted: round_tokens });
+        if queue.submit.send(desc).is_err() {
+            crate::log_error!("device thread died; engine shutting down");
+            break;
         }
-        let pack_outcomes = reg.target().prefill_pack(&mut store, &pack);
-        let prefill: Vec<(RequestId, PackedPrefillChunk, Result<PrefillChunkOutcome>)> = pack_ids
-            .into_iter()
-            .zip(pack)
-            .zip(pack_outcomes)
-            .map(|((id, chunk), out)| (id, chunk, out))
-            .collect();
-        inflight = Some(InflightSlot {
-            window,
-            batch: inputs.len(),
-            emitted: round_tokens,
-            decode,
-            spec,
-            prefill,
-        });
         jitter("bind");
     }
+    // Past the loop the scheduler has drained (or the device died): drop
+    // the submission side and join the device thread so the models tear
+    // down before the engine reports itself gone.
+    queue.shutdown();
 }
 
 /// A failed-request response: no tokens, the queue time it did spend, and

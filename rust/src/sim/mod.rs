@@ -31,9 +31,9 @@ pub mod serving;
 pub use cost::{kernel_cost, KernelCost};
 pub use exec::{
     draft_time_s, expected_accepted_tokens, expected_draft_steps, kv_dequant_overhead_s,
-    mixed_verify_time_s, packed_prefill_time_s, paged_gather_overhead_s, simulate_batched,
-    simulate_graph, speculative_round_time_s, verify_time_s, ExecutionPlan, PackedChunkCost,
-    PlannedKernel, SimReport,
+    mixed_verify_time_s, packed_prefill_time_s, paged_gather_overhead_s, pipelined_round_time_s,
+    simulate_batched, simulate_graph, speculative_round_time_s, verify_time_s, ExecutionPlan,
+    PackedChunkCost, PlannedKernel, SimReport,
 };
 pub use serving::{
     simulate_serving, simulate_serving_fleet, simulate_serving_pipelined,

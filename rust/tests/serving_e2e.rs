@@ -1,5 +1,10 @@
-//! Serving-layer integration: the thread-based engine over real PJRT.
+//! Serving-layer integration: the thread-based engine over real PJRT,
+//! plus the PJRT-free two-actor executor tests over the deterministic
+//! fake backend (these run everywhere — no artifacts needed — which is
+//! what gives the CI jitter matrix and the nightly TSan job a real
+//! policy-thread/device-thread race to chew on).
 
+use mldrift::runtime::FakeLmConfig;
 use mldrift::serving::{
     AdmissionPolicy, DraftModelConfig, EngineConfig, FleetConfig, InferenceRequest,
     SampledSpecConfig, SchedulerConfig, ServingEngine, SpecConfig, SpecRoundCost,
@@ -667,5 +672,225 @@ fn drift_check_pins_a_preempting_deferring_schedule() {
     let again = replay(&cfg, &schedule).expect("second replay clean");
     assert_eq!(again.preemptions, world.preemptions);
     assert_eq!(again.deferred_frees, world.deferred_frees);
+    assert_eq!(again.trace, world.trace, "replay must be event-for-event deterministic");
+}
+
+#[test]
+fn async_queue_is_token_identical_to_serial_loop_at_every_depth() {
+    // The tentpole's identity bar, PJRT-free: the same mixed burst
+    // served by the serial loop (depth 1), the two-actor executor
+    // forced at depth 1 (`force_async` — the full channel and
+    // device-thread machinery), and the two-actor executor at depths 2
+    // and 3 must deliver bit-identical token streams. The fake
+    // backend's argmaxes are a content hash of (token, position), so
+    // any divergence is executor plumbing, not numerics.
+    use std::sync::atomic::Ordering;
+
+    let sched = SchedulerConfig {
+        max_active: 3,
+        max_prefills_per_round: 2,
+        prefill_chunk_tokens: 8,
+        ..Default::default()
+    };
+    let prompts: Vec<Vec<i32>> = vec![
+        (1..=32).collect(),
+        (1..=16).collect(),
+        (5..=20).collect(),
+        (1..=16).collect(),
+    ];
+    let gen = 6usize;
+    let fake = FakeLmConfig {
+        decode_round_s: 200e-6,
+        prefill_token_s: 5e-6,
+        ..FakeLmConfig::default()
+    };
+    let run = |depth: usize, force_async: bool| {
+        let mut cfg = EngineConfig::new(sched);
+        cfg.pipeline_depth = depth;
+        cfg.force_async = force_async;
+        let engine = ServingEngine::start_fake(fake, cfg).unwrap();
+        let rxs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| engine.submit(InferenceRequest::new(i as u64, p.clone(), gen)).unwrap())
+            .collect();
+        let mut outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        outs.sort_by_key(|r| r.id);
+        let metrics = std::sync::Arc::clone(&engine.metrics);
+        drop(engine); // join both actors so all round bookkeeping is flushed
+        for o in &outs {
+            assert!(o.error.is_none(), "burst must not fail (depth {depth}): {:?}", o.error);
+            assert_eq!(o.tokens.len(), gen);
+        }
+        assert_eq!(
+            metrics.kv_device_bytes_in_use.load(Ordering::Relaxed),
+            0,
+            "drained executor must release every block (depth {depth})"
+        );
+        (outs.into_iter().map(|r| r.tokens).collect::<Vec<Vec<i32>>>(), metrics)
+    };
+
+    let (reference, m_serial) = run(1, false);
+    assert_eq!(m_serial.pipeline_depth.load(Ordering::Relaxed), 1);
+    assert_eq!(
+        m_serial.pipeline_planned_ahead_slots.load(Ordering::Relaxed),
+        0,
+        "the serial loop never plans ahead"
+    );
+    let (forced, _) = run(1, true);
+    assert_eq!(forced, reference, "force_async depth 1 must match the serial loop exactly");
+    let (depth2, m2) = run(2, false);
+    assert_eq!(depth2, reference, "depth 2 must match the serial loop exactly");
+    assert_eq!(m2.pipeline_depth.load(Ordering::Relaxed), 2);
+    assert!(
+        m2.pipeline_planned_ahead_slots.load(Ordering::Relaxed) > 0,
+        "a multi-round burst on the async executor must plan ahead of in-flight slots"
+    );
+    let (depth3, _) = run(3, false);
+    assert_eq!(depth3, reference, "depth 3 must behave exactly like depth 2");
+}
+
+#[test]
+fn async_thread_stress_preemption_burst_stays_deterministic() {
+    // The thread-stress variant the CI jitter matrix and nightly TSan
+    // job drag through hostile timing: `MLDRIFT_SLOT_JITTER_US` sleeps
+    // BOTH actors — the policy thread between plan/reap/bind and the
+    // device thread before each dequeued round — while this burst
+    // forces the nastiest schedule shape the model checker explores:
+    // a tiny arena (decode growth must preempt, sometimes a member of
+    // the round sitting in the submission channel), chunked prefills,
+    // modeled device busy AND synthetic host work so the two threads
+    // genuinely race on the shared store. Eviction is recompute, never
+    // truncation, and the fake's streams are content hashes — so
+    // whatever the interleaving, the serial loop's exact tokens must
+    // come back.
+    use std::sync::atomic::Ordering;
+
+    let sched = SchedulerConfig {
+        max_active: 3,
+        max_prefills_per_round: 3,
+        prefill_chunk_tokens: 8,
+        kv_arena_blocks: Some(3),
+        ..Default::default()
+    };
+    let fake = FakeLmConfig {
+        decode_round_s: 100e-6,
+        prefill_token_s: 5e-6,
+        ..FakeLmConfig::default()
+    };
+    let prompt: Vec<i32> = (1..=16).collect();
+    let gen = 16usize;
+    let run = |depth: usize, host_us: u64| {
+        let mut cfg = EngineConfig::new(sched);
+        cfg.policy = AdmissionPolicy::Expected { safety_margin: 1.0 };
+        cfg.pipeline_depth = depth;
+        cfg.synthetic_host_work_us = host_us;
+        let engine = ServingEngine::start_fake(fake, cfg).unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| engine.submit(InferenceRequest::new(i, prompt.clone(), gen)).unwrap())
+            .collect();
+        let mut outs: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        outs.sort_by_key(|r| r.id);
+        let metrics = std::sync::Arc::clone(&engine.metrics);
+        drop(engine);
+        for o in &outs {
+            assert!(o.error.is_none(), "stress burst must not fail: {:?}", o.error);
+            assert_eq!(o.tokens.len(), gen, "eviction must cost time, never tokens");
+        }
+        assert_eq!(
+            metrics.kv_device_bytes_in_use.load(Ordering::Relaxed),
+            0,
+            "drained engine must release every block (depth {depth})"
+        );
+        (outs, metrics)
+    };
+
+    let (reference, _) = run(1, 0);
+    // Identical prompts must agree with each other even in the serial
+    // baseline (KV isolation through preemption and re-prefill).
+    for r in &reference[1..] {
+        assert_eq!(r.tokens, reference[0].tokens, "recompute preemption preserves determinism");
+    }
+    let (outs, metrics) = run(2, 100);
+    for (o, r) in outs.iter().zip(&reference) {
+        assert_eq!(o.id, r.id);
+        assert_eq!(
+            o.tokens, r.tokens,
+            "async stress output must be token-identical to the serial loop (request {})",
+            o.id
+        );
+    }
+    assert!(
+        metrics.preemptions.load(Ordering::Relaxed) > 0,
+        "a 3-block arena under this burst must have evicted mid-flight"
+    );
+}
+
+/// Pinned drift-check regression for the two-actor executor: among the
+/// bounded-interleaving explorer's schedules on the contended scenario
+/// there must exist one where a preemption fires while a bound round
+/// descriptor is still sitting in the submission channel (bound by the
+/// policy thread, not yet dequeued by the device thread) — the race the
+/// truly-async queue makes real: the victim's blocks stay pinned by the
+/// in-flight slot window, its handle generation is retired, and the
+/// device's store calls must reject it cleanly when the round finally
+/// executes. The DFS is deterministic, so the first such schedule is
+/// stable for a fixed (config, budget); we re-derive it, replay it, and
+/// assert it drains clean. If a future PR changes the stage machine so
+/// NO explored schedule preempts under an in-channel round, this test
+/// fails — that shape is exactly the surface this PR introduced, and
+/// losing it silently would mean the checker probes air.
+#[test]
+fn drift_check_pins_preemption_while_a_round_sits_in_the_channel() {
+    use mldrift::check::{explore_with, replay, CheckConfig, ExploreBudget, Schedule, Step, World};
+
+    // Step-accurate scan: replay `sched` one step at a time, tracking
+    // how many descriptors are in the submission channel (bound, not
+    // yet dequeued), and watch the world's preemption counter move
+    // while that count is nonzero.
+    fn preempts_in_channel(cfg: &CheckConfig, sched: &Schedule) -> bool {
+        let mut w = World::new(cfg).expect("config valid");
+        let mut in_channel = 0usize;
+        let mut seen = false;
+        for &choice in &sched.0 {
+            let step = w.enabled_steps()[choice as usize];
+            let before = w.preemptions;
+            w.apply_step(step).expect("explored schedule replays");
+            match step {
+                Step::Bind(_) => in_channel += 1,
+                Step::Submit(_) => in_channel -= 1,
+                _ => {}
+            }
+            if w.preemptions > before && in_channel > 0 {
+                seen = true;
+            }
+        }
+        seen
+    }
+
+    let cfg = CheckConfig::contended();
+    let budget = ExploreBudget { max_schedules: 6_000, max_steps: 96, switch_bound: 4 };
+    let mut pinned: Option<Schedule> = None;
+    explore_with(&cfg, &budget, |_, sched| {
+        if pinned.is_none() && preempts_in_channel(&cfg, sched) {
+            pinned = Some(sched.clone());
+        }
+        Ok(())
+    })
+    .expect("contended exploration must stay invariant-clean");
+    let schedule = pinned.expect(
+        "the explorer must reach a schedule that preempts while a round sits in the \
+         submission channel — the async queue's race surface must stay reachable",
+    );
+
+    let world = replay(&cfg, &schedule)
+        .unwrap_or_else(|v| panic!("pinned schedule must replay clean, got: {v}"));
+    assert!(world.preemptions > 0, "pinned schedule {schedule} must preempt");
+    assert_eq!(
+        world.done_seqs(),
+        cfg.seqs,
+        "pinned schedule {schedule} must still drain every sequence"
+    );
+    let again = replay(&cfg, &schedule).expect("second replay clean");
     assert_eq!(again.trace, world.trace, "replay must be event-for-event deterministic");
 }
